@@ -1,0 +1,46 @@
+//! Table 1 reproduction: run every benchmark program under the AutoGraph
+//! baseline and under Terra, reporting which fail and why.
+//!
+//!     cargo run --release --example coverage
+
+use terra::config::ExecMode;
+use terra::error::TerraError;
+use terra::programs::{all_program_names, build_program, expected_autograph_failure};
+use terra::runner::Engine;
+
+fn main() {
+    let artifacts = std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let steps = 12;
+    let mut rows = Vec::new();
+    for name in all_program_names() {
+        let autograph = {
+            let result = Engine::new(ExecMode::AutoGraph, &artifacts, true)
+                .and_then(|mut e| build_program(name).and_then(|mut p| e.run(p.as_mut(), steps, 0)));
+            match result {
+                Ok(_) => "ok".to_string(),
+                Err(TerraError::Convert { category, .. }) => format!("FAIL: {category}"),
+                Err(e) => format!("error: {e}"),
+            }
+        };
+        let terra = {
+            let result = Engine::new(ExecMode::Terra, &artifacts, true)
+                .and_then(|mut e| build_program(name).and_then(|mut p| e.run(p.as_mut(), steps, 0)));
+            match result {
+                Ok(_) => "ok".to_string(),
+                Err(e) => format!("error: {e}"),
+            }
+        };
+        let paper = match expected_autograph_failure(name) {
+            Some(cat) => format!("FAIL: {cat}"),
+            None => "ok".to_string(),
+        };
+        rows.push(vec![name.to_string(), autograph, paper, terra]);
+    }
+    terra::bench::print_table(
+        "Table 1 — program coverage: AutoGraph baseline vs Terra",
+        &["program", "autograph (measured)", "autograph (paper)", "terra"],
+        &rows,
+    );
+    let matches = rows.iter().filter(|r| r[1] == r[2]).count();
+    println!("\n{matches}/{} programs match the paper's Table 1 outcome", rows.len());
+}

@@ -1,0 +1,137 @@
+"""AOT pipeline: lower every artifact in the manifest to HLO *text*.
+
+HLO text, not ``.serialize()``: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla_extension 0.5.1 the rust `xla` crate links
+against rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import attention as attn_k
+from .kernels import dropblock as db_k
+from .kernels import layernorm as ln_k
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sig(shape):
+    return f"f32[{','.join(str(d) for d in shape)}]"
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def attention_entries(bh, s, d):
+    """Fused attention fwd (Pallas) + bwd (vjp of the oracle)."""
+    io3 = [sig((bh, s, d))] * 3
+    fwd_name = f"attn_fwd_bh{bh}_s{s}_d{d}"
+    bwd_name = f"attn_bwd_bh{bh}_s{s}_d{d}"
+    fwd = dict(
+        name=fwd_name,
+        fn=lambda q, k, v: (attn_k.attention(q, k, v),),
+        args=[spec((bh, s, d))] * 3,
+        entry={"in": io3, "out": [sig((bh, s, d))], "vjp": bwd_name},
+    )
+    bwd = dict(
+        name=bwd_name,
+        fn=lambda q, k, v, g: tuple(attn_k.attention_vjp(q, k, v, g)),
+        args=[spec((bh, s, d))] * 4,
+        entry={"in": io3 + [sig((bh, s, d))], "out": io3},
+    )
+    return [fwd, bwd]
+
+
+def dropblock_entry(b, c, h, w):
+    name = f"dropblock_mask_b{b}_c{c}_h{h}_w{w}"
+    return dict(
+        name=name,
+        fn=lambda noise, gamma: (db_k.dropblock_mask(noise, gamma),),
+        args=[spec((b, c, h, w)), spec(())],
+        # The mask is piecewise-constant: no gradient flows through it
+        # (like the RNG ops); the tape treats it as a stop-gradient.
+        entry={"in": [sig((b, c, h, w)), "f32[]"], "out": [sig((b, c, h, w))], "nondiff": True},
+    )
+
+
+def layernorm_entries(n, d):
+    fwd_name = f"layernorm_fwd_n{n}_d{d}"
+    bwd_name = f"layernorm_bwd_n{n}_d{d}"
+    fwd = dict(
+        name=fwd_name,
+        fn=lambda x, g, b: (ln_k.layernorm(x, g, b),),
+        args=[spec((n, d)), spec((d,)), spec((d,))],
+        entry={
+            "in": [sig((n, d)), sig((d,)), sig((d,))],
+            "out": [sig((n, d))],
+            "vjp": bwd_name,
+        },
+    )
+    bwd = dict(
+        name=bwd_name,
+        fn=lambda x, g, b, ct: tuple(ln_k.layernorm_vjp(x, g, b, ct)),
+        args=[spec((n, d)), spec((d,)), spec((d,)), spec((n, d))],
+        entry={
+            "in": [sig((n, d)), sig((d,)), sig((d,)), sig((n, d))],
+            "out": [sig((n, d)), sig((d,)), sig((d,))],
+        },
+    )
+    return [fwd, bwd]
+
+
+def build_manifest():
+    """Every artifact the rust programs / examples can invoke.
+
+    Shapes mirror rust/src/programs: dim 32, 2 heads (dh=16), batch 4
+    (BH=8); sequence lengths 12 (BERT) and 16 (the E2E encoder example);
+    the DropBlock mask operates on the post-conv1 8x8 feature map at block
+    resolution 4x4 with 8 channels.
+    """
+    entries = []
+    for s in (12, 16):
+        entries += attention_entries(bh=8, s=s, d=16)
+    entries.append(dropblock_entry(b=4, c=8, h=4, w=4))
+    entries += layernorm_entries(n=64, d=32)
+    return entries
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for e in build_manifest():
+        fname = f"{e['name']}.hlo.txt"
+        text = to_hlo_text(e["fn"], e["args"])
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entry = {"name": e["name"], "file": fname}
+        entry.update(e["entry"])
+        manifest.append(entry)
+        print(f"  lowered {e['name']} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

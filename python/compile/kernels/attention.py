@@ -1,0 +1,77 @@
+"""L1: fused scaled-dot-product attention as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the original GPU
+formulation tiles Q/K/V across threadblocks with shared-memory staging; on
+TPU the same insight — keep the S×S score tile resident in fast memory and
+fuse matmul→softmax→matmul — maps to a VMEM-resident block per (batch·head)
+grid step feeding the MXU. BlockSpec carves one [1, S, D] slab of each
+operand per grid step; for the miniature shapes (S ≤ 16, D = 16) the whole
+working set (3·S·D + S·S floats ≈ 4 KB) sits comfortably in VMEM; the
+EXPERIMENTS.md §Perf entry scales this budget analytically to the paper's
+production shapes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through the interpreter against
+``ref.attention_ref`` and the real-TPU path is compile-only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[0, :, :]  # [S, D] VMEM tile
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    # MXU matmul, f32 accumulate.
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Numerically stable softmax, fused in-register.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, :, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Fused attention over [BH, S, D]; one grid step per batch·head."""
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_attn_kernel, scale=scale)
+    block = pl.BlockSpec((1, s, d), lambda b: (b, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[block, block, block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(residuals, g):
+    q, k, v = residuals
+    return tuple(attention_vjp(q, k, v, g))
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def attention_vjp(q, k, v, g):
+    """Backward artifact body: cotangents for (q, k, v).
+
+    Lowered from the jnp reference (the kernel matches it bit-for-bit under
+    the interpreter, see tests), following the repo convention: vjp inputs =
+    forward inputs ++ output cotangents.
+    """
+    from . import ref
+
+    _, pullback = jax.vjp(ref.attention_ref, q, k, v)
+    return pullback(g)

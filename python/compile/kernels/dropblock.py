@@ -1,0 +1,38 @@
+"""L1: DropBlock keep-mask generation as a Pallas kernel.
+
+The original CUDA DropBlock materializes a Bernoulli seed mask and dilates
+it with a max-pool; our miniature drops aligned 2x2 blocks, so the mask is
+computed directly on the block-resolution noise grid: keep = noise >= gamma.
+Fused elementwise compare + cast over a VMEM tile, one grid step per batch.
+
+The drop probability arrives as a runtime scalar (it is *mutated host
+state* in the DropBlock program — the paper's Fig. 1c), so it is an input,
+never a compile-time constant.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mask_kernel(noise_ref, gamma_ref, o_ref):
+    noise = noise_ref[0]  # [C, H, W] tile for this batch element
+    gamma = gamma_ref[0, 0]
+    o_ref[0] = (noise >= gamma).astype(jnp.float32)
+
+
+def dropblock_mask(noise, gamma):
+    """noise: [B, C, H, W] uniforms; gamma: f32[] scalar -> keep mask."""
+    b, c, h, w = noise.shape
+    gamma2 = jnp.reshape(gamma, (1, 1)).astype(jnp.float32)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, w), jnp.float32),
+        interpret=True,
+    )(noise, gamma2)

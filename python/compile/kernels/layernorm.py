@@ -1,0 +1,47 @@
+"""L1: fused layer normalization as a Pallas kernel.
+
+One grid step per row-block: mean/variance/normalize/affine fused in VMEM —
+the TPU rethink of the paper-era fused-layernorm CUDA kernels (single pass,
+no shared-memory tree reductions; the VPU reduces a VMEM-resident tile).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]  # [BLOCK, D]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    centered = x - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = centered * inv * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, gamma, beta, eps=1e-5, block_rows=8):
+    """Fused LN over the last axis of [N, D]; N must divide by block_rows."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def layernorm_vjp(x, gamma, beta, g):
+    from . import ref
+
+    _, pullback = jax.vjp(lambda a, gm, bt: ref.layernorm_ref(a, gm, bt), x, gamma, beta)
+    return pullback(g)

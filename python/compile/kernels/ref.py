@@ -1,0 +1,29 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These definitions are the correctness contract: every Pallas kernel must
+match its oracle to float32 tolerance (pytest + hypothesis sweeps), and the
+backward artifacts are lowered from ``jax.vjp`` of these references.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Scaled-dot-product attention over [BH, S, D] tensors."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Layer norm over the last axis of [N, D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def dropblock_mask_ref(noise, gamma):
+    """Block-keep mask: 1.0 where noise >= gamma (noise in [0,1))."""
+    return (noise >= gamma).astype(jnp.float32)

@@ -1,0 +1,60 @@
+"""L2: JAX model layer — the compute graphs that get AOT-lowered.
+
+Build-time only: these functions are traced by jax, lowered to HLO text by
+``aot.py``, and executed from rust via PJRT. Python never runs on the
+request path.
+
+The transformer encoder block here mirrors ``rust/src/programs/common.rs``
+(pre-LN, 2x FFN) and calls the L1 Pallas attention kernel, so lowering it
+exercises the full L2→L1 stack; pytest checks its shapes and numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn
+from .kernels import ref
+
+
+def encoder_block(x, wq, wk, wv, wo, g1, b1, g2, b2, w1, bb1, w2, bb2, heads):
+    """Pre-LN transformer encoder block over [B, S, D], fused attention core."""
+    b, s, d = x.shape
+    dh = d // heads
+
+    h = ref.layernorm_ref(x.reshape(b * s, d), g1, b1).reshape(b, s, d)
+    q = h @ wq
+    k = h @ wk
+    v = h @ wv
+
+    def split(t):
+        return t.reshape(b, s, heads, dh).transpose(0, 2, 1, 3).reshape(b * heads, s, dh)
+
+    ctx = attn.attention(split(q), split(k), split(v))
+    ctx = ctx.reshape(b, heads, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + ctx @ wo
+
+    h = ref.layernorm_ref(x.reshape(b * s, d), g2, b2).reshape(b, s, d)
+    h = jax.nn.relu(h @ w1 + bb1)
+    x = x + h @ w2 + bb2
+    return x
+
+
+def encoder_block_params(d, key=None):
+    """Deterministic parameter pytree for shape tests / lowering examples."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    scale = 0.02
+    return dict(
+        wq=jax.random.normal(ks[0], (d, d), jnp.float32) * scale,
+        wk=jax.random.normal(ks[1], (d, d), jnp.float32) * scale,
+        wv=jax.random.normal(ks[2], (d, d), jnp.float32) * scale,
+        wo=jax.random.normal(ks[3], (d, d), jnp.float32) * scale,
+        g1=jnp.ones((d,), jnp.float32),
+        b1=jnp.zeros((d,), jnp.float32),
+        g2=jnp.ones((d,), jnp.float32),
+        b2=jnp.zeros((d,), jnp.float32),
+        w1=jax.random.normal(ks[4], (d, 2 * d), jnp.float32) * scale,
+        bb1=jnp.zeros((2 * d,), jnp.float32),
+        w2=jax.random.normal(ks[5], (2 * d, d), jnp.float32) * scale,
+        bb2=jnp.zeros((d,), jnp.float32),
+    )

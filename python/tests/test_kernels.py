@@ -1,0 +1,118 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the L1 layer.
+
+Hypothesis sweeps shapes; assert_allclose against the pure-jnp references.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, dropblock, layernorm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([4, 12, 16]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_attention_matches_ref(bh, s, d, seed):
+    q = rand(seed, (bh, s, d))
+    k = rand(seed + 1, (bh, s, d))
+    v = rand(seed + 2, (bh, s, d))
+    out = attention.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    # softmax rows sum to 1 => each output row lies in conv hull of v rows
+    q = rand(0, (2, 8, 16), scale=3.0)
+    k = rand(1, (2, 8, 16), scale=3.0)
+    v = jnp.ones((2, 8, 16), jnp.float32)
+    out = attention.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.ones_like(out), rtol=1e-5)
+
+
+def test_attention_vjp_matches_autodiff_of_ref():
+    q, k, v = (rand(i, (2, 6, 8)) for i in range(3))
+    g = rand(7, (2, 6, 8))
+    got = attention.attention_vjp(q, k, v, g)
+    _, pullback = jax.vjp(ref.attention_ref, q, k, v)
+    want = pullback(g)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_layernorm_matches_ref(n, d, seed):
+    x = rand(seed, (n, d), scale=2.0)
+    gamma = rand(seed + 1, (d,)) + 1.0
+    beta = rand(seed + 2, (d,))
+    out = layernorm.layernorm(x, gamma, beta)
+    want = ref.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_is_normalized():
+    x = rand(3, (16, 32), scale=5.0)
+    out = layernorm.layernorm(x, jnp.ones((32,)), jnp.zeros((32,)))
+    mean = np.asarray(jnp.mean(out, axis=-1))
+    np.testing.assert_allclose(mean, np.zeros_like(mean), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dropblock mask
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 4]),
+    c=st.sampled_from([2, 8]),
+    hw=st.sampled_from([2, 4]),
+    gamma=st.floats(min_value=0.0, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_dropblock_mask_matches_ref(b, c, hw, gamma, seed):
+    noise = jax.random.uniform(jax.random.PRNGKey(seed), (b, c, hw, hw), jnp.float32)
+    g = jnp.float32(gamma)
+    out = dropblock.dropblock_mask(noise, g)
+    want = ref.dropblock_mask_ref(noise, g)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_dropblock_mask_is_binary():
+    noise = jax.random.uniform(jax.random.PRNGKey(0), (4, 8, 4, 4), jnp.float32)
+    out = np.asarray(dropblock.dropblock_mask(noise, jnp.float32(0.3)))
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+def test_dropblock_gamma_zero_keeps_everything():
+    noise = jax.random.uniform(jax.random.PRNGKey(1), (2, 2, 4, 4), jnp.float32)
+    out = np.asarray(dropblock.dropblock_mask(noise, jnp.float32(0.0)))
+    assert out.min() == 1.0

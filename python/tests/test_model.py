@@ -1,0 +1,55 @@
+"""L2 model checks: encoder-block shapes, determinism and differentiability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _run(b=2, s=8, d=32, heads=2, seed=0):
+    p = model.encoder_block_params(d, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, s, d), jnp.float32)
+    y = model.encoder_block(x, heads=heads, **p)
+    return x, y, p
+
+
+def test_block_preserves_shape():
+    x, y, _ = _run()
+    assert y.shape == x.shape
+    assert y.dtype == jnp.float32
+
+
+def test_block_is_deterministic():
+    _, y1, _ = _run(seed=3)
+    _, y2, _ = _run(seed=3)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_block_is_differentiable_through_kernel():
+    p = model.encoder_block_params(32)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, 32), jnp.float32)
+
+    def loss(wq):
+        q = dict(p)
+        q["wq"] = wq
+        return jnp.sum(model.encoder_block(x, heads=2, **q) ** 2)
+
+    g = jax.grad(loss)(p["wq"])
+    assert g.shape == p["wq"].shape
+    assert bool(jnp.any(g != 0.0))
+
+
+def test_residual_identity_at_zero_weights():
+    p = model.encoder_block_params(32)
+    zeros = {k: jnp.zeros_like(v) for k, v in p.items()}
+    # keep LN affine neutral so the residual path dominates
+    zeros["g1"] = p["g1"]
+    zeros["b1"] = p["b1"]
+    zeros["g2"] = p["g2"]
+    zeros["b2"] = p["b2"]
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 32), jnp.float32)
+    y = model.encoder_block(x, heads=2, **zeros)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)

@@ -1,0 +1,69 @@
+//! Figure 5 reproduction: training speedup of Terra and the AutoGraph
+//! baseline relative to imperative execution, with and without whole-segment
+//! fusion (the ±XLA axis).
+//!
+//!     cargo bench --bench bench_fig5        (TERRA_BENCH_STEPS=100 for longer runs)
+
+use terra::bench::{obj, print_table, run_program, write_json_report, BenchConfig};
+use terra::config::{ExecMode, Json};
+use terra::error::TerraError;
+use terra::programs::all_program_names;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!(
+        "Figure 5: {} steps per run ({} warmup), 1-core PJRT-CPU testbed",
+        cfg.steps, cfg.warmup
+    );
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for name in all_program_names() {
+        let eager = match run_program(name, ExecMode::Eager, true, cfg) {
+            Ok(r) => r.steps_per_sec,
+            Err(e) => {
+                rows.push(vec![name.into(), format!("eager failed: {e}")]);
+                continue;
+            }
+        };
+        let mut cells = vec![name.to_string(), format!("{eager:.2}")];
+        let mut jrow = vec![("program", Json::Str(name.into())), ("eager_sps", Json::Num(eager))];
+        for (label, mode, fusion) in [
+            ("terra", ExecMode::Terra, false),
+            ("terra+XLA", ExecMode::Terra, true),
+            ("autograph", ExecMode::AutoGraph, false),
+            ("autograph+XLA", ExecMode::AutoGraph, true),
+        ] {
+            let cell = match run_program(name, mode, fusion, cfg) {
+                Ok(r) => {
+                    jrow.push((label, Json::Num(r.steps_per_sec / eager)));
+                    format!("{:.2}x", r.steps_per_sec / eager)
+                }
+                Err(TerraError::Convert { category, .. }) => {
+                    jrow.push((label, Json::Str(format!("fail:{category}"))));
+                    format!("fail ({category})")
+                }
+                Err(e) => format!("error: {e}"),
+            };
+            cells.push(cell);
+        }
+        rows.push(cells);
+        json_rows.push(obj(jrow));
+    }
+    print_table(
+        "Figure 5 — training speedup relative to imperative execution",
+        &["program", "eager steps/s", "terra", "terra+XLA", "autograph", "autograph+XLA"],
+        &rows,
+    );
+    write_json_report(
+        "fig5",
+        obj(vec![
+            ("steps", Json::Num(cfg.steps as f64)),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    );
+    println!(
+        "\npaper shape to check: every 'terra' cell > 1.0x; terra ≈ autograph where autograph \
+         runs; +XLA adds more except for dynamic-shape/fetch-heavy programs (gpt2, yolov3); \
+         5 of 10 autograph cells fail with the Table-1 categories."
+    );
+}

@@ -1,0 +1,153 @@
+//! Micro-benchmarks for the §Perf pass: the hot-path costs that determine
+//! where Terra's speedup comes from (and where the coordinator could become
+//! the bottleneck).
+//!
+//!     cargo bench --bench bench_micro
+
+use std::sync::Arc;
+use terra::api::{Backend, EagerBackend, VarStore};
+use terra::bench::{obj, print_table, time_budgeted, time_micro, write_json_report};
+use terra::config::Json;
+use terra::eager::EagerExecutor;
+use terra::ops::{OpDef, OpKind};
+use terra::runner::Mailbox;
+use terra::runtime::{ArtifactStore, Client, ExecCache, RtValue};
+use terra::tensor::{HostTensor, TensorType};
+use terra::tracegraph::{NodeId, TraceGraph};
+use terra::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+use std::time::Duration;
+
+fn empty_store() -> Arc<ArtifactStore> {
+    let dir = std::env::temp_dir().join("terra_micro_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    Arc::new(ArtifactStore::open(&dir).unwrap())
+}
+
+fn main() {
+    let client = Client::global().clone();
+    let store = empty_store();
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut push = |name: &str, value: f64, unit: &str, json_rows: &mut Vec<Json>| {
+        rows.push(vec![name.to_string(), format!("{value:.2}"), unit.to_string()]);
+        json_rows.push(terra::bench::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("value", Json::Num(value)),
+            ("unit", Json::Str(unit.into())),
+        ]));
+    };
+
+    // 1. Eager per-op dispatch (cache-warm): the imperative baseline's tax.
+    {
+        let exec = EagerExecutor::new(client.clone(), store.clone());
+        let def = OpDef::new(OpKind::Add, vec![TensorType::f32(&[64, 64]), TensorType::f32(&[64, 64])]);
+        let a = client.upload(&HostTensor::f32(vec![64, 64], vec![1.0; 4096]).unwrap()).unwrap();
+        let b = client.upload(&HostTensor::f32(vec![64, 64], vec![2.0; 4096]).unwrap()).unwrap();
+        let (av, bv) = (RtValue::Dev(a), RtValue::Dev(b));
+        let _ = exec.execute(&def, &[av.clone(), bv.clone()]).unwrap(); // warm compile
+        let (mean, p50, p99) = time_micro(
+            || {
+                let _ = exec.execute(&def, &[av.clone(), bv.clone()]).unwrap();
+            },
+            2000,
+        );
+        push("eager op dispatch add64x64 (mean)", mean / 1000.0, "us", &mut json);
+        push("eager op dispatch add64x64 (p50)", p50 as f64 / 1000.0, "us", &mut json);
+        push("eager op dispatch add64x64 (p99)", p99 as f64 / 1000.0, "us", &mut json);
+    }
+
+    // 2. Mailbox rendezvous latency (runner communication primitive).
+    {
+        let mb: Mailbox<u64> = Mailbox::new();
+        let (mean, _, p99) = time_micro(
+            || {
+                mb.put(0, NodeId(1), 42);
+                let _ = mb.take(0, NodeId(1)).unwrap();
+            },
+            20000,
+        );
+        push("mailbox put+take (mean)", mean, "ns", &mut json);
+        push("mailbox put+take (p99)", p99 as f64, "ns", &mut json);
+    }
+
+    // 3. TraceGraph merge throughput (tracing-phase overhead).
+    {
+        let trace = synthetic_trace(512);
+        let (_, per_sec) = time_budgeted(
+            || {
+                let mut g = TraceGraph::new();
+                g.merge(&trace).unwrap();
+                g.merge(&trace).unwrap();
+            },
+            Duration::from_millis(300),
+        );
+        push("tracegraph merge 512-item trace x2", per_sec, "merges/s", &mut json);
+    }
+
+    // 4. Walker advance rate (PythonRunner-side per-op validation cost).
+    {
+        let trace = synthetic_trace(512);
+        let mut g = TraceGraph::new();
+        g.merge(&trace).unwrap();
+        let g = Arc::new(g);
+        let (_, per_sec) = time_budgeted(
+            || {
+                let mut w = terra::tracegraph::Walker::new(g.clone());
+                let mut nodes: Vec<NodeId> = Vec::with_capacity(trace.len());
+                for (i, item) in trace.items.iter().enumerate() {
+                    let srcs: Vec<terra::tracegraph::GraphSrc> = trace.resolved[i]
+                        .iter()
+                        .map(|r| match r {
+                            terra::trace::ResolvedSrc::Var(v) => terra::tracegraph::GraphSrc::Var(*v),
+                            terra::trace::ResolvedSrc::Item(p) => terra::tracegraph::GraphSrc::Node {
+                                node: nodes[p.item],
+                                slot: p.slot,
+                            },
+                        })
+                        .collect();
+                    let ev = w.advance(&item.key(), &srcs).unwrap();
+                    nodes.push(ev.node);
+                }
+                w.finish().unwrap();
+            },
+            Duration::from_millis(300),
+        );
+        push("walker replay 512-item trace", per_sec * 512.0, "ops/s", &mut json);
+    }
+
+    // 5. Segment compile time (plan regeneration cost after a fallback).
+    {
+        let cache = ExecCache::new(); // fresh cache: true compile cost
+        let def = OpDef::new(OpKind::Tanh, vec![TensorType::f32(&[32, 32])]);
+        let (mean, _, _) = time_micro(
+            || {
+                // unique key each call by alternating shapes
+                let _ = cache.get_or_compile_op(&client, &def);
+            },
+            1,
+        );
+        push("single-op XLA compile (cold)", mean / 1e6, "ms", &mut json);
+    }
+
+    print_table("micro-benchmarks (§Perf)", &["metric", "value", "unit"], &rows);
+    write_json_report("micro", Json::Arr(json));
+}
+
+fn synthetic_trace(n: usize) -> Trace {
+    let mut items = vec![TraceItem::Feed {
+        id: ValueId(1),
+        ty: TensorType::f32(&[8]),
+        loc: Location { file: "bench.rs", line: 1, col: 1, scope: 0 },
+        kind: FeedKind::Data,
+    }];
+    for i in 1..n {
+        items.push(TraceItem::Op {
+            def: OpDef::new(OpKind::Relu, vec![TensorType::f32(&[8])]),
+            loc: Location { file: "bench.rs", line: i as u32 + 1, col: 1, scope: 0 },
+            inputs: vec![ValueRef::Out(ValueId(i as u64))],
+            outputs: vec![ValueId(i as u64 + 1)],
+        });
+    }
+    Trace::resolve(items, 0).unwrap()
+}

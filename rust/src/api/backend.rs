@@ -1,0 +1,99 @@
+//! The backend trait: one implementation per execution model.
+
+use crate::error::Result;
+use crate::ops::OpDef;
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{FeedKind, Location, Trace, ValueId, ValueRef, VarId};
+
+/// A DL-op issuance, fully typed and located.
+#[derive(Debug)]
+pub struct Issue<'a> {
+    pub def: &'a OpDef,
+    pub inputs: &'a [ValueRef],
+    pub outputs: &'a [ValueId],
+    pub out_types: &'a [TensorType],
+    pub loc: Location,
+}
+
+/// One recorded forward op (for the gradient tape).
+#[derive(Debug, Clone)]
+pub struct TapeEntry {
+    pub def: OpDef,
+    pub inputs: Vec<ValueRef>,
+    pub outputs: Vec<ValueId>,
+    pub out_types: Vec<TensorType>,
+}
+
+/// Recording state of an active gradient tape.
+#[derive(Debug, Default)]
+pub struct TapeData {
+    pub entries: Vec<TapeEntry>,
+    /// Tensor ids that are reads of variables (id -> var).
+    pub var_reads: Vec<(ValueId, VarId)>,
+}
+
+/// An execution engine for the session's op stream.
+///
+/// All methods take `&mut self`: a backend belongs to exactly one program
+/// thread (the paper's "Python interpreter"); cross-thread machinery (the
+/// GraphRunner) lives behind channels inside the co-execution backend.
+pub trait Backend: Send {
+    fn name(&self) -> &'static str;
+
+    /// Iteration boundary: the engine calls this before/after each `step`.
+    fn begin_step(&mut self, step: u64) -> Result<()>;
+    fn end_step(&mut self) -> Result<()>;
+
+    /// Execute / record / validate one DL op.
+    fn op(&mut self, issue: &Issue) -> Result<()>;
+
+    /// A host value entering the DL side (data batch or captured state).
+    fn feed(
+        &mut self,
+        id: ValueId,
+        ty: &TensorType,
+        value: HostTensor,
+        loc: Location,
+        kind: FeedKind,
+    ) -> Result<()>;
+
+    /// An inline constant.
+    fn constant(&mut self, id: ValueId, value: HostTensor, loc: Location) -> Result<()>;
+
+    /// Variable update.
+    fn assign(&mut self, var: VarId, src: ValueRef, loc: Location) -> Result<()>;
+
+    /// Materialize a tensor value on the host (fetch point).
+    fn materialize(&mut self, src: ValueRef, loc: Location) -> Result<HostTensor>;
+
+    /// Materialization performed by the *harness* on a step's returned
+    /// tensors. Semantically a fetch, but conversion backends allow it (the
+    /// values are function returns, which the static-compilation approach
+    /// supports) while rejecting mid-step `materialize`.
+    fn harness_fetch(&mut self, src: ValueRef, loc: Location) -> Result<HostTensor> {
+        self.materialize(src, loc)
+    }
+
+    /// Create a persistent variable (setup time).
+    fn create_var(&mut self, var: VarId, init: HostTensor) -> Result<()>;
+
+    /// Host snapshot of a variable's current (committed) value.
+    fn var_host(&mut self, var: VarId) -> Result<HostTensor>;
+
+    /// Called before a third-party host call runs. The AutoGraph baseline
+    /// rejects this (no symbolic representation); everyone else allows it.
+    fn host_call_check(&mut self, _name: &str, _loc: Location) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called when the program enters a host-driven dynamic control flow
+    /// construct with no symbolic counterpart (generator, try-except, ...).
+    fn dynamic_flow_check(&mut self, _what: &str, _loc: Location) -> Result<()> {
+        Ok(())
+    }
+
+    /// Tracing backends hand out the iteration's trace after `end_step`.
+    fn take_trace(&mut self) -> Option<Trace> {
+        None
+    }
+}

@@ -1,0 +1,405 @@
+//! The eager backend (imperative execution) and its tracing wrapper.
+
+use crate::api::backend::{Backend, Issue};
+use crate::api::variable::VarStore;
+use crate::eager::EagerExecutor;
+use crate::error::{Result, TerraError};
+use crate::runtime::RtValue;
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{
+    FeedKind, Location, Trace, TraceItem, TraceRecorder, ValueId, ValueRef, VarId,
+};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Imperative execution: each DL op runs immediately on the device, exactly
+/// like TF eager. This is the paper's baseline *and* the execution engine of
+/// the tracing phase and of the divergence-fallback replay.
+pub struct EagerBackend {
+    exec: Arc<EagerExecutor>,
+    vars: Arc<VarStore>,
+    /// Values produced during the current step.
+    vals: HashMap<ValueId, RtValue>,
+    /// Values produced outside any step (setup time); kept alive.
+    setup_vals: HashMap<ValueId, RtValue>,
+    in_step: bool,
+}
+
+impl EagerBackend {
+    pub fn new(exec: Arc<EagerExecutor>, vars: Arc<VarStore>) -> Self {
+        EagerBackend {
+            exec,
+            vars,
+            vals: HashMap::new(),
+            setup_vals: HashMap::new(),
+            in_step: false,
+        }
+    }
+
+    pub fn executor(&self) -> &Arc<EagerExecutor> {
+        &self.exec
+    }
+
+    fn store(&mut self, id: ValueId, v: RtValue) {
+        if self.in_step {
+            self.vals.insert(id, v);
+        } else {
+            self.setup_vals.insert(id, v);
+        }
+    }
+
+    fn lookup(&self, r: ValueRef) -> Result<RtValue> {
+        match r {
+            ValueRef::Var(v) => self.vars.get(v),
+            ValueRef::Out(id) => self
+                .vals
+                .get(&id)
+                .or_else(|| self.setup_vals.get(&id))
+                .cloned()
+                .ok_or_else(|| {
+                    TerraError::runtime(format!(
+                        "value {id:?} is not live (tensors do not survive across iterations; \
+                         use a Variable)"
+                    ))
+                }),
+        }
+    }
+}
+
+impl Backend for EagerBackend {
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+
+    fn begin_step(&mut self, _step: u64) -> Result<()> {
+        self.vals.clear();
+        self.in_step = true;
+        Ok(())
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        self.vals.clear();
+        self.in_step = false;
+        Ok(())
+    }
+
+    fn op(&mut self, issue: &Issue) -> Result<()> {
+        let mut inputs = Vec::with_capacity(issue.inputs.len());
+        for r in issue.inputs {
+            inputs.push(self.lookup(*r)?);
+        }
+        let outs = self.exec.execute(issue.def, &inputs)?;
+        for (id, v) in issue.outputs.iter().zip(outs) {
+            self.store(*id, v);
+        }
+        Ok(())
+    }
+
+    fn feed(
+        &mut self,
+        id: ValueId,
+        _ty: &TensorType,
+        value: HostTensor,
+        _loc: Location,
+        _kind: FeedKind,
+    ) -> Result<()> {
+        self.store(id, RtValue::Host(value));
+        Ok(())
+    }
+
+    fn constant(&mut self, id: ValueId, value: HostTensor, _loc: Location) -> Result<()> {
+        self.store(id, RtValue::Host(value));
+        Ok(())
+    }
+
+    fn assign(&mut self, var: VarId, src: ValueRef, _loc: Location) -> Result<()> {
+        let v = self.lookup(src)?;
+        self.vars.set(var, v)
+    }
+
+    fn materialize(&mut self, src: ValueRef, _loc: Location) -> Result<HostTensor> {
+        self.lookup(src)?.to_host()
+    }
+
+    fn create_var(&mut self, _var: VarId, _init: HostTensor) -> Result<()> {
+        Ok(()) // VarStore creation handled by the session
+    }
+
+    fn var_host(&mut self, var: VarId) -> Result<HostTensor> {
+        self.vars.host(var)
+    }
+}
+
+/// Tracing-phase backend: eager execution *plus* trace recording.
+///
+/// References to values produced outside the current iteration (setup-time
+/// tensors) are materialized and recorded as inline constants so that every
+/// trace is self-contained — the property `Trace::resolve` enforces.
+pub struct TracingBackend {
+    inner: EagerBackend,
+    rec: TraceRecorder,
+    /// ids produced (as trace items) during the current step.
+    produced: HashSet<ValueId>,
+    /// setup-time ids imported into this trace as constants (old -> new id).
+    imported: HashMap<ValueId, ValueId>,
+    finished: Option<Trace>,
+    next_import_id: u64,
+}
+
+impl TracingBackend {
+    pub fn new(inner: EagerBackend) -> Self {
+        TracingBackend {
+            inner,
+            rec: TraceRecorder::new(),
+            produced: HashSet::new(),
+            imported: HashMap::new(),
+            finished: None,
+            next_import_id: 1 << 62,
+        }
+    }
+
+    /// Rewrite an input ref so the trace is self-contained: setup-time values
+    /// become inline constants on first use.
+    fn trace_ref(&mut self, r: ValueRef) -> Result<ValueRef> {
+        match r {
+            ValueRef::Var(_) => Ok(r),
+            ValueRef::Out(id) => {
+                if self.produced.contains(&id) {
+                    return Ok(r);
+                }
+                if let Some(new) = self.imported.get(&id) {
+                    return Ok(ValueRef::Out(*new));
+                }
+                // Import: materialize from the eager store, record a Const.
+                let host = self.inner.lookup(ValueRef::Out(id))?.to_host()?;
+                let new_id = ValueId(self.next_import_id);
+                self.next_import_id += 1;
+                self.rec.record(TraceItem::Const {
+                    id: new_id,
+                    value: host,
+                    loc: Location::synthetic("<setup-import>"),
+                });
+                self.produced.insert(new_id);
+                self.imported.insert(id, new_id);
+                Ok(ValueRef::Out(new_id))
+            }
+        }
+    }
+}
+
+impl Backend for TracingBackend {
+    fn name(&self) -> &'static str {
+        "tracing"
+    }
+
+    fn begin_step(&mut self, step: u64) -> Result<()> {
+        self.rec.begin_step(step);
+        self.produced.clear();
+        self.imported.clear();
+        self.finished = None;
+        self.inner.begin_step(step)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        self.finished = Some(self.rec.finish()?);
+        self.inner.end_step()
+    }
+
+    fn take_trace(&mut self) -> Option<Trace> {
+        self.finished.take()
+    }
+
+    fn op(&mut self, issue: &Issue) -> Result<()> {
+        self.inner.op(issue)?;
+        let mut inputs = Vec::with_capacity(issue.inputs.len());
+        for r in issue.inputs {
+            inputs.push(self.trace_ref(*r)?);
+        }
+        self.rec.record(TraceItem::Op {
+            def: issue.def.clone(),
+            loc: issue.loc,
+            inputs,
+            outputs: issue.outputs.to_vec(),
+        });
+        for id in issue.outputs {
+            self.produced.insert(*id);
+        }
+        Ok(())
+    }
+
+    fn feed(
+        &mut self,
+        id: ValueId,
+        ty: &TensorType,
+        value: HostTensor,
+        loc: Location,
+        kind: FeedKind,
+    ) -> Result<()> {
+        self.inner.feed(id, ty, value.clone(), loc, kind)?;
+        self.rec.record(TraceItem::Feed { id, ty: ty.clone(), loc, kind });
+        self.produced.insert(id);
+        Ok(())
+    }
+
+    fn constant(&mut self, id: ValueId, value: HostTensor, loc: Location) -> Result<()> {
+        self.inner.constant(id, value.clone(), loc)?;
+        self.rec.record(TraceItem::Const { id, value, loc });
+        self.produced.insert(id);
+        Ok(())
+    }
+
+    fn assign(&mut self, var: VarId, src: ValueRef, loc: Location) -> Result<()> {
+        let tsrc = self.trace_ref(src)?;
+        self.inner.assign(var, src, loc)?;
+        self.rec.record(TraceItem::Assign { var, src: tsrc, loc });
+        Ok(())
+    }
+
+    fn materialize(&mut self, src: ValueRef, loc: Location) -> Result<HostTensor> {
+        let tsrc = self.trace_ref(src)?;
+        let v = self.inner.materialize(src, loc)?;
+        self.rec.record(TraceItem::Fetch { src: tsrc, loc });
+        Ok(v)
+    }
+
+    fn create_var(&mut self, var: VarId, init: HostTensor) -> Result<()> {
+        self.inner.create_var(var, init)
+    }
+
+    fn var_host(&mut self, var: VarId) -> Result<HostTensor> {
+        self.inner.var_host(var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Session;
+    use crate::runtime::{ArtifactStore, Client};
+    use std::sync::Arc;
+
+    fn test_session(tracing: bool) -> Session {
+        let dir = std::env::temp_dir().join(format!("terra_api_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let client = Client::global().clone();
+        let vars = Arc::new(VarStore::new(client.clone()));
+        let exec = Arc::new(EagerExecutor::new(client, store.clone()));
+        let eager = EagerBackend::new(exec, vars.clone());
+        let backend: Box<dyn Backend> =
+            if tracing { Box::new(TracingBackend::new(eager)) } else { Box::new(eager) };
+        Session::new(backend, store, vars)
+    }
+
+    #[test]
+    fn eager_end_to_end() {
+        let sess = test_session(false);
+        let w = sess.variable("w", HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap(), true).unwrap();
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::f32(vec![2], vec![3.0, 4.0]).unwrap()).unwrap();
+        let y = w.read().mul(&x).unwrap();
+        let z = y.add_scalar(1.0).unwrap();
+        assert_eq!(z.value().unwrap().as_f32().unwrap(), &[4.0, 9.0]);
+        w.assign(&z).unwrap();
+        sess.end_step().unwrap();
+        assert_eq!(w.snapshot().unwrap().as_f32().unwrap(), &[4.0, 9.0]);
+    }
+
+    #[test]
+    fn values_do_not_survive_iterations() {
+        let sess = test_session(false);
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::scalar_f32(1.0)).unwrap();
+        let y = x.add_scalar(1.0).unwrap();
+        sess.end_step().unwrap();
+        sess.begin_step(1).unwrap();
+        assert!(y.add_scalar(1.0).is_err());
+        sess.end_step().unwrap();
+    }
+
+    #[test]
+    fn tracing_records_full_iteration() {
+        let sess = test_session(true);
+        let w = sess.variable("w", HostTensor::scalar_f32(2.0), true).unwrap();
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::scalar_f32(3.0)).unwrap();
+        let y = w.read().mul(&x).unwrap();
+        let loss = y.value().unwrap(); // fetch point
+        assert_eq!(loss.scalar_value_f32().unwrap(), 6.0);
+        w.assign(&y).unwrap();
+        sess.end_step().unwrap();
+        let trace = sess.take_trace().unwrap();
+        // Feed, Op(mul), Fetch, Assign
+        assert_eq!(trace.len(), 4);
+        assert!(matches!(trace.items[0], TraceItem::Feed { .. }));
+        assert!(matches!(trace.items[1], TraceItem::Op { .. }));
+        assert!(matches!(trace.items[2], TraceItem::Fetch { .. }));
+        assert!(matches!(trace.items[3], TraceItem::Assign { .. }));
+    }
+
+    #[test]
+    fn tracing_imports_setup_values_as_consts() {
+        let sess = test_session(true);
+        // Created outside any step: must be imported into the trace.
+        let mask = sess.constant(HostTensor::f32(vec![2], vec![1.0, 0.0]).unwrap()).unwrap();
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::f32(vec![2], vec![5.0, 5.0]).unwrap()).unwrap();
+        let y = x.mul(&mask).unwrap();
+        assert_eq!(y.value().unwrap().as_f32().unwrap(), &[5.0, 0.0]);
+        sess.end_step().unwrap();
+        let trace = sess.take_trace().unwrap();
+        // Feed, imported Const, Op, Fetch — and it must resolve.
+        assert_eq!(trace.len(), 4);
+        assert!(trace
+            .items
+            .iter()
+            .any(|it| matches!(it, TraceItem::Const { .. })));
+    }
+
+    #[test]
+    fn host_state_reads_are_captured_feeds() {
+        let sess = test_session(true);
+        let state = sess.host_state(0.5);
+        sess.begin_step(0).unwrap();
+        let p = state.tensor().unwrap();
+        let x = sess.feed(HostTensor::scalar_f32(2.0)).unwrap();
+        let _ = x.mul(&p).unwrap();
+        sess.end_step().unwrap();
+        let trace = sess.take_trace().unwrap();
+        assert!(trace.items.iter().any(|it| matches!(
+            it,
+            TraceItem::Feed { kind: FeedKind::Captured(_), .. }
+        )));
+    }
+
+    #[test]
+    fn scopes_change_locations() {
+        let sess = test_session(true);
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::scalar_f32(1.0)).unwrap();
+        let issue_op = |t: &crate::api::Tensor| t.add_scalar(1.0).unwrap();
+        let a = {
+            let _g = sess.scope("block1");
+            issue_op(&x)
+        };
+        let b = {
+            let _g = sess.scope("block2");
+            issue_op(&a)
+        };
+        let _ = b;
+        sess.end_step().unwrap();
+        let trace = sess.take_trace().unwrap();
+        // Two add ops from the same source line but different scopes.
+        let op_locs: Vec<_> = trace
+            .items
+            .iter()
+            .filter_map(|it| match it {
+                TraceItem::Op { loc, .. } => Some(*loc),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(op_locs.len(), 2);
+        assert_ne!(op_locs[0], op_locs[1]);
+    }
+}

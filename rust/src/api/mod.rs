@@ -1,0 +1,28 @@
+//! The imperative program surface — the analogue of the TF2/PyTorch Python
+//! API in the paper.
+//!
+//! User programs are written against [`Session`] / [`Tensor`] / [`Variable`]
+//! and run unchanged under every execution engine: eager (imperative
+//! baseline), tracing, Terra co-execution (skeleton), AutoGraph conversion
+//! and lazy evaluation. The engine is selected by installing a [`Backend`];
+//! the session is otherwise oblivious to how ops get executed — exactly the
+//! property that lets Terra swap the execution model under an unmodified
+//! imperative program.
+//!
+//! Host-language features that the paper's evaluation exercises are modelled
+//! explicitly so that the AutoGraph baseline can reject (or miscompile) them:
+//! * [`Session::host_call`] — third-party library call on materialized data,
+//! * [`Tensor::value`] — tensor materialization (`.numpy()`),
+//! * [`HostState`] — mutable Python object captured by the program,
+//! * [`Session::dynamic_flow`] — generator-style control flow.
+
+mod backend;
+mod eager_backend;
+mod session;
+mod tensor_ops;
+mod variable;
+
+pub use backend::{Backend, Issue, TapeData, TapeEntry};
+pub use eager_backend::{EagerBackend, TracingBackend};
+pub use session::{ScopeGuard, Session, Tensor};
+pub use variable::{HostState, VarStore, Variable};

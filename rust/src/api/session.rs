@@ -1,0 +1,493 @@
+//! `Session` and `Tensor`: the handles an imperative program works with.
+
+use crate::api::backend::{Backend, Issue, TapeData, TapeEntry};
+use crate::api::variable::{HostState, VarStore, Variable};
+use crate::error::{Result, TerraError};
+use crate::ops::{OpDef, OpKind};
+use crate::runtime::ArtifactStore;
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{FeedKind, Location, ScopeStack, StateId, Trace, ValueId, ValueRef, VarId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct St {
+    backend: Box<dyn Backend>,
+    scopes: ScopeStack,
+    /// Tensor ids that alias variable reads.
+    aliases: HashMap<ValueId, VarId>,
+    tape: Option<TapeData>,
+    step: u64,
+}
+
+struct Inner {
+    next_value: AtomicU64,
+    next_var: AtomicU32,
+    next_state: AtomicU32,
+    artifacts: Arc<ArtifactStore>,
+    vars: Arc<VarStore>,
+    host_states: Mutex<HashMap<StateId, f32>>,
+    st: Mutex<St>,
+}
+
+/// A cheap, clonable handle to the execution session.
+#[derive(Clone)]
+pub struct Session {
+    inner: Arc<Inner>,
+}
+
+/// A tensor handle. In eager modes it names a concrete device value; in
+/// skeleton mode it is an *empty tensor* (type only) whose data, if ever
+/// needed, is fetched from the GraphRunner.
+#[derive(Clone)]
+pub struct Tensor {
+    pub(crate) id: ValueId,
+    pub(crate) ty: TensorType,
+    pub(crate) sess: Session,
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor(#{}, {})", self.id.0, self.ty)
+    }
+}
+
+/// RAII scope guard (TF name-scope analogue); see [`Session::scope`].
+pub struct ScopeGuard {
+    sess: Session,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        self.sess.inner.st.lock().unwrap().scopes.pop();
+    }
+}
+
+impl Session {
+    pub fn new(backend: Box<dyn Backend>, artifacts: Arc<ArtifactStore>, vars: Arc<VarStore>) -> Self {
+        Session {
+            inner: Arc::new(Inner {
+                next_value: AtomicU64::new(1),
+                next_var: AtomicU32::new(0),
+                next_state: AtomicU32::new(0),
+                artifacts,
+                vars,
+                host_states: Mutex::new(HashMap::new()),
+                st: Mutex::new(St {
+                    backend,
+                    scopes: ScopeStack::new(),
+                    aliases: HashMap::new(),
+                    tape: None,
+                    step: 0,
+                }),
+            }),
+        }
+    }
+
+    // ---- engine-side controls ----------------------------------------------
+
+    /// Swap the execution backend (phase transition), returning the old one.
+    pub fn swap_backend(&self, new: Box<dyn Backend>) -> Box<dyn Backend> {
+        std::mem::replace(&mut self.inner.st.lock().unwrap().backend, new)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.st.lock().unwrap().backend.name()
+    }
+
+    pub fn begin_step(&self, step: u64) -> Result<()> {
+        let mut st = self.inner.st.lock().unwrap();
+        st.step = step;
+        st.aliases.clear();
+        st.backend.begin_step(step)
+    }
+
+    pub fn end_step(&self) -> Result<()> {
+        self.inner.st.lock().unwrap().backend.end_step()
+    }
+
+    /// Take the finished trace from a tracing backend (engine-side).
+    pub fn take_trace(&self) -> Option<Trace> {
+        self.inner.st.lock().unwrap().backend.take_trace()
+    }
+
+    pub fn vars(&self) -> &Arc<VarStore> {
+        &self.inner.vars
+    }
+
+    pub fn artifacts(&self) -> &Arc<ArtifactStore> {
+        &self.inner.artifacts
+    }
+
+    /// Snapshot of all host-state cells (used to replay an iteration after a
+    /// divergence fallback without observing partial host mutations).
+    pub fn snapshot_host_states(&self) -> HashMap<StateId, f32> {
+        self.inner.host_states.lock().unwrap().clone()
+    }
+
+    pub fn restore_host_states(&self, snap: HashMap<StateId, f32>) {
+        *self.inner.host_states.lock().unwrap() = snap;
+    }
+
+    // ---- scopes -------------------------------------------------------------
+
+    /// Push a named scope; ops issued while the guard lives get it appended
+    /// to their program location (paper Appendix A equality).
+    pub fn scope(&self, name: &str) -> ScopeGuard {
+        self.inner.st.lock().unwrap().scopes.push(name);
+        ScopeGuard { sess: self.clone() }
+    }
+
+    fn loc_of(&self, caller: &'static std::panic::Location<'static>) -> Location {
+        let scope = self.inner.st.lock().unwrap().scopes.hash();
+        Location::caller(caller, scope)
+    }
+
+    // ---- id allocation -------------------------------------------------------
+
+    fn alloc_value(&self) -> ValueId {
+        ValueId(self.inner.next_value.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Rebuild a `Tensor` handle for a recorded value reference (tape use).
+    pub fn tensor_from_ref(&self, r: ValueRef, ty: TensorType) -> Tensor {
+        match r {
+            ValueRef::Out(id) => Tensor { id, ty, sess: self.clone() },
+            ValueRef::Var(v) => {
+                let id = self.alloc_value();
+                self.inner.st.lock().unwrap().aliases.insert(id, v);
+                Tensor { id, ty, sess: self.clone() }
+            }
+        }
+    }
+
+    pub(crate) fn resolve(&self, t: &Tensor) -> ValueRef {
+        match self.inner.st.lock().unwrap().aliases.get(&t.id) {
+            Some(v) => ValueRef::Var(*v),
+            None => ValueRef::Out(t.id),
+        }
+    }
+
+    // ---- op issuance ----------------------------------------------------------
+
+    /// Issue a DL op with explicit caller location.
+    pub fn issue_at(
+        &self,
+        kind: OpKind,
+        inputs: &[&Tensor],
+        caller: &'static std::panic::Location<'static>,
+    ) -> Result<Vec<Tensor>> {
+        let in_types: Vec<TensorType> = inputs.iter().map(|t| t.ty.clone()).collect();
+        let def = OpDef::new(kind, in_types);
+        let out_types = def.out_types()?;
+        let loc = self.loc_of(caller);
+        let refs: Vec<ValueRef> = inputs.iter().map(|t| self.resolve(t)).collect();
+        let out_ids: Vec<ValueId> = out_types.iter().map(|_| self.alloc_value()).collect();
+        {
+            let mut st = self.inner.st.lock().unwrap();
+            st.backend.op(&Issue {
+                def: &def,
+                inputs: &refs,
+                outputs: &out_ids,
+                out_types: &out_types,
+                loc,
+            })?;
+            if let Some(tape) = st.tape.as_mut() {
+                tape.entries.push(TapeEntry {
+                    def: def.clone(),
+                    inputs: refs.clone(),
+                    outputs: out_ids.clone(),
+                    out_types: out_types.clone(),
+                });
+            }
+        }
+        Ok(out_ids
+            .into_iter()
+            .zip(out_types)
+            .map(|(id, ty)| Tensor { id, ty, sess: self.clone() })
+            .collect())
+    }
+
+    /// Issue a single-output DL op.
+    #[track_caller]
+    pub fn issue(&self, kind: OpKind, inputs: &[&Tensor]) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self.issue_at(kind, inputs, caller)?.remove(0))
+    }
+
+    // ---- value sources ---------------------------------------------------------
+
+    /// Feed a per-step host value (training data) into the DL side.
+    #[track_caller]
+    pub fn feed(&self, value: HostTensor) -> Result<Tensor> {
+        self.feed_at(value, std::panic::Location::caller(), FeedKind::Data)
+    }
+
+    pub(crate) fn feed_at(
+        &self,
+        value: HostTensor,
+        caller: &'static std::panic::Location<'static>,
+        kind: FeedKind,
+    ) -> Result<Tensor> {
+        let id = self.alloc_value();
+        let ty = value.ty();
+        let loc = self.loc_of(caller);
+        self.inner.st.lock().unwrap().backend.feed(id, &ty, value, loc, kind)?;
+        Ok(Tensor { id, ty, sess: self.clone() })
+    }
+
+    /// An inline constant tensor.
+    #[track_caller]
+    pub fn constant(&self, value: HostTensor) -> Result<Tensor> {
+        self.constant_at(value, std::panic::Location::caller())
+    }
+
+    pub(crate) fn constant_at(
+        &self,
+        value: HostTensor,
+        caller: &'static std::panic::Location<'static>,
+    ) -> Result<Tensor> {
+        let id = self.alloc_value();
+        let ty = value.ty();
+        let loc = self.loc_of(caller);
+        self.inner.st.lock().unwrap().backend.constant(id, value, loc)?;
+        Ok(Tensor { id, ty, sess: self.clone() })
+    }
+
+    /// Scalar f32 constant.
+    #[track_caller]
+    pub fn scalar(&self, v: f32) -> Result<Tensor> {
+        self.constant_at(HostTensor::scalar_f32(v), std::panic::Location::caller())
+    }
+
+    /// Scalar i32 constant.
+    #[track_caller]
+    pub fn scalar_i32(&self, v: i32) -> Result<Tensor> {
+        self.constant_at(HostTensor::scalar_i32(v), std::panic::Location::caller())
+    }
+
+    /// U(0,1) random tensor (fresh each execution).
+    #[track_caller]
+    pub fn rng_uniform(&self, dims: &[usize]) -> Result<Tensor> {
+        self.issue_at(
+            OpKind::RngUniform { shape: dims.to_vec() },
+            &[],
+            std::panic::Location::caller(),
+        )
+        .map(|mut v| v.remove(0))
+    }
+
+    /// N(0,1) random tensor (fresh each execution).
+    #[track_caller]
+    pub fn rng_normal(&self, dims: &[usize]) -> Result<Tensor> {
+        self.issue_at(
+            OpKind::RngNormal { shape: dims.to_vec() },
+            &[],
+            std::panic::Location::caller(),
+        )
+        .map(|mut v| v.remove(0))
+    }
+
+    /// Invoke an AOT artifact (Pallas kernel / JAX block) as a DL op.
+    #[track_caller]
+    pub fn artifact_call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.inner.artifacts.meta(name)?;
+        let in_types: Vec<TensorType> = inputs.iter().map(|t| t.ty.clone()).collect();
+        if in_types != meta.in_types {
+            return Err(TerraError::Artifact(format!(
+                "artifact '{name}' expects {:?}, got {:?}",
+                meta.in_types, in_types
+            )));
+        }
+        let kind = OpKind::ArtifactCall { name: name.to_string(), out_types: meta.out_types.clone() };
+        self.issue_at(kind, inputs, std::panic::Location::caller())
+    }
+
+    /// Concatenate tensors along `axis`.
+    #[track_caller]
+    pub fn concat(&self, inputs: &[&Tensor], axis: usize) -> Result<Tensor> {
+        self.issue_at(OpKind::Concat { axis }, inputs, std::panic::Location::caller())
+            .map(|mut v| v.remove(0))
+    }
+
+    // ---- variables ----------------------------------------------------------------
+
+    /// Create a persistent variable (setup time).
+    pub fn variable(&self, name: &str, init: HostTensor, trainable: bool) -> Result<Variable> {
+        let id = VarId(self.inner.next_var.fetch_add(1, Ordering::Relaxed));
+        let ty = init.ty();
+        self.inner.vars.create(id, name, init.clone(), trainable)?;
+        self.inner.st.lock().unwrap().backend.create_var(id, init)?;
+        Ok(Variable { id, ty, sess: self.clone() })
+    }
+
+    pub(crate) fn read_var(&self, var: &Variable) -> Tensor {
+        let id = self.alloc_value();
+        let mut st = self.inner.st.lock().unwrap();
+        st.aliases.insert(id, var.id);
+        if let Some(tape) = st.tape.as_mut() {
+            tape.var_reads.push((id, var.id));
+        }
+        drop(st);
+        Tensor { id, ty: var.ty.clone(), sess: self.clone() }
+    }
+
+    pub(crate) fn assign_var(
+        &self,
+        var: &Variable,
+        value: &Tensor,
+        caller: &'static std::panic::Location<'static>,
+    ) -> Result<()> {
+        if value.ty != var.ty {
+            return Err(TerraError::shape(format!(
+                "assign type mismatch: variable {} vs value {}",
+                var.ty, value.ty
+            )));
+        }
+        let loc = self.loc_of(caller);
+        let src = self.resolve(value);
+        self.inner.st.lock().unwrap().backend.assign(var.id, src, loc)
+    }
+
+    pub(crate) fn var_host(&self, var: VarId) -> Result<HostTensor> {
+        self.inner.st.lock().unwrap().backend.var_host(var)
+    }
+
+    // ---- host state (the "Python object" analogue) -----------------------------------
+
+    pub fn host_state(&self, init: f32) -> HostState {
+        let id = StateId(self.inner.next_state.fetch_add(1, Ordering::Relaxed));
+        self.inner.host_states.lock().unwrap().insert(id, init);
+        HostState { id, sess: self.clone() }
+    }
+
+    pub(crate) fn state_get(&self, id: StateId) -> f32 {
+        *self.inner.host_states.lock().unwrap().get(&id).unwrap_or(&0.0)
+    }
+
+    pub(crate) fn state_set(&self, id: StateId, v: f32) {
+        self.inner.host_states.lock().unwrap().insert(id, v);
+    }
+
+    pub(crate) fn state_tensor(
+        &self,
+        id: StateId,
+        caller: &'static std::panic::Location<'static>,
+    ) -> Result<Tensor> {
+        let v = self.state_get(id);
+        self.feed_at(HostTensor::scalar_f32(v), caller, FeedKind::Captured(id))
+    }
+
+    // ---- host escapes -------------------------------------------------------------------
+
+    /// Call third-party host code on materialized tensor data. The closure's
+    /// outputs re-enter the DL side as feeds. (Paper Figure 1a.)
+    #[track_caller]
+    pub fn host_call(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        f: impl FnOnce(&[HostTensor]) -> Result<Vec<HostTensor>>,
+    ) -> Result<Vec<Tensor>> {
+        let caller = std::panic::Location::caller();
+        let loc = self.loc_of(caller);
+        self.inner.st.lock().unwrap().backend.host_call_check(name, loc)?;
+        let mut host_ins = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            host_ins.push(self.materialize_at(t, caller)?);
+        }
+        let outs = f(&host_ins)?;
+        outs.into_iter().map(|h| self.feed_at(h, caller, FeedKind::Data)).collect()
+    }
+
+    /// Declare entry into host-driven dynamic control flow that has no
+    /// symbolic counterpart (generator / try-except analogue, Figure 1b).
+    #[track_caller]
+    pub fn dynamic_flow(&self, what: &str) -> Result<()> {
+        let loc = self.loc_of(std::panic::Location::caller());
+        self.inner.st.lock().unwrap().backend.dynamic_flow_check(what, loc)
+    }
+
+    // ---- materialization -------------------------------------------------------------------
+
+    pub(crate) fn materialize_at(
+        &self,
+        t: &Tensor,
+        caller: &'static std::panic::Location<'static>,
+    ) -> Result<HostTensor> {
+        let loc = self.loc_of(caller);
+        let src = self.resolve(t);
+        self.inner.st.lock().unwrap().backend.materialize(src, loc)
+    }
+
+    /// Harness-side materialization of a step's returned tensor (see
+    /// [`crate::api::Backend::harness_fetch`]).
+    #[track_caller]
+    pub fn harness_value(&self, t: &Tensor) -> Result<HostTensor> {
+        let loc = self.loc_of(std::panic::Location::caller());
+        let src = self.resolve(t);
+        self.inner.st.lock().unwrap().backend.harness_fetch(src, loc)
+    }
+
+    // ---- gradient tape -------------------------------------------------------------------------
+
+    /// Start recording ops for gradient computation. Only one tape at a time.
+    pub fn start_tape(&self) -> Result<()> {
+        let mut st = self.inner.st.lock().unwrap();
+        if st.tape.is_some() {
+            return Err(TerraError::runtime("a gradient tape is already active"));
+        }
+        st.tape = Some(TapeData::default());
+        Ok(())
+    }
+
+    /// Drop any active tape (divergence-fallback cleanup: a step aborted
+    /// mid-body leaves its tape recording).
+    pub fn clear_tape(&self) {
+        self.inner.st.lock().unwrap().tape = None;
+    }
+
+    /// Stop recording and take the tape data.
+    pub fn take_tape(&self) -> Result<TapeData> {
+        self.inner
+            .st
+            .lock()
+            .unwrap()
+            .tape
+            .take()
+            .ok_or_else(|| TerraError::runtime("no active gradient tape"))
+    }
+}
+
+impl Tensor {
+    pub fn id(&self) -> ValueId {
+        self.id
+    }
+
+    pub fn ty(&self) -> &TensorType {
+        &self.ty
+    }
+
+    pub fn shape_dims(&self) -> &[usize] {
+        self.ty.shape.dims()
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.sess
+    }
+
+    /// Materialize the tensor's data on the host (the `.numpy()` analogue —
+    /// a fetch point in co-execution, a conversion error under AutoGraph).
+    #[track_caller]
+    pub fn value(&self) -> Result<HostTensor> {
+        self.sess.materialize_at(self, std::panic::Location::caller())
+    }
+
+    /// Scalar f32 materialization shortcut.
+    #[track_caller]
+    pub fn scalar_f32(&self) -> Result<f32> {
+        self.sess
+            .materialize_at(self, std::panic::Location::caller())?
+            .scalar_value_f32()
+    }
+}

@@ -1,0 +1,222 @@
+//! Op methods on `Tensor` — the imperative DL vocabulary of user programs.
+//!
+//! Every method is `#[track_caller]`: the *user program's* call site becomes
+//! the op's program location, the third component of TraceGraph node equality
+//! (paper Appendix A). Library code that issues ops from shared lines wraps
+//! itself in [`crate::api::Session::scope`] to stay distinguishable.
+
+use crate::api::session::Tensor;
+use crate::error::Result;
+use crate::ops::OpKind;
+use crate::tensor::DType;
+
+macro_rules! binary_method {
+    ($(#[$doc:meta])* $name:ident, $kind:expr) => {
+        $(#[$doc])*
+        #[track_caller]
+        pub fn $name(&self, rhs: &Tensor) -> Result<Tensor> {
+            let caller = std::panic::Location::caller();
+            Ok(self.sess.issue_at($kind, &[self, rhs], caller)?.remove(0))
+        }
+    };
+}
+
+macro_rules! unary_method {
+    ($(#[$doc:meta])* $name:ident, $kind:expr) => {
+        $(#[$doc])*
+        #[track_caller]
+        pub fn $name(&self) -> Result<Tensor> {
+            let caller = std::panic::Location::caller();
+            Ok(self.sess.issue_at($kind, &[self], caller)?.remove(0))
+        }
+    };
+}
+
+macro_rules! scalar_rhs_method {
+    ($(#[$doc:meta])* $name:ident, $kind:expr) => {
+        $(#[$doc])*
+        #[track_caller]
+        pub fn $name(&self, rhs: f32) -> Result<Tensor> {
+            let caller = std::panic::Location::caller();
+            let s = self.sess.constant_at(crate::tensor::HostTensor::scalar_f32(rhs), caller)?;
+            Ok(self.sess.issue_at($kind, &[self, &s], caller)?.remove(0))
+        }
+    };
+}
+
+impl Tensor {
+    binary_method!(/** Elementwise addition (numpy broadcasting). */ add, OpKind::Add);
+    binary_method!(/** Elementwise subtraction. */ sub, OpKind::Sub);
+    binary_method!(/** Elementwise multiplication. */ mul, OpKind::Mul);
+    binary_method!(/** Elementwise division. */ div, OpKind::Div);
+    binary_method!(/** Elementwise maximum. */ maximum, OpKind::Maximum);
+    binary_method!(/** Elementwise minimum. */ minimum, OpKind::Minimum);
+    binary_method!(/** Elementwise power. */ pow, OpKind::Pow);
+    binary_method!(/** Elementwise `>` (returns i32 0/1). */ greater, OpKind::Greater);
+    binary_method!(/** Elementwise `>=` (returns i32 0/1). */ greater_equal, OpKind::GreaterEqual);
+    binary_method!(/** Elementwise `<` (returns i32 0/1). */ less, OpKind::Less);
+    binary_method!(/** Elementwise `<=` (returns i32 0/1). */ less_equal, OpKind::LessEqual);
+    binary_method!(/** Elementwise `==` (returns i32 0/1). */ equal, OpKind::Equal);
+    binary_method!(/** Elementwise `!=` (returns i32 0/1). */ not_equal, OpKind::NotEqual);
+    binary_method!(/** Matrix multiplication (rank-2 or batched). */ matmul, OpKind::MatMul);
+
+    unary_method!(/** Elementwise negation. */ neg, OpKind::Neg);
+    unary_method!(/** Elementwise exponential. */ exp, OpKind::Exp);
+    unary_method!(/** Elementwise natural log. */ log, OpKind::Log);
+    unary_method!(/** Elementwise square root. */ sqrt, OpKind::Sqrt);
+    unary_method!(/** Elementwise reciprocal square root. */ rsqrt, OpKind::Rsqrt);
+    unary_method!(/** Elementwise tanh. */ tanh, OpKind::Tanh);
+    unary_method!(/** Elementwise logistic sigmoid. */ sigmoid, OpKind::Sigmoid);
+    unary_method!(/** Rectified linear unit. */ relu, OpKind::Relu);
+    unary_method!(/** Elementwise absolute value. */ abs, OpKind::Abs);
+    unary_method!(/** Elementwise sign. */ sign, OpKind::Sign);
+
+    scalar_rhs_method!(/** Add a scalar constant. */ add_scalar, OpKind::Add);
+    scalar_rhs_method!(/** Subtract a scalar constant. */ sub_scalar, OpKind::Sub);
+    scalar_rhs_method!(/** Multiply by a scalar constant. */ mul_scalar, OpKind::Mul);
+    scalar_rhs_method!(/** Divide by a scalar constant. */ div_scalar, OpKind::Div);
+    scalar_rhs_method!(/** Elementwise power with scalar exponent. */ pow_scalar, OpKind::Pow);
+    scalar_rhs_method!(/** Compare `> scalar` (returns i32 0/1). */ greater_scalar, OpKind::Greater);
+
+    /// `select(self as condition, on_true, on_false)`; `self` must be i32.
+    #[track_caller]
+    pub fn select(&self, on_true: &Tensor, on_false: &Tensor) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Select, &[self, on_true, on_false], caller)?
+            .remove(0))
+    }
+
+    /// Permute dimensions.
+    #[track_caller]
+    pub fn transpose(&self, perm: &[usize]) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Transpose { perm: perm.to_vec() }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Reshape to `dims` (element count preserved).
+    #[track_caller]
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Reshape { shape: dims.to_vec() }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Broadcast to `dims` (numpy right-aligned rules).
+    #[track_caller]
+    pub fn broadcast_to(&self, dims: &[usize]) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Broadcast { shape: dims.to_vec() }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Static slice: `starts[i] .. starts[i]+sizes[i]` per axis.
+    #[track_caller]
+    pub fn slice(&self, starts: &[usize], sizes: &[usize]) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(
+                OpKind::Slice { starts: starts.to_vec(), sizes: sizes.to_vec() },
+                &[self],
+                caller,
+            )?
+            .remove(0))
+    }
+
+    /// Zero padding per axis.
+    #[track_caller]
+    pub fn pad(&self, low: &[usize], high: &[usize]) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Pad { low: low.to_vec(), high: high.to_vec() }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Sum over `axes`.
+    #[track_caller]
+    pub fn reduce_sum(&self, axes: &[usize], keep_dims: bool) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::ReduceSum { axes: axes.to_vec(), keep_dims }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Mean over `axes`.
+    #[track_caller]
+    pub fn reduce_mean(&self, axes: &[usize], keep_dims: bool) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::ReduceMean { axes: axes.to_vec(), keep_dims }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Max over `axes`.
+    #[track_caller]
+    pub fn reduce_max(&self, axes: &[usize], keep_dims: bool) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::ReduceMax { axes: axes.to_vec(), keep_dims }, &[self], caller)?
+            .remove(0))
+    }
+
+    /// Softmax along `axis`.
+    #[track_caller]
+    pub fn softmax(&self, axis: usize) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self.sess.issue_at(OpKind::Softmax { axis }, &[self], caller)?.remove(0))
+    }
+
+    /// Log-softmax along `axis` (max-stabilized).
+    #[track_caller]
+    pub fn log_softmax(&self, axis: usize) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self.sess.issue_at(OpKind::LogSoftmax { axis }, &[self], caller)?.remove(0))
+    }
+
+    /// Gather `indices` (i32) along `axis` of `self`.
+    #[track_caller]
+    pub fn take(&self, indices: &Tensor, axis: usize) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Take { axis }, &[self, indices], caller)?
+            .remove(0))
+    }
+
+    /// One-hot encode i32 indices to f32 with an appended `depth` axis.
+    #[track_caller]
+    pub fn one_hot(&self, depth: usize) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self.sess.issue_at(OpKind::OneHot { depth }, &[self], caller)?.remove(0))
+    }
+
+    /// Cast to another element type.
+    #[track_caller]
+    pub fn convert(&self, dtype: DType) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self.sess.issue_at(OpKind::Convert { dtype }, &[self], caller)?.remove(0))
+    }
+
+    /// f32 cast shortcut.
+    #[track_caller]
+    pub fn to_f32(&self) -> Result<Tensor> {
+        let caller = std::panic::Location::caller();
+        Ok(self
+            .sess
+            .issue_at(OpKind::Convert { dtype: DType::F32 }, &[self], caller)?
+            .remove(0))
+    }
+}

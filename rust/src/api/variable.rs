@@ -1,0 +1,244 @@
+//! Variables (persistent device-resident parameters) and mutable host state.
+
+use crate::api::session::Session;
+use crate::api::Tensor;
+use crate::error::{Result, TerraError};
+use crate::runtime::{Client, RtValue};
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{StateId, VarId};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Metadata of a variable.
+#[derive(Debug, Clone)]
+pub struct VarMeta {
+    pub name: String,
+    pub ty: TensorType,
+    pub trainable: bool,
+}
+
+/// Shared store of variable values.
+///
+/// Values are kept device-resident (`RtValue::Dev`) and are shared between
+/// the eager executor and the GraphRunner (both run on the same PJRT client).
+/// In co-execution, segment outputs that update variables are *staged* and
+/// committed at the iteration barrier, so a mid-iteration fallback never
+/// observes partially-updated state (DESIGN.md invariant 4).
+pub struct VarStore {
+    client: Client,
+    vals: Mutex<HashMap<VarId, RtValue>>,
+    staged: Mutex<HashMap<VarId, RtValue>>,
+    metas: Mutex<HashMap<VarId, VarMeta>>,
+}
+
+impl VarStore {
+    pub fn new(client: Client) -> Self {
+        VarStore {
+            client,
+            vals: Mutex::new(HashMap::new()),
+            staged: Mutex::new(HashMap::new()),
+            metas: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    pub fn create(&self, var: VarId, name: &str, init: HostTensor, trainable: bool) -> Result<()> {
+        let ty = init.ty();
+        let buf = self.client.upload(&init)?;
+        self.vals.lock().unwrap().insert(var, RtValue::Dev(buf));
+        self.metas
+            .lock()
+            .unwrap()
+            .insert(var, VarMeta { name: name.to_string(), ty, trainable });
+        Ok(())
+    }
+
+    pub fn meta(&self, var: VarId) -> Result<VarMeta> {
+        self.metas
+            .lock()
+            .unwrap()
+            .get(&var)
+            .cloned()
+            .ok_or_else(|| TerraError::runtime(format!("unknown variable {var:?}")))
+    }
+
+    pub fn ty(&self, var: VarId) -> Result<TensorType> {
+        Ok(self.meta(var)?.ty)
+    }
+
+    /// Committed value.
+    pub fn get(&self, var: VarId) -> Result<RtValue> {
+        self.vals
+            .lock()
+            .unwrap()
+            .get(&var)
+            .cloned()
+            .ok_or_else(|| TerraError::runtime(format!("unknown variable {var:?}")))
+    }
+
+    /// Immediate (eager) update.
+    pub fn set(&self, var: VarId, v: RtValue) -> Result<()> {
+        let mut m = self.vals.lock().unwrap();
+        if !m.contains_key(&var) {
+            return Err(TerraError::runtime(format!("unknown variable {var:?}")));
+        }
+        m.insert(var, v);
+        Ok(())
+    }
+
+    /// Stage an update; visible only after [`VarStore::commit`].
+    pub fn stage(&self, var: VarId, v: RtValue) {
+        self.staged.lock().unwrap().insert(var, v);
+    }
+
+    /// Commit all staged updates (iteration barrier).
+    pub fn commit(&self) {
+        let staged: Vec<(VarId, RtValue)> = self.staged.lock().unwrap().drain().collect();
+        let mut vals = self.vals.lock().unwrap();
+        for (k, v) in staged {
+            vals.insert(k, v);
+        }
+    }
+
+    /// Drop staged updates (fallback / cancellation path).
+    pub fn discard_staged(&self) {
+        self.staged.lock().unwrap().clear();
+    }
+
+    pub fn staged_len(&self) -> usize {
+        self.staged.lock().unwrap().len()
+    }
+
+    /// Host snapshot of a committed value.
+    pub fn host(&self, var: VarId) -> Result<HostTensor> {
+        self.get(var)?.to_host()
+    }
+
+    pub fn ids(&self) -> Vec<VarId> {
+        let mut v: Vec<VarId> = self.vals.lock().unwrap().keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub fn trainable_ids(&self) -> Vec<VarId> {
+        let metas = self.metas.lock().unwrap();
+        let mut v: Vec<VarId> =
+            metas.iter().filter(|(_, m)| m.trainable).map(|(k, _)| *k).collect();
+        v.sort();
+        v
+    }
+}
+
+/// A persistent, mutable tensor (tf.Variable analogue).
+#[derive(Clone)]
+pub struct Variable {
+    pub(crate) id: VarId,
+    pub(crate) ty: TensorType,
+    pub(crate) sess: Session,
+}
+
+impl Variable {
+    pub fn id(&self) -> VarId {
+        self.id
+    }
+
+    pub fn ty(&self) -> &TensorType {
+        &self.ty
+    }
+
+    /// Read the variable as a tensor usable in ops. No DL op is recorded:
+    /// the read is a value *source* (resolved per-iteration to the
+    /// variable's committed value).
+    pub fn read(&self) -> Tensor {
+        self.sess.read_var(self)
+    }
+
+    /// Assign a new value computed by the DL side.
+    #[track_caller]
+    pub fn assign(&self, value: &Tensor) -> Result<()> {
+        self.sess.assign_var(self, value, std::panic::Location::caller())
+    }
+
+    /// Host snapshot of the committed value (engine-side; not a fetch point).
+    pub fn snapshot(&self) -> Result<HostTensor> {
+        self.sess.var_host(self.id)
+    }
+}
+
+impl std::fmt::Debug for Variable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Variable(v{}, {})", self.id.0, self.ty)
+    }
+}
+
+/// A mutable host-side cell — the "Python object attribute" analogue
+/// (`dr.drop_prob` in the paper's Figure 1c).
+///
+/// `get`/`set` are plain host reads/writes. [`HostState::tensor`] injects the
+/// *current* value into the DL side as a captured feed: Terra refreshes it
+/// every iteration, while the AutoGraph baseline bakes the conversion-time
+/// value and silently goes stale — which its validator then reports as the
+/// `PythonObjectMutation` failure of Table 1.
+#[derive(Clone)]
+pub struct HostState {
+    pub(crate) id: StateId,
+    pub(crate) sess: Session,
+}
+
+impl HostState {
+    pub fn id(&self) -> StateId {
+        self.id
+    }
+
+    /// Host read of the current value.
+    pub fn get(&self) -> f32 {
+        self.sess.state_get(self.id)
+    }
+
+    /// Host mutation.
+    pub fn set(&self, v: f32) {
+        self.sess.state_set(self.id, v);
+    }
+
+    /// Inject the current value into the DL side (captured feed point).
+    #[track_caller]
+    pub fn tensor(&self) -> Result<Tensor> {
+        self.sess.state_tensor(self.id, std::panic::Location::caller())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn var_store_stage_commit_discard() {
+        let store = VarStore::new(Client::global().clone());
+        let v = VarId(0);
+        store.create(v, "w", HostTensor::scalar_f32(1.0), true).unwrap();
+        assert_eq!(store.host(v).unwrap().scalar_value_f32().unwrap(), 1.0);
+
+        store.stage(v, RtValue::Host(HostTensor::scalar_f32(2.0)));
+        // staged not visible
+        assert_eq!(store.host(v).unwrap().scalar_value_f32().unwrap(), 1.0);
+        store.commit();
+        assert_eq!(store.host(v).unwrap().scalar_value_f32().unwrap(), 2.0);
+
+        store.stage(v, RtValue::Host(HostTensor::scalar_f32(9.0)));
+        store.discard_staged();
+        store.commit();
+        assert_eq!(store.host(v).unwrap().scalar_value_f32().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn trainable_filter() {
+        let store = VarStore::new(Client::global().clone());
+        store.create(VarId(1), "w", HostTensor::scalar_f32(0.0), true).unwrap();
+        store.create(VarId(2), "step", HostTensor::scalar_i32(0), false).unwrap();
+        assert_eq!(store.trainable_ids(), vec![VarId(1)]);
+        assert_eq!(store.ids().len(), 2);
+    }
+}

@@ -1,0 +1,184 @@
+//! The AutoGraph-style conversion backend (paper §2.2).
+//!
+//! Conversion = one imperative iteration run under this backend. It wraps
+//! the tracing backend but enforces the static-compilation restrictions:
+//!
+//! * third-party host calls             -> `ConvertFailure::ThirdPartyCall`
+//! * mid-step tensor materialization    -> `ConvertFailure::TensorMaterialization`
+//! * generator-style dynamic control    -> `ConvertFailure::DynamicControlFlow`
+//! * captured host state                -> silently *baked* (recorded in
+//!   [`BakedStates`]); the engine's per-step staleness validator reports
+//!   `ConvertFailure::PythonObjectMutation` when the program later mutates
+//!   a baked cell — the paper's "silently incorrect" case, surfaced.
+//!
+//! Harness fetches (the step's returned loss) are allowed: they correspond
+//! to function return values, which AutoGraph supports.
+
+use crate::api::{Backend, Issue, TracingBackend};
+use crate::error::{ConvertFailure, Result, TerraError};
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{FeedKind, Location, StateId, Trace, ValueId, ValueRef, VarId};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Host-state values captured (baked) during conversion.
+#[derive(Debug, Default)]
+pub struct BakedStates {
+    baked: Mutex<HashMap<StateId, f32>>,
+}
+
+impl BakedStates {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn record(&self, id: StateId, v: f32) {
+        // First capture wins (conversion-time value).
+        self.baked.lock().unwrap().entry(id).or_insert(v);
+    }
+
+    /// Check all baked cells against the session's current values; a
+    /// mismatch means the program mutated an object the graph captured.
+    pub fn validate(&self, current: &HashMap<StateId, f32>) -> Result<()> {
+        for (id, baked) in self.baked.lock().unwrap().iter() {
+            if let Some(now) = current.get(id) {
+                if (now - baked).abs() > 0.0 {
+                    return Err(TerraError::convert(
+                        ConvertFailure::PythonObjectMutation,
+                        format!(
+                            "host state {id:?} mutated after conversion \
+                             (baked {baked}, now {now}); the converted graph is stale"
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn baked_value(&self, id: StateId) -> Option<f32> {
+        self.baked.lock().unwrap().get(&id).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.baked.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Conversion backend: tracing + static-compilation restrictions.
+pub struct ConvertBackend {
+    inner: TracingBackend,
+    baked: Arc<BakedStates>,
+}
+
+impl ConvertBackend {
+    pub fn new(inner: TracingBackend, baked: Arc<BakedStates>) -> Self {
+        ConvertBackend { inner, baked }
+    }
+}
+
+impl Backend for ConvertBackend {
+    fn name(&self) -> &'static str {
+        "autograph-convert"
+    }
+
+    fn begin_step(&mut self, step: u64) -> Result<()> {
+        self.inner.begin_step(step)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        self.inner.end_step()
+    }
+
+    fn take_trace(&mut self) -> Option<Trace> {
+        self.inner.take_trace()
+    }
+
+    fn op(&mut self, issue: &Issue) -> Result<()> {
+        self.inner.op(issue)
+    }
+
+    fn feed(
+        &mut self,
+        id: ValueId,
+        ty: &TensorType,
+        value: HostTensor,
+        loc: Location,
+        kind: FeedKind,
+    ) -> Result<()> {
+        if let FeedKind::Captured(state) = kind {
+            // AutoGraph silently captures the Python object's current value.
+            self.baked.record(state, value.scalar_value_f32().unwrap_or(0.0));
+        }
+        self.inner.feed(id, ty, value, loc, kind)
+    }
+
+    fn constant(&mut self, id: ValueId, value: HostTensor, loc: Location) -> Result<()> {
+        self.inner.constant(id, value, loc)
+    }
+
+    fn assign(&mut self, var: VarId, src: ValueRef, loc: Location) -> Result<()> {
+        self.inner.assign(var, src, loc)
+    }
+
+    fn materialize(&mut self, _src: ValueRef, loc: Location) -> Result<HostTensor> {
+        Err(TerraError::convert(
+            ConvertFailure::TensorMaterialization,
+            format!("tensor materialized during graph conversion at {loc}"),
+        ))
+    }
+
+    fn harness_fetch(&mut self, src: ValueRef, loc: Location) -> Result<HostTensor> {
+        // Function return values are supported by the conversion approach.
+        self.inner.materialize(src, loc)
+    }
+
+    fn create_var(&mut self, var: VarId, init: HostTensor) -> Result<()> {
+        self.inner.create_var(var, init)
+    }
+
+    fn var_host(&mut self, var: VarId) -> Result<HostTensor> {
+        self.inner.var_host(var)
+    }
+
+    fn host_call_check(&mut self, name: &str, loc: Location) -> Result<()> {
+        Err(TerraError::convert(
+            ConvertFailure::ThirdPartyCall,
+            format!("third-party call '{name}' at {loc} has no symbolic representation"),
+        ))
+    }
+
+    fn dynamic_flow_check(&mut self, what: &str, loc: Location) -> Result<()> {
+        Err(TerraError::convert(
+            ConvertFailure::DynamicControlFlow,
+            format!("dynamic control flow '{what}' at {loc} cannot be converted"),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baked_states_detect_mutation() {
+        let baked = BakedStates::new();
+        baked.record(StateId(0), 0.5);
+        baked.record(StateId(0), 0.9); // later captures ignored
+        assert_eq!(baked.baked_value(StateId(0)), Some(0.5));
+
+        let mut current = HashMap::new();
+        current.insert(StateId(0), 0.5);
+        assert!(baked.validate(&current).is_ok());
+        current.insert(StateId(0), 0.7);
+        let err = baked.validate(&current).unwrap_err();
+        assert!(matches!(
+            err,
+            TerraError::Convert { category: ConvertFailure::PythonObjectMutation, .. }
+        ));
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation baselines.
+//!
+//! * `autograph` — the static-compilation + single-path-tracing approach
+//!   (AutoGraph/TorchScript-style): rejects host escapes at conversion time
+//!   and bakes captured host state (the Figure-1 failure modes).
+//! * the LazyTensor baseline is `ExecMode::TerraLazy` in the engine
+//!   (serialized runners, Table 2).
+
+mod autograph;
+
+pub use autograph::{BakedStates, ConvertBackend};

@@ -1,0 +1,146 @@
+//! Self-contained benchmark harness (criterion is unavailable offline).
+//!
+//! Provides the program-level runner used by the paper-figure benches
+//! (`benches/bench_fig5.rs` etc.), micro-benchmark timing utilities, table
+//! printing, and JSON report emission under `target/bench-results/`.
+
+use crate::config::{ExecMode, Json};
+use crate::error::Result;
+use crate::programs::build_program;
+use crate::runner::{Engine, RunReport};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Benchmark knobs, overridable via `TERRA_BENCH_STEPS` / `TERRA_BENCH_WARMUP`
+/// (the paper measures steps 100..200; the defaults are scaled to the 1-core
+/// CI budget, see EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub steps: u64,
+    pub warmup: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let steps = std::env::var("TERRA_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
+        let warmup = std::env::var("TERRA_BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+        BenchConfig { steps, warmup }
+    }
+}
+
+/// One measured configuration of one program.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub program: String,
+    pub config: String,
+    pub steps_per_sec: f64,
+    pub speedup_vs_eager: f64,
+    pub report: Option<RunReport>,
+    pub failed: Option<String>,
+}
+
+/// Run one program under one mode; conversion failures become rows marked
+/// failed (the Table-1 outcomes surfacing inside Figure 5, like the paper).
+pub fn run_program(
+    name: &str,
+    mode: ExecMode,
+    fusion: bool,
+    cfg: BenchConfig,
+) -> Result<RunReport> {
+    let artifacts = std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut engine = Engine::new(mode, &artifacts, fusion)?;
+    let mut prog = build_program(name)?;
+    engine.run(prog.as_mut(), cfg.steps, cfg.warmup)
+}
+
+/// Measure `f` repeatedly: returns (mean, p50, p99) nanoseconds.
+pub fn time_micro(mut f: impl FnMut(), iters: usize) -> (f64, u64, u64) {
+    let mut samples: Vec<u64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
+    (mean, p50, p99)
+}
+
+/// Warm up then measure a closure for at least `budget`.
+pub fn time_budgeted(mut f: impl FnMut(), budget: Duration) -> (u64, f64) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let start = Instant::now();
+    let mut n = 0u64;
+    while start.elapsed() < budget {
+        f();
+        n += 1;
+    }
+    (n, n as f64 / start.elapsed().as_secs_f64())
+}
+
+/// Column-aligned table printing.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Persist a bench result as JSON under `target/bench-results/`.
+pub fn write_json_report(name: &str, payload: Json) {
+    let dir = std::path::Path::new("target/bench-results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{name}.json"));
+        if std::fs::write(&path, payload.to_string()).is_ok() {
+            println!("[bench] wrote {}", path.display());
+        }
+    }
+}
+
+/// Helper to build a JSON object.
+pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_timer_returns_ordered_percentiles() {
+        let (mean, p50, p99) = time_micro(|| { std::hint::black_box(1 + 1); }, 100);
+        assert!(mean > 0.0);
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn budgeted_timer_counts() {
+        let (n, rate) = time_budgeted(|| std::hint::black_box(()), Duration::from_millis(5));
+        assert!(n > 0);
+        assert!(rate > 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Configuration system: JSON substrate + typed run configuration.
+
+pub mod json;
+mod run_config;
+
+pub use json::Json;
+pub use run_config::{ExecMode, RunConfig};

@@ -1,0 +1,148 @@
+//! Typed run configuration for the launcher, benches and examples.
+//!
+//! Values come from (in order of precedence) CLI flags, environment
+//! variables (`TERRA_*`) and JSON config files, so experiments are
+//! reproducible from a single file checked into the repo.
+
+use crate::config::json::Json;
+use crate::error::{Result, TerraError};
+
+/// Which execution engine runs the program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Plain imperative execution (TF-eager analogue) — the paper's baseline.
+    Eager,
+    /// Terra imperative-symbolic co-execution.
+    Terra,
+    /// Terra with serialized runners (LazyTensor-style lazy evaluation).
+    TerraLazy,
+    /// AutoGraph analogue: static conversion + single-path tracing.
+    AutoGraph,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "eager" | "imperative" => Ok(ExecMode::Eager),
+            "terra" => Ok(ExecMode::Terra),
+            "terra-lazy" | "lazy" => Ok(ExecMode::TerraLazy),
+            "autograph" => Ok(ExecMode::AutoGraph),
+            other => Err(TerraError::Config(format!("unknown exec mode '{other}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Eager => "eager",
+            ExecMode::Terra => "terra",
+            ExecMode::TerraLazy => "terra-lazy",
+            ExecMode::AutoGraph => "autograph",
+        }
+    }
+}
+
+/// Configuration of one run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub program: String,
+    pub mode: ExecMode,
+    /// Total training steps to execute.
+    pub steps: usize,
+    /// Steps to skip before measuring (the paper measures steps 100..200).
+    pub warmup_steps: usize,
+    /// Batch size override (0 = program default).
+    pub batch_size: usize,
+    /// Whether segments are compiled whole ("XLA on", fusion) or per-op
+    /// ("XLA off"): the Figure-5 ±XLA axis.
+    pub fusion: bool,
+    /// Deterministic data seed.
+    pub seed: u64,
+    /// Artifact directory.
+    pub artifacts_dir: String,
+    /// Print the per-step breakdown (Figure 6).
+    pub breakdown: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            program: "resnet50".into(),
+            mode: ExecMode::Terra,
+            steps: 200,
+            warmup_steps: 100,
+            batch_size: 0,
+            fusion: true,
+            seed: 0x7e11a,
+            artifacts_dir: std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+            breakdown: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a JSON object (e.g. from a config file) over the defaults.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(json)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, json: &Json) -> Result<()> {
+        if let Some(v) = json.get("program").and_then(Json::as_str) {
+            self.program = v.to_string();
+        }
+        if let Some(v) = json.get("mode").and_then(Json::as_str) {
+            self.mode = ExecMode::parse(v)?;
+        }
+        if let Some(v) = json.get("steps").and_then(Json::as_usize) {
+            self.steps = v;
+        }
+        if let Some(v) = json.get("warmup_steps").and_then(Json::as_usize) {
+            self.warmup_steps = v;
+        }
+        if let Some(v) = json.get("batch_size").and_then(Json::as_usize) {
+            self.batch_size = v;
+        }
+        if let Some(v) = json.get("fusion").and_then(|j| j.as_bool()) {
+            self.fusion = v;
+        }
+        if let Some(v) = json.get("seed").and_then(Json::as_f64) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = json.get("artifacts_dir").and_then(Json::as_str) {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = json.get("breakdown").and_then(|j| j.as_bool()) {
+            self.breakdown = v;
+        }
+        Ok(())
+    }
+
+    pub fn load_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_json_overrides() {
+        let j = Json::parse(r#"{"program": "gpt2", "mode": "eager", "steps": 50, "fusion": false}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.program, "gpt2");
+        assert_eq!(cfg.mode, ExecMode::Eager);
+        assert_eq!(cfg.steps, 50);
+        assert!(!cfg.fusion);
+        assert_eq!(cfg.warmup_steps, RunConfig::default().warmup_steps);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ExecMode::parse("terra-lazy").unwrap(), ExecMode::TerraLazy);
+        assert!(ExecMode::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Synthetic data substrate (the `tf.data` analogue).
+//!
+//! Every generator is a pure function of `(seed, step)` so that a training
+//! step is *replayable* — required by the divergence fallback, which re-runs
+//! the diverged iteration imperatively (see `programs::Program`).
+
+mod rng;
+
+pub use rng::{Rng, SplitMix64};
+
+use crate::tensor::HostTensor;
+
+/// Deterministic batch of images, NCHW, values in [-1, 1).
+pub fn image_batch(seed: u64, step: u64, b: usize, c: usize, h: usize, w: usize) -> HostTensor {
+    let mut rng = Rng::for_step(seed, step);
+    let n = b * c * h * w;
+    let data: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    HostTensor::f32(vec![b, c, h, w], data).expect("image batch")
+}
+
+/// Deterministic class labels in `0..classes`.
+pub fn label_batch(seed: u64, step: u64, b: usize, classes: usize) -> HostTensor {
+    let mut rng = Rng::for_step(seed ^ 0x6c61_6265, step);
+    let data: Vec<i32> = (0..b).map(|_| rng.below(classes) as i32).collect();
+    HostTensor::i32(vec![b], data).expect("label batch")
+}
+
+/// Deterministic token batch from a tiny zipfian "corpus".
+pub fn token_batch(seed: u64, step: u64, b: usize, seq: usize, vocab: usize) -> HostTensor {
+    let mut rng = Rng::for_step(seed ^ 0x746f_6b65, step);
+    let data: Vec<i32> = (0..b * seq)
+        .map(|_| {
+            // Zipf-ish: low token ids are much more frequent.
+            let u = rng.uniform(0.0, 1.0).max(1e-6) as f64;
+            let z = ((vocab as f64).powf(u) - 1.0) / (vocab as f64 - 1.0);
+            ((z * (vocab as f64 - 1.0)) as usize).min(vocab - 1) as i32
+        })
+        .collect();
+    HostTensor::i32(vec![b, seq], data).expect("token batch")
+}
+
+/// Span targets (start, end) for QA-style heads.
+pub fn span_batch(seed: u64, step: u64, b: usize, seq: usize) -> (HostTensor, HostTensor) {
+    let mut rng = Rng::for_step(seed ^ 0x7370_616e, step);
+    let mut starts = Vec::with_capacity(b);
+    let mut ends = Vec::with_capacity(b);
+    for _ in 0..b {
+        let s = rng.below(seq);
+        let e = s + rng.below(seq - s);
+        starts.push(s as i32);
+        ends.push(e as i32);
+    }
+    (
+        HostTensor::i32(vec![b], starts).expect("spans"),
+        HostTensor::i32(vec![b], ends).expect("spans"),
+    )
+}
+
+/// Sequence-length bucket for step (GPT-2-style dynamic shapes): cycles
+/// through the bucket list deterministically but unevenly.
+pub fn seq_bucket(step: u64, buckets: &[usize]) -> usize {
+    // Pattern with repetitions so every bucket recurs (0,0,1,0,2,1,...)
+    let pattern = [0usize, 0, 1, 0, 2, 1, 0, 1, 2, 0];
+    buckets[pattern[(step as usize) % pattern.len()] % buckets.len()]
+}
+
+/// Box targets for detection-style losses: [b, n, 4] in [0,1).
+pub fn boxes_batch(seed: u64, step: u64, b: usize, n: usize) -> HostTensor {
+    let mut rng = Rng::for_step(seed ^ 0x626f_7865, step);
+    let data: Vec<f32> = (0..b * n * 4).map(|_| rng.uniform(0.0, 1.0)).collect();
+    HostTensor::f32(vec![b, n, 4], data).expect("boxes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(image_batch(1, 5, 2, 3, 4, 4), image_batch(1, 5, 2, 3, 4, 4));
+        assert_ne!(image_batch(1, 5, 2, 3, 4, 4), image_batch(1, 6, 2, 3, 4, 4));
+        assert_eq!(token_batch(2, 0, 2, 8, 50), token_batch(2, 0, 2, 8, 50));
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let l = label_batch(3, 7, 64, 10);
+        assert!(l.as_i32().unwrap().iter().all(|&v| (0..10).contains(&v)));
+    }
+
+    #[test]
+    fn spans_ordered() {
+        let (s, e) = span_batch(4, 2, 32, 16);
+        for (a, b) in s.as_i32().unwrap().iter().zip(e.as_i32().unwrap()) {
+            assert!(a <= b && *b < 16);
+        }
+    }
+
+    #[test]
+    fn buckets_cycle_through_all() {
+        let buckets = [16, 24, 32];
+        let seen: std::collections::HashSet<usize> =
+            (0..10).map(|s| seq_bucket(s, &buckets)).collect();
+        assert_eq!(seen.len(), 3);
+    }
+}

@@ -1,0 +1,119 @@
+//! Dependency-free deterministic PRNG (SplitMix64 + Box-Muller).
+
+/// SplitMix64: tiny, fast, good-enough statistical quality for synthetic
+/// data and weight init.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// Convenience sampler over SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    inner: SplitMix64,
+    cached_normal: Option<f32>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { inner: SplitMix64::new(seed), cached_normal: None }
+    }
+
+    /// Independent stream per (seed, step).
+    pub fn for_step(seed: u64, step: u64) -> Self {
+        // Mix the step in through one SplitMix64 round for decorrelation.
+        let mut s = SplitMix64::new(seed ^ step.wrapping_mul(0x2545f4914f6cdd1d));
+        let mixed = s.next_u64();
+        Rng::new(mixed)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn unit(&mut self) -> f32 {
+        (self.inner.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.unit()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        (self.inner.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal (Box-Muller, cached pair).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(v) = self.cached_normal.take() {
+            return v;
+        }
+        let u1 = self.unit().max(1e-7);
+        let u2 = self.unit();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f32::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Vector of normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.inner.next_u64(), b.inner.next_u64());
+        }
+    }
+
+    #[test]
+    fn unit_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.unit();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f32> = (0..20000).map(|_| r.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn step_streams_differ() {
+        let mut a = Rng::for_step(1, 0);
+        let mut b = Rng::for_step(1, 1);
+        assert_ne!(a.inner.next_u64(), b.inner.next_u64());
+    }
+}

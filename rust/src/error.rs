@@ -1,0 +1,96 @@
+//! Error types for the Terra runtime.
+//!
+//! `ConvertError` mirrors the paper's four static-compilation failure
+//! categories (§2.2, Figure 1, Table 1): the AutoGraph-style baseline reports
+//! these; Terra itself never raises them because co-execution keeps all host
+//! features on the imperative side.
+
+use thiserror::Error;
+
+/// Failure categories of the static-compilation approach (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvertFailure {
+    /// A third-party library call on materialized tensor data (Fig. 1a).
+    ThirdPartyCall,
+    /// Tensor materialization (`.value()` / `.numpy()`) during conversion (Fig. 1a).
+    TensorMaterialization,
+    /// A dynamic control flow construct with no symbolic counterpart, e.g. a
+    /// generator-driven loop (Fig. 1b).
+    DynamicControlFlow,
+    /// Mutation of a host (Python) object captured by the converted graph
+    /// (Fig. 1c). AutoGraph silently bakes the captured value; our baseline
+    /// detects the staleness and reports it as an execution failure.
+    PythonObjectMutation,
+}
+
+impl std::fmt::Display for ConvertFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ConvertFailure::ThirdPartyCall => "third-party library call",
+            ConvertFailure::TensorMaterialization => "tensor materialization during conversion",
+            ConvertFailure::DynamicControlFlow => "dynamic control flow",
+            ConvertFailure::PythonObjectMutation => "Python object mutation",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Top-level error type for all Terra subsystems.
+#[derive(Debug, Error)]
+pub enum TerraError {
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("dtype error: {0}")]
+    DType(String),
+
+    #[error("graph conversion failure ({category}): {context}")]
+    Convert {
+        category: ConvertFailure,
+        context: String,
+    },
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("trace error: {0}")]
+    Trace(String),
+
+    #[error("co-execution error: {0}")]
+    CoExec(String),
+
+    /// The current iteration's trace is not covered by the TraceGraph: the
+    /// engine cancels the GraphRunner and falls back to the tracing phase.
+    #[error("trace diverged: {0}")]
+    Diverged(String),
+
+    /// Co-execution channel cancelled (GraphRunner shutdown path).
+    #[error("co-execution cancelled")]
+    Cancelled,
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, TerraError>;
+
+impl TerraError {
+    pub fn shape(msg: impl Into<String>) -> Self {
+        TerraError::Shape(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        TerraError::Runtime(msg.into())
+    }
+    pub fn convert(category: ConvertFailure, context: impl Into<String>) -> Self {
+        TerraError::Convert { category, context: context.into() }
+    }
+}

@@ -1,0 +1,551 @@
+//! The GraphGenerator (paper §4.2): turns the merged TraceGraph into an
+//! executable symbolic plan.
+//!
+//! * **Case assignment** (paper Appendix B): every node with multiple
+//!   successors is a branch point; its *join* is its immediate post-dominator
+//!   in the DAG, and the sub-plans between each successor and the join form
+//!   the Switch-Case's cases. Because every TraceGraph node lies on a path
+//!   from START to END, post-dominators always exist, so the assignment
+//!   handles arbitrary DAGs (including merge-backs that share sub-paths
+//!   between branches — shared nodes are simply emitted in both cases; only
+//!   one case executes per iteration).
+//! * **Communication points**: Feed nodes (and constants generalized to
+//!   feeds) become plan-level `Feed` steps (Input Feeding); Fetch nodes
+//!   become `Fetch` steps (Output Fetching) emitted right after the segment
+//!   that produces their value, so fusion is not broken by materialization.
+//! * **Segmentation**: maximal straight-line runs of DL ops are fused into
+//!   single XLA computations (`fusion = true`) or kept one-op-per-computation
+//!   (`fusion = false`, the "without XLA" axis of Figure 5). Artifact calls
+//!   and Switch boundaries always split segments.
+
+mod postdom;
+
+pub use postdom::ipdoms;
+
+use crate::error::{Result, TerraError};
+use crate::ops::OpKind;
+use crate::symbolic::{Binding, PlanSpec, SegId, SegmentSpec, Step};
+use crate::tensor::TensorType;
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TraceGraph, END, START};
+use crate::trace::{ItemKey, VarId};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Plan-generation options.
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    /// Fuse whole straight-line segments into single computations (the ±XLA
+    /// axis of Figure 5). `false` compiles one computation per op.
+    pub fusion: bool,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { fusion: true }
+    }
+}
+
+/// Generate a plan from the TraceGraph.
+pub fn generate_plan(
+    graph: &TraceGraph,
+    var_types: &HashMap<VarId, TensorType>,
+    opts: &GenOptions,
+) -> Result<PlanSpec> {
+    let ipdom = ipdoms(graph)?;
+    let mut b = Builder {
+        graph,
+        var_types,
+        fusion: opts.fusion,
+        ipdom,
+        segments: Vec::new(),
+        chain: Vec::new(),
+        chain_set: HashSet::new(),
+        post: Vec::new(),
+        pending_assigned: HashSet::new(),
+    };
+    let mut steps = Vec::new();
+    b.emit_range(START, END, &mut steps)?;
+    b.flush(&mut steps)?;
+
+    let mut spec = PlanSpec { steps, segments: b.segments };
+    fill_outputs(graph, &mut spec);
+    // Drop segments that produce nothing anyone reads (dead compute).
+    prune_dead_segments(&mut spec);
+    Ok(spec)
+}
+
+struct Builder<'g> {
+    graph: &'g TraceGraph,
+    var_types: &'g HashMap<VarId, TensorType>,
+    fusion: bool,
+    ipdom: Vec<Option<NodeId>>,
+    segments: Vec<SegmentSpec>,
+    /// Current straight-line run of op nodes.
+    chain: Vec<NodeId>,
+    chain_set: HashSet<NodeId>,
+    /// Deferred steps that consume current-chain values (fetches, assigns).
+    post: Vec<Step>,
+    /// Variables with a staged assign in `post`.
+    pending_assigned: HashSet<VarId>,
+}
+
+impl<'g> Builder<'g> {
+    /// Unique input sources per position (union over dataflow variants).
+    fn alternatives_of(&self, n: NodeId) -> Vec<Vec<GraphSrc>> {
+        let node = self.graph.node(n);
+        let arity = node.variants.first().map(|v| v.len()).unwrap_or(0);
+        let mut out: Vec<Vec<GraphSrc>> = vec![Vec::new(); arity];
+        for v in &node.variants {
+            for (i, s) in v.iter().enumerate() {
+                if !out[i].contains(s) {
+                    out[i].push(*s);
+                }
+            }
+        }
+        out
+    }
+
+    fn is_embedded_const(&self, n: NodeId) -> bool {
+        let node = self.graph.node(n);
+        matches!(&node.kind, NodeKind::Item(ItemKey::Const { .. })) && !node.generalized
+    }
+
+    /// Build a plan-level binding for one input position of `consumer`.
+    /// Multi-alternative positions become `Dynamic` bindings resolved at
+    /// runtime via the PythonRunner's variant-select message.
+    fn binding_of(&self, consumer: NodeId, pos: usize, alts: &[GraphSrc]) -> Result<Binding> {
+        if alts.len() == 1 {
+            return Ok(match alts[0] {
+                GraphSrc::Var(v) => Binding::Var(v),
+                GraphSrc::Node { node, slot } => {
+                    if self.is_embedded_const(node) {
+                        Binding::Const(node)
+                    } else {
+                        Binding::slot(node, slot)
+                    }
+                }
+            });
+        }
+        Ok(Binding::Dynamic { consumer, pos })
+    }
+
+    fn src_type(&self, s: &GraphSrc) -> Result<TensorType> {
+        match s {
+            GraphSrc::Var(v) => self
+                .var_types
+                .get(v)
+                .cloned()
+                .ok_or_else(|| TerraError::Trace(format!("unknown variable {v:?}"))),
+            GraphSrc::Node { node, slot } => Ok(self.graph.node(*node).out_types[*slot].clone()),
+        }
+    }
+
+    /// Emit steps for the region from `cur` (inclusive) to `stop` (exclusive).
+    fn emit_range(&mut self, mut cur: NodeId, stop: NodeId, out: &mut Vec<Step>) -> Result<()> {
+        while cur != stop && cur != END {
+            self.emit_node(cur, out)?;
+            let node = self.graph.node(cur);
+            match node.children.len() {
+                0 => break,
+                1 => cur = node.children[0],
+                _ => {
+                    self.flush(out)?;
+                    let join = self.ipdom[cur.0].ok_or_else(|| {
+                        TerraError::Trace(format!("branch node {cur:?} has no post-dominator"))
+                    })?;
+                    let mut cases = Vec::with_capacity(node.children.len());
+                    let children = node.children.clone();
+                    for c in children {
+                        let mut case_steps = Vec::new();
+                        if c != join {
+                            self.emit_range(c, join, &mut case_steps)?;
+                            self.flush(&mut case_steps)?;
+                        }
+                        cases.push(case_steps);
+                    }
+                    out.push(Step::Switch { node: cur, cases });
+                    cur = join;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_node(&mut self, n: NodeId, out: &mut Vec<Step>) -> Result<()> {
+        let node = self.graph.node(n);
+        let key = match &node.kind {
+            NodeKind::Item(k) => k.clone(),
+            _ => return Ok(()), // START/END sentinels
+        };
+        match key {
+            ItemKey::Op { ref def, .. } if matches!(def.kind, OpKind::ArtifactCall { .. }) => {
+                self.flush(out)?;
+                let alts = self.alternatives_of(n);
+                let params = alts
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, a)| self.binding_of(n, pos, a))
+                    .collect::<Result<Vec<_>>>()?;
+                let OpKind::ArtifactCall { ref name, .. } = def.kind else { unreachable!() };
+                out.push(Step::Artifact { node: n, name: name.clone(), params });
+            }
+            ItemKey::Op { .. } => {
+                // Guards: flush if this op reads a pending-assigned variable,
+                // or if a multi-alternative input could resolve inside the
+                // current chain (the compiled segment needs it as a param).
+                let alts = self.alternatives_of(n);
+                let mut need_flush = false;
+                for pos in &alts {
+                    if pos.len() > 1 {
+                        for a in pos {
+                            if let GraphSrc::Node { node: p, .. } = a {
+                                if self.chain_set.contains(p) {
+                                    need_flush = true;
+                                }
+                            }
+                        }
+                    }
+                    for a in pos {
+                        if let GraphSrc::Var(v) = a {
+                            if self.pending_assigned.contains(v) {
+                                need_flush = true;
+                            }
+                        }
+                    }
+                }
+                if need_flush {
+                    self.flush(out)?;
+                }
+                self.chain.push(n);
+                self.chain_set.insert(n);
+                if !self.fusion {
+                    self.flush(out)?;
+                }
+            }
+            ItemKey::Feed { .. } => {
+                // If fetches are pending (deferred behind the current chain),
+                // flush first: the PythonRunner produces this feed only after
+                // consuming those fetches (FasterRCNN's feed-after-fetch), so
+                // emitting the Feed step earlier would deadlock the runners.
+                if !self.post.is_empty() {
+                    self.flush(out)?;
+                }
+                out.push(Step::Feed { node: n });
+            }
+            ItemKey::Const { .. } => {
+                if node.generalized {
+                    // Python primitive feed (communication point of §4.2).
+                    if !self.post.is_empty() {
+                        self.flush(out)?;
+                    }
+                    out.push(Step::Feed { node: n });
+                }
+                // else: embedded into consuming segments at compile time.
+            }
+            ItemKey::Assign { var, .. } => {
+                let alts = self.alternatives_of(n);
+                let src = self.binding_of(n, 0, &alts[0])?;
+                self.post.push(Step::Assign { var, src });
+                self.pending_assigned.insert(var);
+            }
+            ItemKey::Fetch { .. } => {
+                let alts = self.alternatives_of(n);
+                let src = self.binding_of(n, 0, &alts[0])?;
+                self.post.push(Step::Fetch { node: n, src });
+            }
+        }
+        Ok(())
+    }
+
+    /// Close the current segment chain and emit Seg + deferred steps.
+    fn flush(&mut self, out: &mut Vec<Step>) -> Result<()> {
+        if !self.chain.is_empty() {
+            let nodes = std::mem::take(&mut self.chain);
+            self.chain_set.clear();
+            let node_set: HashSet<NodeId> = nodes.iter().copied().collect();
+            // Parameters: external inputs, deduplicated, deterministic order.
+            let mut params: Vec<Binding> = Vec::new();
+            let mut param_types: Vec<TensorType> = Vec::new();
+            let mut seen: BTreeSet<String> = BTreeSet::new();
+            for &n in &nodes {
+                for (pos, alts) in self.alternatives_of(n).into_iter().enumerate() {
+                    // Internal single-source positions need no param.
+                    if alts.len() == 1 {
+                        if let GraphSrc::Node { node: p, .. } = alts[0] {
+                            if node_set.contains(&p) || self.is_embedded_const(p) {
+                                continue;
+                            }
+                        }
+                    }
+                    let binding = self.binding_of(n, pos, &alts)?;
+                    let key = format!("{binding:?}");
+                    if seen.insert(key) {
+                        param_types.push(self.src_type(&alts[0])?);
+                        params.push(binding);
+                    }
+                }
+            }
+            let id = SegId(self.segments.len());
+            self.segments.push(SegmentSpec {
+                id,
+                nodes,
+                params,
+                param_types,
+                outputs: Vec::new(), // second pass
+            });
+            out.push(Step::Seg(id));
+        }
+        if !self.post.is_empty() {
+            out.append(&mut self.post);
+            self.pending_assigned.clear();
+        }
+        Ok(())
+    }
+}
+
+/// Second pass: compute each segment's exported outputs = produced slots that
+/// any plan-level binding (other segments' params, artifact params, fetches,
+/// assigns) references.
+fn fill_outputs(graph: &TraceGraph, spec: &mut PlanSpec) {
+    let mut referenced: HashSet<(NodeId, usize)> = HashSet::new();
+    let mut visit_binding = |b: &Binding, referenced: &mut HashSet<(NodeId, usize)>| match b {
+        Binding::Slot { node, slot } => {
+            referenced.insert((*node, *slot));
+        }
+        Binding::Dynamic { consumer, pos } => {
+            // Every observed alternative may be the one consumed.
+            for v in &graph.node(*consumer).variants {
+                if let GraphSrc::Node { node, slot } = v[*pos] {
+                    referenced.insert((node, slot));
+                }
+            }
+        }
+        _ => {}
+    };
+    fn visit_steps(
+        steps: &[Step],
+        referenced: &mut HashSet<(NodeId, usize)>,
+        visit: &mut impl FnMut(&Binding, &mut HashSet<(NodeId, usize)>),
+    ) {
+        for s in steps {
+            match s {
+                Step::Artifact { params, .. } => {
+                    for b in params {
+                        visit(b, referenced);
+                    }
+                }
+                Step::Fetch { src, .. } | Step::Assign { src, .. } => visit(src, referenced),
+                Step::Switch { cases, .. } => {
+                    for c in cases {
+                        visit_steps(c, referenced, visit);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    visit_steps(&spec.steps, &mut referenced, &mut visit_binding);
+    for seg in &spec.segments {
+        for b in &seg.params {
+            visit_binding(b, &mut referenced);
+        }
+    }
+    for seg in &mut spec.segments {
+        for &n in &seg.nodes {
+            for slot in 0..graph.node(n).out_types.len() {
+                if referenced.contains(&(n, slot)) {
+                    seg.outputs.push((n, slot));
+                }
+            }
+        }
+    }
+}
+
+/// Remove segments whose outputs are empty (dead compute) and their steps.
+fn prune_dead_segments(spec: &mut PlanSpec) {
+    let dead: HashSet<SegId> = spec
+        .segments
+        .iter()
+        .filter(|s| s.outputs.is_empty())
+        .map(|s| s.id)
+        .collect();
+    if dead.is_empty() {
+        return;
+    }
+    fn prune(steps: &mut Vec<Step>, dead: &HashSet<SegId>) {
+        steps.retain_mut(|s| match s {
+            Step::Seg(id) => !dead.contains(id),
+            Step::Switch { cases, .. } => {
+                for c in cases.iter_mut() {
+                    prune(c, dead);
+                }
+                true
+            }
+            _ => true,
+        });
+    }
+    prune(&mut spec.steps, &dead);
+    // Keep segment vector indices stable: replace dead specs with empty
+    // shells (never executed).
+    for seg in &mut spec.segments {
+        if dead.contains(&seg.id) {
+            seg.nodes.clear();
+            seg.params.clear();
+            seg.param_types.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpDef;
+    use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+
+    fn loc(line: u32) -> Location {
+        Location { file: "prog.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn op(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn fetch(src: u64, line: u32) -> TraceItem {
+        TraceItem::Fetch { src: ValueRef::Out(ValueId(src)), loc: loc(line) }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    fn gen(graph: &TraceGraph, fusion: bool) -> PlanSpec {
+        generate_plan(graph, &HashMap::new(), &GenOptions { fusion }).unwrap()
+    }
+
+    #[test]
+    fn linear_trace_single_fused_segment() {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![
+            feed(1, 1),
+            op(OpKind::Relu, 1, 2, 2),
+            op(OpKind::Neg, 2, 3, 3),
+            op(OpKind::Tanh, 3, 4, 4),
+            fetch(4, 5),
+        ]))
+        .unwrap();
+        let plan = gen(&g, true);
+        let (segs, feeds, fetches, _, switches) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(segs, 1, "all three ops fuse into one segment: {}", plan.summary());
+        assert_eq!(feeds, 1);
+        assert_eq!(fetches, 1);
+        assert_eq!(switches, 0);
+        let seg = plan.segments.iter().find(|s| !s.nodes.is_empty()).unwrap();
+        assert_eq!(seg.nodes.len(), 3);
+        assert_eq!(seg.params.len(), 1, "feed is the only param");
+        assert_eq!(seg.outputs.len(), 1, "only the fetched value is exported");
+    }
+
+    #[test]
+    fn fusion_off_gives_one_segment_per_op() {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![
+            feed(1, 1),
+            op(OpKind::Relu, 1, 2, 2),
+            op(OpKind::Neg, 2, 3, 3),
+            fetch(3, 5),
+        ]))
+        .unwrap();
+        let plan = gen(&g, false);
+        let (segs, _, _, _, _) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(segs, 2);
+    }
+
+    #[test]
+    fn branch_becomes_switch_with_join() {
+        let a = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 9), fetch(3, 10)]);
+        let b = tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3), op(OpKind::Neg, 2, 3, 9), fetch(3, 10)]);
+        let mut g = TraceGraph::new();
+        g.merge(&a).unwrap();
+        g.merge(&b).unwrap();
+        let plan = gen(&g, true);
+        let (_, _, _, _, switches) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(switches, 1, "{}", plan.summary());
+        // Find the switch and check it has 2 cases, each with one segment.
+        let sw = plan
+            .steps
+            .iter()
+            .find_map(|s| match s {
+                Step::Switch { cases, .. } => Some(cases),
+                _ => None,
+            })
+            .expect("switch step");
+        assert_eq!(sw.len(), 2);
+        // The join op (neg@9) consumes a value from either branch: its
+        // segment must have a dynamically-resolved (variant-select) param.
+        let multi = plan
+            .segments
+            .iter()
+            .any(|s| s.params.iter().any(|b| matches!(b, Binding::Dynamic { .. })));
+        assert!(multi, "join segment needs a variant-select param");
+    }
+
+    #[test]
+    fn trailing_branch_to_end_makes_empty_case() {
+        // Traces differ only in an optional tail op.
+        let short = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)]);
+        let long = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 3), fetch(3, 4)]);
+        let mut g = TraceGraph::new();
+        g.merge(&short).unwrap();
+        g.merge(&long).unwrap();
+        let plan = gen(&g, true);
+        let sw = plan
+            .steps
+            .iter()
+            .find_map(|s| match s {
+                Step::Switch { cases, .. } => Some(cases),
+                _ => None,
+            })
+            .expect("switch step");
+        assert_eq!(sw.len(), 2);
+        assert!(sw.iter().any(|c| c.is_empty()), "END case is empty");
+    }
+
+    #[test]
+    fn dead_compute_is_pruned() {
+        // An op whose value is never fetched, assigned or consumed downstream
+        // still appears in the TraceGraph but its segment gets pruned.
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)])).unwrap();
+        let plan = gen(&g, true);
+        let (segs, _, _, _, _) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(segs, 0);
+    }
+
+    #[test]
+    fn generalized_const_becomes_feed_step() {
+        let c = |v: f32| TraceItem::Const {
+            id: ValueId(1),
+            value: crate::tensor::HostTensor::scalar_f32(v),
+            loc: loc(9),
+        };
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![c(1.0), op(OpKind::Relu, 1, 2, 2), fetch(2, 3)])).unwrap();
+        g.merge(&tr(vec![c(2.0), op(OpKind::Relu, 1, 2, 2), fetch(2, 3)])).unwrap();
+        let plan = gen(&g, true);
+        let (_, feeds, _, _, _) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(feeds, 1, "generalized const feeds its value: {}", plan.summary());
+    }
+}

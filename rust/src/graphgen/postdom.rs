@@ -1,0 +1,138 @@
+//! Immediate post-dominators on the TraceGraph DAG.
+//!
+//! Every node lies on a path START -> ... -> END (guaranteed by the merge
+//! algorithm), so END post-dominates everything and immediate post-dominators
+//! exist for every node but END. This is the backbone of the case assignment
+//! algorithm: the join of a branch node is its immediate post-dominator.
+//!
+//! Cooper–Harvey–Kennedy intersection over the post-dominator tree, using
+//! topological positions as the ordering (a node's post-dominator always has
+//! a larger topo position).
+
+use crate::error::{Result, TerraError};
+use crate::tracegraph::{NodeId, TraceGraph, END};
+
+/// `ipdom[n]` = immediate post-dominator of node `n` (None for END).
+pub fn ipdoms(graph: &TraceGraph) -> Result<Vec<Option<NodeId>>> {
+    let order = graph.topo_order()?;
+    let mut pos = vec![usize::MAX; graph.len()];
+    for (i, n) in order.iter().enumerate() {
+        pos[n.0] = i;
+    }
+    let mut ipdom: Vec<Option<NodeId>> = vec![None; graph.len()];
+
+    let intersect = |ipdom: &Vec<Option<NodeId>>, mut a: NodeId, mut b: NodeId| -> Result<NodeId> {
+        loop {
+            if a == b {
+                return Ok(a);
+            }
+            if pos[a.0] < pos[b.0] {
+                a = ipdom[a.0].ok_or_else(|| {
+                    TerraError::Trace(format!("node {a:?} lacks a post-dominator"))
+                })?;
+            } else {
+                b = ipdom[b.0].ok_or_else(|| {
+                    TerraError::Trace(format!("node {b:?} lacks a post-dominator"))
+                })?;
+            }
+        }
+    };
+
+    // Reverse topological order: children are finalized before parents.
+    for &n in order.iter().rev() {
+        if n == END {
+            continue;
+        }
+        let children = &graph.node(n).children;
+        if children.is_empty() {
+            return Err(TerraError::Trace(format!(
+                "node {n:?} does not reach END; malformed TraceGraph"
+            )));
+        }
+        // The immediate post-dominator is the nearest common ancestor of all
+        // children in the (partial) post-dominator tree, where each child
+        // itself counts as its own candidate.
+        let mut cand = children[0];
+        for &c in &children[1..] {
+            cand = intersect(&ipdom, cand, c)?;
+        }
+        ipdom[n.0] = Some(cand);
+    }
+    Ok(ipdom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpDef, OpKind};
+    use crate::tensor::TensorType;
+    use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+    use crate::tracegraph::START;
+
+    fn loc(line: u32) -> Location {
+        Location { file: "p.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn op(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    #[test]
+    fn linear_chain_ipdom_is_next() {
+        let mut g = crate::tracegraph::TraceGraph::new();
+        g.merge(&tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)])).unwrap();
+        let ip = ipdoms(&g).unwrap();
+        // start -> feed -> relu -> end
+        let f = g.node(START).children[0];
+        let r = g.node(f).children[0];
+        assert_eq!(ip[START.0], Some(f));
+        assert_eq!(ip[f.0], Some(r));
+        assert_eq!(ip[r.0], Some(END));
+        assert_eq!(ip[END.0], None);
+    }
+
+    #[test]
+    fn diamond_join_is_ipdom() {
+        let a = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 9)]);
+        let b = tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3), op(OpKind::Neg, 2, 3, 9)]);
+        let mut g = crate::tracegraph::TraceGraph::new();
+        g.merge(&a).unwrap();
+        g.merge(&b).unwrap();
+        let ip = ipdoms(&g).unwrap();
+        let f = g.node(START).children[0];
+        assert_eq!(g.node(f).children.len(), 2);
+        let join = g.node(g.node(f).children[0]).children[0];
+        assert_eq!(ip[f.0], Some(join), "branch node's ipdom is the join");
+    }
+
+    #[test]
+    fn branch_to_end_has_end_ipdom() {
+        let short = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)]);
+        let long = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 3)]);
+        let mut g = crate::tracegraph::TraceGraph::new();
+        g.merge(&short).unwrap();
+        g.merge(&long).unwrap();
+        let ip = ipdoms(&g).unwrap();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        assert_eq!(ip[relu.0], Some(END));
+    }
+}

@@ -1,0 +1,46 @@
+//! # Terra: imperative-symbolic co-execution
+//!
+//! A full reproduction of *"Terra: Imperative-Symbolic Co-Execution of
+//! Imperative Deep Learning Programs"* (NeurIPS 2021) on a Rust + JAX/Pallas
+//! + XLA/PJRT stack. See `DESIGN.md` for the architecture and the
+//! paper-to-testbed substitution record.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * substrates: [`tensor`], [`ops`], [`runtime`], [`eager`], [`config`],
+//!   [`data`], [`nn`], [`tape`]
+//! * the paper's system: [`api`] (imperative program surface), [`trace`],
+//!   [`tracegraph`], [`graphgen`], [`symbolic`], [`runner`]
+//! * evaluation: [`baselines`], [`programs`], [`metrics`], [`bench`]
+
+pub mod api;
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod data;
+pub mod eager;
+pub mod error;
+pub mod graphgen;
+pub mod metrics;
+pub mod nn;
+pub mod ops;
+pub mod programs;
+pub mod runner;
+pub mod runtime;
+pub mod symbolic;
+pub mod tape;
+pub mod tensor;
+pub mod trace;
+pub mod tracegraph;
+
+pub use error::{ConvertFailure, Result, TerraError};
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::api::{HostState, Session, Tensor, Variable};
+    pub use crate::runner::Engine;
+    pub use crate::config::{ExecMode, RunConfig};
+    pub use crate::error::{Result, TerraError};
+    pub use crate::ops::OpKind;
+    pub use crate::tensor::{DType, HostTensor, Shape, TensorType};
+}

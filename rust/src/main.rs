@@ -1,0 +1,195 @@
+//! `terra` — the launcher (L3 coordinator entrypoint).
+//!
+//! ```text
+//! terra run --program resnet50 --mode terra [--steps 200] [--no-fusion]
+//!           [--config run.json] [--loss-every 1]
+//! terra coverage                 # Table 1
+//! terra breakdown --program X    # Figure 6 row for one program
+//! terra trace-dump --program X   # collected TraceGraph + generated plan
+//! terra list                     # available programs
+//! ```
+
+use terra::config::{ExecMode, RunConfig};
+use terra::error::{Result, TerraError};
+use terra::graphgen::{generate_plan, GenOptions};
+use terra::programs::{all_program_names, build_program, expected_autograph_failure};
+use terra::runner::Engine;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::load_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = flags.get("program") {
+        cfg.program = v.clone();
+    }
+    if let Some(v) = flags.get("mode") {
+        cfg.mode = ExecMode::parse(v)?;
+    }
+    if let Some(v) = flags.get("steps") {
+        cfg.steps = v.parse().map_err(|_| TerraError::Config("bad --steps".into()))?;
+    }
+    if let Some(v) = flags.get("warmup") {
+        cfg.warmup_steps = v.parse().map_err(|_| TerraError::Config("bad --warmup".into()))?;
+    }
+    if flags.contains_key("no-fusion") {
+        cfg.fusion = false;
+    }
+    if let Some(v) = flags.get("artifacts") {
+        cfg.artifacts_dir = v.clone();
+    }
+    if flags.contains_key("breakdown") {
+        cfg.breakdown = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from(flags)?;
+    let mut engine = Engine::new(cfg.mode, &cfg.artifacts_dir, cfg.fusion)?;
+    if let Some(v) = flags.get("loss-every") {
+        engine.loss_every = v.parse().map_err(|_| TerraError::Config("bad --loss-every".into()))?;
+    }
+    let mut prog = build_program(&cfg.program)?;
+    println!(
+        "running {} under {} (fusion={}) for {} steps ...",
+        cfg.program,
+        cfg.mode.name(),
+        cfg.fusion,
+        cfg.steps
+    );
+    let report = engine.run(prog.as_mut(), cfg.steps as u64, cfg.warmup_steps as u64)?;
+    println!("{}", report.summary());
+    if let Some((s, l)) = report.losses.last() {
+        println!("final loss (step {s}): {l:.5}");
+    }
+    if cfg.breakdown {
+        let b = report.breakdown_per_step;
+        println!(
+            "per-step breakdown: py exec {:.2}ms, py stall {:.2}ms, graph exec {:.2}ms, graph stall {:.2}ms",
+            b.py_exec_ms, b.py_stall_ms, b.graph_exec_ms, b.graph_stall_ms
+        );
+    }
+    Ok(())
+}
+
+fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from(flags)?;
+    let mut rows = Vec::new();
+    for name in all_program_names() {
+        let outcome = Engine::new(ExecMode::AutoGraph, &cfg.artifacts_dir, true)
+            .and_then(|mut e| build_program(name).and_then(|mut p| e.run(p.as_mut(), 12, 0)));
+        let cell = match outcome {
+            Ok(_) => "ok".to_string(),
+            Err(TerraError::Convert { category, .. }) => format!("FAIL: {category}"),
+            Err(e) => format!("error: {e}"),
+        };
+        let paper = match expected_autograph_failure(name) {
+            Some(c) => format!("FAIL: {c}"),
+            None => "ok".into(),
+        };
+        rows.push(vec![name.to_string(), cell, paper]);
+    }
+    terra::bench::print_table(
+        "Table 1 — AutoGraph coverage",
+        &["program", "measured", "paper"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_trace_dump(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from(flags)?;
+    let mut engine = Engine::new(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion)?;
+    let mut prog = build_program(&cfg.program)?;
+    let steps = cfg.steps.min(12) as u64;
+    engine.run(prog.as_mut(), steps, 0)?;
+    println!("{}", engine.trace_graph().dump());
+    let var_types: HashMap<_, _> = engine
+        .vars()
+        .ids()
+        .into_iter()
+        .map(|id| (id, engine.vars().ty(id).unwrap()))
+        .collect();
+    let plan = generate_plan(engine.trace_graph(), &var_types, &GenOptions { fusion: cfg.fusion })?;
+    println!("{}", plan.summary());
+    Ok(())
+}
+
+fn cmd_breakdown(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from(flags)?;
+    let mut engine = Engine::new(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion)?;
+    let mut prog = build_program(&cfg.program)?;
+    let report = engine.run(prog.as_mut(), cfg.steps as u64, cfg.warmup_steps as u64)?;
+    let b = report.breakdown_per_step;
+    println!("{}", report.summary());
+    println!("py exec     {:>8.3} ms/step", b.py_exec_ms);
+    println!("py stall    {:>8.3} ms/step", b.py_stall_ms);
+    println!("graph exec  {:>8.3} ms/step", b.graph_exec_ms);
+    println!("graph stall {:>8.3} ms/step", b.graph_stall_ms);
+    println!(
+        "transitions {} | fallbacks {} | traces {} | segments compiled {}",
+        report.stats.enter_coexec,
+        report.stats.fallbacks,
+        report.stats.traces_collected,
+        report.stats.segments_compiled
+    );
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "run" => cmd_run(&flags),
+        "coverage" => cmd_coverage(&flags),
+        "trace-dump" => cmd_trace_dump(&flags),
+        "breakdown" => cmd_breakdown(&flags),
+        "list" => {
+            for p in all_program_names() {
+                println!("{p}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion]\n  \
+                 coverage                reproduce Table 1\n  \
+                 breakdown --program P   Figure-6 row for one program\n  \
+                 trace-dump --program P  dump the TraceGraph + plan summary\n  \
+                 list                    list programs"
+            );
+            Ok(())
+        }
+        other => Err(TerraError::Config(format!("unknown command '{other}' (try help)"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

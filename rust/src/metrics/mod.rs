@@ -1,0 +1,204 @@
+//! Runner instrumentation: the Figure-6 breakdown and throughput statistics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Cumulative per-runner time accounting (paper Figure 6):
+/// * `py_exec`    — PythonRunner active time (user code + graph validation),
+/// * `py_stall`   — PythonRunner blocked waiting for an Output Fetching value,
+/// * `graph_exec` — GraphRunner executing segments / artifacts,
+/// * `graph_stall`— GraphRunner blocked on feeds / case selects / commit
+///   barriers / the lazy-evaluation gate.
+#[derive(Debug, Default)]
+pub struct Breakdown {
+    py_exec_ns: AtomicU64,
+    py_stall_ns: AtomicU64,
+    graph_exec_ns: AtomicU64,
+    graph_stall_ns: AtomicU64,
+    steps: AtomicU64,
+}
+
+/// A point-in-time copy of the breakdown, in milliseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BreakdownSnapshot {
+    pub py_exec_ms: f64,
+    pub py_stall_ms: f64,
+    pub graph_exec_ms: f64,
+    pub graph_stall_ms: f64,
+    pub steps: u64,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_py_exec(&self, d: Duration) {
+        self.py_exec_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_py_stall(&self, d: Duration) {
+        self.py_stall_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_graph_exec(&self, d: Duration) {
+        self.graph_exec_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_graph_stall(&self, d: Duration) {
+        self.graph_stall_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_step(&self) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> BreakdownSnapshot {
+        let ms = |v: &AtomicU64| v.load(Ordering::Relaxed) as f64 / 1e6;
+        BreakdownSnapshot {
+            py_exec_ms: ms(&self.py_exec_ns),
+            py_stall_ms: ms(&self.py_stall_ns),
+            graph_exec_ms: ms(&self.graph_exec_ns),
+            graph_stall_ms: ms(&self.graph_stall_ns),
+            steps: self.steps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl BreakdownSnapshot {
+    /// Per-step averages between two snapshots (Figure 6's bars).
+    pub fn per_step_since(&self, earlier: &BreakdownSnapshot) -> BreakdownSnapshot {
+        let n = (self.steps - earlier.steps).max(1) as f64;
+        BreakdownSnapshot {
+            py_exec_ms: (self.py_exec_ms - earlier.py_exec_ms) / n,
+            py_stall_ms: (self.py_stall_ms - earlier.py_stall_ms) / n,
+            graph_exec_ms: (self.graph_exec_ms - earlier.graph_exec_ms) / n,
+            graph_stall_ms: (self.graph_stall_ms - earlier.graph_stall_ms) / n,
+            steps: self.steps - earlier.steps,
+        }
+    }
+}
+
+/// Simple wall-clock throughput meter over a step window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Option<Instant>,
+    steps: u64,
+    elapsed: Duration,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: None, steps: 0, elapsed: Duration::ZERO }
+    }
+
+    /// Begin (or restart) the measurement window.
+    pub fn start_window(&mut self) {
+        self.start = Some(Instant::now());
+        self.steps = 0;
+        self.elapsed = Duration::ZERO;
+    }
+
+    pub fn record_step(&mut self) {
+        if let Some(s) = self.start {
+            self.steps += 1;
+            self.elapsed = s.elapsed();
+        }
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.steps as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.elapsed
+    }
+}
+
+/// Scope timer that adds to a breakdown bucket on drop.
+pub struct ScopeTimer<'a> {
+    start: Instant,
+    sink: &'a Breakdown,
+    bucket: Bucket,
+}
+
+#[derive(Clone, Copy)]
+pub enum Bucket {
+    PyExec,
+    PyStall,
+    GraphExec,
+    GraphStall,
+}
+
+impl<'a> ScopeTimer<'a> {
+    pub fn new(sink: &'a Breakdown, bucket: Bucket) -> Self {
+        ScopeTimer { start: Instant::now(), sink, bucket }
+    }
+}
+
+impl Drop for ScopeTimer<'_> {
+    fn drop(&mut self) {
+        let d = self.start.elapsed();
+        match self.bucket {
+            Bucket::PyExec => self.sink.add_py_exec(d),
+            Bucket::PyStall => self.sink.add_py_stall(d),
+            Bucket::GraphExec => self.sink.add_graph_exec(d),
+            Bucket::GraphStall => self.sink.add_graph_stall(d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let b = Breakdown::new();
+        b.add_py_exec(Duration::from_millis(10));
+        b.add_py_stall(Duration::from_millis(5));
+        b.add_step();
+        b.add_step();
+        let s = b.snapshot();
+        assert!((s.py_exec_ms - 10.0).abs() < 0.01);
+        assert!((s.py_stall_ms - 5.0).abs() < 0.01);
+        assert_eq!(s.steps, 2);
+    }
+
+    #[test]
+    fn per_step_delta() {
+        let b = Breakdown::new();
+        let early = b.snapshot();
+        b.add_graph_exec(Duration::from_millis(30));
+        b.add_step();
+        b.add_step();
+        b.add_step();
+        let late = b.snapshot();
+        let d = late.per_step_since(&early);
+        assert!((d.graph_exec_ms - 10.0).abs() < 0.01);
+        assert_eq!(d.steps, 3);
+    }
+
+    #[test]
+    fn scope_timer_records() {
+        let b = Breakdown::new();
+        {
+            let _t = ScopeTimer::new(&b, Bucket::GraphStall);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(b.snapshot().graph_stall_ms >= 1.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Multi-head self-attention, with an optional fused-Pallas-kernel core.
+//!
+//! The composite path builds attention out of primitive ops (batched matmul
+//! + softmax). When the AOT artifact store contains a fused attention kernel
+//! matching the layer's shapes (`attn_fwd_bh{BH}_s{S}_d{D}` with a paired
+//! vjp), the scaled-dot-product core runs as a single `ArtifactCall` — the L1
+//! Pallas kernel on the request path.
+
+use crate::api::{Session, Tensor, Variable};
+use crate::data::Rng;
+use crate::error::Result;
+use crate::nn::layers::Dense;
+use crate::nn::HasVars;
+
+pub struct MultiHeadAttention {
+    name: String,
+    pub wq: Dense,
+    pub wk: Dense,
+    pub wv: Dense,
+    pub wo: Dense,
+    heads: usize,
+    dim: usize,
+    /// Prefer the fused Pallas artifact when available.
+    pub use_kernel: bool,
+    /// Additive attention bias (relative-position logits etc.), [S, S].
+    pub rel_bias: Option<Variable>,
+}
+
+impl MultiHeadAttention {
+    pub fn new(
+        sess: &Session,
+        name: &str,
+        dim: usize,
+        heads: usize,
+        use_kernel: bool,
+        rel_bias_len: Option<usize>,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let wq = Dense::new(sess, &format!("{name}.q"), dim, dim, false, rng)?;
+        let wk = Dense::new(sess, &format!("{name}.k"), dim, dim, false, rng)?;
+        let wv = Dense::new(sess, &format!("{name}.v"), dim, dim, false, rng)?;
+        let wo = Dense::new(sess, &format!("{name}.o"), dim, dim, false, rng)?;
+        let rel_bias = match rel_bias_len {
+            Some(s) => Some(sess.variable(
+                &format!("{name}.rel_bias"),
+                crate::tensor::HostTensor::f32(vec![s, s], rng.normal_vec(s * s, 0.02))?,
+                true,
+            )?),
+            None => None,
+        };
+        Ok(MultiHeadAttention {
+            name: name.to_string(),
+            wq,
+            wk,
+            wv,
+            wo,
+            heads,
+            dim,
+            use_kernel,
+            rel_bias,
+        })
+    }
+
+    fn kernel_name(&self, bh: usize, s: usize, dh: usize) -> String {
+        format!("attn_fwd_bh{bh}_s{s}_d{dh}")
+    }
+
+    /// `x`: [B, S, D] -> [B, S, D] (causal = autoregressive mask).
+    pub fn forward(&self, x: &Tensor, causal: bool) -> Result<Tensor> {
+        let sess = x.session().clone();
+        let _s = sess.scope(&self.name);
+        let d = x.shape_dims().to_vec();
+        let (b, s) = (d[0], d[1]);
+        let dh = self.dim / self.heads;
+        let q = self.wq.forward(x)?;
+        let k = self.wk.forward(x)?;
+        let v = self.wv.forward(x)?;
+        // [B,S,D] -> [B*H, S, dh]
+        let split = |t: &Tensor, tag: &str| -> Result<Tensor> {
+            let _g = sess.scope(tag);
+            t.reshape(&[b, s, self.heads, dh])?
+                .transpose(&[0, 2, 1, 3])?
+                .reshape(&[b * self.heads, s, dh])
+        };
+        let q3 = split(&q, "sq")?;
+        let k3 = split(&k, "sk")?;
+        let v3 = split(&v, "sv")?;
+
+        let kernel = self.kernel_name(b * self.heads, s, dh);
+        let ctx = if self.use_kernel
+            && !causal
+            && self.rel_bias.is_none()
+            && sess.artifacts().contains(&kernel)
+        {
+            // Fused scaled-dot-product attention (L1 Pallas kernel).
+            let _g = sess.scope("fused");
+            sess.artifact_call(&kernel, &[&q3, &k3, &v3])?.remove(0)
+        } else {
+            let _g = sess.scope("sdpa");
+            let kt = k3.transpose(&[0, 2, 1])?;
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut scores = q3.matmul(&kt)?.mul_scalar(scale)?; // [BH, S, S]
+            if let Some(rb) = &self.rel_bias {
+                scores = scores.add(&rb.read())?;
+            }
+            if causal {
+                // mask[i,j] = -1e9 for j > i, built from constants.
+                let mut m = vec![0f32; s * s];
+                for i in 0..s {
+                    for j in (i + 1)..s {
+                        m[i * s + j] = -1e9;
+                    }
+                }
+                let mask = sess.constant(crate::tensor::HostTensor::f32(vec![s, s], m)?)?;
+                scores = scores.add(&mask)?;
+            }
+            let attn = scores.softmax(2)?;
+            attn.matmul(&v3)?
+        };
+        // [B*H, S, dh] -> [B, S, D]
+        let merged = ctx
+            .reshape(&[b, self.heads, s, dh])?
+            .transpose(&[0, 2, 1, 3])?
+            .reshape(&[b, s, self.dim])?;
+        self.wo.forward(&merged)
+    }
+}
+
+impl HasVars for MultiHeadAttention {
+    fn vars(&self) -> Vec<Variable> {
+        let mut v = Vec::new();
+        v.extend(self.wq.vars());
+        v.extend(self.wk.vars());
+        v.extend(self.wv.vars());
+        v.extend(self.wo.vars());
+        if let Some(rb) = &self.rel_bias {
+            v.push(rb.clone());
+        }
+        v
+    }
+}

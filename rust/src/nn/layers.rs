@@ -1,0 +1,264 @@
+//! Core layers: dense, conv (im2col), pooling, layer norm, embedding,
+//! dropout.
+
+use crate::api::{Session, Tensor, Variable};
+use crate::data::Rng;
+use crate::error::{Result, TerraError};
+use crate::nn::HasVars;
+use crate::tensor::HostTensor;
+
+fn he_init(rng: &mut Rng, fan_in: usize, n: usize) -> Vec<f32> {
+    let std = (2.0 / fan_in as f32).sqrt();
+    rng.normal_vec(n, std)
+}
+
+/// Fully-connected layer with optional bias.
+pub struct Dense {
+    name: String,
+    pub w: Variable,
+    pub b: Option<Variable>,
+}
+
+impl Dense {
+    pub fn new(sess: &Session, name: &str, d_in: usize, d_out: usize, bias: bool, rng: &mut Rng) -> Result<Self> {
+        let w = sess.variable(
+            &format!("{name}.w"),
+            HostTensor::f32(vec![d_in, d_out], he_init(rng, d_in, d_in * d_out))?,
+            true,
+        )?;
+        let b = if bias {
+            Some(sess.variable(
+                &format!("{name}.b"),
+                HostTensor::f32(vec![d_out], vec![0.0; d_out])?,
+                true,
+            )?)
+        } else {
+            None
+        };
+        Ok(Dense { name: name.to_string(), w, b })
+    }
+
+    /// `x`: [..., d_in] -> [..., d_out]
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let sess = x.session().clone();
+        let _s = sess.scope(&self.name);
+        let y = x.matmul(&self.w.read())?;
+        match &self.b {
+            Some(b) => y.add(&b.read()),
+            None => Ok(y),
+        }
+    }
+}
+
+impl HasVars for Dense {
+    fn vars(&self) -> Vec<Variable> {
+        let mut v = vec![self.w.clone()];
+        if let Some(b) = &self.b {
+            v.push(b.clone());
+        }
+        v
+    }
+}
+
+/// Convolution padding mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// 2-D convolution (stride 1) via im2col: k² shifted slices concatenated on
+/// the channel axis, then a single matmul. Downsampling is done with pooling
+/// (see `max_pool2`), matching the TPU-friendly layout rationale in
+/// DESIGN.md §Hardware-Adaptation.
+pub struct Conv2d {
+    name: String,
+    pub w: Variable,
+    pub b: Variable,
+    k: usize,
+    c_in: usize,
+    c_out: usize,
+    padding: Padding,
+}
+
+impl Conv2d {
+    pub fn new(
+        sess: &Session,
+        name: &str,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        padding: Padding,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let fan_in = c_in * k * k;
+        let w = sess.variable(
+            &format!("{name}.w"),
+            HostTensor::f32(vec![fan_in, c_out], he_init(rng, fan_in, fan_in * c_out))?,
+            true,
+        )?;
+        let b = sess.variable(
+            &format!("{name}.b"),
+            HostTensor::f32(vec![c_out], vec![0.0; c_out])?,
+            true,
+        )?;
+        Ok(Conv2d { name: name.to_string(), w, b, k, c_in, c_out, padding })
+    }
+
+    /// `x`: [B, C_in, H, W] -> [B, C_out, H', W']
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let sess = x.session().clone();
+        let _s = sess.scope(&self.name);
+        let dims = x.shape_dims().to_vec();
+        if dims.len() != 4 || dims[1] != self.c_in {
+            return Err(TerraError::shape(format!(
+                "conv {} expects [B,{},H,W], got {:?}",
+                self.name, self.c_in, dims
+            )));
+        }
+        let (bsz, _h, _w) = (dims[0], dims[2], dims[3]);
+        let x = match self.padding {
+            Padding::Same => {
+                let p = self.k / 2;
+                x.pad(&[0, 0, p, p], &[0, 0, p, p])?
+            }
+            Padding::Valid => x.clone(),
+        };
+        let (ph, pw) = {
+            let d = x.shape_dims();
+            (d[2], d[3])
+        };
+        let (oh, ow) = (ph - self.k + 1, pw - self.k + 1);
+        // im2col: k*k shifted windows, concatenated on channels.
+        let mut patches = Vec::with_capacity(self.k * self.k);
+        for di in 0..self.k {
+            for dj in 0..self.k {
+                let _w = sess.scope(&format!("p{di}{dj}"));
+                patches.push(x.slice(&[0, 0, di, dj], &[bsz, self.c_in, oh, ow])?);
+            }
+        }
+        let refs: Vec<&Tensor> = patches.iter().collect();
+        let cols = sess.concat(&refs, 1)?; // [B, k*k*C, OH, OW]
+        let cols = cols.transpose(&[0, 2, 3, 1])?; // [B, OH, OW, k*k*C]
+        let flat = cols.reshape(&[bsz * oh * ow, self.k * self.k * self.c_in])?;
+        let y = flat.matmul(&self.w.read())?.add(&self.b.read())?;
+        let y = y.reshape(&[bsz, oh, ow, self.c_out])?;
+        y.transpose(&[0, 3, 1, 2])
+    }
+}
+
+impl HasVars for Conv2d {
+    fn vars(&self) -> Vec<Variable> {
+        vec![self.w.clone(), self.b.clone()]
+    }
+}
+
+/// 2x2 max pooling (H and W must be even).
+#[track_caller]
+pub fn max_pool2(x: &Tensor) -> Result<Tensor> {
+    let d = x.shape_dims().to_vec();
+    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let r = x.reshape(&[b, c, h / 2, 2, w / 2, 2])?;
+    r.reduce_max(&[3, 5], false)
+}
+
+/// 2x2 average pooling.
+#[track_caller]
+pub fn avg_pool2(x: &Tensor) -> Result<Tensor> {
+    let d = x.shape_dims().to_vec();
+    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let r = x.reshape(&[b, c, h / 2, 2, w / 2, 2])?;
+    r.reduce_mean(&[3, 5], false)
+}
+
+/// Global average pooling: [B, C, H, W] -> [B, C].
+#[track_caller]
+pub fn global_avg_pool(x: &Tensor) -> Result<Tensor> {
+    x.reduce_mean(&[2, 3], false)
+}
+
+/// Inverted dropout with probability tensor `p` (scalar): the mask is drawn
+/// from the session RNG each execution; `p` may come from mutable host state
+/// (the DropBlock/SDPoint programs exercise exactly that).
+#[track_caller]
+pub fn dropout(x: &Tensor, p: &Tensor) -> Result<Tensor> {
+    let sess = x.session().clone();
+    let u = sess.rng_uniform(x.shape_dims())?;
+    let keep = u.greater_equal(&p.broadcast_to(x.shape_dims())?)?;
+    let keep = keep.convert(crate::tensor::DType::F32)?;
+    let scale = p.neg()?.add_scalar(1.0)?.maximum(&sess.scalar(1e-3)?)?;
+    x.mul(&keep)?.div(&scale.broadcast_to(x.shape_dims())?)
+}
+
+/// Layer normalization over the last axis.
+pub struct LayerNorm {
+    name: String,
+    pub gamma: Variable,
+    pub beta: Variable,
+    dim: usize,
+}
+
+impl LayerNorm {
+    pub fn new(sess: &Session, name: &str, dim: usize) -> Result<Self> {
+        let gamma = sess.variable(
+            &format!("{name}.gamma"),
+            HostTensor::f32(vec![dim], vec![1.0; dim])?,
+            true,
+        )?;
+        let beta = sess.variable(
+            &format!("{name}.beta"),
+            HostTensor::f32(vec![dim], vec![0.0; dim])?,
+            true,
+        )?;
+        Ok(LayerNorm { name: name.to_string(), gamma, beta, dim })
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let sess = x.session().clone();
+        let _s = sess.scope(&self.name);
+        let axis = x.shape_dims().len() - 1;
+        debug_assert_eq!(x.shape_dims()[axis], self.dim);
+        let mean = x.reduce_mean(&[axis], true)?;
+        let centered = x.sub(&mean)?;
+        let var = centered.mul(&centered)?.reduce_mean(&[axis], true)?;
+        let inv = var.add_scalar(1e-5)?.rsqrt()?;
+        let norm = centered.mul(&inv)?;
+        norm.mul(&self.gamma.read())?.add(&self.beta.read())
+    }
+}
+
+impl HasVars for LayerNorm {
+    fn vars(&self) -> Vec<Variable> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+}
+
+/// Token embedding lookup.
+pub struct Embedding {
+    name: String,
+    pub table: Variable,
+}
+
+impl Embedding {
+    pub fn new(sess: &Session, name: &str, vocab: usize, dim: usize, rng: &mut Rng) -> Result<Self> {
+        let table = sess.variable(
+            &format!("{name}.table"),
+            HostTensor::f32(vec![vocab, dim], rng.normal_vec(vocab * dim, 0.02))?,
+            true,
+        )?;
+        Ok(Embedding { name: name.to_string(), table })
+    }
+
+    /// `ids`: i32 [B, S] -> [B, S, D]
+    pub fn forward(&self, ids: &Tensor) -> Result<Tensor> {
+        let sess = ids.session().clone();
+        let _s = sess.scope(&self.name);
+        self.table.read().take(ids, 0)
+    }
+}
+
+impl HasVars for Embedding {
+    fn vars(&self) -> Vec<Variable> {
+        vec![self.table.clone()]
+    }
+}

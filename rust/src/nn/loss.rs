@@ -1,0 +1,39 @@
+//! Loss functions.
+
+use crate::api::Tensor;
+use crate::error::Result;
+
+/// Mean softmax cross-entropy: `logits` [B, C], `labels` i32 [B].
+#[track_caller]
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &Tensor) -> Result<Tensor> {
+    let sess = logits.session().clone();
+    let _s = sess.scope("xent");
+    let classes = *logits.shape_dims().last().unwrap();
+    let lsm = logits.log_softmax(1)?;
+    let onehot = labels.one_hot(classes)?;
+    lsm.mul(&onehot)?.reduce_sum(&[0, 1], false)?.neg()?.div_scalar(labels.shape_dims()[0] as f32)
+}
+
+/// Mean squared error.
+#[track_caller]
+pub fn mse(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let sess = a.session().clone();
+    let _s = sess.scope("mse");
+    let d = a.sub(b)?;
+    let axes: Vec<usize> = (0..a.shape_dims().len()).collect();
+    d.mul(&d)?.reduce_mean(&axes, false)
+}
+
+/// Mean binary cross-entropy with logits; `target` is 0/1 f32 of the same
+/// shape. Numerically stable form: max(z,0) - z*t + log(1 + exp(-|z|)).
+#[track_caller]
+pub fn bce_with_logits(logits: &Tensor, target: &Tensor) -> Result<Tensor> {
+    let sess = logits.session().clone();
+    let _s = sess.scope("bce");
+    let zeros = sess.scalar(0.0)?;
+    let relu_z = logits.maximum(&zeros.broadcast_to(logits.shape_dims())?)?;
+    let zt = logits.mul(target)?;
+    let softplus = logits.abs()?.neg()?.exp()?.add_scalar(1.0)?.log()?;
+    let axes: Vec<usize> = (0..logits.shape_dims().len()).collect();
+    relu_z.sub(&zt)?.add(&softplus)?.reduce_mean(&axes, false)
+}

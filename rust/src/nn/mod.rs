@@ -1,0 +1,28 @@
+//! Neural-network layer library built on the session API (Keras analogue).
+//!
+//! Every layer wraps its ops in a session scope named after the layer
+//! instance, so ops issued from shared library lines get distinct program
+//! locations in the TraceGraph (paper Appendix A / TF name scopes).
+
+mod attention;
+mod layers;
+mod loss;
+mod optim;
+
+pub use attention::MultiHeadAttention;
+pub use layers::{Conv2d, Dense, Embedding, LayerNorm, Padding};
+pub use layers::{avg_pool2, dropout, global_avg_pool, max_pool2};
+pub use loss::{bce_with_logits, mse, softmax_cross_entropy};
+pub use optim::{Adam, Optimizer, Sgd};
+
+use crate::api::Variable;
+
+/// Anything owning trainable variables.
+pub trait HasVars {
+    fn vars(&self) -> Vec<Variable>;
+}
+
+/// Collect variables from many layers.
+pub fn collect_vars(layers: &[&dyn HasVars]) -> Vec<Variable> {
+    layers.iter().flat_map(|l| l.vars()).collect()
+}

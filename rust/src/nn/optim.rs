@@ -1,0 +1,151 @@
+//! Optimizers: parameter updates emitted as ordinary session ops, so they are
+//! traced, fused and staged like the rest of the training step.
+
+use crate::api::{Session, Tensor, Variable};
+use crate::error::Result;
+use crate::tensor::HostTensor;
+
+pub trait Optimizer {
+    /// Variables must be registered at setup time (slot variables).
+    fn register(&mut self, sess: &Session, vars: &[Variable]) -> Result<()>;
+    /// Apply one update given `grads[i] = dL/d vars[i]`.
+    fn apply(&mut self, sess: &Session, vars: &[Variable], grads: &[Tensor]) -> Result<()>;
+}
+
+/// Plain SGD: `w <- w - lr * g`.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn register(&mut self, _sess: &Session, _vars: &[Variable]) -> Result<()> {
+        Ok(())
+    }
+
+    fn apply(&mut self, sess: &Session, vars: &[Variable], grads: &[Tensor]) -> Result<()> {
+        for (i, (v, g)) in vars.iter().zip(grads.iter()).enumerate() {
+            let _s = sess.scope(&format!("sgd{i}"));
+            let new = v.read().sub(&g.mul_scalar(self.lr)?)?;
+            v.assign(&new)?;
+        }
+        Ok(())
+    }
+}
+
+/// Adam with slot variables for first/second moments and a step counter.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    slots: Vec<(Variable, Variable)>, // (m, v) per registered variable
+    t: Option<Variable>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, slots: Vec::new(), t: None }
+    }
+}
+
+impl Optimizer for Adam {
+    fn register(&mut self, sess: &Session, vars: &[Variable]) -> Result<()> {
+        for (i, v) in vars.iter().enumerate() {
+            let zeros = HostTensor::zeros(v.ty());
+            let m = sess.variable(&format!("adam.m{i}"), zeros.clone(), false)?;
+            let s = sess.variable(&format!("adam.v{i}"), zeros, false)?;
+            self.slots.push((m, s));
+        }
+        self.t = Some(sess.variable("adam.t", HostTensor::scalar_f32(0.0), false)?);
+        Ok(())
+    }
+
+    fn apply(&mut self, sess: &Session, vars: &[Variable], grads: &[Tensor]) -> Result<()> {
+        debug_assert_eq!(vars.len(), self.slots.len());
+        let t = self.t.as_ref().expect("Adam::register not called");
+        let _root = sess.scope("adam");
+        let t_new = t.read().add_scalar(1.0)?;
+        t.assign(&t_new)?;
+        // Bias corrections: 1 - beta^t (scalars, computed on-graph).
+        let b1t = sess.scalar(self.beta1)?.pow(&t_new)?;
+        let b2t = sess.scalar(self.beta2)?.pow(&t_new)?;
+        let c1 = b1t.neg()?.add_scalar(1.0)?;
+        let c2 = b2t.neg()?.add_scalar(1.0)?;
+        for (i, (v, g)) in vars.iter().zip(grads.iter()).enumerate() {
+            let _s = sess.scope(&format!("p{i}"));
+            let (m, s) = &self.slots[i];
+            let m_new = m.read().mul_scalar(self.beta1)?.add(&g.mul_scalar(1.0 - self.beta1)?)?;
+            let s_new = s
+                .read()
+                .mul_scalar(self.beta2)?
+                .add(&g.mul(g)?.mul_scalar(1.0 - self.beta2)?)?;
+            m.assign(&m_new)?;
+            s.assign(&s_new)?;
+            let m_hat = m_new.div(&c1.broadcast_to(m_new.shape_dims())?)?;
+            let s_hat = s_new.div(&c2.broadcast_to(s_new.shape_dims())?)?;
+            let update = m_hat.div(&s_hat.sqrt()?.add_scalar(self.eps)?)?.mul_scalar(self.lr)?;
+            v.assign(&v.read().sub(&update)?)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Backend, EagerBackend, VarStore};
+    use crate::eager::EagerExecutor;
+    use crate::runtime::{ArtifactStore, Client};
+    use crate::tape::Tape;
+    use std::sync::Arc;
+
+    fn test_session() -> Session {
+        let dir = std::env::temp_dir().join(format!("terra_optim_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let client = Client::global().clone();
+        let vars = Arc::new(VarStore::new(client.clone()));
+        let exec = Arc::new(EagerExecutor::new(client, store.clone()));
+        let backend: Box<dyn Backend> = Box::new(EagerBackend::new(exec, vars.clone()));
+        Session::new(backend, store, vars)
+    }
+
+    /// Both optimizers must descend on a quadratic.
+    fn descend(opt: &mut dyn Optimizer, steps: u64) -> f32 {
+        let sess = test_session();
+        let w = sess.variable("w", HostTensor::f32(vec![2], vec![3.0, -2.0]).unwrap(), true).unwrap();
+        opt.register(&sess, &[w.clone()]).unwrap();
+        let mut last = f32::MAX;
+        for step in 0..steps {
+            sess.begin_step(step).unwrap();
+            let tape = Tape::start(&sess).unwrap();
+            let loss = w.read().mul(&w.read()).unwrap().reduce_sum(&[0], false).unwrap();
+            let grads = tape.gradient(&loss, &[&w]).unwrap();
+            opt.apply(&sess, &[w.clone()], &grads).unwrap();
+            last = loss.scalar_f32().unwrap();
+            sess.end_step().unwrap();
+        }
+        last
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let mut opt = Sgd::new(0.1);
+        let final_loss = descend(&mut opt, 30);
+        assert!(final_loss < 0.01, "SGD failed to descend: {final_loss}");
+    }
+
+    #[test]
+    fn adam_descends() {
+        let mut opt = Adam::new(0.2);
+        let final_loss = descend(&mut opt, 60);
+        assert!(final_loss < 0.05, "Adam failed to descend: {final_loss}");
+    }
+}

@@ -1,0 +1,378 @@
+//! Static shape/dtype inference for every `OpKind`.
+//!
+//! Inference runs in *every* execution mode — eager, tracing, skeleton — so a
+//! skeleton (empty) tensor always knows its type without any device work,
+//! which is what lets the PythonRunner run ahead without materializing.
+
+use crate::error::{Result, TerraError};
+use crate::ops::OpKind;
+use crate::tensor::{DType, Shape, TensorType};
+
+fn expect_arity(kind: &OpKind, ins: &[TensorType]) -> Result<()> {
+    if let Some(n) = kind.arity() {
+        if ins.len() != n {
+            return Err(TerraError::shape(format!(
+                "{kind} expects {n} inputs, got {}",
+                ins.len()
+            )));
+        }
+    } else if ins.is_empty() && !matches!(kind, OpKind::ArtifactCall { .. }) {
+        return Err(TerraError::shape(format!("{kind} expects at least 1 input")));
+    }
+    Ok(())
+}
+
+fn same_dtype(kind: &OpKind, a: &TensorType, b: &TensorType) -> Result<DType> {
+    if a.dtype != b.dtype {
+        return Err(TerraError::DType(format!(
+            "{kind}: dtype mismatch {} vs {}",
+            a.dtype, b.dtype
+        )));
+    }
+    Ok(a.dtype)
+}
+
+fn require_f32(kind: &OpKind, t: &TensorType) -> Result<()> {
+    if t.dtype != DType::F32 {
+        return Err(TerraError::DType(format!("{kind} requires f32, got {}", t.dtype)));
+    }
+    Ok(())
+}
+
+/// numpy matmul shape rule for rank >= 1 operands with broadcastable batch dims.
+fn matmul_shape(a: &Shape, b: &Shape) -> Result<Shape> {
+    if a.rank() < 2 || b.rank() < 2 {
+        return Err(TerraError::shape(format!(
+            "matmul requires rank >= 2 operands, got {a} x {b}"
+        )));
+    }
+    let (m, ka) = (a.dims()[a.rank() - 2], a.dims()[a.rank() - 1]);
+    let (kb, n) = (b.dims()[b.rank() - 2], b.dims()[b.rank() - 1]);
+    if ka != kb {
+        return Err(TerraError::shape(format!(
+            "matmul inner dims mismatch: {a} x {b}"
+        )));
+    }
+    let ab = Shape::of(&a.dims()[..a.rank() - 2]);
+    let bb = Shape::of(&b.dims()[..b.rank() - 2]);
+    let batch = ab.broadcast_with(&bb)?;
+    let mut out = batch.0;
+    out.push(m);
+    out.push(n);
+    Ok(Shape(out))
+}
+
+/// Infer the output types of `kind` applied to inputs of types `ins`.
+pub fn infer_out_types(kind: &OpKind, ins: &[TensorType]) -> Result<Vec<TensorType>> {
+    expect_arity(kind, ins)?;
+    let one = |t: TensorType| Ok(vec![t]);
+    match kind {
+        // ---- elementwise binary ----
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Maximum | OpKind::Minimum => {
+            let dt = same_dtype(kind, &ins[0], &ins[1])?;
+            let sh = ins[0].shape.broadcast_with(&ins[1].shape)?;
+            one(TensorType::new(dt, sh))
+        }
+        OpKind::Pow => {
+            require_f32(kind, &ins[0])?;
+            require_f32(kind, &ins[1])?;
+            let sh = ins[0].shape.broadcast_with(&ins[1].shape)?;
+            one(TensorType::new(DType::F32, sh))
+        }
+        OpKind::Greater
+        | OpKind::GreaterEqual
+        | OpKind::Less
+        | OpKind::LessEqual
+        | OpKind::Equal
+        | OpKind::NotEqual => {
+            same_dtype(kind, &ins[0], &ins[1])?;
+            let sh = ins[0].shape.broadcast_with(&ins[1].shape)?;
+            one(TensorType::new(DType::I32, sh))
+        }
+        // ---- elementwise unary ----
+        OpKind::Neg | OpKind::Abs | OpKind::Sign => one(ins[0].clone()),
+        OpKind::Exp
+        | OpKind::Log
+        | OpKind::Sqrt
+        | OpKind::Rsqrt
+        | OpKind::Tanh
+        | OpKind::Sigmoid
+        | OpKind::Relu => {
+            require_f32(kind, &ins[0])?;
+            one(ins[0].clone())
+        }
+        OpKind::Select => {
+            if ins[0].dtype != DType::I32 {
+                return Err(TerraError::DType("select condition must be i32".into()));
+            }
+            let dt = same_dtype(kind, &ins[1], &ins[2])?;
+            let sh = ins[0]
+                .shape
+                .broadcast_with(&ins[1].shape)?
+                .broadcast_with(&ins[2].shape)?;
+            one(TensorType::new(dt, sh))
+        }
+        OpKind::MatMul => {
+            require_f32(kind, &ins[0])?;
+            require_f32(kind, &ins[1])?;
+            one(TensorType::new(DType::F32, matmul_shape(&ins[0].shape, &ins[1].shape)?))
+        }
+        OpKind::Transpose { perm } => {
+            let sh = &ins[0].shape;
+            if perm.len() != sh.rank() {
+                return Err(TerraError::shape(format!(
+                    "transpose perm {perm:?} does not match rank {}",
+                    sh.rank()
+                )));
+            }
+            let mut seen = vec![false; perm.len()];
+            for &p in perm {
+                if p >= perm.len() || seen[p] {
+                    return Err(TerraError::shape(format!("invalid permutation {perm:?}")));
+                }
+                seen[p] = true;
+            }
+            let dims: Vec<usize> = perm.iter().map(|&p| sh.dims()[p]).collect();
+            one(TensorType::new(ins[0].dtype, dims))
+        }
+        OpKind::Reshape { shape } => {
+            let target = Shape::of(shape);
+            if target.num_elements() != ins[0].shape.num_elements() {
+                return Err(TerraError::shape(format!(
+                    "reshape {} -> {target}: element count mismatch",
+                    ins[0].shape
+                )));
+            }
+            one(TensorType::new(ins[0].dtype, target))
+        }
+        OpKind::Broadcast { shape } => {
+            let target = Shape::of(shape);
+            let joined = ins[0].shape.broadcast_with(&target)?;
+            if joined != target {
+                return Err(TerraError::shape(format!(
+                    "cannot broadcast {} to {target}",
+                    ins[0].shape
+                )));
+            }
+            one(TensorType::new(ins[0].dtype, target))
+        }
+        OpKind::Concat { axis } => {
+            let first = &ins[0];
+            if *axis >= first.shape.rank() {
+                return Err(TerraError::shape(format!(
+                    "concat axis {axis} out of range for rank {}",
+                    first.shape.rank()
+                )));
+            }
+            let mut dim = 0usize;
+            for t in ins {
+                if t.dtype != first.dtype || t.shape.rank() != first.shape.rank() {
+                    return Err(TerraError::shape("concat: inputs must agree"));
+                }
+                for (i, (&a, &b)) in t.shape.dims().iter().zip(first.shape.dims()).enumerate() {
+                    if i != *axis && a != b {
+                        return Err(TerraError::shape(format!(
+                            "concat: dim {i} mismatch {a} vs {b}"
+                        )));
+                    }
+                }
+                dim += t.shape.dims()[*axis];
+            }
+            let mut dims = first.shape.dims().to_vec();
+            dims[*axis] = dim;
+            one(TensorType::new(first.dtype, dims))
+        }
+        OpKind::Slice { starts, sizes } => {
+            let sh = &ins[0].shape;
+            if starts.len() != sh.rank() || sizes.len() != sh.rank() {
+                return Err(TerraError::shape("slice: starts/sizes rank mismatch"));
+            }
+            for i in 0..sh.rank() {
+                if starts[i] + sizes[i] > sh.dims()[i] {
+                    return Err(TerraError::shape(format!(
+                        "slice out of bounds on axis {i}: {}+{} > {}",
+                        starts[i], sizes[i], sh.dims()[i]
+                    )));
+                }
+            }
+            one(TensorType::new(ins[0].dtype, sizes.clone()))
+        }
+        OpKind::Pad { low, high } => {
+            let sh = &ins[0].shape;
+            if low.len() != sh.rank() || high.len() != sh.rank() {
+                return Err(TerraError::shape("pad: low/high rank mismatch"));
+            }
+            let dims: Vec<usize> = sh
+                .dims()
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| d + low[i] + high[i])
+                .collect();
+            one(TensorType::new(ins[0].dtype, dims))
+        }
+        OpKind::ReduceSum { axes, keep_dims } | OpKind::ReduceMax { axes, keep_dims } => {
+            one(TensorType::new(ins[0].dtype, ins[0].shape.reduce(axes, *keep_dims)?))
+        }
+        OpKind::ReduceMean { axes, keep_dims } => {
+            require_f32(kind, &ins[0])?;
+            one(TensorType::new(DType::F32, ins[0].shape.reduce(axes, *keep_dims)?))
+        }
+        OpKind::Softmax { axis } | OpKind::LogSoftmax { axis } => {
+            require_f32(kind, &ins[0])?;
+            if *axis >= ins[0].shape.rank() {
+                return Err(TerraError::shape(format!(
+                    "softmax axis {axis} out of range"
+                )));
+            }
+            one(ins[0].clone())
+        }
+        OpKind::Take { axis } => {
+            let (data, idx) = (&ins[0], &ins[1]);
+            if idx.dtype != DType::I32 {
+                return Err(TerraError::DType("take indices must be i32".into()));
+            }
+            if *axis >= data.shape.rank() {
+                return Err(TerraError::shape(format!("take axis {axis} out of range")));
+            }
+            let mut dims: Vec<usize> = data.shape.dims()[..*axis].to_vec();
+            dims.extend_from_slice(idx.shape.dims());
+            dims.extend_from_slice(&data.shape.dims()[*axis + 1..]);
+            one(TensorType::new(data.dtype, dims))
+        }
+        OpKind::OneHot { depth } => {
+            if ins[0].dtype != DType::I32 {
+                return Err(TerraError::DType("one_hot indices must be i32".into()));
+            }
+            let mut dims = ins[0].shape.dims().to_vec();
+            dims.push(*depth);
+            one(TensorType::new(DType::F32, dims))
+        }
+        OpKind::RngUniform { shape } | OpKind::RngNormal { shape } => {
+            one(TensorType::new(DType::F32, Shape::of(shape)))
+        }
+        OpKind::Convert { dtype } => one(TensorType::new(*dtype, ins[0].shape.clone())),
+        OpKind::ArtifactCall { out_types, .. } => Ok(out_types.clone()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(dims: &[usize]) -> TensorType {
+        TensorType::f32(dims)
+    }
+
+    fn infer1(kind: OpKind, ins: &[TensorType]) -> TensorType {
+        infer_out_types(&kind, ins).unwrap().remove(0)
+    }
+
+    #[test]
+    fn binary_broadcast() {
+        assert_eq!(infer1(OpKind::Add, &[f(&[2, 3]), f(&[3])]), f(&[2, 3]));
+        assert_eq!(infer1(OpKind::Mul, &[f(&[2, 1]), f(&[1, 4])]), f(&[2, 4]));
+        assert!(infer_out_types(&OpKind::Add, &[f(&[2]), f(&[3])]).is_err());
+    }
+
+    #[test]
+    fn comparison_dtype() {
+        let out = infer1(OpKind::Greater, &[f(&[4]), f(&[4])]);
+        assert_eq!(out.dtype, DType::I32);
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        assert_eq!(infer1(OpKind::MatMul, &[f(&[3, 4]), f(&[4, 5])]), f(&[3, 5]));
+        assert_eq!(
+            infer1(OpKind::MatMul, &[f(&[8, 3, 4]), f(&[8, 4, 5])]),
+            f(&[8, 3, 5])
+        );
+        assert_eq!(
+            infer1(OpKind::MatMul, &[f(&[8, 3, 4]), f(&[4, 5])]),
+            f(&[8, 3, 5])
+        );
+        assert!(infer_out_types(&OpKind::MatMul, &[f(&[3, 4]), f(&[5, 6])]).is_err());
+    }
+
+    #[test]
+    fn transpose_perm() {
+        assert_eq!(
+            infer1(OpKind::Transpose { perm: vec![1, 0, 2] }, &[f(&[2, 3, 4])]),
+            f(&[3, 2, 4])
+        );
+        assert!(infer_out_types(&OpKind::Transpose { perm: vec![0, 0, 2] }, &[f(&[2, 3, 4])])
+            .is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        assert_eq!(
+            infer1(OpKind::Reshape { shape: vec![6] }, &[f(&[2, 3])]),
+            f(&[6])
+        );
+        assert!(infer_out_types(&OpKind::Reshape { shape: vec![7] }, &[f(&[2, 3])]).is_err());
+    }
+
+    #[test]
+    fn concat_shapes() {
+        assert_eq!(
+            infer1(OpKind::Concat { axis: 1 }, &[f(&[2, 3]), f(&[2, 5])]),
+            f(&[2, 8])
+        );
+        assert!(infer_out_types(&OpKind::Concat { axis: 0 }, &[f(&[2, 3]), f(&[2, 5])]).is_err());
+    }
+
+    #[test]
+    fn slice_bounds() {
+        assert_eq!(
+            infer1(
+                OpKind::Slice { starts: vec![0, 1], sizes: vec![2, 2] },
+                &[f(&[2, 4])]
+            ),
+            f(&[2, 2])
+        );
+        assert!(infer_out_types(
+            &OpKind::Slice { starts: vec![0, 3], sizes: vec![2, 2] },
+            &[f(&[2, 4])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pad_shapes() {
+        assert_eq!(
+            infer1(OpKind::Pad { low: vec![1, 0], high: vec![1, 2] }, &[f(&[2, 3])]),
+            f(&[4, 5])
+        );
+    }
+
+    #[test]
+    fn reduce_and_softmax() {
+        assert_eq!(
+            infer1(OpKind::ReduceSum { axes: vec![1], keep_dims: false }, &[f(&[2, 3])]),
+            f(&[2])
+        );
+        assert_eq!(infer1(OpKind::Softmax { axis: 1 }, &[f(&[2, 3])]), f(&[2, 3]));
+        assert!(infer_out_types(&OpKind::Softmax { axis: 2 }, &[f(&[2, 3])]).is_err());
+    }
+
+    #[test]
+    fn take_and_onehot() {
+        let idx = TensorType::i32(&[5]);
+        assert_eq!(
+            infer1(OpKind::Take { axis: 0 }, &[f(&[10, 4]), idx.clone()]),
+            f(&[5, 4])
+        );
+        assert_eq!(infer1(OpKind::OneHot { depth: 7 }, &[idx]), f(&[5, 7]));
+        assert!(infer_out_types(&OpKind::OneHot { depth: 7 }, &[f(&[5])]).is_err());
+    }
+
+    #[test]
+    fn artifact_out_types_pass_through() {
+        let kind = OpKind::ArtifactCall {
+            name: "attn".into(),
+            out_types: vec![f(&[2, 8])],
+        };
+        assert_eq!(infer_out_types(&kind, &[f(&[2, 8])]).unwrap(), vec![f(&[2, 8])]);
+    }
+}

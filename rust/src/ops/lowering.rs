@@ -1,0 +1,235 @@
+//! Lowering of `OpKind` instances into `XlaOp`s on an `XlaBuilder`.
+//!
+//! This is the symbolic half of the system: the eager executor lowers one op
+//! per computation, while the segment compiler (`symbolic::compiler`) lowers a
+//! whole straight-line segment into a single fused `XlaComputation` — exactly
+//! the per-op-kernel vs whole-graph-fusion dichotomy the paper measures.
+//!
+//! `ArtifactCall` is intentionally rejected here: artifacts are pre-lowered
+//! HLO executables and are invoked by the runtime, never inlined.
+
+use crate::error::{Result, TerraError};
+use crate::ops::OpKind;
+use crate::tensor::{DType, Shape, TensorType};
+use xla::{ArrayShape, XlaBuilder, XlaOp};
+
+/// Broadcast `op` (of shape `from`) to shape `to` using right-aligned numpy
+/// semantics (size-1 dims expand).
+pub fn broadcast_to(op: &XlaOp, from: &Shape, to: &Shape) -> Result<XlaOp> {
+    if from == to {
+        return Ok(op.copy()?);
+    }
+    let offset = to.rank() - from.rank();
+    let broadcast_dims: Vec<i64> = (0..from.rank()).map(|i| (i + offset) as i64).collect();
+    Ok(op.broadcast_in_dim(&to.dims_i64(), &broadcast_dims)?)
+}
+
+fn binary(
+    a: &XlaOp,
+    b: &XlaOp,
+    ta: &TensorType,
+    tb: &TensorType,
+    f: impl Fn(&XlaOp, &XlaOp) -> std::result::Result<XlaOp, xla::Error>,
+) -> Result<XlaOp> {
+    let out = ta.shape.broadcast_with(&tb.shape)?;
+    let a = broadcast_to(a, &ta.shape, &out)?;
+    let b = broadcast_to(b, &tb.shape, &out)?;
+    Ok(f(&a, &b)?)
+}
+
+fn comparison(
+    a: &XlaOp,
+    b: &XlaOp,
+    ta: &TensorType,
+    tb: &TensorType,
+    f: impl Fn(&XlaOp, &XlaOp) -> std::result::Result<XlaOp, xla::Error>,
+) -> Result<XlaOp> {
+    let pred = binary(a, b, ta, tb, f)?;
+    Ok(pred.convert(xla::PrimitiveType::S32)?)
+}
+
+fn zeros(builder: &XlaBuilder, dtype: DType, shape: &Shape) -> Result<XlaOp> {
+    let z = builder.zero(dtype.element_type())?;
+    if shape.rank() == 0 {
+        Ok(z)
+    } else {
+        Ok(z.broadcast(&shape.dims_i64())?)
+    }
+}
+
+/// Lower one op. `inputs`/`in_types` are the op's operands (already built on
+/// the same builder). Returns one `XlaOp` per output.
+pub fn lower_op(
+    builder: &XlaBuilder,
+    kind: &OpKind,
+    inputs: &[&XlaOp],
+    in_types: &[TensorType],
+) -> Result<Vec<XlaOp>> {
+    let out_types = crate::ops::infer_out_types(kind, in_types)?;
+    let single = |op: XlaOp| Ok(vec![op]);
+    match kind {
+        OpKind::Add => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.add_(b))?),
+        OpKind::Sub => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.sub_(b))?),
+        OpKind::Mul => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.mul_(b))?),
+        OpKind::Div => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.div_(b))?),
+        OpKind::Maximum => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.max(b))?),
+        OpKind::Minimum => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.min(b))?),
+        OpKind::Pow => single(binary(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.pow(b))?),
+        OpKind::Greater => single(comparison(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.gt(b))?),
+        OpKind::GreaterEqual => single(comparison(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.ge(b))?),
+        OpKind::Less => single(comparison(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.lt(b))?),
+        OpKind::LessEqual => single(comparison(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.le(b))?),
+        OpKind::Equal => single(comparison(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.eq(b))?),
+        OpKind::NotEqual => single(comparison(inputs[0], inputs[1], &in_types[0], &in_types[1], |a, b| a.ne(b))?),
+        OpKind::Neg => single(inputs[0].neg()?),
+        OpKind::Exp => single(inputs[0].exp()?),
+        OpKind::Log => single(inputs[0].log()?),
+        OpKind::Sqrt => single(inputs[0].sqrt()?),
+        OpKind::Rsqrt => single(inputs[0].rsqrt()?),
+        OpKind::Tanh => single(inputs[0].tanh()?),
+        OpKind::Sigmoid => single(inputs[0].logistic()?),
+        OpKind::Relu => {
+            let z = inputs[0].zeros_like()?;
+            single(inputs[0].max(&z)?)
+        }
+        OpKind::Abs => single(inputs[0].abs()?),
+        OpKind::Sign => single(inputs[0].sign()?),
+        OpKind::Select => {
+            let out_shape = &out_types[0].shape;
+            let cond = broadcast_to(inputs[0], &in_types[0].shape, out_shape)?;
+            let zero = cond.zeros_like()?;
+            let pred = cond.ne(&zero)?;
+            let t = broadcast_to(inputs[1], &in_types[1].shape, out_shape)?;
+            let f = broadcast_to(inputs[2], &in_types[2].shape, out_shape)?;
+            single(pred.select(&t, &f)?)
+        }
+        OpKind::MatMul => {
+            let (la, lb) = (&in_types[0].shape, &in_types[1].shape);
+            if la.rank() > 2 && lb.rank() == 2 {
+                // [.., m, k] @ [k, n]: collapse batch dims into the row dim.
+                let k = *la.dims().last().unwrap();
+                let rows: usize = la.dims()[..la.rank() - 1].iter().product();
+                let flat = inputs[0].reshape(&[rows as i64, k as i64])?;
+                let out = flat.matmul(inputs[1])?;
+                let out_dims = out_types[0].shape.dims_i64();
+                single(out.reshape(&out_dims)?)
+            } else if la.rank() == lb.rank() && la.dims()[..la.rank() - 2] == lb.dims()[..lb.rank() - 2]
+                || la.rank() <= 2 && lb.rank() <= 2
+            {
+                single(inputs[0].matmul(inputs[1])?)
+            } else {
+                // General case: broadcast both operands' batch dims.
+                let batch = &out_types[0].shape.dims()[..out_types[0].shape.rank() - 2];
+                let mut adims = batch.to_vec();
+                adims.extend_from_slice(&la.dims()[la.rank() - 2..]);
+                let mut bdims = batch.to_vec();
+                bdims.extend_from_slice(&lb.dims()[lb.rank() - 2..]);
+                let a = broadcast_to(inputs[0], la, &Shape(adims))?;
+                let b = broadcast_to(inputs[1], lb, &Shape(bdims))?;
+                single(a.matmul(&b)?)
+            }
+        }
+        OpKind::Transpose { perm } => {
+            let perm: Vec<i64> = perm.iter().map(|&p| p as i64).collect();
+            single(inputs[0].transpose(&perm)?)
+        }
+        OpKind::Reshape { shape } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            single(inputs[0].reshape(&dims)?)
+        }
+        OpKind::Broadcast { shape } => {
+            single(broadcast_to(inputs[0], &in_types[0].shape, &Shape::of(shape))?)
+        }
+        OpKind::Concat { axis } => {
+            let rest: Vec<&XlaOp> = inputs[1..].to_vec();
+            single(inputs[0].concat_in_dim(&rest, *axis as i64)?)
+        }
+        OpKind::Slice { starts, sizes } => {
+            let mut cur = inputs[0].copy()?;
+            for d in 0..starts.len() {
+                let (s, z) = (starts[d] as i64, sizes[d] as i64);
+                if s != 0 || z != in_types[0].shape.dims()[d] as i64 {
+                    cur = cur.slice_in_dim1(s, s + z, d as i64)?;
+                }
+            }
+            single(cur)
+        }
+        OpKind::Pad { low, high } => {
+            let mut cur = inputs[0].copy()?;
+            let mut cur_shape = in_types[0].shape.clone();
+            for d in 0..low.len() {
+                if low[d] == 0 && high[d] == 0 {
+                    continue;
+                }
+                let mut parts: Vec<XlaOp> = Vec::new();
+                if low[d] > 0 {
+                    let mut dims = cur_shape.dims().to_vec();
+                    dims[d] = low[d];
+                    parts.push(zeros(builder, in_types[0].dtype, &Shape(dims))?);
+                }
+                parts.push(cur);
+                if high[d] > 0 {
+                    let mut dims = cur_shape.dims().to_vec();
+                    dims[d] = high[d];
+                    parts.push(zeros(builder, in_types[0].dtype, &Shape(dims))?);
+                }
+                let head = parts.remove(0);
+                let rest: Vec<&XlaOp> = parts.iter().collect();
+                cur = if rest.is_empty() { head } else { head.concat_in_dim(&rest, d as i64)? };
+                cur_shape.0[d] += low[d] + high[d];
+            }
+            single(cur)
+        }
+        OpKind::ReduceSum { axes, keep_dims } => {
+            let dims: Vec<i64> = axes.iter().map(|&a| a as i64).collect();
+            single(inputs[0].reduce_sum(&dims, *keep_dims)?)
+        }
+        OpKind::ReduceMean { axes, keep_dims } => {
+            let dims: Vec<i64> = axes.iter().map(|&a| a as i64).collect();
+            single(inputs[0].reduce_mean(&dims, *keep_dims)?)
+        }
+        OpKind::ReduceMax { axes, keep_dims } => {
+            let dims: Vec<i64> = axes.iter().map(|&a| a as i64).collect();
+            single(inputs[0].reduce_max(&dims, *keep_dims)?)
+        }
+        OpKind::Softmax { axis } => single(inputs[0].softmax(*axis as i64)?),
+        OpKind::LogSoftmax { axis } => {
+            // max-stabilized: x - m - log(sum(exp(x - m)))
+            let ax = [*axis as i64];
+            let m = inputs[0].reduce_max(&ax, true)?;
+            let shifted = inputs[0].sub_(&m)?;
+            let lse = shifted.exp()?.reduce_sum(&ax, true)?.log()?;
+            single(shifted.sub_(&lse)?)
+        }
+        OpKind::Take { axis } => single(inputs[0].take(inputs[1], *axis as i64)?),
+        OpKind::OneHot { depth } => {
+            // one_hot(idx)[..., d] = f32(idx == d)
+            let idx_shape = &in_types[0].shape;
+            let mut exp_dims = idx_shape.dims().to_vec();
+            exp_dims.push(1);
+            let out_shape = &out_types[0].shape;
+            let idx = inputs[0].reshape(&exp_dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
+            let idx = broadcast_to(&idx, &Shape(exp_dims), out_shape)?;
+            let iota = builder.iota1(xla::ElementType::S32, *depth)?.convert(xla::PrimitiveType::S32)?;
+            let iota = broadcast_to(&iota, &Shape::of(&[*depth]), out_shape)?;
+            let pred = idx.eq(&iota)?;
+            single(pred.convert(xla::PrimitiveType::F32)?)
+        }
+        OpKind::RngUniform { shape } => {
+            let lo = builder.c0(0f32)?;
+            let hi = builder.c0(1f32)?;
+            let sh = ArrayShape::new::<f32>(shape.iter().map(|&d| d as i64).collect());
+            single(XlaOp::rng_uniform(&lo, &hi, &sh)?)
+        }
+        OpKind::RngNormal { shape } => {
+            let mu = builder.c0(0f32)?;
+            let sigma = builder.c0(1f32)?;
+            let sh = ArrayShape::new::<f32>(shape.iter().map(|&d| d as i64).collect());
+            single(XlaOp::rng_normal(&mu, &sigma, &sh)?)
+        }
+        OpKind::Convert { dtype } => single(inputs[0].convert(dtype.primitive_type())?),
+        OpKind::ArtifactCall { name, .. } => Err(TerraError::runtime(format!(
+            "artifact op '{name}' cannot be lowered inline; it must run as its own segment"
+        ))),
+    }
+}

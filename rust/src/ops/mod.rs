@@ -1,0 +1,281 @@
+//! The DL-operation IR.
+//!
+//! `OpKind` is the closed set of "DL operations" in the paper's sense: the
+//! operations that Terra decouples from the imperative execution and delegates
+//! to the symbolic executor. Everything else the user program does (host
+//! calls, mutation, control flow) stays on the imperative side and is *not*
+//! represented here — that asymmetry is the core of the co-execution design.
+//!
+//! `OpKind` derives `Eq`/`Hash`: together with input types and the program
+//! location it forms the TraceGraph node-equality key (paper Appendix A).
+
+mod infer;
+mod lowering;
+
+pub use infer::infer_out_types;
+pub use lowering::{broadcast_to, lower_op};
+
+use crate::error::Result;
+use crate::tensor::{DType, TensorType};
+
+/// A DL operation kind together with its static attributes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    // -- elementwise binary (numpy broadcasting) --
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Maximum,
+    Minimum,
+    Pow,
+    // -- comparisons: produce I32 0/1 --
+    Greater,
+    GreaterEqual,
+    Less,
+    LessEqual,
+    Equal,
+    NotEqual,
+    // -- elementwise unary --
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Abs,
+    Sign,
+    /// `select(cond_i32, on_true, on_false)`, elementwise with broadcasting.
+    Select,
+    /// numpy-style matmul: rank-2 or batched rank-3+ (batch dims must match).
+    MatMul,
+    Transpose { perm: Vec<usize> },
+    Reshape { shape: Vec<usize> },
+    /// Broadcast to an explicit target shape (numpy right-aligned rules).
+    Broadcast { shape: Vec<usize> },
+    Concat { axis: usize },
+    Slice { starts: Vec<usize>, sizes: Vec<usize> },
+    /// Zero padding (`low`/`high` per axis); lowered as concats with zeros.
+    Pad { low: Vec<usize>, high: Vec<usize> },
+    ReduceSum { axes: Vec<usize>, keep_dims: bool },
+    ReduceMean { axes: Vec<usize>, keep_dims: bool },
+    ReduceMax { axes: Vec<usize>, keep_dims: bool },
+    Softmax { axis: usize },
+    LogSoftmax { axis: usize },
+    /// Gather `indices` (I32) along `axis` of the input (numpy `take`).
+    Take { axis: usize },
+    /// I32 indices -> F32 one-hot of the given depth (appended axis).
+    OneHot { depth: usize },
+    /// U(0,1) sample of the given shape. Random: excluded from bitwise
+    /// eager/symbolic equivalence checks.
+    RngUniform { shape: Vec<usize> },
+    /// N(0,1) sample of the given shape.
+    RngNormal { shape: Vec<usize> },
+    Convert { dtype: DType },
+    /// Invoke an AOT-compiled artifact (Pallas kernel or JAX block lowered to
+    /// HLO text at build time). Runs as its own executable; output types come
+    /// from the artifact manifest.
+    ArtifactCall { name: String, out_types: Vec<TensorType> },
+}
+
+impl OpKind {
+    /// Stable mnemonic used in cache keys, trace dumps and error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Maximum => "maximum",
+            OpKind::Minimum => "minimum",
+            OpKind::Pow => "pow",
+            OpKind::Greater => "greater",
+            OpKind::GreaterEqual => "greater_equal",
+            OpKind::Less => "less",
+            OpKind::LessEqual => "less_equal",
+            OpKind::Equal => "equal",
+            OpKind::NotEqual => "not_equal",
+            OpKind::Neg => "neg",
+            OpKind::Exp => "exp",
+            OpKind::Log => "log",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Rsqrt => "rsqrt",
+            OpKind::Tanh => "tanh",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::Relu => "relu",
+            OpKind::Abs => "abs",
+            OpKind::Sign => "sign",
+            OpKind::Select => "select",
+            OpKind::MatMul => "matmul",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Reshape { .. } => "reshape",
+            OpKind::Broadcast { .. } => "broadcast",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Slice { .. } => "slice",
+            OpKind::Pad { .. } => "pad",
+            OpKind::ReduceSum { .. } => "reduce_sum",
+            OpKind::ReduceMean { .. } => "reduce_mean",
+            OpKind::ReduceMax { .. } => "reduce_max",
+            OpKind::Softmax { .. } => "softmax",
+            OpKind::LogSoftmax { .. } => "log_softmax",
+            OpKind::Take { .. } => "take",
+            OpKind::OneHot { .. } => "one_hot",
+            OpKind::RngUniform { .. } => "rng_uniform",
+            OpKind::RngNormal { .. } => "rng_normal",
+            OpKind::Convert { .. } => "convert",
+            OpKind::ArtifactCall { .. } => "artifact_call",
+        }
+    }
+
+    /// Number of tensor inputs this op consumes (`None` = variadic).
+    pub fn arity(&self) -> Option<usize> {
+        Some(match self {
+            OpKind::Add
+            | OpKind::Sub
+            | OpKind::Mul
+            | OpKind::Div
+            | OpKind::Maximum
+            | OpKind::Minimum
+            | OpKind::Pow
+            | OpKind::Greater
+            | OpKind::GreaterEqual
+            | OpKind::Less
+            | OpKind::LessEqual
+            | OpKind::Equal
+            | OpKind::NotEqual
+            | OpKind::MatMul
+            | OpKind::Take { .. } => 2,
+            OpKind::Neg
+            | OpKind::Exp
+            | OpKind::Log
+            | OpKind::Sqrt
+            | OpKind::Rsqrt
+            | OpKind::Tanh
+            | OpKind::Sigmoid
+            | OpKind::Relu
+            | OpKind::Abs
+            | OpKind::Sign
+            | OpKind::Transpose { .. }
+            | OpKind::Reshape { .. }
+            | OpKind::Broadcast { .. }
+            | OpKind::Slice { .. }
+            | OpKind::Pad { .. }
+            | OpKind::ReduceSum { .. }
+            | OpKind::ReduceMean { .. }
+            | OpKind::ReduceMax { .. }
+            | OpKind::Softmax { .. }
+            | OpKind::LogSoftmax { .. }
+            | OpKind::OneHot { .. }
+            | OpKind::Convert { .. } => 1,
+            OpKind::Select => 3,
+            OpKind::RngUniform { .. } | OpKind::RngNormal { .. } => 0,
+            OpKind::Concat { .. } | OpKind::ArtifactCall { .. } => return None,
+        })
+    }
+
+    /// Whether the op draws fresh randomness each execution.
+    pub fn is_random(&self) -> bool {
+        matches!(self, OpKind::RngUniform { .. } | OpKind::RngNormal { .. })
+    }
+
+    /// Artifact calls execute as standalone AOT executables; they cannot be
+    /// lowered inline into a fused segment, so they form segment boundaries.
+    pub fn is_artifact(&self) -> bool {
+        matches!(self, OpKind::ArtifactCall { .. })
+    }
+
+    /// Number of outputs (all ops are single-output except artifact calls).
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            OpKind::ArtifactCall { out_types, .. } => out_types.len(),
+            _ => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpKind::Transpose { perm } => write!(f, "transpose{perm:?}"),
+            OpKind::Reshape { shape } => write!(f, "reshape{shape:?}"),
+            OpKind::Broadcast { shape } => write!(f, "broadcast{shape:?}"),
+            OpKind::Concat { axis } => write!(f, "concat[axis={axis}]"),
+            OpKind::Slice { starts, sizes } => write!(f, "slice[{starts:?};{sizes:?}]"),
+            OpKind::Pad { low, high } => write!(f, "pad[{low:?};{high:?}]"),
+            OpKind::ReduceSum { axes, .. } => write!(f, "reduce_sum{axes:?}"),
+            OpKind::ReduceMean { axes, .. } => write!(f, "reduce_mean{axes:?}"),
+            OpKind::ReduceMax { axes, .. } => write!(f, "reduce_max{axes:?}"),
+            OpKind::Softmax { axis } => write!(f, "softmax[{axis}]"),
+            OpKind::LogSoftmax { axis } => write!(f, "log_softmax[{axis}]"),
+            OpKind::Take { axis } => write!(f, "take[{axis}]"),
+            OpKind::OneHot { depth } => write!(f, "one_hot[{depth}]"),
+            OpKind::RngUniform { shape } => write!(f, "rng_uniform{shape:?}"),
+            OpKind::RngNormal { shape } => write!(f, "rng_normal{shape:?}"),
+            OpKind::Convert { dtype } => write!(f, "convert[{dtype}]"),
+            OpKind::ArtifactCall { name, .. } => write!(f, "artifact:{name}"),
+            other => f.write_str(other.name()),
+        }
+    }
+}
+
+/// A fully-typed op instance: kind + input types (output types are inferred).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct OpDef {
+    pub kind: OpKind,
+    pub in_types: Vec<TensorType>,
+}
+
+impl OpDef {
+    pub fn new(kind: OpKind, in_types: Vec<TensorType>) -> Self {
+        OpDef { kind, in_types }
+    }
+
+    pub fn out_types(&self) -> Result<Vec<TensorType>> {
+        infer_out_types(&self.kind, &self.in_types)
+    }
+
+    /// Cache key for per-op compiled executables (eager mode).
+    pub fn cache_key(&self) -> String {
+        let mut s = format!("{}", self.kind);
+        for t in &self.in_types {
+            s.push('|');
+            s.push_str(&t.signature());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorType;
+
+    #[test]
+    fn arity_and_outputs() {
+        assert_eq!(OpKind::Add.arity(), Some(2));
+        assert_eq!(OpKind::Select.arity(), Some(3));
+        assert_eq!(OpKind::Concat { axis: 0 }.arity(), None);
+        assert_eq!(OpKind::Add.n_outputs(), 1);
+        let ac = OpKind::ArtifactCall {
+            name: "k".into(),
+            out_types: vec![TensorType::f32(&[2]), TensorType::f32(&[3])],
+        };
+        assert_eq!(ac.n_outputs(), 2);
+        assert!(ac.is_artifact());
+    }
+
+    #[test]
+    fn cache_key_distinguishes_shapes() {
+        let a = OpDef::new(OpKind::Add, vec![TensorType::f32(&[2]), TensorType::f32(&[2])]);
+        let b = OpDef::new(OpKind::Add, vec![TensorType::f32(&[3]), TensorType::f32(&[3])]);
+        assert_ne!(a.cache_key(), b.cache_key());
+    }
+
+    #[test]
+    fn randomness_flag() {
+        assert!(OpKind::RngUniform { shape: vec![2] }.is_random());
+        assert!(!OpKind::Add.is_random());
+    }
+}

@@ -1,0 +1,149 @@
+//! Shared model builders for the benchmark programs.
+
+use crate::api::{Session, Tensor, Variable};
+use crate::data::Rng;
+use crate::error::Result;
+use crate::nn::{Conv2d, Dense, Embedding, LayerNorm, MultiHeadAttention, Padding};
+use crate::nn::HasVars;
+use crate::tensor::HostTensor;
+
+/// Transformer configuration shared by the text programs.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub blocks: usize,
+    pub max_seq: usize,
+    pub use_kernel: bool,
+    pub rel_bias_len: Option<usize>,
+}
+
+impl TransformerConfig {
+    pub fn tiny(vocab: usize, max_seq: usize) -> Self {
+        TransformerConfig {
+            vocab,
+            dim: 32,
+            heads: 2,
+            blocks: 2,
+            max_seq,
+            use_kernel: true,
+            rel_bias_len: None,
+        }
+    }
+}
+
+pub struct TransformerBlockLayers {
+    pub mha: MultiHeadAttention,
+    pub ln1: LayerNorm,
+    pub ln2: LayerNorm,
+    pub f1: Dense,
+    pub f2: Dense,
+}
+
+impl TransformerBlockLayers {
+    pub fn new(sess: &Session, name: &str, cfg: &TransformerConfig, rng: &mut Rng) -> Result<Self> {
+        Ok(TransformerBlockLayers {
+            mha: MultiHeadAttention::new(
+                sess,
+                &format!("{name}.mha"),
+                cfg.dim,
+                cfg.heads,
+                cfg.use_kernel,
+                cfg.rel_bias_len,
+                rng,
+            )?,
+            ln1: LayerNorm::new(sess, &format!("{name}.ln1"), cfg.dim)?,
+            ln2: LayerNorm::new(sess, &format!("{name}.ln2"), cfg.dim)?,
+            f1: Dense::new(sess, &format!("{name}.f1"), cfg.dim, cfg.dim * 2, true, rng)?,
+            f2: Dense::new(sess, &format!("{name}.f2"), cfg.dim * 2, cfg.dim, true, rng)?,
+        })
+    }
+
+    pub fn forward(&self, x: &Tensor, causal: bool) -> Result<Tensor> {
+        let a = self.mha.forward(&self.ln1.forward(x)?, causal)?;
+        let x = x.add(&a)?;
+        let h = self.f1.forward(&self.ln2.forward(&x)?)?.relu()?;
+        let h = self.f2.forward(&h)?;
+        x.add(&h)
+    }
+}
+
+impl HasVars for TransformerBlockLayers {
+    fn vars(&self) -> Vec<Variable> {
+        let mut v = self.mha.vars();
+        v.extend(self.ln1.vars());
+        v.extend(self.ln2.vars());
+        v.extend(self.f1.vars());
+        v.extend(self.f2.vars());
+        v
+    }
+}
+
+/// A small encoder/decoder transformer over token ids.
+pub struct Transformer {
+    pub cfg: TransformerConfig,
+    pub emb: Embedding,
+    pub pos: Variable,
+    pub blocks: Vec<TransformerBlockLayers>,
+    pub lnf: LayerNorm,
+}
+
+impl Transformer {
+    pub fn new(sess: &Session, name: &str, cfg: TransformerConfig, rng: &mut Rng) -> Result<Self> {
+        let emb = Embedding::new(sess, &format!("{name}.emb"), cfg.vocab, cfg.dim, rng)?;
+        let pos = sess.variable(
+            &format!("{name}.pos"),
+            HostTensor::f32(vec![cfg.max_seq, cfg.dim], rng.normal_vec(cfg.max_seq * cfg.dim, 0.02))?,
+            true,
+        )?;
+        let blocks = (0..cfg.blocks)
+            .map(|i| TransformerBlockLayers::new(sess, &format!("{name}.b{i}"), &cfg, rng))
+            .collect::<Result<Vec<_>>>()?;
+        let lnf = LayerNorm::new(sess, &format!("{name}.lnf"), cfg.dim)?;
+        Ok(Transformer { cfg, emb, pos, blocks, lnf })
+    }
+
+    /// `ids`: i32 [B, S] -> hidden states [B, S, D].
+    pub fn forward(&self, ids: &Tensor, causal: bool) -> Result<Tensor> {
+        let s = ids.shape_dims()[1];
+        let pos = self.pos.read().slice(&[0, 0], &[s, self.cfg.dim])?;
+        let mut x = self.emb.forward(ids)?.add(&pos)?;
+        for b in &self.blocks {
+            x = b.forward(&x, causal)?;
+        }
+        self.lnf.forward(&x)
+    }
+}
+
+impl HasVars for Transformer {
+    fn vars(&self) -> Vec<Variable> {
+        let mut v = self.emb.vars();
+        v.push(self.pos.clone());
+        for b in &self.blocks {
+            v.extend(b.vars());
+        }
+        v.extend(self.lnf.vars());
+        v
+    }
+}
+
+/// conv3x3-same + relu helper.
+pub fn conv_relu(conv: &Conv2d, x: &Tensor) -> Result<Tensor> {
+    conv.forward(x)?.relu()
+}
+
+/// Build a conv layer quickly.
+pub fn conv3(sess: &Session, name: &str, c_in: usize, c_out: usize, rng: &mut Rng) -> Result<Conv2d> {
+    Conv2d::new(sess, name, c_in, c_out, 3, Padding::Same, rng)
+}
+
+/// Nearest-neighbour 2x upsampling via broadcast.
+#[track_caller]
+pub fn upsample2(x: &Tensor) -> Result<Tensor> {
+    let d = x.shape_dims().to_vec();
+    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    x.reshape(&[b, c, h, 1, w, 1])?
+        .broadcast_to(&[b, c, h, 2, w, 2])?
+        .reshape(&[b, c, 2 * h, 2 * w])
+}

@@ -1,0 +1,67 @@
+//! Benchmark programs: the `Program` trait plus the ten imperative DL
+//! program miniatures of the paper's evaluation (§5.1).
+
+pub mod common;
+mod registry;
+mod suite;
+mod text;
+mod vision;
+
+pub use registry::{all_program_names, build_program, expected_autograph_failure};
+pub use suite::*;
+pub use text::{BertCls, BertQa, Gpt2, MusicTransformer};
+pub use vision::{Dcgan, DropBlockCnn, FasterRcnnMini, ResNetMini, SdPointCnn, YoloMini};
+
+use crate::api::{Session, Tensor};
+use crate::error::Result;
+
+/// Host-language features a program exercises (Figure 1 / Table 1 taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PyFeature {
+    /// Third-party library call on materialized data (`host_call`).
+    ThirdPartyCall,
+    /// Tensor materialization inside the training step (`.value()`).
+    Materialization,
+    /// Mutable host object captured by the DL side (`HostState`).
+    Mutation,
+    /// Generator-style / host-driven dynamic control flow.
+    GeneratorFlow,
+    /// Input shapes vary across iterations (bucketed sequence lengths).
+    DynamicShapes,
+    /// The program takes different op paths across iterations.
+    MultiPath,
+}
+
+/// The result of one training step: tensors the step "returns". The harness
+/// materializes them *after* the step body — the one kind of fetch the
+/// AutoGraph baseline supports (function return values), unlike mid-step
+/// materializations which only Terra can co-execute.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutput {
+    /// The training loss, fetched by the harness every `loss_every` steps.
+    pub loss: Option<Tensor>,
+    /// Additional returned tensors (e.g. per-head loss components), fetched
+    /// by the harness every step.
+    pub extra: Vec<Tensor>,
+}
+
+/// An imperative DL program: the unit of the paper's evaluation.
+///
+/// `step` must be *replayable*: on a divergence fallback the engine re-runs
+/// the same step imperatively, so any data consumed must be derived
+/// deterministically from `step` (our `data` module guarantees this), and
+/// host state is snapshotted/restored by the engine around each step.
+pub trait Program: Send {
+    fn name(&self) -> &'static str;
+
+    /// Create variables (parameters); runs once, eagerly, outside any step.
+    fn setup(&mut self, sess: &Session) -> Result<()>;
+
+    /// One training iteration.
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput>;
+
+    /// Which host features the program uses (drives Table 1).
+    fn features(&self) -> &'static [PyFeature] {
+        &[]
+    }
+}

@@ -1,0 +1,50 @@
+//! Program registry: name -> constructor, plus the Table-1 expectations.
+
+use crate::error::{Result, TerraError};
+use crate::error::ConvertFailure;
+use crate::programs::Program;
+
+/// Names of all benchmark programs, in the paper's Figure-5 order.
+pub fn all_program_names() -> Vec<&'static str> {
+    vec![
+        "dropblock",
+        "bert_qa",
+        "music_transformer",
+        "sdpoint",
+        "bert_cls",
+        "gpt2",
+        "dcgan",
+        "resnet50",
+        "faster_rcnn",
+        "yolov3",
+    ]
+}
+
+/// Construct a program by name.
+pub fn build_program(name: &str) -> Result<Box<dyn Program>> {
+    Ok(match name {
+        "tiny_linear" => Box::new(crate::programs::TinyLinear::new(10)),
+        "resnet50" => Box::new(crate::programs::ResNetMini::new()),
+        "dropblock" => Box::new(crate::programs::DropBlockCnn::new()),
+        "sdpoint" => Box::new(crate::programs::SdPointCnn::new()),
+        "dcgan" => Box::new(crate::programs::Dcgan::new()),
+        "yolov3" => Box::new(crate::programs::YoloMini::new()),
+        "faster_rcnn" => Box::new(crate::programs::FasterRcnnMini::new()),
+        "bert_cls" => Box::new(crate::programs::BertCls::new()),
+        "bert_qa" => Box::new(crate::programs::BertQa::new()),
+        "gpt2" => Box::new(crate::programs::Gpt2::new()),
+        "music_transformer" => Box::new(crate::programs::MusicTransformer::new()),
+        other => return Err(TerraError::Config(format!("unknown program '{other}'"))),
+    })
+}
+
+/// The paper's Table 1: which programs the AutoGraph-style baseline fails on,
+/// and for which reason.
+pub fn expected_autograph_failure(name: &str) -> Option<ConvertFailure> {
+    match name {
+        "dropblock" | "music_transformer" | "sdpoint" => Some(ConvertFailure::PythonObjectMutation),
+        "bert_cls" => Some(ConvertFailure::ThirdPartyCall),
+        "faster_rcnn" => Some(ConvertFailure::TensorMaterialization),
+        _ => None,
+    }
+}

@@ -1,0 +1,61 @@
+//! Small synthetic programs used by engine/integration tests (the ten paper
+//! miniatures live in `vision.rs` / `text.rs`).
+
+use crate::api::{Session, Variable};
+use crate::error::Result;
+use crate::programs::{Program, PyFeature, StepOutput};
+use crate::tensor::HostTensor;
+
+/// Minimal linear-model program used by engine integration tests: one dense
+/// weight trained with hand-written gradient steps. Fetches an extra metric
+/// mid-step every `fetch_every` steps, producing two distinct trace shapes
+/// (a Switch-Case in the generated plan).
+pub struct TinyLinear {
+    pub w: Option<Variable>,
+    pub fetch_every: u64,
+}
+
+impl TinyLinear {
+    pub fn new(fetch_every: u64) -> Self {
+        TinyLinear { w: None, fetch_every }
+    }
+}
+
+impl Program for TinyLinear {
+    fn name(&self) -> &'static str {
+        "tiny_linear"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.w = Some(sess.variable(
+            "w",
+            HostTensor::f32(vec![4], vec![0.5, -0.25, 1.0, 2.0])?,
+            true,
+        )?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        // Deterministic per-step batch.
+        let x = sess.feed(HostTensor::f32(
+            vec![4],
+            (0..4).map(|i| ((step as f32) * 0.1 + i as f32).sin()).collect(),
+        )?)?;
+        let y = w.read().mul(&x)?;
+        let loss_t = y.mul(&y)?.reduce_mean(&[0], false)?;
+        // Mid-step materialization on a subset of iterations -> MultiPath.
+        if self.fetch_every > 0 && step % self.fetch_every == 0 {
+            let _norm = y.abs()?.reduce_max(&[0], false)?.scalar_f32()?;
+        }
+        // Manual gradient step: dL/dw = 2*y*x / 4
+        let g = y.mul(&x)?.mul_scalar(0.5)?;
+        let new_w = w.read().sub(&g.mul_scalar(0.05)?)?;
+        w.assign(&new_w)?;
+        Ok(StepOutput { loss: Some(loss_t), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::Materialization, PyFeature::MultiPath]
+    }
+}

@@ -1,0 +1,314 @@
+//! Text benchmark miniatures: BERT-CLS, BERT-Q&A, GPT-2, MusicTransformer
+//! (paper §5.1).
+
+use crate::api::{HostState, Session, Variable};
+use crate::data;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::nn::{softmax_cross_entropy, Adam, Dense, HasVars, Optimizer, Sgd};
+use crate::programs::common::{Transformer, TransformerConfig};
+use crate::programs::{Program, PyFeature, StepOutput};
+
+const SEED: u64 = 0x7e11b;
+const VOCAB: usize = 64;
+
+// ---------------------------------------------------------------------------
+// BERT-CLS: encoder classifier + third-party metric call on materialized
+// logits (paper Table 1: fails AutoGraph via third-party library call).
+// ---------------------------------------------------------------------------
+
+pub struct BertCls {
+    model: Option<Transformer>,
+    head: Option<Dense>,
+    opt: Adam,
+    batch: usize,
+    seq: usize,
+    pub last_metric: f32,
+}
+
+impl BertCls {
+    pub fn new() -> Self {
+        BertCls { model: None, head: None, opt: Adam::new(1e-3), batch: 4, seq: 12, last_metric: 0.0 }
+    }
+}
+
+impl Default for BertCls {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for BertCls {
+    fn name(&self) -> &'static str {
+        "bert_cls"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED);
+        let cfg = TransformerConfig::tiny(VOCAB, self.seq);
+        let model = Transformer::new(sess, "bert", cfg, &mut rng)?;
+        let head = Dense::new(sess, "cls", model.cfg.dim, 4, true, &mut rng)?;
+        let mut vars = model.vars();
+        vars.extend(head.vars());
+        self.opt.register(sess, &vars)?;
+        self.model = Some(model);
+        self.head = Some(head);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let ids = sess.feed(data::token_batch(SEED, step, self.batch, self.seq, VOCAB))?;
+        let labels = sess.feed(data::label_batch(SEED, step, self.batch, 4))?;
+        let model = self.model.as_ref().unwrap();
+        let head = self.head.as_ref().unwrap();
+        let mut vars = model.vars();
+        vars.extend(head.vars());
+        let tape = crate::tape::Tape::start(sess)?;
+        let h = model.forward(&ids, false)?;
+        let cls = h.slice(&[0, 0, 0], &[self.batch, 1, model.cfg.dim])?.reshape(&[self.batch, model.cfg.dim])?;
+        let logits = head.forward(&cls)?;
+        let loss = softmax_cross_entropy(&logits, &labels)?;
+        // Third-party library call on materialized data (sklearn-style
+        // accuracy): unconvertible, co-executed by Terra.
+        let labels_host = data::label_batch(SEED, step, self.batch, 4);
+        let metric_sink = &mut self.last_metric;
+        sess.host_call("sklearn.accuracy", &[&logits], |hosts| {
+            let l = hosts[0].as_f32()?;
+            let gold = labels_host.as_i32()?;
+            let mut correct = 0;
+            for (b, &g) in gold.iter().enumerate() {
+                let row = &l[b * 4..(b + 1) * 4];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if argmax as i32 == g {
+                    correct += 1;
+                }
+            }
+            *metric_sink = correct as f32 / gold.len() as f32;
+            Ok(vec![])
+        })?;
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::ThirdPartyCall]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BERT-Q&A: encoder with span start/end heads (AutoGraph-compatible).
+// ---------------------------------------------------------------------------
+
+pub struct BertQa {
+    model: Option<Transformer>,
+    head: Option<Dense>,
+    opt: Sgd,
+    batch: usize,
+    seq: usize,
+}
+
+impl BertQa {
+    pub fn new() -> Self {
+        BertQa { model: None, head: None, opt: Sgd::new(0.02), batch: 4, seq: 12 }
+    }
+}
+
+impl Default for BertQa {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for BertQa {
+    fn name(&self) -> &'static str {
+        "bert_qa"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 1);
+        let cfg = TransformerConfig::tiny(VOCAB, self.seq);
+        let model = Transformer::new(sess, "bertqa", cfg, &mut rng)?;
+        let head = Dense::new(sess, "span", model.cfg.dim, 2, true, &mut rng)?;
+        self.model = Some(model);
+        self.head = Some(head);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let ids = sess.feed(data::token_batch(SEED ^ 1, step, self.batch, self.seq, VOCAB))?;
+        let (starts, ends) = data::span_batch(SEED ^ 1, step, self.batch, self.seq);
+        let starts = sess.feed(starts)?;
+        let ends = sess.feed(ends)?;
+        let model = self.model.as_ref().unwrap();
+        let head = self.head.as_ref().unwrap();
+        let mut vars = model.vars();
+        vars.extend(head.vars());
+        let tape = crate::tape::Tape::start(sess)?;
+        let h = model.forward(&ids, false)?; // [B,S,D]
+        let span = head.forward(&h)?; // [B,S,2]
+        let s_logits = span.slice(&[0, 0, 0], &[self.batch, self.seq, 1])?.reshape(&[self.batch, self.seq])?;
+        let e_logits = span.slice(&[0, 0, 1], &[self.batch, self.seq, 1])?.reshape(&[self.batch, self.seq])?;
+        let loss = softmax_cross_entropy(&s_logits, &starts)?
+            .add(&softmax_cross_entropy(&e_logits, &ends)?)?
+            .mul_scalar(0.5)?;
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GPT-2: causal LM with bucketed (dynamic) sequence lengths. AutoGraph copes
+// via per-signature retracing; XLA in the paper could not (Fig. 5 n/a).
+// ---------------------------------------------------------------------------
+
+pub struct Gpt2 {
+    model: Option<Transformer>,
+    lm: Option<Dense>,
+    opt: Sgd,
+    batch: usize,
+    buckets: [usize; 3],
+}
+
+impl Gpt2 {
+    pub fn new() -> Self {
+        Gpt2 { model: None, lm: None, opt: Sgd::new(0.02), batch: 4, buckets: [8, 12, 16] }
+    }
+}
+
+impl Default for Gpt2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for Gpt2 {
+    fn name(&self) -> &'static str {
+        "gpt2"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 2);
+        let cfg = TransformerConfig::tiny(VOCAB, 16);
+        let model = Transformer::new(sess, "gpt2", cfg, &mut rng)?;
+        let lm = Dense::new(sess, "lm", model.cfg.dim, VOCAB, false, &mut rng)?;
+        self.model = Some(model);
+        self.lm = Some(lm);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        // Dynamic input shape: bucketed sequence length per step.
+        let seq = data::seq_bucket(step, &self.buckets);
+        let ids = sess.feed(data::token_batch(SEED ^ 2, step, self.batch, seq, VOCAB))?;
+        let model = self.model.as_ref().unwrap();
+        let lm = self.lm.as_ref().unwrap();
+        let mut vars = model.vars();
+        vars.extend(lm.vars());
+        let tape = crate::tape::Tape::start(sess)?;
+        let h = model.forward(&ids, true)?; // causal
+        let logits = lm.forward(&h)?; // [B,S,V]
+        // Next-token prediction: shift by one.
+        let b = self.batch;
+        let pred = logits.slice(&[0, 0, 0], &[b, seq - 1, VOCAB])?.reshape(&[b * (seq - 1), VOCAB])?;
+        let target = ids.slice(&[0, 1], &[b, seq - 1])?.reshape(&[b * (seq - 1)])?;
+        let loss = softmax_cross_entropy(&pred, &target)?;
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::DynamicShapes, PyFeature::MultiPath]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MusicTransformer: relative-attention encoder + host-mutated adaptive loss
+// scale (paper Table 1: fails AutoGraph via object mutation).
+// ---------------------------------------------------------------------------
+
+pub struct MusicTransformer {
+    model: Option<Transformer>,
+    lm: Option<Dense>,
+    scale: Option<HostState>,
+    opt: Sgd,
+    batch: usize,
+    seq: usize,
+}
+
+impl MusicTransformer {
+    pub fn new() -> Self {
+        MusicTransformer { model: None, lm: None, scale: None, opt: Sgd::new(0.02), batch: 4, seq: 12 }
+    }
+}
+
+impl Default for MusicTransformer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for MusicTransformer {
+    fn name(&self) -> &'static str {
+        "music_transformer"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 3);
+        let mut cfg = TransformerConfig::tiny(VOCAB, self.seq);
+        cfg.rel_bias_len = Some(self.seq); // relative position attention
+        cfg.use_kernel = false; // rel-bias path is composite
+        let model = Transformer::new(sess, "music", cfg, &mut rng)?;
+        let lm = Dense::new(sess, "lm", model.cfg.dim, VOCAB, false, &mut rng)?;
+        self.model = Some(model);
+        self.lm = Some(lm);
+        self.scale = Some(sess.host_state(1.0));
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        // Loss-scale schedule mutates the host object every few steps; its
+        // value is captured into the graph (stale under AutoGraph).
+        let sc = self.scale.as_ref().unwrap();
+        if step % 4 == 0 {
+            sc.set(1.0 / (1.0 + step as f32 * 0.01));
+        }
+        let ids = sess.feed(data::token_batch(SEED ^ 3, step, self.batch, self.seq, VOCAB))?;
+        let model = self.model.as_ref().unwrap();
+        let lm = self.lm.as_ref().unwrap();
+        let mut vars = model.vars();
+        vars.extend(lm.vars());
+        let tape = crate::tape::Tape::start(sess)?;
+        let h = model.forward(&ids, true)?;
+        let logits = lm.forward(&h)?;
+        let b = self.batch;
+        let seq = self.seq;
+        let pred = logits.slice(&[0, 0, 0], &[b, seq - 1, VOCAB])?.reshape(&[b * (seq - 1), VOCAB])?;
+        let target = ids.slice(&[0, 1], &[b, seq - 1])?.reshape(&[b * (seq - 1)])?;
+        let raw_loss = softmax_cross_entropy(&pred, &target)?;
+        let scale_t = sc.tensor()?; // captured mutable host state
+        let loss = raw_loss.mul(&scale_t)?;
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::Mutation]
+    }
+}

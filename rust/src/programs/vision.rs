@@ -1,0 +1,572 @@
+//! Vision benchmark miniatures: ResNet50, DropBlock, SDPoint, DCGAN, YOLOv3,
+//! FasterRCNN (paper §5.1). Structurally faithful, scaled to the 1-core
+//! PJRT-CPU testbed; each exercises exactly the host features the paper's
+//! original exercises (Table 1 / DESIGN.md §5).
+
+use crate::api::{HostState, Session, Tensor, Variable};
+use crate::data;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::nn::{
+    avg_pool2, bce_with_logits, global_avg_pool, max_pool2, softmax_cross_entropy,
+    Conv2d, Dense, HasVars, Optimizer, Sgd,
+};
+use crate::programs::common::{conv3, conv_relu, upsample2};
+use crate::programs::{Program, PyFeature, StepOutput};
+use crate::tensor::HostTensor;
+
+const SEED: u64 = 0x7e11a;
+
+// ---------------------------------------------------------------------------
+// ResNet50 miniature: residual CNN, no host features (AutoGraph-compatible).
+// ---------------------------------------------------------------------------
+
+struct ResBlock {
+    c1: Conv2d,
+    c2: Conv2d,
+}
+
+impl ResBlock {
+    fn new(sess: &Session, name: &str, c: usize, rng: &mut Rng) -> Result<Self> {
+        Ok(ResBlock { c1: conv3(sess, &format!("{name}.c1"), c, c, rng)?, c2: conv3(sess, &format!("{name}.c2"), c, c, rng)? })
+    }
+
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let y = conv_relu(&self.c1, x)?;
+        let y = self.c2.forward(&y)?;
+        x.add(&y)?.relu()
+    }
+
+    fn vars(&self) -> Vec<Variable> {
+        let mut v = self.c1.vars();
+        v.extend(self.c2.vars());
+        v
+    }
+}
+
+pub struct ResNetMini {
+    stem: Option<Conv2d>,
+    proj: Option<Conv2d>,
+    b1: Option<ResBlock>,
+    b2: Option<ResBlock>,
+    head: Option<Dense>,
+    opt: Sgd,
+    batch: usize,
+}
+
+impl ResNetMini {
+    pub fn new() -> Self {
+        ResNetMini { stem: None, proj: None, b1: None, b2: None, head: None, opt: Sgd::new(0.05), batch: 4 }
+    }
+
+    fn train_vars(&self) -> Vec<Variable> {
+        let mut v = self.stem.as_ref().unwrap().vars();
+        v.extend(self.b1.as_ref().unwrap().vars());
+        v.extend(self.proj.as_ref().unwrap().vars());
+        v.extend(self.b2.as_ref().unwrap().vars());
+        v.extend(self.head.as_ref().unwrap().vars());
+        v
+    }
+}
+
+impl Default for ResNetMini {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for ResNetMini {
+    fn name(&self) -> &'static str {
+        "resnet50"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED);
+        self.stem = Some(conv3(sess, "stem", 3, 8, &mut rng)?);
+        self.b1 = Some(ResBlock::new(sess, "s1", 8, &mut rng)?);
+        self.proj = Some(conv3(sess, "proj", 8, 16, &mut rng)?);
+        self.b2 = Some(ResBlock::new(sess, "s2", 16, &mut rng)?);
+        self.head = Some(Dense::new(sess, "head", 16, 10, true, &mut rng)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let x = sess.feed(data::image_batch(SEED, step, self.batch, 3, 8, 8))?;
+        let labels = sess.feed(data::label_batch(SEED, step, self.batch, 10))?;
+        let vars = self.train_vars();
+        let tape = crate::tape::Tape::start(sess)?;
+        let h = conv_relu(self.stem.as_ref().unwrap(), &x)?;
+        let h = self.b1.as_ref().unwrap().forward(&h)?;
+        let h = max_pool2(&h)?;
+        let h = conv_relu(self.proj.as_ref().unwrap(), &h)?;
+        let h = self.b2.as_ref().unwrap().forward(&h)?;
+        let h = global_avg_pool(&h)?;
+        let logits = self.head.as_ref().unwrap().forward(&h)?;
+        let loss = softmax_cross_entropy(&logits, &labels)?;
+        let var_refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &var_refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DropBlock: CNN + block-structured dropout whose drop probability lives in
+// mutated host state (paper Table 1: fails AutoGraph via object mutation).
+// ---------------------------------------------------------------------------
+
+pub struct DropBlockCnn {
+    c1: Option<Conv2d>,
+    c2: Option<Conv2d>,
+    head: Option<Dense>,
+    drop_prob: Option<HostState>,
+    opt: Sgd,
+    batch: usize,
+}
+
+impl DropBlockCnn {
+    pub fn new() -> Self {
+        DropBlockCnn { c1: None, c2: None, head: None, drop_prob: None, opt: Sgd::new(0.05), batch: 4 }
+    }
+
+    /// Block-structured dropout: drop whole 2x2 blocks. Uses the fused Pallas
+    /// mask kernel when the artifact store provides it.
+    fn dropblock(&self, sess: &Session, x: &Tensor, p: &Tensor) -> Result<Tensor> {
+        let d = x.shape_dims().to_vec();
+        let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+        let kernel = format!("dropblock_mask_b{b}_c{c}_h{}_w{}", h / 2, w / 2);
+        let noise = sess.rng_uniform(&[b, c, h / 2, w / 2])?;
+        let small_mask = if sess.artifacts().contains(&kernel) {
+            sess.artifact_call(&kernel, &[&noise, p])?.remove(0)
+        } else {
+            let keep = noise.greater_equal(&p.broadcast_to(&[b, c, h / 2, w / 2])?)?;
+            keep.convert(crate::tensor::DType::F32)?
+        };
+        let mask = small_mask
+            .reshape(&[b, c, h / 2, 1, w / 2, 1])?
+            .broadcast_to(&[b, c, h / 2, 2, w / 2, 2])?
+            .reshape(&[b, c, h, w])?;
+        let scale = p.neg()?.add_scalar(1.0)?.maximum(&sess.scalar(1e-3)?)?;
+        x.mul(&mask)?.div(&scale.broadcast_to(&[b, c, h, w])?)
+    }
+}
+
+impl Default for DropBlockCnn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for DropBlockCnn {
+    fn name(&self) -> &'static str {
+        "dropblock"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 1);
+        self.c1 = Some(conv3(sess, "c1", 3, 8, &mut rng)?);
+        self.c2 = Some(conv3(sess, "c2", 8, 16, &mut rng)?);
+        self.head = Some(Dense::new(sess, "head", 16, 10, true, &mut rng)?);
+        self.drop_prob = Some(sess.host_state(0.0));
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        // Scheduled drop rate: host mutation of the Dropper object (Fig. 1c).
+        let dp = self.drop_prob.as_ref().unwrap();
+        if step >= 8 {
+            dp.set(0.15);
+        }
+        let x = sess.feed(data::image_batch(SEED ^ 1, step, self.batch, 3, 8, 8))?;
+        let labels = sess.feed(data::label_batch(SEED ^ 1, step, self.batch, 10))?;
+        let vars: Vec<Variable> = {
+            let mut v = self.c1.as_ref().unwrap().vars();
+            v.extend(self.c2.as_ref().unwrap().vars());
+            v.extend(self.head.as_ref().unwrap().vars());
+            v
+        };
+        let tape = crate::tape::Tape::start(sess)?;
+        let p = dp.tensor()?; // captured host state read
+        let h = conv_relu(self.c1.as_ref().unwrap(), &x)?;
+        let h = self.dropblock(sess, &h, &p)?;
+        let h = max_pool2(&h)?;
+        let h = conv_relu(self.c2.as_ref().unwrap(), &h)?;
+        let h = global_avg_pool(&h)?;
+        let logits = self.head.as_ref().unwrap().forward(&h)?;
+        let loss = softmax_cross_entropy(&logits, &labels)?;
+        let var_refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &var_refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::Mutation]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SDPoint: stochastic downsampling point — host RNG picks where to pool each
+// iteration (multi-path) and records the choice in mutated host state.
+// ---------------------------------------------------------------------------
+
+pub struct SdPointCnn {
+    convs: Vec<Conv2d>,
+    head: Option<Dense>,
+    last_point: Option<HostState>,
+    opt: Sgd,
+    batch: usize,
+}
+
+impl SdPointCnn {
+    pub fn new() -> Self {
+        SdPointCnn { convs: Vec::new(), head: None, last_point: None, opt: Sgd::new(0.05), batch: 4 }
+    }
+}
+
+impl Default for SdPointCnn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for SdPointCnn {
+    fn name(&self) -> &'static str {
+        "sdpoint"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 2);
+        self.convs = vec![
+            conv3(sess, "c0", 3, 8, &mut rng)?,
+            conv3(sess, "c1", 8, 8, &mut rng)?,
+            conv3(sess, "c2", 8, 8, &mut rng)?,
+        ];
+        self.head = Some(Dense::new(sess, "head", 8, 10, true, &mut rng)?);
+        self.last_point = Some(sess.host_state(-1.0));
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        // Host-side stochastic choice of the downsampling point: invisible to
+        // any graph conversion, visible to Terra as three trace families.
+        let point = Rng::for_step(SEED ^ 2, step).below(3);
+        // Object mutation: the SDPoint module records its current block
+        // choice, and the loss is reweighted by it (captured host state).
+        self.last_point.as_ref().unwrap().set(1.0 + 0.05 * point as f32);
+        let x = sess.feed(data::image_batch(SEED ^ 2, step, self.batch, 3, 8, 8))?;
+        let labels = sess.feed(data::label_batch(SEED ^ 2, step, self.batch, 10))?;
+        let vars: Vec<Variable> = {
+            let mut v: Vec<Variable> = self.convs.iter().flat_map(|c| c.vars()).collect();
+            v.extend(self.head.as_ref().unwrap().vars());
+            v
+        };
+        let tape = crate::tape::Tape::start(sess)?;
+        let mut h = x;
+        for (i, conv) in self.convs.iter().enumerate() {
+            h = conv_relu(conv, &h)?;
+            if i == point {
+                h = avg_pool2(&h)?; // stochastic downsampling point
+            }
+        }
+        let h = global_avg_pool(&h)?;
+        let logits = self.head.as_ref().unwrap().forward(&h)?;
+        let weight = self.last_point.as_ref().unwrap().tensor()?; // captured
+        let loss = softmax_cross_entropy(&logits, &labels)?.mul(&weight)?;
+        let var_refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &var_refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::Mutation, PyFeature::MultiPath]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DCGAN: generator + discriminator, alternating sub-steps (AutoGraph-ok).
+// ---------------------------------------------------------------------------
+
+pub struct Dcgan {
+    g_fc: Option<Dense>,
+    g_conv: Option<Conv2d>,
+    d_conv: Option<Conv2d>,
+    d_fc: Option<Dense>,
+    g_opt: Sgd,
+    d_opt: Sgd,
+    batch: usize,
+    z_dim: usize,
+}
+
+impl Dcgan {
+    pub fn new() -> Self {
+        Dcgan {
+            g_fc: None,
+            g_conv: None,
+            d_conv: None,
+            d_fc: None,
+            g_opt: Sgd::new(0.02),
+            d_opt: Sgd::new(0.02),
+            batch: 4,
+            z_dim: 16,
+        }
+    }
+
+    fn generate(&self, sess: &Session) -> Result<Tensor> {
+        let z = sess.rng_normal(&[self.batch, self.z_dim])?;
+        let h = self.g_fc.as_ref().unwrap().forward(&z)?.relu()?;
+        let h = h.reshape(&[self.batch, 8, 4, 4])?;
+        let h = upsample2(&h)?;
+        self.g_conv.as_ref().unwrap().forward(&h)?.tanh()
+    }
+
+    fn discriminate(&self, x: &Tensor) -> Result<Tensor> {
+        let h = conv_relu(self.d_conv.as_ref().unwrap(), x)?;
+        let h = max_pool2(&h)?;
+        let h = global_avg_pool(&h)?;
+        self.d_fc.as_ref().unwrap().forward(&h)
+    }
+}
+
+impl Default for Dcgan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for Dcgan {
+    fn name(&self) -> &'static str {
+        "dcgan"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 3);
+        self.g_fc = Some(Dense::new(sess, "g.fc", self.z_dim, 8 * 4 * 4, true, &mut rng)?);
+        self.g_conv = Some(conv3(sess, "g.conv", 8, 1, &mut rng)?);
+        self.d_conv = Some(conv3(sess, "d.conv", 1, 8, &mut rng)?);
+        self.d_fc = Some(Dense::new(sess, "d.fc", 8, 1, true, &mut rng)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let real = sess.feed(data::image_batch(SEED ^ 3, step, self.batch, 1, 8, 8))?;
+        let ones = sess.constant(HostTensor::f32(vec![self.batch, 1], vec![1.0; self.batch])?)?;
+        let zeros = sess.constant(HostTensor::f32(vec![self.batch, 1], vec![0.0; self.batch])?)?;
+        let d_vars: Vec<Variable> = {
+            let mut v = self.d_conv.as_ref().unwrap().vars();
+            v.extend(self.d_fc.as_ref().unwrap().vars());
+            v
+        };
+        let g_vars: Vec<Variable> = {
+            let mut v = self.g_fc.as_ref().unwrap().vars();
+            v.extend(self.g_conv.as_ref().unwrap().vars());
+            v
+        };
+        // --- Discriminator sub-step ---
+        let d_loss = {
+            let _s = sess.scope("dstep");
+            let tape = crate::tape::Tape::start(sess)?;
+            let fake = self.generate(sess)?;
+            let d_real = self.discriminate(&real)?;
+            let d_fake = self.discriminate(&fake)?;
+            let loss = bce_with_logits(&d_real, &ones)?.add(&bce_with_logits(&d_fake, &zeros)?)?;
+            let refs: Vec<&Variable> = d_vars.iter().collect();
+            let grads = tape.gradient(&loss, &refs)?;
+            self.d_opt.apply(sess, &d_vars, &grads)?;
+            loss
+        };
+        // --- Generator sub-step ---
+        let g_loss = {
+            let _s = sess.scope("gstep");
+            let tape = crate::tape::Tape::start(sess)?;
+            let fake = self.generate(sess)?;
+            let d_fake = self.discriminate(&fake)?;
+            let loss = bce_with_logits(&d_fake, &ones)?;
+            let refs: Vec<&Variable> = g_vars.iter().collect();
+            let grads = tape.gradient(&loss, &refs)?;
+            self.g_opt.apply(sess, &g_vars, &grads)?;
+            loss
+        };
+        let total = d_loss.add(&g_loss)?;
+        Ok(StepOutput { loss: Some(total), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// YOLOv3 miniature: two-scale detector with several returned loss components
+// (heavy Output Fetching, AutoGraph-ok).
+// ---------------------------------------------------------------------------
+
+pub struct YoloMini {
+    backbone: Vec<Conv2d>,
+    head1: Option<Conv2d>,
+    head2: Option<Conv2d>,
+    opt: Sgd,
+    batch: usize,
+}
+
+impl YoloMini {
+    pub fn new() -> Self {
+        YoloMini { backbone: Vec::new(), head1: None, head2: None, opt: Sgd::new(0.02), batch: 4 }
+    }
+}
+
+impl Default for YoloMini {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for YoloMini {
+    fn name(&self) -> &'static str {
+        "yolov3"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 4);
+        self.backbone = vec![
+            conv3(sess, "b0", 3, 8, &mut rng)?,
+            conv3(sess, "b1", 8, 8, &mut rng)?,
+            conv3(sess, "b2", 8, 16, &mut rng)?,
+        ];
+        self.head1 = Some(conv3(sess, "h1", 8, 5, &mut rng)?); // 8x8 scale
+        self.head2 = Some(conv3(sess, "h2", 16, 5, &mut rng)?); // 4x4 scale
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let x = sess.feed(data::image_batch(SEED ^ 4, step, self.batch, 3, 8, 8))?;
+        let t1 = sess.feed(data::image_batch(SEED ^ 40, step, self.batch, 5, 8, 8))?;
+        let t2 = sess.feed(data::image_batch(SEED ^ 41, step, self.batch, 5, 4, 4))?;
+        let vars: Vec<Variable> = {
+            let mut v: Vec<Variable> = self.backbone.iter().flat_map(|c| c.vars()).collect();
+            v.extend(self.head1.as_ref().unwrap().vars());
+            v.extend(self.head2.as_ref().unwrap().vars());
+            v
+        };
+        let tape = crate::tape::Tape::start(sess)?;
+        let f0 = conv_relu(&self.backbone[0], &x)?;
+        let f1 = conv_relu(&self.backbone[1], &f0)?; // 8x8, C8
+        let f2 = conv_relu(&self.backbone[2], &max_pool2(&f1)?)?; // 4x4, C16
+        let p1 = self.head1.as_ref().unwrap().forward(&f1)?;
+        let p2 = self.head2.as_ref().unwrap().forward(&f2)?;
+        let l1 = crate::nn::mse(&p1, &t1)?;
+        let l2 = crate::nn::mse(&p2, &t2)?;
+        let obj = p1
+            .slice(&[0, 0, 0, 0], &[self.batch, 1, 8, 8])?
+            .reduce_mean(&[0, 1, 2, 3], false)?
+            .abs()?;
+        let loss = l1.add(&l2)?.add(&obj.mul_scalar(0.1)?)?;
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        // Per-component losses are returned (fetched by the harness): the
+        // heavy Output-Fetching workload of the paper's YOLOv3.
+        Ok(StepOutput { loss: Some(loss), extra: vec![l1, l2, obj] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FasterRCNN miniature: two-stage detection with a mid-step materialization
+// (proposal selection on the host) and a feed-back of the selection — the
+// paper's "tensor materialization during conversion" failure + the Fig. 6
+// GraphRunner-stall case.
+// ---------------------------------------------------------------------------
+
+pub struct FasterRcnnMini {
+    backbone: Option<Conv2d>,
+    rpn: Option<Conv2d>,
+    cls: Option<Dense>,
+    opt: Sgd,
+    batch: usize,
+    topk: usize,
+}
+
+impl FasterRcnnMini {
+    pub fn new() -> Self {
+        FasterRcnnMini { backbone: None, rpn: None, cls: None, opt: Sgd::new(0.02), batch: 2, topk: 4 }
+    }
+}
+
+impl Default for FasterRcnnMini {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Program for FasterRcnnMini {
+    fn name(&self) -> &'static str {
+        "faster_rcnn"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED ^ 5);
+        self.backbone = Some(conv3(sess, "bb", 3, 8, &mut rng)?);
+        self.rpn = Some(conv3(sess, "rpn", 8, 1, &mut rng)?);
+        self.cls = Some(Dense::new(sess, "cls", 8, 10, true, &mut rng)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let b = self.batch;
+        let x = sess.feed(data::image_batch(SEED ^ 5, step, b, 3, 8, 8))?;
+        let obj_target = sess.feed(data::image_batch(SEED ^ 50, step, b, 1, 8, 8))?;
+        let vars: Vec<Variable> = {
+            let mut v = self.backbone.as_ref().unwrap().vars();
+            v.extend(self.rpn.as_ref().unwrap().vars());
+            v.extend(self.cls.as_ref().unwrap().vars());
+            v
+        };
+        let tape = crate::tape::Tape::start(sess)?;
+        // Stage 1: backbone + region proposals.
+        let feat = conv_relu(self.backbone.as_ref().unwrap(), &x)?; // [B,8,8,8]
+        let scores = self.rpn.as_ref().unwrap().forward(&feat)?; // [B,1,8,8]
+        let rpn_loss = crate::nn::mse(&scores, &obj_target)?;
+        // Materialize proposals mid-step and select top-k on the host: the
+        // un-convertible operation (paper Fig. 1a / Table 1).
+        let score_host = scores.value()?;
+        let sv = score_host.as_f32()?;
+        let mut global_idx = Vec::with_capacity(b * self.topk);
+        let mut roi_labels = Vec::with_capacity(b * self.topk);
+        for bi in 0..b {
+            let mut idx: Vec<usize> = (0..64).collect();
+            idx.sort_by(|&i, &j| {
+                sv[bi * 64 + j].partial_cmp(&sv[bi * 64 + i]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &local in idx.iter().take(self.topk) {
+                global_idx.push((bi * 64 + local) as i32);
+                roi_labels.push((local % 10) as i32);
+            }
+        }
+        // Feed the host-selected proposals back (GraphRunner stalls here).
+        let idx_t = sess.feed(HostTensor::i32(vec![b * self.topk], global_idx)?)?;
+        let labels_t = sess.feed(HostTensor::i32(vec![b * self.topk], roi_labels)?)?;
+        // Stage 2: classify gathered ROI features.
+        let flat = feat.transpose(&[0, 2, 3, 1])?.reshape(&[b * 64, 8])?;
+        let rois = flat.take(&idx_t, 0)?; // [B*topk, 8]
+        let logits = self.cls.as_ref().unwrap().forward(&rois)?;
+        let cls_loss = softmax_cross_entropy(&logits, &labels_t)?;
+        let loss = rpn_loss.add(&cls_loss)?;
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.apply(sess, &vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::Materialization]
+    }
+}

@@ -1,0 +1,62 @@
+//! The bundle of channels connecting the two runners.
+
+use crate::metrics::Breakdown;
+use crate::runner::mailbox::{Gate, Mailbox, Semaphore};
+use crate::tensor::HostTensor;
+use crate::tracegraph::NodeId;
+use std::sync::Arc;
+
+/// Shared communication state for one co-execution phase.
+///
+/// * `feeds`   — Input Feeding values (PythonRunner → GraphRunner),
+/// * `fetches` — Output Fetching results (GraphRunner → PythonRunner),
+/// * `cases`   — Case Select decisions (PythonRunner → GraphRunner),
+/// * `commits` — end-of-iteration barrier: the GraphRunner only commits an
+///   iteration's staged variable updates after the PythonRunner validated the
+///   full trace (divergence safety; DESIGN.md invariant 4),
+/// * `allowance` — bounds how many iterations ahead the PythonRunner may run,
+/// * `lazy_gate` — present in LazyTensor mode (Table 2): the GraphRunner may
+///   only run an iteration once it has been demanded.
+pub struct CoExecChannels {
+    pub feeds: Mailbox<HostTensor>,
+    pub fetches: Mailbox<HostTensor>,
+    pub cases: Mailbox<usize>,
+    /// Variant selects: for nodes with multiple observed dataflow variants,
+    /// which variant this iteration follows (dataflow Case Select).
+    pub variants: Mailbox<usize>,
+    pub commits: Mailbox<()>,
+    pub allowance: Semaphore,
+    pub lazy_gate: Option<Gate>,
+    pub breakdown: Arc<Breakdown>,
+}
+
+/// Sentinel node id for iteration-level messages (commit barrier).
+pub const ITER_TOKEN: NodeId = NodeId(usize::MAX);
+
+impl CoExecChannels {
+    pub fn new(lazy: bool, max_run_ahead: i64, breakdown: Arc<Breakdown>) -> Arc<Self> {
+        Arc::new(CoExecChannels {
+            feeds: Mailbox::new(),
+            fetches: Mailbox::new(),
+            cases: Mailbox::new(),
+            variants: Mailbox::new(),
+            commits: Mailbox::new(),
+            allowance: Semaphore::new(max_run_ahead),
+            lazy_gate: if lazy { Some(Gate::new()) } else { None },
+            breakdown,
+        })
+    }
+
+    /// Cancel everything from iteration `from` onward and wake all waiters.
+    pub fn cancel_from(&self, from: u64) {
+        self.feeds.cancel_from(from);
+        self.fetches.cancel_from(from);
+        self.cases.cancel_from(from);
+        self.variants.cancel_from(from);
+        self.commits.cancel_from(from);
+        self.allowance.cancel_from(from);
+        if let Some(g) = &self.lazy_gate {
+            g.cancel_from(from);
+        }
+    }
+}

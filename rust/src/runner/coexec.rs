@@ -1,0 +1,435 @@
+//! The Terra engine: the phase machine of §4.1.
+//!
+//! ```text
+//!            ┌────────────┐  latest trace covered   ┌──────────────┐
+//!            │  Tracing   │ ───────────────────────▶ │ Co-Execution │
+//!            │ (imperative│                          │ (skeleton +  │
+//!            │  + record) │ ◀─────────────────────── │  GraphRunner)│
+//!            └────────────┘   divergence: cancel,    └──────────────┘
+//!                              re-trace the step
+//! ```
+//!
+//! The engine owns the TraceGraph, generates/compiles plans, spawns and
+//! cancels GraphRunner threads, swaps session backends, and guarantees the
+//! fallback invariants: staged variable updates of a cancelled iteration are
+//! dropped, host state is restored before the step is replayed imperatively.
+
+use crate::api::{Backend, EagerBackend, Session, TracingBackend, VarStore};
+use crate::config::ExecMode;
+use crate::eager::EagerExecutor;
+use crate::error::{Result, TerraError};
+use crate::graphgen::{generate_plan, GenOptions};
+use crate::metrics::{Breakdown, BreakdownSnapshot, Throughput};
+use crate::programs::Program;
+use crate::runner::channels::CoExecChannels;
+use crate::runner::graph_runner::GraphRunner;
+use crate::runner::skeleton::SkeletonBackend;
+use crate::runtime::{ArtifactStore, Client, ExecCache};
+use crate::symbolic::compile_plan;
+use crate::tensor::TensorType;
+use crate::tracegraph::TraceGraph;
+use crate::trace::VarId;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How many iterations the PythonRunner may run ahead of the GraphRunner.
+const MAX_RUN_AHEAD: i64 = 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Eager,
+    Tracing,
+    CoExec,
+}
+
+/// Counters reported with every run (paper Appendix F).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Tracing -> co-execution transitions.
+    pub enter_coexec: u64,
+    /// Divergence fallbacks (co-execution -> tracing).
+    pub fallbacks: u64,
+    /// Traces collected (tracing-phase iterations).
+    pub traces_collected: u64,
+    /// Freshly compiled segments across all plan generations.
+    pub segments_compiled: u64,
+    /// Plan (re)generations.
+    pub plans_generated: u64,
+}
+
+/// Result of a measured run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub program: String,
+    pub mode: ExecMode,
+    pub steps: u64,
+    pub measured_steps: u64,
+    pub steps_per_sec: f64,
+    pub losses: Vec<(u64, f32)>,
+    pub stats: EngineStats,
+    pub breakdown_per_step: BreakdownSnapshot,
+}
+
+impl RunReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<18} {:<10} {:>8.2} steps/s  ({} measured, {} transitions, {} fallbacks)",
+            self.program,
+            self.mode.name(),
+            self.steps_per_sec,
+            self.measured_steps,
+            self.stats.enter_coexec,
+            self.stats.fallbacks,
+        )
+    }
+}
+
+pub struct Engine {
+    sess: Session,
+    client: Client,
+    artifacts: Arc<ArtifactStore>,
+    vars: Arc<VarStore>,
+    exec: Arc<EagerExecutor>,
+    seg_cache: Arc<ExecCache>,
+    mode: ExecMode,
+    fusion: bool,
+    phase: Phase,
+    graph: TraceGraph,
+    runner: Option<GraphRunner>,
+    /// First iteration handled by the current GraphRunner.
+    runner_start_iter: u64,
+    /// One past the last step validated by the PythonRunner.
+    next_step: u64,
+    channels: Option<Arc<CoExecChannels>>,
+    breakdown: Arc<Breakdown>,
+    stats: EngineStats,
+    /// Host-state values baked at conversion (AutoGraph mode).
+    baked: Arc<crate::baselines::BakedStates>,
+    /// Materialize the returned loss every N steps (0 = never).
+    pub loss_every: u64,
+}
+
+impl Engine {
+    /// Create an engine. `mode` selects the execution model; `fusion` is the
+    /// ±XLA axis (ignored in eager mode).
+    ///
+    /// `ExecMode::AutoGraph` runs the static-compilation baseline: the
+    /// tracing phase uses the conversion backend (which rejects host
+    /// escapes), captured host state is baked and validated for staleness
+    /// every step, and there is no imperative fallback — only re-conversion.
+    pub fn new(mode: ExecMode, artifacts_dir: &str, fusion: bool) -> Result<Engine> {
+        let client = Client::global().clone();
+        let artifacts = Arc::new(ArtifactStore::open(artifacts_dir)?);
+        let vars = Arc::new(VarStore::new(client.clone()));
+        let exec = Arc::new(EagerExecutor::new(client.clone(), artifacts.clone()));
+        let baked = crate::baselines::BakedStates::new();
+        let eager = EagerBackend::new(exec.clone(), vars.clone());
+        let (phase, backend): (Phase, Box<dyn Backend>) = match mode {
+            ExecMode::Eager => (Phase::Eager, Box::new(eager)),
+            ExecMode::AutoGraph => (
+                Phase::Tracing,
+                Box::new(crate::baselines::ConvertBackend::new(
+                    TracingBackend::new(eager),
+                    baked.clone(),
+                )),
+            ),
+            _ => (Phase::Tracing, Box::new(TracingBackend::new(eager))),
+        };
+        let sess = Session::new(backend, artifacts.clone(), vars.clone());
+        Ok(Engine {
+            sess,
+            client,
+            artifacts,
+            vars,
+            exec,
+            seg_cache: ExecCache::global().clone(),
+            mode,
+            fusion,
+            phase,
+            graph: TraceGraph::new(),
+            runner: None,
+            runner_start_iter: 0,
+            next_step: 0,
+            channels: None,
+            breakdown: Arc::new(Breakdown::new()),
+            stats: EngineStats::default(),
+            baked,
+            loss_every: 1,
+        })
+    }
+
+    /// Run the program's step body plus the harness-side fetch of returned
+    /// tensors (the loss print of a typical training loop).
+    fn exec_step(&self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
+        self.sess.begin_step(step)?;
+        let out = prog.step(&self.sess, step)?;
+        let loss = if self.loss_every > 0 && step % self.loss_every == 0 {
+            match &out.loss {
+                Some(t) => Some(self.sess.harness_value(t)?.scalar_value_f32()?),
+                None => None,
+            }
+        } else {
+            None
+        };
+        for t in &out.extra {
+            let _ = self.sess.harness_value(t)?;
+        }
+        self.sess.end_step()?;
+        Ok(loss)
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.sess
+    }
+
+    pub fn vars(&self) -> &Arc<VarStore> {
+        &self.vars
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    pub fn breakdown(&self) -> &Arc<Breakdown> {
+        &self.breakdown
+    }
+
+    pub fn trace_graph(&self) -> &TraceGraph {
+        &self.graph
+    }
+
+    pub fn eager_executor(&self) -> &Arc<EagerExecutor> {
+        &self.exec
+    }
+
+    /// Run program setup (variable creation) eagerly.
+    pub fn setup(&mut self, prog: &mut dyn Program) -> Result<()> {
+        prog.setup(&self.sess)
+    }
+
+    fn var_types(&self) -> Result<HashMap<VarId, TensorType>> {
+        let mut m = HashMap::new();
+        for id in self.vars.ids() {
+            m.insert(id, self.vars.ty(id)?);
+        }
+        Ok(m)
+    }
+
+    /// Execute one training step under the current phase. Returns the
+    /// materialized loss, if fetched this step.
+    pub fn run_step(&mut self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
+        let out = self.run_step_inner(prog, step);
+        if out.is_ok() {
+            self.next_step = step + 1;
+        }
+        out
+    }
+
+    fn run_step_inner(&mut self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
+        // AutoGraph baseline: the converted graph baked any captured host
+        // state; mutation after conversion makes it stale (Fig. 1c) and is
+        // reported as the Table-1 failure.
+        if self.mode == ExecMode::AutoGraph {
+            self.baked.validate(&self.sess.snapshot_host_states())?;
+        }
+        let out = self.dispatch_step(prog, step);
+        if out.is_ok() && self.mode == ExecMode::AutoGraph {
+            self.baked.validate(&self.sess.snapshot_host_states())?;
+        }
+        out
+    }
+
+    fn dispatch_step(&mut self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
+        match self.phase {
+            Phase::Eager => {
+                let t0 = Instant::now();
+                let loss = self.exec_step(prog, step)?;
+                self.breakdown.add_py_exec(t0.elapsed());
+                self.breakdown.add_step();
+                Ok(loss)
+            }
+            Phase::Tracing => self.trace_step(prog, step),
+            Phase::CoExec => {
+                let host_snapshot = self.sess.snapshot_host_states();
+                let t0 = Instant::now();
+                match self.exec_step(prog, step) {
+                    Ok(loss) => {
+                        self.breakdown.add_py_exec(t0.elapsed());
+                        self.breakdown.add_step();
+                        // Surface asynchronous GraphRunner failures.
+                        if let Some(err) = self.runner.as_ref().and_then(|r| r.take_error()) {
+                            return Err(err);
+                        }
+                        Ok(loss)
+                    }
+                    Err(TerraError::Diverged(why)) => {
+                        log::debug!("step {step}: divergence ({why}); falling back to tracing");
+                        self.sess.clear_tape();
+                        self.fallback(step)?;
+                        self.sess.restore_host_states(host_snapshot);
+                        self.stats.fallbacks += 1;
+                        // Replay the whole step imperatively while tracing.
+                        self.trace_step(prog, step)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    /// One imperative iteration with trace recording + merge; transitions to
+    /// co-execution when the latest trace is fully covered (paper §4.1).
+    fn trace_step(&mut self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
+        let t0 = Instant::now();
+        let loss = self.exec_step(prog, step)?;
+        self.breakdown.add_py_exec(t0.elapsed());
+        self.breakdown.add_step();
+        let trace = self
+            .sess
+            .take_trace()
+            .ok_or_else(|| TerraError::CoExec("tracing backend produced no trace".into()))?;
+        self.stats.traces_collected += 1;
+        let report = self.graph.merge(&trace)?;
+        if !report.changed {
+            self.enter_coexec(step + 1)?;
+        }
+        Ok(loss)
+    }
+
+    /// Generate + compile the plan, spawn the GraphRunner, swap in the
+    /// skeleton backend.
+    fn enter_coexec(&mut self, next_iter: u64) -> Result<()> {
+        let opts = GenOptions { fusion: self.fusion };
+        let spec = generate_plan(&self.graph, &self.var_types()?, &opts)?;
+        log::debug!("entering co-execution: {}", spec.summary());
+        let graph = Arc::new(self.graph.clone());
+        let plan = compile_plan(&self.client, &self.seg_cache, &self.artifacts, graph.clone(), spec)?;
+        self.stats.segments_compiled += plan.compiled_fresh as u64;
+        self.stats.plans_generated += 1;
+        let lazy = self.mode == ExecMode::TerraLazy;
+        let channels = CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone());
+        let runner = GraphRunner::spawn(
+            Arc::new(plan),
+            self.client.clone(),
+            self.artifacts.clone(),
+            self.vars.clone(),
+            channels.clone(),
+            next_iter,
+        );
+        self.runner = Some(runner);
+        self.runner_start_iter = next_iter;
+        self.channels = Some(channels.clone());
+        let skeleton = SkeletonBackend::new(graph, channels, self.vars.clone());
+        self.sess.swap_backend(Box::new(skeleton));
+        self.phase = Phase::CoExec;
+        self.stats.enter_coexec += 1;
+        Ok(())
+    }
+
+    /// Divergence fallback: cancel the GraphRunner from `iter` onward, join
+    /// it (it finishes committed earlier iterations first), and swap back to
+    /// the tracing backend.
+    fn fallback(&mut self, iter: u64) -> Result<()> {
+        if let Some(ch) = self.channels.take() {
+            ch.cancel_from(iter);
+        }
+        if let Some(r) = self.runner.take() {
+            match r.join() {
+                Ok(()) | Err(TerraError::Cancelled) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let eager = EagerBackend::new(self.exec.clone(), self.vars.clone());
+        let tracing = TracingBackend::new(eager);
+        let backend: Box<dyn Backend> = if self.mode == ExecMode::AutoGraph {
+            // AutoGraph has no imperative fallback; a new trace triggers
+            // re-conversion (tf.function retracing), subject to the same
+            // conversion restrictions.
+            Box::new(crate::baselines::ConvertBackend::new(tracing, self.baked.clone()))
+        } else {
+            Box::new(tracing)
+        };
+        self.sess.swap_backend(backend);
+        self.phase = Phase::Tracing;
+        Ok(())
+    }
+
+    /// Graceful shutdown of an active co-execution phase (end of run): wait
+    /// for the GraphRunner to drain and commit every validated iteration,
+    /// then cancel the (never-started) next one.
+    pub fn shutdown(&mut self) -> Result<()> {
+        if let (Some(ch), Some(r)) = (self.channels.take(), self.runner.take()) {
+            let expected = self.next_step.saturating_sub(self.runner_start_iter);
+            let deadline = Instant::now() + std::time::Duration::from_secs(60);
+            while r.iterations_done.load(std::sync::atomic::Ordering::Relaxed) < expected {
+                if let Some(e) = r.take_error() {
+                    ch.cancel_from(0);
+                    let _ = r.join();
+                    return Err(e);
+                }
+                if Instant::now() > deadline {
+                    ch.cancel_from(0);
+                    let _ = r.join();
+                    return Err(TerraError::CoExec(
+                        "GraphRunner failed to drain validated iterations".into(),
+                    ));
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            ch.cancel_from(self.next_step);
+            match r.join() {
+                Ok(()) | Err(TerraError::Cancelled) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.channels = None;
+        Ok(())
+    }
+
+    /// Run `steps` iterations, measuring throughput after `warmup` steps.
+    /// Losses are sampled from whatever the program fetches.
+    pub fn run(
+        &mut self,
+        prog: &mut dyn Program,
+        steps: u64,
+        warmup: u64,
+    ) -> Result<RunReport> {
+        self.setup(prog)?;
+        let mut tp = Throughput::new();
+        let mut losses = Vec::new();
+        let mut warm_snapshot = self.breakdown.snapshot();
+        for step in 0..steps {
+            if step == warmup {
+                tp.start_window();
+                warm_snapshot = self.breakdown.snapshot();
+            }
+            let loss = self.run_step(prog, step)?;
+            if step >= warmup {
+                tp.record_step();
+            }
+            if let Some(l) = loss {
+                losses.push((step, l));
+            }
+        }
+        // Drain the GraphRunner before reading final state.
+        self.shutdown()?;
+        let end_snapshot = self.breakdown.snapshot();
+        Ok(RunReport {
+            program: prog.name().to_string(),
+            mode: self.mode,
+            steps,
+            measured_steps: tp.steps(),
+            steps_per_sec: tp.steps_per_sec(),
+            losses,
+            stats: self.stats,
+            breakdown_per_step: end_snapshot.per_step_since(&warm_snapshot),
+        })
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}

@@ -1,0 +1,277 @@
+//! The GraphRunner: executes the compiled symbolic plan on its own thread.
+//!
+//! Per iteration it walks the plan's steps: launching fused segments (with
+//! device-resident values), waiting on Case Selects at Switch steps, taking
+//! feeds, publishing fetches, staging variable updates, and committing them
+//! only after the PythonRunner's end-of-iteration validation (commit
+//! barrier). Cancellation (divergence fallback) unwinds the thread cleanly
+//! without committing the cancelled iteration.
+
+use crate::api::VarStore;
+use crate::error::{Result, TerraError};
+use crate::metrics::{Breakdown, Bucket, ScopeTimer};
+use crate::runner::channels::{CoExecChannels, ITER_TOKEN};
+use crate::runtime::{ArtifactStore, Client, RtValue};
+use crate::symbolic::{Binding, CompiledPlan, Step};
+use crate::trace::VarId;
+use crate::tracegraph::{NodeId, TraceGraph};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+pub struct GraphRunner {
+    handle: Option<JoinHandle<()>>,
+    error: Arc<Mutex<Option<TerraError>>>,
+    pub iterations_done: Arc<std::sync::atomic::AtomicU64>,
+}
+
+struct IterState {
+    store: HashMap<(NodeId, usize), RtValue>,
+    executed: HashSet<NodeId>,
+    staged: HashMap<VarId, RtValue>,
+    /// Variant selects received so far (cached per iteration).
+    variant_sel: HashMap<NodeId, usize>,
+}
+
+impl GraphRunner {
+    /// Spawn the runner thread, executing iterations `start_iter..` until
+    /// cancelled or an error occurs.
+    pub fn spawn(
+        plan: Arc<CompiledPlan>,
+        client: Client,
+        artifacts: Arc<ArtifactStore>,
+        vars: Arc<VarStore>,
+        channels: Arc<CoExecChannels>,
+        start_iter: u64,
+    ) -> GraphRunner {
+        let error: Arc<Mutex<Option<TerraError>>> = Arc::new(Mutex::new(None));
+        let error2 = error.clone();
+        let iterations_done = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let done2 = iterations_done.clone();
+        let handle = std::thread::Builder::new()
+            .name("terra-graph-runner".into())
+            .spawn(move || {
+                let breakdown = channels.breakdown.clone();
+                let mut iter = start_iter;
+                loop {
+                    match run_iteration(&plan, &client, &artifacts, &vars, &channels, &breakdown, iter)
+                    {
+                        Ok(()) => {
+                            done2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            iter += 1;
+                        }
+                        Err(TerraError::Cancelled) => return,
+                        Err(e) => {
+                            *error2.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawn graph runner");
+        GraphRunner { handle: Some(handle), error, iterations_done }
+    }
+
+    /// Wait for the thread to exit (after cancellation) and surface any error.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        match self.error.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Check for an asynchronous runner error without joining.
+    pub fn take_error(&self) -> Option<TerraError> {
+        self.error.lock().unwrap().take()
+    }
+}
+
+fn run_iteration(
+    plan: &CompiledPlan,
+    client: &Client,
+    artifacts: &ArtifactStore,
+    vars: &VarStore,
+    channels: &CoExecChannels,
+    breakdown: &Breakdown,
+    iter: u64,
+) -> Result<()> {
+    {
+        let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+        channels.allowance.acquire(iter)?;
+        if let Some(g) = &channels.lazy_gate {
+            g.wait_allowed(iter)?;
+        }
+    }
+    let mut st = IterState {
+        store: HashMap::new(),
+        executed: HashSet::new(),
+        staged: HashMap::new(),
+        variant_sel: HashMap::new(),
+    };
+    run_steps(&plan.steps, plan, client, artifacts, vars, channels, breakdown, iter, &mut st)?;
+    // Commit barrier: only commit after the PythonRunner validated the trace.
+    {
+        let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+        channels.commits.take(iter, ITER_TOKEN)?;
+    }
+    for (var, v) in st.staged.drain() {
+        vars.set(var, v)?;
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_steps(
+    steps: &[Step],
+    plan: &CompiledPlan,
+    client: &Client,
+    artifacts: &ArtifactStore,
+    vars: &VarStore,
+    channels: &CoExecChannels,
+    breakdown: &Breakdown,
+    iter: u64,
+    st: &mut IterState,
+) -> Result<()> {
+    for step in steps {
+        match step {
+            Step::Seg(id) => {
+                let seg = &plan.segments[id.0];
+                if seg.spec.nodes.is_empty() {
+                    continue; // pruned shell
+                }
+                let mut args = Vec::with_capacity(seg.spec.params.len());
+                for b in &seg.spec.params {
+                    args.push(resolve(b, &plan.graph, vars, channels, breakdown, iter, st)?);
+                }
+                let outs = {
+                    let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
+                    seg.exe.run(client, &args)?
+                };
+                for ((n, slot), v) in seg.spec.outputs.iter().zip(outs) {
+                    st.store.insert((*n, *slot), v);
+                }
+                st.executed.extend(seg.spec.nodes.iter().copied());
+            }
+            Step::Artifact { node, name, params } => {
+                let exe = artifacts.executable(client, name)?;
+                let mut args = Vec::with_capacity(params.len());
+                for b in params {
+                    args.push(resolve(b, &plan.graph, vars, channels, breakdown, iter, st)?);
+                }
+                let outs = {
+                    let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
+                    exe.run(client, &args)?
+                };
+                for (slot, v) in outs.into_iter().enumerate() {
+                    st.store.insert((*node, slot), v);
+                }
+                st.executed.insert(*node);
+            }
+            Step::Feed { node } => {
+                let v = {
+                    let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+                    channels.feeds.take(iter, *node)?
+                };
+                st.store.insert((*node, 0), RtValue::Host(v));
+                st.executed.insert(*node);
+            }
+            Step::Fetch { node, src } => {
+                let v = resolve(src, &plan.graph, vars, channels, breakdown, iter, st)?;
+                let host = {
+                    let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
+                    v.to_host()?
+                };
+                channels.fetches.put(iter, *node, host);
+                st.executed.insert(*node);
+            }
+            Step::Assign { var, src } => {
+                let v = resolve(src, &plan.graph, vars, channels, breakdown, iter, st)?;
+                st.staged.insert(*var, v);
+            }
+            Step::Switch { node, cases } => {
+                let case = {
+                    let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+                    channels.cases.take(iter, *node)?
+                };
+                let body = cases.get(case).ok_or_else(|| {
+                    TerraError::CoExec(format!(
+                        "case select {case} out of range ({} cases) at node {node:?}",
+                        cases.len()
+                    ))
+                })?;
+                run_steps(body, plan, client, artifacts, vars, channels, breakdown, iter, st)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a binding against the iteration's value store / variables / graph
+/// constants. `Dynamic` bindings consult the PythonRunner's variant select
+/// for the consuming node (blocking until it arrives).
+fn resolve(
+    b: &Binding,
+    graph: &TraceGraph,
+    vars: &VarStore,
+    channels: &CoExecChannels,
+    breakdown: &Breakdown,
+    iter: u64,
+    st: &mut IterState,
+) -> Result<RtValue> {
+    let var_value = |v: &VarId, st: &IterState| match st.staged.get(v) {
+        Some(val) => Ok(val.clone()),
+        None => vars.get(*v),
+    };
+    match b {
+        Binding::Var(v) => var_value(v, st),
+        Binding::Const(n) => {
+            let val = graph
+                .node(*n)
+                .const_value
+                .as_ref()
+                .ok_or_else(|| TerraError::CoExec(format!("const node {n:?} has no value")))?;
+            Ok(RtValue::Host(val.clone()))
+        }
+        Binding::Slot { node, slot } => {
+            st.store.get(&(*node, *slot)).cloned().ok_or_else(|| {
+                TerraError::CoExec(format!("value {node:?}:{slot} missing from store"))
+            })
+        }
+        Binding::Dynamic { consumer, pos } => {
+            let idx = match st.variant_sel.get(consumer) {
+                Some(&i) => i,
+                None => {
+                    let i = {
+                        let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+                        channels.variants.take(iter, *consumer)?
+                    };
+                    st.variant_sel.insert(*consumer, i);
+                    i
+                }
+            };
+            let node = graph.node(*consumer);
+            let src = node
+                .variants
+                .get(idx)
+                .and_then(|v| v.get(*pos))
+                .ok_or_else(|| {
+                    TerraError::CoExec(format!(
+                        "variant select {idx} out of range for node {consumer:?}"
+                    ))
+                })?;
+            match src {
+                crate::tracegraph::GraphSrc::Var(v) => var_value(v, st),
+                crate::tracegraph::GraphSrc::Node { node: n, slot } => {
+                    st.store.get(&(*n, *slot)).cloned().ok_or_else(|| {
+                        TerraError::CoExec(format!(
+                            "variant value {n:?}:{slot} missing from store"
+                        ))
+                    })
+                }
+            }
+        }
+    }
+}

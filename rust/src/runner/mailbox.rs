@@ -1,0 +1,228 @@
+//! Blocking rendezvous primitives for runner communication.
+//!
+//! A `Mailbox` carries single-use values keyed by `(iteration, node)` — the
+//! runtime realization of the paper's Input-Feeding / Output-Fetching / Case
+//! Select operations. Producers never block; consumers block until the value
+//! arrives or the channel set is cancelled from some iteration onward (the
+//! GraphRunner cancellation of §4.1's fallback).
+
+use crate::error::TerraError;
+use crate::tracegraph::NodeId;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+type Key = (u64, NodeId);
+
+pub struct Mailbox<V> {
+    inner: Mutex<State<V>>,
+    cv: Condvar,
+}
+
+struct State<V> {
+    map: HashMap<Key, V>,
+    /// All takes for iterations >= this value fail with `Cancelled`.
+    cancel_from: u64,
+}
+
+impl<V> Default for Mailbox<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> Mailbox<V> {
+    pub fn new() -> Self {
+        Mailbox {
+            inner: Mutex::new(State { map: HashMap::new(), cancel_from: u64::MAX }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn put(&self, iter: u64, node: NodeId, v: V) {
+        let mut st = self.inner.lock().unwrap();
+        st.map.insert((iter, node), v);
+        self.cv.notify_all();
+    }
+
+    /// Blocking take. Fails with `Cancelled` if the mailbox is cancelled for
+    /// this iteration.
+    pub fn take(&self, iter: u64, node: NodeId) -> Result<V, TerraError> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if iter >= st.cancel_from {
+                return Err(TerraError::Cancelled);
+            }
+            if let Some(v) = st.map.remove(&(iter, node)) {
+                return Ok(v);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking probe (used in tests and diagnostics).
+    pub fn try_take(&self, iter: u64, node: NodeId) -> Option<V> {
+        self.inner.lock().unwrap().map.remove(&(iter, node))
+    }
+
+    /// Cancel all pending and future takes for iterations >= `from`.
+    pub fn cancel_from(&self, from: u64) {
+        let mut st = self.inner.lock().unwrap();
+        st.cancel_from = st.cancel_from.min(from);
+        self.cv.notify_all();
+    }
+
+    /// Lift a previous cancellation (used when co-execution restarts).
+    pub fn reset_cancel(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.cancel_from = u64::MAX;
+        st.map.clear();
+        self.cv.notify_all();
+    }
+}
+
+/// Counting semaphore bounding how far the PythonRunner may run ahead of the
+/// GraphRunner (backpressure on feed queues).
+pub struct Semaphore {
+    count: Mutex<(i64, u64)>, // (permits, cancel_from)
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(initial: i64) -> Self {
+        Semaphore { count: Mutex::new((initial, u64::MAX)), cv: Condvar::new() }
+    }
+
+    pub fn release(&self) {
+        let mut c = self.count.lock().unwrap();
+        c.0 += 1;
+        self.cv.notify_all();
+    }
+
+    pub fn acquire(&self, iter: u64) -> Result<(), TerraError> {
+        let mut c = self.count.lock().unwrap();
+        loop {
+            if iter >= c.1 {
+                return Err(TerraError::Cancelled);
+            }
+            if c.0 > 0 {
+                c.0 -= 1;
+                return Ok(());
+            }
+            c = self.cv.wait(c).unwrap();
+        }
+    }
+
+    pub fn cancel_from(&self, from: u64) {
+        let mut c = self.count.lock().unwrap();
+        c.1 = c.1.min(from);
+        self.cv.notify_all();
+    }
+}
+
+/// Lazy-evaluation gate (Table 2): the GraphRunner may only execute iteration
+/// `i` once the PythonRunner has *demanded* it (first fetch, or end of the
+/// iteration) — LazyTensor's alternation.
+pub struct Gate {
+    allowed: Mutex<(u64, u64)>, // (max allowed iteration + 1, cancel_from)
+    cv: Condvar,
+}
+
+impl Default for Gate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gate {
+    pub fn new() -> Self {
+        Gate { allowed: Mutex::new((0, u64::MAX)), cv: Condvar::new() }
+    }
+
+    /// Allow execution of iterations <= `iter`.
+    pub fn allow(&self, iter: u64) {
+        let mut a = self.allowed.lock().unwrap();
+        a.0 = a.0.max(iter + 1);
+        self.cv.notify_all();
+    }
+
+    pub fn wait_allowed(&self, iter: u64) -> Result<(), TerraError> {
+        let mut a = self.allowed.lock().unwrap();
+        loop {
+            if iter >= a.1 {
+                return Err(TerraError::Cancelled);
+            }
+            if a.0 > iter {
+                return Ok(());
+            }
+            a = self.cv.wait(a).unwrap();
+        }
+    }
+
+    pub fn cancel_from(&self, from: u64) {
+        let mut a = self.allowed.lock().unwrap();
+        a.1 = a.1.min(from);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn mailbox_put_take() {
+        let mb = Mailbox::new();
+        mb.put(0, NodeId(3), 42);
+        assert_eq!(mb.take(0, NodeId(3)).unwrap(), 42);
+    }
+
+    #[test]
+    fn mailbox_blocks_until_put() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.take(1, NodeId(7)).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        mb.put(1, NodeId(7), "hello");
+        assert_eq!(h.join().unwrap(), "hello");
+    }
+
+    #[test]
+    fn mailbox_cancellation_wakes_takers() {
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.take(5, NodeId(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.cancel_from(5);
+        assert!(matches!(h.join().unwrap(), Err(TerraError::Cancelled)));
+        // Earlier iterations still work.
+        mb.put(4, NodeId(1), 9);
+        assert_eq!(mb.take(4, NodeId(1)).unwrap(), 9);
+    }
+
+    #[test]
+    fn semaphore_bounds_run_ahead() {
+        let s = Arc::new(Semaphore::new(1));
+        s.acquire(0).unwrap();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.acquire(1));
+        std::thread::sleep(Duration::from_millis(20));
+        s.release();
+        assert!(h.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn gate_orders_lazy_execution() {
+        let g = Arc::new(Gate::new());
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || g2.wait_allowed(0));
+        std::thread::sleep(Duration::from_millis(10));
+        g.allow(0);
+        assert!(h.join().unwrap().is_ok());
+        // Iteration 1 not yet allowed.
+        assert!(g.wait_allowed(0).is_ok());
+        g.cancel_from(1);
+        assert!(matches!(g.wait_allowed(1), Err(TerraError::Cancelled)));
+    }
+}

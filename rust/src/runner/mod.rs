@@ -1,0 +1,15 @@
+//! The co-execution engine: PythonRunner-side skeleton backend, the
+//! GraphRunner thread, their communication channels, and the phase machine
+//! (tracing ⇄ co-execution with divergence fallback) — paper §4.1.
+
+mod channels;
+mod coexec;
+mod graph_runner;
+mod mailbox;
+mod skeleton;
+
+pub use channels::CoExecChannels;
+pub use coexec::{Engine, EngineStats, RunReport};
+pub use graph_runner::GraphRunner;
+pub use mailbox::{Gate, Mailbox, Semaphore};
+pub use skeleton::SkeletonBackend;

@@ -1,0 +1,201 @@
+//! The skeleton-program backend (the PythonRunner of §4.1).
+//!
+//! In the co-execution phase the user program runs unmodified, but DL ops are
+//! *not* computed: each issued item advances a TraceGraph walker, producing
+//! empty tensors (types only). Host features all still run natively. The
+//! backend sends Case Selects at branch points, Input-Feeding values at feed
+//! nodes, blocks on Output-Fetching results at materializations, and posts
+//! the commit barrier after the iteration's trace validates end-to-end.
+//!
+//! Any mismatch surfaces as `TerraError::Diverged`, which the engine turns
+//! into the cancel-and-fall-back-to-tracing transition.
+
+use crate::api::{Backend, Issue, VarStore};
+use crate::error::{Result, TerraError};
+use crate::metrics::{Bucket, ScopeTimer};
+use crate::runner::channels::{CoExecChannels, ITER_TOKEN};
+use crate::tensor::{HostTensor, TensorType};
+use crate::tracegraph::{GraphSrc, NodeId, TraceGraph, Walker};
+use crate::trace::{FeedKind, ItemKey, Location, ValueId, ValueRef, VarId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub struct SkeletonBackend {
+    graph: Arc<TraceGraph>,
+    channels: Arc<CoExecChannels>,
+    vars: Arc<VarStore>,
+    walker: Option<Walker>,
+    iter: u64,
+    /// Which TraceGraph node/slot produced each live value id.
+    node_of_value: HashMap<ValueId, (NodeId, usize)>,
+}
+
+impl SkeletonBackend {
+    pub fn new(
+        graph: Arc<TraceGraph>,
+        channels: Arc<CoExecChannels>,
+        vars: Arc<VarStore>,
+    ) -> Self {
+        SkeletonBackend { graph, channels, vars, walker: None, iter: 0, node_of_value: HashMap::new() }
+    }
+
+    fn srcs_of(&self, inputs: &[ValueRef]) -> Result<Vec<GraphSrc>> {
+        inputs
+            .iter()
+            .map(|r| match r {
+                ValueRef::Var(v) => Ok(GraphSrc::Var(*v)),
+                ValueRef::Out(id) => self
+                    .node_of_value
+                    .get(id)
+                    .map(|(n, s)| GraphSrc::Node { node: *n, slot: *s })
+                    .ok_or_else(|| {
+                        TerraError::Diverged(format!(
+                            "value {id:?} not tracked in this iteration"
+                        ))
+                    }),
+            })
+            .collect()
+    }
+
+    fn walker(&mut self) -> Result<&mut Walker> {
+        self.walker
+            .as_mut()
+            .ok_or_else(|| TerraError::CoExec("skeleton backend used outside a step".into()))
+    }
+
+    /// Advance the walker and handle the resulting communication.
+    fn advance(
+        &mut self,
+        key: ItemKey,
+        srcs: &[GraphSrc],
+        value_for_feed: Option<&HostTensor>,
+    ) -> Result<crate::tracegraph::WalkEvent> {
+        let iter = self.iter;
+        let ev = self.walker()?.advance(&key, srcs)?;
+        if let Some((branch, case)) = ev.case {
+            self.channels.cases.put(iter, branch, case);
+        }
+        // Variant select: disambiguate reconvergent dataflow (see plan.rs).
+        if self.graph.node(ev.node).variants.len() > 1 {
+            self.channels.variants.put(iter, ev.node, ev.variant);
+        }
+        if ev.needs_value {
+            let v = value_for_feed.ok_or_else(|| {
+                TerraError::CoExec(format!("node {:?} needs a value but none provided", ev.node))
+            })?;
+            self.channels.feeds.put(iter, ev.node, v.clone());
+        }
+        Ok(ev)
+    }
+}
+
+impl Backend for SkeletonBackend {
+    fn name(&self) -> &'static str {
+        "skeleton"
+    }
+
+    fn begin_step(&mut self, step: u64) -> Result<()> {
+        self.iter = step;
+        self.walker = Some(Walker::new(self.graph.clone()));
+        self.node_of_value.clear();
+        // Let the GraphRunner start (or continue) this iteration.
+        self.channels.allowance.release();
+        Ok(())
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        let iter = self.iter;
+        let case = self.walker()?.finish()?;
+        if let Some((branch, idx)) = case {
+            self.channels.cases.put(iter, branch, idx);
+        }
+        // Commit barrier: trace fully validated.
+        self.channels.commits.put(iter, ITER_TOKEN, ());
+        if let Some(g) = &self.channels.lazy_gate {
+            g.allow(iter);
+        }
+        self.walker = None;
+        Ok(())
+    }
+
+    fn op(&mut self, issue: &Issue) -> Result<()> {
+        // Clone-free fast path (§Perf L3 iteration 1): match the op by
+        // reference instead of building an ItemKey.
+        let srcs = self.srcs_of(issue.inputs)?;
+        let iter = self.iter;
+        let ev = {
+            let w = self.walker()?;
+            w.advance_op(issue.def, &issue.loc, &srcs)?
+        };
+        if let Some((branch, case)) = ev.case {
+            self.channels.cases.put(iter, branch, case);
+        }
+        if self.graph.node(ev.node).variants.len() > 1 {
+            self.channels.variants.put(iter, ev.node, ev.variant);
+        }
+        for (slot, id) in issue.outputs.iter().enumerate() {
+            self.node_of_value.insert(*id, (ev.node, slot));
+        }
+        Ok(())
+    }
+
+    fn feed(
+        &mut self,
+        id: ValueId,
+        ty: &TensorType,
+        value: HostTensor,
+        loc: Location,
+        kind: FeedKind,
+    ) -> Result<()> {
+        let key = ItemKey::Feed { ty: ty.clone(), kind, loc };
+        // Feed nodes always carry their value to the GraphRunner
+        // (`needs_value` is set by the walker).
+        let ev = self.advance(key, &[], Some(&value))?;
+        self.node_of_value.insert(id, (ev.node, 0));
+        Ok(())
+    }
+
+    fn constant(&mut self, id: ValueId, value: HostTensor, loc: Location) -> Result<()> {
+        let key = ItemKey::Const {
+            ty: value.ty(),
+            loc,
+            value_hash: crate::trace::const_hash(&value),
+        };
+        let ev = self.advance(key, &[], Some(&value))?;
+        self.node_of_value.insert(id, (ev.node, 0));
+        Ok(())
+    }
+
+    fn assign(&mut self, var: VarId, src: ValueRef, loc: Location) -> Result<()> {
+        let key = ItemKey::Assign { var, loc };
+        let srcs = self.srcs_of(&[src])?;
+        self.advance(key, &srcs, None)?;
+        Ok(())
+    }
+
+    fn materialize(&mut self, src: ValueRef, loc: Location) -> Result<HostTensor> {
+        let key = ItemKey::Fetch { loc };
+        let srcs = self.srcs_of(&[src])?;
+        let ev = self.advance(key, &srcs, None)?;
+        debug_assert!(ev.is_fetch);
+        if let Some(g) = &self.channels.lazy_gate {
+            // LazyTensor semantics: demanding a value triggers execution of
+            // the accumulated graph for this iteration.
+            g.allow(self.iter);
+        }
+        let _t = ScopeTimer::new(&self.channels.breakdown, Bucket::PyStall);
+        self.channels.fetches.take(self.iter, ev.node)
+    }
+
+    fn create_var(&mut self, _var: VarId, _init: HostTensor) -> Result<()> {
+        Err(TerraError::CoExec(
+            "variables cannot be created during co-execution; create them in setup".into(),
+        ))
+    }
+
+    fn var_host(&mut self, var: VarId) -> Result<HostTensor> {
+        // Engine-side snapshot: committed value (synchronizes with the
+        // GraphRunner only through the commit barrier).
+        self.vars.host(var)
+    }
+}

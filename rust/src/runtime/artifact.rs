@@ -1,0 +1,176 @@
+//! AOT artifact store.
+//!
+//! `python/compile/aot.py` lowers each Pallas kernel / JAX block to HLO text
+//! and writes `artifacts/manifest.json` describing names, files and I/O types.
+//! At startup (or first use) the store compiles each artifact on the PJRT
+//! client; the request path then treats an artifact exactly like any other
+//! compiled executable. Python never runs at execution time.
+
+use crate::config::json::Json;
+use crate::error::{Result, TerraError};
+use crate::runtime::{Client, Executable};
+use crate::tensor::{DType, Shape, TensorType};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Parsed manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub in_types: Vec<TensorType>,
+    pub out_types: Vec<TensorType>,
+    /// Name of the paired backward artifact (for the gradient tape), if any.
+    /// Convention: inputs = fwd inputs ++ output cotangents; outputs = one
+    /// cotangent per fwd input.
+    pub vjp: Option<String>,
+    /// Declared non-differentiable (mask/RNG-like): the tape treats the call
+    /// as a stop-gradient instead of erroring.
+    pub nondiff: bool,
+}
+
+/// Parse `"f32[2,16,32]"` / `"i32[]"` into a `TensorType`.
+pub(crate) fn parse_type_sig(s: &str) -> Result<TensorType> {
+    let (dt, rest) = if let Some(r) = s.strip_prefix("f32") {
+        (DType::F32, r)
+    } else if let Some(r) = s.strip_prefix("i32") {
+        (DType::I32, r)
+    } else {
+        return Err(TerraError::Artifact(format!("bad type signature '{s}'")));
+    };
+    let rest = rest
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .ok_or_else(|| TerraError::Artifact(format!("bad type signature '{s}'")))?;
+    let dims: Vec<usize> = if rest.is_empty() {
+        vec![]
+    } else {
+        rest.split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| TerraError::Artifact(format!("bad dim in '{s}'")))
+            })
+            .collect::<Result<_>>()?
+    };
+    Ok(TensorType::new(dt, Shape(dims)))
+}
+
+pub struct ArtifactStore {
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    compiled: Mutex<HashMap<String, Executable>>,
+}
+
+impl ArtifactStore {
+    /// Load the manifest from `dir` (default: `$TERRA_ARTIFACTS` or
+    /// `artifacts/` relative to the working directory).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            TerraError::Artifact(format!(
+                "cannot read {manifest_path:?}: {e}. Run `make artifacts` first."
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        let mut metas = HashMap::new();
+        for entry in json.arr_field("artifacts")? {
+            let name = entry.str_field("name")?.to_string();
+            let file = dir.join(entry.str_field("file")?);
+            let parse_list = |key: &str| -> Result<Vec<TensorType>> {
+                entry
+                    .arr_field(key)?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .ok_or_else(|| TerraError::Artifact(format!("{key} entries must be strings")))
+                            .and_then(parse_type_sig)
+                    })
+                    .collect()
+            };
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file,
+                in_types: parse_list("in")?,
+                out_types: parse_list("out")?,
+                vjp: entry.get("vjp").and_then(Json::as_str).map(str::to_string),
+                nondiff: entry.get("nondiff").and_then(Json::as_bool).unwrap_or(false),
+            };
+            metas.insert(name, meta);
+        }
+        Ok(ArtifactStore { dir, metas, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| TerraError::Artifact(format!("unknown artifact '{name}'")))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
+    }
+
+    /// Compile (once) and return the artifact's executable.
+    pub fn executable(&self, client: &Client, name: &str) -> Result<Executable> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.meta(name)?.clone();
+        let exe = client.compile_hlo_text(&meta.file, meta.out_types.clone())?;
+        self.compiled
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_type_signatures() {
+        let t = parse_type_sig("f32[2,16,32]").unwrap();
+        assert_eq!(t, TensorType::f32(&[2, 16, 32]));
+        let t = parse_type_sig("i32[]").unwrap();
+        assert_eq!(t, TensorType::i32(&[]));
+        assert!(parse_type_sig("f64[2]").is_err());
+        assert!(parse_type_sig("f32(2)").is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("terra_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "k", "file": "k.hlo.txt", "in": ["f32[2,2]"], "out": ["f32[2,2]"]}]}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert!(store.contains("k"));
+        let m = store.meta("k").unwrap();
+        assert_eq!(m.in_types, vec![TensorType::f32(&[2, 2])]);
+        assert!(store.meta("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

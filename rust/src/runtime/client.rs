@@ -1,0 +1,326 @@
+//! Thread-safe PJRT client, executable and buffer wrappers.
+//!
+//! Safety: PJRT's C API is documented to be thread-safe for client, loaded
+//! executable and buffer objects (they are internally synchronized; the same
+//! guarantee jax relies on when dispatching from multiple Python threads).
+//! The `xla` crate just doesn't declare it, because its types hold raw
+//! pointers. We wrap them and assert `Send`/`Sync` where appropriate:
+//! * `Client`/`Executable`: shared freely (`Send + Sync`).
+//! * `DeviceBuffer`: moved between threads (`Send`), and only read
+//!   concurrently (`Sync` is sound for PJRT buffers; mutation never happens —
+//!   buffers are immutable once created).
+
+use crate::error::{Result, TerraError};
+use crate::tensor::{HostTensor, TensorType};
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct ClientInner(xla::PjRtClient);
+unsafe impl Send for ClientInner {}
+unsafe impl Sync for ClientInner {}
+
+/// Shared handle to the PJRT CPU device.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<ClientInner>,
+    compile_count: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Create a fresh client. Prefer [`Client::global`] so all subsystems
+    /// share one device allocator.
+    pub fn new() -> Result<Self> {
+        let c = xla::PjRtClient::cpu()?;
+        Ok(Client { inner: Arc::new(ClientInner(c)), compile_count: Arc::new(AtomicU64::new(0)) })
+    }
+
+    /// The process-wide client (initialized on first use).
+    pub fn global() -> &'static Client {
+        static GLOBAL: once_cell::sync::Lazy<Client> =
+            once_cell::sync::Lazy::new(|| Client::new().expect("PJRT CPU client init failed"));
+        &GLOBAL
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.0.platform_name()
+    }
+
+    /// Number of `compile` calls so far (tracing-phase overhead accounting).
+    pub fn compile_count(&self) -> u64 {
+        self.compile_count.load(Ordering::Relaxed)
+    }
+
+    pub fn compile(&self, computation: &xla::XlaComputation, out_types: Vec<TensorType>) -> Result<Executable> {
+        self.compile_count.fetch_add(1, Ordering::Relaxed);
+        let exe = self.inner.0.compile(computation)?;
+        Ok(Executable {
+            inner: Arc::new(ExecInner(exe)),
+            out_types: Arc::new(out_types),
+            tuple_rooted: false,
+        })
+    }
+
+    /// Load an HLO-text artifact and compile it. jax artifacts are lowered
+    /// with `return_tuple=True`, so their single result buffer is a tuple
+    /// that `Executable::run` decomposes.
+    pub fn compile_hlo_text(&self, path: &std::path::Path, out_types: Vec<TensorType>) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| TerraError::Artifact(format!("bad path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let mut exe = self.compile(&comp, out_types)?;
+        exe.tuple_rooted = true;
+        Ok(exe)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<DeviceBuffer> {
+        let buf = match t {
+            HostTensor::F32 { shape, data } => {
+                self.inner.0.buffer_from_host_buffer::<f32>(data, shape.dims(), None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                self.inner.0.buffer_from_host_buffer::<i32>(data, shape.dims(), None)?
+            }
+        };
+        Ok(DeviceBuffer { inner: Arc::new(BufInner(buf)), ty: t.ty() })
+    }
+}
+
+struct ExecInner(xla::PjRtLoadedExecutable);
+unsafe impl Send for ExecInner {}
+unsafe impl Sync for ExecInner {}
+
+/// A compiled computation, shareable across threads.
+#[derive(Clone)]
+pub struct Executable {
+    inner: Arc<ExecInner>,
+    /// Static types of the computation's outputs (leaves, in tuple order).
+    out_types: Arc<Vec<TensorType>>,
+    /// The root is a tuple even for a single logical output (jax artifacts
+    /// lowered with `return_tuple=True`).
+    tuple_rooted: bool,
+}
+
+struct BufInner(xla::PjRtBuffer);
+unsafe impl Send for BufInner {}
+unsafe impl Sync for BufInner {}
+
+/// A device-resident, immutable tensor buffer with its static type.
+#[derive(Clone)]
+pub struct DeviceBuffer {
+    inner: Arc<BufInner>,
+    ty: TensorType,
+}
+
+impl DeviceBuffer {
+    pub fn ty(&self) -> &TensorType {
+        &self.ty
+    }
+
+    /// Transfer to host (synchronous).
+    pub fn to_host(&self) -> Result<HostTensor> {
+        let lit = self.inner.0.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+}
+
+/// A runtime value: either host-resident or device-resident.
+#[derive(Clone)]
+pub enum RtValue {
+    Host(HostTensor),
+    Dev(DeviceBuffer),
+}
+
+impl RtValue {
+    pub fn ty(&self) -> TensorType {
+        match self {
+            RtValue::Host(t) => t.ty(),
+            RtValue::Dev(b) => b.ty.clone(),
+        }
+    }
+
+    pub fn to_host(&self) -> Result<HostTensor> {
+        match self {
+            RtValue::Host(t) => Ok(t.clone()),
+            RtValue::Dev(b) => b.to_host(),
+        }
+    }
+
+    pub fn to_device(&self, client: &Client) -> Result<DeviceBuffer> {
+        match self {
+            RtValue::Host(t) => client.upload(t),
+            RtValue::Dev(b) => Ok(b.clone()),
+        }
+    }
+}
+
+impl std::fmt::Debug for RtValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RtValue::Host(t) => write!(f, "Host({})", t.ty()),
+            RtValue::Dev(b) => write!(f, "Dev({})", b.ty),
+        }
+    }
+}
+
+impl Executable {
+    pub fn out_types(&self) -> &[TensorType] {
+        &self.out_types
+    }
+
+    /// Execute with device buffers, keeping outputs on device where PJRT
+    /// permits. Multi-output (tuple-rooted) computations may come back as a
+    /// single tuple buffer depending on the PJRT `untuple_result` behaviour;
+    /// we detect that case and decompose via a host literal.
+    pub fn run(&self, client: &Client, args: &[RtValue]) -> Result<Vec<RtValue>> {
+        let mut bufs: Vec<DeviceBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(a.to_device(client)?);
+        }
+        let raw: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| &b.inner.0).collect();
+        let mut outputs = self.inner.0.execute_b(&raw)?;
+        if outputs.is_empty() || outputs[0].is_empty() {
+            return Err(TerraError::runtime("executable produced no outputs"));
+        }
+        let replica = outputs.remove(0);
+        let n = self.out_types.len();
+        if self.tuple_rooted && replica.len() == 1 {
+            // jax artifact: one tuple buffer carrying all leaves.
+            let lit = replica[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != n {
+                return Err(TerraError::runtime(format!(
+                    "artifact expected {n} outputs, tuple has {}",
+                    parts.len()
+                )));
+            }
+            return parts
+                .iter()
+                .map(|l| Ok(RtValue::Host(HostTensor::from_literal(l)?)))
+                .collect();
+        }
+        if replica.len() == n {
+            // PJRT untupled the result: one buffer per leaf.
+            Ok(replica
+                .into_iter()
+                .zip(self.out_types.iter())
+                .map(|(b, ty)| RtValue::Dev(DeviceBuffer { inner: Arc::new(BufInner(b)), ty: ty.clone() }))
+                .collect())
+        } else if replica.len() == 1 && n > 1 {
+            // Tuple came back as a single buffer: decompose on host.
+            let lit = replica[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != n {
+                return Err(TerraError::runtime(format!(
+                    "expected {n} outputs, tuple has {}",
+                    parts.len()
+                )));
+            }
+            parts
+                .iter()
+                .map(|l| Ok(RtValue::Host(HostTensor::from_literal(l)?)))
+                .collect()
+        } else if replica.len() == 1 && n == 1 {
+            // Single output; may still be a 1-tuple (jax artifacts lowered
+            // with return_tuple=True). Decide from the buffer's shape.
+            let b = replica.into_iter().next().unwrap();
+            let on_dev = b.on_device_shape()?;
+            match on_dev {
+                xla::Shape::Tuple(_) => {
+                    let lit = b.to_literal_sync()?;
+                    let parts = lit.to_tuple()?;
+                    Ok(vec![RtValue::Host(HostTensor::from_literal(&parts[0])?)])
+                }
+                _ => Ok(vec![RtValue::Dev(DeviceBuffer {
+                    inner: Arc::new(BufInner(b)),
+                    ty: self.out_types[0].clone(),
+                })]),
+            }
+        } else {
+            Err(TerraError::runtime(format!(
+                "unexpected output arity: got {} buffers for {} declared outputs",
+                replica.len(),
+                n
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Shape};
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let client = Client::global();
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32 * 0.5).collect()).unwrap();
+        let buf = client.upload(&t).unwrap();
+        assert_eq!(buf.ty(), &t.ty());
+        let back = buf.to_host().unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn compile_and_run_single_output() {
+        let client = Client::global();
+        let b = xla::XlaBuilder::new("add1");
+        let p = b.parameter(0, DType::F32.element_type(), &[4], "x").unwrap();
+        let one = b.c0(1f32).unwrap();
+        let one = one.broadcast(&[4]).unwrap();
+        let sum = p.add_(&one).unwrap();
+        let comp = b.build(&sum).unwrap();
+        let exe = client
+            .compile(&comp, vec![TensorType::new(DType::F32, Shape::of(&[4]))])
+            .unwrap();
+        let x = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let out = exe.run(client, &[RtValue::Host(x)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].to_host().unwrap().as_f32().unwrap(),
+            &[2.0, 3.0, 4.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn compile_and_run_multi_output() {
+        let client = Client::global();
+        let b = xla::XlaBuilder::new("two");
+        let p = b.parameter(0, DType::F32.element_type(), &[2], "x").unwrap();
+        let d = p.add_(&p).unwrap();
+        let s = p.mul_(&p).unwrap();
+        let root = b.tuple(&[d, s]).unwrap();
+        let comp = b.build(&root).unwrap();
+        let exe = client
+            .compile(
+                &comp,
+                vec![
+                    TensorType::new(DType::F32, Shape::of(&[2])),
+                    TensorType::new(DType::F32, Shape::of(&[2])),
+                ],
+            )
+            .unwrap();
+        let x = HostTensor::f32(vec![2], vec![3.0, 4.0]).unwrap();
+        let out = exe.run(client, &[RtValue::Host(x)]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].to_host().unwrap().as_f32().unwrap(), &[6.0, 8.0]);
+        assert_eq!(out[1].to_host().unwrap().as_f32().unwrap(), &[9.0, 16.0]);
+    }
+
+    #[test]
+    fn buffers_chain_between_executions() {
+        let client = Client::global();
+        let b = xla::XlaBuilder::new("sq");
+        let p = b.parameter(0, DType::F32.element_type(), &[2], "x").unwrap();
+        let sq = p.mul_(&p).unwrap();
+        let comp = b.build(&sq).unwrap();
+        let exe = client
+            .compile(&comp, vec![TensorType::new(DType::F32, Shape::of(&[2]))])
+            .unwrap();
+        let x = HostTensor::f32(vec![2], vec![2.0, 3.0]).unwrap();
+        let y1 = exe.run(client, &[RtValue::Host(x)]).unwrap().remove(0);
+        let y2 = exe.run(client, &[y1]).unwrap().remove(0);
+        assert_eq!(y2.to_host().unwrap().as_f32().unwrap(), &[16.0, 81.0]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Executable cache keyed by op/segment signature.
+//!
+//! The eager executor compiles one tiny `XlaComputation` per distinct
+//! (op kind, attributes, input types) and reuses it forever — this is the
+//! analogue of TF-eager's per-op kernel cache, and its hit path is the
+//! imperative baseline's dispatch overhead that Terra's fused segments avoid.
+
+use crate::error::Result;
+use crate::ops::{lower_op, OpDef};
+use crate::runtime::{Client, Executable};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct ExecCache {
+    map: Mutex<HashMap<String, Executable>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ExecCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Process-wide cache: op/segment executables are immutable and shape-
+    /// keyed, so sharing across engines (and across a test binary's many
+    /// engines) avoids re-invoking XLA's LLVM backend for signatures it has
+    /// already compiled.
+    pub fn global() -> &'static std::sync::Arc<ExecCache> {
+        static GLOBAL: once_cell::sync::Lazy<std::sync::Arc<ExecCache>> =
+            once_cell::sync::Lazy::new(|| std::sync::Arc::new(ExecCache::new()));
+        &GLOBAL
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fetch (or compile and insert) the single-op executable for `def`.
+    pub fn get_or_compile_op(&self, client: &Client, def: &OpDef) -> Result<Executable> {
+        let key = def.cache_key();
+        if let Some(exe) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(exe.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let exe = compile_single_op(client, def)?;
+        self.map
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Fetch (or build-and-compile) an arbitrary computation under `key`.
+    pub fn get_or_compile_with(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<Executable>,
+    ) -> Result<Executable> {
+        if let Some(exe) = self.map.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(exe.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let exe = build()?;
+        self.map
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Build and compile a computation that evaluates exactly one op.
+fn compile_single_op(client: &Client, def: &OpDef) -> Result<Executable> {
+    let builder = xla::XlaBuilder::new(&format!("op_{}", def.kind.name()));
+    let mut params = Vec::with_capacity(def.in_types.len());
+    for (i, ty) in def.in_types.iter().enumerate() {
+        params.push(builder.parameter(
+            i as i64,
+            ty.dtype.element_type(),
+            &ty.shape.dims_i64(),
+            &format!("p{i}"),
+        )?);
+    }
+    let param_refs: Vec<&xla::XlaOp> = params.iter().collect();
+    let mut outs = lower_op(&builder, &def.kind, &param_refs, &def.in_types)?;
+    let out_types = def.out_types()?;
+    let comp = if outs.len() == 1 {
+        builder.build(&outs.pop().unwrap())?
+    } else {
+        let root = builder.tuple(&outs)?;
+        builder.build(&root)?
+    };
+    client.compile(&comp, out_types)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpKind;
+    use crate::runtime::RtValue;
+    use crate::tensor::{HostTensor, TensorType};
+
+    #[test]
+    fn cache_hit_after_first_compile() {
+        let client = Client::global();
+        let cache = ExecCache::new();
+        let def = OpDef::new(OpKind::Add, vec![TensorType::f32(&[2]), TensorType::f32(&[2])]);
+        let _ = cache.get_or_compile_op(client, &def).unwrap();
+        assert_eq!(cache.misses(), 1);
+        let _ = cache.get_or_compile_op(client, &def).unwrap();
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn single_op_executes_correctly() {
+        let client = Client::global();
+        let cache = ExecCache::new();
+        let def = OpDef::new(OpKind::Mul, vec![TensorType::f32(&[3]), TensorType::f32(&[3])]);
+        let exe = cache.get_or_compile_op(client, &def).unwrap();
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::f32(vec![3], vec![4.0, 5.0, 6.0]).unwrap();
+        let out = exe.run(client, &[RtValue::Host(a), RtValue::Host(b)]).unwrap();
+        assert_eq!(out[0].to_host().unwrap().as_f32().unwrap(), &[4.0, 10.0, 18.0]);
+    }
+
+    #[test]
+    fn broadcast_binary_op() {
+        let client = Client::global();
+        let cache = ExecCache::new();
+        let def = OpDef::new(
+            OpKind::Add,
+            vec![TensorType::f32(&[2, 3]), TensorType::f32(&[3])],
+        );
+        let exe = cache.get_or_compile_op(client, &def).unwrap();
+        let a = HostTensor::f32(vec![2, 3], vec![0.0; 6]).unwrap();
+        let b = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let out = exe.run(client, &[RtValue::Host(a), RtValue::Host(b)]).unwrap();
+        assert_eq!(
+            out[0].to_host().unwrap().as_f32().unwrap(),
+            &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0]
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime layer.
+//!
+//! Wraps the `xla` crate's PJRT CPU client with thread-safe handles so the
+//! PythonRunner and GraphRunner (separate OS threads) can share one device,
+//! compiled executables and device-resident buffers. Also hosts the AOT
+//! artifact store (HLO text emitted by `python/compile/aot.py`) and the
+//! per-op executable cache used by the eager executor.
+
+mod artifact;
+mod client;
+mod exec_cache;
+
+pub use artifact::{ArtifactMeta, ArtifactStore};
+pub use client::{Client, DeviceBuffer, Executable, RtValue};
+pub use exec_cache::ExecCache;

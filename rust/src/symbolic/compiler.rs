@@ -1,0 +1,268 @@
+//! Runtime compilation of plan segments into fused `XlaComputation`s.
+//!
+//! Compiled segments are cached by a structural key, so re-generating a plan
+//! after a fallback (or compiling the same layer stack twice) hits the cache
+//! instead of XLA. This is the analogue of TF's graph-executor compilation
+//! cache and is what keeps Terra's re-tracing overhead bounded (paper App. F).
+
+use crate::error::{Result, TerraError};
+use crate::ops::lower_op;
+use crate::runtime::{ArtifactStore, Client, ExecCache, Executable};
+use crate::symbolic::plan::{Binding, PlanSpec, SegmentSpec, Step};
+use crate::tensor::TensorType;
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TraceGraph};
+use crate::trace::ItemKey;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A compiled segment ready for execution.
+pub struct CompiledSegment {
+    pub spec: SegmentSpec,
+    pub exe: Executable,
+}
+
+/// A fully compiled plan: what the GraphRunner executes every iteration.
+pub struct CompiledPlan {
+    pub steps: Vec<Step>,
+    pub segments: Vec<CompiledSegment>,
+    pub graph: Arc<TraceGraph>,
+    /// Number of fresh segment compilations (vs cache hits) for this plan.
+    pub compiled_fresh: usize,
+}
+
+/// Which (node, slot) sources and variables each parameter covers.
+/// Dynamic params cover every observed alternative of their consumer's
+/// input position; the runtime picks the value, the compiled code just sees
+/// a parameter of the right type.
+struct ParamCoverage {
+    /// (producer node, slot) -> param index
+    slots: HashMap<(NodeId, usize), usize>,
+    /// variable -> param index
+    vars: HashMap<crate::trace::VarId, usize>,
+}
+
+fn param_coverage(graph: &TraceGraph, spec: &SegmentSpec) -> Result<ParamCoverage> {
+    let mut cov = ParamCoverage { slots: HashMap::new(), vars: HashMap::new() };
+    for (i, b) in spec.params.iter().enumerate() {
+        match b {
+            Binding::Slot { node, slot } => {
+                cov.slots.insert((*node, *slot), i);
+            }
+            Binding::Var(v) => {
+                cov.vars.insert(*v, i);
+            }
+            Binding::Dynamic { consumer, pos } => {
+                for v in &graph.node(*consumer).variants {
+                    match v[*pos] {
+                        GraphSrc::Node { node, slot } => {
+                            cov.slots.insert((node, slot), i);
+                        }
+                        GraphSrc::Var(var) => {
+                            cov.vars.insert(var, i);
+                        }
+                    }
+                }
+            }
+            Binding::Const(_) => {
+                return Err(TerraError::runtime("const binding cannot be a parameter"))
+            }
+        }
+    }
+    Ok(cov)
+}
+
+/// Structural cache key of a segment: op defs + internal wiring + param
+/// structure. Location-independent so identical layer stacks share compiled
+/// code.
+fn segment_key(graph: &TraceGraph, spec: &SegmentSpec) -> Result<String> {
+    let mut s = String::with_capacity(256);
+    let index_of: HashMap<NodeId, usize> =
+        spec.nodes.iter().enumerate().map(|(i, n)| (*n, i)).collect();
+    let cov = param_coverage(graph, spec)?;
+    for ty in &spec.param_types {
+        s.push_str(&ty.signature());
+        s.push(';');
+    }
+    s.push('|');
+    for &n in &spec.nodes {
+        let node = graph.node(n);
+        if let NodeKind::Item(ItemKey::Op { def, .. }) = &node.kind {
+            s.push_str(&def.cache_key());
+        }
+        // Wiring: where each input comes from (param index, internal node
+        // index, const hash, or var).
+        if let Some(v) = node.variants.first() {
+            for src in v {
+                match src {
+                    GraphSrc::Var(id) => match cov.vars.get(id) {
+                        Some(i) => s.push_str(&format!("P{i}")),
+                        None => s.push_str(&format!("V{}", id.0)),
+                    },
+                    GraphSrc::Node { node: p, slot } => match index_of.get(p) {
+                        Some(i) => s.push_str(&format!("N{i}.{slot}")),
+                        None => match cov.slots.get(&(*p, *slot)) {
+                            Some(i) => s.push_str(&format!("P{i}")),
+                            None => s.push_str(&format!("C{}", const_sig(graph, *p))),
+                        },
+                    },
+                }
+            }
+        }
+        s.push(';');
+    }
+    s.push('>');
+    for (n, slot) in &spec.outputs {
+        s.push_str(&format!("{}:{slot},", index_of.get(n).map(|i| *i as i64).unwrap_or(-1)));
+    }
+    Ok(s)
+}
+
+fn const_sig(graph: &TraceGraph, n: NodeId) -> String {
+    match &graph.node(n).kind {
+        NodeKind::Item(ItemKey::Const { value_hash, ty, .. }) => {
+            format!("{value_hash:x}:{}", ty.signature())
+        }
+        _ => "?".to_string(),
+    }
+}
+
+/// Compile one segment into a fused XlaComputation.
+fn compile_segment(
+    client: &Client,
+    cache: &ExecCache,
+    graph: &TraceGraph,
+    spec: &SegmentSpec,
+) -> Result<(Executable, bool)> {
+    let key = format!("seg|{}", segment_key(graph, spec)?);
+    let misses_before = cache.misses();
+    let exe = cache.get_or_compile_with(&key, || {
+        let builder = xla::XlaBuilder::new("segment");
+        // Parameters: register each under every (node, slot) / variable it
+        // covers, so body lowering finds them regardless of the variant.
+        let cov = param_coverage(graph, spec)?;
+        let mut built: HashMap<(NodeId, usize), xla::XlaOp> = HashMap::new();
+        let mut var_params: HashMap<crate::trace::VarId, xla::XlaOp> = HashMap::new();
+        let mut param_ops: Vec<xla::XlaOp> = Vec::with_capacity(spec.params.len());
+        for (i, ty) in spec.param_types.iter().enumerate() {
+            param_ops.push(builder.parameter(
+                i as i64,
+                ty.dtype.element_type(),
+                &ty.shape.dims_i64(),
+                &format!("p{i}"),
+            )?);
+        }
+        for (&(n, s), &i) in &cov.slots {
+            built.insert((n, s), param_ops[i].copy()?);
+        }
+        for (&v, &i) in &cov.vars {
+            var_params.insert(v, param_ops[i].copy()?);
+        }
+        // Body: lower each op node in order.
+        for &n in &spec.nodes {
+            let node = graph.node(n);
+            let NodeKind::Item(ItemKey::Op { def, .. }) = &node.kind else {
+                return Err(TerraError::runtime(format!(
+                    "segment contains non-op node {n:?}"
+                )));
+            };
+            let variant = node.variants.first().ok_or_else(|| {
+                TerraError::runtime(format!("node {n:?} has no dataflow variant"))
+            })?;
+            let mut inputs: Vec<xla::XlaOp> = Vec::with_capacity(variant.len());
+            for src in variant {
+                let op = match src {
+                    GraphSrc::Var(v) => var_params
+                        .get(v)
+                        .ok_or_else(|| {
+                            TerraError::runtime(format!("variable {v:?} not a segment param"))
+                        })?
+                        .copy()?,
+                    GraphSrc::Node { node: p, slot } => match built.get(&(*p, *slot)) {
+                        Some(op) => op.copy()?,
+                        None => {
+                            // Must be an embedded constant.
+                            let cnode = graph.node(*p);
+                            let value = cnode.const_value.as_ref().ok_or_else(|| {
+                                TerraError::runtime(format!(
+                                    "unbound segment input {p:?}:{slot}"
+                                ))
+                            })?;
+                            let lit = value.to_literal()?;
+                            let op = builder.constant_literal(&lit)?;
+                            built.insert((*p, *slot), op.copy()?);
+                            op
+                        }
+                    },
+                };
+                inputs.push(op);
+            }
+            let input_refs: Vec<&xla::XlaOp> = inputs.iter().collect();
+            let outs = lower_op(&builder, &def.kind, &input_refs, &def.in_types)?;
+            for (slot, op) in outs.into_iter().enumerate() {
+                built.insert((n, slot), op);
+            }
+        }
+        // Root tuple of exported outputs.
+        let out_types: Vec<TensorType> = spec
+            .outputs
+            .iter()
+            .map(|(n, slot)| graph.node(*n).out_types[*slot].clone())
+            .collect();
+        let mut roots: Vec<xla::XlaOp> = Vec::with_capacity(spec.outputs.len());
+        for (n, slot) in &spec.outputs {
+            roots.push(
+                built
+                    .get(&(*n, *slot))
+                    .ok_or_else(|| TerraError::runtime(format!("missing output {n:?}:{slot}")))?
+                    .copy()?,
+            );
+        }
+        let comp = if roots.len() == 1 {
+            builder.build(&roots[0])?
+        } else {
+            let root = builder.tuple(&roots)?;
+            builder.build(&root)?
+        };
+        client.compile(&comp, out_types)
+    })?;
+    Ok((exe, cache.misses() > misses_before))
+}
+
+/// Compile every segment of a plan. Artifact steps are validated against the
+/// artifact store (their executables are compiled lazily on first use).
+pub fn compile_plan(
+    client: &Client,
+    cache: &ExecCache,
+    artifacts: &ArtifactStore,
+    graph: Arc<TraceGraph>,
+    spec: PlanSpec,
+) -> Result<CompiledPlan> {
+    fn validate_artifacts(steps: &[Step], artifacts: &ArtifactStore) -> Result<()> {
+        for s in steps {
+            match s {
+                Step::Artifact { name, .. } => {
+                    artifacts.meta(name)?;
+                }
+                Step::Switch { cases, .. } => {
+                    for c in cases {
+                        validate_artifacts(c, artifacts)?;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+    validate_artifacts(&spec.steps, artifacts)?;
+
+    let mut segments = Vec::with_capacity(spec.segments.len());
+    let mut compiled_fresh = 0;
+    for seg in &spec.segments {
+        let (exe, fresh) = compile_segment(client, cache, &graph, seg)?;
+        if fresh {
+            compiled_fresh += 1;
+        }
+        segments.push(CompiledSegment { spec: seg.clone(), exe });
+    }
+    Ok(CompiledPlan { steps: spec.steps, segments, graph, compiled_fresh })
+}

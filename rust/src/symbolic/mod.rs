@@ -1,0 +1,22 @@
+//! The symbolic graph: plan IR + runtime compiler.
+//!
+//! The generated "symbolic graph" of the paper maps here to a **plan**: a
+//! structured program over *fused segments* (straight-line runs of DL ops
+//! compiled into single `XlaComputation`s at runtime via `XlaBuilder`) plus
+//! plan-level communication and control operations:
+//!
+//! * `Feed`   — the paper's *Input Feeding* operation,
+//! * `Fetch`  — the paper's *Output Fetching* operation,
+//! * `Switch` — the paper's *Switch-Case* (its conditional input arrives at
+//!   runtime from the PythonRunner — the *Case Select* operation is the
+//!   mailbox message itself),
+//! * `Assign` — staged variable update, committed at the iteration barrier.
+//!
+//! Fusion on/off (the ±XLA axis of Figure 5) is a segmentation parameter:
+//! whole segments per computation vs one op per computation.
+
+mod compiler;
+mod plan;
+
+pub use compiler::{compile_plan, CompiledPlan, CompiledSegment};
+pub use plan::{Binding, PlanSpec, SegId, SegmentSpec, Step};

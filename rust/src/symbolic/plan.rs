@@ -1,0 +1,109 @@
+//! Plan IR produced by the GraphGenerator.
+
+use crate::tensor::TensorType;
+use crate::tracegraph::NodeId;
+use crate::trace::VarId;
+
+/// Index of a segment within a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SegId(pub usize);
+
+/// How a runtime value is obtained.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Binding {
+    /// Output `slot` of a statically known producer node.
+    Slot { node: NodeId, slot: usize },
+    /// Input `pos` of `consumer`, whose producer depends on the path taken:
+    /// resolved through the PythonRunner's *variant select* message for
+    /// `consumer` (the dataflow counterpart of the paper's Case Select —
+    /// it names which observed dataflow variant this iteration follows).
+    Dynamic { consumer: NodeId, pos: usize },
+    /// Current value of a variable (staged value if assigned earlier in the
+    /// same iteration, committed value otherwise).
+    Var(VarId),
+    /// Non-generalized constant node: embedded into compiled segments at
+    /// compile time; resolved from the TraceGraph for plan-level uses.
+    Const(NodeId),
+}
+
+impl Binding {
+    pub fn slot(node: NodeId, slot: usize) -> Self {
+        Binding::Slot { node, slot }
+    }
+}
+
+/// One plan step, executed in order by the GraphRunner.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Execute a fused segment.
+    Seg(SegId),
+    /// Execute an AOT artifact op (its own pre-compiled executable).
+    Artifact { node: NodeId, name: String, params: Vec<Binding> },
+    /// Input Feeding: receive a host value from the PythonRunner into the
+    /// value store under `node`.
+    Feed { node: NodeId },
+    /// Output Fetching: materialize `src` and send it to the PythonRunner.
+    Fetch { node: NodeId, src: Binding },
+    /// Stage a variable update (committed at the iteration barrier).
+    Assign { var: VarId, src: Binding },
+    /// Switch-Case: wait for the PythonRunner's Case Select for `node`, then
+    /// execute the selected case's steps.
+    Switch { node: NodeId, cases: Vec<Vec<Step>> },
+}
+
+/// An uncompiled fused segment: a straight-line run of DL op nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentSpec {
+    pub id: SegId,
+    /// Op nodes in execution order.
+    pub nodes: Vec<NodeId>,
+    /// Parameter bindings (resolved by the GraphRunner before launch).
+    /// Parallel to `param_types`. `Binding::Const` never appears here.
+    pub params: Vec<Binding>,
+    pub param_types: Vec<TensorType>,
+    /// Values exported to the store after execution (tuple order).
+    pub outputs: Vec<(NodeId, usize)>,
+}
+
+/// The uncompiled plan.
+#[derive(Debug, Clone, Default)]
+pub struct PlanSpec {
+    pub steps: Vec<Step>,
+    pub segments: Vec<SegmentSpec>,
+}
+
+impl PlanSpec {
+    /// Count steps recursively (diagnostics).
+    pub fn count_steps(steps: &[Step]) -> (usize, usize, usize, usize, usize) {
+        // (segments, feeds, fetches, assigns, switches)
+        let mut c = (0, 0, 0, 0, 0);
+        fn rec(steps: &[Step], c: &mut (usize, usize, usize, usize, usize)) {
+            for s in steps {
+                match s {
+                    Step::Seg(_) | Step::Artifact { .. } => c.0 += 1,
+                    Step::Feed { .. } => c.1 += 1,
+                    Step::Fetch { .. } => c.2 += 1,
+                    Step::Assign { .. } => c.3 += 1,
+                    Step::Switch { cases, .. } => {
+                        c.4 += 1;
+                        for case in cases {
+                            rec(case, c);
+                        }
+                    }
+                }
+            }
+        }
+        rec(steps, &mut c);
+        c
+    }
+
+    pub fn summary(&self) -> String {
+        let (segs, feeds, fetches, assigns, switches) = Self::count_steps(&self.steps);
+        format!(
+            "plan: {} segment-steps ({} compiled segments), {feeds} feeds, {fetches} fetches, \
+             {assigns} assigns, {switches} switches",
+            segs,
+            self.segments.len()
+        )
+    }
+}

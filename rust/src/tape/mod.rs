@@ -1,0 +1,322 @@
+//! Gradient tape (tf.GradientTape analogue).
+//!
+//! The tape records forward DL ops at the *API* level and emits the backward
+//! pass as ordinary session ops. That means gradients flow through whatever
+//! backend is installed — eagerly executed in imperative mode, recorded in
+//! tracing mode, validated in skeleton mode — so Terra's TraceGraph sees
+//! forward and backward as one trace, exactly like the paper's training
+//! steps.
+//!
+//! Determinism: entries are replayed in fixed reverse order and every emitted
+//! op is wrapped in a scope derived from the forward entry index, so a
+//! repeated forward path yields an identical backward op sequence (and
+//! therefore a stable TraceGraph).
+
+mod vjp;
+
+use crate::api::{Session, TapeEntry, Tensor, Variable};
+use crate::error::{Result, TerraError};
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{ValueId, ValueRef, VarId};
+use std::collections::HashMap;
+
+/// An active gradient tape.
+pub struct Tape {
+    sess: Session,
+}
+
+impl Tape {
+    /// Begin recording on `sess`.
+    pub fn start(sess: &Session) -> Result<Tape> {
+        sess.start_tape()?;
+        Ok(Tape { sess: sess.clone() })
+    }
+
+    /// Compute `d loss / d var` for each variable, consuming the tape.
+    /// Variables that do not influence `loss` get zero gradients.
+    pub fn gradient(self, loss: &Tensor, vars: &[&Variable]) -> Result<Vec<Tensor>> {
+        let (_, var_grads) = self.backward(loss)?;
+        let sess = self.sess.clone();
+        vars.iter()
+            .map(|v| match var_grads.get(&v.id()) {
+                Some(g) => Ok(g.clone()),
+                None => zeros_tensor(&sess, v.ty()),
+            })
+            .collect()
+    }
+
+    /// Compute gradients w.r.t. arbitrary forward tensors.
+    pub fn gradient_tensors(self, loss: &Tensor, targets: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let (grads, _) = self.backward(loss)?;
+        let sess = self.sess.clone();
+        targets
+            .iter()
+            .map(|t| match grads.get(&t.id()) {
+                Some(g) => Ok(g.clone()),
+                None => zeros_tensor(&sess, t.ty()),
+            })
+            .collect()
+    }
+
+    /// Run the reverse sweep; returns per-value and per-variable cotangents.
+    fn backward(
+        &self,
+        loss: &Tensor,
+    ) -> Result<(HashMap<ValueId, Tensor>, HashMap<VarId, Tensor>)> {
+        let sess = &self.sess;
+        let data = sess.take_tape()?;
+        let _outer = sess.scope("tape");
+
+        let mut grads: HashMap<ValueId, Tensor> = HashMap::new();
+        let mut var_grads: HashMap<VarId, Tensor> = HashMap::new();
+
+        // Seed: d loss / d loss = 1.
+        let seed = ones_tensor(sess, loss.ty())?;
+        grads.insert(loss.id(), seed);
+
+        for (idx, entry) in data.entries.iter().enumerate().rev() {
+            let out_grads: Vec<Option<Tensor>> =
+                entry.outputs.iter().map(|id| grads.get(id).cloned()).collect();
+            if out_grads.iter().all(Option::is_none) {
+                continue;
+            }
+            let _g = sess.scope(&format!("g{idx}"));
+            let in_grads = vjp::vjp(sess, entry, &out_grads)?;
+            debug_assert_eq!(in_grads.len(), entry.inputs.len());
+            for (i, g) in in_grads.into_iter().enumerate() {
+                let Some(g) = g else { continue };
+                match entry.inputs[i] {
+                    ValueRef::Out(id) => accumulate(sess, &mut grads, id, g)?,
+                    ValueRef::Var(v) => accumulate_var(sess, &mut var_grads, v, g)?,
+                }
+            }
+        }
+        Ok((grads, var_grads))
+    }
+}
+
+fn accumulate(
+    sess: &Session,
+    grads: &mut HashMap<ValueId, Tensor>,
+    id: ValueId,
+    g: Tensor,
+) -> Result<()> {
+    match grads.remove(&id) {
+        None => {
+            grads.insert(id, g);
+        }
+        Some(prev) => {
+            let _s = sess.scope("acc");
+            grads.insert(id, prev.add(&g)?);
+        }
+    }
+    Ok(())
+}
+
+fn accumulate_var(
+    sess: &Session,
+    grads: &mut HashMap<VarId, Tensor>,
+    var: VarId,
+    g: Tensor,
+) -> Result<()> {
+    match grads.remove(&var) {
+        None => {
+            grads.insert(var, g);
+        }
+        Some(prev) => {
+            let _s = sess.scope("vacc");
+            grads.insert(var, prev.add(&g)?);
+        }
+    }
+    Ok(())
+}
+
+fn ones_tensor(sess: &Session, ty: &TensorType) -> Result<Tensor> {
+    match ty.dtype {
+        crate::tensor::DType::F32 => sess.constant(HostTensor::filled_f32(ty.shape.clone(), 1.0)),
+        _ => Err(TerraError::DType("gradient seed must be f32".into())),
+    }
+}
+
+fn zeros_tensor(sess: &Session, ty: &TensorType) -> Result<Tensor> {
+    sess.constant(HostTensor::zeros(ty))
+}
+
+/// The entry's `i`-th input as a Tensor handle.
+pub(crate) fn input_tensor(sess: &Session, e: &TapeEntry, i: usize) -> Tensor {
+    sess.tensor_from_ref(e.inputs[i], e.def.in_types[i].clone())
+}
+
+/// The entry's `slot`-th output as a Tensor handle.
+pub(crate) fn output_tensor(sess: &Session, e: &TapeEntry, slot: usize) -> Tensor {
+    sess.tensor_from_ref(ValueRef::Out(e.outputs[slot]), e.out_types[slot].clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Backend, EagerBackend, VarStore};
+    use crate::eager::EagerExecutor;
+    use crate::runtime::{ArtifactStore, Client};
+    use std::sync::Arc;
+
+    fn test_session() -> Session {
+        let dir = std::env::temp_dir().join(format!("terra_tape_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let client = Client::global().clone();
+        let vars = Arc::new(VarStore::new(client.clone()));
+        let exec = Arc::new(EagerExecutor::new(client, store.clone()));
+        let backend: Box<dyn Backend> = Box::new(EagerBackend::new(exec, vars.clone()));
+        Session::new(backend, store, vars)
+    }
+
+    fn grad_check_scalar(
+        f: impl Fn(&Session, &Tensor) -> Result<Tensor>,
+        x0: f32,
+        expected: f32,
+    ) {
+        let sess = test_session();
+        let v = sess.variable("x", HostTensor::scalar_f32(x0), true).unwrap();
+        sess.begin_step(0).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let y = f(&sess, &v.read()).unwrap();
+        let grads = tape.gradient(&y, &[&v]).unwrap();
+        let g = grads[0].value().unwrap().scalar_value_f32().unwrap();
+        sess.end_step().unwrap();
+        assert!(
+            (g - expected).abs() < 1e-4 * expected.abs().max(1.0),
+            "grad {g} != expected {expected}"
+        );
+    }
+
+    #[test]
+    fn grad_of_square() {
+        grad_check_scalar(|_s, x| x.mul(x), 3.0, 6.0);
+    }
+
+    #[test]
+    fn grad_of_exp() {
+        grad_check_scalar(|_s, x| x.exp(), 1.2, 1.2f32.exp());
+    }
+
+    #[test]
+    fn grad_of_chain() {
+        // d/dx tanh(x^2) = (1 - tanh^2(x^2)) * 2x
+        let x0 = 0.7f32;
+        let t = (x0 * x0).tanh();
+        grad_check_scalar(|_s, x| x.mul(x)?.tanh(), x0, (1.0 - t * t) * 2.0 * x0);
+    }
+
+    #[test]
+    fn grad_accumulates_over_reuse() {
+        // y = x*x + x => dy/dx = 2x + 1
+        grad_check_scalar(|_s, x| x.mul(x)?.add(x), 2.0, 5.0);
+    }
+
+    #[test]
+    fn grad_matmul() {
+        let sess = test_session();
+        let w = sess
+            .variable("w", HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(), true)
+            .unwrap();
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::f32(vec![1, 2], vec![1.0, 1.0]).unwrap()).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let y = x.matmul(&w.read()).unwrap(); // [1,2]
+        let loss = y.reduce_sum(&[0, 1], false).unwrap();
+        let grads = tape.gradient(&loss, &[&w]).unwrap();
+        // d sum(x@W) / dW = x^T @ ones(1,2) = [[1,1],[1,1]]
+        assert_eq!(grads[0].value().unwrap().as_f32().unwrap(), &[1.0, 1.0, 1.0, 1.0]);
+        sess.end_step().unwrap();
+    }
+
+    #[test]
+    fn grad_softmax_cross_entropy() {
+        // loss = -log_softmax(z)[target]; dz = softmax(z) - onehot(target)
+        let sess = test_session();
+        let z0 = vec![0.5f32, -0.2, 1.0];
+        let v = sess.variable("z", HostTensor::f32(vec![1, 3], z0.clone()).unwrap(), true).unwrap();
+        sess.begin_step(0).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let z = v.read();
+        let lsm = z.log_softmax(1).unwrap();
+        let onehot = sess
+            .constant(HostTensor::f32(vec![1, 3], vec![0.0, 1.0, 0.0]).unwrap())
+            .unwrap();
+        let loss = lsm.mul(&onehot).unwrap().reduce_sum(&[0, 1], false).unwrap().neg().unwrap();
+        let grads = tape.gradient(&loss, &[&v]).unwrap();
+        let g = grads[0].value().unwrap();
+        let m: f32 = z0.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = z0.iter().map(|x| (x - m).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|e| e / sum).collect();
+        let expected = [probs[0], probs[1] - 1.0, probs[2]];
+        for (a, b) in g.as_f32().unwrap().iter().zip(expected.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        sess.end_step().unwrap();
+    }
+
+    #[test]
+    fn grad_relu_mask() {
+        let sess = test_session();
+        let v = sess
+            .variable("x", HostTensor::f32(vec![4], vec![-1.0, 2.0, -3.0, 4.0]).unwrap(), true)
+            .unwrap();
+        sess.begin_step(0).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let y = v.read().relu().unwrap().reduce_sum(&[0], false).unwrap();
+        let grads = tape.gradient(&y, &[&v]).unwrap();
+        assert_eq!(grads[0].value().unwrap().as_f32().unwrap(), &[0.0, 1.0, 0.0, 1.0]);
+        sess.end_step().unwrap();
+    }
+
+    #[test]
+    fn grad_broadcast_unbroadcasts() {
+        // y = sum(x + b) with x [2,3], b [3] => db = [2,2,2]
+        let sess = test_session();
+        let b = sess.variable("b", HostTensor::f32(vec![3], vec![0.0; 3]).unwrap(), true).unwrap();
+        sess.begin_step(0).unwrap();
+        let x = sess.feed(HostTensor::f32(vec![2, 3], vec![1.0; 6]).unwrap()).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let y = x.add(&b.read()).unwrap().reduce_sum(&[0, 1], false).unwrap();
+        let grads = tape.gradient(&y, &[&b]).unwrap();
+        assert_eq!(grads[0].value().unwrap().as_f32().unwrap(), &[2.0, 2.0, 2.0]);
+        sess.end_step().unwrap();
+    }
+
+    #[test]
+    fn grad_take_embedding() {
+        // W [3,2]; take rows [0, 0, 2]; loss = sum => dW rows: [2,2],[0,0],[1,1]
+        let sess = test_session();
+        let w = sess
+            .variable("emb", HostTensor::f32(vec![3, 2], vec![0.0; 6]).unwrap(), true)
+            .unwrap();
+        sess.begin_step(0).unwrap();
+        let idx = sess.feed(HostTensor::i32(vec![3], vec![0, 0, 2]).unwrap()).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let y = w.read().take(&idx, 0).unwrap().reduce_sum(&[0, 1], false).unwrap();
+        let grads = tape.gradient(&y, &[&w]).unwrap();
+        assert_eq!(
+            grads[0].value().unwrap().as_f32().unwrap(),
+            &[2.0, 2.0, 0.0, 0.0, 1.0, 1.0]
+        );
+        sess.end_step().unwrap();
+    }
+
+    #[test]
+    fn unused_variable_gets_zeros() {
+        let sess = test_session();
+        let used = sess.variable("u", HostTensor::scalar_f32(1.0), true).unwrap();
+        let unused = sess.variable("n", HostTensor::f32(vec![2], vec![0.0; 2]).unwrap(), true).unwrap();
+        sess.begin_step(0).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let y = used.read().mul_scalar(3.0).unwrap();
+        let grads = tape.gradient(&y, &[&used, &unused]).unwrap();
+        assert_eq!(grads[0].value().unwrap().scalar_value_f32().unwrap(), 3.0);
+        assert_eq!(grads[1].value().unwrap().as_f32().unwrap(), &[0.0, 0.0]);
+        sess.end_step().unwrap();
+    }
+}

@@ -1,0 +1,313 @@
+//! Vector-Jacobian products for each `OpKind`.
+//!
+//! Each rule maps an output cotangent to input cotangents, emitting ordinary
+//! session ops. Rules follow the standard definitions (jax/lax conventions);
+//! reductions over broadcast dimensions are handled by [`unbroadcast`].
+
+use crate::api::{Session, TapeEntry, Tensor};
+use crate::error::{Result, TerraError};
+use crate::ops::OpKind;
+use crate::tape::{input_tensor, output_tensor};
+use crate::tensor::{DType, Shape};
+
+/// Sum `g` down to `target` shape (reverse of numpy broadcasting).
+fn unbroadcast(g: &Tensor, target: &Shape) -> Result<Tensor> {
+    let gs = g.ty().shape.clone();
+    if &gs == target {
+        return Ok(g.clone());
+    }
+    let extra = gs.rank() - target.rank();
+    let mut axes: Vec<usize> = (0..extra).collect();
+    for (i, &d) in target.dims().iter().enumerate() {
+        if d == 1 && gs.dims()[i + extra] != 1 {
+            axes.push(i + extra);
+        }
+    }
+    let reduced = if axes.is_empty() { g.clone() } else { g.reduce_sum(&axes, false)? };
+    if reduced.ty().shape == *target {
+        Ok(reduced)
+    } else {
+        reduced.reshape(target.dims())
+    }
+}
+
+/// Transpose the last two axes (batched matrix transpose).
+fn mt(t: &Tensor) -> Result<Tensor> {
+    let r = t.ty().shape.rank();
+    let mut perm: Vec<usize> = (0..r).collect();
+    perm.swap(r - 2, r - 1);
+    t.transpose(&perm)
+}
+
+/// Compute input cotangents for `entry` given output cotangents.
+/// Returns one `Option<Tensor>` per input (None = no gradient flows).
+pub(crate) fn vjp(
+    sess: &Session,
+    e: &TapeEntry,
+    out_grads: &[Option<Tensor>],
+) -> Result<Vec<Option<Tensor>>> {
+    let g = out_grads.first().and_then(|o| o.clone());
+    let nin = e.inputs.len();
+    let none = |n: usize| -> Vec<Option<Tensor>> { vec![None; n] };
+    let kind = &e.def.kind;
+
+    // Ops with no gradient (integer outputs, RNG, index manipulation).
+    match kind {
+        OpKind::Greater
+        | OpKind::GreaterEqual
+        | OpKind::Less
+        | OpKind::LessEqual
+        | OpKind::Equal
+        | OpKind::NotEqual
+        | OpKind::Sign
+        | OpKind::OneHot { .. }
+        | OpKind::RngUniform { .. }
+        | OpKind::RngNormal { .. }
+        | OpKind::Convert { .. } => return Ok(none(nin)),
+        _ => {}
+    }
+
+    let Some(g) = g else { return Ok(none(nin)) };
+    let in_shape = |i: usize| e.def.in_types[i].shape.clone();
+
+    Ok(match kind {
+        OpKind::Add => vec![
+            Some(unbroadcast(&g, &in_shape(0))?),
+            Some(unbroadcast(&g, &in_shape(1))?),
+        ],
+        OpKind::Sub => vec![
+            Some(unbroadcast(&g, &in_shape(0))?),
+            Some(unbroadcast(&g.neg()?, &in_shape(1))?),
+        ],
+        OpKind::Mul => {
+            let a = input_tensor(sess, e, 0);
+            let b = input_tensor(sess, e, 1);
+            vec![
+                Some(unbroadcast(&g.mul(&b)?, &in_shape(0))?),
+                Some(unbroadcast(&g.mul(&a)?, &in_shape(1))?),
+            ]
+        }
+        OpKind::Div => {
+            let a = input_tensor(sess, e, 0);
+            let b = input_tensor(sess, e, 1);
+            let ga = g.div(&b)?;
+            let gb = g.mul(&a)?.neg()?.div(&b.mul(&b)?)?;
+            vec![
+                Some(unbroadcast(&ga, &in_shape(0))?),
+                Some(unbroadcast(&gb, &in_shape(1))?),
+            ]
+        }
+        OpKind::Maximum | OpKind::Minimum => {
+            let a = input_tensor(sess, e, 0);
+            let b = input_tensor(sess, e, 1);
+            let mask = if matches!(kind, OpKind::Maximum) {
+                a.greater_equal(&b)?.convert(DType::F32)?
+            } else {
+                a.less_equal(&b)?.convert(DType::F32)?
+            };
+            let one_minus = mask.neg()?.add_scalar(1.0)?;
+            vec![
+                Some(unbroadcast(&g.mul(&mask)?, &in_shape(0))?),
+                Some(unbroadcast(&g.mul(&one_minus)?, &in_shape(1))?),
+            ]
+        }
+        OpKind::Pow => {
+            let a = input_tensor(sess, e, 0);
+            let b = input_tensor(sess, e, 1);
+            let y = output_tensor(sess, e, 0);
+            let ga = g.mul(&b)?.mul(&a.pow(&b.sub_scalar(1.0)?)?)?;
+            let gb = g.mul(&a.log()?)?.mul(&y)?;
+            vec![
+                Some(unbroadcast(&ga, &in_shape(0))?),
+                Some(unbroadcast(&gb, &in_shape(1))?),
+            ]
+        }
+        OpKind::Neg => vec![Some(g.neg()?)],
+        OpKind::Exp => {
+            let y = output_tensor(sess, e, 0);
+            vec![Some(g.mul(&y)?)]
+        }
+        OpKind::Log => {
+            let x = input_tensor(sess, e, 0);
+            vec![Some(g.div(&x)?)]
+        }
+        OpKind::Sqrt => {
+            let y = output_tensor(sess, e, 0);
+            vec![Some(g.mul_scalar(0.5)?.div(&y)?)]
+        }
+        OpKind::Rsqrt => {
+            let y = output_tensor(sess, e, 0);
+            vec![Some(g.mul_scalar(-0.5)?.mul(&y.mul(&y)?.mul(&y)?)?)]
+        }
+        OpKind::Tanh => {
+            let y = output_tensor(sess, e, 0);
+            vec![Some(g.mul(&y.mul(&y)?.neg()?.add_scalar(1.0)?)?)]
+        }
+        OpKind::Sigmoid => {
+            let y = output_tensor(sess, e, 0);
+            vec![Some(g.mul(&y)?.mul(&y.neg()?.add_scalar(1.0)?)?)]
+        }
+        OpKind::Relu => {
+            let x = input_tensor(sess, e, 0);
+            let mask = x.greater_scalar(0.0)?.convert(DType::F32)?;
+            vec![Some(g.mul(&mask)?)]
+        }
+        OpKind::Abs => {
+            let x = input_tensor(sess, e, 0);
+            vec![Some(g.mul(&x.sign()?)?)]
+        }
+        OpKind::Select => {
+            let cond = input_tensor(sess, e, 0);
+            let mask = cond.convert(DType::F32)?;
+            let inv = mask.neg()?.add_scalar(1.0)?;
+            vec![
+                None,
+                Some(unbroadcast(&g.mul(&mask)?, &in_shape(1))?),
+                Some(unbroadcast(&g.mul(&inv)?, &in_shape(2))?),
+            ]
+        }
+        OpKind::MatMul => {
+            let a = input_tensor(sess, e, 0);
+            let b = input_tensor(sess, e, 1);
+            let ga = g.matmul(&mt(&b)?)?;
+            let gb = mt(&a)?.matmul(&g)?;
+            vec![
+                Some(unbroadcast(&ga, &in_shape(0))?),
+                Some(unbroadcast(&gb, &in_shape(1))?),
+            ]
+        }
+        OpKind::Transpose { perm } => {
+            let mut inv = vec![0usize; perm.len()];
+            for (i, &p) in perm.iter().enumerate() {
+                inv[p] = i;
+            }
+            vec![Some(g.transpose(&inv)?)]
+        }
+        OpKind::Reshape { .. } => vec![Some(g.reshape(in_shape(0).dims())?)],
+        OpKind::Broadcast { .. } => vec![Some(unbroadcast(&g, &in_shape(0))?)],
+        OpKind::Concat { axis } => {
+            let mut out = Vec::with_capacity(nin);
+            let mut offset = 0usize;
+            for i in 0..nin {
+                let sh = in_shape(i);
+                let mut starts = vec![0usize; sh.rank()];
+                starts[*axis] = offset;
+                out.push(Some(g.slice(&starts, sh.dims())?));
+                offset += sh.dims()[*axis];
+            }
+            out
+        }
+        OpKind::Slice { starts, sizes } => {
+            let sh = in_shape(0);
+            let low = starts.clone();
+            let high: Vec<usize> = sh
+                .dims()
+                .iter()
+                .zip(starts.iter().zip(sizes.iter()))
+                .map(|(&d, (&s, &z))| d - s - z)
+                .collect();
+            vec![Some(g.pad(&low, &high)?)]
+        }
+        OpKind::Pad { low, .. } => {
+            let sh = in_shape(0);
+            vec![Some(g.slice(low, sh.dims())?)]
+        }
+        OpKind::ReduceSum { axes, keep_dims } => {
+            let sh = in_shape(0);
+            let gk = if *keep_dims { g.clone() } else { g.reshape(keep_shape(&sh, axes).dims())? };
+            vec![Some(gk.broadcast_to(sh.dims())?)]
+        }
+        OpKind::ReduceMean { axes, keep_dims } => {
+            let sh = in_shape(0);
+            let count: usize = axes.iter().map(|&a| sh.dims()[a]).product();
+            let gk = if *keep_dims { g.clone() } else { g.reshape(keep_shape(&sh, axes).dims())? };
+            vec![Some(gk.broadcast_to(sh.dims())?.div_scalar(count as f32)?)]
+        }
+        OpKind::ReduceMax { axes, keep_dims } => {
+            let x = input_tensor(sess, e, 0);
+            let sh = in_shape(0);
+            let y = output_tensor(sess, e, 0);
+            let yk = if *keep_dims { y } else { y.reshape(keep_shape(&sh, axes).dims())? };
+            let mask = x.equal(&yk.broadcast_to(sh.dims())?)?.convert(DType::F32)?;
+            let gk = if *keep_dims { g.clone() } else { g.reshape(keep_shape(&sh, axes).dims())? };
+            vec![Some(gk.broadcast_to(sh.dims())?.mul(&mask)?)]
+        }
+        OpKind::Softmax { axis } => {
+            let y = output_tensor(sess, e, 0);
+            let dot = g.mul(&y)?.reduce_sum(&[*axis], true)?;
+            vec![Some(y.mul(&g.sub(&dot)?)?)]
+        }
+        OpKind::LogSoftmax { axis } => {
+            let y = output_tensor(sess, e, 0);
+            let sum_g = g.reduce_sum(&[*axis], true)?;
+            vec![Some(g.sub(&y.exp()?.mul(&sum_g)?)?)]
+        }
+        OpKind::Take { axis } => {
+            // Embedding-style gradient: supported for rank-2 data, axis 0.
+            let sh = in_shape(0);
+            if *axis != 0 || sh.rank() != 2 {
+                return Err(TerraError::runtime(
+                    "take gradient only supported for rank-2 data along axis 0",
+                ));
+            }
+            let (v, d) = (sh.dims()[0], sh.dims()[1]);
+            let idx = input_tensor(sess, e, 1);
+            let n = idx.ty().shape.num_elements();
+            let onehot = idx.reshape(&[n])?.one_hot(v)?; // [n, V]
+            let gm = g.reshape(&[n, d])?; // [n, D]
+            let gw = onehot.transpose(&[1, 0])?.matmul(&gm)?; // [V, D]
+            vec![Some(gw), None]
+        }
+        OpKind::ArtifactCall { name, .. } => {
+            let meta = sess.artifacts().meta(name)?;
+            if meta.nondiff {
+                return Ok(none(nin)); // declared stop-gradient (mask/RNG-like)
+            }
+            let Some(vjp_name) = meta.vjp.clone() else {
+                return Err(TerraError::Artifact(format!(
+                    "artifact '{name}' has no registered vjp; cannot differentiate"
+                )));
+            };
+            // Convention: bwd artifact takes (fwd inputs..., out cotangents...)
+            // and returns one cotangent per differentiable fwd input (zeros
+            // for integer inputs, which we drop to None).
+            let mut args: Vec<Tensor> = (0..nin).map(|i| input_tensor(sess, e, i)).collect();
+            for (slot, og) in out_grads.iter().enumerate() {
+                match og {
+                    Some(t) => args.push(t.clone()),
+                    None => {
+                        // Dense zero cotangent for unused outputs.
+                        let ty = &e.out_types[slot];
+                        args.push(sess.constant(crate::tensor::HostTensor::zeros(ty))?);
+                    }
+                }
+            }
+            let arg_refs: Vec<&Tensor> = args.iter().collect();
+            let outs = sess.artifact_call(&vjp_name, &arg_refs)?;
+            if outs.len() != nin {
+                return Err(TerraError::Artifact(format!(
+                    "vjp artifact '{vjp_name}' returned {} grads for {nin} inputs",
+                    outs.len()
+                )));
+            }
+            outs.into_iter()
+                .enumerate()
+                .map(|(i, t)| if e.def.in_types[i].dtype == DType::F32 { Some(t) } else { None })
+                .collect()
+        }
+        other => {
+            return Err(TerraError::runtime(format!(
+                "no vjp rule for op {other}"
+            )))
+        }
+    })
+}
+
+/// The input shape with reduced axes set to 1 (keep-dims form).
+fn keep_shape(sh: &Shape, axes: &[usize]) -> Shape {
+    let mut dims = sh.dims().to_vec();
+    for &a in axes {
+        dims[a] = 1;
+    }
+    Shape(dims)
+}

@@ -1,0 +1,72 @@
+//! Element types. Host-visible tensors are `F32` or `I32`; boolean masks are
+//! represented as `I32` 0/1 at the API boundary (comparison ops produce I32,
+//! `select` converts back internally), so every tensor round-trips through
+//! PJRT literals with a natively supported element type.
+
+use crate::error::{Result, TerraError};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn primitive_type(self) -> xla::PrimitiveType {
+        match self {
+            DType::F32 => xla::PrimitiveType::F32,
+            DType::I32 => xla::PrimitiveType::S32,
+        }
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn from_primitive(p: xla::PrimitiveType) -> Result<Self> {
+        match p {
+            xla::PrimitiveType::F32 => Ok(DType::F32),
+            xla::PrimitiveType::S32 => Ok(DType::I32),
+            other => Err(TerraError::DType(format!(
+                "unsupported element type {other:?} (only F32/S32 cross the host boundary)"
+            ))),
+        }
+    }
+
+    pub fn short_name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.short_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrip() {
+        for dt in [DType::F32, DType::I32] {
+            assert_eq!(DType::from_primitive(dt.primitive_type()).unwrap(), dt);
+        }
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(DType::from_primitive(xla::PrimitiveType::F64).is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! `HostTensor`: an owned, host-resident tensor value.
+//!
+//! This is the lingua franca of every host/device boundary in the system:
+//! eager executor inputs/outputs, feed/fetch communication between the two
+//! runners, variable snapshots at commit barriers, and test oracles.
+
+use crate::error::{Result, TerraError};
+use crate::tensor::{DType, Shape, TensorType};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Shape, data: Vec<f32> },
+    I32 { shape: Shape, data: Vec<i32> },
+}
+
+impl HostTensor {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn f32(shape: impl Into<Shape>, data: Vec<f32>) -> Result<Self> {
+        let shape = shape.into();
+        if shape.num_elements() != data.len() {
+            return Err(TerraError::shape(format!(
+                "shape {shape} needs {} elements, got {}",
+                shape.num_elements(),
+                data.len()
+            )));
+        }
+        Ok(HostTensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: impl Into<Shape>, data: Vec<i32>) -> Result<Self> {
+        let shape = shape.into();
+        if shape.num_elements() != data.len() {
+            return Err(TerraError::shape(format!(
+                "shape {shape} needs {} elements, got {}",
+                shape.num_elements(),
+                data.len()
+            )));
+        }
+        Ok(HostTensor::I32 { shape, data })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: Shape::scalar(), data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: Shape::scalar(), data: vec![v] }
+    }
+
+    pub fn zeros(ty: &TensorType) -> Self {
+        match ty.dtype {
+            DType::F32 => HostTensor::F32 {
+                shape: ty.shape.clone(),
+                data: vec![0.0; ty.shape.num_elements()],
+            },
+            DType::I32 => HostTensor::I32 {
+                shape: ty.shape.clone(),
+                data: vec![0; ty.shape.num_elements()],
+            },
+        }
+    }
+
+    pub fn filled_f32(shape: impl Into<Shape>, v: f32) -> Self {
+        let shape = shape.into();
+        let n = shape.num_elements();
+        HostTensor::F32 { shape, data: vec![v; n] }
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn ty(&self) -> TensorType {
+        TensorType::new(self.dtype(), self.shape().clone())
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape().num_elements()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(TerraError::DType("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(TerraError::DType("expected i32 tensor".into())),
+        }
+    }
+
+    /// The single element of a scalar (or 1-element) f32 tensor.
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(TerraError::shape(format!(
+                "expected 1 element, got {}",
+                d.len()
+            )));
+        }
+        Ok(d[0])
+    }
+
+    pub fn scalar_value_i32(&self) -> Result<i32> {
+        let d = self.as_i32()?;
+        if d.len() != 1 {
+            return Err(TerraError::shape(format!(
+                "expected 1 element, got {}",
+                d.len()
+            )));
+        }
+        Ok(d[0])
+    }
+
+    /// Elementwise approximate equality for f32 tensors (used in tests and in
+    /// the AutoGraph-baseline correctness validator).
+    pub fn allclose(&self, other: &HostTensor, rtol: f32, atol: f32) -> bool {
+        if self.shape() != other.shape() || self.dtype() != other.dtype() {
+            return false;
+        }
+        match (self, other) {
+            (HostTensor::F32 { data: a, .. }, HostTensor::F32 { data: b, .. }) => a
+                .iter()
+                .zip(b.iter())
+                .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs() || (x.is_nan() && y.is_nan())),
+            (HostTensor::I32 { data: a, .. }, HostTensor::I32 { data: b, .. }) => a == b,
+            _ => false,
+        }
+    }
+
+    // ---- PJRT literal conversion -------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                xla::Literal::vec1(data).reshape(&shape.dims_i64())?
+            }
+            HostTensor::I32 { shape, data } => {
+                xla::Literal::vec1(data).reshape(&shape.dims_i64())?
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let prim = lit.primitive_type()?;
+        let array_shape = lit.array_shape()?;
+        let dims: Vec<usize> = array_shape.dims().iter().map(|&d| d as usize).collect();
+        let shape = Shape(dims);
+        match DType::from_primitive(prim)? {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                HostTensor::f32(shape, data)
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>()?;
+                HostTensor::i32(shape, data)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for HostTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        const MAX: usize = 8;
+        match self {
+            HostTensor::F32 { shape, data } => {
+                write!(f, "f32{shape}[")?;
+                for (i, v) in data.iter().take(MAX).enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v:.4}")?;
+                }
+                if data.len() > MAX {
+                    write!(f, ", …")?;
+                }
+                write!(f, "]")
+            }
+            HostTensor::I32 { shape, data } => {
+                write!(f, "i32{shape}[")?;
+                for (i, v) in data.iter().take(MAX).enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                if data.len() > MAX {
+                    write!(f, ", …")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.shape(), &Shape::of(&[2, 2]));
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![3], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn scalar_value() {
+        assert_eq!(HostTensor::scalar_f32(3.5).scalar_value_f32().unwrap(), 3.5);
+        assert_eq!(HostTensor::scalar_i32(-2).scalar_value_i32().unwrap(), -2);
+    }
+
+    #[test]
+    fn allclose_works() {
+        let a = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = HostTensor::f32(vec![2], vec![1.0 + 1e-7, 2.0]).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        let c = HostTensor::f32(vec![2], vec![1.5, 2.0]).unwrap();
+        assert!(!a.allclose(&c, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![1, -2, 3, -4]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = HostTensor::scalar_f32(7.25);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

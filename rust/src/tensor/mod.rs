@@ -1,0 +1,14 @@
+//! Host-side tensor representation: dtypes, shapes and owned buffers.
+//!
+//! `HostTensor` is the value type that crosses the imperative/symbolic
+//! boundary: feeds from the PythonRunner to the GraphRunner, fetched
+//! materializations in the other direction, and the eager executor's
+//! inputs/outputs.
+
+mod dtype;
+mod host;
+mod shape;
+
+pub use dtype::DType;
+pub use host::HostTensor;
+pub use shape::{Shape, TensorType};

@@ -1,0 +1,190 @@
+//! Shapes and tensor types, including the numpy-style broadcasting rules that
+//! the op layer's shape inference uses.
+
+use crate::error::{Result, TerraError};
+use crate::tensor::DType;
+
+/// A dense row-major shape. Rank 0 denotes a scalar.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Self {
+        Shape(vec![])
+    }
+
+    pub fn of(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.0.iter().map(|&d| d as i64).collect()
+    }
+
+    /// numpy broadcasting: right-align, dims must match or be 1.
+    pub fn broadcast_with(&self, other: &Shape) -> Result<Shape> {
+        let r = self.rank().max(other.rank());
+        let mut out = vec![0usize; r];
+        for i in 0..r {
+            let a = if i < r - self.rank() { 1 } else { self.0[i - (r - self.rank())] };
+            let b = if i < r - other.rank() { 1 } else { other.0[i - (r - other.rank())] };
+            out[i] = if a == b {
+                a
+            } else if a == 1 {
+                b
+            } else if b == 1 {
+                a
+            } else {
+                return Err(TerraError::shape(format!(
+                    "cannot broadcast {self} with {other}"
+                )));
+            };
+        }
+        Ok(Shape(out))
+    }
+
+    /// Normalize `axes` (must be in-range, deduped, ascending).
+    pub fn check_axes(&self, axes: &[usize]) -> Result<Vec<usize>> {
+        let mut v: Vec<usize> = axes.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        if v.len() != axes.len() {
+            return Err(TerraError::shape(format!("duplicate axes {axes:?}")));
+        }
+        for &a in &v {
+            if a >= self.rank() {
+                return Err(TerraError::shape(format!(
+                    "axis {a} out of range for rank {}",
+                    self.rank()
+                )));
+            }
+        }
+        Ok(v)
+    }
+
+    /// Shape after reducing over `axes`.
+    pub fn reduce(&self, axes: &[usize], keep_dims: bool) -> Result<Shape> {
+        let axes = self.check_axes(axes)?;
+        let mut out = Vec::new();
+        for (i, &d) in self.0.iter().enumerate() {
+            if axes.contains(&i) {
+                if keep_dims {
+                    out.push(1);
+                }
+            } else {
+                out.push(d);
+            }
+        }
+        Ok(Shape(out))
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+/// The static type of a tensor value: element type + shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub dtype: DType,
+    pub shape: Shape,
+}
+
+impl TensorType {
+    pub fn new(dtype: DType, shape: impl Into<Shape>) -> Self {
+        TensorType { dtype, shape: shape.into() }
+    }
+
+    pub fn f32(dims: &[usize]) -> Self {
+        TensorType::new(DType::F32, dims)
+    }
+
+    pub fn i32(dims: &[usize]) -> Self {
+        TensorType::new(DType::I32, dims)
+    }
+
+    /// A compact signature used in executable-cache keys.
+    pub fn signature(&self) -> String {
+        format!("{}{}", self.dtype.short_name(), self.shape)
+    }
+}
+
+impl std::fmt::Display for TensorType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}{}", self.dtype, self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_basic() {
+        let a = Shape::of(&[4, 1, 3]);
+        let b = Shape::of(&[2, 3]);
+        assert_eq!(a.broadcast_with(&b).unwrap(), Shape::of(&[4, 2, 3]));
+    }
+
+    #[test]
+    fn broadcast_scalar() {
+        let a = Shape::of(&[5, 7]);
+        let s = Shape::scalar();
+        assert_eq!(a.broadcast_with(&s).unwrap(), a);
+        assert_eq!(s.broadcast_with(&a).unwrap(), a);
+    }
+
+    #[test]
+    fn broadcast_mismatch() {
+        assert!(Shape::of(&[3]).broadcast_with(&Shape::of(&[4])).is_err());
+    }
+
+    #[test]
+    fn reduce_shapes() {
+        let s = Shape::of(&[2, 3, 4]);
+        assert_eq!(s.reduce(&[1], false).unwrap(), Shape::of(&[2, 4]));
+        assert_eq!(s.reduce(&[1], true).unwrap(), Shape::of(&[2, 1, 4]));
+        assert_eq!(s.reduce(&[0, 2], false).unwrap(), Shape::of(&[3]));
+        assert!(s.reduce(&[3], false).is_err());
+        assert!(s.reduce(&[1, 1], false).is_err());
+    }
+
+    #[test]
+    fn num_elements() {
+        assert_eq!(Shape::scalar().num_elements(), 1);
+        assert_eq!(Shape::of(&[2, 3, 4]).num_elements(), 24);
+    }
+}

@@ -1,0 +1,146 @@
+//! Identifiers and program locations.
+
+/// Unique id of a tensor value within one engine run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u64);
+
+/// Unique id of a variable (persistent, trainable or not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub u32);
+
+/// Unique id of a mutable host-state cell (the "Python object" analogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StateId(pub u32);
+
+/// FNV-1a 64-bit hash (dependency-free stable hashing for locations, consts).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A program location: the call site of the op in the user program
+/// (captured via `#[track_caller]`) plus the session's scope stack.
+///
+/// The scope stack plays the role of TF name scopes: library code (layers,
+/// gradient tape) pushes scopes so that ops emitted from shared library lines
+/// still get distinct, *deterministic* locations across iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Location {
+    pub file: &'static str,
+    pub line: u32,
+    pub col: u32,
+    /// Hash of the scope stack active when the op was issued.
+    pub scope: u64,
+}
+
+impl Location {
+    pub fn caller(caller: &'static std::panic::Location<'static>, scope: u64) -> Self {
+        Location { file: caller.file(), line: caller.line(), col: caller.column(), scope }
+    }
+
+    /// A synthetic location for engine-internal events.
+    pub fn synthetic(tag: &'static str) -> Self {
+        Location { file: tag, line: 0, col: 0, scope: 0 }
+    }
+
+    pub fn hash64(&self) -> u64 {
+        let mut h = fnv1a(self.file.as_bytes());
+        h ^= (self.line as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        h ^= (self.col as u64).wrapping_mul(0xbf58476d1ce4e5b9);
+        h ^= self.scope;
+        h
+    }
+}
+
+impl std::fmt::Display for Location {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}@{:08x}", self.file, self.line, self.col, self.scope & 0xffff_ffff)
+    }
+}
+
+/// The scope stack itself, owned by the session.
+#[derive(Debug, Default, Clone)]
+pub struct ScopeStack {
+    names: Vec<String>,
+    hash: u64,
+}
+
+impl ScopeStack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str) {
+        self.names.push(name.to_string());
+        self.rehash();
+    }
+
+    pub fn pop(&mut self) {
+        self.names.pop();
+        self.rehash();
+    }
+
+    fn rehash(&mut self) {
+        let mut h = 0u64;
+        for n in &self.names {
+            h = h.wrapping_mul(0x100000001b3) ^ fnv1a(n.as_bytes());
+        }
+        self.hash = h;
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    pub fn depth(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn path(&self) -> String {
+        self.names.join("/")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_stack_hash_changes_and_restores() {
+        let mut s = ScopeStack::new();
+        let h0 = s.hash();
+        s.push("layer1");
+        let h1 = s.hash();
+        assert_ne!(h0, h1);
+        s.push("grad#3");
+        let h2 = s.hash();
+        assert_ne!(h1, h2);
+        s.pop();
+        assert_eq!(s.hash(), h1);
+        s.pop();
+        assert_eq!(s.hash(), h0);
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn scope_order_matters() {
+        let mut a = ScopeStack::new();
+        a.push("x");
+        a.push("y");
+        let mut b = ScopeStack::new();
+        b.push("y");
+        b.push("x");
+        assert_ne!(a.hash(), b.hash());
+    }
+
+    #[test]
+    fn location_hash_distinguishes_lines() {
+        let a = Location { file: "f.rs", line: 1, col: 1, scope: 0 };
+        let b = Location { file: "f.rs", line: 2, col: 1, scope: 0 };
+        assert_ne!(a.hash64(), b.hash64());
+    }
+}

@@ -1,0 +1,288 @@
+//! Trace items, value references and equality keys.
+
+use crate::error::{Result, TerraError};
+use crate::ops::OpDef;
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::ids::{fnv1a, Location, StateId, ValueId, VarId};
+use std::collections::HashMap;
+
+/// How an op input is referenced at issue time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ValueRef {
+    /// Output of a previous item in this iteration.
+    Out(ValueId),
+    /// Current value of a persistent variable.
+    Var(VarId),
+}
+
+/// Classification of feed points (paper's Input-Feeding operations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FeedKind {
+    /// Per-step program input (training batch). The AutoGraph baseline
+    /// supports these (they are function arguments).
+    Data,
+    /// A read of mutable host state (the "Python object" analogue). The
+    /// AutoGraph baseline *bakes* the captured value — the Fig. 1c bug.
+    Captured(StateId),
+}
+
+/// One event of an iteration's trace.
+#[derive(Debug, Clone)]
+pub enum TraceItem {
+    /// A DL operation (decoupled from the imperative execution).
+    Op { def: OpDef, loc: Location, inputs: Vec<ValueRef>, outputs: Vec<ValueId> },
+    /// A host value entering the DL side.
+    Feed { id: ValueId, ty: TensorType, loc: Location, kind: FeedKind },
+    /// An inline constant (may be generalized to a feed on value mismatch).
+    Const { id: ValueId, value: HostTensor, loc: Location },
+    /// A variable update.
+    Assign { var: VarId, src: ValueRef, loc: Location },
+    /// A materialization point (paper's Output-Fetching operation).
+    Fetch { src: ValueRef, loc: Location },
+}
+
+impl TraceItem {
+    pub fn loc(&self) -> Location {
+        match self {
+            TraceItem::Op { loc, .. }
+            | TraceItem::Feed { loc, .. }
+            | TraceItem::Const { loc, .. }
+            | TraceItem::Assign { loc, .. }
+            | TraceItem::Fetch { loc, .. } => *loc,
+        }
+    }
+
+    pub fn outputs(&self) -> &[ValueId] {
+        match self {
+            TraceItem::Op { outputs, .. } => outputs,
+            TraceItem::Feed { id, .. } | TraceItem::Const { id, .. } => std::slice::from_ref(id),
+            _ => &[],
+        }
+    }
+
+    pub fn inputs(&self) -> Vec<ValueRef> {
+        match self {
+            TraceItem::Op { inputs, .. } => inputs.clone(),
+            TraceItem::Assign { src, .. } | TraceItem::Fetch { src, .. } => vec![*src],
+            _ => vec![],
+        }
+    }
+
+    /// The node-equality key (paper Appendix A: operation type, attributes,
+    /// program location). Input *sources* are compared structurally during
+    /// merging, not via the key.
+    pub fn key(&self) -> ItemKey {
+        match self {
+            TraceItem::Op { def, loc, .. } => ItemKey::Op { def: def.clone(), loc: *loc },
+            TraceItem::Feed { ty, loc, kind, .. } => {
+                ItemKey::Feed { ty: ty.clone(), kind: *kind, loc: *loc }
+            }
+            TraceItem::Const { value, loc, .. } => ItemKey::Const {
+                ty: value.ty(),
+                loc: *loc,
+                value_hash: const_hash(value),
+            },
+            TraceItem::Assign { var, loc, .. } => ItemKey::Assign { var: *var, loc: *loc },
+            TraceItem::Fetch { loc, .. } => ItemKey::Fetch { loc: *loc },
+        }
+    }
+}
+
+/// Stable content hash of a constant's bytes (used for Const equality).
+pub fn const_hash(t: &HostTensor) -> u64 {
+    match t {
+        HostTensor::F32 { data, .. } => {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            fnv1a(&bytes)
+        }
+        HostTensor::I32 { data, .. } => {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            fnv1a(&bytes)
+        }
+    }
+}
+
+/// Equality key of a trace item / TraceGraph node.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ItemKey {
+    Op { def: OpDef, loc: Location },
+    Feed { ty: TensorType, kind: FeedKind, loc: Location },
+    Const { ty: TensorType, loc: Location, value_hash: u64 },
+    Assign { var: VarId, loc: Location },
+    Fetch { loc: Location },
+}
+
+impl ItemKey {
+    pub fn loc(&self) -> Location {
+        match self {
+            ItemKey::Op { loc, .. }
+            | ItemKey::Feed { loc, .. }
+            | ItemKey::Const { loc, .. }
+            | ItemKey::Assign { loc, .. }
+            | ItemKey::Fetch { loc } => *loc,
+        }
+    }
+
+    /// Key equality *up to constant value*: used when a Const node has been
+    /// generalized into a feed after observing different values at the same
+    /// location.
+    pub fn matches_generalized(&self, other: &ItemKey) -> bool {
+        match (self, other) {
+            (
+                ItemKey::Const { ty: ta, loc: la, .. },
+                ItemKey::Const { ty: tb, loc: lb, .. },
+            ) => ta == tb && la == lb,
+            (a, b) => a == b,
+        }
+    }
+
+    pub fn short(&self) -> String {
+        match self {
+            ItemKey::Op { def, .. } => format!("{}", def.kind),
+            ItemKey::Feed { ty, kind, .. } => match kind {
+                FeedKind::Data => format!("feed:{ty}"),
+                FeedKind::Captured(s) => format!("feed[state{}]:{ty}", s.0),
+            },
+            ItemKey::Const { ty, .. } => format!("const:{ty}"),
+            ItemKey::Assign { var, .. } => format!("assign:v{}", var.0),
+            ItemKey::Fetch { .. } => "fetch".to_string(),
+        }
+    }
+}
+
+/// Position of a produced value inside a trace: (item index, output slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ItemPos {
+    pub item: usize,
+    pub slot: usize,
+}
+
+/// A structurally resolved input source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResolvedSrc {
+    /// Output `slot` of item `item` earlier in the same trace.
+    Item(ItemPos),
+    /// Current value of a variable (as of the last preceding assign).
+    Var(VarId),
+}
+
+/// One iteration's trace with resolved dataflow.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub items: Vec<TraceItem>,
+    /// Per item: resolved input sources (parallel to `TraceItem::inputs()`).
+    pub resolved: Vec<Vec<ResolvedSrc>>,
+    /// Iteration index this trace came from (diagnostics).
+    pub step: u64,
+}
+
+impl Trace {
+    /// Build a trace from raw items, resolving `ValueRef::Out` ids to item
+    /// positions. Fails if an id is referenced but never produced (values
+    /// must not leak across iterations except through variables).
+    pub fn resolve(items: Vec<TraceItem>, step: u64) -> Result<Trace> {
+        let mut producers: HashMap<ValueId, ItemPos> = HashMap::new();
+        let mut resolved = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            let mut srcs = Vec::new();
+            for r in item.inputs() {
+                match r {
+                    ValueRef::Var(v) => srcs.push(ResolvedSrc::Var(v)),
+                    ValueRef::Out(id) => {
+                        let pos = producers.get(&id).copied().ok_or_else(|| {
+                            TerraError::Trace(format!(
+                                "value {id:?} used at item {i} ({}) was not produced in this \
+                                 iteration; cross-iteration tensors must go through variables",
+                                item.loc()
+                            ))
+                        })?;
+                        srcs.push(ResolvedSrc::Item(pos));
+                    }
+                }
+            }
+            resolved.push(srcs);
+            for (slot, id) in item.outputs().iter().enumerate() {
+                producers.insert(*id, ItemPos { item: i, slot });
+            }
+        }
+        Ok(Trace { items, resolved, step })
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Render a compact textual form (for `terra trace-dump` and tests).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for (i, item) in self.items.iter().enumerate() {
+            s.push_str(&format!("{i:4}  {}  @{}\n", item.key().short(), item.loc()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpKind;
+    use crate::tensor::TensorType;
+
+    fn loc(line: u32) -> Location {
+        Location { file: "test.rs", line, col: 1, scope: 0 }
+    }
+
+    #[test]
+    fn resolve_links_producers() {
+        let items = vec![
+            TraceItem::Feed { id: ValueId(1), ty: TensorType::f32(&[2]), loc: loc(1), kind: FeedKind::Data },
+            TraceItem::Op {
+                def: OpDef::new(OpKind::Relu, vec![TensorType::f32(&[2])]),
+                loc: loc(2),
+                inputs: vec![ValueRef::Out(ValueId(1))],
+                outputs: vec![ValueId(2)],
+            },
+            TraceItem::Fetch { src: ValueRef::Out(ValueId(2)), loc: loc(3) },
+        ];
+        let t = Trace::resolve(items, 0).unwrap();
+        assert_eq!(t.resolved[1], vec![ResolvedSrc::Item(ItemPos { item: 0, slot: 0 })]);
+        assert_eq!(t.resolved[2], vec![ResolvedSrc::Item(ItemPos { item: 1, slot: 0 })]);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_ids() {
+        let items = vec![TraceItem::Fetch { src: ValueRef::Out(ValueId(99)), loc: loc(1) }];
+        assert!(Trace::resolve(items, 0).is_err());
+    }
+
+    #[test]
+    fn const_keys_hash_values() {
+        let a = TraceItem::Const { id: ValueId(1), value: HostTensor::scalar_f32(1.0), loc: loc(1) };
+        let b = TraceItem::Const { id: ValueId(2), value: HostTensor::scalar_f32(2.0), loc: loc(1) };
+        assert_ne!(a.key(), b.key());
+        assert!(a.key().matches_generalized(&b.key()));
+    }
+
+    #[test]
+    fn op_keys_compare_kind_types_loc() {
+        let mk = |line: u32, n: usize| TraceItem::Op {
+            def: OpDef::new(OpKind::Relu, vec![TensorType::f32(&[n])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Var(VarId(0))],
+            outputs: vec![ValueId(1)],
+        };
+        assert_eq!(mk(1, 2).key(), mk(1, 2).key());
+        assert_ne!(mk(1, 2).key(), mk(2, 2).key()); // location differs
+        assert_ne!(mk(1, 2).key(), mk(1, 3).key()); // input type differs
+    }
+}

@@ -1,0 +1,19 @@
+//! Trace representation: what the GraphGenerator collects during the tracing
+//! phase (paper §4.1) and what the PythonRunner walks during co-execution.
+//!
+//! A `Trace` is one iteration's linear chain of DL-side events. Besides DL
+//! ops it records the communication-relevant host interactions: feeds (data
+//! or captured host state), inline constants, variable assignments and
+//! materializations (fetch points). Every item carries the *program location*
+//! (`file:line:col` + the session scope stack), which is the third leg of the
+//! paper's node-equality criteria (Appendix A).
+
+mod ids;
+mod items;
+mod loops;
+mod recorder;
+
+pub use ids::{fnv1a, Location, ScopeStack, StateId, ValueId, VarId};
+pub use items::{const_hash, FeedKind, ItemKey, ItemPos, ResolvedSrc, Trace, TraceItem, ValueRef};
+pub use loops::detect_tandem_repeats;
+pub use recorder::TraceRecorder;

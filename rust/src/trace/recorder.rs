@@ -1,0 +1,68 @@
+//! Incremental trace recorder used by the tracing-phase backend.
+
+use crate::error::Result;
+use crate::trace::{Trace, TraceItem};
+
+/// Collects the current iteration's items and finalizes them into a `Trace`.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    items: Vec<TraceItem>,
+    step: u64,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn begin_step(&mut self, step: u64) {
+        self.items.clear();
+        self.step = step;
+    }
+
+    pub fn record(&mut self, item: TraceItem) {
+        self.items.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Finish the iteration, producing a dataflow-resolved `Trace`.
+    pub fn finish(&mut self) -> Result<Trace> {
+        Trace::resolve(std::mem::take(&mut self.items), self.step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{HostTensor, TensorType};
+    use crate::trace::{FeedKind, Location, ValueId};
+
+    #[test]
+    fn records_and_finishes() {
+        let mut r = TraceRecorder::new();
+        r.begin_step(3);
+        r.record(TraceItem::Feed {
+            id: ValueId(1),
+            ty: TensorType::f32(&[2]),
+            loc: Location::synthetic("t"),
+            kind: FeedKind::Data,
+        });
+        r.record(TraceItem::Const {
+            id: ValueId(2),
+            value: HostTensor::scalar_f32(1.0),
+            loc: Location::synthetic("c"),
+        });
+        assert_eq!(r.len(), 2);
+        let t = r.finish().unwrap();
+        assert_eq!(t.step, 3);
+        assert_eq!(t.len(), 2);
+        assert!(r.is_empty());
+    }
+}

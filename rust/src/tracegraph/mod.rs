@@ -1,0 +1,533 @@
+//! The TraceGraph (paper §4.2): a DAG that encapsulates all collected traces.
+//!
+//! * Nodes correspond to trace items (DL ops, feeds, consts, assigns,
+//!   fetches); edges denote execution order between consecutive items.
+//! * Node equality = operation type + attributes + program location (paper
+//!   Appendix A), via [`crate::trace::ItemKey`].
+//! * Merging follows the paper: walk the existing graph with a pointer to the
+//!   latest matched node; matching children advance the pointer, mismatches
+//!   open a new branch, and a branch *merges back* when a later item matches
+//!   a non-child node (Fig. 3), provided the edge keeps the graph acyclic.
+//! * Dataflow is tracked as per-node input *variants*: the same reconvergent
+//!   node may read from different producers depending on the path taken
+//!   (Fig. 3's `op3(x1)`), and the GraphRunner picks the variant whose
+//!   producers actually executed — the runtime equivalent of the `tf.case`
+//!   output merge in the paper's generated graph.
+//! * Constants observed with different values at the same location are
+//!   *generalized* into feed-like nodes (the "Python primitive value" feed
+//!   of §4.2's communication points).
+//!
+//! Loops are unrolled in the graph: the paper's While-unrolling optimization
+//! applied unconditionally (varying trip counts surface as extra traces and
+//! are handled by the branch machinery; see DESIGN.md).
+
+mod walker;
+
+pub use walker::{WalkEvent, Walker};
+
+use crate::error::{Result, TerraError};
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{ItemKey, ResolvedSrc, Trace, TraceItem, VarId};
+
+/// Index of a node in the TraceGraph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+pub const START: NodeId = NodeId(0);
+pub const END: NodeId = NodeId(1);
+
+/// A dataflow source of a node input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphSrc {
+    /// Output `slot` of another node.
+    Node { node: NodeId, slot: usize },
+    /// Current value of a variable.
+    Var(VarId),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    Start,
+    End,
+    Item(ItemKey),
+}
+
+#[derive(Debug, Clone)]
+pub struct TgNode {
+    pub id: NodeId,
+    pub kind: NodeKind,
+    /// Observed input-source combinations (deduped, in observation order).
+    pub variants: Vec<Vec<GraphSrc>>,
+    pub children: Vec<NodeId>,
+    pub parents: Vec<NodeId>,
+    /// Const node observed with multiple values -> treated as a feed.
+    pub generalized: bool,
+    /// Const value (first observed) for embedding into compiled segments.
+    pub const_value: Option<HostTensor>,
+    pub out_types: Vec<TensorType>,
+}
+
+impl TgNode {
+    pub fn key(&self) -> Option<&ItemKey> {
+        match &self.kind {
+            NodeKind::Item(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Does this (existing) node match an incoming item key?
+    fn matches(&self, key: &ItemKey) -> bool {
+        match &self.kind {
+            NodeKind::Item(k) => {
+                if self.generalized {
+                    k.matches_generalized(key)
+                } else {
+                    k == key
+                }
+            }
+            _ => false,
+        }
+    }
+
+    /// Same key up to const value (candidate for generalization).
+    fn matches_modulo_const(&self, key: &ItemKey) -> bool {
+        match &self.kind {
+            NodeKind::Item(k) => k.matches_generalized(key),
+            _ => false,
+        }
+    }
+
+    pub fn is_branch(&self) -> bool {
+        self.children.len() > 1
+    }
+}
+
+/// Result of merging one trace.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeReport {
+    /// Graph mutated (new nodes/edges/variants/generalizations): the symbolic
+    /// plan must be regenerated.
+    pub changed: bool,
+    pub new_nodes: usize,
+    pub new_edges: usize,
+    pub new_variants: usize,
+    pub generalized: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceGraph {
+    pub nodes: Vec<TgNode>,
+    /// Number of traces merged so far.
+    pub n_traces: usize,
+}
+
+impl Default for TraceGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceGraph {
+    pub fn new() -> Self {
+        let start = TgNode {
+            id: START,
+            kind: NodeKind::Start,
+            variants: vec![],
+            children: vec![],
+            parents: vec![],
+            generalized: false,
+            const_value: None,
+            out_types: vec![],
+        };
+        let end = TgNode {
+            id: END,
+            kind: NodeKind::End,
+            variants: vec![],
+            children: vec![],
+            parents: vec![],
+            generalized: false,
+            const_value: None,
+            out_types: vec![],
+        };
+        TraceGraph { nodes: vec![start, end], n_traces: 0 }
+    }
+
+    pub fn node(&self, id: NodeId) -> &TgNode {
+        &self.nodes[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.len() <= 2
+    }
+
+    /// Is `to` reachable from `from` via child edges?
+    pub fn reaches(&self, from: NodeId, to: NodeId) -> bool {
+        if from == to {
+            return true;
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![from];
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if std::mem::replace(&mut seen[n.0], true) {
+                continue;
+            }
+            stack.extend(self.nodes[n.0].children.iter().copied());
+        }
+        false
+    }
+
+    fn add_edge(&mut self, from: NodeId, to: NodeId, report: &mut MergeReport) {
+        if !self.nodes[from.0].children.contains(&to) {
+            self.nodes[from.0].children.push(to);
+            self.nodes[to.0].parents.push(from);
+            report.changed = true;
+            report.new_edges += 1;
+        }
+    }
+
+    fn add_variant(&mut self, node: NodeId, srcs: Vec<GraphSrc>, report: &mut MergeReport) {
+        let n = &mut self.nodes[node.0];
+        if !n.variants.contains(&srcs) {
+            n.variants.push(srcs);
+            report.changed = true;
+            report.new_variants += 1;
+        }
+    }
+
+    fn out_types_of(item: &TraceItem) -> Result<Vec<TensorType>> {
+        Ok(match item {
+            TraceItem::Op { def, .. } => def.out_types()?,
+            TraceItem::Feed { ty, .. } => vec![ty.clone()],
+            TraceItem::Const { value, .. } => vec![value.ty()],
+            TraceItem::Assign { .. } | TraceItem::Fetch { .. } => vec![],
+        })
+    }
+
+    /// Merge one iteration's trace (paper §4.2). Returns what changed.
+    pub fn merge(&mut self, trace: &Trace) -> Result<MergeReport> {
+        let mut report = MergeReport::default();
+        let mut pointer = START;
+        // node + slot for each produced value position in the trace
+        let mut node_of_item: Vec<NodeId> = Vec::with_capacity(trace.len());
+
+        for (i, item) in trace.items.iter().enumerate() {
+            let key = item.key();
+            let srcs: Vec<GraphSrc> = trace.resolved[i]
+                .iter()
+                .map(|r| match r {
+                    ResolvedSrc::Var(v) => GraphSrc::Var(*v),
+                    ResolvedSrc::Item(pos) => {
+                        GraphSrc::Node { node: node_of_item[pos.item], slot: pos.slot }
+                    }
+                })
+                .collect();
+
+            // 1. Exact child match.
+            let mut matched = self.nodes[pointer.0]
+                .children
+                .iter()
+                .copied()
+                .find(|c| self.nodes[c.0].matches(&key));
+
+            // 2. Child match modulo const value -> generalize that child.
+            if matched.is_none() {
+                if let Some(c) = self.nodes[pointer.0]
+                    .children
+                    .iter()
+                    .copied()
+                    .find(|c| self.nodes[c.0].matches_modulo_const(&key))
+                {
+                    let n = &mut self.nodes[c.0];
+                    if !n.generalized {
+                        n.generalized = true;
+                        report.changed = true;
+                        report.generalized += 1;
+                    }
+                    matched = Some(c);
+                }
+            }
+
+            // 3. Merge-back: a non-child node with an equal key, as long as
+            //    the new edge keeps the graph acyclic.
+            if matched.is_none() {
+                let candidate = (2..self.nodes.len())
+                    .map(NodeId)
+                    .find(|&n| self.nodes[n.0].matches(&key) && !self.reaches(n, pointer));
+                if let Some(c) = candidate {
+                    self.add_edge(pointer, c, &mut report);
+                    matched = Some(c);
+                }
+            }
+
+            let node = match matched {
+                Some(n) => n,
+                None => {
+                    // 4. New branch.
+                    let id = NodeId(self.nodes.len());
+                    let const_value = match item {
+                        TraceItem::Const { value, .. } => Some(value.clone()),
+                        _ => None,
+                    };
+                    self.nodes.push(TgNode {
+                        id,
+                        kind: NodeKind::Item(key.clone()),
+                        variants: vec![],
+                        children: vec![],
+                        parents: vec![],
+                        generalized: false,
+                        const_value,
+                        out_types: Self::out_types_of(item)?,
+                    });
+                    report.changed = true;
+                    report.new_nodes += 1;
+                    self.add_edge(pointer, id, &mut report);
+                    id
+                }
+            };
+
+            self.add_variant(node, srcs, &mut report);
+            node_of_item.push(node);
+            pointer = node;
+        }
+        self.add_edge(pointer, END, &mut report);
+        self.n_traces += 1;
+        Ok(report)
+    }
+
+    /// Branch points (nodes with >1 child), in id order.
+    pub fn branch_points(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_branch() && n.id != END)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Deterministic topological order (children after parents, id as
+    /// tie-break). Fails on cycles (cannot happen if merge is sound).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|n| n.parents.len()).collect();
+        let mut ready: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| n.parents.is_empty())
+            .map(|n| n.id)
+            .collect();
+        ready.sort();
+        let mut out = Vec::with_capacity(self.nodes.len());
+        while let Some(n) = ready.pop() {
+            out.push(n);
+            for &c in &self.nodes[n.0].children {
+                indeg[c.0] -= 1;
+                if indeg[c.0] == 0 {
+                    // insert keeping `ready` sorted descending so pop() gives
+                    // the smallest id (deterministic order)
+                    let pos = ready.partition_point(|&x| x > c);
+                    ready.insert(pos, c);
+                }
+            }
+        }
+        if out.len() != self.nodes.len() {
+            return Err(TerraError::Trace("TraceGraph contains a cycle".into()));
+        }
+        Ok(out)
+    }
+
+    /// Human-readable dump (for `terra trace-dump` and debugging).
+    pub fn dump(&self) -> String {
+        let mut s = format!("TraceGraph: {} nodes, {} traces\n", self.nodes.len(), self.n_traces);
+        for n in &self.nodes {
+            let kind = match &n.kind {
+                NodeKind::Start => "START".to_string(),
+                NodeKind::End => "END".to_string(),
+                NodeKind::Item(k) => {
+                    let g = if n.generalized { " (generalized)" } else { "" };
+                    format!("{}{g} @{}", k.short(), k.loc())
+                }
+            };
+            let children: Vec<String> = n.children.iter().map(|c| format!("{}", c.0)).collect();
+            s.push_str(&format!(
+                "  [{}] {kind} -> [{}] ({} variants)\n",
+                n.id.0,
+                children.join(","),
+                n.variants.len()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpDef, OpKind};
+    use crate::trace::{FeedKind, Location, TraceItem, ValueId, ValueRef};
+
+    fn loc(line: u32) -> Location {
+        Location { file: "prog.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn relu(inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(OpKind::Relu, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn neg(inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(OpKind::Neg, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    #[test]
+    fn first_trace_is_linear_chain() {
+        let mut g = TraceGraph::new();
+        let r = g.merge(&tr(vec![feed(1, 1), relu(1, 2, 2), neg(2, 3, 3)])).unwrap();
+        assert!(r.changed);
+        assert_eq!(r.new_nodes, 3);
+        // start -> feed -> relu -> neg -> end
+        assert_eq!(g.node(START).children.len(), 1);
+        let f = g.node(START).children[0];
+        assert_eq!(g.node(f).children.len(), 1);
+    }
+
+    #[test]
+    fn identical_trace_is_covered() {
+        let mut g = TraceGraph::new();
+        let t = tr(vec![feed(1, 1), relu(1, 2, 2), neg(2, 3, 3)]);
+        g.merge(&t).unwrap();
+        let r = g.merge(&t).unwrap();
+        assert!(!r.changed, "re-merging a covered trace must not change the graph: {r:?}");
+        assert_eq!(g.n_traces, 2);
+    }
+
+    #[test]
+    fn divergent_trace_branches_and_merges_back() {
+        // trace A: feed, relu@2, neg@5     (true path)
+        // trace B: feed, neg@3,  neg@5     (false path; different middle loc)
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![feed(1, 1), relu(1, 2, 2), neg(2, 3, 5)])).unwrap();
+        let r = g.merge(&tr(vec![feed(1, 1), neg(1, 2, 3), neg(2, 3, 5)])).unwrap();
+        assert!(r.changed);
+        assert_eq!(r.new_nodes, 1, "only the alternate middle op is new");
+        // The feed node is now a branch point with 2 children.
+        let f = g.node(START).children[0];
+        assert_eq!(g.node(f).children.len(), 2);
+        // Both branches converge on the same final neg@5 node.
+        let c1 = g.node(f).children[0];
+        let c2 = g.node(f).children[1];
+        assert_eq!(g.node(c1).children, g.node(c2).children);
+        // The join node carries two dataflow variants.
+        let join = g.node(c1).children[0];
+        assert_eq!(g.node(join).variants.len(), 2);
+        // Third merge of either shape changes nothing.
+        let r3 = g.merge(&tr(vec![feed(1, 1), neg(1, 2, 3), neg(2, 3, 5)])).unwrap();
+        assert!(!r3.changed);
+    }
+
+    #[test]
+    fn same_key_different_location_stays_distinct() {
+        // Figure 3: Op2 on line 6 vs Op2 on line 8 are different nodes.
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![feed(1, 1), neg(1, 2, 6)])).unwrap();
+        let r = g.merge(&tr(vec![feed(1, 1), neg(1, 2, 8)])).unwrap();
+        assert_eq!(r.new_nodes, 1);
+    }
+
+    #[test]
+    fn const_generalizes_on_value_mismatch() {
+        let c = |v: f32| TraceItem::Const {
+            id: ValueId(1),
+            value: crate::tensor::HostTensor::scalar_f32(v),
+            loc: loc(9),
+        };
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![c(1.0), relu(1, 2, 2)])).unwrap();
+        let r = g.merge(&tr(vec![c(2.0), relu(1, 2, 2)])).unwrap();
+        assert!(r.changed);
+        assert_eq!(r.generalized, 1);
+        assert_eq!(r.new_nodes, 0);
+        // Third value: already generalized, nothing changes.
+        let r3 = g.merge(&tr(vec![c(3.0), relu(1, 2, 2)])).unwrap();
+        assert!(!r3.changed);
+    }
+
+    #[test]
+    fn unrolled_loop_repetition_creates_chain() {
+        // Same op location repeated = unrolled chain of distinct nodes.
+        let t = tr(vec![feed(1, 1), relu(1, 2, 2), relu(2, 3, 2), relu(3, 4, 2)]);
+        let mut g = TraceGraph::new();
+        let r = g.merge(&t).unwrap();
+        assert_eq!(r.new_nodes, 4);
+        let r2 = g.merge(&t).unwrap();
+        assert!(!r2.changed);
+    }
+
+    #[test]
+    fn trip_count_change_branches_to_end() {
+        let two = tr(vec![feed(1, 1), relu(1, 2, 2), relu(2, 3, 2)]);
+        let three = tr(vec![feed(1, 1), relu(1, 2, 2), relu(2, 3, 2), relu(3, 4, 2)]);
+        let mut g = TraceGraph::new();
+        g.merge(&two).unwrap();
+        let r = g.merge(&three).unwrap();
+        assert!(r.changed);
+        // second relu gained END and a third relu as children
+        let r2 = g.merge(&two).unwrap();
+        assert!(!r2.changed);
+        let r3 = g.merge(&three).unwrap();
+        assert!(!r3.changed);
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![feed(1, 1), relu(1, 2, 2), neg(2, 3, 5)])).unwrap();
+        g.merge(&tr(vec![feed(1, 1), neg(1, 2, 3), neg(2, 3, 5)])).unwrap();
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), g.len());
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, n)| (*n, i)).collect();
+        for n in &g.nodes {
+            for c in &n.children {
+                assert!(pos[&n.id] < pos[c], "edge {:?}->{:?} violates topo", n.id, c);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_back_respects_acyclicity() {
+        // A trace where the same (key) op appears twice in sequence must not
+        // create a self-loop via merge-back.
+        let mut g = TraceGraph::new();
+        let t = tr(vec![feed(1, 1), relu(1, 2, 2), relu(2, 3, 2)]);
+        g.merge(&t).unwrap();
+        assert!(g.topo_order().is_ok());
+        assert!(!g.merge(&t).unwrap().changed);
+    }
+}

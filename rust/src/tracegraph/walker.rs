@@ -1,0 +1,294 @@
+//! The runtime TraceGraph walker.
+//!
+//! During co-execution the PythonRunner "keeps a trace being made by the DL
+//! operations in the current iteration [and] continuously compares the trace
+//! with the TraceGraph" (paper §4.1). `Walker` is that comparison: every
+//! issued item either advances the pointer along a matching child (possibly
+//! resolving a branch point — which the runner reports to the GraphRunner as
+//! a Case-Select), or diverges, triggering the fallback to the tracing phase.
+
+use crate::error::TerraError;
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TraceGraph, END};
+use crate::trace::ItemKey;
+use std::sync::Arc;
+
+/// What happened on one walker step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalkEvent {
+    /// The TraceGraph node the item matched.
+    pub node: NodeId,
+    /// `Some((branch_node, case_index))` when entering `node` resolved a
+    /// branch point: the runner must notify the GraphRunner (Case Select).
+    pub case: Option<(NodeId, usize)>,
+    /// Index of the matched dataflow variant within `node.variants`; when
+    /// the node has several, the runner sends a variant select.
+    pub variant: usize,
+    /// The matched node is a feed (or generalized const): the runner must
+    /// send the current host value (Input Feeding).
+    pub needs_value: bool,
+    /// The matched node is a fetch point: materialization blocks on the
+    /// GraphRunner's Output-Fetching result for this node.
+    pub is_fetch: bool,
+}
+
+pub struct Walker {
+    graph: Arc<TraceGraph>,
+    pos: NodeId,
+    steps: usize,
+}
+
+impl Walker {
+    pub fn new(graph: Arc<TraceGraph>) -> Self {
+        Walker { graph, pos: crate::tracegraph::START, steps: 0 }
+    }
+
+    pub fn graph(&self) -> &Arc<TraceGraph> {
+        &self.graph
+    }
+
+    pub fn pos(&self) -> NodeId {
+        self.pos
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    fn diverged(&self, why: String) -> TerraError {
+        TerraError::Diverged(format!("at node {} after {} steps: {why}", self.pos.0, self.steps))
+    }
+
+    /// Advance over one issued item.
+    pub fn advance(&mut self, key: &ItemKey, srcs: &[GraphSrc]) -> Result<WalkEvent, TerraError> {
+        self.advance_matching(
+            |n| {
+                if n.generalized {
+                    match &n.kind {
+                        NodeKind::Item(k) => k.matches_generalized(key),
+                        _ => false,
+                    }
+                } else {
+                    matches!(&n.kind, NodeKind::Item(k) if k == key)
+                }
+            },
+            srcs,
+            || key.short(),
+        )
+    }
+
+    /// Clone-free fast path for DL ops (§Perf L3 iteration 1): the skeleton
+    /// backend validates every issued op, and building a full `ItemKey::Op`
+    /// clones the `OpDef`'s attribute vectors; comparing by reference skips
+    /// two heap allocations per op per iteration.
+    pub fn advance_op(
+        &mut self,
+        def: &crate::ops::OpDef,
+        loc: &crate::trace::Location,
+        srcs: &[GraphSrc],
+    ) -> Result<WalkEvent, TerraError> {
+        self.advance_matching(
+            |n| matches!(&n.kind, NodeKind::Item(ItemKey::Op { def: d, loc: l }) if l == loc && d == def),
+            srcs,
+            || format!("{}", def.kind),
+        )
+    }
+
+    fn advance_matching(
+        &mut self,
+        matches_node: impl Fn(&crate::tracegraph::TgNode) -> bool,
+        srcs: &[GraphSrc],
+        describe: impl Fn() -> String,
+    ) -> Result<WalkEvent, TerraError> {
+        let cur = self.graph.node(self.pos);
+        let matched = cur
+            .children
+            .iter()
+            .enumerate()
+            .find(|(_, c)| matches_node(self.graph.node(**c)));
+        let Some((idx, &child)) = matched else {
+            return Err(self.diverged(format!("no child matches {}", describe())));
+        };
+        let node = self.graph.node(child);
+        // Dataflow validation: this path's input sources must have been
+        // observed before (otherwise the compiled plan has no binding).
+        let Some(variant) = node.variants.iter().position(|v| v.as_slice() == srcs) else {
+            return Err(self.diverged(format!(
+                "novel dataflow variant for {} ({} known variants)",
+                describe(),
+                node.variants.len()
+            )));
+        };
+        let case = if cur.children.len() > 1 { Some((cur.id, idx)) } else { None };
+        let needs_value = match &node.kind {
+            NodeKind::Item(ItemKey::Feed { .. }) => true,
+            NodeKind::Item(ItemKey::Const { .. }) => node.generalized,
+            _ => false,
+        };
+        let is_fetch = matches!(&node.kind, NodeKind::Item(ItemKey::Fetch { .. }));
+        self.pos = child;
+        self.steps += 1;
+        Ok(WalkEvent { node: child, case, variant, needs_value, is_fetch })
+    }
+
+    /// Finish the iteration: the pointer must reach the END sentinel.
+    /// Returns the Case-Select for entering END if the last node branches.
+    pub fn finish(&mut self) -> Result<Option<(NodeId, usize)>, TerraError> {
+        let cur = self.graph.node(self.pos);
+        let idx = cur
+            .children
+            .iter()
+            .position(|&c| c == END)
+            .ok_or_else(|| self.diverged("iteration ended but END is not a successor".into()))?;
+        let case = if cur.children.len() > 1 { Some((cur.id, idx)) } else { None };
+        self.pos = END;
+        Ok(case)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpDef, OpKind};
+    use crate::tensor::TensorType;
+    use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+    use crate::tracegraph::TraceGraph;
+
+    fn loc(line: u32) -> Location {
+        Location { file: "prog.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn op(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    /// Replay a trace through the walker, gathering case selections.
+    fn walk(graph: &Arc<TraceGraph>, t: &Trace) -> Result<Vec<(NodeId, usize)>, TerraError> {
+        let mut w = Walker::new(graph.clone());
+        let mut cases = Vec::new();
+        let mut node_of_item: Vec<NodeId> = Vec::new();
+        for (i, item) in t.items.iter().enumerate() {
+            let srcs: Vec<GraphSrc> = t.resolved[i]
+                .iter()
+                .map(|r| match r {
+                    crate::trace::ResolvedSrc::Var(v) => GraphSrc::Var(*v),
+                    crate::trace::ResolvedSrc::Item(p) => {
+                        GraphSrc::Node { node: node_of_item[p.item], slot: p.slot }
+                    }
+                })
+                .collect();
+            let ev = w.advance(&item.key(), &srcs)?;
+            node_of_item.push(ev.node);
+            if let Some(c) = ev.case {
+                cases.push(c);
+            }
+        }
+        if let Some(c) = w.finish()? {
+            cases.push(c);
+        }
+        Ok(cases)
+    }
+
+    #[test]
+    fn walks_covered_trace_without_cases() {
+        let t = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)]);
+        let mut g = TraceGraph::new();
+        g.merge(&t).unwrap();
+        let g = Arc::new(g);
+        assert_eq!(walk(&g, &t).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn branch_selection_is_reported() {
+        let a = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 5)]);
+        let b = tr(vec![feed(1, 1), op(OpKind::Neg, 1, 2, 3), op(OpKind::Neg, 2, 3, 5)]);
+        let mut g = TraceGraph::new();
+        g.merge(&a).unwrap();
+        g.merge(&b).unwrap();
+        let g = Arc::new(g);
+        let ca = walk(&g, &a).unwrap();
+        let cb = walk(&g, &b).unwrap();
+        assert_eq!(ca.len(), 1);
+        assert_eq!(cb.len(), 1);
+        assert_eq!(ca[0].0, cb[0].0, "same branch node");
+        assert_ne!(ca[0].1, cb[0].1, "different cases");
+    }
+
+    #[test]
+    fn unknown_op_diverges() {
+        let t = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)]);
+        let mut g = TraceGraph::new();
+        g.merge(&t).unwrap();
+        let g = Arc::new(g);
+        let novel = tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 2)]);
+        let err = walk(&g, &novel).unwrap_err();
+        assert!(matches!(err, TerraError::Diverged(_)));
+    }
+
+    #[test]
+    fn early_end_diverges() {
+        let t = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)]);
+        let mut g = TraceGraph::new();
+        g.merge(&t).unwrap();
+        let g = Arc::new(g);
+        let short = tr(vec![feed(1, 1)]);
+        let err = walk(&g, &short).unwrap_err();
+        assert!(matches!(err, TerraError::Diverged(_)));
+    }
+
+    #[test]
+    fn trip_count_end_branch_selects_end_case() {
+        let two = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Relu, 2, 3, 2)]);
+        let three = tr(vec![
+            feed(1, 1),
+            op(OpKind::Relu, 1, 2, 2),
+            op(OpKind::Relu, 2, 3, 2),
+            op(OpKind::Relu, 3, 4, 2),
+        ]);
+        let mut g = TraceGraph::new();
+        g.merge(&two).unwrap();
+        g.merge(&three).unwrap();
+        let g = Arc::new(g);
+        // Exiting after 2 trips vs continuing to a 3rd is a case decision.
+        let c2 = walk(&g, &two).unwrap();
+        let c3 = walk(&g, &three).unwrap();
+        assert_eq!(c2.len(), 1);
+        assert_eq!(c3.len(), 1);
+        assert_eq!(c2[0].0, c3[0].0);
+        assert_ne!(c2[0].1, c3[0].1);
+    }
+
+    #[test]
+    fn generalized_const_requests_value() {
+        let c = |v: f32| TraceItem::Const {
+            id: ValueId(1),
+            value: crate::tensor::HostTensor::scalar_f32(v),
+            loc: loc(9),
+        };
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![c(1.0)])).unwrap();
+        g.merge(&tr(vec![c(2.0)])).unwrap();
+        let g = Arc::new(g);
+        let mut w = Walker::new(g);
+        let item = c(7.5);
+        let ev = w.advance(&item.key(), &[]).unwrap();
+        assert!(ev.needs_value);
+    }
+}

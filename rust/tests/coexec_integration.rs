@@ -1,0 +1,140 @@
+//! End-to-end integration tests of the Terra engine: tracing phase,
+//! transition to co-execution, fetch/feed/case-select communication,
+//! divergence fallback, and eager-vs-Terra numerical equivalence
+//! (DESIGN.md invariants 1 and 4).
+
+use terra::api::Session;
+use terra::config::ExecMode;
+use terra::error::Result;
+use terra::programs::{Program, StepOutput, TinyLinear};
+use terra::runner::Engine;
+use terra::tensor::HostTensor;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_it_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+fn run_mode(mode: ExecMode, fusion: bool, steps: u64) -> (Vec<(u64, f32)>, HostTensor, terra::runner::EngineStats) {
+    let dir = artifacts_dir();
+    let mut engine = Engine::new(mode, &dir, fusion).unwrap();
+    let mut prog = TinyLinear::new(5);
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    let w = prog.w.as_ref().unwrap().id();
+    let w_final = engine.vars().host(w).unwrap();
+    (report.losses, w_final, report.stats)
+}
+
+#[test]
+fn terra_enters_coexecution_and_matches_eager() {
+    let steps = 23;
+    let (eager_losses, eager_w, _) = run_mode(ExecMode::Eager, true, steps);
+    let (terra_losses, terra_w, stats) = run_mode(ExecMode::Terra, true, steps);
+
+    assert!(stats.enter_coexec >= 1, "Terra must reach co-execution: {stats:?}");
+    assert_eq!(eager_losses.len(), terra_losses.len());
+    for ((s1, l1), (s2, l2)) in eager_losses.iter().zip(terra_losses.iter()) {
+        assert_eq!(s1, s2);
+        assert!((l1 - l2).abs() <= 1e-5 * l1.abs().max(1.0), "loss mismatch at {s1}: {l1} vs {l2}");
+    }
+    assert!(
+        eager_w.allclose(&terra_w, 1e-5, 1e-6),
+        "final weights diverge: {eager_w} vs {terra_w}"
+    );
+}
+
+#[test]
+fn terra_without_fusion_matches_eager() {
+    let steps = 17;
+    let (_, eager_w, _) = run_mode(ExecMode::Eager, true, steps);
+    let (_, terra_w, stats) = run_mode(ExecMode::Terra, false, steps);
+    assert!(stats.enter_coexec >= 1);
+    assert!(eager_w.allclose(&terra_w, 1e-5, 1e-6));
+}
+
+#[test]
+fn terra_lazy_matches_eager() {
+    let steps = 19;
+    let (_, eager_w, _) = run_mode(ExecMode::Eager, true, steps);
+    let (_, lazy_w, stats) = run_mode(ExecMode::TerraLazy, true, steps);
+    assert!(stats.enter_coexec >= 1);
+    assert!(eager_w.allclose(&lazy_w, 1e-5, 1e-6));
+}
+
+/// A program that changes its op path at a given step — after Terra has
+/// already entered co-execution — to exercise the divergence fallback.
+struct PathSwitcher {
+    w: Option<terra::api::Variable>,
+    switch_at: u64,
+}
+
+impl Program for PathSwitcher {
+    fn name(&self) -> &'static str {
+        "path_switcher"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.w = Some(sess.variable("w", HostTensor::scalar_f32(1.0), true)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let x = sess.feed(HostTensor::scalar_f32(0.5 + step as f32 * 0.01))?;
+        let y = w.read().mul(&x)?;
+        // Host-driven control flow the graph has never seen before:
+        let z = if step >= self.switch_at { y.tanh()? } else { y.relu()? };
+        w.assign(&z)?;
+        Ok(StepOutput { loss: Some(z), extra: vec![] })
+    }
+}
+
+/// Pure-eager oracle of the same computation.
+fn oracle(steps: u64, switch_at: u64) -> f32 {
+    let mut w = 1.0f32;
+    for step in 0..steps {
+        let x = 0.5 + step as f32 * 0.01;
+        let y = w * x;
+        w = if step >= switch_at { y.tanh() } else { y.max(0.0) };
+    }
+    w
+}
+
+#[test]
+fn divergence_falls_back_and_stays_correct() {
+    let dir = artifacts_dir();
+    let steps = 16;
+    let switch_at = 9; // Terra enters co-exec at step 2; diverges at 9.
+    let mut engine = Engine::new(ExecMode::Terra, &dir, true).unwrap();
+    let mut prog = PathSwitcher { w: None, switch_at };
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    assert!(report.stats.enter_coexec >= 2, "re-enters co-exec after fallback: {:?}", report.stats);
+    assert!(report.stats.fallbacks >= 1, "must fall back at the switch: {:?}", report.stats);
+    let w = prog.w.as_ref().unwrap().id();
+    let w_final = engine.vars().host(w).unwrap().scalar_value_f32().unwrap();
+    let expect = oracle(steps, switch_at);
+    assert!(
+        (w_final - expect).abs() < 1e-5,
+        "fallback corrupted state: {w_final} vs oracle {expect}"
+    );
+}
+
+#[test]
+fn eager_and_terra_agree_on_multi_path_program() {
+    // Fetch-every-5 makes two distinct iteration shapes; Terra must handle
+    // the Switch correctly for many alternating iterations.
+    let steps = 41;
+    let (eager_losses, eager_w, _) = run_mode(ExecMode::Eager, true, steps);
+    let (terra_losses, terra_w, stats) = run_mode(ExecMode::Terra, true, steps);
+    assert_eq!(eager_losses, {
+        // exact step indices match; values compared with tolerance below
+        terra_losses.iter().map(|(s, _)| *s).zip(eager_losses.iter().map(|(_, l)| *l)).map(|(s, l)| (s, l)).collect::<Vec<_>>()
+    });
+    for ((_, l1), (_, l2)) in eager_losses.iter().zip(terra_losses.iter()) {
+        assert!((l1 - l2).abs() <= 1e-5 * l1.abs().max(1.0));
+    }
+    assert!(eager_w.allclose(&terra_w, 1e-4, 1e-6));
+    assert!(stats.enter_coexec >= 1);
+}

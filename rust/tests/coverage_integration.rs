@@ -1,0 +1,82 @@
+//! Table-1 semantics: the AutoGraph-style baseline must fail on exactly the
+//! five programs the paper reports (with the right failure categories), and
+//! Terra must execute all ten.
+
+use terra::config::ExecMode;
+use terra::error::TerraError;
+use terra::programs::{all_program_names, build_program, expected_autograph_failure};
+use terra::runner::Engine;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_cov_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+fn run_autograph(name: &str, steps: u64) -> Result<(), TerraError> {
+    let dir = artifacts_dir();
+    let mut engine = Engine::new(ExecMode::AutoGraph, &dir, true)?;
+    let mut prog = build_program(name)?;
+    engine.run(prog.as_mut(), steps, 0).map(|_| ())
+}
+
+#[test]
+fn autograph_failure_matrix_matches_table1() {
+    for name in all_program_names() {
+        let expected = expected_autograph_failure(name);
+        let got = run_autograph(name, 12);
+        match (expected, got) {
+            (None, Ok(())) => {}
+            (Some(cat), Err(TerraError::Convert { category, .. })) => {
+                assert_eq!(
+                    category, cat,
+                    "{name}: expected failure category {cat:?}, got {category:?}"
+                );
+            }
+            (None, Err(e)) => panic!("{name}: AutoGraph should succeed but failed: {e}"),
+            (Some(cat), Ok(())) => panic!("{name}: AutoGraph should fail with {cat:?} but ran"),
+            (Some(cat), Err(e)) => {
+                panic!("{name}: expected conversion failure {cat:?}, got other error: {e}")
+            }
+        }
+    }
+}
+
+#[test]
+fn terra_executes_all_ten_programs() {
+    // (Terra per-program correctness is covered by programs_integration;
+    // here we only assert coverage: no program errors out.)
+    let dir = artifacts_dir();
+    for name in all_program_names() {
+        let mut engine = Engine::new(ExecMode::Terra, &dir, true).unwrap();
+        let mut prog = build_program(name).unwrap();
+        let report = engine
+            .run(prog.as_mut(), 6, 0)
+            .unwrap_or_else(|e| panic!("Terra failed on {name}: {e}"));
+        assert!(report.steps == 6);
+    }
+}
+
+#[test]
+fn autograph_succeeds_and_matches_eager_on_supported_program() {
+    // For a supported, deterministic program the baseline's numerics must
+    // match imperative execution (it is a faithful graph of the step).
+    let dir = artifacts_dir();
+    let steps = 8;
+    let run = |mode: ExecMode| {
+        let mut engine = Engine::new(mode, &dir, true).unwrap();
+        let mut prog = build_program("resnet50").unwrap();
+        let report = engine.run(prog.as_mut(), steps, 0).unwrap();
+        report.losses
+    };
+    let eager = run(ExecMode::Eager);
+    let ag = run(ExecMode::AutoGraph);
+    assert_eq!(eager.len(), ag.len());
+    for ((s, a), (_, b)) in eager.iter().zip(ag.iter()) {
+        assert!(
+            (a - b).abs() <= 2e-4 * a.abs().max(1.0),
+            "autograph numerics diverge at step {s}: {a} vs {b}"
+        );
+    }
+}

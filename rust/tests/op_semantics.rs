@@ -1,0 +1,301 @@
+//! Systematic op-semantics suite: every `OpKind` is eager-executed against a
+//! hand-written host oracle, and every differentiable op's tape gradient is
+//! checked against central finite differences. This is the numeric bedrock
+//! under the whole stack — eager, fused segments and artifacts all lower
+//! through the same `ops::lowering`.
+
+use std::sync::Arc;
+use terra::api::{Backend, EagerBackend, Session, VarStore};
+use terra::eager::EagerExecutor;
+use terra::ops::OpKind;
+use terra::runtime::{ArtifactStore, Client};
+use terra::tape::Tape;
+use terra::tensor::{DType, HostTensor};
+
+fn session() -> Session {
+    let dir = std::env::temp_dir().join("terra_opsem_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let client = Client::global().clone();
+    let vars = Arc::new(VarStore::new(client.clone()));
+    let exec = Arc::new(EagerExecutor::new(client, store.clone()));
+    let backend: Box<dyn Backend> = Box::new(EagerBackend::new(exec, vars.clone()));
+    Session::new(backend, store, vars)
+}
+
+fn t(sess: &Session, dims: &[usize], data: Vec<f32>) -> terra::api::Tensor {
+    sess.feed(HostTensor::f32(dims.to_vec(), data).unwrap()).unwrap()
+}
+
+fn assert_vals(got: &HostTensor, want: &[f32]) {
+    let g = got.as_f32().unwrap();
+    assert_eq!(g.len(), want.len(), "length mismatch: {g:?} vs {want:?}");
+    for (a, b) in g.iter().zip(want) {
+        assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{g:?} vs {want:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// forward semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn elementwise_binary_ops() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let a = t(&s, &[4], vec![1.0, -2.0, 3.0, 0.5]);
+    let b = t(&s, &[4], vec![2.0, 2.0, -1.0, 0.25]);
+    assert_vals(&a.add(&b).unwrap().value().unwrap(), &[3.0, 0.0, 2.0, 0.75]);
+    assert_vals(&a.sub(&b).unwrap().value().unwrap(), &[-1.0, -4.0, 4.0, 0.25]);
+    assert_vals(&a.mul(&b).unwrap().value().unwrap(), &[2.0, -4.0, -3.0, 0.125]);
+    assert_vals(&a.div(&b).unwrap().value().unwrap(), &[0.5, -1.0, -3.0, 2.0]);
+    assert_vals(&a.maximum(&b).unwrap().value().unwrap(), &[2.0, 2.0, 3.0, 0.5]);
+    assert_vals(&a.minimum(&b).unwrap().value().unwrap(), &[1.0, -2.0, -1.0, 0.25]);
+}
+
+#[test]
+fn comparison_ops_yield_i32() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let a = t(&s, &[3], vec![1.0, 2.0, 3.0]);
+    let b = t(&s, &[3], vec![2.0, 2.0, 2.0]);
+    let table: Vec<(OpKind, Vec<i32>)> = vec![
+        (OpKind::Greater, vec![0, 0, 1]),
+        (OpKind::GreaterEqual, vec![0, 1, 1]),
+        (OpKind::Less, vec![1, 0, 0]),
+        (OpKind::LessEqual, vec![1, 1, 0]),
+        (OpKind::Equal, vec![0, 1, 0]),
+        (OpKind::NotEqual, vec![1, 0, 1]),
+    ];
+    for (kind, want) in table {
+        let out = s.issue(kind.clone(), &[&a, &b]).unwrap().value().unwrap();
+        assert_eq!(out.dtype(), DType::I32, "{kind:?}");
+        assert_eq!(out.as_i32().unwrap(), want.as_slice(), "{kind:?}");
+    }
+}
+
+#[test]
+fn unary_ops() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let x = t(&s, &[3], vec![0.25, 1.0, 4.0]);
+    assert_vals(&x.sqrt().unwrap().value().unwrap(), &[0.5, 1.0, 2.0]);
+    assert_vals(&x.rsqrt().unwrap().value().unwrap(), &[2.0, 1.0, 0.5]);
+    assert_vals(&x.log().unwrap().value().unwrap(), &[0.25f32.ln(), 0.0, 4.0f32.ln()]);
+    assert_vals(&x.exp().unwrap().value().unwrap(), &[0.25f32.exp(), 1.0f32.exp(), 4.0f32.exp()]);
+    let y = t(&s, &[3], vec![-1.5, 0.0, 2.0]);
+    assert_vals(&y.neg().unwrap().value().unwrap(), &[1.5, 0.0, -2.0]);
+    assert_vals(&y.abs().unwrap().value().unwrap(), &[1.5, 0.0, 2.0]);
+    assert_vals(&y.sign().unwrap().value().unwrap(), &[-1.0, 0.0, 1.0]);
+    assert_vals(&y.relu().unwrap().value().unwrap(), &[0.0, 0.0, 2.0]);
+    assert_vals(&y.tanh().unwrap().value().unwrap(), &[(-1.5f32).tanh(), 0.0, 2.0f32.tanh()]);
+    assert_vals(
+        &y.sigmoid().unwrap().value().unwrap(),
+        &[1.0 / (1.0 + 1.5f32.exp()), 0.5, 1.0 / (1.0 + (-2.0f32).exp())],
+    );
+}
+
+#[test]
+fn select_mixes_by_condition() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let c = s.feed(HostTensor::i32(vec![3], vec![1, 0, 1]).unwrap()).unwrap();
+    let a = t(&s, &[3], vec![10.0, 20.0, 30.0]);
+    let b = t(&s, &[3], vec![-1.0, -2.0, -3.0]);
+    assert_vals(&c.select(&a, &b).unwrap().value().unwrap(), &[10.0, -2.0, 30.0]);
+}
+
+#[test]
+fn matmul_2d_and_batched() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let a = t(&s, &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    let b = t(&s, &[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+    assert_vals(&a.matmul(&b).unwrap().value().unwrap(), &[58.0, 64.0, 139.0, 154.0]);
+    // batched [2,1,2] @ [2,2,1]
+    let x = t(&s, &[2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let y = t(&s, &[2, 2, 1], vec![5.0, 6.0, 7.0, 8.0]);
+    assert_vals(&x.matmul(&y).unwrap().value().unwrap(), &[17.0, 53.0]);
+    // rank-3 @ rank-2 (collapse path)
+    let w = t(&s, &[2, 1], vec![1.0, -1.0]);
+    let z = t(&s, &[2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    assert_vals(&z.matmul(&w).unwrap().value().unwrap(), &[-1.0, -1.0, -1.0, -1.0]);
+}
+
+#[test]
+fn shape_ops() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let x = t(&s, &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    assert_vals(
+        &x.transpose(&[1, 0]).unwrap().value().unwrap(),
+        &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0],
+    );
+    assert_vals(&x.reshape(&[3, 2]).unwrap().value().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    assert_vals(&x.slice(&[0, 1], &[2, 2]).unwrap().value().unwrap(), &[2.0, 3.0, 5.0, 6.0]);
+    assert_vals(
+        &x.pad(&[0, 1], &[0, 0]).unwrap().value().unwrap(),
+        &[0.0, 1.0, 2.0, 3.0, 0.0, 4.0, 5.0, 6.0],
+    );
+    let row = t(&s, &[3], vec![1.0, 2.0, 3.0]);
+    assert_vals(
+        &row.broadcast_to(&[2, 3]).unwrap().value().unwrap(),
+        &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0],
+    );
+    let a = t(&s, &[1, 2], vec![1.0, 2.0]);
+    let b = t(&s, &[1, 2], vec![3.0, 4.0]);
+    assert_vals(&s.concat(&[&a, &b], 0).unwrap().value().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    assert_vals(&s.concat(&[&a, &b], 1).unwrap().value().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+}
+
+#[test]
+fn reductions_and_softmax() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let x = t(&s, &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    assert_vals(&x.reduce_sum(&[1], false).unwrap().value().unwrap(), &[6.0, 15.0]);
+    assert_vals(&x.reduce_mean(&[0], false).unwrap().value().unwrap(), &[2.5, 3.5, 4.5]);
+    assert_vals(&x.reduce_max(&[1], false).unwrap().value().unwrap(), &[3.0, 6.0]);
+    assert_vals(&x.reduce_sum(&[0, 1], false).unwrap().value().unwrap(), &[21.0]);
+    let sm = x.softmax(1).unwrap().value().unwrap();
+    let row: f32 = sm.as_f32().unwrap()[..3].iter().sum();
+    assert!((row - 1.0).abs() < 1e-5);
+    let lsm = x.log_softmax(1).unwrap().value().unwrap();
+    for (a, b) in lsm.as_f32().unwrap().iter().zip(sm.as_f32().unwrap()) {
+        assert!((a.exp() - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn take_onehot_convert() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let table = t(&s, &[3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    let idx = s.feed(HostTensor::i32(vec![2], vec![2, 0]).unwrap()).unwrap();
+    assert_vals(&table.take(&idx, 0).unwrap().value().unwrap(), &[5.0, 6.0, 1.0, 2.0]);
+    assert_vals(
+        &idx.one_hot(3).unwrap().value().unwrap(),
+        &[0.0, 0.0, 1.0, 1.0, 0.0, 0.0],
+    );
+    let f = idx.convert(DType::F32).unwrap().value().unwrap();
+    assert_vals(&f, &[2.0, 0.0]);
+    let back = t(&s, &[2], vec![2.9, -1.2]).convert(DType::I32).unwrap().value().unwrap();
+    assert_eq!(back.as_i32().unwrap(), &[2, -1]);
+}
+
+#[test]
+fn pow_ops() {
+    let s = session();
+    s.begin_step(0).unwrap();
+    let x = t(&s, &[3], vec![2.0, 3.0, 4.0]);
+    assert_vals(&x.pow_scalar(2.0).unwrap().value().unwrap(), &[4.0, 9.0, 16.0]);
+    let e = t(&s, &[3], vec![0.5, 1.0, 2.0]);
+    assert_vals(&x.pow(&e).unwrap().value().unwrap(), &[2.0f32.sqrt(), 3.0, 16.0]);
+}
+
+// ---------------------------------------------------------------------------
+// gradients vs central finite differences
+// ---------------------------------------------------------------------------
+
+/// d/dx[i] of (sum of f(x)) via the tape, compared against central FD.
+fn grad_check(f: impl Fn(&terra::api::Tensor) -> terra::error::Result<terra::api::Tensor>, x0: Vec<f32>, tol: f32) {
+    let s = session();
+    let n = x0.len();
+    let v = s.variable("x", HostTensor::f32(vec![n], x0.clone()).unwrap(), true).unwrap();
+    s.begin_step(0).unwrap();
+    let tape = Tape::start(&s).unwrap();
+    let y = f(&v.read()).unwrap().reduce_sum(&[0], false).unwrap();
+    let grads = tape.gradient(&y, &[&v]).unwrap();
+    let analytic = grads[0].value().unwrap().as_f32().unwrap().to_vec();
+    s.end_step().unwrap();
+
+    // FD oracle over a fresh eager session per probe point.
+    let eps = 1e-3f32;
+    for i in 0..n {
+        let eval = |xs: &[f32]| -> f32 {
+            let s2 = session();
+            s2.begin_step(0).unwrap();
+            let xt = t(&s2, &[n], xs.to_vec());
+            let y = f(&xt).unwrap().reduce_sum(&[0], false).unwrap();
+            y.value().unwrap().scalar_value_f32().unwrap()
+        };
+        let mut hi = x0.clone();
+        hi[i] += eps;
+        let mut lo = x0.clone();
+        lo[i] -= eps;
+        let fd = (eval(&hi) - eval(&lo)) / (2.0 * eps);
+        assert!(
+            (analytic[i] - fd).abs() <= tol * fd.abs().max(1.0),
+            "component {i}: analytic {} vs fd {fd}",
+            analytic[i]
+        );
+    }
+}
+
+#[test]
+fn fd_grad_elementwise_chain() {
+    grad_check(|x| x.mul(x)?.tanh(), vec![0.3, -0.6, 0.9], 2e-2);
+}
+
+#[test]
+fn fd_grad_exp_log_mix() {
+    grad_check(|x| x.exp()?.add_scalar(1.0)?.log(), vec![0.1, 0.7, -0.4], 2e-2);
+}
+
+#[test]
+fn fd_grad_sigmoid_mul() {
+    grad_check(|x| x.sigmoid()?.mul(x), vec![0.5, -1.0, 2.0], 2e-2);
+}
+
+#[test]
+fn fd_grad_softmax_weighted() {
+    grad_check(
+        |x| {
+            let sm = x.reshape(&[1, 3])?.softmax(1)?;
+            let w = x.session().constant(HostTensor::f32(vec![1, 3], vec![1.0, 3.0, -2.0])?)?;
+            sm.mul(&w)?.reduce_sum(&[0, 1], false)?.reshape(&[1])
+        },
+        vec![0.2, -0.1, 0.4],
+        2e-2,
+    );
+}
+
+#[test]
+fn fd_grad_div_rsqrt() {
+    grad_check(|x| x.add_scalar(3.0)?.rsqrt()?.div_scalar(2.0), vec![0.5, 1.5, 2.5], 2e-2);
+}
+
+#[test]
+fn fd_grad_maximum_branches() {
+    // away from the kink so FD is stable
+    grad_check(
+        |x| {
+            let c = x.session().constant(HostTensor::f32(vec![3], vec![1.0, -5.0, 0.0])?)?;
+            x.maximum(&c)
+        },
+        vec![2.0, -7.0, 3.0],
+        2e-2,
+    );
+}
+
+#[test]
+fn fd_grad_matmul_quadratic() {
+    grad_check(
+        |x| {
+            let m = x.reshape(&[1, 3])?;
+            m.matmul(&m.transpose(&[1, 0])?)?.reshape(&[1])
+        },
+        vec![0.7, -0.2, 1.1],
+        2e-2,
+    );
+}
+
+#[test]
+fn fd_grad_reduce_mean_pad_slice() {
+    grad_check(
+        |x| x.pad(&[1], &[1])?.slice(&[0], &[4])?.reduce_mean(&[0], true),
+        vec![0.3, 0.6, -0.9],
+        2e-2,
+    );
+}

@@ -1,0 +1,117 @@
+//! Cross-cutting integration tests: every benchmark program must train under
+//! both the imperative engine and Terra co-execution, with matching numerics
+//! for the deterministic (RNG-free) programs.
+
+use terra::config::ExecMode;
+use terra::programs::build_program;
+use terra::runner::Engine;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_prog_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+/// Run a program for `steps` and return (losses, per-variable final values).
+fn run(name: &str, mode: ExecMode, steps: u64) -> (Vec<(u64, f32)>, Vec<terra::tensor::HostTensor>, terra::runner::EngineStats) {
+    let dir = artifacts_dir();
+    let mut engine = Engine::new(mode, &dir, true).unwrap();
+    let mut prog = build_program(name).unwrap();
+    let report = engine
+        .run(prog.as_mut(), steps, 0)
+        .unwrap_or_else(|e| panic!("{name} under {mode:?} failed: {e}"));
+    let vars: Vec<_> = engine
+        .vars()
+        .ids()
+        .into_iter()
+        .map(|id| engine.vars().host(id).unwrap())
+        .collect();
+    (report.losses, vars, report.stats)
+}
+
+fn check_program(name: &str, steps: u64, deterministic: bool) {
+    let (el, ev, _) = run(name, ExecMode::Eager, steps);
+    let (tl, tv, stats) = run(name, ExecMode::Terra, steps);
+    assert!(stats.enter_coexec >= 1, "{name}: never entered co-execution: {stats:?}");
+    assert!(el.iter().all(|(_, l)| l.is_finite()), "{name}: eager loss not finite");
+    assert!(tl.iter().all(|(_, l)| l.is_finite()), "{name}: terra loss not finite");
+    if deterministic {
+        for ((s, a), (_, b)) in el.iter().zip(tl.iter()) {
+            assert!(
+                (a - b).abs() <= 2e-4 * a.abs().max(1.0),
+                "{name}: loss diverges at step {s}: eager {a} vs terra {b}"
+            );
+        }
+        assert_eq!(ev.len(), tv.len());
+        for (i, (a, b)) in ev.iter().zip(tv.iter()).enumerate() {
+            assert!(
+                a.allclose(b, 5e-3, 1e-4),
+                "{name}: final var {i} mismatch: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resnet50_trains_identically() {
+    check_program("resnet50", 8, true);
+}
+
+#[test]
+fn dropblock_trains() {
+    // Uses RNG dropout masks: numerics differ by construction.
+    check_program("dropblock", 12, false);
+}
+
+#[test]
+fn sdpoint_trains_identically() {
+    check_program("sdpoint", 12, true);
+}
+
+#[test]
+fn dcgan_trains() {
+    check_program("dcgan", 8, false);
+}
+
+#[test]
+fn yolov3_trains_identically() {
+    check_program("yolov3", 8, true);
+}
+
+#[test]
+fn faster_rcnn_trains_identically() {
+    check_program("faster_rcnn", 8, true);
+}
+
+#[test]
+fn bert_cls_trains_identically() {
+    check_program("bert_cls", 8, true);
+}
+
+#[test]
+fn bert_qa_trains_identically() {
+    check_program("bert_qa", 8, true);
+}
+
+#[test]
+fn gpt2_trains_identically_across_buckets() {
+    // Buckets force several tracing<->coexec transitions.
+    let (_, _, stats) = run("gpt2", ExecMode::Terra, 14);
+    assert!(stats.enter_coexec >= 2, "gpt2 should retrace per bucket: {stats:?}");
+    check_program("gpt2", 14, true);
+}
+
+#[test]
+fn music_transformer_trains_identically() {
+    check_program("music_transformer", 10, true);
+}
+
+#[test]
+fn losses_decrease_under_terra() {
+    // Training sanity: first-vs-last loss for a deterministic program.
+    let (losses, _, _) = run("resnet50", ExecMode::Terra, 20);
+    let first = losses.first().unwrap().1;
+    let last = losses.last().unwrap().1;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}

@@ -1,0 +1,246 @@
+//! Property tests (hand-rolled generators; proptest is unavailable offline)
+//! over the coordinator invariants listed in DESIGN.md §4:
+//!
+//! 1. eager/Terra numerical equivalence on random RNG-free programs,
+//! 2. TraceGraph merge soundness & idempotence on random trace families,
+//! 3. case-assignment totality: every merged trace replays through the
+//!    walker with a consistent case/variant assignment,
+//! 4. fallback safety under randomized path switching.
+
+use std::sync::Arc;
+use terra::api::{Session, Variable};
+use terra::config::ExecMode;
+use terra::data::Rng;
+use terra::error::Result;
+use terra::ops::{OpDef, OpKind};
+use terra::programs::{Program, StepOutput};
+use terra::runner::Engine;
+use terra::tensor::{HostTensor, TensorType};
+use terra::tracegraph::{GraphSrc, NodeId, TraceGraph, Walker};
+use terra::trace::{FeedKind, Location, ResolvedSrc, Trace, TraceItem, ValueId, ValueRef};
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_prop_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+// ---------------------------------------------------------------------------
+// Random trace generator: builds families of traces that share structure but
+// branch at random positions (like real multi-path programs).
+// ---------------------------------------------------------------------------
+
+fn loc(line: u32) -> Location {
+    Location { file: "prop.rs", line, col: 1, scope: 0 }
+}
+
+/// A random linear trace of unary ops over one feed; `branch_lines` lets two
+/// traces share everything except chosen positions.
+fn random_trace(rng: &mut Rng, len: usize, variant: u32) -> Trace {
+    let mut items = vec![TraceItem::Feed {
+        id: ValueId(1),
+        ty: TensorType::f32(&[4]),
+        loc: loc(1),
+        kind: FeedKind::Data,
+    }];
+    let mut next = 2u64;
+    for i in 0..len {
+        // 20% of positions are variant-dependent (different op kind/loc).
+        let variant_dependent = rng.below(5) == 0;
+        let kinds = [OpKind::Relu, OpKind::Tanh, OpKind::Neg, OpKind::Abs];
+        let kind = if variant_dependent {
+            kinds[(variant as usize + rng.below(2)) % kinds.len()].clone()
+        } else {
+            kinds[rng.below(kinds.len())].clone()
+        };
+        let line = if variant_dependent { 1000 + i as u32 * 10 + variant } else { 10 + i as u32 };
+        items.push(TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[4])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(next - 1))],
+            outputs: vec![ValueId(next)],
+        });
+        next += 1;
+    }
+    items.push(TraceItem::Fetch { src: ValueRef::Out(ValueId(next - 1)), loc: loc(9999) });
+    Trace::resolve(items, 0).unwrap()
+}
+
+fn replay(graph: &Arc<TraceGraph>, t: &Trace) -> Result<()> {
+    let mut w = Walker::new(graph.clone());
+    let mut node_of: Vec<NodeId> = Vec::with_capacity(t.len());
+    for (i, item) in t.items.iter().enumerate() {
+        let srcs: Vec<GraphSrc> = t.resolved[i]
+            .iter()
+            .map(|r| match r {
+                ResolvedSrc::Var(v) => GraphSrc::Var(*v),
+                ResolvedSrc::Item(p) => GraphSrc::Node { node: node_of[p.item], slot: p.slot },
+            })
+            .collect();
+        let ev = w.advance(&item.key(), &srcs)?;
+        node_of.push(ev.node);
+    }
+    w.finish()?;
+    Ok(())
+}
+
+#[test]
+fn prop_merge_is_idempotent_and_replayable() {
+    for seed in 0..25u64 {
+        let mut gen_rng = Rng::new(seed);
+        let len = 4 + gen_rng.below(40);
+        // A family of up to 4 structural variants.
+        let n_variants = 1 + gen_rng.below(3) as u32;
+        let traces: Vec<Trace> = (0..=n_variants)
+            .map(|v| {
+                // Regenerate with a per-variant rng derived from the seed so
+                // shared positions match exactly.
+                let mut r = Rng::new(seed);
+                random_trace(&mut r, len, v)
+            })
+            .collect();
+        let mut g = TraceGraph::new();
+        for t in &traces {
+            g.merge(t).unwrap();
+        }
+        // Invariant 2a: re-merging any covered trace changes nothing.
+        for t in &traces {
+            let rep = g.merge(t).unwrap();
+            assert!(!rep.changed, "seed {seed}: re-merge changed the graph: {rep:?}");
+        }
+        // Invariant 2b: the graph stays a DAG with a valid topo order.
+        g.topo_order().unwrap_or_else(|e| panic!("seed {seed}: cyclic graph: {e}"));
+        // Invariant 3: every member of the family replays cleanly.
+        let g = Arc::new(g);
+        for (i, t) in traces.iter().enumerate() {
+            replay(&g, t).unwrap_or_else(|e| panic!("seed {seed}: trace {i} diverged: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_unmerged_variant_diverges() {
+    for seed in 100..115u64 {
+        let mut r0 = Rng::new(seed);
+        let len = 6 + r0.below(30);
+        let t0 = {
+            let mut r = Rng::new(seed);
+            random_trace(&mut r, len, 0)
+        };
+        let t9 = {
+            let mut r = Rng::new(seed);
+            random_trace(&mut r, len, 9)
+        };
+        let mut g = TraceGraph::new();
+        g.merge(&t0).unwrap();
+        let g = Arc::new(g);
+        // A structurally different variant must be detected, never silently
+        // executed (unless the generator produced no variant positions).
+        if t9.items.iter().map(|i| i.key()).ne(t0.items.iter().map(|i| i.key())) {
+            assert!(replay(&g, &t9).is_err(), "seed {seed}: novel trace not detected");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random programs: eager vs Terra equivalence (invariant 1) and fallback
+// safety under random path switching (invariant 4).
+// ---------------------------------------------------------------------------
+
+struct RandomProgram {
+    seed: u64,
+    w: Option<Variable>,
+    n_layers: usize,
+    n_paths: usize,
+}
+
+impl Program for RandomProgram {
+    fn name(&self) -> &'static str {
+        "random_program"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(self.seed);
+        self.w = Some(sess.variable(
+            "w",
+            HostTensor::f32(vec![4, 4], rng.normal_vec(16, 0.4))?,
+            true,
+        )?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let mut rng = Rng::for_step(self.seed, step);
+        let x = sess.feed(HostTensor::f32(vec![4, 4], rng.normal_vec(16, 1.0))?)?;
+        let tape = terra::tape::Tape::start(sess)?;
+        let mut h = x.matmul(&w.read())?;
+        // Host-driven random path: which activations run this step.
+        let path = rng.below(self.n_paths);
+        for i in 0..self.n_layers {
+            h = match (i + path) % 3 {
+                0 => h.relu()?,
+                1 => h.tanh()?,
+                _ => h.abs()?.add_scalar(1.0)?.log()?,
+            };
+        }
+        let loss = h.mul(&h)?.reduce_mean(&[0, 1], false)?;
+        let grads = tape.gradient(&loss, &[w])?;
+        w.assign(&w.read().sub(&grads[0].mul_scalar(0.01)?)?)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+}
+
+#[test]
+fn prop_random_programs_match_eager() {
+    let dir = artifacts_dir();
+    for seed in 0..6u64 {
+        let steps = 14;
+        let run = |mode: ExecMode| -> (Vec<(u64, f32)>, HostTensor) {
+            let mut engine = Engine::new(mode, &dir, true).unwrap();
+            let mut prog = RandomProgram {
+                seed,
+                w: None,
+                n_layers: 2 + (seed as usize % 3),
+                n_paths: 1 + (seed as usize % 3),
+            };
+            let report = engine.run(&mut prog, steps, 0).unwrap();
+            let w = prog.w.as_ref().unwrap().id();
+            (report.losses, engine.vars().host(w).unwrap())
+        };
+        let (el, ew) = run(ExecMode::Eager);
+        let (tl, tw) = run(ExecMode::Terra);
+        for ((s, a), (_, b)) in el.iter().zip(tl.iter()) {
+            assert!(
+                (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                "seed {seed} step {s}: {a} vs {b}"
+            );
+        }
+        assert!(ew.allclose(&tw, 1e-4, 1e-5), "seed {seed}: weights diverge");
+    }
+}
+
+#[test]
+fn prop_fallbacks_never_corrupt_state() {
+    // Heavily multi-path program: every step may diverge; weights must still
+    // track the eager oracle exactly (staged-commit safety).
+    let dir = artifacts_dir();
+    for seed in 20..24u64 {
+        let steps = 20;
+        let run = |mode: ExecMode| -> (HostTensor, terra::runner::EngineStats) {
+            let mut engine = Engine::new(mode, &dir, true).unwrap();
+            let mut prog = RandomProgram { seed, w: None, n_layers: 3, n_paths: 3 };
+            let report = engine.run(&mut prog, steps, 0).unwrap();
+            let w = prog.w.as_ref().unwrap().id();
+            (engine.vars().host(w).unwrap(), report.stats)
+        };
+        let (ew, _) = run(ExecMode::Eager);
+        let (tw, stats) = run(ExecMode::Terra);
+        assert!(
+            ew.allclose(&tw, 1e-4, 1e-5),
+            "seed {seed}: weights diverge after {} fallbacks",
+            stats.fallbacks
+        );
+    }
+}
