@@ -12,9 +12,9 @@ use terra::config::{ExecMode, Json};
 use terra::programs::build_program;
 use terra::runner::Engine;
 
-fn run(mode: ExecMode, fusion: bool, loss_every: u64, cfg: BenchConfig) -> f64 {
+fn run(mode: ExecMode, fusion: bool, loss_every: u64, opt_level: u8, cfg: BenchConfig) -> f64 {
     let artifacts = std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let mut engine = Engine::new(mode, &artifacts, fusion).unwrap();
+    let mut engine = Engine::with_opt_level(mode, &artifacts, fusion, opt_level).unwrap();
     engine.loss_every = loss_every;
     let mut prog = build_program("resnet50").unwrap();
     engine.run(prog.as_mut(), cfg.steps, cfg.warmup).unwrap().steps_per_sec
@@ -23,19 +23,21 @@ fn run(mode: ExecMode, fusion: bool, loss_every: u64, cfg: BenchConfig) -> f64 {
 fn main() {
     let cfg = BenchConfig::default();
     println!("ablations on resnet50, {} steps ({} warmup)", cfg.steps, cfg.warmup);
-    let eager = run(ExecMode::Eager, true, 1, cfg);
+    let eager = run(ExecMode::Eager, true, 1, 2, cfg);
     let rows = vec![
-        ("eager (baseline)", ExecMode::Eager, true, 1u64),
-        ("terra, no fusion, fetch every step", ExecMode::Terra, false, 1),
-        ("terra, fusion, fetch every step", ExecMode::Terra, true, 1),
-        ("terra, fusion, fetch every 10 steps", ExecMode::Terra, true, 10),
-        ("terra, fusion, never fetch", ExecMode::Terra, true, 0),
-        ("terra-lazy, fusion, fetch every step", ExecMode::TerraLazy, true, 1),
+        ("eager (baseline)", ExecMode::Eager, true, 1u64, 2u8),
+        ("terra, no fusion, fetch every step", ExecMode::Terra, false, 1, 2),
+        ("terra, fusion, fetch every step", ExecMode::Terra, true, 1, 2),
+        ("terra, fusion, fetch every 10 steps", ExecMode::Terra, true, 10, 2),
+        ("terra, fusion, never fetch", ExecMode::Terra, true, 0, 2),
+        ("terra, fusion, opt off", ExecMode::Terra, true, 1, 0),
+        ("terra, fusion, opt dce-only", ExecMode::Terra, true, 1, 1),
+        ("terra-lazy, fusion, fetch every step", ExecMode::TerraLazy, true, 1, 2),
     ];
     let mut table = Vec::new();
     let mut json = Vec::new();
-    for (label, mode, fusion, le) in rows {
-        let sps = run(mode, fusion, le, cfg);
+    for (label, mode, fusion, le, opt) in rows {
+        let sps = run(mode, fusion, le, opt, cfg);
         table.push(vec![
             label.to_string(),
             format!("{sps:.2}"),

@@ -36,6 +36,28 @@ fn main() {
             let cell = match run_program(name, mode, fusion, cfg) {
                 Ok(r) => {
                     jrow.push((label, Json::Num(r.steps_per_sec / eager)));
+                    if label == "terra+XLA" {
+                        // Optimizer + cache trajectory for the BENCH_*.json
+                        // history: compiled-segment size, pass reductions and
+                        // measured-window compile/cache deltas.
+                        let st = r.stats;
+                        let bd = r.breakdown_per_step;
+                        let num = |v: u64| Json::Num(v as f64);
+                        jrow.push((
+                            "terra_xla_detail",
+                            obj(vec![
+                                ("plan_segment_nodes", num(st.plan_segment_nodes)),
+                                ("plan_segments", num(st.plan_segments)),
+                                ("segments_compiled", num(st.segments_compiled)),
+                                ("opt_rewrites", num(st.opt_rewrites)),
+                                ("opt_nodes_removed", num(st.opt_nodes_removed)),
+                                ("opt_nodes_folded", num(st.opt_nodes_folded)),
+                                ("cache_hits_delta", num(bd.cache_hits)),
+                                ("cache_misses_delta", num(bd.cache_misses)),
+                                ("compile_count_delta", num(bd.compile_count)),
+                            ]),
+                        ));
+                    }
                     format!("{:.2}x", r.steps_per_sec / eager)
                 }
                 Err(TerraError::Convert { category, .. }) => {

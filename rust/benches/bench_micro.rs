@@ -130,8 +130,73 @@ fn main() {
         push("single-op XLA compile (cold)", mean / 1e6, "ms", &mut json);
     }
 
+    // 6. Graph-optimization pipeline: cost and payoff on a redundant trace
+    // (runs between trace coverage and plan compilation on the hot
+    // re-trace path, so its latency matters).
+    {
+        let trace = redundant_trace(256);
+        let mut reduction = 0usize;
+        let (_, per_sec) = time_budgeted(
+            || {
+                let mut g = TraceGraph::new();
+                g.merge(&trace).unwrap();
+                let before = g.live_len();
+                let pm = terra::opt::PassManager::standard(2);
+                pm.run(&mut g, None).unwrap();
+                reduction = before - g.live_len();
+            },
+            Duration::from_millis(300),
+        );
+        push("opt pipeline on 256-op redundant trace", per_sec, "runs/s", &mut json);
+        push("opt pipeline node reduction", reduction as f64, "nodes", &mut json);
+    }
+
+    // 7. Process-wide executable-cache behaviour across the whole bench run.
+    {
+        let global = ExecCache::global();
+        push("exec cache hits (process)", global.hits() as f64, "count", &mut json);
+        push("exec cache misses (process)", global.misses() as f64, "count", &mut json);
+        push("xla compiles (process)", client.compile_count() as f64, "count", &mut json);
+    }
+
     print_table("micro-benchmarks (§Perf)", &["metric", "value", "unit"], &rows);
     write_json_report("micro", Json::Arr(json));
+}
+
+/// A trace with systematic redundancy: pairs of identical relu ops (CSE
+/// bait) whose second member is never consumed (DCE bait).
+fn redundant_trace(n: usize) -> Trace {
+    let mut items = vec![TraceItem::Feed {
+        id: ValueId(1),
+        ty: TensorType::f32(&[8]),
+        loc: Location { file: "bench.rs", line: 1, col: 1, scope: 0 },
+        kind: FeedKind::Data,
+    }];
+    let mut next = 2u64;
+    let mut last_live = 1u64;
+    for i in 0..n / 2 {
+        for dup in 0..2u64 {
+            let loc = Location {
+                file: "bench.rs",
+                line: 10 + i as u32,
+                col: 1 + dup as u32 * 40,
+                scope: 0,
+            };
+            items.push(TraceItem::Op {
+                def: OpDef::new(OpKind::Relu, vec![TensorType::f32(&[8])]),
+                loc,
+                inputs: vec![ValueRef::Out(ValueId(last_live))],
+                outputs: vec![ValueId(next + dup)],
+            });
+        }
+        last_live = next; // only the first of each pair feeds forward
+        next += 2;
+    }
+    items.push(TraceItem::Fetch {
+        src: ValueRef::Out(ValueId(last_live)),
+        loc: Location { file: "bench.rs", line: 9999, col: 1, scope: 0 },
+    });
+    Trace::resolve(items, 0).unwrap()
 }
 
 fn synthetic_trace(n: usize) -> Trace {

@@ -4,4 +4,4 @@ pub mod json;
 mod run_config;
 
 pub use json::Json;
-pub use run_config::{ExecMode, RunConfig};
+pub use run_config::{default_opt_level, ExecMode, RunConfig};

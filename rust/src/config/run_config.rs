@@ -61,6 +61,20 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Print the per-step breakdown (Figure 6).
     pub breakdown: bool,
+    /// Graph-optimization level for the symbolic plan (`opt` pass pipeline):
+    /// 0 = off, 1 = dead-code elimination only, >=2 = full pipeline
+    /// (const-fold, algebraic, CSE, DCE to a fixpoint).
+    pub opt_level: u8,
+}
+
+/// Default optimization level: `TERRA_OPT_LEVEL` env override, else the full
+/// pipeline (the optimizer is semantics-preserving by construction, so it is
+/// on unless explicitly disabled).
+pub fn default_opt_level() -> u8 {
+    std::env::var("TERRA_OPT_LEVEL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
 }
 
 impl Default for RunConfig {
@@ -75,6 +89,7 @@ impl Default for RunConfig {
             seed: 0x7e11a,
             artifacts_dir: std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             breakdown: false,
+            opt_level: default_opt_level(),
         }
     }
 }
@@ -115,6 +130,9 @@ impl RunConfig {
         if let Some(v) = json.get("breakdown").and_then(|j| j.as_bool()) {
             self.breakdown = v;
         }
+        if let Some(v) = json.get("opt_level").and_then(Json::as_usize) {
+            self.opt_level = v.min(u8::MAX as usize) as u8;
+        }
         Ok(())
     }
 
@@ -144,5 +162,14 @@ mod tests {
     fn mode_parsing() {
         assert_eq!(ExecMode::parse("terra-lazy").unwrap(), ExecMode::TerraLazy);
         assert!(ExecMode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn opt_level_from_json() {
+        let j = Json::parse(r#"{"opt_level": 0}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.opt_level, 0);
+        let j = Json::parse(r#"{"opt_level": 2}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().opt_level, 2);
     }
 }

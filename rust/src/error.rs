@@ -4,8 +4,10 @@
 //! categories (§2.2, Figure 1, Table 1): the AutoGraph-style baseline reports
 //! these; Terra itself never raises them because co-execution keeps all host
 //! features on the imperative side.
-
-use thiserror::Error;
+//!
+//! Error plumbing is hand-rolled (no `thiserror`): the build environment is
+//! fully offline, so the crate keeps its dependency set to the vendored `xla`
+//! interpreter only.
 
 /// Failure categories of the static-compilation approach (paper §2.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -36,49 +38,69 @@ impl std::fmt::Display for ConvertFailure {
 }
 
 /// Top-level error type for all Terra subsystems.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum TerraError {
-    #[error("shape error: {0}")]
     Shape(String),
-
-    #[error("dtype error: {0}")]
     DType(String),
-
-    #[error("graph conversion failure ({category}): {context}")]
     Convert {
         category: ConvertFailure,
         context: String,
     },
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("trace error: {0}")]
     Trace(String),
-
-    #[error("co-execution error: {0}")]
     CoExec(String),
-
     /// The current iteration's trace is not covered by the TraceGraph: the
     /// engine cancels the GraphRunner and falls back to the tracing phase.
-    #[error("trace diverged: {0}")]
     Diverged(String),
-
     /// Co-execution channel cancelled (GraphRunner shutdown path).
-    #[error("co-execution cancelled")]
     Cancelled,
-
-    #[error("config error: {0}")]
     Config(String),
+    Xla(xla::Error),
+    Io(std::io::Error),
+}
 
-    #[error(transparent)]
-    Xla(#[from] xla::Error),
+impl std::fmt::Display for TerraError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TerraError::Shape(m) => write!(f, "shape error: {m}"),
+            TerraError::DType(m) => write!(f, "dtype error: {m}"),
+            TerraError::Convert { category, context } => {
+                write!(f, "graph conversion failure ({category}): {context}")
+            }
+            TerraError::Runtime(m) => write!(f, "runtime error: {m}"),
+            TerraError::Artifact(m) => write!(f, "artifact error: {m}"),
+            TerraError::Trace(m) => write!(f, "trace error: {m}"),
+            TerraError::CoExec(m) => write!(f, "co-execution error: {m}"),
+            TerraError::Diverged(m) => write!(f, "trace diverged: {m}"),
+            TerraError::Cancelled => write!(f, "co-execution cancelled"),
+            TerraError::Config(m) => write!(f, "config error: {m}"),
+            TerraError::Xla(e) => write!(f, "{e}"),
+            TerraError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+impl std::error::Error for TerraError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TerraError::Xla(e) => Some(e),
+            TerraError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for TerraError {
+    fn from(e: xla::Error) -> Self {
+        TerraError::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for TerraError {
+    fn from(e: std::io::Error) -> Self {
+        TerraError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, TerraError>;

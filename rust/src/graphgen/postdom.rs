@@ -39,8 +39,10 @@ pub fn ipdoms(graph: &TraceGraph) -> Result<Vec<Option<NodeId>>> {
     };
 
     // Reverse topological order: children are finalized before parents.
+    // Tombstoned nodes (optimizer removals) are off every START->END path and
+    // have no post-dominator.
     for &n in order.iter().rev() {
-        if n == END {
+        if n == END || graph.node(n).removed {
             continue;
         }
         let children = &graph.node(n).children;

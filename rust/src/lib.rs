@@ -10,7 +10,8 @@
 //! * substrates: [`tensor`], [`ops`], [`runtime`], [`eager`], [`config`],
 //!   [`data`], [`nn`], [`tape`]
 //! * the paper's system: [`api`] (imperative program surface), [`trace`],
-//!   [`tracegraph`], [`graphgen`], [`symbolic`], [`runner`]
+//!   [`tracegraph`], [`opt`] (graph-optimization passes between trace
+//!   merging and plan generation), [`graphgen`], [`symbolic`], [`runner`]
 //! * evaluation: [`baselines`], [`programs`], [`metrics`], [`bench`]
 
 pub mod api;
@@ -24,6 +25,7 @@ pub mod graphgen;
 pub mod metrics;
 pub mod nn;
 pub mod ops;
+pub mod opt;
 pub mod programs;
 pub mod runner;
 pub mod runtime;

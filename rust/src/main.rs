@@ -12,6 +12,7 @@
 use terra::config::{ExecMode, RunConfig};
 use terra::error::{Result, TerraError};
 use terra::graphgen::{generate_plan, GenOptions};
+use terra::opt::PassManager;
 use terra::programs::{all_program_names, build_program, expected_autograph_failure};
 use terra::runner::Engine;
 use std::collections::HashMap;
@@ -58,6 +59,9 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if flags.contains_key("no-fusion") {
         cfg.fusion = false;
     }
+    if let Some(v) = flags.get("opt-level") {
+        cfg.opt_level = v.parse().map_err(|_| TerraError::Config("bad --opt-level".into()))?;
+    }
     if let Some(v) = flags.get("artifacts") {
         cfg.artifacts_dir = v.clone();
     }
@@ -69,16 +73,18 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
-    let mut engine = Engine::new(cfg.mode, &cfg.artifacts_dir, cfg.fusion)?;
+    let mut engine =
+        Engine::with_opt_level(cfg.mode, &cfg.artifacts_dir, cfg.fusion, cfg.opt_level)?;
     if let Some(v) = flags.get("loss-every") {
         engine.loss_every = v.parse().map_err(|_| TerraError::Config("bad --loss-every".into()))?;
     }
     let mut prog = build_program(&cfg.program)?;
     println!(
-        "running {} under {} (fusion={}) for {} steps ...",
+        "running {} under {} (fusion={}, opt-level={}) for {} steps ...",
         cfg.program,
         cfg.mode.name(),
         cfg.fusion,
+        cfg.opt_level,
         cfg.steps
     );
     let report = engine.run(prog.as_mut(), cfg.steps as u64, cfg.warmup_steps as u64)?;
@@ -93,7 +99,37 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             b.py_exec_ms, b.py_stall_ms, b.graph_exec_ms, b.graph_stall_ms
         );
     }
+    print_opt_stats(&report);
     Ok(())
+}
+
+fn print_opt_stats(report: &terra::runner::RunReport) {
+    let s = report.stats;
+    if report.opt.pipelines > 0 {
+        println!(
+            "opt: {} pipeline run(s), last plan {} -> {} nodes; {} rewrites, {} removed, {} folded",
+            report.opt.pipelines,
+            report.opt.last_nodes_before,
+            report.opt.last_nodes_after,
+            s.opt_rewrites,
+            s.opt_nodes_removed,
+            s.opt_nodes_folded,
+        );
+        for (name, p) in &report.opt.per_pass {
+            println!(
+                "  {name:<12} {:>6} rewrites {:>6} removed {:>6} folded",
+                p.rewrites, p.nodes_removed, p.nodes_folded
+            );
+        }
+    }
+    println!(
+        "plan: {} segments, {} compiled op nodes | measured window: {} cache hits, {} misses, {} compiles",
+        s.plan_segments,
+        s.plan_segment_nodes,
+        report.breakdown_per_step.cache_hits,
+        report.breakdown_per_step.cache_misses,
+        report.breakdown_per_step.compile_count,
+    );
 }
 
 fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
@@ -123,7 +159,8 @@ fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_trace_dump(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
-    let mut engine = Engine::new(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion)?;
+    let mut engine =
+        Engine::with_opt_level(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion, cfg.opt_level)?;
     let mut prog = build_program(&cfg.program)?;
     let steps = cfg.steps.min(12) as u64;
     engine.run(prog.as_mut(), steps, 0)?;
@@ -134,14 +171,25 @@ fn cmd_trace_dump(flags: &HashMap<String, String>) -> Result<()> {
         .into_iter()
         .map(|id| (id, engine.vars().ty(id).unwrap()))
         .collect();
-    let plan = generate_plan(engine.trace_graph(), &var_types, &GenOptions { fusion: cfg.fusion })?;
-    println!("{}", plan.summary());
+    let opts = GenOptions { fusion: cfg.fusion };
+    let raw = generate_plan(engine.trace_graph(), &var_types, &opts)?;
+    println!("raw       {}", raw.summary());
+    let pm = PassManager::standard(cfg.opt_level);
+    if !pm.is_noop() {
+        let mut optimized = engine.trace_graph().clone();
+        let evaluator: &dyn terra::opt::ConstEvaluator = engine.eager_executor().as_ref();
+        let report = pm.run(&mut optimized, Some(evaluator))?;
+        let plan = generate_plan(&optimized, &var_types, &opts)?;
+        println!("optimized {}", plan.summary());
+        println!("{}", report.summary());
+    }
     Ok(())
 }
 
 fn cmd_breakdown(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
-    let mut engine = Engine::new(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion)?;
+    let mut engine =
+        Engine::with_opt_level(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion, cfg.opt_level)?;
     let mut prog = build_program(&cfg.program)?;
     let report = engine.run(prog.as_mut(), cfg.steps as u64, cfg.warmup_steps as u64)?;
     let b = report.breakdown_per_step;
@@ -157,6 +205,7 @@ fn cmd_breakdown(flags: &HashMap<String, String>) -> Result<()> {
         report.stats.traces_collected,
         report.stats.segments_compiled
     );
+    print_opt_stats(&report);
     Ok(())
 }
 
@@ -178,7 +227,7 @@ fn main() {
         "help" | "--help" | "-h" => {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
-                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion]\n  \
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \

@@ -18,7 +18,10 @@ pub struct Breakdown {
     steps: AtomicU64,
 }
 
-/// A point-in-time copy of the breakdown, in milliseconds.
+/// A point-in-time copy of the breakdown, in milliseconds, plus process-wide
+/// runtime counters stamped in by the engine (executable-cache hits/misses
+/// and XLA compile invocations) so cache behaviour and the optimizer's
+/// compile savings land in every report.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct BreakdownSnapshot {
     pub py_exec_ms: f64,
@@ -26,6 +29,13 @@ pub struct BreakdownSnapshot {
     pub graph_exec_ms: f64,
     pub graph_stall_ms: f64,
     pub steps: u64,
+    /// ExecCache hits at snapshot time (delta, not per-step, after
+    /// [`BreakdownSnapshot::per_step_since`]).
+    pub cache_hits: u64,
+    /// ExecCache misses (each miss is one fresh compilation).
+    pub cache_misses: u64,
+    /// `Client::compile_count` — total XLA compile invocations.
+    pub compile_count: u64,
 }
 
 impl Breakdown {
@@ -61,12 +71,19 @@ impl Breakdown {
             graph_exec_ms: ms(&self.graph_exec_ns),
             graph_stall_ms: ms(&self.graph_stall_ns),
             steps: self.steps.load(Ordering::Relaxed),
+            // Runtime counters live outside the breakdown; the engine stamps
+            // them via `Engine::stamp_runtime_counters`.
+            cache_hits: 0,
+            cache_misses: 0,
+            compile_count: 0,
         }
     }
 }
 
 impl BreakdownSnapshot {
-    /// Per-step averages between two snapshots (Figure 6's bars).
+    /// Per-step averages between two snapshots (Figure 6's bars). Counter
+    /// fields become plain deltas over the window (compiles/cache traffic
+    /// are bursty, so per-step averages would obscure them).
     pub fn per_step_since(&self, earlier: &BreakdownSnapshot) -> BreakdownSnapshot {
         let n = (self.steps - earlier.steps).max(1) as f64;
         BreakdownSnapshot {
@@ -75,6 +92,9 @@ impl BreakdownSnapshot {
             graph_exec_ms: (self.graph_exec_ms - earlier.graph_exec_ms) / n,
             graph_stall_ms: (self.graph_stall_ms - earlier.graph_stall_ms) / n,
             steps: self.steps - earlier.steps,
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(earlier.cache_misses),
+            compile_count: self.compile_count.saturating_sub(earlier.compile_count),
         }
     }
 }

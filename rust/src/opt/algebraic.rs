@@ -1,0 +1,304 @@
+//! Algebraic identity simplification: rewrite uses of ops that provably
+//! compute one of their own inputs (x+0, x*1, x/1, pow(x,1), double
+//! transpose, double negation, idempotent relu/abs, no-op
+//! reshape/broadcast/convert) to the surviving input.
+//!
+//! The op node itself is left in place and swept by DCE once its value is
+//! unused. Rewrites through a variable read are only applied when the
+//! variable has no assigns in the graph (staged updates make var reads
+//! time-dependent; see `analysis::assigned_vars`).
+
+use crate::error::Result;
+use crate::opt::analysis::{assigned_vars, embedded_const};
+use crate::opt::{OptContext, Pass, PassStats};
+use crate::ops::OpKind;
+use crate::tensor::{HostTensor, TensorType};
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TgNode, TraceGraph};
+use crate::trace::{ItemKey, VarId};
+use std::collections::HashSet;
+
+pub struct Algebraic;
+
+fn is_all_f32(t: &HostTensor, v: f32) -> bool {
+    match t {
+        HostTensor::F32 { data, .. } => data.iter().all(|&x| x == v),
+        HostTensor::I32 { data, .. } => data.iter().all(|&x| x == v as i32),
+    }
+}
+
+/// Exact-bit zero check. IEEE signed zero makes `x + 0` identities sign-
+/// sensitive: `x + (+0.0)` maps `-0.0` to `+0.0` (not an identity), while
+/// `x + (-0.0)` is `x` for every value; `x - (+0.0)` is `x` for every
+/// value, while `x - (-0.0)` maps `-0.0` to `+0.0`. Integer zeros have no
+/// sign, so they qualify for both.
+fn is_all_zero_with_sign(t: &HostTensor, negative: bool) -> bool {
+    match t {
+        HostTensor::F32 { data, .. } => {
+            let want = if negative { (-0.0f32).to_bits() } else { 0.0f32.to_bits() };
+            data.iter().all(|&x| x.to_bits() == want)
+        }
+        HostTensor::I32 { data, .. } => data.iter().all(|&x| x == 0),
+    }
+}
+
+fn src_type(graph: &TraceGraph, src: &GraphSrc) -> Option<TensorType> {
+    match src {
+        GraphSrc::Node { node, slot } => graph.node(*node).out_types.get(*slot).cloned(),
+        GraphSrc::Var(_) => None, // var types are not known at graph level
+    }
+}
+
+/// The single-variant op producer of `src`, if any.
+fn producer_op<'g>(graph: &'g TraceGraph, src: &GraphSrc) -> Option<(&'g TgNode, &'g OpKind)> {
+    match src {
+        GraphSrc::Node { node, slot: 0 } => {
+            let n = graph.node(*node);
+            if n.removed || n.variants.len() != 1 {
+                return None;
+            }
+            match &n.kind {
+                NodeKind::Item(ItemKey::Op { def, .. }) => Some((n, &def.kind)),
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+fn identity_perm(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| p == i)
+}
+
+/// `q` after `p` is the identity permutation.
+fn composes_to_identity(p: &[usize], q: &[usize]) -> bool {
+    p.len() == q.len() && q.iter().enumerate().all(|(i, &qi)| p.get(qi) == Some(&i))
+}
+
+/// Decide the rewrite for one node: uses of `(n, 0)` go to the returned
+/// source. `structural` rewrites guarantee type equality by construction;
+/// the others are checked against the node's output type by the caller.
+fn simplify(
+    graph: &TraceGraph,
+    node: &TgNode,
+    kind: &OpKind,
+    srcs: &[GraphSrc],
+) -> Option<GraphSrc> {
+    let out_ty = node.out_types.first()?;
+    let typed_survivor = |s: &GraphSrc| -> Option<GraphSrc> {
+        (src_type(graph, s).as_ref() == Some(out_ty)).then_some(*s)
+    };
+    let const_is = |s: &GraphSrc, v: f32| {
+        embedded_const(graph, s).is_some_and(|c| is_all_f32(c, v))
+    };
+    let const_zero = |s: &GraphSrc, negative: bool| {
+        embedded_const(graph, s).is_some_and(|c| is_all_zero_with_sign(c, negative))
+    };
+    match kind {
+        OpKind::Add => {
+            // Only `+ (-0.0)` (or integer 0) is exact for every x.
+            if const_zero(&srcs[1], true) {
+                typed_survivor(&srcs[0])
+            } else if const_zero(&srcs[0], true) {
+                typed_survivor(&srcs[1])
+            } else {
+                None
+            }
+        }
+        // Only `- (+0.0)` (or integer 0) is exact for every x.
+        OpKind::Sub if const_zero(&srcs[1], false) => typed_survivor(&srcs[0]),
+        OpKind::Mul => {
+            if const_is(&srcs[1], 1.0) {
+                typed_survivor(&srcs[0])
+            } else if const_is(&srcs[0], 1.0) {
+                typed_survivor(&srcs[1])
+            } else {
+                None
+            }
+        }
+        OpKind::Div if const_is(&srcs[1], 1.0) => typed_survivor(&srcs[0]),
+        OpKind::Pow if const_is(&srcs[1], 1.0) => typed_survivor(&srcs[0]),
+        OpKind::Maximum | OpKind::Minimum if srcs[0] == srcs[1] => typed_survivor(&srcs[0]),
+        OpKind::Transpose { perm } => {
+            if identity_perm(perm) {
+                return typed_survivor(&srcs[0]);
+            }
+            // transpose(transpose(x, p), q) with q∘p = id  ->  x
+            let (m, mkind) = producer_op(graph, &srcs[0])?;
+            match mkind {
+                OpKind::Transpose { perm: p } if composes_to_identity(p, perm) => {
+                    // Structurally type-preserving: same dims and dtype as x.
+                    Some(m.variants[0][0])
+                }
+                _ => None,
+            }
+        }
+        OpKind::Neg => {
+            let (m, mkind) = producer_op(graph, &srcs[0])?;
+            matches!(mkind, OpKind::Neg).then_some(m.variants[0][0])
+        }
+        OpKind::Relu | OpKind::Abs => {
+            let (_, mkind) = producer_op(graph, &srcs[0])?;
+            (mkind == kind).then_some(srcs[0])
+        }
+        OpKind::Reshape { .. } | OpKind::Broadcast { .. } | OpKind::Convert { .. } => {
+            typed_survivor(&srcs[0])
+        }
+        _ => None,
+    }
+}
+
+fn var_of(src: &GraphSrc) -> Option<VarId> {
+    match src {
+        GraphSrc::Var(v) => Some(*v),
+        GraphSrc::Node { .. } => None,
+    }
+}
+
+impl Pass for Algebraic {
+    fn name(&self) -> &'static str {
+        "algebraic"
+    }
+
+    fn run(&self, graph: &mut TraceGraph, _ctx: &mut OptContext<'_>) -> Result<PassStats> {
+        let mut stats = PassStats::default();
+        let assigned: HashSet<VarId> = assigned_vars(graph);
+        let mut planned: Vec<(NodeId, GraphSrc)> = Vec::new();
+        for node in graph.live_nodes() {
+            if node.variants.len() != 1 || node.out_types.len() != 1 {
+                continue;
+            }
+            let kind = match &node.kind {
+                NodeKind::Item(ItemKey::Op { def, .. })
+                    if !def.kind.is_random() && !def.kind.is_artifact() =>
+                {
+                    &def.kind
+                }
+                _ => continue,
+            };
+            let srcs = &node.variants[0];
+            let Some(to) = simplify(graph, node, kind, srcs) else {
+                continue;
+            };
+            // Forwarding a variable read changes *when* the variable is
+            // read; only safe when no assign can interleave.
+            if let Some(v) = var_of(&to) {
+                if assigned.contains(&v) {
+                    continue;
+                }
+            }
+            planned.push((node.id, to));
+        }
+        for (n, to) in planned {
+            stats.rewrites += graph.replace_value_uses((n, 0), to) as u64;
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::dce::Dce;
+    use crate::opt::testutil::*;
+    use crate::tracegraph::START;
+
+    #[test]
+    fn x_plus_negative_zero_forwards_x() {
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            konst_val(2, &[-0.0, -0.0], 2),
+            op2(OpKind::Add, 1, 2, 3, 3),
+            fetch(3, 4),
+        ]);
+        let stats = run_pass(&Algebraic, &mut g);
+        assert_eq!(stats.rewrites, 1);
+        let f = g.node(START).children[0];
+        let fetch_node = g
+            .live_nodes()
+            .find(|n| matches!(&n.kind, NodeKind::Item(ItemKey::Fetch { .. })))
+            .unwrap();
+        assert_eq!(fetch_node.variants[0][0], GraphSrc::Node { node: f, slot: 0 });
+        run_pass(&Dce, &mut g);
+        assert!(plan_for(&g).is_ok());
+    }
+
+    #[test]
+    fn x_plus_positive_zero_is_kept() {
+        // x + (+0.0) maps -0.0 to +0.0, so it is NOT an identity; only the
+        // sign-exact zero qualifies (and x - (+0.0) does).
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            konst_val(2, &[0.0, 0.0], 2),
+            op2(OpKind::Add, 1, 2, 3, 3),
+            fetch(3, 4),
+        ]);
+        assert_eq!(run_pass(&Algebraic, &mut g).rewrites, 0);
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            konst_val(2, &[0.0, 0.0], 2),
+            op2(OpKind::Sub, 1, 2, 3, 3),
+            fetch(3, 4),
+        ]);
+        assert_eq!(run_pass(&Algebraic, &mut g).rewrites, 1, "x - (+0.0) is exact");
+    }
+
+    #[test]
+    fn mul_by_one_and_double_neg() {
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            konst_val(2, &[1.0, 1.0], 2),
+            op2(OpKind::Mul, 1, 2, 3, 3), // x * 1
+            op1(OpKind::Neg, 3, 4, 4),
+            op1(OpKind::Neg, 4, 5, 5), // -(-x)
+            fetch(5, 6),
+        ]);
+        // Round 1: mul*1 forwards the feed; neg(neg) forwards mul's source.
+        let s1 = run_pass(&Algebraic, &mut g);
+        assert!(s1.rewrites >= 2, "got {s1:?}");
+        let s2 = run_pass(&Algebraic, &mut g);
+        let _ = s2; // a second round may clean up cascades
+        run_pass(&Dce, &mut g);
+        let f = g.node(START).children[0];
+        let fetch_node = g
+            .live_nodes()
+            .find(|n| matches!(&n.kind, NodeKind::Item(ItemKey::Fetch { .. })))
+            .unwrap();
+        assert_eq!(
+            fetch_node.variants[0][0],
+            GraphSrc::Node { node: f, slot: 0 },
+            "fetch reads the feed directly after simplification"
+        );
+    }
+
+    #[test]
+    fn shape_changing_add_is_kept() {
+        // scalar + zeros[2]: the op broadcasts, x does not have the output
+        // type, so the identity must NOT fire for the scalar operand side.
+        let mut g = graph_of(vec![
+            feed_scalar(1, 1),
+            konst_val(2, &[0.0, 0.0], 2),
+            op_mixed_add(1, 2, 3, 3), // f32[] + f32[2] -> f32[2]
+            fetch(3, 4),
+        ]);
+        let stats = run_pass(&Algebraic, &mut g);
+        assert_eq!(stats.rewrites, 0, "broadcasting add is not an identity");
+    }
+
+    #[test]
+    fn double_transpose_cancels() {
+        let mut g = graph_of(vec![
+            feed_mat(1, 1),
+            transpose2(1, 2, 2),
+            transpose2(2, 3, 3),
+            fetch(3, 4),
+        ]);
+        let stats = run_pass(&Algebraic, &mut g);
+        assert_eq!(stats.rewrites, 1);
+        let f = g.node(START).children[0];
+        let fetch_node = g
+            .live_nodes()
+            .find(|n| matches!(&n.kind, NodeKind::Item(ItemKey::Fetch { .. })))
+            .unwrap();
+        assert_eq!(fetch_node.variants[0][0], GraphSrc::Node { node: f, slot: 0 });
+    }
+}

@@ -1,0 +1,234 @@
+//! Shared analyses for the optimization passes: protected-node
+//! classification, dataflow liveness, and forward dominators.
+
+use crate::error::{Result, TerraError};
+use crate::tensor::HostTensor;
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TgNode, TraceGraph, START};
+use crate::trace::{ItemKey, VarId};
+use std::collections::HashSet;
+
+/// The embedded-constant value behind `src`, if it is output 0 of a live,
+/// non-generalized Const node (the same rule the segment compiler uses to
+/// embed constants).
+pub fn embedded_const<'g>(graph: &'g TraceGraph, src: &GraphSrc) -> Option<&'g HostTensor> {
+    match src {
+        GraphSrc::Node { node, slot: 0 } => {
+            let n = graph.node(*node);
+            if n.removed || n.generalized {
+                return None;
+            }
+            match &n.kind {
+                NodeKind::Item(ItemKey::Const { .. }) => n.const_value.as_ref(),
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Communication points and sentinels: nodes a pass must never remove or
+/// rekind, because their NodeIds key runner-to-runner messages (feeds, case
+/// selects, fetches) or they carry externally visible effects (assigns).
+pub fn is_protected(node: &TgNode) -> bool {
+    match &node.kind {
+        NodeKind::Start | NodeKind::End => true,
+        NodeKind::Item(k) => match k {
+            ItemKey::Feed { .. } | ItemKey::Assign { .. } | ItemKey::Fetch { .. } => true,
+            // Generalized consts are Python-primitive feeds (communication
+            // points); embedded consts are pure data.
+            ItemKey::Const { .. } => node.generalized,
+            ItemKey::Op { .. } => false,
+        },
+    }
+}
+
+/// Nodes whose output values transitively reach a Fetch or Assign source —
+/// the dataflow roots the symbolic plan must actually compute.
+pub fn live_value_nodes(graph: &TraceGraph) -> HashSet<NodeId> {
+    let mut live: HashSet<NodeId> = HashSet::new();
+    let mut stack: Vec<NodeId> = Vec::new();
+    let mut visit = |v: &Vec<GraphSrc>, live: &mut HashSet<NodeId>, stack: &mut Vec<NodeId>| {
+        for s in v {
+            if let GraphSrc::Node { node, .. } = s {
+                if live.insert(*node) {
+                    stack.push(*node);
+                }
+            }
+        }
+    };
+    for n in graph.live_nodes() {
+        let is_root = matches!(
+            &n.kind,
+            NodeKind::Item(ItemKey::Fetch { .. }) | NodeKind::Item(ItemKey::Assign { .. })
+        );
+        if is_root {
+            for v in &n.variants {
+                visit(v, &mut live, &mut stack);
+            }
+        }
+    }
+    while let Some(n) = stack.pop() {
+        for v in &graph.node(n).variants {
+            visit(v, &mut live, &mut stack);
+        }
+    }
+    live
+}
+
+/// Variables that have at least one live Assign node. Reads of these vars
+/// are time-dependent within an iteration (staged updates become visible to
+/// later plan steps), so value-forwarding across them is unsafe in general.
+pub fn assigned_vars(graph: &TraceGraph) -> HashSet<VarId> {
+    graph
+        .live_nodes()
+        .filter_map(|n| match &n.kind {
+            NodeKind::Item(ItemKey::Assign { var, .. }) => Some(*var),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Forward dominators over the execution-order DAG.
+///
+/// `doms.dominates(a, b)` answers "does every START->b path pass through a?"
+/// — the condition under which node `a`'s value is guaranteed to have been
+/// computed whenever `b` executes.
+pub struct Dominators {
+    idom: Vec<Option<NodeId>>,
+    pos: Vec<usize>,
+}
+
+impl Dominators {
+    pub fn compute(graph: &TraceGraph) -> Result<Dominators> {
+        let order = graph.topo_order()?;
+        let mut pos = vec![usize::MAX; graph.len()];
+        for (i, n) in order.iter().enumerate() {
+            pos[n.0] = i;
+        }
+        let mut idom: Vec<Option<NodeId>> = vec![None; graph.len()];
+        idom[START.0] = Some(START);
+        for &n in &order {
+            if n == START || graph.node(n).removed {
+                continue;
+            }
+            let parents = &graph.node(n).parents;
+            if parents.is_empty() {
+                // Unreachable from START (tombstone bookkeeping residue).
+                continue;
+            }
+            let mut cand = parents[0];
+            for &p in &parents[1..] {
+                cand = Self::intersect(&idom, &pos, cand, p)?;
+            }
+            idom[n.0] = Some(cand);
+        }
+        Ok(Dominators { idom, pos })
+    }
+
+    fn intersect(
+        idom: &[Option<NodeId>],
+        pos: &[usize],
+        mut a: NodeId,
+        mut b: NodeId,
+    ) -> Result<NodeId> {
+        let step = |n: NodeId| -> Result<NodeId> {
+            idom[n.0].ok_or_else(|| {
+                TerraError::Trace(format!("node {n:?} has no dominator (malformed DAG)"))
+            })
+        };
+        while a != b {
+            while pos[a.0] > pos[b.0] {
+                a = step(a)?;
+            }
+            while pos[b.0] > pos[a.0] {
+                b = step(b)?;
+            }
+        }
+        Ok(a)
+    }
+
+    /// Does `a` dominate `b` (reflexively)?
+    pub fn dominates(&self, a: NodeId, mut b: NodeId) -> bool {
+        loop {
+            if a == b {
+                return true;
+            }
+            match self.idom[b.0] {
+                Some(p) if p != b => b = p,
+                _ => return false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpDef, OpKind};
+    use crate::tensor::TensorType;
+    use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+
+    fn loc(line: u32) -> Location {
+        Location { file: "an.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn op(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    #[test]
+    fn liveness_follows_fetch_sources() {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![
+            feed(1, 1),
+            op(OpKind::Relu, 1, 2, 2), // fetched (live)
+            op(OpKind::Tanh, 2, 3, 3), // dead tail
+            TraceItem::Fetch { src: ValueRef::Out(ValueId(2)), loc: loc(4) },
+        ]))
+        .unwrap();
+        let live = live_value_nodes(&g);
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        let tanh = g.node(relu).children[0];
+        assert!(live.contains(&relu));
+        assert!(live.contains(&f), "feed feeds the live relu");
+        assert!(!live.contains(&tanh), "unfetched tail is dead");
+    }
+
+    #[test]
+    fn dominators_on_diamond() {
+        let a = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 9)]);
+        let b = tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3), op(OpKind::Neg, 2, 3, 9)]);
+        let mut g = TraceGraph::new();
+        g.merge(&a).unwrap();
+        g.merge(&b).unwrap();
+        let doms = Dominators::compute(&g).unwrap();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        let tanh = g.node(f).children[1];
+        let join = g.node(relu).children[0];
+        assert!(doms.dominates(f, join));
+        assert!(doms.dominates(START, join));
+        assert!(!doms.dominates(relu, join), "join is reachable around relu");
+        assert!(!doms.dominates(tanh, join));
+        assert!(doms.dominates(relu, relu));
+    }
+}

@@ -1,0 +1,176 @@
+//! Common-subexpression elimination: redirect uses of duplicate op nodes to
+//! a single canonical computation.
+//!
+//! Two op nodes are duplicates when they have the same `OpDef` (kind +
+//! attributes + input types) and the same single observed input-source
+//! variant. The canonical node must *dominate* the duplicate in the
+//! execution-order DAG, so its value is guaranteed to exist whenever any
+//! path through the duplicate executes. Ops reading variables are only
+//! merged when no staged update can interleave (see `var_sources_stable`).
+
+use crate::error::Result;
+use crate::opt::analysis::{assigned_vars, Dominators};
+use crate::opt::{OptContext, Pass, PassStats};
+use crate::ops::OpDef;
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TraceGraph};
+use crate::trace::ItemKey;
+use std::collections::HashMap;
+
+pub struct Cse;
+
+/// Reads of assigned variables are time-dependent: a staged `Assign` earlier
+/// in the plan changes what a later read observes. Merging two reads is only
+/// safe when no assign to that variable can execute before the duplicate on
+/// any path, which we approximate conservatively: the variable has no live
+/// assign node at all, or no assign node reaches the duplicate.
+fn var_sources_stable(
+    graph: &TraceGraph,
+    srcs: &[GraphSrc],
+    dup: NodeId,
+    assigned: &std::collections::HashSet<crate::trace::VarId>,
+) -> bool {
+    for s in srcs {
+        if let GraphSrc::Var(v) = s {
+            if !assigned.contains(v) {
+                continue;
+            }
+            // Any assign to v that reaches `dup` could execute before it.
+            let unstable = graph.live_nodes().any(|n| {
+                matches!(&n.kind, NodeKind::Item(ItemKey::Assign { var, .. }) if var == v)
+                    && graph.reaches(n.id, dup)
+            });
+            if unstable {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, graph: &mut TraceGraph, _ctx: &mut OptContext<'_>) -> Result<PassStats> {
+        let mut stats = PassStats::default();
+        let order = graph.topo_order()?;
+        let doms = Dominators::compute(graph)?;
+        let assigned = assigned_vars(graph);
+        // Canonical node per (def, input sources); topo order guarantees the
+        // canonical candidate is seen before anything it could dominate.
+        let mut canon: HashMap<(OpDef, Vec<GraphSrc>), NodeId> = HashMap::new();
+        for &n in &order {
+            let (def, srcs) = {
+                let node = graph.node(n);
+                if node.removed || node.variants.len() != 1 {
+                    continue;
+                }
+                match &node.kind {
+                    NodeKind::Item(ItemKey::Op { def, .. })
+                        if !def.kind.is_random() && !def.kind.is_artifact() =>
+                    {
+                        (def.clone(), node.variants[0].clone())
+                    }
+                    _ => continue,
+                }
+            };
+            let existing = canon.get(&(def.clone(), srcs.clone())).copied();
+            match existing {
+                Some(a) if a != n => {
+                    if !doms.dominates(a, n) {
+                        continue;
+                    }
+                    if !var_sources_stable(graph, &srcs, n, &assigned) {
+                        continue;
+                    }
+                    let n_outputs = graph.node(n).out_types.len();
+                    for slot in 0..n_outputs {
+                        stats.rewrites +=
+                            graph.replace_value_uses((n, slot), GraphSrc::Node { node: a, slot })
+                                as u64;
+                    }
+                    // The duplicate is now dead; DCE sweeps it.
+                }
+                _ => {
+                    canon.insert((def, srcs), n);
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::dce::Dce;
+    use crate::opt::testutil::*;
+    use crate::ops::OpKind;
+    use crate::tracegraph::START;
+
+    #[test]
+    fn merges_identical_subexpressions() {
+        // Two relu(feed) at different locations, both fetched: one compute.
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            op1(OpKind::Relu, 1, 2, 2),
+            op1(OpKind::Relu, 1, 3, 3), // same op, same input, different loc
+            fetch(2, 4),
+            fetch(3, 5),
+        ]);
+        let stats = run_pass(&Cse, &mut g);
+        assert_eq!(stats.rewrites, 1, "second fetch redirected to the first relu");
+        // Both fetch nodes now read the same producer.
+        let f = g.node(START).children[0];
+        let relu1 = g.node(f).children[0];
+        use crate::trace::ItemKey;
+        use crate::tracegraph::NodeKind;
+        let fetches: Vec<_> = g
+            .live_nodes()
+            .filter(|n| matches!(&n.kind, NodeKind::Item(ItemKey::Fetch { .. })))
+            .collect();
+        assert_eq!(fetches.len(), 2);
+        for fnode in fetches {
+            assert_eq!(
+                fnode.variants[0][0],
+                crate::tracegraph::GraphSrc::Node { node: relu1, slot: 0 }
+            );
+        }
+        // DCE then removes the duplicate.
+        let dstats = run_pass(&Dce, &mut g);
+        assert_eq!(dstats.nodes_removed, 1);
+        assert!(plan_for(&g).is_ok());
+    }
+
+    #[test]
+    fn does_not_merge_across_branches() {
+        // relu on two *alternative* paths: neither dominates the other.
+        let mk = |line| vec![
+            feed(1, 1),
+            op1(OpKind::Relu, 1, 2, line),
+            op1(OpKind::Neg, 2, 3, 9),
+            fetch(3, 10),
+        ];
+        let (a, b) = (mk(2), mk(5));
+        let mut g = crate::tracegraph::TraceGraph::new();
+        g.merge(&tr(a)).unwrap();
+        g.merge(&tr(b)).unwrap();
+        // relu@2 and relu@5 share (def, srcs) but sit on sibling branches.
+        let stats = run_pass(&Cse, &mut g);
+        assert_eq!(stats.rewrites, 0, "sibling-branch duplicates must not merge");
+    }
+
+    #[test]
+    fn random_ops_are_never_merged() {
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            rng(2, 2),
+            rng(3, 3),
+            op2(OpKind::Add, 2, 3, 4, 4),
+            fetch(4, 5),
+        ]);
+        let stats = run_pass(&Cse, &mut g);
+        assert_eq!(stats.rewrites, 0, "two rng draws are distinct values");
+    }
+}

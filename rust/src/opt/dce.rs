@@ -1,0 +1,167 @@
+//! Dead-code elimination: tombstone op/const nodes whose outputs never reach
+//! a Fetch or Assign source.
+//!
+//! The GraphGenerator already drops whole segments with no referenced
+//! outputs; graph-level DCE is strictly stronger — it removes dead ops that
+//! share a segment with live ones (which would otherwise be compiled *and
+//! executed* inside the fused computation every iteration), and it sweeps
+//! the garbage other passes produce (CSE'd duplicates, inputs of folded
+//! constants).
+
+use crate::error::Result;
+use crate::opt::analysis::{is_protected, live_value_nodes};
+use crate::opt::{OptContext, Pass, PassStats};
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TgNode, TraceGraph};
+use crate::trace::ItemKey;
+use std::collections::HashMap;
+
+pub struct Dce;
+
+/// Random ops are kept even when dead: the backend draws from one RNG
+/// stream per process, so eliding a dead draw would shift every later
+/// draw and break opt-level result equivalence.
+fn pins_rng_stream(node: &TgNode) -> bool {
+    matches!(&node.kind, NodeKind::Item(ItemKey::Op { def, .. }) if def.kind.is_random())
+}
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, graph: &mut TraceGraph, _ctx: &mut OptContext<'_>) -> Result<PassStats> {
+        let mut stats = PassStats::default();
+        // Iterate to a fixpoint: removing a consumer can orphan its
+        // producers, which become removable in the next sweep.
+        loop {
+            let live = live_value_nodes(graph);
+            // Per-round reference counts per producer, so "still referenced
+            // by another (dead) node" is O(1) per victim instead of a
+            // whole-graph scan.
+            let mut uses: HashMap<NodeId, usize> = HashMap::new();
+            for m in graph.live_nodes() {
+                for v in &m.variants {
+                    for s in v {
+                        if let GraphSrc::Node { node, .. } = s {
+                            *uses.entry(*node).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+            let victims: Vec<NodeId> = graph
+                .live_nodes()
+                .filter(|n| {
+                    matches!(&n.kind, NodeKind::Item(_))
+                        && !is_protected(n)
+                        && !pins_rng_stream(n)
+                        && !live.contains(&n.id)
+                        // Branch points key Case-Select messages; leave them.
+                        && n.children.len() == 1
+                })
+                .map(|n| n.id)
+                .collect();
+            let mut removed_this_round = 0;
+            for n in victims {
+                if uses.get(&n).copied().unwrap_or(0) > 0 {
+                    continue;
+                }
+                // Removing n releases its own input references, which may
+                // unlock its producers later in this same sweep.
+                let inputs: Vec<NodeId> = graph
+                    .node(n)
+                    .variants
+                    .iter()
+                    .flatten()
+                    .filter_map(|s| match s {
+                        GraphSrc::Node { node, .. } => Some(*node),
+                        GraphSrc::Var(_) => None,
+                    })
+                    .collect();
+                graph.remove_node(n)?;
+                for p in inputs {
+                    if let Some(c) = uses.get_mut(&p) {
+                        *c = c.saturating_sub(1);
+                    }
+                }
+                removed_this_round += 1;
+            }
+            if removed_this_round == 0 {
+                break;
+            }
+            stats.nodes_removed += removed_this_round;
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::testutil::*;
+    use crate::ops::OpKind;
+    use crate::tracegraph::START;
+
+    #[test]
+    fn removes_dead_tail_and_keeps_live_chain() {
+        // feed -> relu (fetched) -> tanh -> neg (both dead)
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            op1(OpKind::Relu, 1, 2, 2),
+            op1(OpKind::Tanh, 2, 3, 3),
+            op1(OpKind::Neg, 3, 4, 4),
+            fetch(2, 5),
+        ]);
+        let before = g.live_len();
+        let stats = run_pass(&Dce, &mut g);
+        assert_eq!(stats.nodes_removed, 2, "tanh and neg are dead");
+        assert_eq!(g.live_len(), before - 2);
+        g.topo_order().unwrap();
+        // The fetch still resolves: its source node is live.
+        assert!(plan_for(&g).is_ok());
+    }
+
+    #[test]
+    fn dead_random_ops_are_kept() {
+        // A dead rng draw still advances the backend's process-global
+        // stream; eliding it would shift every later draw and break
+        // opt-level result equivalence.
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            rng(2, 2), // unused draw
+            op1(OpKind::Relu, 1, 3, 3),
+            fetch(3, 4),
+        ]);
+        let stats = run_pass(&Dce, &mut g);
+        assert_eq!(stats.nodes_removed, 0, "dead rng draws pin the stream");
+    }
+
+    #[test]
+    fn keeps_protected_nodes() {
+        // A feed whose value is never used is still a communication point.
+        let mut g = graph_of(vec![feed(1, 1), feed(2, 2), op1(OpKind::Relu, 2, 3, 3), fetch(3, 4)]);
+        let stats = run_pass(&Dce, &mut g);
+        assert_eq!(stats.nodes_removed, 0, "feeds are never removed");
+    }
+
+    #[test]
+    fn keeps_branch_points() {
+        // Dead branch-point op: its id keys case selects, must survive.
+        let tail = |k: OpKind, line| vec![
+            feed(1, 1),
+            op1(OpKind::Relu, 1, 2, 2),
+            op1(k, 2, 3, line),
+            fetch(1, 9),
+        ];
+        let (a, b) = (tail(OpKind::Neg, 5), tail(OpKind::Tanh, 6));
+        let mut g = crate::tracegraph::TraceGraph::new();
+        g.merge(&tr(a)).unwrap();
+        g.merge(&tr(b)).unwrap();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        assert!(g.node(relu).is_branch());
+        run_pass(&Dce, &mut g);
+        assert!(!g.node(relu).removed, "branch point survives even when dead");
+        // Its dead successors (straight-line) are removed.
+        assert!(g.node(relu).children.iter().all(|&c| !g.node(c).removed));
+    }
+}

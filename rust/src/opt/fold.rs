@@ -1,0 +1,155 @@
+//! Constant folding: evaluate op nodes whose inputs are all embedded
+//! constants once, at plan-optimization time, and replace the node with the
+//! folded constant.
+//!
+//! Evaluation goes through the engine's own eager executor (via
+//! [`crate::opt::ConstEvaluator`]), so a folded value is bit-identical to
+//! what the symbolic plan would have computed every iteration. Nodes fold in
+//! topological order, so constants propagate through chains within a single
+//! run. Folding is skipped (never fails the pipeline) when evaluation
+//! errors or the result would embed an oversized tensor.
+
+use crate::error::Result;
+use crate::opt::analysis::embedded_const;
+use crate::opt::{OptContext, Pass, PassStats};
+use crate::tensor::HostTensor;
+use crate::tracegraph::{NodeId, NodeKind, TraceGraph};
+use crate::trace::ItemKey;
+
+/// Upper bound on folded-constant size: folding exists to remove per-step
+/// recompute, not to bloat every consuming segment with giant literals.
+const MAX_FOLDED_ELEMS: usize = 1 << 16;
+
+pub struct ConstFold;
+
+impl Pass for ConstFold {
+    fn name(&self) -> &'static str {
+        "const-fold"
+    }
+
+    fn run(&self, graph: &mut TraceGraph, ctx: &mut OptContext<'_>) -> Result<PassStats> {
+        let mut stats = PassStats::default();
+        let Some(evaluator) = ctx.evaluator else {
+            return Ok(stats); // no evaluator wired: folding disabled
+        };
+        let order = graph.topo_order()?;
+        for &n in &order {
+            let (def, inputs) = {
+                let node = graph.node(n);
+                if node.removed || node.variants.len() != 1 {
+                    continue;
+                }
+                let def = match &node.kind {
+                    NodeKind::Item(ItemKey::Op { def, .. })
+                        if !def.kind.is_random() && !def.kind.is_artifact() =>
+                    {
+                        def.clone()
+                    }
+                    _ => continue,
+                };
+                if node.out_types.len() != 1
+                    || node.out_types[0].shape.num_elements() > MAX_FOLDED_ELEMS
+                {
+                    continue;
+                }
+                // Zero-input ops that are not random do not exist today; the
+                // guard keeps a future one from folding to a stale value.
+                if node.variants[0].is_empty() {
+                    continue;
+                }
+                let mut inputs: Vec<HostTensor> = Vec::with_capacity(node.variants[0].len());
+                let mut all_const = true;
+                for s in &node.variants[0] {
+                    match embedded_const(graph, s) {
+                        Some(v) => inputs.push(v.clone()),
+                        None => {
+                            all_const = false;
+                            break;
+                        }
+                    }
+                }
+                if !all_const {
+                    continue;
+                }
+                (def, inputs)
+            };
+            // Evaluation failures downgrade to "don't fold": the pass must
+            // never introduce an error the unoptimized plan would not hit.
+            let folded = match evaluator.eval_op(&def, &inputs) {
+                Ok(mut outs) if outs.len() == 1 => outs.remove(0),
+                _ => continue,
+            };
+            if graph.fold_to_const(n, folded).is_ok() {
+                stats.nodes_folded += 1;
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Fold candidates are identified the same way the compiler embeds
+/// constants; re-exported for tests.
+pub fn is_embedded_const_node(graph: &TraceGraph, n: NodeId) -> bool {
+    let node = graph.node(n);
+    !node.removed
+        && !node.generalized
+        && matches!(&node.kind, NodeKind::Item(ItemKey::Const { .. }))
+        && node.const_value.is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::dce::Dce;
+    use crate::opt::testutil::*;
+    use crate::ops::OpKind;
+    use crate::tracegraph::START;
+
+    #[test]
+    fn folds_const_chain_through_ops() {
+        // c0 -> neg -> neg -> add(feed) : the two negs fold to a constant.
+        let mut g = graph_of(vec![
+            konst(1, 2.5, 1),
+            op1(OpKind::Neg, 1, 2, 2),
+            op1(OpKind::Neg, 2, 3, 3),
+            feed(4, 4),
+            op2(OpKind::Add, 3, 4, 5, 5),
+            fetch(5, 6),
+        ]);
+        let stats = run_pass_with_eval(&ConstFold, &mut g);
+        assert_eq!(stats.nodes_folded, 2, "both negs fold (cascade in one run)");
+        // The second neg is now an embedded const with value 2.5.
+        let c = g.node(START).children[0];
+        let neg1 = g.node(c).children[0];
+        let neg2 = g.node(neg1).children[0];
+        assert!(is_embedded_const_node(&g, neg2));
+        let v = g.node(neg2).const_value.as_ref().unwrap();
+        assert_eq!(v.as_f32().unwrap(), &[2.5, 2.5]);
+        // After DCE the original const and first neg disappear.
+        run_pass(&Dce, &mut g);
+        assert!(g.node(c).removed);
+        assert!(g.node(neg1).removed);
+        assert!(plan_for(&g).is_ok());
+    }
+
+    #[test]
+    fn does_not_fold_nonconst_inputs() {
+        let mut g = graph_of(vec![
+            feed(1, 1),
+            op1(OpKind::Relu, 1, 2, 2),
+            fetch(2, 3),
+        ]);
+        let stats = run_pass_with_eval(&ConstFold, &mut g);
+        assert_eq!(stats.nodes_folded, 0);
+    }
+
+    #[test]
+    fn does_not_fold_generalized_consts() {
+        // Same const location with two values -> generalized (a feed).
+        let mut g = crate::tracegraph::TraceGraph::new();
+        g.merge(&tr(vec![konst(1, 1.0, 1), op1(OpKind::Neg, 1, 2, 2), fetch(2, 3)])).unwrap();
+        g.merge(&tr(vec![konst(1, 2.0, 1), op1(OpKind::Neg, 1, 2, 2), fetch(2, 3)])).unwrap();
+        let stats = run_pass_with_eval(&ConstFold, &mut g);
+        assert_eq!(stats.nodes_folded, 0, "generalized consts vary per step");
+    }
+}

@@ -1,0 +1,321 @@
+//! Graph-optimization pass pipeline between the TraceGraph and segment
+//! compilation (the layer JANUS/AutoGraph-style systems use to earn their
+//! speedup over eager dispatch).
+//!
+//! # Where it runs
+//!
+//! When the engine enters co-execution it clones the merged TraceGraph, runs
+//! a [`PassManager`] over the *clone*, and generates/compiles the symbolic
+//! plan from the optimized clone. The PythonRunner's skeleton backend keeps
+//! walking the **original** graph: the imperative program still issues every
+//! op, and the walker must accept the full item sequence. This split is safe
+//! because all runner-to-runner messages are keyed by `NodeId` plus child-
+//! and variant-list *indices*, and every rewrite primitive preserves those
+//! index spaces (see `tracegraph::rewrite` and `README.md` in this module
+//! for the full pass contract).
+//!
+//! # Passes
+//!
+//! * [`Dce`] — tombstones op/const nodes whose values never reach a fetch or
+//!   variable update.
+//! * [`Cse`] — merges structurally identical op nodes when the canonical one
+//!   dominates the duplicate.
+//! * [`ConstFold`] — evaluates all-constant ops once via the engine's eager
+//!   executor and embeds the result.
+//! * [`Algebraic`] — forwards x·1, x+0, double-transpose, double-negation
+//!   and no-op reshape/broadcast/convert to their inputs.
+//!
+//! `opt_level` semantics: `0` = pipeline off (plan generated from the raw
+//! graph, as the seed did), `1` = DCE only, `>=2` = the full pipeline run to
+//! a fixpoint.
+
+pub mod algebraic;
+pub mod analysis;
+pub mod cse;
+pub mod dce;
+pub mod fold;
+#[cfg(test)]
+pub(crate) mod testutil;
+
+pub use algebraic::Algebraic;
+pub use cse::Cse;
+pub use dce::Dce;
+pub use fold::ConstFold;
+
+use crate::error::Result;
+use crate::ops::OpDef;
+use crate::tensor::HostTensor;
+use crate::tracegraph::TraceGraph;
+
+/// Evaluates a single op over host tensors, for constant folding. The
+/// engine wires its eager executor in, so folded values are computed by the
+/// very same kernels the unoptimized plan would have run.
+pub trait ConstEvaluator {
+    fn eval_op(&self, def: &OpDef, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+impl ConstEvaluator for crate::eager::EagerExecutor {
+    fn eval_op(&self, def: &OpDef, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let args: Vec<crate::runtime::RtValue> = inputs
+            .iter()
+            .cloned()
+            .map(crate::runtime::RtValue::Host)
+            .collect();
+        let outs = self.execute(def, &args)?;
+        outs.iter().map(|v| v.to_host()).collect()
+    }
+}
+
+/// Shared state passed to every pass invocation.
+pub struct OptContext<'a> {
+    /// Present when constant folding is allowed to evaluate ops.
+    pub evaluator: Option<&'a dyn ConstEvaluator>,
+}
+
+/// What one pass did to the graph.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// Dataflow source entries redirected (CSE merges, algebraic forwards).
+    pub rewrites: u64,
+    /// Nodes tombstoned.
+    pub nodes_removed: u64,
+    /// Op nodes replaced by embedded constants.
+    pub nodes_folded: u64,
+}
+
+impl PassStats {
+    pub fn changed(&self) -> bool {
+        self.rewrites + self.nodes_removed + self.nodes_folded > 0
+    }
+
+    pub fn add(&mut self, other: &PassStats) {
+        self.rewrites += other.rewrites;
+        self.nodes_removed += other.nodes_removed;
+        self.nodes_folded += other.nodes_folded;
+    }
+}
+
+/// A rewrite pass over the TraceGraph. Implementations must uphold the
+/// contract documented in `opt/README.md`: preserve NodeIds, child-list
+/// indices, variant-list indices, communication points and acyclicity.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, graph: &mut TraceGraph, ctx: &mut OptContext<'_>) -> Result<PassStats>;
+}
+
+/// Aggregate result of one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct OptReport {
+    pub opt_level: u8,
+    /// Fixpoint rounds executed.
+    pub rounds: u32,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub edges_before: usize,
+    pub edges_after: usize,
+    /// Cumulative per-pass stats, in pipeline order.
+    pub per_pass: Vec<(&'static str, PassStats)>,
+}
+
+impl OptReport {
+    pub fn total(&self) -> PassStats {
+        let mut t = PassStats::default();
+        for (_, s) in &self.per_pass {
+            t.add(s);
+        }
+        t
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "opt(level {}): {} -> {} nodes, {} -> {} edges in {} round(s)",
+            self.opt_level,
+            self.nodes_before,
+            self.nodes_after,
+            self.edges_before,
+            self.edges_after,
+            self.rounds,
+        );
+        for (name, st) in &self.per_pass {
+            if st.changed() {
+                s.push_str(&format!(
+                    " | {name}: {} rewrites, {} removed, {} folded",
+                    st.rewrites, st.nodes_removed, st.nodes_folded
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// Cumulative optimizer activity across an engine's plan (re)generations —
+/// a run re-optimizes after every fallback/retrace, so totals accumulate.
+#[derive(Debug, Clone, Default)]
+pub struct OptTotals {
+    /// Pipeline invocations (one per co-execution entry).
+    pub pipelines: u64,
+    pub rounds: u64,
+    /// Sum over all passes and pipelines.
+    pub stats: PassStats,
+    /// Per-pass cumulative stats, in pipeline order.
+    pub per_pass: Vec<(&'static str, PassStats)>,
+    /// Node counts of the most recent pipeline run.
+    pub last_nodes_before: usize,
+    pub last_nodes_after: usize,
+}
+
+impl OptTotals {
+    pub fn absorb(&mut self, r: &OptReport) {
+        self.pipelines += 1;
+        self.rounds += r.rounds as u64;
+        for (name, s) in &r.per_pass {
+            self.stats.add(s);
+            match self.per_pass.iter_mut().find(|(n, _)| n == name) {
+                Some((_, agg)) => agg.add(s),
+                None => self.per_pass.push((name, *s)),
+            }
+        }
+        self.last_nodes_before = r.nodes_before;
+        self.last_nodes_after = r.nodes_after;
+    }
+}
+
+/// Runs a pass list to a fixpoint (bounded rounds) and reports reductions.
+pub struct PassManager {
+    opt_level: u8,
+    passes: Vec<Box<dyn Pass>>,
+    max_rounds: u32,
+}
+
+impl PassManager {
+    /// The standard pipeline for an optimization level.
+    pub fn standard(opt_level: u8) -> PassManager {
+        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if opt_level >= 2 {
+            passes.push(Box::new(ConstFold));
+            passes.push(Box::new(Algebraic));
+            passes.push(Box::new(Cse));
+        }
+        if opt_level >= 1 {
+            passes.push(Box::new(Dce));
+        }
+        PassManager { opt_level, passes, max_rounds: 4 }
+    }
+
+    pub fn opt_level(&self) -> u8 {
+        self.opt_level
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Run the pipeline. Each round runs every pass once; rounds repeat
+    /// until nothing changes (cascades: folding feeds algebraic feeds CSE
+    /// feeds DCE) or the bound is hit.
+    pub fn run(
+        &self,
+        graph: &mut TraceGraph,
+        evaluator: Option<&dyn ConstEvaluator>,
+    ) -> Result<OptReport> {
+        let mut report = OptReport {
+            opt_level: self.opt_level,
+            nodes_before: graph.live_len(),
+            edges_before: graph.edge_count(),
+            per_pass: self.passes.iter().map(|p| (p.name(), PassStats::default())).collect(),
+            ..OptReport::default()
+        };
+        let mut ctx = OptContext { evaluator };
+        for _ in 0..self.max_rounds {
+            let mut round_changed = false;
+            for (i, pass) in self.passes.iter().enumerate() {
+                let stats = pass.run(graph, &mut ctx)?;
+                round_changed |= stats.changed();
+                report.per_pass[i].1.add(&stats);
+            }
+            report.rounds += 1;
+            if !round_changed {
+                break;
+            }
+        }
+        report.nodes_after = graph.live_len();
+        report.edges_after = graph.edge_count();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::testutil::*;
+    use crate::ops::OpKind;
+    use crate::symbolic::PlanSpec;
+
+    /// End-to-end pipeline over a redundant program: x*1 twice (CSE bait),
+    /// a const chain (fold bait) and a dead tail (DCE bait).
+    fn redundant_graph() -> crate::tracegraph::TraceGraph {
+        graph_of(vec![
+            feed(1, 1),
+            konst(2, 1.0, 2),              // ones
+            op2(OpKind::Mul, 1, 2, 3, 3),  // x * 1        (algebraic)
+            op2(OpKind::Mul, 1, 2, 4, 4),  // x * 1 again  (cse after algebraic)
+            op2(OpKind::Add, 3, 4, 5, 5),  // x + x
+            konst(6, 2.0, 6),
+            op1(OpKind::Neg, 6, 7, 7),     // fold to -2
+            op2(OpKind::Mul, 5, 7, 8, 8),  // (x+x) * -2
+            op1(OpKind::Tanh, 8, 9, 9),    // dead: never fetched
+            fetch(8, 10),
+        ])
+    }
+
+    #[test]
+    fn standard_pipeline_shrinks_plan() {
+        let mut g0 = redundant_graph();
+        let mut g2 = redundant_graph();
+        let r0 = PassManager::standard(0).run(&mut g0, None).unwrap();
+        assert_eq!(r0.nodes_before, r0.nodes_after, "level 0 is a no-op");
+        let pm = PassManager::standard(2);
+        let r2 = pm.run(&mut g2, Some(&eager_eval())).unwrap();
+        assert!(r2.nodes_after < r2.nodes_before, "{}", r2.summary());
+        assert!(r2.total().changed());
+
+        // The optimized plan compiles fewer op nodes into segments.
+        let count_seg_nodes = |p: &PlanSpec| -> usize {
+            p.segments.iter().map(|s| s.nodes.len()).sum()
+        };
+        let p0 = plan_for(&g0).unwrap();
+        let p2 = plan_for(&g2).unwrap();
+        assert!(
+            count_seg_nodes(&p2) < count_seg_nodes(&p0),
+            "optimized {} vs raw {}",
+            count_seg_nodes(&p2),
+            count_seg_nodes(&p0)
+        );
+        // Communication points survive: same feed/fetch step counts.
+        let c0 = PlanSpec::count_steps(&p0.steps);
+        let c2 = PlanSpec::count_steps(&p2.steps);
+        assert_eq!(c0.1, c2.1, "feed steps preserved");
+        assert_eq!(c0.2, c2.2, "fetch steps preserved");
+    }
+
+    #[test]
+    fn pipeline_is_idempotent() {
+        let mut g = redundant_graph();
+        let pm = PassManager::standard(2);
+        let ev = eager_eval();
+        pm.run(&mut g, Some(&ev)).unwrap();
+        let second = pm.run(&mut g, Some(&ev)).unwrap();
+        assert!(!second.total().changed(), "second run must be a fixpoint: {}", second.summary());
+    }
+
+    #[test]
+    fn level_one_is_dce_only() {
+        let pm = PassManager::standard(1);
+        assert!(!pm.is_noop());
+        let mut g = redundant_graph();
+        let r = pm.run(&mut g, None).unwrap();
+        let folded: u64 = r.per_pass.iter().map(|(_, s)| s.nodes_folded).sum();
+        assert_eq!(folded, 0);
+        assert!(r.total().nodes_removed >= 1, "the dead tanh is removed");
+    }
+}

@@ -1,0 +1,148 @@
+//! Test-only helpers shared by the pass unit tests: tiny trace builders and
+//! pass runners.
+
+use crate::eager::EagerExecutor;
+use crate::graphgen::{generate_plan, GenOptions};
+use crate::opt::{OptContext, Pass, PassStats};
+use crate::ops::{OpDef, OpKind};
+use crate::runtime::{ArtifactStore, Client};
+use crate::symbolic::PlanSpec;
+use crate::tensor::{HostTensor, TensorType};
+use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+use crate::tracegraph::TraceGraph;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub fn loc(line: u32) -> Location {
+    Location { file: "opt_test.rs", line, col: 1, scope: 0 }
+}
+
+pub fn feed(id: u64, line: u32) -> TraceItem {
+    TraceItem::Feed {
+        id: ValueId(id),
+        ty: TensorType::f32(&[2]),
+        loc: loc(line),
+        kind: FeedKind::Data,
+    }
+}
+
+pub fn feed_scalar(id: u64, line: u32) -> TraceItem {
+    TraceItem::Feed {
+        id: ValueId(id),
+        ty: TensorType::f32(&[]),
+        loc: loc(line),
+        kind: FeedKind::Data,
+    }
+}
+
+pub fn feed_mat(id: u64, line: u32) -> TraceItem {
+    TraceItem::Feed {
+        id: ValueId(id),
+        ty: TensorType::f32(&[2, 2]),
+        loc: loc(line),
+        kind: FeedKind::Data,
+    }
+}
+
+/// Embedded-const candidate: f32[2] with both elements `v`.
+pub fn konst(id: u64, v: f32, line: u32) -> TraceItem {
+    konst_val(id, &[v, v], line)
+}
+
+pub fn konst_val(id: u64, vals: &[f32], line: u32) -> TraceItem {
+    TraceItem::Const {
+        id: ValueId(id),
+        value: HostTensor::f32(vec![vals.len()], vals.to_vec()).unwrap(),
+        loc: loc(line),
+    }
+}
+
+/// Unary op over f32[2].
+pub fn op1(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+    TraceItem::Op {
+        def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+        loc: loc(line),
+        inputs: vec![ValueRef::Out(ValueId(inp))],
+        outputs: vec![ValueId(out)],
+    }
+}
+
+/// Binary op over (f32[2], f32[2]).
+pub fn op2(kind: OpKind, a: u64, b: u64, out: u64, line: u32) -> TraceItem {
+    TraceItem::Op {
+        def: OpDef::new(kind, vec![TensorType::f32(&[2]), TensorType::f32(&[2])]),
+        loc: loc(line),
+        inputs: vec![ValueRef::Out(ValueId(a)), ValueRef::Out(ValueId(b))],
+        outputs: vec![ValueId(out)],
+    }
+}
+
+/// Broadcasting add: f32[] + f32[2] -> f32[2].
+pub fn op_mixed_add(a: u64, b: u64, out: u64, line: u32) -> TraceItem {
+    TraceItem::Op {
+        def: OpDef::new(OpKind::Add, vec![TensorType::f32(&[]), TensorType::f32(&[2])]),
+        loc: loc(line),
+        inputs: vec![ValueRef::Out(ValueId(a)), ValueRef::Out(ValueId(b))],
+        outputs: vec![ValueId(out)],
+    }
+}
+
+/// 2x2 transpose (perm [1,0]).
+pub fn transpose2(inp: u64, out: u64, line: u32) -> TraceItem {
+    TraceItem::Op {
+        def: OpDef::new(
+            OpKind::Transpose { perm: vec![1, 0] },
+            vec![TensorType::f32(&[2, 2])],
+        ),
+        loc: loc(line),
+        inputs: vec![ValueRef::Out(ValueId(inp))],
+        outputs: vec![ValueId(out)],
+    }
+}
+
+/// Random op: U(0,1) of shape [2].
+pub fn rng(out: u64, line: u32) -> TraceItem {
+    TraceItem::Op {
+        def: OpDef::new(OpKind::RngUniform { shape: vec![2] }, vec![]),
+        loc: loc(line),
+        inputs: vec![],
+        outputs: vec![ValueId(out)],
+    }
+}
+
+pub fn fetch(src: u64, line: u32) -> TraceItem {
+    TraceItem::Fetch { src: ValueRef::Out(ValueId(src)), loc: loc(line) }
+}
+
+pub fn tr(items: Vec<TraceItem>) -> Trace {
+    Trace::resolve(items, 0).unwrap()
+}
+
+pub fn graph_of(items: Vec<TraceItem>) -> TraceGraph {
+    let mut g = TraceGraph::new();
+    g.merge(&tr(items)).unwrap();
+    g
+}
+
+pub fn run_pass(pass: &dyn Pass, graph: &mut TraceGraph) -> PassStats {
+    let mut ctx = OptContext { evaluator: None };
+    pass.run(graph, &mut ctx).unwrap()
+}
+
+pub fn eager_eval() -> EagerExecutor {
+    let dir = std::env::temp_dir().join(format!("terra_opt_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    EagerExecutor::new(Client::global().clone(), store)
+}
+
+pub fn run_pass_with_eval(pass: &dyn Pass, graph: &mut TraceGraph) -> PassStats {
+    let ev = eager_eval();
+    let mut ctx = OptContext { evaluator: Some(&ev) };
+    pass.run(graph, &mut ctx).unwrap()
+}
+
+pub fn plan_for(graph: &TraceGraph) -> crate::error::Result<PlanSpec> {
+    generate_plan(graph, &HashMap::new(), &GenOptions { fusion: true })
+}

@@ -15,11 +15,12 @@
 //! dropped, host state is restored before the step is replayed imperatively.
 
 use crate::api::{Backend, EagerBackend, Session, TracingBackend, VarStore};
-use crate::config::ExecMode;
+use crate::config::{default_opt_level, ExecMode};
 use crate::eager::EagerExecutor;
 use crate::error::{Result, TerraError};
 use crate::graphgen::{generate_plan, GenOptions};
 use crate::metrics::{Breakdown, BreakdownSnapshot, Throughput};
+use crate::opt::{ConstEvaluator, OptTotals, PassManager};
 use crate::programs::Program;
 use crate::runner::channels::CoExecChannels;
 use crate::runner::graph_runner::GraphRunner;
@@ -35,6 +36,14 @@ use std::time::Instant;
 
 /// How many iterations the PythonRunner may run ahead of the GraphRunner.
 const MAX_RUN_AHEAD: i64 = 2;
+
+/// Engine-phase diagnostics, printed when `TERRA_DEBUG` is set (the crate has
+/// no external logging dependency).
+fn debug_log(msg: std::fmt::Arguments<'_>) {
+    if std::env::var_os("TERRA_DEBUG").is_some() {
+        eprintln!("[terra] {msg}");
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
@@ -56,6 +65,15 @@ pub struct EngineStats {
     pub segments_compiled: u64,
     /// Plan (re)generations.
     pub plans_generated: u64,
+    /// Optimizer activity (cumulative over plan generations).
+    pub opt_nodes_removed: u64,
+    pub opt_nodes_folded: u64,
+    pub opt_rewrites: u64,
+    /// Op nodes compiled into segments by the most recent plan — the
+    /// "symbolic work per iteration" the optimizer shrinks.
+    pub plan_segment_nodes: u64,
+    /// Segment steps of the most recent plan.
+    pub plan_segments: u64,
 }
 
 /// Result of a measured run.
@@ -69,6 +87,8 @@ pub struct RunReport {
     pub losses: Vec<(u64, f32)>,
     pub stats: EngineStats,
     pub breakdown_per_step: BreakdownSnapshot,
+    /// Per-pass optimizer totals (node/edge reductions per pass).
+    pub opt: OptTotals,
 }
 
 impl RunReport {
@@ -94,6 +114,9 @@ pub struct Engine {
     seg_cache: Arc<ExecCache>,
     mode: ExecMode,
     fusion: bool,
+    /// Graph-optimization level for plan generation (0 = off).
+    opt_level: u8,
+    opt: OptTotals,
     phase: Phase,
     graph: TraceGraph,
     runner: Option<GraphRunner>,
@@ -119,6 +142,18 @@ impl Engine {
     /// escapes), captured host state is baked and validated for staleness
     /// every step, and there is no imperative fallback — only re-conversion.
     pub fn new(mode: ExecMode, artifacts_dir: &str, fusion: bool) -> Result<Engine> {
+        Self::with_opt_level(mode, artifacts_dir, fusion, default_opt_level())
+    }
+
+    /// Create an engine with an explicit graph-optimization level (see
+    /// [`crate::opt`]): 0 disables the pass pipeline, 1 runs DCE only, >=2
+    /// runs the full fixpoint pipeline before every plan compilation.
+    pub fn with_opt_level(
+        mode: ExecMode,
+        artifacts_dir: &str,
+        fusion: bool,
+        opt_level: u8,
+    ) -> Result<Engine> {
         let client = Client::global().clone();
         let artifacts = Arc::new(ArtifactStore::open(artifacts_dir)?);
         let vars = Arc::new(VarStore::new(client.clone()));
@@ -146,6 +181,8 @@ impl Engine {
             seg_cache: ExecCache::global().clone(),
             mode,
             fusion,
+            opt_level,
+            opt: OptTotals::default(),
             phase,
             graph: TraceGraph::new(),
             runner: None,
@@ -208,6 +245,15 @@ impl Engine {
         prog.setup(&self.sess)
     }
 
+    /// Stamp process-wide runtime counters (executable-cache hits/misses,
+    /// XLA compile count) into a snapshot, so deltas between snapshots show
+    /// cache behaviour and the optimizer's compile savings.
+    fn stamp_runtime_counters(&self, snap: &mut BreakdownSnapshot) {
+        snap.cache_hits = self.seg_cache.hits();
+        snap.cache_misses = self.seg_cache.misses();
+        snap.compile_count = self.client.compile_count();
+    }
+
     fn var_types(&self) -> Result<HashMap<VarId, TensorType>> {
         let mut m = HashMap::new();
         for id in self.vars.ids() {
@@ -264,7 +310,9 @@ impl Engine {
                         Ok(loss)
                     }
                     Err(TerraError::Diverged(why)) => {
-                        log::debug!("step {step}: divergence ({why}); falling back to tracing");
+                        debug_log(format_args!(
+                            "step {step}: divergence ({why}); falling back to tracing"
+                        ));
                         self.sess.clear_tape();
                         self.fallback(step)?;
                         self.sess.restore_host_states(host_snapshot);
@@ -297,14 +345,49 @@ impl Engine {
         Ok(loss)
     }
 
-    /// Generate + compile the plan, spawn the GraphRunner, swap in the
-    /// skeleton backend.
+    /// Optimize a plan-side clone of the TraceGraph, generate + compile the
+    /// plan from it, spawn the GraphRunner, swap in the skeleton backend.
+    ///
+    /// The skeleton keeps walking the *unoptimized* graph: the imperative
+    /// program still issues every op, and all runner messages are keyed by
+    /// NodeIds/indices the passes preserve (see `opt/README.md`). Only the
+    /// symbolic side sees the reduced graph.
     fn enter_coexec(&mut self, next_iter: u64) -> Result<()> {
         let opts = GenOptions { fusion: self.fusion };
-        let spec = generate_plan(&self.graph, &self.var_types()?, &opts)?;
-        log::debug!("entering co-execution: {}", spec.summary());
-        let graph = Arc::new(self.graph.clone());
-        let plan = compile_plan(&self.client, &self.seg_cache, &self.artifacts, graph.clone(), spec)?;
+        let full = Arc::new(self.graph.clone());
+        let pm = PassManager::standard(self.opt_level);
+        // With the pipeline off (or inert) the plan shares the skeleton's
+        // graph — no second deep clone on the retrace hot path.
+        let graph: Arc<TraceGraph> = if pm.is_noop() {
+            full.clone()
+        } else {
+            let mut optimized = self.graph.clone();
+            let evaluator: &dyn ConstEvaluator = self.exec.as_ref();
+            match pm.run(&mut optimized, Some(evaluator)) {
+                Ok(report) => {
+                    debug_log(format_args!("{}", report.summary()));
+                    let total = report.total();
+                    self.stats.opt_nodes_removed += total.nodes_removed;
+                    self.stats.opt_nodes_folded += total.nodes_folded;
+                    self.stats.opt_rewrites += total.rewrites;
+                    self.opt.absorb(&report);
+                    Arc::new(optimized)
+                }
+                Err(e) => {
+                    // Optimization is best-effort: a pass failure must never
+                    // take down a run the raw graph could execute.
+                    debug_log(format_args!("optimizer failed ({e}); using raw graph"));
+                    full.clone()
+                }
+            }
+        };
+        let spec = generate_plan(&graph, &self.var_types()?, &opts)?;
+        self.stats.plan_segment_nodes =
+            spec.segments.iter().map(|s| s.nodes.len() as u64).sum();
+        self.stats.plan_segments =
+            spec.segments.iter().filter(|s| !s.nodes.is_empty()).count() as u64;
+        debug_log(format_args!("entering co-execution: {}", spec.summary()));
+        let plan = compile_plan(&self.client, &self.seg_cache, &self.artifacts, graph, spec)?;
         self.stats.segments_compiled += plan.compiled_fresh as u64;
         self.stats.plans_generated += 1;
         let lazy = self.mode == ExecMode::TerraLazy;
@@ -320,7 +403,7 @@ impl Engine {
         self.runner = Some(runner);
         self.runner_start_iter = next_iter;
         self.channels = Some(channels.clone());
-        let skeleton = SkeletonBackend::new(graph, channels, self.vars.clone());
+        let skeleton = SkeletonBackend::new(full, channels, self.vars.clone());
         self.sess.swap_backend(Box::new(skeleton));
         self.phase = Phase::CoExec;
         self.stats.enter_coexec += 1;
@@ -399,10 +482,12 @@ impl Engine {
         let mut tp = Throughput::new();
         let mut losses = Vec::new();
         let mut warm_snapshot = self.breakdown.snapshot();
+        self.stamp_runtime_counters(&mut warm_snapshot);
         for step in 0..steps {
             if step == warmup {
                 tp.start_window();
                 warm_snapshot = self.breakdown.snapshot();
+                self.stamp_runtime_counters(&mut warm_snapshot);
             }
             let loss = self.run_step(prog, step)?;
             if step >= warmup {
@@ -414,7 +499,8 @@ impl Engine {
         }
         // Drain the GraphRunner before reading final state.
         self.shutdown()?;
-        let end_snapshot = self.breakdown.snapshot();
+        let mut end_snapshot = self.breakdown.snapshot();
+        self.stamp_runtime_counters(&mut end_snapshot);
         Ok(RunReport {
             program: prog.name().to_string(),
             mode: self.mode,
@@ -424,6 +510,7 @@ impl Engine {
             losses,
             stats: self.stats,
             breakdown_per_step: end_snapshot.per_step_since(&warm_snapshot),
+            opt: self.opt.clone(),
         })
     }
 }

@@ -36,9 +36,8 @@ impl Client {
 
     /// The process-wide client (initialized on first use).
     pub fn global() -> &'static Client {
-        static GLOBAL: once_cell::sync::Lazy<Client> =
-            once_cell::sync::Lazy::new(|| Client::new().expect("PJRT CPU client init failed"));
-        &GLOBAL
+        static GLOBAL: std::sync::OnceLock<Client> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(|| Client::new().expect("PJRT CPU client init failed"))
     }
 
     pub fn platform_name(&self) -> String {

@@ -29,9 +29,9 @@ impl ExecCache {
     /// engines) avoids re-invoking XLA's LLVM backend for signatures it has
     /// already compiled.
     pub fn global() -> &'static std::sync::Arc<ExecCache> {
-        static GLOBAL: once_cell::sync::Lazy<std::sync::Arc<ExecCache>> =
-            once_cell::sync::Lazy::new(|| std::sync::Arc::new(ExecCache::new()));
-        &GLOBAL
+        static GLOBAL: std::sync::OnceLock<std::sync::Arc<ExecCache>> =
+            std::sync::OnceLock::new();
+        GLOBAL.get_or_init(|| std::sync::Arc::new(ExecCache::new()))
     }
 
     pub fn hits(&self) -> u64 {

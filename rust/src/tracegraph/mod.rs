@@ -21,6 +21,7 @@
 //! applied unconditionally (varying trip counts surface as extra traces and
 //! are handled by the branch machinery; see DESIGN.md).
 
+mod rewrite;
 mod walker;
 
 pub use walker::{WalkEvent, Walker};
@@ -65,6 +66,12 @@ pub struct TgNode {
     /// Const value (first observed) for embedding into compiled segments.
     pub const_value: Option<HostTensor>,
     pub out_types: Vec<TensorType>,
+    /// Tombstone set by the optimizer's [`TraceGraph::remove_node`]: the node
+    /// keeps its id (NodeIds are the wire format between the runners) but is
+    /// detached from the execution-order DAG and skipped by plan generation.
+    /// Only plan-side clones are ever optimized; merged engine graphs never
+    /// carry tombstones.
+    pub removed: bool,
 }
 
 impl TgNode {
@@ -138,6 +145,7 @@ impl TraceGraph {
             generalized: false,
             const_value: None,
             out_types: vec![],
+            removed: false,
         };
         let end = TgNode {
             id: END,
@@ -148,6 +156,7 @@ impl TraceGraph {
             generalized: false,
             const_value: None,
             out_types: vec![],
+            removed: false,
         };
         TraceGraph { nodes: vec![start, end], n_traces: 0 }
     }
@@ -259,7 +268,11 @@ impl TraceGraph {
             if matched.is_none() {
                 let candidate = (2..self.nodes.len())
                     .map(NodeId)
-                    .find(|&n| self.nodes[n.0].matches(&key) && !self.reaches(n, pointer));
+                    .find(|&n| {
+                        !self.nodes[n.0].removed
+                            && self.nodes[n.0].matches(&key)
+                            && !self.reaches(n, pointer)
+                    });
                 if let Some(c) = candidate {
                     self.add_edge(pointer, c, &mut report);
                     matched = Some(c);
@@ -284,6 +297,7 @@ impl TraceGraph {
                         generalized: false,
                         const_value,
                         out_types: Self::out_types_of(item)?,
+                        removed: false,
                     });
                     report.changed = true;
                     report.new_nodes += 1;
@@ -349,7 +363,8 @@ impl TraceGraph {
                 NodeKind::End => "END".to_string(),
                 NodeKind::Item(k) => {
                     let g = if n.generalized { " (generalized)" } else { "" };
-                    format!("{}{g} @{}", k.short(), k.loc())
+                    let r = if n.removed { " (removed)" } else { "" };
+                    format!("{}{g}{r} @{}", k.short(), k.loc())
                 }
             };
             let children: Vec<String> = n.children.iter().map(|c| format!("{}", c.0)).collect();

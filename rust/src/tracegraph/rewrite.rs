@@ -1,0 +1,307 @@
+//! Safe rewrite primitives on the TraceGraph, used by the `opt` pass
+//! pipeline.
+//!
+//! The TraceGraph plays two roles at once:
+//!
+//! 1. **Trace automaton** — the child lists define the execution-order paths
+//!    the PythonRunner's walker validates, and the *index* of a child within
+//!    a branch node's list is the Case-Select wire format between the
+//!    runners.
+//! 2. **Dataflow graph** — per-node `variants` hold the observed input
+//!    sources, and the *index* of a variant is the Variant-Select wire
+//!    format.
+//!
+//! Every primitive here preserves both index spaces: node ids are never
+//! compacted (removal tombstones the node in place), child-list replacement
+//! is positional so case indices survive, and variant lists are rewritten
+//! element-wise without deduplication so variant indices survive. This is
+//! what lets the engine optimize a *clone* of the graph for the symbolic
+//! plan while the skeleton backend keeps walking the original: all NodeId-
+//! and index-keyed messages stay aligned between the two.
+
+use crate::error::{Result, TerraError};
+use crate::tensor::HostTensor;
+use crate::trace::{const_hash, ItemKey};
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TraceGraph, END, START};
+
+impl TraceGraph {
+    /// Nodes that have not been tombstoned.
+    pub fn live_nodes(&self) -> impl Iterator<Item = &crate::tracegraph::TgNode> {
+        self.nodes.iter().filter(|n| !n.removed)
+    }
+
+    /// Number of live (non-tombstoned) nodes, including START/END.
+    pub fn live_len(&self) -> usize {
+        self.live_nodes().count()
+    }
+
+    /// Number of execution-order edges between live nodes.
+    pub fn edge_count(&self) -> usize {
+        self.live_nodes().map(|n| n.children.len()).sum()
+    }
+
+    /// Do any live variants reference output `slot` of `node`?
+    pub fn value_is_used(&self, node: NodeId, slot: usize) -> bool {
+        let wanted = GraphSrc::Node { node, slot };
+        self.live_nodes()
+            .any(|m| m.variants.iter().any(|v| v.contains(&wanted)))
+    }
+
+    /// Do any live variants reference *any* output of `node`?
+    pub fn node_is_used(&self, node: NodeId) -> bool {
+        self.live_nodes().any(|m| {
+            m.variants.iter().any(|v| {
+                v.iter()
+                    .any(|s| matches!(s, GraphSrc::Node { node: p, .. } if *p == node))
+            })
+        })
+    }
+
+    /// Rewrite every dataflow use of `from` to `to`, across all live nodes.
+    ///
+    /// Variant lists keep their length and order (variant indices are
+    /// load-bearing); a rewrite that makes two variants of a node identical
+    /// is fine — they now resolve to the same producer.
+    ///
+    /// Returns the number of rewritten source entries.
+    pub fn replace_value_uses(&mut self, from: (NodeId, usize), to: GraphSrc) -> usize {
+        let from_src = GraphSrc::Node { node: from.0, slot: from.1 };
+        if to == from_src {
+            return 0;
+        }
+        let mut rewritten = 0;
+        for node in self.nodes.iter_mut() {
+            if node.removed {
+                continue;
+            }
+            for variant in node.variants.iter_mut() {
+                for src in variant.iter_mut() {
+                    if *src == from_src {
+                        *src = to;
+                        rewritten += 1;
+                    }
+                }
+            }
+        }
+        rewritten
+    }
+
+    /// Tombstone a node and bridge its parents to its single child,
+    /// preserving acyclicity, each parent's child *order* (Case-Select
+    /// indices), and the child's indegree bookkeeping.
+    ///
+    /// Refuses to remove:
+    /// * the START/END sentinels or an already-removed node,
+    /// * a branch point (its id keys Case-Select messages),
+    /// * a node whose outputs still have live dataflow uses.
+    pub fn remove_node(&mut self, n: NodeId) -> Result<()> {
+        if n == START || n == END {
+            return Err(TerraError::Trace("cannot remove a sentinel node".into()));
+        }
+        if self.nodes[n.0].removed {
+            return Err(TerraError::Trace(format!("node {n:?} already removed")));
+        }
+        if self.node_is_used(n) {
+            return Err(TerraError::Trace(format!(
+                "node {n:?} still has live dataflow uses"
+            )));
+        }
+        let children = self.nodes[n.0].children.clone();
+        if children.len() != 1 {
+            return Err(TerraError::Trace(format!(
+                "node {n:?} has {} children; only straight-line nodes are removable",
+                children.len()
+            )));
+        }
+        let c = children[0];
+        let parents = self.nodes[n.0].parents.clone();
+        // Detach the n -> c edge.
+        if let Some(pos) = self.nodes[c.0].parents.iter().position(|&p| p == n) {
+            self.nodes[c.0].parents.remove(pos);
+        }
+        // Bridge every parent to c, replacing n *in place* in the child list.
+        // Duplicate p -> c entries are allowed: indegree accounting stays
+        // consistent because the parent list gains one entry per edge.
+        for &p in &parents {
+            for ch in self.nodes[p.0].children.iter_mut() {
+                if *ch == n {
+                    *ch = c;
+                }
+            }
+            self.nodes[c.0].parents.push(p);
+        }
+        let node = &mut self.nodes[n.0];
+        node.removed = true;
+        node.children.clear();
+        node.parents.clear();
+        node.variants.clear();
+        Ok(())
+    }
+
+    /// Replace an op node with an embedded constant carrying `value`
+    /// (constant folding). The node keeps its id and position in the
+    /// execution-order DAG; plan generation then embeds the value into
+    /// consuming segments instead of recomputing the op every iteration.
+    pub fn fold_to_const(&mut self, n: NodeId, value: HostTensor) -> Result<()> {
+        let node = &mut self.nodes[n.0];
+        if node.removed {
+            return Err(TerraError::Trace(format!("node {n:?} is removed")));
+        }
+        if node.variants.len() > 1 {
+            return Err(TerraError::Trace(format!(
+                "node {n:?} has {} dataflow variants; variant indices are wire \
+                 format and folding would orphan them",
+                node.variants.len()
+            )));
+        }
+        let loc = match &node.kind {
+            NodeKind::Item(ItemKey::Op { loc, .. }) => *loc,
+            other => {
+                return Err(TerraError::Trace(format!(
+                    "only op nodes can be folded, got {other:?}"
+                )))
+            }
+        };
+        let ty = value.ty();
+        if node.out_types.len() != 1 || node.out_types[0] != ty {
+            return Err(TerraError::Trace(format!(
+                "folded value type {ty} does not match node output {:?}",
+                node.out_types
+            )));
+        }
+        node.kind = NodeKind::Item(ItemKey::Const { ty, loc, value_hash: const_hash(&value) });
+        node.const_value = Some(value);
+        node.generalized = false;
+        // The folded node no longer reads its inputs; dropping the variant
+        // releases the producers for DCE. (Safe: only single-variant nodes
+        // are folded, so no Variant-Select message ever names this node.)
+        node.variants.clear();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpDef, OpKind};
+    use crate::tensor::TensorType;
+    use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+
+    fn loc(line: u32) -> Location {
+        Location { file: "rw.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn op(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn fetch(src: u64, line: u32) -> TraceItem {
+        TraceItem::Fetch { src: ValueRef::Out(ValueId(src)), loc: loc(line) }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    /// start -> feed -> relu -> neg -> fetch -> end
+    fn chain() -> TraceGraph {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![
+            feed(1, 1),
+            op(OpKind::Relu, 1, 2, 2),
+            op(OpKind::Neg, 2, 3, 3),
+            fetch(3, 4),
+        ]))
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn remove_bridges_and_keeps_topo() {
+        let mut g = chain();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        let neg = g.node(relu).children[0];
+        // Redirect neg's input from relu to the feed, then remove relu.
+        assert_eq!(g.replace_value_uses((relu, 0), GraphSrc::Node { node: f, slot: 0 }), 1);
+        g.remove_node(relu).unwrap();
+        assert!(g.node(relu).removed);
+        assert_eq!(g.node(f).children, vec![neg]);
+        assert!(g.node(neg).parents.contains(&f));
+        assert!(!g.node(neg).parents.contains(&relu));
+        g.topo_order().unwrap();
+        assert_eq!(g.live_len(), g.len() - 1);
+    }
+
+    #[test]
+    fn remove_refuses_used_or_branch_nodes() {
+        let mut g = chain();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        // relu's output feeds neg: refuse.
+        assert!(g.remove_node(relu).is_err());
+        assert!(g.remove_node(START).is_err());
+        assert!(g.remove_node(END).is_err());
+        // Build a branch point: feed gains a second child.
+        let mut g2 = TraceGraph::new();
+        g2.merge(&tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)])).unwrap();
+        g2.merge(&tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3)])).unwrap();
+        let f2 = g2.node(START).children[0];
+        assert!(g2.node(f2).is_branch());
+        assert!(g2.remove_node(f2).is_err(), "branch points must not be removed");
+    }
+
+    #[test]
+    fn remove_preserves_sibling_case_index() {
+        // feed branches to {relu@2 -> neg@9, tanh@3 -> neg@9}; removing relu
+        // (after redirecting its use) must keep the child count and the
+        // position of tanh in the feed's child list.
+        let a = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 9)]);
+        let b = tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3), op(OpKind::Neg, 2, 3, 9)]);
+        let mut g = TraceGraph::new();
+        g.merge(&a).unwrap();
+        g.merge(&b).unwrap();
+        let f = g.node(START).children[0];
+        let before = g.node(f).children.clone();
+        assert_eq!(before.len(), 2);
+        let relu = before[0];
+        let join = g.node(relu).children[0];
+        g.replace_value_uses((relu, 0), GraphSrc::Node { node: f, slot: 0 });
+        g.remove_node(relu).unwrap();
+        let after = g.node(f).children.clone();
+        assert_eq!(after.len(), 2, "child count (case arity) must be preserved");
+        assert_eq!(after[0], join, "removed child slot bridges to its successor");
+        assert_eq!(after[1], before[1], "sibling case index must not shift");
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn fold_to_const_embeds_value() {
+        let mut g = chain();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        let v = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        g.fold_to_const(relu, v.clone()).unwrap();
+        let n = g.node(relu);
+        assert!(matches!(&n.kind, NodeKind::Item(ItemKey::Const { .. })));
+        assert_eq!(n.const_value.as_ref(), Some(&v));
+        assert!(!n.generalized);
+        // Type mismatch is rejected.
+        let neg = g.node(relu).children[0];
+        assert!(g.fold_to_const(neg, HostTensor::scalar_f32(0.0)).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration tests for the graph-optimization pipeline (`opt`): a program
+//! with systematic redundancy must produce *identical* numerics at every
+//! optimization level while the optimized plan compiles measurably less.
+
+use terra::api::{Session, Variable};
+use terra::config::ExecMode;
+use terra::error::Result;
+use terra::programs::{build_program, Program, StepOutput};
+use terra::runner::{Engine, RunReport};
+use terra::tensor::HostTensor;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_opt_it_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+/// Training-loop shaped program with deliberate redundancy:
+/// * the same matmul issued twice (CSE bait),
+/// * `·1` and `−0` scalar ops (algebraic bait),
+/// * an unused tanh branch (DCE bait).
+struct RedundantProgram {
+    w: Option<Variable>,
+}
+
+impl Program for RedundantProgram {
+    fn name(&self) -> &'static str {
+        "redundant_program"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let init: Vec<f32> = (0..16).map(|i| ((i as f32) * 0.37).sin() * 0.5).collect();
+        self.w = Some(sess.variable("w", HostTensor::f32(vec![4, 4], init)?, true)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let data: Vec<f32> = (0..16)
+            .map(|i| ((i as f32) + (step as f32) * 0.1).sin())
+            .collect();
+        let x = sess.feed(HostTensor::f32(vec![4, 4], data)?)?;
+        let a = x.matmul(&w.read())?;
+        let b = x.matmul(&w.read())?; // identical computation, new call site
+        let c = a.add(&b)?;
+        let d = c.mul_scalar(1.0)?; // identity
+        let e = d.sub_scalar(0.0)?; // identity (x - (+0.0) is sign-exact)
+        let _dead = e.tanh()?; // never fetched or assigned
+        let loss = e.reduce_mean(&[0, 1], false)?;
+        w.assign(&w.read().mul_scalar(0.999)?)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+}
+
+fn run_redundant(opt_level: u8, steps: u64) -> (RunReport, HostTensor) {
+    let dir = artifacts_dir();
+    let mut engine = Engine::with_opt_level(ExecMode::Terra, &dir, true, opt_level).unwrap();
+    let mut prog = RedundantProgram { w: None };
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    let w = prog.w.as_ref().unwrap().id();
+    (report, engine.vars().host(w).unwrap())
+}
+
+#[test]
+fn optimized_plan_is_smaller_and_numerically_identical() {
+    let steps = 12;
+    let (r0, w0) = run_redundant(0, steps);
+    let (r2, w2) = run_redundant(2, steps);
+
+    // Both reach co-execution.
+    assert!(r0.stats.enter_coexec >= 1, "{:?}", r0.stats);
+    assert!(r2.stats.enter_coexec >= 1, "{:?}", r2.stats);
+
+    // Semantics: identical losses and identical final weights.
+    assert_eq!(r0.losses.len(), r2.losses.len());
+    for ((s, a), (_, b)) in r0.losses.iter().zip(r2.losses.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "step {s}: opt0 {a} vs opt2 {b}"
+        );
+    }
+    assert!(w0.allclose(&w2, 1e-6, 1e-7), "weights diverge across opt levels");
+
+    // Payoff: the optimizer did real work and the plan compiles fewer op
+    // nodes per iteration (acceptance criterion of the opt layer).
+    assert_eq!(r0.stats.opt_nodes_removed, 0);
+    assert!(r2.stats.opt_nodes_removed > 0, "{:?}", r2.stats);
+    assert!(r2.stats.opt_rewrites > 0, "{:?}", r2.stats);
+    assert!(
+        r2.stats.plan_segment_nodes < r0.stats.plan_segment_nodes,
+        "optimized plan must compile fewer segment nodes: opt2 {} vs opt0 {}",
+        r2.stats.plan_segment_nodes,
+        r0.stats.plan_segment_nodes
+    );
+    assert!(r2.opt.pipelines >= 1);
+    assert!(r2.opt.last_nodes_after < r2.opt.last_nodes_before);
+}
+
+#[test]
+fn dce_only_level_is_also_safe() {
+    let steps = 10;
+    let (r0, w0) = run_redundant(0, steps);
+    let (r1, w1) = run_redundant(1, steps);
+    for ((s, a), (_, b)) in r0.losses.iter().zip(r1.losses.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "step {s}: opt0 {a} vs opt1 {b}"
+        );
+    }
+    assert!(w0.allclose(&w1, 1e-6, 1e-7));
+    // DCE alone removes the dead tanh.
+    assert!(r1.stats.opt_nodes_removed >= 1, "{:?}", r1.stats);
+    assert_eq!(r1.stats.opt_nodes_folded, 0);
+}
+
+#[test]
+fn registry_program_identical_across_opt_levels() {
+    let dir = artifacts_dir();
+    let run = |opt: u8| -> Vec<(u64, f32)> {
+        let mut engine = Engine::with_opt_level(ExecMode::Terra, &dir, true, opt).unwrap();
+        let mut prog = build_program("tiny_linear").unwrap();
+        engine.run(prog.as_mut(), 12, 0).unwrap().losses
+    };
+    let l0 = run(0);
+    let l2 = run(2);
+    assert_eq!(l0.len(), l2.len());
+    for ((s, a), (_, b)) in l0.iter().zip(l2.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+            "tiny_linear step {s}: opt0 {a} vs opt2 {b}"
+        );
+    }
+}

@@ -221,6 +221,148 @@ fn prop_random_programs_match_eager() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Optimization-pipeline properties: the `opt` passes must be semantics-
+// preserving by construction (ISSUE: opt_level=0 and opt_level=2 produce
+// numerically identical fetch results and variable states), and must
+// preserve every wire-format index space on random graphs.
+// ---------------------------------------------------------------------------
+
+/// A random DAG-shaped trace: ops consume random earlier values (so some
+/// values go dead), and a random subset of values is fetched.
+fn random_dag_trace(rng: &mut Rng, len: usize) -> Trace {
+    let mut items = vec![TraceItem::Feed {
+        id: ValueId(1),
+        ty: TensorType::f32(&[4]),
+        loc: loc(1),
+        kind: FeedKind::Data,
+    }];
+    let mut produced = vec![1u64];
+    let mut next = 2u64;
+    for i in 0..len {
+        let src = produced[rng.below(produced.len())];
+        let kinds = [OpKind::Relu, OpKind::Tanh, OpKind::Neg, OpKind::Abs];
+        let kind = kinds[rng.below(kinds.len())].clone();
+        items.push(TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[4])]),
+            loc: loc(10 + i as u32),
+            inputs: vec![ValueRef::Out(ValueId(src))],
+            outputs: vec![ValueId(next)],
+        });
+        produced.push(next);
+        next += 1;
+    }
+    for j in 0..1 + rng.below(3) {
+        let src = produced[rng.below(produced.len())];
+        items.push(TraceItem::Fetch {
+            src: ValueRef::Out(ValueId(src)),
+            loc: loc(2000 + j as u32),
+        });
+    }
+    Trace::resolve(items, 0).unwrap()
+}
+
+#[test]
+fn prop_opt_pipeline_preserves_wire_format_invariants() {
+    use terra::graphgen::{generate_plan, GenOptions};
+    use terra::opt::PassManager;
+    use terra::tracegraph::NodeKind;
+    use terra::trace::ItemKey;
+    use std::collections::HashMap;
+
+    for seed in 300..330u64 {
+        let mut rng = Rng::new(seed);
+        let mut g = TraceGraph::new();
+        let n_traces = 1 + rng.below(3);
+        for k in 0..n_traces {
+            let len = 4 + rng.below(24);
+            // Half the traces replay a shared stream (prefix-sharing, trip-
+            // count-style tail branches); the rest are independent (sibling
+            // branches, cross-branch variants, merge-backs at shared locs).
+            let trace_seed = if k % 2 == 0 { seed ^ 0xabc } else { seed ^ (k as u64 * 7919) };
+            let mut r = Rng::new(trace_seed);
+            g.merge(&random_dag_trace(&mut r, len)).unwrap();
+        }
+        let mut opt = g.clone();
+        let report = PassManager::standard(2).run(&mut opt, None).unwrap();
+        // Still a DAG.
+        opt.topo_order().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(opt.live_len() <= g.live_len());
+        assert_eq!(report.nodes_after, opt.live_len());
+        for (i, n) in g.nodes.iter().enumerate() {
+            let o = &opt.nodes[i];
+            // Protected nodes (communication points) survive with their ids.
+            let protected = matches!(
+                &n.kind,
+                NodeKind::Start
+                    | NodeKind::End
+                    | NodeKind::Item(ItemKey::Feed { .. })
+                    | NodeKind::Item(ItemKey::Fetch { .. })
+                    | NodeKind::Item(ItemKey::Assign { .. })
+            ) || n.generalized;
+            if protected {
+                assert!(!o.removed, "seed {seed}: protected node {i} removed");
+            }
+            if !o.removed {
+                // Case-Select arity: child count never changes on survivors.
+                assert_eq!(
+                    o.children.len(),
+                    n.children.len(),
+                    "seed {seed}: node {i} child count changed"
+                );
+                // Variant-Select arity: variant count never changes either
+                // (no folding happens without an evaluator).
+                assert_eq!(
+                    o.variants.len(),
+                    n.variants.len(),
+                    "seed {seed}: node {i} variant count changed"
+                );
+            }
+        }
+        // Both graphs still generate plans, and the optimized one keeps all
+        // communication steps.
+        let p_raw = generate_plan(&g, &HashMap::new(), &GenOptions { fusion: true }).unwrap();
+        let p_opt = generate_plan(&opt, &HashMap::new(), &GenOptions { fusion: true }).unwrap();
+        let c_raw = terra::symbolic::PlanSpec::count_steps(&p_raw.steps);
+        let c_opt = terra::symbolic::PlanSpec::count_steps(&p_opt.steps);
+        assert_eq!(c_raw.1, c_opt.1, "seed {seed}: feed steps changed");
+        assert_eq!(c_raw.2, c_opt.2, "seed {seed}: fetch steps changed");
+        assert_eq!(c_raw.3, c_opt.3, "seed {seed}: assign steps changed");
+    }
+}
+
+#[test]
+fn prop_opt_levels_produce_identical_results() {
+    // ISSUE acceptance: for randomly generated programs, opt_level=0 and
+    // opt_level=2 yield numerically identical fetches and variable states.
+    let dir = artifacts_dir();
+    for seed in 40..46u64 {
+        let steps = 14;
+        let run = |opt: u8| -> (Vec<(u64, f32)>, HostTensor) {
+            let mut engine = Engine::with_opt_level(ExecMode::Terra, &dir, true, opt).unwrap();
+            let mut prog = RandomProgram {
+                seed,
+                w: None,
+                n_layers: 2 + (seed as usize % 3),
+                n_paths: 1 + (seed as usize % 3),
+            };
+            let report = engine.run(&mut prog, steps, 0).unwrap();
+            let w = prog.w.as_ref().unwrap().id();
+            (report.losses, engine.vars().host(w).unwrap())
+        };
+        let (l0, w0) = run(0);
+        let (l2, w2) = run(2);
+        assert_eq!(l0.len(), l2.len(), "seed {seed}: loss counts differ");
+        for ((s, a), (_, b)) in l0.iter().zip(l2.iter()) {
+            assert!(
+                (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+                "seed {seed} step {s}: opt0 {a} vs opt2 {b}"
+            );
+        }
+        assert!(w0.allclose(&w2, 1e-5, 1e-6), "seed {seed}: variable states diverge");
+    }
+}
+
 #[test]
 fn prop_fallbacks_never_corrupt_state() {
     // Heavily multi-path program: every step may diverge; weights must still
