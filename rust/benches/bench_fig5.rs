@@ -55,6 +55,15 @@ fn main() {
                                 ("cache_hits_delta", num(bd.cache_hits)),
                                 ("cache_misses_delta", num(bd.cache_misses)),
                                 ("compile_count_delta", num(bd.compile_count)),
+                                // Shim backend breakdown over the measured
+                                // window: work executed, fusion, buffer
+                                // reuse, and the compile-vs-execute split.
+                                ("shim_instructions_delta", num(bd.shim_instructions)),
+                                ("shim_fused_instructions", num(bd.shim_fused_instructions)),
+                                ("shim_bytes_reused_delta", num(bd.shim_bytes_reused)),
+                                ("shim_compile_ms_delta", Json::Num(bd.shim_compile_ms)),
+                                ("shim_execute_ms_delta", Json::Num(bd.shim_execute_ms)),
+                                ("mailbox_dropped", num(st.mailbox_dropped)),
                             ]),
                         ));
                     }

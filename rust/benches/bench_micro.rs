@@ -159,8 +159,146 @@ fn main() {
         push("xla compiles (process)", client.compile_count() as f64, "count", &mut json);
     }
 
+    // 8. Shim backend split: isolate pure execute cost of the vendored XLA
+    // shim on both backends (interp oracle vs bytecode), over the shapes
+    // that dominate the bench_fig5 workloads — elementwise chains (small
+    // and large) and matmuls — plus the compile-vs-execute time split.
+    {
+        for (label, n) in [("small 32x32", 32usize), ("large 256x256", 256usize)] {
+            let comp = elementwise_chain_comp(n);
+            let data = vec![0.125f32; n * n];
+            let arg = xla::PjRtClient::cpu()
+                .unwrap()
+                .buffer_from_host_buffer::<f32>(&data, &[n, n], None)
+                .unwrap();
+            let mut per_backend = [0f64; 2];
+            for (bi, backend) in
+                [xla::ShimBackend::Interp, xla::ShimBackend::Bytecode].iter().enumerate()
+            {
+                let exe = xla::PjRtClient::cpu()
+                    .unwrap()
+                    .compile_with_backend(&comp, *backend)
+                    .unwrap();
+                let _ = exe.execute_b(&[&arg]).unwrap(); // warm the pool
+                let iters = if n >= 256 { 200 } else { 2000 };
+                let (mean, _, _) = time_micro(
+                    || {
+                        let _ = exe.execute_b(&[&arg]).unwrap();
+                    },
+                    iters,
+                );
+                per_backend[bi] = mean;
+                let name = format!(
+                    "shim exec ew-chain {label} ({})",
+                    exe.backend_name()
+                );
+                push(&name, mean / 1000.0, "us", &mut json);
+            }
+            push(
+                &format!("shim ew-chain {label} speedup"),
+                per_backend[0] / per_backend[1].max(1e-9),
+                "x",
+                &mut json,
+            );
+        }
+        for (m, k, nn) in [(64usize, 64usize, 64usize), (128, 256, 128)] {
+            let comp = matmul_comp(m, k, nn);
+            let client0 = xla::PjRtClient::cpu().unwrap();
+            let a: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+            let b: Vec<f32> = (0..k * nn).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+            let ab = client0.buffer_from_host_buffer::<f32>(&a, &[m, k], None).unwrap();
+            let bb = client0.buffer_from_host_buffer::<f32>(&b, &[k, nn], None).unwrap();
+            let mut per_backend = [0f64; 2];
+            for (bi, backend) in
+                [xla::ShimBackend::Interp, xla::ShimBackend::Bytecode].iter().enumerate()
+            {
+                let exe = client0.compile_with_backend(&comp, *backend).unwrap();
+                let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                let (mean, _, _) = time_micro(
+                    || {
+                        let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                    },
+                    200,
+                );
+                per_backend[bi] = mean;
+                push(
+                    &format!("shim exec matmul {m}x{k}x{nn} ({})", exe.backend_name()),
+                    mean / 1000.0,
+                    "us",
+                    &mut json,
+                );
+            }
+            push(
+                &format!("shim matmul {m}x{k}x{nn} speedup"),
+                per_backend[0] / per_backend[1].max(1e-9),
+                "x",
+                &mut json,
+            );
+        }
+        // Compile cost of the bytecode pipeline vs the interp wrapper.
+        {
+            let comp = elementwise_chain_comp(64);
+            let client0 = xla::PjRtClient::cpu().unwrap();
+            let (mean_bc, _, _) = time_micro(
+                || {
+                    let _ = client0
+                        .compile_with_backend(&comp, xla::ShimBackend::Bytecode)
+                        .unwrap();
+                },
+                200,
+            );
+            let (mean_in, _, _) = time_micro(
+                || {
+                    let _ = client0
+                        .compile_with_backend(&comp, xla::ShimBackend::Interp)
+                        .unwrap();
+                },
+                200,
+            );
+            push("shim compile ew-chain (bytecode)", mean_bc / 1000.0, "us", &mut json);
+            push("shim compile ew-chain (interp)", mean_in / 1000.0, "us", &mut json);
+        }
+        // Cumulative compile-vs-execute split + bytecode work/savings
+        // counters (the backend breakdown recorded in the bench JSON).
+        let t = client.shim_totals();
+        push("shim compile total", t.compile_ns as f64 / 1e6, "ms", &mut json);
+        push("shim execute total", t.execute_ns as f64 / 1e6, "ms", &mut json);
+        push("shim compiles", t.compiles as f64, "count", &mut json);
+        push("shim executions", t.executions as f64, "count", &mut json);
+        push("shim interp executions", t.interp_executions as f64, "count", &mut json);
+        push("shim instructions executed", t.instructions as f64, "count", &mut json);
+        push("shim fused instructions", t.fused_instructions as f64, "count", &mut json);
+        push("shim bytes reused", t.bytes_reused as f64, "bytes", &mut json);
+    }
+
     print_table("micro-benchmarks (§Perf)", &["metric", "value", "unit"], &rows);
     write_json_report("micro", Json::Arr(json));
+}
+
+/// A 10-op fusable elementwise chain over an `[n, n]` input, with a scalar
+/// splat in the mix (the shape PR 1's fusion pipeline hands the shim).
+fn elementwise_chain_comp(n: usize) -> xla::XlaComputation {
+    let b = xla::XlaBuilder::new("ewchain");
+    let x = b.parameter(0, xla::ElementType::F32, &[n as i64, n as i64], "x").unwrap();
+    let c = b.c0(0.75f32).unwrap();
+    let mut cur = x.mul_(&c).unwrap();
+    cur = cur.tanh().unwrap();
+    cur = cur.add_(&x).unwrap();
+    cur = cur.logistic().unwrap();
+    cur = cur.neg().unwrap();
+    cur = cur.exp().unwrap();
+    cur = cur.mul_(&c).unwrap();
+    cur = cur.abs().unwrap();
+    cur = cur.sqrt().unwrap();
+    b.build(&cur).unwrap()
+}
+
+fn matmul_comp(m: usize, k: usize, n: usize) -> xla::XlaComputation {
+    let b = xla::XlaBuilder::new("mm");
+    let a = b.parameter(0, xla::ElementType::F32, &[m as i64, k as i64], "a").unwrap();
+    let w = b.parameter(1, xla::ElementType::F32, &[k as i64, n as i64], "b").unwrap();
+    let mm = a.matmul(&w).unwrap();
+    b.build(&mm).unwrap()
 }
 
 /// A trace with systematic redundancy: pairs of identical relu ops (CSE

@@ -130,6 +130,16 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
         report.breakdown_per_step.cache_misses,
         report.breakdown_per_step.compile_count,
     );
+    let b = report.breakdown_per_step;
+    println!(
+        "shim: {} instructions, {} fused, {} bytes reused, compile {:.2}ms / execute {:.2}ms | {} mailbox msgs GC'd",
+        b.shim_instructions,
+        b.shim_fused_instructions,
+        b.shim_bytes_reused,
+        b.shim_compile_ms,
+        b.shim_execute_ms,
+        s.mailbox_dropped,
+    );
 }
 
 fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {

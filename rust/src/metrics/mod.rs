@@ -36,6 +36,19 @@ pub struct BreakdownSnapshot {
     pub cache_misses: u64,
     /// `Client::compile_count` — total XLA compile invocations.
     pub compile_count: u64,
+    /// Shim bytecode instructions executed (backend breakdown; delta after
+    /// [`BreakdownSnapshot::per_step_since`]).
+    pub shim_instructions: u64,
+    /// Fused elementwise-loop instructions across compiled shim programs.
+    pub shim_fused_instructions: u64,
+    /// Bytes served from the shim's executable buffer pools instead of
+    /// fresh allocations.
+    pub shim_bytes_reused: u64,
+    /// Milliseconds spent compiling inside the shim (the compile half of
+    /// the compile-vs-execute split).
+    pub shim_compile_ms: f64,
+    /// Milliseconds spent executing inside the shim.
+    pub shim_execute_ms: f64,
 }
 
 impl Breakdown {
@@ -76,6 +89,11 @@ impl Breakdown {
             cache_hits: 0,
             cache_misses: 0,
             compile_count: 0,
+            shim_instructions: 0,
+            shim_fused_instructions: 0,
+            shim_bytes_reused: 0,
+            shim_compile_ms: 0.0,
+            shim_execute_ms: 0.0,
         }
     }
 }
@@ -95,6 +113,13 @@ impl BreakdownSnapshot {
             cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
             cache_misses: self.cache_misses.saturating_sub(earlier.cache_misses),
             compile_count: self.compile_count.saturating_sub(earlier.compile_count),
+            shim_instructions: self.shim_instructions.saturating_sub(earlier.shim_instructions),
+            shim_fused_instructions: self
+                .shim_fused_instructions
+                .saturating_sub(earlier.shim_fused_instructions),
+            shim_bytes_reused: self.shim_bytes_reused.saturating_sub(earlier.shim_bytes_reused),
+            shim_compile_ms: self.shim_compile_ms - earlier.shim_compile_ms,
+            shim_execute_ms: self.shim_execute_ms - earlier.shim_execute_ms,
         }
     }
 }

@@ -47,6 +47,30 @@ impl CoExecChannels {
         })
     }
 
+    /// Per-iteration mailbox hygiene: once iteration `upto` has committed,
+    /// drop every message still keyed to it or earlier. Unconsumed values
+    /// exist whenever the optimizer eliminated a node from the plan that the
+    /// skeleton still feeds (Variant Selects, Case Selects, feeds) or a
+    /// fetch was published but never demanded; without GC they accumulate
+    /// until the next cancellation. Returns the number dropped.
+    pub fn gc_iteration(&self, upto: u64) -> u64 {
+        self.feeds.gc_le(upto)
+            + self.fetches.gc_le(upto)
+            + self.cases.gc_le(upto)
+            + self.variants.gc_le(upto)
+            + self.commits.gc_le(upto)
+    }
+
+    /// Total messages dropped by [`CoExecChannels::gc_iteration`] over this
+    /// co-execution phase.
+    pub fn dropped_total(&self) -> u64 {
+        self.feeds.dropped()
+            + self.fetches.dropped()
+            + self.cases.dropped()
+            + self.variants.dropped()
+            + self.commits.dropped()
+    }
+
     /// Cancel everything from iteration `from` onward and wake all waiters.
     pub fn cancel_from(&self, from: u64) {
         self.feeds.cancel_from(from);

@@ -74,6 +74,10 @@ pub struct EngineStats {
     pub plan_segment_nodes: u64,
     /// Segment steps of the most recent plan.
     pub plan_segments: u64,
+    /// Unconsumed runner messages dropped by per-iteration mailbox GC
+    /// (feeds/variant-selects for plan-eliminated nodes, undemanded
+    /// fetches), cumulative over co-execution phases.
+    pub mailbox_dropped: u64,
 }
 
 /// Result of a measured run.
@@ -252,6 +256,12 @@ impl Engine {
         snap.cache_hits = self.seg_cache.hits();
         snap.cache_misses = self.seg_cache.misses();
         snap.compile_count = self.client.compile_count();
+        let shim = self.client.shim_totals();
+        snap.shim_instructions = shim.instructions;
+        snap.shim_fused_instructions = shim.fused_instructions;
+        snap.shim_bytes_reused = shim.bytes_reused;
+        snap.shim_compile_ms = shim.compile_ns as f64 / 1e6;
+        snap.shim_execute_ms = shim.execute_ns as f64 / 1e6;
     }
 
     fn var_types(&self) -> Result<HashMap<VarId, TensorType>> {
@@ -414,7 +424,8 @@ impl Engine {
     /// it (it finishes committed earlier iterations first), and swap back to
     /// the tracing backend.
     fn fallback(&mut self, iter: u64) -> Result<()> {
-        if let Some(ch) = self.channels.take() {
+        let channels = self.channels.take();
+        if let Some(ch) = &channels {
             ch.cancel_from(iter);
         }
         if let Some(r) = self.runner.take() {
@@ -422,6 +433,9 @@ impl Engine {
                 Ok(()) | Err(TerraError::Cancelled) => {}
                 Err(e) => return Err(e),
             }
+        }
+        if let Some(ch) = &channels {
+            self.stats.mailbox_dropped += ch.dropped_total();
         }
         let eager = EagerBackend::new(self.exec.clone(), self.vars.clone());
         let tracing = TracingBackend::new(eager);
@@ -465,6 +479,7 @@ impl Engine {
                 Ok(()) | Err(TerraError::Cancelled) => {}
                 Err(e) => return Err(e),
             }
+            self.stats.mailbox_dropped += ch.dropped_total();
         }
         self.channels = None;
         Ok(())

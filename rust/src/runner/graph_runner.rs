@@ -120,6 +120,12 @@ fn run_iteration(
     for (var, v) in st.staged.drain() {
         vars.set(var, v)?;
     }
+    // Mailbox hygiene: the iteration is committed on both sides (the
+    // PythonRunner posted the commit token after validating it), so any
+    // message still keyed to it — feeds/variant-selects for plan-eliminated
+    // nodes, undemanded fetches — is garbage. Drop it now instead of letting
+    // it accumulate until the next cancellation.
+    channels.gc_iteration(iter);
     Ok(())
 }
 

@@ -22,6 +22,9 @@ struct State<V> {
     map: HashMap<Key, V>,
     /// All takes for iterations >= this value fail with `Cancelled`.
     cancel_from: u64,
+    /// Messages discarded by [`Mailbox::gc_le`] (unconsumed values for
+    /// already-committed iterations, e.g. feeds for plan-eliminated nodes).
+    dropped: u64,
 }
 
 impl<V> Default for Mailbox<V> {
@@ -33,7 +36,11 @@ impl<V> Default for Mailbox<V> {
 impl<V> Mailbox<V> {
     pub fn new() -> Self {
         Mailbox {
-            inner: Mutex::new(State { map: HashMap::new(), cancel_from: u64::MAX }),
+            inner: Mutex::new(State {
+                map: HashMap::new(),
+                cancel_from: u64::MAX,
+                dropped: 0,
+            }),
             cv: Condvar::new(),
         }
     }
@@ -62,6 +69,25 @@ impl<V> Mailbox<V> {
     /// Non-blocking probe (used in tests and diagnostics).
     pub fn try_take(&self, iter: u64, node: NodeId) -> Option<V> {
         self.inner.lock().unwrap().map.remove(&(iter, node))
+    }
+
+    /// Garbage-collect every message for iterations `<= iter`. The runners
+    /// call this once an iteration has committed: any value still present is
+    /// unconsumable (its consumer was eliminated from the compiled plan, or
+    /// the fetch was never demanded) and would otherwise accumulate until
+    /// the next cancellation. Returns how many messages were dropped.
+    pub fn gc_le(&self, iter: u64) -> u64 {
+        let mut st = self.inner.lock().unwrap();
+        let before = st.map.len();
+        st.map.retain(|k, _| k.0 > iter);
+        let dropped = (before - st.map.len()) as u64;
+        st.dropped += dropped;
+        dropped
+    }
+
+    /// Messages dropped by [`Mailbox::gc_le`] over this mailbox's lifetime.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
     }
 
     /// Cancel all pending and future takes for iterations >= `from`.
@@ -199,6 +225,22 @@ mod tests {
         // Earlier iterations still work.
         mb.put(4, NodeId(1), 9);
         assert_eq!(mb.take(4, NodeId(1)).unwrap(), 9);
+    }
+
+    #[test]
+    fn mailbox_gc_drops_only_committed_iterations() {
+        let mb = Mailbox::new();
+        mb.put(3, NodeId(1), 1);
+        mb.put(4, NodeId(2), 2);
+        mb.put(5, NodeId(3), 3);
+        assert_eq!(mb.gc_le(4), 2);
+        assert_eq!(mb.dropped(), 2);
+        // Messages for later iterations survive.
+        assert_eq!(mb.take(5, NodeId(3)).unwrap(), 3);
+        // Dropped messages are gone.
+        assert!(mb.try_take(3, NodeId(1)).is_none());
+        assert_eq!(mb.gc_le(10), 0);
+        assert_eq!(mb.dropped(), 2);
     }
 
     #[test]

@@ -49,6 +49,15 @@ impl Client {
         self.compile_count.load(Ordering::Relaxed)
     }
 
+    /// Process-wide backend counters from the XLA shim: the compile-time vs
+    /// run-time split (`compile_ns`/`execute_ns`) and the bytecode backend's
+    /// breakdown (instructions executed, fusion count, bytes saved by buffer
+    /// reuse). With the real `xla` crate these would come from PJRT
+    /// profiling; the vendored shim maintains them natively.
+    pub fn shim_totals(&self) -> xla::ShimTotals {
+        xla::shim_totals()
+    }
+
     pub fn compile(&self, computation: &xla::XlaComputation, out_types: Vec<TensorType>) -> Result<Executable> {
         self.compile_count.fetch_add(1, Ordering::Relaxed);
         let exe = self.inner.0.compile(computation)?;

@@ -1,0 +1,545 @@
+//! Differential property tests: the vendored XLA shim's bytecode backend
+//! must be bit-identical to the retained tree interpreter (the oracle) over
+//! a generated op corpus — including deterministic RNG draws and the
+//! RNG-stream alignment contract (dead RNG nodes still consume draws).
+
+use terra::data::Rng;
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PrimitiveType, ShimBackend, XlaBuilder, XlaComputation, XlaOp};
+
+const MAX_ELEMS: usize = 4096;
+
+struct Val {
+    op: XlaOp,
+    prim: PrimitiveType,
+    dims: Vec<i64>,
+}
+
+impl Val {
+    fn n(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+    fn is_f(&self) -> bool {
+        self.prim == PrimitiveType::F32
+    }
+}
+
+enum ArgData {
+    F { data: Vec<f32>, dims: Vec<usize> },
+    I { data: Vec<i32>, dims: Vec<usize> },
+}
+
+fn random_dims(rng: &mut Rng, max_rank: usize, max_sz: usize) -> Vec<i64> {
+    let rank = rng.below(max_rank + 1);
+    (0..rank).map(|_| 1 + rng.below(max_sz) as i64).collect()
+}
+
+fn push(vals: &mut Vec<Val>, op: XlaOp, prim: PrimitiveType, dims: Vec<i64>) {
+    vals.push(Val { op, prim, dims });
+}
+
+/// Pick an index of a value satisfying `pred`, if any.
+fn pick_where(vals: &[Val], rng: &mut Rng, pred: impl Fn(&Val) -> bool) -> Option<usize> {
+    let cands: Vec<usize> =
+        (0..vals.len()).filter(|&i| pred(&vals[i])).collect();
+    if cands.is_empty() {
+        None
+    } else {
+        Some(cands[rng.below(cands.len())])
+    }
+}
+
+/// Append one random op to the pool (no-op if no applicable operands).
+fn add_random_op(b: &XlaBuilder, vals: &mut Vec<Val>, rng: &mut Rng, allow_rng: bool) {
+    // 0..=17 are deterministic op kinds; 18..=19 is the RNG-op arm.
+    let choice = rng.below(20);
+    match choice {
+        // Unary.
+        0 | 1 => {
+            let Some(i) = pick_where(vals, rng, |_| true) else { return };
+            let v = &vals[i];
+            let (op, prim, dims) = if v.is_f() {
+                let o = match rng.below(9) {
+                    0 => v.op.neg(),
+                    1 => v.op.exp(),
+                    2 => v.op.log(),
+                    3 => v.op.sqrt(),
+                    4 => v.op.rsqrt(),
+                    5 => v.op.tanh(),
+                    6 => v.op.logistic(),
+                    7 => v.op.abs(),
+                    _ => v.op.sign(),
+                };
+                (o.unwrap(), v.prim, v.dims.clone())
+            } else {
+                let o = match rng.below(3) {
+                    0 => v.op.neg(),
+                    1 => v.op.abs(),
+                    _ => v.op.sign(),
+                };
+                (o.unwrap(), v.prim, v.dims.clone())
+            };
+            push(vals, op, prim, dims);
+        }
+        // ZerosLike.
+        2 => {
+            let Some(i) = pick_where(vals, rng, |_| true) else { return };
+            let v = &vals[i];
+            let (op, prim, dims) = (v.op.zeros_like().unwrap(), v.prim, v.dims.clone());
+            push(vals, op, prim, dims);
+        }
+        // Binary (same shape or scalar broadcast; fused path).
+        3 | 4 => {
+            let Some(ai) = pick_where(vals, rng, |_| true) else { return };
+            let (aprim, adims) = (vals[ai].prim, vals[ai].dims.clone());
+            let af = vals[ai].is_f();
+            let an = vals[ai].n();
+            let Some(bi) = pick_where(vals, rng, |w| {
+                w.is_f() == af && (w.dims == adims || w.n() == 1 || an == 1)
+            }) else {
+                return;
+            };
+            let out_dims = if an == 1 { vals[bi].dims.clone() } else { adims };
+            let a = vals[ai].op.clone();
+            let bb = vals[bi].op.clone();
+            let o = match rng.below(7) {
+                0 => a.add_(&bb),
+                1 => a.sub_(&bb),
+                2 => a.mul_(&bb),
+                3 => a.div_(&bb),
+                4 => a.max(&bb),
+                5 => a.min(&bb),
+                _ => a.pow(&bb),
+            };
+            push(vals, o.unwrap(), aprim, out_dims);
+        }
+        // Binary with a real broadcast (keep-dims reduce of self -> [..,1]).
+        5 => {
+            let Some(ai) =
+                pick_where(vals, rng, |w| w.is_f() && !w.dims.is_empty() && w.n() <= MAX_ELEMS)
+            else {
+                return;
+            };
+            let v = &vals[ai];
+            let d = rng.below(v.dims.len()) as i64;
+            let red = v.op.reduce_sum(&[d], true).unwrap();
+            let mut rdims = v.dims.clone();
+            rdims[d as usize] = 1;
+            let out = v.op.sub_(&red).unwrap();
+            let out_dims = v.dims.clone();
+            let prim = v.prim;
+            push(vals, red, prim, rdims);
+            push(vals, out, prim, out_dims);
+        }
+        // Compare.
+        6 => {
+            let Some(ai) = pick_where(vals, rng, |_| true) else { return };
+            let (adims, af, an) = (vals[ai].dims.clone(), vals[ai].is_f(), vals[ai].n());
+            let Some(bi) = pick_where(vals, rng, |w| {
+                w.is_f() == af && (w.dims == adims || w.n() == 1 || an == 1)
+            }) else {
+                return;
+            };
+            let out_dims = if an == 1 { vals[bi].dims.clone() } else { adims };
+            let a = vals[ai].op.clone();
+            let bb = vals[bi].op.clone();
+            let o = match rng.below(6) {
+                0 => a.gt(&bb),
+                1 => a.ge(&bb),
+                2 => a.lt(&bb),
+                3 => a.le(&bb),
+                4 => a.eq(&bb),
+                _ => a.ne(&bb),
+            };
+            push(vals, o.unwrap(), PrimitiveType::Pred, out_dims);
+        }
+        // Select (pred built from a same-shape compare).
+        7 => {
+            let Some(ti) = pick_where(vals, rng, |_| true) else { return };
+            let (tdims, tf, tprim) = (vals[ti].dims.clone(), vals[ti].is_f(), vals[ti].prim);
+            let Some(fi) = pick_where(vals, rng, |w| w.dims == tdims && w.is_f() == tf) else {
+                return;
+            };
+            let t = vals[ti].op.clone();
+            let f = vals[fi].op.clone();
+            let pred = t.ne(&f).unwrap();
+            let sel = pred.select(&t, &f).unwrap();
+            push(vals, pred, PrimitiveType::Pred, tdims.clone());
+            push(vals, sel, tprim, tdims);
+        }
+        // MatMul built from iotas scaled by a data-derived scalar.
+        8 => {
+            let Some(si) = pick_where(vals, rng, |w| w.is_f()) else { return };
+            let rd: Vec<i64> = (0..vals[si].dims.len() as i64).collect();
+            let scalar = vals[si].op.reduce_mean(&rd, false).unwrap();
+            let m = 2 + rng.below(6) as i64;
+            let k = 2 + rng.below(6) as i64;
+            let nn = 2 + rng.below(6) as i64;
+            let ia = b.iota1(ElementType::F32, (m * k) as usize).unwrap();
+            let ib = b.iota1(ElementType::F32, (k * nn) as usize).unwrap();
+            let half = b.c0(0.25f32).unwrap();
+            let a2 = ia.mul_(&scalar).unwrap().reshape(&[m, k]).unwrap();
+            let b2 = ib.mul_(&half).unwrap().reshape(&[k, nn]).unwrap();
+            if rng.below(3) == 0 {
+                // Batched lhs against a shared 2-d rhs.
+                let bb = 2 + rng.below(2) as i64;
+                if (bb * m * nn) as usize <= MAX_ELEMS {
+                    let a3 = a2.broadcast(&[bb]).unwrap();
+                    let mm = a3.matmul(&b2).unwrap();
+                    push(vals, mm, PrimitiveType::F32, vec![bb, m, nn]);
+                }
+            } else {
+                let mm = a2.matmul(&b2).unwrap();
+                push(vals, mm, PrimitiveType::F32, vec![m, nn]);
+            }
+            push(vals, scalar, PrimitiveType::F32, vec![]);
+        }
+        // Transpose with a random permutation.
+        9 => {
+            let Some(i) = pick_where(vals, rng, |w| !w.dims.is_empty()) else { return };
+            let v = &vals[i];
+            let r = v.dims.len();
+            let mut perm: Vec<i64> = (0..r as i64).collect();
+            for x in (1..r).rev() {
+                let y = rng.below(x + 1);
+                perm.swap(x, y);
+            }
+            let out_dims: Vec<i64> = perm.iter().map(|&p| v.dims[p as usize]).collect();
+            let (op, prim) = (v.op.transpose(&perm).unwrap(), v.prim);
+            push(vals, op, prim, out_dims);
+        }
+        // Reshape (flatten or column).
+        10 => {
+            let Some(i) = pick_where(vals, rng, |_| true) else { return };
+            let v = &vals[i];
+            let n = v.n() as i64;
+            let dims = match rng.below(3) {
+                0 => vec![n],
+                1 => vec![1, n],
+                _ => vec![n, 1],
+            };
+            let (op, prim) = (v.op.reshape(&dims).unwrap(), v.prim);
+            push(vals, op, prim, dims);
+        }
+        // Broadcast: prepend major dims.
+        11 => {
+            let Some(i) = pick_where(vals, rng, |w| w.n() * 6 <= MAX_ELEMS) else { return };
+            let v = &vals[i];
+            let sizes = vec![1 + rng.below(3) as i64];
+            let mut out_dims = sizes.clone();
+            out_dims.extend_from_slice(&v.dims);
+            let (op, prim) = (v.op.broadcast(&sizes).unwrap(), v.prim);
+            push(vals, op, prim, out_dims);
+        }
+        // BroadcastInDim: new major dim via identity-shifted mapping.
+        12 => {
+            let Some(i) = pick_where(vals, rng, |w| w.n() * 4 <= MAX_ELEMS) else { return };
+            let v = &vals[i];
+            let z = 1 + rng.below(3) as i64;
+            let mut out_dims = vec![z];
+            out_dims.extend_from_slice(&v.dims);
+            let bdims: Vec<i64> = (1..=v.dims.len() as i64).collect();
+            let (op, prim) = (v.op.broadcast_in_dim(&out_dims, &bdims).unwrap(), v.prim);
+            push(vals, op, prim, out_dims);
+        }
+        // Concat with itself along a random dim.
+        13 => {
+            let Some(i) =
+                pick_where(vals, rng, |w| !w.dims.is_empty() && w.n() * 2 <= MAX_ELEMS)
+            else {
+                return;
+            };
+            let v = &vals[i];
+            let d = rng.below(v.dims.len()) as i64;
+            let mut out_dims = v.dims.clone();
+            out_dims[d as usize] *= 2;
+            let (op, prim) = (v.op.concat_in_dim(&[&v.op], d).unwrap(), v.prim);
+            push(vals, op, prim, out_dims);
+        }
+        // Slice.
+        14 => {
+            let Some(i) = pick_where(vals, rng, |w| !w.dims.is_empty()) else { return };
+            let v = &vals[i];
+            let d = rng.below(v.dims.len());
+            let len = v.dims[d] as usize;
+            let start = rng.below(len) as i64;
+            let stop = start + 1 + rng.below(len - start as usize) as i64;
+            let mut out_dims = v.dims.clone();
+            out_dims[d] = stop - start;
+            let (op, prim) = (v.op.slice_in_dim1(start, stop, d as i64).unwrap(), v.prim);
+            push(vals, op, prim, out_dims);
+        }
+        // Reduce.
+        15 => {
+            let Some(i) = pick_where(vals, rng, |w| !w.dims.is_empty()) else { return };
+            let v = &vals[i];
+            let d = rng.below(v.dims.len()) as i64;
+            let keep = rng.below(2) == 0;
+            let kind = if v.is_f() { rng.below(3) } else { rng.below(2) };
+            let o = match kind {
+                0 => v.op.reduce_sum(&[d], keep),
+                1 => v.op.reduce_max(&[d], keep),
+                _ => v.op.reduce_mean(&[d], keep),
+            };
+            let mut out_dims = Vec::new();
+            for (j, &x) in v.dims.iter().enumerate() {
+                if j as i64 == d {
+                    if keep {
+                        out_dims.push(1);
+                    }
+                } else {
+                    out_dims.push(x);
+                }
+            }
+            let prim = v.prim;
+            push(vals, o.unwrap(), prim, out_dims);
+        }
+        // Softmax + take.
+        16 => {
+            if rng.below(2) == 0 {
+                let Some(i) = pick_where(vals, rng, |w| w.is_f() && !w.dims.is_empty()) else {
+                    return;
+                };
+                let v = &vals[i];
+                let d = rng.below(v.dims.len()) as i64;
+                let (op, dims) = (v.op.softmax(d).unwrap(), v.dims.clone());
+                push(vals, op, PrimitiveType::F32, dims);
+            } else {
+                let Some(di) = pick_where(vals, rng, |w| !w.dims.is_empty()) else { return };
+                let (ddims, dprim) = (vals[di].dims.clone(), vals[di].prim);
+                let d = rng.below(ddims.len());
+                let k = 1 + rng.below(4);
+                let idx = b.iota1(ElementType::S32, k).unwrap();
+                let inner: i64 = ddims[d + 1..].iter().product();
+                let outer: i64 = ddims[..d].iter().product();
+                if (outer * k as i64 * inner.max(1)) as usize > MAX_ELEMS {
+                    return;
+                }
+                let mut out_dims: Vec<i64> = ddims[..d].to_vec();
+                out_dims.push(k as i64);
+                out_dims.extend_from_slice(&ddims[d + 1..]);
+                let op = vals[di].op.take(&idx, d as i64).unwrap();
+                push(vals, idx, PrimitiveType::S32, vec![k as i64]);
+                push(vals, op, dprim, out_dims);
+            }
+        }
+        // Convert (including the same-type alias path).
+        17 => {
+            let Some(i) = pick_where(vals, rng, |_| true) else { return };
+            let v = &vals[i];
+            let target = if v.is_f() {
+                match rng.below(3) {
+                    0 => PrimitiveType::S32,
+                    1 => PrimitiveType::Pred,
+                    _ => PrimitiveType::F32,
+                }
+            } else {
+                match rng.below(3) {
+                    0 => PrimitiveType::F32,
+                    1 => PrimitiveType::S32,
+                    _ => PrimitiveType::Pred,
+                }
+            };
+            let (op, dims) = (v.op.convert(target).unwrap(), v.dims.clone());
+            push(vals, op, target, dims);
+        }
+        _ => {
+            if allow_rng {
+                let dims = random_dims(rng, 2, 5);
+                let lo = b.c0(-1.0f32 - rng.unit()).unwrap();
+                let hi = b.c0(1.0f32 + rng.unit()).unwrap();
+                let sh = xla::ArrayShape::new::<f32>(dims.clone());
+                let op = if rng.below(2) == 0 {
+                    XlaOp::rng_uniform(&lo, &hi, &sh).unwrap()
+                } else {
+                    XlaOp::rng_normal(&lo, &hi, &sh).unwrap()
+                };
+                push(vals, op, PrimitiveType::F32, dims);
+            }
+        }
+    }
+}
+
+fn build_case(seed: u64, allow_rng: bool) -> (XlaComputation, Vec<ArgData>) {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ 0xC0FF_EE00);
+    let b = XlaBuilder::new("fuzz");
+    let mut vals: Vec<Val> = Vec::new();
+    let mut args: Vec<ArgData> = Vec::new();
+    let n_params = 1 + rng.below(3);
+    for pi in 0..n_params {
+        let dims = random_dims(&mut rng, 3, 4);
+        let n: usize = dims.iter().map(|&d| d as usize).product();
+        let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        if rng.below(4) == 0 {
+            let data: Vec<i32> = (0..n).map(|_| rng.below(9) as i32 - 4).collect();
+            let op = b.parameter(pi as i64, ElementType::S32, &dims, "p").unwrap();
+            args.push(ArgData::I { data, dims: udims });
+            push(&mut vals, op, PrimitiveType::S32, dims);
+        } else {
+            let data = rng.normal_vec(n, 1.5);
+            let op = b.parameter(pi as i64, ElementType::F32, &dims, "p").unwrap();
+            args.push(ArgData::F { data, dims: udims });
+            push(&mut vals, op, PrimitiveType::F32, dims);
+        }
+    }
+    // Seed the pool with a couple of scalar constants (splat material).
+    push(
+        &mut vals,
+        b.c0(rng.uniform(-2.0, 2.0)).unwrap(),
+        PrimitiveType::F32,
+        vec![],
+    );
+    push(&mut vals, b.c0(rng.below(7) as i32 - 3).unwrap(), PrimitiveType::S32, vec![]);
+    let n_ops = 6 + rng.below(30);
+    for _ in 0..n_ops {
+        add_random_op(&b, &mut vals, &mut rng, allow_rng);
+    }
+    let k = 1 + rng.below(3);
+    let mut outs: Vec<XlaOp> = Vec::new();
+    for _ in 0..k {
+        outs.push(vals[rng.below(vals.len())].op.clone());
+    }
+    let root = if outs.len() == 1 && rng.below(2) == 0 {
+        outs[0].clone()
+    } else {
+        b.tuple(&outs).unwrap()
+    };
+    (b.build(&root).unwrap(), args)
+}
+
+fn make_buffers(client: &PjRtClient, args: &[ArgData]) -> Vec<PjRtBuffer> {
+    args.iter()
+        .map(|a| match a {
+            ArgData::F { data, dims } => {
+                client.buffer_from_host_buffer::<f32>(data, dims, None).unwrap()
+            }
+            ArgData::I { data, dims } => {
+                client.buffer_from_host_buffer::<i32>(data, dims, None).unwrap()
+            }
+        })
+        .collect()
+}
+
+/// A shape+bitwise fingerprint of one output leaf.
+fn fingerprint(lit: &Literal) -> (PrimitiveType, Vec<i64>, Vec<u32>) {
+    let sh = lit.array_shape().unwrap();
+    let bits: Vec<u32> = match sh.primitive_type() {
+        PrimitiveType::F32 => lit.to_vec::<f32>().unwrap().iter().map(|v| v.to_bits()).collect(),
+        _ => lit.to_vec::<i32>().unwrap().iter().map(|&v| v as u32).collect(),
+    };
+    (sh.primitive_type(), sh.dims().to_vec(), bits)
+}
+
+type RunOut = Result<Vec<(PrimitiveType, Vec<i64>, Vec<u32>)>, String>;
+
+fn run_backend(comp: &XlaComputation, args: &[ArgData], backend: ShimBackend) -> RunOut {
+    let client = PjRtClient::cpu().unwrap();
+    let bufs = make_buffers(&client, args);
+    let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+    let exe = client.compile_with_backend(comp, backend).map_err(|e| e.to_string())?;
+    let mut out = exe.execute_b(&refs).map_err(|e| e.to_string())?;
+    Ok(out
+        .remove(0)
+        .iter()
+        .map(|b| fingerprint(&b.to_literal_sync().unwrap()))
+        .collect())
+}
+
+fn check_seed(seed: u64, allow_rng: bool) {
+    let (comp, args) = build_case(seed, allow_rng);
+    let rng_seed = 0x5EED_0000 ^ seed;
+    xla::set_rng_state(rng_seed);
+    let a = run_backend(&comp, &args, ShimBackend::Interp);
+    let state_interp = xla::rng_state();
+    xla::set_rng_state(rng_seed);
+    let c = run_backend(&comp, &args, ShimBackend::Bytecode);
+    let state_bytecode = xla::rng_state();
+    match (a, c) {
+        (Ok(a), Ok(c)) => {
+            assert_eq!(a.len(), c.len(), "output arity differs at seed {seed}");
+            for (j, (l, r)) in a.iter().zip(c.iter()).enumerate() {
+                assert_eq!(l.0, r.0, "output {j} dtype differs at seed {seed}");
+                assert_eq!(l.1, r.1, "output {j} dims differ at seed {seed}");
+                assert_eq!(l.2, r.2, "output {j} bits differ at seed {seed}");
+            }
+            if allow_rng {
+                assert_eq!(
+                    state_interp, state_bytecode,
+                    "RNG stream state diverged at seed {seed}"
+                );
+            }
+        }
+        (Err(_), Err(_)) => {} // both backends reject the graph: acceptable
+        (a, c) => panic!(
+            "backend disagreement at seed {seed}: interp ok={}, bytecode ok={}",
+            a.is_ok(),
+            c.is_ok()
+        ),
+    }
+}
+
+/// The full fuzz sweep, RNG ops included. Runs serially in one test so the
+/// process-global RNG stream cannot be interleaved by parallel tests.
+#[test]
+fn bytecode_matches_interpreter_over_generated_corpus() {
+    for seed in 0..160 {
+        check_seed(seed, true);
+    }
+}
+
+/// Long elementwise chains: the fusion-heavy shape (PR 1's optimizer output
+/// cashes out through exactly these segments).
+#[test]
+fn bytecode_matches_interpreter_on_elementwise_chains() {
+    for seed in 0..40 {
+        let mut rng = Rng::new(0xE1E_0000 + seed);
+        let b = XlaBuilder::new("chain");
+        let n = 16 + rng.below(64);
+        let x = b.parameter(0, ElementType::F32, &[n as i64], "x").unwrap();
+        let c = b.c0(rng.uniform(0.2, 1.5)).unwrap();
+        let mut cur = x.clone();
+        let depth = 4 + rng.below(24);
+        for _ in 0..depth {
+            cur = match rng.below(6) {
+                0 => cur.tanh().unwrap(),
+                1 => cur.logistic().unwrap(),
+                2 => cur.neg().unwrap(),
+                3 => cur.mul_(&c).unwrap(),
+                4 => cur.add_(&x).unwrap(),
+                _ => cur.abs().unwrap(),
+            };
+        }
+        let comp = b.build(&cur).unwrap();
+        let data = rng.normal_vec(n, 1.0);
+        let args = vec![ArgData::F { data, dims: vec![n] }];
+        let a = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
+        let cres = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+        assert_eq!(a, cres, "chain seed {seed} diverged");
+    }
+}
+
+/// Matmul sizes drawn from the bench_fig5 workloads: bitwise-identical
+/// accumulation (k-order and zero-skip preserved by the blocked kernel).
+#[test]
+fn bytecode_matches_interpreter_on_matmul_sizes() {
+    for (m, k, n) in [(4, 8, 4), (16, 16, 16), (32, 64, 8), (64, 32, 48), (1, 128, 1)] {
+        let mut rng = Rng::new((m * 1000 + k * 10 + n) as u64);
+        let b = XlaBuilder::new("mm");
+        let a = b.parameter(0, ElementType::F32, &[m, k], "a").unwrap();
+        let bb = b.parameter(1, ElementType::F32, &[k, n], "b").unwrap();
+        let mm = a.matmul(&bb).unwrap();
+        let comp = b.build(&mm).unwrap();
+        // Include exact zeros so the zero-skip path is exercised.
+        let mut av = rng.normal_vec((m * k) as usize, 1.0);
+        for i in (0..av.len()).step_by(7) {
+            av[i] = 0.0;
+        }
+        let bv = rng.normal_vec((k * n) as usize, 1.0);
+        let args = vec![
+            ArgData::F { data: av, dims: vec![m as usize, k as usize] },
+            ArgData::F { data: bv, dims: vec![k as usize, n as usize] },
+        ];
+        let x = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
+        let y = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+        assert_eq!(x, y, "matmul {m}x{k}x{n} diverged");
+    }
+}

@@ -1,0 +1,1954 @@
+//! The bytecode execution backend: `compile` lowers an [`XlaComputation`]
+//! into a linear register program with all shapes, dtypes and loop bounds
+//! resolved once at compile time, then `execute` runs it with no per-node
+//! graph walking, no per-node `Literal` allocation and no root clone.
+//!
+//! Pipeline (see `rust/vendor/xla/README.md` for the full contract):
+//!
+//! 1. **Shape/type inference** over every node (dead ones included — a type
+//!    error the interpreter would report at execute time makes the whole
+//!    program fall back to the interpreter, keeping behaviour identical).
+//! 2. **DCE** from the root, except RNG nodes (and their inputs), which are
+//!    kept so the deterministic stream consumes exactly the draws the
+//!    interpreter would.
+//! 3. **Fusion**: chains of elementwise unary/binary/compare/select/convert
+//!    nodes over one iteration space collapse into a single `Fused`
+//!    instruction — one pass over the data, no intermediate buffers.
+//! 4. **Lowering** to one instruction per remaining node. `Reshape` and
+//!    same-type `Convert` become compile-time register aliases.
+//! 5. **Liveness**: each instruction records which registers die after it;
+//!    their buffers return to a pool (kept in the executable, shared across
+//!    executions) that output allocations are served from.
+//!
+//! Bit-identity with the interpreter is load-bearing (the differential
+//! property tests assert it): every kernel below applies the *same scalar
+//! functions* (shared tables in [`crate::interp`]) in the *same element
+//! order* as the interpreter, including the matmul k-order and zero-skip,
+//! reduce accumulation order, softmax max/exp/normalize order, and RNG
+//! draw order.
+
+use crate::interp::{binary_f32_fn, binary_i32_fn, cmp_f32, cmp_i32, unary_f32_fn, unary_i32_fn};
+use crate::{
+    broadcast_shape, err, num_elems, unravel, BinaryK, CmpK, Data, Error, Literal, Op,
+    PrimitiveType, ReduceK, Result, UnaryK, XlaComputation,
+};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+type Reg = u32;
+
+/// Which of the two physical element buffers a value lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Backing {
+    F,
+    I,
+}
+
+fn backing_of(ty: PrimitiveType) -> Backing {
+    match ty {
+        PrimitiveType::F32 | PrimitiveType::F64 => Backing::F,
+        PrimitiveType::S32 | PrimitiveType::Pred => Backing::I,
+    }
+}
+
+/// An instruction operand: a register, an embedded constant, or an
+/// execution argument (parameter). Constants and parameters are read in
+/// place — never copied into registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Src {
+    Reg(Reg),
+    Const(u32),
+    Param(u32),
+}
+
+/// One op of a fused elementwise expression, evaluated post-order on a
+/// per-element stack.
+#[derive(Debug, Clone, Copy)]
+enum EOp {
+    /// Push `srcs[j][i]` (same iteration space as the output).
+    Load(u16),
+    /// Push `srcs[j][0]` (scalar broadcast).
+    Splat(u16),
+    Un(UnaryK),
+    Bin(BinaryK),
+    Cmp(CmpK),
+    /// Pops on_false, on_true, pred.
+    Sel,
+    Conv(PrimitiveType),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Cell {
+    F(f32),
+    I(i32),
+}
+
+#[derive(Debug, Clone)]
+enum Inst {
+    Fused {
+        dst: Reg,
+        n: usize,
+        srcs: Vec<Src>,
+        ops: Vec<EOp>,
+        stack: usize,
+        all_f32: bool,
+        out: Backing,
+    },
+    FillZero {
+        dst: Reg,
+        n: usize,
+        out: Backing,
+    },
+    Iota {
+        dst: Reg,
+        ty: PrimitiveType,
+        n: usize,
+    },
+    RngUniform {
+        dst: Reg,
+        lo: Src,
+        hi: Src,
+        n: usize,
+    },
+    RngNormal {
+        dst: Reg,
+        mu: Src,
+        sigma: Src,
+        n: usize,
+    },
+    /// Binary with real (non-scalar) broadcasting; the fused path covers
+    /// the same-shape and scalar cases.
+    BinaryBcast {
+        dst: Reg,
+        k: BinaryK,
+        a: Src,
+        b: Src,
+        out_dims: Vec<i64>,
+        a_dims: Vec<i64>,
+        b_dims: Vec<i64>,
+        backing: Backing,
+    },
+    CompareBcast {
+        dst: Reg,
+        k: CmpK,
+        a: Src,
+        b: Src,
+        out_dims: Vec<i64>,
+        a_dims: Vec<i64>,
+        b_dims: Vec<i64>,
+        backing: Backing,
+    },
+    /// Cache-blocked matmul over a transposed-RHS scratch buffer. Preserves
+    /// the interpreter's per-(i,j) k-ascending, zero-skipping accumulation.
+    MatMul {
+        dst: Reg,
+        a: Src,
+        b: Src,
+        m: usize,
+        k: usize,
+        n: usize,
+        batch: usize,
+        a_shared: bool,
+        b_shared: bool,
+    },
+    /// Gather with a per-output-dim source stride (transpose,
+    /// broadcast_in_dim): a non-allocating odometer walk, no div/mod.
+    Strided {
+        dst: Reg,
+        src: Src,
+        out_dims: Vec<usize>,
+        strides: Vec<usize>,
+        n: usize,
+    },
+    /// XLA Broadcast: tile the operand under new major dims.
+    BroadcastTile {
+        dst: Reg,
+        src: Src,
+        in_n: usize,
+        out_n: usize,
+    },
+    Concat {
+        dst: Reg,
+        srcs: Vec<Src>,
+        outer: usize,
+        chunks: Vec<usize>,
+        out_n: usize,
+        backing: Backing,
+    },
+    Slice {
+        dst: Reg,
+        src: Src,
+        outer: usize,
+        in_block: usize,
+        start_off: usize,
+        copy: usize,
+    },
+    Reduce {
+        dst: Reg,
+        src: Src,
+        kind: ReduceK,
+        in_dims: Vec<usize>,
+        out_strides: Vec<usize>,
+        out_n: usize,
+        in_n: usize,
+        count: usize,
+        backing: Backing,
+    },
+    Softmax {
+        dst: Reg,
+        src: Src,
+        outer: usize,
+        axis: usize,
+        inner: usize,
+    },
+    Take {
+        dst: Reg,
+        src: Src,
+        idx: Src,
+        outer: usize,
+        axis_len: usize,
+        inner: usize,
+    },
+}
+
+impl Inst {
+    fn dst(&self) -> Reg {
+        match self {
+            Inst::Fused { dst, .. }
+            | Inst::FillZero { dst, .. }
+            | Inst::Iota { dst, .. }
+            | Inst::RngUniform { dst, .. }
+            | Inst::RngNormal { dst, .. }
+            | Inst::BinaryBcast { dst, .. }
+            | Inst::CompareBcast { dst, .. }
+            | Inst::MatMul { dst, .. }
+            | Inst::Strided { dst, .. }
+            | Inst::BroadcastTile { dst, .. }
+            | Inst::Concat { dst, .. }
+            | Inst::Slice { dst, .. }
+            | Inst::Reduce { dst, .. }
+            | Inst::Softmax { dst, .. }
+            | Inst::Take { dst, .. } => *dst,
+        }
+    }
+
+    fn operands(&self, out: &mut Vec<Src>) {
+        out.clear();
+        match self {
+            Inst::Fused { srcs, .. } | Inst::Concat { srcs, .. } => out.extend_from_slice(srcs),
+            Inst::FillZero { .. } | Inst::Iota { .. } => {}
+            Inst::RngUniform { lo, hi, .. } => out.extend_from_slice(&[*lo, *hi]),
+            Inst::RngNormal { mu, sigma, .. } => out.extend_from_slice(&[*mu, *sigma]),
+            Inst::BinaryBcast { a, b, .. }
+            | Inst::CompareBcast { a, b, .. }
+            | Inst::MatMul { a, b, .. } => out.extend_from_slice(&[*a, *b]),
+            Inst::Strided { src, .. }
+            | Inst::BroadcastTile { src, .. }
+            | Inst::Slice { src, .. }
+            | Inst::Reduce { src, .. }
+            | Inst::Softmax { src, .. } => out.push(*src),
+            Inst::Take { src, idx, .. } => out.extend_from_slice(&[*src, *idx]),
+        }
+    }
+}
+
+/// An owned runtime buffer (one per register, recycled via the pool).
+#[derive(Debug)]
+enum Buf {
+    F(Vec<f32>),
+    I(Vec<i32>),
+}
+
+/// A read-only view of an operand's elements.
+#[derive(Debug, Clone, Copy)]
+enum View<'a> {
+    F(&'a [f32]),
+    I(&'a [i32]),
+}
+
+fn f32s<'a>(v: View<'a>) -> Result<&'a [f32]> {
+    match v {
+        View::F(s) => Ok(s),
+        View::I(_) => err("internal: expected f32 operand"),
+    }
+}
+
+fn i32s<'a>(v: View<'a>) -> Result<&'a [i32]> {
+    match v {
+        View::I(s) => Ok(s),
+        View::F(_) => err("internal: expected i32 operand"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buffer pool (liveness-driven reuse, persisted across executions)
+// ---------------------------------------------------------------------------
+
+const POOL_CAP: usize = 32;
+
+#[derive(Debug, Default)]
+struct Pool {
+    f: Vec<Vec<f32>>,
+    i: Vec<Vec<i32>>,
+    reused_bytes: u64,
+}
+
+impl Pool {
+    // Best-fit (smallest sufficient capacity): first-fit would let a small
+    // allocation consume the one large pooled buffer and starve the big
+    // consumers (e.g. a matmul output) out of reuse on every execution.
+    fn alloc_f32(&mut self, n: usize) -> Vec<f32> {
+        let best = self
+            .f
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= n)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i);
+        if let Some(pos) = best {
+            let mut v = self.f.swap_remove(pos);
+            v.clear();
+            self.reused_bytes += (n * std::mem::size_of::<f32>()) as u64;
+            return v;
+        }
+        Vec::with_capacity(n)
+    }
+
+    fn alloc_i32(&mut self, n: usize) -> Vec<i32> {
+        let best = self
+            .i
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= n)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i);
+        if let Some(pos) = best {
+            let mut v = self.i.swap_remove(pos);
+            v.clear();
+            self.reused_bytes += (n * std::mem::size_of::<i32>()) as u64;
+            return v;
+        }
+        Vec::with_capacity(n)
+    }
+
+    fn put(&mut self, b: Buf) {
+        match b {
+            Buf::F(v) => {
+                if v.capacity() > 0 && self.f.len() < POOL_CAP {
+                    self.f.push(v);
+                }
+            }
+            Buf::I(v) => {
+                if v.capacity() > 0 && self.i.len() < POOL_CAP {
+                    self.i.push(v);
+                }
+            }
+        }
+    }
+
+    fn merge(&mut self, other: Pool) {
+        for v in other.f {
+            if self.f.len() < POOL_CAP {
+                self.f.push(v);
+            }
+        }
+        for v in other.i {
+            if self.i.len() < POOL_CAP {
+                self.i.push(v);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Program
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct ParamSpec {
+    index: usize,
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+}
+
+#[derive(Debug, Clone)]
+struct OutSpec {
+    src: Src,
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+}
+
+/// A compiled register program plus its persistent buffer pool and
+/// execution counters.
+#[derive(Debug)]
+pub(crate) struct Program {
+    insts: Vec<Inst>,
+    /// Registers whose last use is instruction `i` (freed to the pool
+    /// right after it executes). `n_regs == insts.len()` — register `r` is
+    /// produced by instruction `r`.
+    frees: Vec<Vec<Reg>>,
+    consts: Vec<Literal>,
+    /// Every `Parameter` node of the source graph (dead ones included), in
+    /// node order — validated against the arguments on every execution,
+    /// exactly like the interpreter does.
+    params: Vec<ParamSpec>,
+    outputs: Vec<OutSpec>,
+    fused: u64,
+    pool: Mutex<Pool>,
+    executions: AtomicU64,
+    bytes_reused: AtomicU64,
+}
+
+impl Program {
+    pub(crate) fn instruction_count(&self) -> u64 {
+        self.insts.len() as u64
+    }
+
+    pub(crate) fn fused_instructions(&self) -> u64 {
+        self.fused
+    }
+
+    pub(crate) fn stats(&self) -> crate::ExecStats {
+        crate::ExecStats {
+            instructions: self.insts.len() as u64,
+            fused_instructions: self.fused,
+            executions: self.executions.load(Ordering::Relaxed),
+            bytes_reused: self.bytes_reused.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run the program, returning the output leaves (the untupled root).
+    pub(crate) fn execute(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        for p in &self.params {
+            let v = args
+                .get(p.index)
+                .ok_or_else(|| Error::new(format!("missing argument {}", p.index)))?;
+            match v {
+                Literal::Array { ty, dims, .. } => {
+                    if *ty != p.ty || dims != &p.dims {
+                        return err(format!(
+                            "parameter {} expects {:?}{:?}, got {ty:?}{dims:?}",
+                            p.index, p.ty, p.dims
+                        ));
+                    }
+                }
+                Literal::Tuple(_) => return err("tuple arguments are unsupported"),
+            }
+        }
+        let mut pool = std::mem::take(&mut *self.pool.lock().unwrap());
+        pool.reused_bytes = 0;
+        let mut regs: Vec<Option<Buf>> = Vec::with_capacity(self.insts.len());
+        regs.resize_with(self.insts.len(), || None);
+        let mut failed: Option<Error> = None;
+        for (i, inst) in self.insts.iter().enumerate() {
+            match exec_inst(inst, &regs, &self.consts, args, &mut pool) {
+                Ok(buf) => regs[inst.dst() as usize] = Some(buf),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+            for &r in &self.frees[i] {
+                if let Some(b) = regs[r as usize].take() {
+                    pool.put(b);
+                }
+            }
+        }
+        let out = match failed {
+            Some(e) => Err(e),
+            None => self.build_outputs(&mut regs, args),
+        };
+        let reused = pool.reused_bytes;
+        pool.reused_bytes = 0;
+        self.bytes_reused.fetch_add(reused, Ordering::Relaxed);
+        crate::BYTES_REUSED.fetch_add(reused, Ordering::Relaxed);
+        self.pool.lock().unwrap().merge(pool);
+        if out.is_ok() {
+            self.executions.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    fn build_outputs(
+        &self,
+        regs: &mut [Option<Buf>],
+        args: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        let mut made: HashMap<Reg, Data> = HashMap::new();
+        let mut outs = Vec::with_capacity(self.outputs.len());
+        for o in &self.outputs {
+            let data: Data = match o.src {
+                Src::Param(p) => match args[p as usize] {
+                    Literal::Array { data, .. } => data.clone(),
+                    Literal::Tuple(_) => return err("internal: tuple parameter output"),
+                },
+                Src::Const(c) => match &self.consts[c as usize] {
+                    Literal::Array { data, .. } => data.clone(),
+                    Literal::Tuple(_) => return err("internal: tuple constant output"),
+                },
+                Src::Reg(r) => match made.get(&r) {
+                    Some(d) => d.clone(),
+                    None => {
+                        let buf = regs[r as usize]
+                            .take()
+                            .ok_or_else(|| Error::new("internal: output register empty"))?;
+                        let d = match buf {
+                            Buf::F(v) => Data::F32(Arc::new(v)),
+                            Buf::I(v) => Data::I32(Arc::new(v)),
+                        };
+                        made.insert(r, d.clone());
+                        d
+                    }
+                },
+            };
+            outs.push(Literal::Array { ty: o.ty, dims: o.dims.clone(), data });
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compile: shape inference
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Meta {
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+    n: usize,
+    tuple: bool,
+}
+
+impl Meta {
+    fn arr(ty: PrimitiveType, dims: Vec<i64>) -> Meta {
+        let n = num_elems(&dims);
+        Meta { ty, dims, n, tuple: false }
+    }
+
+    fn backing(&self) -> Backing {
+        backing_of(self.ty)
+    }
+}
+
+fn row_major_strides(dims: &[i64]) -> Vec<usize> {
+    let mut s = vec![0usize; dims.len()];
+    let mut acc = 1usize;
+    for d in (0..dims.len()).rev() {
+        s[d] = acc;
+        acc *= dims[d] as usize;
+    }
+    s
+}
+
+/// Infer type/shape for every node, validating everything the interpreter
+/// would reject at execute time. Any failure aborts bytecode lowering (the
+/// caller falls back to the interpreter, preserving its behaviour exactly).
+fn infer_all(comp: &XlaComputation) -> Result<Vec<Meta>> {
+    let nodes = &comp.nodes;
+    let mut metas: Vec<Meta> = Vec::with_capacity(nodes.len());
+    for node in nodes {
+        let arr = |i: usize| -> Result<&Meta> {
+            let m = &metas[node.args[i]];
+            if m.tuple {
+                return err("tuple operand");
+            }
+            Ok(m)
+        };
+        let m = match &node.op {
+            Op::Parameter { ty, dims, .. } => Meta::arr(*ty, dims.clone()),
+            Op::Constant(lit) => match lit {
+                Literal::Array { ty, dims, .. } => Meta::arr(*ty, dims.clone()),
+                Literal::Tuple(_) => return err("tuple constant"),
+            },
+            Op::Iota { ty, n } => match ty {
+                PrimitiveType::F32 => Meta::arr(PrimitiveType::F32, vec![*n as i64]),
+                PrimitiveType::S32 | PrimitiveType::Pred => {
+                    Meta::arr(PrimitiveType::S32, vec![*n as i64])
+                }
+                PrimitiveType::F64 => return err("f64 iota unsupported"),
+            },
+            Op::RngUniform { dims } | Op::RngNormal { dims } => {
+                let lo = arr(0)?;
+                let hi = arr(1)?;
+                if lo.ty != PrimitiveType::F32 || hi.ty != PrimitiveType::F32 {
+                    return err("rng bounds must be f32");
+                }
+                if lo.n == 0 || hi.n == 0 {
+                    return err("rng bounds must be non-empty");
+                }
+                Meta::arr(PrimitiveType::F32, dims.clone())
+            }
+            Op::Unary(k) => {
+                let a = arr(0)?;
+                if *k != UnaryK::ZerosLike
+                    && a.backing() == Backing::I
+                    && unary_i32_fn(*k).is_none()
+                {
+                    return err("unary op requires f32 input");
+                }
+                Meta::arr(a.ty, a.dims.clone())
+            }
+            Op::Binary(_) => {
+                let a = arr(0)?;
+                let b = arr(1)?;
+                if a.backing() != b.backing() {
+                    return err("binary operands must share a backing type");
+                }
+                let dims = broadcast_shape(&a.dims, &b.dims)?;
+                Meta::arr(a.ty, dims)
+            }
+            Op::Compare(_) => {
+                let a = arr(0)?;
+                let b = arr(1)?;
+                if a.backing() != b.backing() {
+                    return err("comparison operands must share a backing type");
+                }
+                let dims = broadcast_shape(&a.dims, &b.dims)?;
+                Meta::arr(PrimitiveType::Pred, dims)
+            }
+            Op::Select => {
+                let p = arr(0)?;
+                let t = arr(1)?;
+                let f = arr(2)?;
+                if p.backing() != Backing::I {
+                    return err("select predicate must be i32-backed");
+                }
+                if t.backing() != f.backing() {
+                    return err("select branches must share a backing type");
+                }
+                if p.dims != t.dims || f.dims != t.dims {
+                    return err("select operands must have equal shapes");
+                }
+                Meta::arr(t.ty, t.dims.clone())
+            }
+            Op::MatMul => {
+                let a = arr(0)?;
+                let b = arr(1)?;
+                if a.ty != PrimitiveType::F32 || b.ty != PrimitiveType::F32 {
+                    return err("matmul requires f32 operands");
+                }
+                let (ad, bd) = (&a.dims, &b.dims);
+                if ad.len() < 2 || bd.len() < 2 {
+                    return err("matmul requires rank >= 2");
+                }
+                let (m, ka) = (ad[ad.len() - 2], ad[ad.len() - 1]);
+                let (kb, n) = (bd[bd.len() - 2], bd[bd.len() - 1]);
+                if ka != kb {
+                    return err("matmul inner dim mismatch");
+                }
+                let out_prefix: Vec<i64> = if ad.len() == bd.len()
+                    && ad[..ad.len() - 2] == bd[..bd.len() - 2]
+                {
+                    ad[..ad.len() - 2].to_vec()
+                } else if bd.len() == 2 {
+                    ad[..ad.len() - 2].to_vec()
+                } else if ad.len() == 2 {
+                    bd[..bd.len() - 2].to_vec()
+                } else {
+                    return err("unsupported matmul batching");
+                };
+                let mut dims = out_prefix;
+                dims.push(m);
+                dims.push(n);
+                Meta::arr(PrimitiveType::F32, dims)
+            }
+            Op::Transpose(perm) => {
+                let a = arr(0)?;
+                if perm.len() != a.dims.len() {
+                    return err("transpose perm rank mismatch");
+                }
+                let mut seen = vec![false; perm.len()];
+                for &p in perm {
+                    if p < 0 || p as usize >= perm.len() || seen[p as usize] {
+                        return err("transpose perm is not a permutation");
+                    }
+                    seen[p as usize] = true;
+                }
+                let dims: Vec<i64> = perm.iter().map(|&p| a.dims[p as usize]).collect();
+                Meta::arr(a.ty, dims)
+            }
+            Op::Reshape(dims) => {
+                let a = arr(0)?;
+                if num_elems(dims) != a.n {
+                    return err("reshape element count mismatch");
+                }
+                Meta::arr(a.ty, dims.clone())
+            }
+            Op::Broadcast(sizes) => {
+                let a = arr(0)?;
+                let mut dims = sizes.clone();
+                dims.extend_from_slice(&a.dims);
+                Meta::arr(a.ty, dims)
+            }
+            Op::BroadcastInDim { dims, broadcast_dims } => {
+                let a = arr(0)?;
+                if broadcast_dims.len() != a.dims.len() {
+                    return err("broadcast_in_dim rank mismatch");
+                }
+                for (d, &od) in broadcast_dims.iter().enumerate() {
+                    if od < 0 || od as usize >= dims.len() {
+                        return err("broadcast_in_dim target dim out of range");
+                    }
+                    if a.dims[d] != 1 && a.dims[d] != dims[od as usize] {
+                        return err("broadcast_in_dim size mismatch");
+                    }
+                }
+                Meta::arr(a.ty, dims.clone())
+            }
+            Op::ConcatInDim(dim) => {
+                let first = arr(0)?.clone();
+                let d = *dim as usize;
+                if d >= first.dims.len() {
+                    return err("concat dim out of range");
+                }
+                let mut out_dims = first.dims.clone();
+                out_dims[d] = 0;
+                for i in 0..node.args.len() {
+                    let p = arr(i)?;
+                    if p.dims.len() != first.dims.len() {
+                        return err("concat rank mismatch");
+                    }
+                    if p.backing() != first.backing() {
+                        return err("concat backing mismatch");
+                    }
+                    for (j, (&pd, &fd)) in p.dims.iter().zip(first.dims.iter()).enumerate() {
+                        if j != d && pd != fd {
+                            return err("concat non-axis dim mismatch");
+                        }
+                    }
+                    out_dims[d] += p.dims[d];
+                }
+                Meta::arr(first.ty, out_dims)
+            }
+            Op::SliceInDim { start, stop, dim } => {
+                let a = arr(0)?;
+                let d = *dim as usize;
+                if d >= a.dims.len() || *start < 0 || *stop > a.dims[d] || *start > *stop {
+                    return err("slice out of bounds");
+                }
+                let mut dims = a.dims.clone();
+                dims[d] = stop - start;
+                Meta::arr(a.ty, dims)
+            }
+            Op::Reduce { kind, dims: rdims, keep_dims } => {
+                let a = arr(0)?;
+                if a.backing() == Backing::I && *kind == ReduceK::Mean {
+                    return err("reduce_mean requires f32");
+                }
+                let mut reduce_set = vec![false; a.dims.len()];
+                for &d in rdims {
+                    if d < 0 || d as usize >= a.dims.len() {
+                        return err("reduce dim out of range");
+                    }
+                    reduce_set[d as usize] = true;
+                }
+                let mut out_dims: Vec<i64> = Vec::new();
+                for (i, &d) in a.dims.iter().enumerate() {
+                    if reduce_set[i] {
+                        if *keep_dims {
+                            out_dims.push(1);
+                        }
+                    } else {
+                        out_dims.push(d);
+                    }
+                }
+                Meta::arr(a.ty, out_dims)
+            }
+            Op::Softmax(dim) => {
+                let a = arr(0)?;
+                if a.ty != PrimitiveType::F32 {
+                    return err("softmax requires f32");
+                }
+                if *dim < 0 || *dim as usize >= a.dims.len() {
+                    return err("softmax dim out of range");
+                }
+                Meta::arr(a.ty, a.dims.clone())
+            }
+            Op::Take(dim) => {
+                let a = arr(0)?;
+                let idx = arr(1)?;
+                if idx.backing() != Backing::I {
+                    return err("take indices must be i32-backed");
+                }
+                let d = *dim as usize;
+                if d >= a.dims.len() {
+                    return err("take dim out of range");
+                }
+                let mut dims: Vec<i64> = a.dims[..d].to_vec();
+                dims.extend_from_slice(&idx.dims);
+                dims.extend_from_slice(&a.dims[d + 1..]);
+                Meta::arr(a.ty, dims)
+            }
+            Op::Convert(ty) => {
+                let a = arr(0)?;
+                if a.ty != *ty {
+                    let ok = matches!(
+                        (a.backing(), *ty),
+                        (Backing::F, PrimitiveType::S32)
+                            | (Backing::I, PrimitiveType::S32)
+                            | (Backing::I, PrimitiveType::F32)
+                            | (Backing::F, PrimitiveType::Pred)
+                            | (Backing::I, PrimitiveType::Pred)
+                    );
+                    if !ok {
+                        return err("unsupported convert");
+                    }
+                }
+                Meta::arr(*ty, a.dims.clone())
+            }
+            Op::Tuple => Meta { ty: PrimitiveType::F32, dims: Vec::new(), n: 0, tuple: true },
+        };
+        metas.push(m);
+    }
+    Ok(metas)
+}
+
+// ---------------------------------------------------------------------------
+// Compile: lowering
+// ---------------------------------------------------------------------------
+
+fn is_elementwise(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Unary(k) if *k != UnaryK::ZerosLike
+    ) || matches!(op, Op::Binary(_) | Op::Compare(_) | Op::Select | Op::Convert(_))
+}
+
+/// Lower a computation to a bytecode [`Program`]. Errors mean "outside the
+/// bytecode subset"; the caller retains interpreter semantics by falling
+/// back.
+pub(crate) fn compile(comp: &XlaComputation) -> Result<Program> {
+    let nodes = &comp.nodes;
+    let metas = infer_all(comp)?;
+
+    // Every parameter node (dead ones included): execute-time validation.
+    let mut params: Vec<ParamSpec> = Vec::new();
+    for node in nodes {
+        if let Op::Parameter { index, ty, dims } = &node.op {
+            params.push(ParamSpec { index: *index, ty: *ty, dims: dims.clone() });
+        }
+    }
+
+    // Liveness: reachable from the root, plus RNG nodes (dead RNG still
+    // consumes stream draws in the interpreter) and their inputs.
+    let mut live = vec![false; nodes.len()];
+    let mut stack: Vec<usize> = vec![comp.root];
+    for (id, node) in nodes.iter().enumerate() {
+        if matches!(node.op, Op::RngUniform { .. } | Op::RngNormal { .. }) {
+            stack.push(id);
+        }
+    }
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend_from_slice(&nodes[id].args);
+    }
+
+    // Output leaves: the root's tuple elements, or the root itself.
+    let out_ids: Vec<usize> = if matches!(nodes[comp.root].op, Op::Tuple) {
+        for &a in &nodes[comp.root].args {
+            if metas[a].tuple {
+                return err("nested tuple root");
+            }
+        }
+        nodes[comp.root].args.clone()
+    } else {
+        if metas[comp.root].tuple {
+            return err("unsupported root");
+        }
+        vec![comp.root]
+    };
+
+    // Use counts and unique consumers over live nodes (`usize::MAX` marks
+    // root/output consumption, which blocks inlining).
+    let mut cnt = vec![0u32; nodes.len()];
+    let mut consumer = vec![usize::MAX; nodes.len()];
+    for (id, node) in nodes.iter().enumerate() {
+        if !live[id] || matches!(node.op, Op::Tuple) {
+            continue;
+        }
+        for &a in &node.args {
+            cnt[a] += 1;
+            consumer[a] = id;
+        }
+    }
+    for &o in &out_ids {
+        cnt[o] += 1;
+        consumer[o] = usize::MAX;
+    }
+
+    // Fusability: elementwise kinds whose operands share the node's
+    // iteration space (equal dims) or are scalar broadcasts.
+    let mut fusable = vec![false; nodes.len()];
+    for (id, node) in nodes.iter().enumerate() {
+        if !live[id] || !is_elementwise(&node.op) {
+            continue;
+        }
+        if let Op::Convert(ty) = &node.op {
+            // Same-type convert lowers to a register alias, not a kernel.
+            if metas[node.args[0]].ty == *ty {
+                continue;
+            }
+        }
+        let strict = matches!(node.op, Op::Select);
+        fusable[id] = node.args.iter().all(|&a| {
+            metas[a].dims == metas[id].dims || (!strict && metas[a].n == 1)
+        });
+    }
+
+    // Inline single-use fusable producers into their fusable consumer when
+    // both share one iteration space.
+    let mut inlined = vec![false; nodes.len()];
+    for id in 0..nodes.len() {
+        let c = consumer[id];
+        inlined[id] = live[id]
+            && fusable[id]
+            && cnt[id] == 1
+            && c != usize::MAX
+            && fusable[c]
+            && metas[id].dims == metas[c].dims;
+    }
+
+    // Emission.
+    let mut insts: Vec<Inst> = Vec::new();
+    let mut consts: Vec<Literal> = Vec::new();
+    let mut node_src: HashMap<usize, Src> = HashMap::new();
+    let mut fused_count = 0u64;
+    for (id, node) in nodes.iter().enumerate() {
+        if !live[id] || inlined[id] {
+            continue;
+        }
+        let meta = &metas[id];
+        let dst = insts.len() as Reg;
+        let inst: Inst = match &node.op {
+            Op::Tuple => continue,
+            Op::Parameter { index, .. } => {
+                node_src.insert(id, Src::Param(*index as u32));
+                continue;
+            }
+            Op::Constant(lit) => {
+                consts.push(lit.clone());
+                node_src.insert(id, Src::Const((consts.len() - 1) as u32));
+                continue;
+            }
+            Op::Reshape(_) => {
+                let s = node_src[&node.args[0]];
+                node_src.insert(id, s);
+                continue;
+            }
+            Op::Convert(ty) if metas[node.args[0]].ty == *ty => {
+                let s = node_src[&node.args[0]];
+                node_src.insert(id, s);
+                continue;
+            }
+            _ if fusable[id] => {
+                let (srcs, ops, stack_cap, all_f32, real_fusion) =
+                    build_fused(id, nodes, &metas, &node_src, &inlined, &consumer)?;
+                if real_fusion {
+                    fused_count += 1;
+                }
+                Inst::Fused {
+                    dst,
+                    n: meta.n,
+                    srcs,
+                    ops,
+                    stack: stack_cap,
+                    all_f32,
+                    out: meta.backing(),
+                }
+            }
+            Op::Unary(UnaryK::ZerosLike) => {
+                Inst::FillZero { dst, n: meta.n, out: meta.backing() }
+            }
+            Op::Iota { .. } => Inst::Iota { dst, ty: meta.ty, n: meta.n },
+            Op::RngUniform { .. } => Inst::RngUniform {
+                dst,
+                lo: node_src[&node.args[0]],
+                hi: node_src[&node.args[1]],
+                n: meta.n,
+            },
+            Op::RngNormal { .. } => Inst::RngNormal {
+                dst,
+                mu: node_src[&node.args[0]],
+                sigma: node_src[&node.args[1]],
+                n: meta.n,
+            },
+            Op::Binary(k) => Inst::BinaryBcast {
+                dst,
+                k: *k,
+                a: node_src[&node.args[0]],
+                b: node_src[&node.args[1]],
+                out_dims: meta.dims.clone(),
+                a_dims: metas[node.args[0]].dims.clone(),
+                b_dims: metas[node.args[1]].dims.clone(),
+                backing: meta.backing(),
+            },
+            Op::Compare(k) => Inst::CompareBcast {
+                dst,
+                k: *k,
+                a: node_src[&node.args[0]],
+                b: node_src[&node.args[1]],
+                out_dims: meta.dims.clone(),
+                a_dims: metas[node.args[0]].dims.clone(),
+                b_dims: metas[node.args[1]].dims.clone(),
+                backing: metas[node.args[0]].backing(),
+            },
+            Op::MatMul => {
+                let ad = &metas[node.args[0]].dims;
+                let bd = &metas[node.args[1]].dims;
+                let (m, ka) = (ad[ad.len() - 2] as usize, ad[ad.len() - 1] as usize);
+                let n = bd[bd.len() - 1] as usize;
+                let a_batch = num_elems(&ad[..ad.len() - 2]);
+                let b_batch = num_elems(&bd[..bd.len() - 2]);
+                let batch = if ad.len() == bd.len() && ad[..ad.len() - 2] == bd[..bd.len() - 2]
+                {
+                    a_batch
+                } else if bd.len() == 2 {
+                    a_batch
+                } else {
+                    b_batch
+                };
+                Inst::MatMul {
+                    dst,
+                    a: node_src[&node.args[0]],
+                    b: node_src[&node.args[1]],
+                    m,
+                    k: ka,
+                    n,
+                    batch,
+                    a_shared: a_batch == 1,
+                    b_shared: b_batch == 1,
+                }
+            }
+            Op::Transpose(perm) => {
+                let a = &metas[node.args[0]];
+                let istr = row_major_strides(&a.dims);
+                let strides: Vec<usize> = perm.iter().map(|&p| istr[p as usize]).collect();
+                Inst::Strided {
+                    dst,
+                    src: node_src[&node.args[0]],
+                    out_dims: meta.dims.iter().map(|&d| d as usize).collect(),
+                    strides,
+                    n: meta.n,
+                }
+            }
+            Op::BroadcastInDim { broadcast_dims, .. } => {
+                let a = &metas[node.args[0]];
+                let istr = row_major_strides(&a.dims);
+                let mut strides = vec![0usize; meta.dims.len()];
+                for (d, &od) in broadcast_dims.iter().enumerate() {
+                    if a.dims[d] != 1 {
+                        strides[od as usize] += istr[d];
+                    }
+                }
+                Inst::Strided {
+                    dst,
+                    src: node_src[&node.args[0]],
+                    out_dims: meta.dims.iter().map(|&d| d as usize).collect(),
+                    strides,
+                    n: meta.n,
+                }
+            }
+            Op::Broadcast(_) => Inst::BroadcastTile {
+                dst,
+                src: node_src[&node.args[0]],
+                in_n: metas[node.args[0]].n,
+                out_n: meta.n,
+            },
+            Op::ConcatInDim(dim) => {
+                let d = *dim as usize;
+                let first = &metas[node.args[0]];
+                let outer: usize = first.dims[..d].iter().map(|&x| x as usize).product();
+                let inner: usize =
+                    first.dims[d + 1..].iter().map(|&x| x as usize).product();
+                let chunks: Vec<usize> = node
+                    .args
+                    .iter()
+                    .map(|&a| metas[a].dims[d] as usize * inner)
+                    .collect();
+                Inst::Concat {
+                    dst,
+                    srcs: node.args.iter().map(|a| node_src[a]).collect(),
+                    outer,
+                    chunks,
+                    out_n: meta.n,
+                    backing: meta.backing(),
+                }
+            }
+            Op::SliceInDim { start, stop, dim } => {
+                let a = &metas[node.args[0]];
+                let d = *dim as usize;
+                let inner: usize = a.dims[d + 1..].iter().map(|&x| x as usize).product();
+                let outer: usize = a.dims[..d].iter().map(|&x| x as usize).product();
+                Inst::Slice {
+                    dst,
+                    src: node_src[&node.args[0]],
+                    outer,
+                    in_block: a.dims[d] as usize * inner,
+                    start_off: *start as usize * inner,
+                    copy: (*stop - *start) as usize * inner,
+                }
+            }
+            Op::Reduce { kind, dims: rdims, .. } => {
+                let a = &metas[node.args[0]];
+                let mut reduce_set = vec![false; a.dims.len()];
+                for &d in rdims {
+                    reduce_set[d as usize] = true;
+                }
+                let kept: Vec<usize> =
+                    (0..a.dims.len()).filter(|&i| !reduce_set[i]).collect();
+                let kept_dims: Vec<i64> = kept.iter().map(|&i| a.dims[i]).collect();
+                let kstr = row_major_strides(&kept_dims);
+                let mut out_strides = vec![0usize; a.dims.len()];
+                for (pos, &d) in kept.iter().enumerate() {
+                    out_strides[d] = kstr[pos];
+                }
+                let out_n = num_elems(&kept_dims).max(1);
+                Inst::Reduce {
+                    dst,
+                    src: node_src[&node.args[0]],
+                    kind: *kind,
+                    in_dims: a.dims.iter().map(|&x| x as usize).collect(),
+                    out_strides,
+                    out_n,
+                    in_n: a.n,
+                    count: a.n / out_n,
+                    backing: a.backing(),
+                }
+            }
+            Op::Softmax(dim) => {
+                let a = &metas[node.args[0]];
+                let d = *dim as usize;
+                let inner: usize = a.dims[d + 1..].iter().map(|&x| x as usize).product();
+                let outer: usize = a.dims[..d].iter().map(|&x| x as usize).product();
+                Inst::Softmax {
+                    dst,
+                    src: node_src[&node.args[0]],
+                    outer,
+                    axis: a.dims[d] as usize,
+                    inner,
+                }
+            }
+            Op::Take(dim) => {
+                let a = &metas[node.args[0]];
+                let d = *dim as usize;
+                let inner: usize = a.dims[d + 1..].iter().map(|&x| x as usize).product();
+                let outer: usize = a.dims[..d].iter().map(|&x| x as usize).product();
+                Inst::Take {
+                    dst,
+                    src: node_src[&node.args[0]],
+                    idx: node_src[&node.args[1]],
+                    outer,
+                    axis_len: a.dims[d] as usize,
+                    inner,
+                }
+            }
+            Op::Unary(_) | Op::Select | Op::Convert(_) => {
+                // Elementwise kinds reach here only when not fusable; unary,
+                // select and convert always are (given valid inputs).
+                return err("internal: elementwise node not fusable");
+            }
+        };
+        insts.push(inst);
+        node_src.insert(id, Src::Reg(dst));
+    }
+
+    // Outputs.
+    let outputs: Vec<OutSpec> = out_ids
+        .iter()
+        .map(|id| OutSpec {
+            src: node_src[id],
+            ty: metas[*id].ty,
+            dims: metas[*id].dims.clone(),
+        })
+        .collect();
+
+    // Liveness: last use per register; outputs are pinned.
+    let mut last_use: Vec<Option<usize>> = vec![None; insts.len()];
+    let mut ops_scratch: Vec<Src> = Vec::new();
+    for (i, inst) in insts.iter().enumerate() {
+        inst.operands(&mut ops_scratch);
+        for s in &ops_scratch {
+            if let Src::Reg(r) = s {
+                last_use[*r as usize] = Some(i);
+            }
+        }
+    }
+    for o in &outputs {
+        if let Src::Reg(r) = o.src {
+            last_use[r as usize] = Some(usize::MAX);
+        }
+    }
+    let mut frees: Vec<Vec<Reg>> = vec![Vec::new(); insts.len()];
+    for (r, lu) in last_use.iter().enumerate() {
+        match lu {
+            Some(usize::MAX) => {}
+            // Register `r` is produced by instruction `r`; an unread value
+            // (e.g. an RNG node kept only for its stream draws) is freed
+            // right after it is produced.
+            Some(i) => frees[*i].push(r as Reg),
+            None => frees[r].push(r as Reg),
+        }
+    }
+
+    Ok(Program {
+        insts,
+        frees,
+        consts,
+        params,
+        outputs,
+        fused: fused_count,
+        pool: Mutex::new(Pool::default()),
+        executions: AtomicU64::new(0),
+        bytes_reused: AtomicU64::new(0),
+    })
+}
+
+/// Build the post-order fused expression for the cluster rooted at `root`.
+/// Returns (leaf sources, ops, max stack depth, pure-f32 fast path, did it
+/// actually merge >= 2 elementwise nodes).
+fn build_fused(
+    root: usize,
+    nodes: &[crate::Node],
+    metas: &[Meta],
+    node_src: &HashMap<usize, Src>,
+    inlined: &[bool],
+    consumer: &[usize],
+) -> Result<(Vec<Src>, Vec<EOp>, usize, bool, bool)> {
+    let cluster_dims = &metas[root].dims;
+    let mut srcs: Vec<Src> = Vec::new();
+    let mut leaf_backing: Vec<Backing> = Vec::new();
+    let mut ops: Vec<EOp> = Vec::new();
+    let mut node_ops = 0usize;
+    emit_expr(
+        root,
+        nodes,
+        metas,
+        node_src,
+        inlined,
+        consumer,
+        cluster_dims,
+        &mut srcs,
+        &mut leaf_backing,
+        &mut ops,
+        &mut node_ops,
+    )?;
+    // Type-simulate the stack: computes max depth, the all-f32 fast path,
+    // and double-checks the typing the fusability analysis promised.
+    let mut st: Vec<Backing> = Vec::new();
+    let mut max_depth = 0usize;
+    let mut all_f32 = true;
+    for op in &ops {
+        match op {
+            EOp::Load(j) | EOp::Splat(j) => {
+                let b = leaf_backing[*j as usize];
+                if b == Backing::I {
+                    all_f32 = false;
+                }
+                st.push(b);
+            }
+            EOp::Un(k) => {
+                let b = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                if b == Backing::I && unary_i32_fn(*k).is_none() {
+                    return err("fused unary type error");
+                }
+                st.push(b);
+            }
+            EOp::Bin(_) => {
+                let b2 = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                let b1 = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                if b1 != b2 {
+                    return err("fused binary type error");
+                }
+                st.push(b1);
+            }
+            EOp::Cmp(_) => {
+                let b2 = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                let b1 = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                if b1 != b2 {
+                    return err("fused compare type error");
+                }
+                st.push(Backing::I);
+                all_f32 = false;
+            }
+            EOp::Sel => {
+                let f = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                let t = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                let p = st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                if p != Backing::I || t != f {
+                    return err("fused select type error");
+                }
+                st.push(t);
+                all_f32 = false;
+            }
+            EOp::Conv(ty) => {
+                st.pop().ok_or_else(|| Error::new("fused stack underflow"))?;
+                st.push(backing_of(*ty));
+                all_f32 = false;
+            }
+        }
+        max_depth = max_depth.max(st.len());
+    }
+    if st.len() != 1 {
+        return err("fused stack imbalance");
+    }
+    if st[0] != metas[root].backing() {
+        return err("fused output type error");
+    }
+    Ok((srcs, ops, max_depth, all_f32, node_ops >= 2))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_expr(
+    id: usize,
+    nodes: &[crate::Node],
+    metas: &[Meta],
+    node_src: &HashMap<usize, Src>,
+    inlined: &[bool],
+    consumer: &[usize],
+    cluster_dims: &[i64],
+    srcs: &mut Vec<Src>,
+    leaf_backing: &mut Vec<Backing>,
+    ops: &mut Vec<EOp>,
+    node_ops: &mut usize,
+) -> Result<()> {
+    for &a in &nodes[id].args {
+        if inlined[a] && consumer[a] == id {
+            emit_expr(
+                a,
+                nodes,
+                metas,
+                node_src,
+                inlined,
+                consumer,
+                cluster_dims,
+                srcs,
+                leaf_backing,
+                ops,
+                node_ops,
+            )?;
+        } else {
+            let j = srcs.len() as u16;
+            srcs.push(node_src[&a]);
+            leaf_backing.push(metas[a].backing());
+            if metas[a].dims == cluster_dims {
+                ops.push(EOp::Load(j));
+            } else {
+                ops.push(EOp::Splat(j));
+            }
+        }
+    }
+    *node_ops += 1;
+    ops.push(match &nodes[id].op {
+        Op::Unary(k) => EOp::Un(*k),
+        Op::Binary(k) => EOp::Bin(*k),
+        Op::Compare(k) => EOp::Cmp(*k),
+        Op::Select => EOp::Sel,
+        Op::Convert(ty) => EOp::Conv(*ty),
+        _ => return err("internal: non-elementwise node in fused cluster"),
+    });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Execute: instruction kernels
+// ---------------------------------------------------------------------------
+
+fn lit_view(l: &Literal) -> Result<View<'_>> {
+    match l {
+        Literal::Array { data: Data::F32(v), .. } => Ok(View::F(v)),
+        Literal::Array { data: Data::I32(v), .. } => Ok(View::I(v)),
+        Literal::Tuple(_) => err("internal: tuple operand at runtime"),
+    }
+}
+
+fn view<'a>(
+    s: Src,
+    regs: &'a [Option<Buf>],
+    consts: &'a [Literal],
+    args: &'a [&Literal],
+) -> Result<View<'a>> {
+    match s {
+        Src::Reg(r) => match regs[r as usize].as_ref() {
+            Some(Buf::F(v)) => Ok(View::F(v)),
+            Some(Buf::I(v)) => Ok(View::I(v)),
+            None => err("internal: register read after free"),
+        },
+        Src::Const(c) => lit_view(&consts[c as usize]),
+        Src::Param(p) => lit_view(args[p as usize]),
+    }
+}
+
+/// Row-major gather copy driven by per-out-dim source strides (an odometer:
+/// no div/mod, no per-element index vectors).
+fn strided_copy<T: Copy>(src: &[T], out: &mut Vec<T>, dims: &[usize], strides: &[usize]) {
+    let rank = dims.len();
+    let n: usize = dims.iter().product();
+    if rank == 0 {
+        if n == 1 {
+            out.push(src[0]);
+        }
+        return;
+    }
+    let mut idx = vec![0usize; rank];
+    let mut off = 0usize;
+    for _ in 0..n {
+        out.push(src[off]);
+        let mut d = rank;
+        while d > 0 {
+            d -= 1;
+            idx[d] += 1;
+            off += strides[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            off -= strides[d] * dims[d];
+            idx[d] = 0;
+        }
+    }
+}
+
+fn exec_inst(
+    inst: &Inst,
+    regs: &[Option<Buf>],
+    consts: &[Literal],
+    args: &[&Literal],
+    pool: &mut Pool,
+) -> Result<Buf> {
+    match inst {
+        Inst::Fused { n, srcs, ops, stack, all_f32, out, .. } => {
+            exec_fused(*n, srcs, ops, *stack, *all_f32, *out, regs, consts, args, pool)
+        }
+        Inst::FillZero { n, out, .. } => Ok(match out {
+            Backing::F => {
+                let mut v = pool.alloc_f32(*n);
+                v.resize(*n, 0.0);
+                Buf::F(v)
+            }
+            Backing::I => {
+                let mut v = pool.alloc_i32(*n);
+                v.resize(*n, 0);
+                Buf::I(v)
+            }
+        }),
+        Inst::Iota { ty, n, .. } => Ok(match ty {
+            PrimitiveType::F32 => {
+                let mut v = pool.alloc_f32(*n);
+                for i in 0..*n {
+                    v.push(i as f32);
+                }
+                Buf::F(v)
+            }
+            _ => {
+                let mut v = pool.alloc_i32(*n);
+                for i in 0..*n {
+                    v.push(i as i32);
+                }
+                Buf::I(v)
+            }
+        }),
+        Inst::RngUniform { lo, hi, n, .. } => {
+            let lov = f32s(view(*lo, regs, consts, args)?)?[0];
+            let hiv = f32s(view(*hi, regs, consts, args)?)?[0];
+            let mut out = pool.alloc_f32(*n);
+            for _ in 0..*n {
+                out.push(lov + crate::next_uniform() * (hiv - lov));
+            }
+            Ok(Buf::F(out))
+        }
+        Inst::RngNormal { mu, sigma, n, .. } => {
+            let muv = f32s(view(*mu, regs, consts, args)?)?[0];
+            let sv = f32s(view(*sigma, regs, consts, args)?)?[0];
+            let mut out = pool.alloc_f32(*n);
+            for _ in 0..*n {
+                out.push(muv + sv * crate::next_normal());
+            }
+            Ok(Buf::F(out))
+        }
+        Inst::BinaryBcast { k, a, b, out_dims, a_dims, b_dims, backing, .. } => {
+            let av = view(*a, regs, consts, args)?;
+            let bv = view(*b, regs, consts, args)?;
+            let n = num_elems(out_dims);
+            match backing {
+                Backing::F => {
+                    let (x, y) = (f32s(av)?, f32s(bv)?);
+                    let f = binary_f32_fn(*k);
+                    let mut out = pool.alloc_f32(n);
+                    for i in 0..n {
+                        let oi = unravel(i, out_dims);
+                        out.push(f(
+                            x[crate::bcast_index(&oi, a_dims)],
+                            y[crate::bcast_index(&oi, b_dims)],
+                        ));
+                    }
+                    Ok(Buf::F(out))
+                }
+                Backing::I => {
+                    let (x, y) = (i32s(av)?, i32s(bv)?);
+                    let f = binary_i32_fn(*k);
+                    let mut out = pool.alloc_i32(n);
+                    for i in 0..n {
+                        let oi = unravel(i, out_dims);
+                        out.push(f(
+                            x[crate::bcast_index(&oi, a_dims)],
+                            y[crate::bcast_index(&oi, b_dims)],
+                        ));
+                    }
+                    Ok(Buf::I(out))
+                }
+            }
+        }
+        Inst::CompareBcast { k, a, b, out_dims, a_dims, b_dims, backing, .. } => {
+            let av = view(*a, regs, consts, args)?;
+            let bv = view(*b, regs, consts, args)?;
+            let n = num_elems(out_dims);
+            let mut out = pool.alloc_i32(n);
+            match backing {
+                Backing::F => {
+                    let (x, y) = (f32s(av)?, f32s(bv)?);
+                    for i in 0..n {
+                        let oi = unravel(i, out_dims);
+                        out.push(cmp_f32(
+                            *k,
+                            x[crate::bcast_index(&oi, a_dims)],
+                            y[crate::bcast_index(&oi, b_dims)],
+                        ) as i32);
+                    }
+                }
+                Backing::I => {
+                    let (x, y) = (i32s(av)?, i32s(bv)?);
+                    for i in 0..n {
+                        let oi = unravel(i, out_dims);
+                        out.push(cmp_i32(
+                            *k,
+                            x[crate::bcast_index(&oi, a_dims)],
+                            y[crate::bcast_index(&oi, b_dims)],
+                        ) as i32);
+                    }
+                }
+            }
+            Ok(Buf::I(out))
+        }
+        Inst::MatMul { a, b, m, k, n, batch, a_shared, b_shared, .. } => {
+            let av = f32s(view(*a, regs, consts, args)?)?;
+            let bv = f32s(view(*b, regs, consts, args)?)?;
+            let (m, k, n, batch) = (*m, *k, *n, *batch);
+            let mut out = pool.alloc_f32(batch * m * n);
+            let mut bt = pool.alloc_f32(k * n);
+            for bi in 0..batch {
+                let a_off = if *a_shared { 0 } else { bi * m * k };
+                let b_off = if *b_shared { 0 } else { bi * k * n };
+                if bi == 0 || !*b_shared {
+                    bt.clear();
+                    for j in 0..n {
+                        for kk in 0..k {
+                            bt.push(bv[b_off + kk * n + j]);
+                        }
+                    }
+                }
+                for i in 0..m {
+                    let arow = &av[a_off + i * k..a_off + i * k + k];
+                    for j in 0..n {
+                        let brow = &bt[j * k..j * k + k];
+                        let mut acc = 0f32;
+                        // Same accumulation order and zero-skip as the
+                        // interpreter's saxpy loop: bit-identical sums.
+                        for kk in 0..k {
+                            let x = arow[kk];
+                            if x != 0.0 {
+                                acc += x * brow[kk];
+                            }
+                        }
+                        out.push(acc);
+                    }
+                }
+            }
+            pool.put(Buf::F(bt));
+            Ok(Buf::F(out))
+        }
+        Inst::Strided { src, out_dims, strides, n, .. } => {
+            match view(*src, regs, consts, args)? {
+                View::F(v) => {
+                    let mut out = pool.alloc_f32(*n);
+                    strided_copy(v, &mut out, out_dims, strides);
+                    Ok(Buf::F(out))
+                }
+                View::I(v) => {
+                    let mut out = pool.alloc_i32(*n);
+                    strided_copy(v, &mut out, out_dims, strides);
+                    Ok(Buf::I(out))
+                }
+            }
+        }
+        Inst::BroadcastTile { src, in_n, out_n, .. } => {
+            let reps = if *in_n == 0 { 0 } else { *out_n / *in_n };
+            match view(*src, regs, consts, args)? {
+                View::F(v) => {
+                    let mut out = pool.alloc_f32(*out_n);
+                    for _ in 0..reps {
+                        out.extend_from_slice(v);
+                    }
+                    Ok(Buf::F(out))
+                }
+                View::I(v) => {
+                    let mut out = pool.alloc_i32(*out_n);
+                    for _ in 0..reps {
+                        out.extend_from_slice(v);
+                    }
+                    Ok(Buf::I(out))
+                }
+            }
+        }
+        Inst::Concat { srcs, outer, chunks, out_n, backing, .. } => match backing {
+            Backing::F => {
+                let mut vs: Vec<&[f32]> = Vec::with_capacity(srcs.len());
+                for s in srcs {
+                    vs.push(f32s(view(*s, regs, consts, args)?)?);
+                }
+                let mut out = pool.alloc_f32(*out_n);
+                for o in 0..*outer {
+                    for (pi, v) in vs.iter().enumerate() {
+                        let c = chunks[pi];
+                        out.extend_from_slice(&v[o * c..o * c + c]);
+                    }
+                }
+                Ok(Buf::F(out))
+            }
+            Backing::I => {
+                let mut vs: Vec<&[i32]> = Vec::with_capacity(srcs.len());
+                for s in srcs {
+                    vs.push(i32s(view(*s, regs, consts, args)?)?);
+                }
+                let mut out = pool.alloc_i32(*out_n);
+                for o in 0..*outer {
+                    for (pi, v) in vs.iter().enumerate() {
+                        let c = chunks[pi];
+                        out.extend_from_slice(&v[o * c..o * c + c]);
+                    }
+                }
+                Ok(Buf::I(out))
+            }
+        },
+        Inst::Slice { src, outer, in_block, start_off, copy, .. } => {
+            match view(*src, regs, consts, args)? {
+                View::F(v) => {
+                    let mut out = pool.alloc_f32(outer * copy);
+                    for o in 0..*outer {
+                        let s = o * in_block + start_off;
+                        out.extend_from_slice(&v[s..s + copy]);
+                    }
+                    Ok(Buf::F(out))
+                }
+                View::I(v) => {
+                    let mut out = pool.alloc_i32(outer * copy);
+                    for o in 0..*outer {
+                        let s = o * in_block + start_off;
+                        out.extend_from_slice(&v[s..s + copy]);
+                    }
+                    Ok(Buf::I(out))
+                }
+            }
+        }
+        Inst::Reduce { src, kind, in_dims, out_strides, out_n, in_n, count, backing, .. } => {
+            let sv = view(*src, regs, consts, args)?;
+            match backing {
+                Backing::F => {
+                    let v = f32s(sv)?;
+                    let init = match kind {
+                        ReduceK::Sum | ReduceK::Mean => 0.0f32,
+                        ReduceK::Max => f32::NEG_INFINITY,
+                    };
+                    let mut acc = pool.alloc_f32(*out_n);
+                    acc.resize(*out_n, init);
+                    reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, |a, x| match kind {
+                        ReduceK::Sum | ReduceK::Mean => *a += x,
+                        ReduceK::Max => *a = a.max(x),
+                    });
+                    if *kind == ReduceK::Mean {
+                        let c = (*count).max(1) as f32;
+                        for x in acc.iter_mut() {
+                            *x /= c;
+                        }
+                    }
+                    Ok(Buf::F(acc))
+                }
+                Backing::I => {
+                    let v = i32s(sv)?;
+                    let init = match kind {
+                        ReduceK::Sum => 0i32,
+                        ReduceK::Max => i32::MIN,
+                        ReduceK::Mean => return err("internal: i32 reduce_mean"),
+                    };
+                    let mut acc = pool.alloc_i32(*out_n);
+                    acc.resize(*out_n, init);
+                    reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, |a, x| match kind {
+                        ReduceK::Sum => *a = a.wrapping_add(x),
+                        ReduceK::Max => *a = (*a).max(x),
+                        ReduceK::Mean => unreachable!(),
+                    });
+                    Ok(Buf::I(acc))
+                }
+            }
+        }
+        Inst::Softmax { src, outer, axis, inner, .. } => {
+            let v = f32s(view(*src, regs, consts, args)?)?;
+            let (outer, axis, inner) = (*outer, *axis, *inner);
+            let total = outer * axis * inner;
+            let mut out = pool.alloc_f32(total);
+            out.resize(total, 0.0);
+            if inner == 1 {
+                // Contiguous rows: single-pass max / exp-sum / normalize.
+                for o in 0..outer {
+                    let row = &v[o * axis..(o + 1) * axis];
+                    let orow = &mut out[o * axis..(o + 1) * axis];
+                    let mut mx = f32::NEG_INFINITY;
+                    for &x in row {
+                        mx = mx.max(x);
+                    }
+                    let mut sum = 0f32;
+                    for kx in 0..axis {
+                        let e = (row[kx] - mx).exp();
+                        orow[kx] = e;
+                        sum += e;
+                    }
+                    for e in orow.iter_mut() {
+                        *e /= sum;
+                    }
+                }
+            } else {
+                for o in 0..outer {
+                    for inn in 0..inner {
+                        let at = |kx: usize| (o * axis + kx) * inner + inn;
+                        let mut mx = f32::NEG_INFINITY;
+                        for kx in 0..axis {
+                            mx = mx.max(v[at(kx)]);
+                        }
+                        let mut sum = 0f32;
+                        for kx in 0..axis {
+                            let e = (v[at(kx)] - mx).exp();
+                            out[at(kx)] = e;
+                            sum += e;
+                        }
+                        for kx in 0..axis {
+                            out[at(kx)] /= sum;
+                        }
+                    }
+                }
+            }
+            Ok(Buf::F(out))
+        }
+        Inst::Take { src, idx, outer, axis_len, inner, .. } => {
+            let ivals = i32s(view(*idx, regs, consts, args)?)?;
+            let (outer, axis_len, inner) = (*outer, *axis_len, *inner);
+            let idxs: Vec<usize> = ivals
+                .iter()
+                .map(|&i| (i.max(0) as usize).min(axis_len.saturating_sub(1)))
+                .collect();
+            match view(*src, regs, consts, args)? {
+                View::F(v) => {
+                    let mut out = pool.alloc_f32(outer * idxs.len() * inner);
+                    for o in 0..outer {
+                        for &j in &idxs {
+                            let s = (o * axis_len + j) * inner;
+                            out.extend_from_slice(&v[s..s + inner]);
+                        }
+                    }
+                    Ok(Buf::F(out))
+                }
+                View::I(v) => {
+                    let mut out = pool.alloc_i32(outer * idxs.len() * inner);
+                    for o in 0..outer {
+                        for &j in &idxs {
+                            let s = (o * axis_len + j) * inner;
+                            out.extend_from_slice(&v[s..s + inner]);
+                        }
+                    }
+                    Ok(Buf::I(out))
+                }
+            }
+        }
+    }
+}
+
+/// Flat-ascending accumulation into `acc[o]`, with `o` tracked by an
+/// odometer over the input dims (identical order to the interpreter's
+/// unravel/ravel walk, without the per-element allocations).
+fn reduce_loop<T: Copy>(
+    v: &[T],
+    acc: &mut [T],
+    in_dims: &[usize],
+    out_strides: &[usize],
+    in_n: usize,
+    mut f: impl FnMut(&mut T, T),
+) {
+    let rank = in_dims.len();
+    let mut idx = vec![0usize; rank];
+    let mut o = 0usize;
+    for flat in 0..in_n {
+        f(&mut acc[o], v[flat]);
+        let mut d = rank;
+        while d > 0 {
+            d -= 1;
+            idx[d] += 1;
+            o += out_strides[d];
+            if idx[d] < in_dims[d] {
+                break;
+            }
+            o -= out_strides[d] * in_dims[d];
+            idx[d] = 0;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_fused(
+    n: usize,
+    srcs: &[Src],
+    ops: &[EOp],
+    stack_cap: usize,
+    all_f32: bool,
+    out_backing: Backing,
+    regs: &[Option<Buf>],
+    consts: &[Literal],
+    args: &[&Literal],
+    pool: &mut Pool,
+) -> Result<Buf> {
+    let mut views: Vec<View> = Vec::with_capacity(srcs.len());
+    for s in srcs {
+        views.push(view(*s, regs, consts, args)?);
+    }
+    if all_f32 {
+        // Fast path: pre-resolved fn pointers, flat f32 stack.
+        enum ROp {
+            Load(usize),
+            Splat(usize),
+            Un(fn(f32) -> f32),
+            Bin(fn(f32, f32) -> f32),
+        }
+        let mut fs: Vec<&[f32]> = Vec::with_capacity(views.len());
+        for v in &views {
+            fs.push(f32s(*v)?);
+        }
+        let mut rops: Vec<ROp> = Vec::with_capacity(ops.len());
+        for op in ops {
+            rops.push(match op {
+                EOp::Load(j) => ROp::Load(*j as usize),
+                EOp::Splat(j) => ROp::Splat(*j as usize),
+                EOp::Un(k) => ROp::Un(unary_f32_fn(*k)),
+                EOp::Bin(k) => ROp::Bin(binary_f32_fn(*k)),
+                _ => return err("internal: non-f32 op on f32 fast path"),
+            });
+        }
+        let mut out = pool.alloc_f32(n);
+        let mut st: Vec<f32> = Vec::with_capacity(stack_cap);
+        for i in 0..n {
+            st.clear();
+            for rop in &rops {
+                match rop {
+                    ROp::Load(j) => st.push(fs[*j][i]),
+                    ROp::Splat(j) => st.push(fs[*j][0]),
+                    ROp::Un(f) => {
+                        let x = st.pop().unwrap();
+                        st.push(f(x));
+                    }
+                    ROp::Bin(f) => {
+                        let b = st.pop().unwrap();
+                        let a = st.pop().unwrap();
+                        st.push(f(a, b));
+                    }
+                }
+            }
+            out.push(st.pop().unwrap());
+        }
+        return Ok(Buf::F(out));
+    }
+    // General path: typed cells on the stack.
+    let mut st: Vec<Cell> = Vec::with_capacity(stack_cap);
+    let mut eval_elem = |i: usize| -> Cell {
+        st.clear();
+        for op in ops {
+            match op {
+                EOp::Load(j) => st.push(match views[*j as usize] {
+                    View::F(v) => Cell::F(v[i]),
+                    View::I(v) => Cell::I(v[i]),
+                }),
+                EOp::Splat(j) => st.push(match views[*j as usize] {
+                    View::F(v) => Cell::F(v[0]),
+                    View::I(v) => Cell::I(v[0]),
+                }),
+                EOp::Un(k) => {
+                    let c = st.pop().unwrap();
+                    st.push(match c {
+                        Cell::F(x) => Cell::F(unary_f32_fn(*k)(x)),
+                        Cell::I(x) => Cell::I(unary_i32_fn(*k).unwrap()(x)),
+                    });
+                }
+                EOp::Bin(k) => {
+                    let b = st.pop().unwrap();
+                    let a = st.pop().unwrap();
+                    st.push(match (a, b) {
+                        (Cell::F(x), Cell::F(y)) => Cell::F(binary_f32_fn(*k)(x, y)),
+                        (Cell::I(x), Cell::I(y)) => Cell::I(binary_i32_fn(*k)(x, y)),
+                        _ => unreachable!(),
+                    });
+                }
+                EOp::Cmp(k) => {
+                    let b = st.pop().unwrap();
+                    let a = st.pop().unwrap();
+                    st.push(match (a, b) {
+                        (Cell::F(x), Cell::F(y)) => Cell::I(cmp_f32(*k, x, y) as i32),
+                        (Cell::I(x), Cell::I(y)) => Cell::I(cmp_i32(*k, x, y) as i32),
+                        _ => unreachable!(),
+                    });
+                }
+                EOp::Sel => {
+                    let fv = st.pop().unwrap();
+                    let tv = st.pop().unwrap();
+                    let pv = st.pop().unwrap();
+                    let p = match pv {
+                        Cell::I(x) => x,
+                        Cell::F(_) => unreachable!(),
+                    };
+                    st.push(if p != 0 { tv } else { fv });
+                }
+                EOp::Conv(ty) => {
+                    let c = st.pop().unwrap();
+                    st.push(match (c, ty) {
+                        (Cell::F(x), PrimitiveType::S32) => Cell::I(x.trunc() as i32),
+                        (Cell::I(x), PrimitiveType::S32) => Cell::I(x),
+                        (Cell::I(x), PrimitiveType::F32) => Cell::F(x as f32),
+                        (Cell::F(x), PrimitiveType::Pred) => Cell::I((x != 0.0) as i32),
+                        (Cell::I(x), PrimitiveType::Pred) => Cell::I((x != 0) as i32),
+                        _ => unreachable!(),
+                    });
+                }
+            }
+        }
+        st.pop().unwrap()
+    };
+    match out_backing {
+        Backing::F => {
+            let mut out = pool.alloc_f32(n);
+            for i in 0..n {
+                match eval_elem(i) {
+                    Cell::F(x) => out.push(x),
+                    Cell::I(_) => return err("internal: fused output type"),
+                }
+            }
+            Ok(Buf::F(out))
+        }
+        Backing::I => {
+            let mut out = pool.alloc_i32(n);
+            for i in 0..n {
+                match eval_elem(i) {
+                    Cell::I(x) => out.push(x),
+                    Cell::F(_) => return err("internal: fused output type"),
+                }
+            }
+            Ok(Buf::I(out))
+        }
+    }
+}

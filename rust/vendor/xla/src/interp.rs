@@ -1,0 +1,670 @@
+//! The per-execute tree interpreter: the shim's original execution backend,
+//! retained as the `XLA_SHIM_BACKEND=interp` escape hatch, as the fallback
+//! for graphs outside the bytecode subset, and as the differential-testing
+//! oracle the bytecode backend is checked against.
+//!
+//! The scalar op tables at the top ([`unary_f32_fn`], [`binary_f32_fn`],
+//! ...) are shared with the bytecode VM, so both backends apply exactly the
+//! same `f32`/`i32` operations in exactly the same element order —
+//! bit-identical results, including NaN propagation and signed zeros.
+
+use crate::{
+    array, bcast_index, broadcast_shape, err, f32_array, i32_array, next_normal, next_uniform,
+    num_elems, ravel, unravel, BinaryK, CmpK, Data, Error, Literal, Node, Op, PrimitiveType,
+    ReduceK, Result, UnaryK, XlaComputation,
+};
+
+// ---------------------------------------------------------------------------
+// Shared scalar op tables (single source of truth for both backends)
+// ---------------------------------------------------------------------------
+
+/// f32 implementation of a unary op. `ZerosLike` is handled structurally by
+/// both backends and must not reach this table.
+pub(crate) fn unary_f32_fn(k: UnaryK) -> fn(f32) -> f32 {
+    match k {
+        UnaryK::Neg => |x| -x,
+        UnaryK::Exp => f32::exp,
+        UnaryK::Log => f32::ln,
+        UnaryK::Sqrt => f32::sqrt,
+        UnaryK::Rsqrt => |x| 1.0 / x.sqrt(),
+        UnaryK::Tanh => f32::tanh,
+        UnaryK::Logistic => |x| 1.0 / (1.0 + (-x).exp()),
+        UnaryK::Abs => f32::abs,
+        UnaryK::Sign => |x| {
+            if x > 0.0 {
+                1.0
+            } else if x < 0.0 {
+                -1.0
+            } else {
+                x // preserves ±0, propagates NaN like XLA's sign
+            }
+        },
+        UnaryK::ZerosLike => unreachable!(),
+    }
+}
+
+/// i32 implementation of a unary op, for the kinds XLA defines on integers.
+pub(crate) fn unary_i32_fn(k: UnaryK) -> Option<fn(i32) -> i32> {
+    match k {
+        UnaryK::Neg => Some(|x: i32| x.wrapping_neg()),
+        UnaryK::Abs => Some(|x: i32| x.wrapping_abs()),
+        UnaryK::Sign => Some(i32::signum),
+        _ => None,
+    }
+}
+
+pub(crate) fn binary_f32_fn(k: BinaryK) -> fn(f32, f32) -> f32 {
+    match k {
+        BinaryK::Add => |p, q| p + q,
+        BinaryK::Sub => |p, q| p - q,
+        BinaryK::Mul => |p, q| p * q,
+        BinaryK::Div => |p, q| p / q,
+        BinaryK::Max => f32::max,
+        BinaryK::Min => f32::min,
+        BinaryK::Pow => f32::powf,
+    }
+}
+
+pub(crate) fn binary_i32_fn(k: BinaryK) -> fn(i32, i32) -> i32 {
+    match k {
+        BinaryK::Add => i32::wrapping_add,
+        BinaryK::Sub => i32::wrapping_sub,
+        BinaryK::Mul => i32::wrapping_mul,
+        BinaryK::Div => |p, q| if q == 0 { 0 } else { p.wrapping_div(q) },
+        BinaryK::Max => i32::max,
+        BinaryK::Min => i32::min,
+        BinaryK::Pow => |p, q| (p as f64).powi(q) as i32,
+    }
+}
+
+pub(crate) fn cmp_f32(k: CmpK, p: f32, q: f32) -> bool {
+    match k {
+        CmpK::Gt => p > q,
+        CmpK::Ge => p >= q,
+        CmpK::Lt => p < q,
+        CmpK::Le => p <= q,
+        CmpK::Eq => p == q,
+        CmpK::Ne => p != q,
+    }
+}
+
+pub(crate) fn cmp_i32(k: CmpK, p: i32, q: i32) -> bool {
+    match k {
+        CmpK::Gt => p > q,
+        CmpK::Ge => p >= q,
+        CmpK::Lt => p < q,
+        CmpK::Le => p <= q,
+        CmpK::Eq => p == q,
+        CmpK::Ne => p != q,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph evaluation
+// ---------------------------------------------------------------------------
+
+/// Evaluate every node in order (ids are topological) and return the root.
+/// Evaluating *all* nodes — even ones unreachable from the root — is part of
+/// the backend contract: dead RNG nodes still consume stream draws, which
+/// the bytecode backend replicates.
+pub(crate) fn eval_graph(comp: &XlaComputation, args: &[&Literal]) -> Result<Literal> {
+    let mut values: Vec<Literal> = Vec::with_capacity(comp.nodes.len());
+    for (id, node) in comp.nodes.iter().enumerate() {
+        let v = eval_node(node, &values, args)
+            .map_err(|e| Error::new(format!("node {id} of '{}': {}", comp.name, e.msg)))?;
+        values.push(v);
+    }
+    Ok(values[comp.root].clone())
+}
+
+fn eval_node(node: &Node, values: &[Literal], args: &[&Literal]) -> Result<Literal> {
+    let arg = |i: usize| -> &Literal { &values[node.args[i]] };
+    match &node.op {
+        Op::Parameter { index, ty, dims } => {
+            let v = args
+                .get(*index)
+                .ok_or_else(|| Error::new(format!("missing argument {index}")))?;
+            let (aty, adims) = match v {
+                Literal::Array { ty, dims, .. } => (*ty, dims.clone()),
+                Literal::Tuple(_) => return err("tuple arguments are unsupported"),
+            };
+            if aty != *ty || &adims != dims {
+                return err(format!(
+                    "parameter {index} expects {ty:?}{dims:?}, got {aty:?}{adims:?}"
+                ));
+            }
+            Ok((*v).clone())
+        }
+        Op::Constant(lit) => Ok(lit.clone()),
+        Op::Iota { ty, n } => match ty {
+            PrimitiveType::F32 => Ok(f32_array(
+                vec![*n as i64],
+                (0..*n).map(|i| i as f32).collect(),
+            )),
+            PrimitiveType::S32 | PrimitiveType::Pred => Ok(i32_array(
+                PrimitiveType::S32,
+                vec![*n as i64],
+                (0..*n as i32).collect(),
+            )),
+            PrimitiveType::F64 => err("f64 iota unsupported"),
+        },
+        Op::RngUniform { dims } => {
+            let lo = arg(0).as_f32()?[0];
+            let hi = arg(1).as_f32()?[0];
+            let n = num_elems(dims);
+            let data = (0..n).map(|_| lo + next_uniform() * (hi - lo)).collect();
+            Ok(f32_array(dims.clone(), data))
+        }
+        Op::RngNormal { dims } => {
+            let mu = arg(0).as_f32()?[0];
+            let sigma = arg(1).as_f32()?[0];
+            let n = num_elems(dims);
+            let data = (0..n).map(|_| mu + sigma * next_normal()).collect();
+            Ok(f32_array(dims.clone(), data))
+        }
+        Op::Unary(k) => eval_unary(*k, arg(0)),
+        Op::Binary(k) => eval_binary(*k, arg(0), arg(1)),
+        Op::Compare(k) => eval_compare(*k, arg(0), arg(1)),
+        Op::Select => eval_select(arg(0), arg(1), arg(2)),
+        Op::MatMul => eval_matmul(arg(0), arg(1)),
+        Op::Transpose(perm) => eval_transpose(arg(0), perm),
+        Op::Reshape(dims) => arg(0).reshape(dims),
+        Op::Broadcast(sizes) => eval_broadcast(arg(0), sizes),
+        Op::BroadcastInDim { dims, broadcast_dims } => {
+            eval_broadcast_in_dim(arg(0), dims, broadcast_dims)
+        }
+        Op::ConcatInDim(dim) => {
+            let parts: Vec<&Literal> = node.args.iter().map(|&a| &values[a]).collect();
+            eval_concat(&parts, *dim)
+        }
+        Op::SliceInDim { start, stop, dim } => eval_slice(arg(0), *start, *stop, *dim),
+        Op::Reduce { kind, dims, keep_dims } => eval_reduce(arg(0), *kind, dims, *keep_dims),
+        Op::Softmax(dim) => eval_softmax(arg(0), *dim),
+        Op::Take(dim) => eval_take(arg(0), arg(1), *dim),
+        Op::Convert(ty) => eval_convert(arg(0), *ty),
+        Op::Tuple => Ok(Literal::Tuple(
+            node.args.iter().map(|&a| values[a].clone()).collect(),
+        )),
+    }
+}
+
+fn eval_unary(k: UnaryK, a: &Literal) -> Result<Literal> {
+    let (ty, dims) = (a.primitive_type()?, a.dims()?.to_vec());
+    if k == UnaryK::ZerosLike {
+        return Ok(match a {
+            Literal::Array { data: Data::F32(v), .. } => {
+                f32_array(dims, vec![0.0; v.len()])
+            }
+            Literal::Array { data: Data::I32(v), .. } => {
+                i32_array(ty, dims, vec![0; v.len()])
+            }
+            Literal::Tuple(_) => unreachable!(),
+        });
+    }
+    match a {
+        Literal::Array { data: Data::F32(v), .. } => {
+            let f = unary_f32_fn(k);
+            Ok(array(
+                ty,
+                dims,
+                Data::F32(std::sync::Arc::new(v.iter().map(|&x| f(x)).collect())),
+            ))
+        }
+        Literal::Array { data: Data::I32(v), .. } => {
+            let f = unary_i32_fn(k)
+                .ok_or_else(|| Error::new(format!("{k:?} requires f32 input")))?;
+            Ok(i32_array(ty, dims, v.iter().map(|&x| f(x)).collect()))
+        }
+        Literal::Tuple(_) => err("unary op on tuple"),
+    }
+}
+
+/// Apply `f` elementwise over the broadcast of two same-backing arrays.
+fn broadcast_zip<T: Copy>(
+    out_dims: &[i64],
+    a_dims: &[i64],
+    b_dims: &[i64],
+    x: &[T],
+    y: &[T],
+    f: impl Fn(T, T) -> T,
+) -> Vec<T> {
+    let n = num_elems(out_dims);
+    if a_dims == out_dims && b_dims == out_dims {
+        return (0..n).map(|i| f(x[i], y[i])).collect();
+    }
+    (0..n)
+        .map(|i| {
+            let out_idx = unravel(i, out_dims);
+            f(x[bcast_index(&out_idx, a_dims)], y[bcast_index(&out_idx, b_dims)])
+        })
+        .collect()
+}
+
+fn eval_binary(k: BinaryK, a: &Literal, b: &Literal) -> Result<Literal> {
+    let dims = broadcast_shape(a.dims()?, b.dims()?)?;
+    match (a, b) {
+        (
+            Literal::Array { data: Data::F32(x), ty, dims: ad },
+            Literal::Array { data: Data::F32(y), dims: bd, .. },
+        ) => {
+            let f = binary_f32_fn(k);
+            let data = broadcast_zip(&dims, ad, bd, x, y, f);
+            Ok(array(*ty, dims, Data::F32(std::sync::Arc::new(data))))
+        }
+        (
+            Literal::Array { data: Data::I32(x), ty, dims: ad },
+            Literal::Array { data: Data::I32(y), dims: bd, .. },
+        ) => {
+            let f = binary_i32_fn(k);
+            let data = broadcast_zip(&dims, ad, bd, x, y, f);
+            Ok(i32_array(*ty, dims, data))
+        }
+        _ => err("binary op operands must share a backing type"),
+    }
+}
+
+fn eval_compare(k: CmpK, a: &Literal, b: &Literal) -> Result<Literal> {
+    let dims = broadcast_shape(a.dims()?, b.dims()?)?;
+    let n = num_elems(&dims);
+    let data: Vec<i32> = match (a, b) {
+        (
+            Literal::Array { data: Data::F32(x), dims: ad, .. },
+            Literal::Array { data: Data::F32(y), dims: bd, .. },
+        ) => (0..n)
+            .map(|i| {
+                let out_idx = unravel(i, &dims);
+                cmp_f32(k, x[bcast_index(&out_idx, ad)], y[bcast_index(&out_idx, bd)]) as i32
+            })
+            .collect(),
+        (
+            Literal::Array { data: Data::I32(x), dims: ad, .. },
+            Literal::Array { data: Data::I32(y), dims: bd, .. },
+        ) => (0..n)
+            .map(|i| {
+                let out_idx = unravel(i, &dims);
+                cmp_i32(k, x[bcast_index(&out_idx, ad)], y[bcast_index(&out_idx, bd)]) as i32
+            })
+            .collect(),
+        _ => return err("comparison operands must share a backing type"),
+    };
+    Ok(i32_array(PrimitiveType::Pred, dims, data))
+}
+
+fn eval_select(pred: &Literal, t: &Literal, f: &Literal) -> Result<Literal> {
+    let p = pred.as_i32()?; // Pred and S32 are both i32-backed
+    let dims = t.dims()?.to_vec();
+    if pred.dims()? != dims.as_slice() || f.dims()? != dims.as_slice() {
+        return err("select operands must have equal shapes");
+    }
+    match (t, f) {
+        (
+            Literal::Array { data: Data::F32(x), ty, .. },
+            Literal::Array { data: Data::F32(y), .. },
+        ) => {
+            let data = (0..x.len()).map(|i| if p[i] != 0 { x[i] } else { y[i] }).collect();
+            Ok(array(*ty, dims, Data::F32(std::sync::Arc::new(data))))
+        }
+        (
+            Literal::Array { data: Data::I32(x), ty, .. },
+            Literal::Array { data: Data::I32(y), .. },
+        ) => {
+            let data = (0..x.len()).map(|i| if p[i] != 0 { x[i] } else { y[i] }).collect();
+            Ok(i32_array(*ty, dims, data))
+        }
+        _ => err("select branches must share a backing type"),
+    }
+}
+
+fn eval_matmul(a: &Literal, b: &Literal) -> Result<Literal> {
+    let (ad, bd) = (a.dims()?.to_vec(), b.dims()?.to_vec());
+    let (x, y) = (a.as_f32()?, b.as_f32()?);
+    if ad.len() < 2 || bd.len() < 2 {
+        return err(format!("matmul requires rank >= 2, got {ad:?} x {bd:?}"));
+    }
+    let (m, ka) = (ad[ad.len() - 2] as usize, ad[ad.len() - 1] as usize);
+    let (kb, n) = (bd[bd.len() - 2] as usize, bd[bd.len() - 1] as usize);
+    if ka != kb {
+        return err(format!("matmul inner dim mismatch: {ad:?} x {bd:?}"));
+    }
+    let a_batch = num_elems(&ad[..ad.len() - 2]);
+    let b_batch = num_elems(&bd[..bd.len() - 2]);
+    let (batch, out_prefix): (usize, Vec<i64>) = if ad.len() == bd.len()
+        && ad[..ad.len() - 2] == bd[..bd.len() - 2]
+    {
+        (a_batch, ad[..ad.len() - 2].to_vec())
+    } else if bd.len() == 2 {
+        // [.., m, k] @ [k, n]: the rhs is shared across lhs batches.
+        (a_batch, ad[..ad.len() - 2].to_vec())
+    } else if ad.len() == 2 {
+        (b_batch, bd[..bd.len() - 2].to_vec())
+    } else {
+        return err(format!("unsupported matmul batching: {ad:?} x {bd:?}"));
+    };
+    let mut out = vec![0f32; batch * m * n];
+    for bi in 0..batch {
+        let a_off = (if a_batch == 1 { 0 } else { bi }) * m * ka;
+        let b_off = (if b_batch == 1 { 0 } else { bi }) * ka * n;
+        for i in 0..m {
+            for kk in 0..ka {
+                let av = x[a_off + i * ka + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &y[b_off + kk * n..b_off + kk * n + n];
+                let orow = &mut out[bi * m * n + i * n..bi * m * n + i * n + n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    let mut dims = out_prefix;
+    dims.push(m as i64);
+    dims.push(n as i64);
+    Ok(f32_array(dims, out))
+}
+
+fn eval_transpose(a: &Literal, perm: &[i64]) -> Result<Literal> {
+    let dims = a.dims()?.to_vec();
+    if perm.len() != dims.len() {
+        return err(format!("transpose perm {perm:?} vs rank {}", dims.len()));
+    }
+    let out_dims: Vec<i64> = perm.iter().map(|&p| dims[p as usize]).collect();
+    let n = num_elems(&dims);
+    let out_dims2 = out_dims.clone();
+    let perm2 = perm.to_vec();
+    let map = move |out_flat: usize| -> usize {
+        let out_idx = unravel(out_flat, &out_dims2);
+        let mut in_idx = vec![0usize; dims.len()];
+        for (d, &p) in perm2.iter().enumerate() {
+            in_idx[p as usize] = out_idx[d];
+        }
+        ravel(&in_idx, &dims)
+    };
+    permute_literal(a, out_dims, n, map)
+}
+
+fn permute_literal(
+    a: &Literal,
+    out_dims: Vec<i64>,
+    out_n: usize,
+    map: impl Fn(usize) -> usize,
+) -> Result<Literal> {
+    match a {
+        Literal::Array { data: Data::F32(v), ty, .. } => {
+            let data = (0..out_n).map(|i| v[map(i)]).collect();
+            Ok(array(*ty, out_dims, Data::F32(std::sync::Arc::new(data))))
+        }
+        Literal::Array { data: Data::I32(v), ty, .. } => {
+            let data = (0..out_n).map(|i| v[map(i)]).collect();
+            Ok(i32_array(*ty, out_dims, data))
+        }
+        Literal::Tuple(_) => err("cannot permute a tuple"),
+    }
+}
+
+fn eval_broadcast(a: &Literal, sizes: &[i64]) -> Result<Literal> {
+    // XLA Broadcast: result dims = sizes ++ operand dims; operand tiled.
+    let in_dims = a.dims()?.to_vec();
+    let mut out_dims = sizes.to_vec();
+    out_dims.extend_from_slice(&in_dims);
+    let in_n = num_elems(&in_dims).max(1);
+    let out_n = num_elems(&out_dims);
+    permute_literal(a, out_dims, out_n, |i| i % in_n)
+}
+
+fn eval_broadcast_in_dim(a: &Literal, dims: &[i64], broadcast_dims: &[i64]) -> Result<Literal> {
+    let in_dims = a.dims()?.to_vec();
+    if broadcast_dims.len() != in_dims.len() {
+        return err("broadcast_in_dim: broadcast_dims must match operand rank");
+    }
+    let out_dims = dims.to_vec();
+    let out_n = num_elems(&out_dims);
+    let in_dims2 = in_dims.clone();
+    let bdims = broadcast_dims.to_vec();
+    let map = move |out_flat: usize| -> usize {
+        let out_idx = unravel(out_flat, &out_dims);
+        let mut in_idx = vec![0usize; in_dims2.len()];
+        for (d, &od) in bdims.iter().enumerate() {
+            in_idx[d] = if in_dims2[d] == 1 { 0 } else { out_idx[od as usize] };
+        }
+        ravel(&in_idx, &in_dims2)
+    };
+    permute_literal(a, dims.to_vec(), out_n, map)
+}
+
+fn eval_concat(parts: &[&Literal], dim: i64) -> Result<Literal> {
+    let d = dim as usize;
+    let first_dims = parts[0].dims()?.to_vec();
+    if d >= first_dims.len() {
+        return err("concat dim out of range");
+    }
+    let mut out_dims = first_dims.clone();
+    out_dims[d] = 0;
+    for p in parts {
+        let pd = p.dims()?;
+        if pd.len() != first_dims.len() {
+            return err("concat rank mismatch");
+        }
+        out_dims[d] += pd[d];
+    }
+    let outer: usize = first_dims[..d].iter().map(|&x| x as usize).product();
+    let inner: usize = first_dims[d + 1..].iter().map(|&x| x as usize).product();
+    let all_f32 = parts.iter().all(|p| matches!(p, Literal::Array { data: Data::F32(_), .. }));
+    if all_f32 {
+        let mut out: Vec<f32> = Vec::with_capacity(num_elems(&out_dims));
+        for o in 0..outer {
+            for p in parts {
+                let v = p.as_f32()?;
+                let pd = p.dims()?[d] as usize;
+                let start = o * pd * inner;
+                out.extend_from_slice(&v[start..start + pd * inner]);
+            }
+        }
+        Ok(f32_array(out_dims, out))
+    } else {
+        let mut out: Vec<i32> = Vec::with_capacity(num_elems(&out_dims));
+        for o in 0..outer {
+            for p in parts {
+                let v = p.as_i32()?;
+                let pd = p.dims()?[d] as usize;
+                let start = o * pd * inner;
+                out.extend_from_slice(&v[start..start + pd * inner]);
+            }
+        }
+        Ok(i32_array(parts[0].primitive_type()?, out_dims, out))
+    }
+}
+
+fn eval_slice(a: &Literal, start: i64, stop: i64, dim: i64) -> Result<Literal> {
+    let dims = a.dims()?.to_vec();
+    let d = dim as usize;
+    if d >= dims.len() || start < 0 || stop > dims[d] || start > stop {
+        return err(format!("slice [{start},{stop}) on dim {dim} of {dims:?}"));
+    }
+    let mut out_dims = dims.clone();
+    out_dims[d] = stop - start;
+    let inner: usize = dims[d + 1..].iter().map(|&x| x as usize).product();
+    let out_n = num_elems(&out_dims);
+    let size = (stop - start) as usize;
+    let in_d = dims[d] as usize;
+    let map = move |out_flat: usize| -> usize {
+        let block = size * inner;
+        let o = out_flat / block;
+        let rem = out_flat % block;
+        let i = rem / inner;
+        let inn = rem % inner;
+        (o * in_d + start as usize + i) * inner + inn
+    };
+    permute_literal(a, out_dims, out_n, map)
+}
+
+fn eval_reduce(a: &Literal, kind: ReduceK, rdims: &[i64], keep_dims: bool) -> Result<Literal> {
+    let dims = a.dims()?.to_vec();
+    let reduce_set: Vec<bool> = {
+        let mut s = vec![false; dims.len()];
+        for &d in rdims {
+            if d as usize >= dims.len() {
+                return err("reduce dim out of range");
+            }
+            s[d as usize] = true;
+        }
+        s
+    };
+    let mut out_dims: Vec<i64> = Vec::new();
+    for (i, &d) in dims.iter().enumerate() {
+        if reduce_set[i] {
+            if keep_dims {
+                out_dims.push(1);
+            }
+        } else {
+            out_dims.push(d);
+        }
+    }
+    // Map each input index to its output slot.
+    let kept: Vec<usize> = (0..dims.len()).filter(|&i| !reduce_set[i]).collect();
+    let kept_dims: Vec<i64> = kept.iter().map(|&i| dims[i]).collect();
+    let out_n = num_elems(&kept_dims).max(1);
+    let in_n = num_elems(&dims);
+    let count = if out_n == 0 { 1 } else { in_n / out_n.max(1) };
+    match a {
+        Literal::Array { data: Data::F32(v), .. } => {
+            let init = match kind {
+                ReduceK::Sum | ReduceK::Mean => 0.0f32,
+                ReduceK::Max => f32::NEG_INFINITY,
+            };
+            let mut acc = vec![init; out_n];
+            for flat in 0..in_n {
+                let idx = unravel(flat, &dims);
+                let kidx: Vec<usize> = kept.iter().map(|&i| idx[i]).collect();
+                let o = ravel(&kidx, &kept_dims);
+                match kind {
+                    ReduceK::Sum | ReduceK::Mean => acc[o] += v[flat],
+                    ReduceK::Max => acc[o] = acc[o].max(v[flat]),
+                }
+            }
+            if kind == ReduceK::Mean {
+                let c = count.max(1) as f32;
+                for x in &mut acc {
+                    *x /= c;
+                }
+            }
+            Ok(f32_array(out_dims, acc))
+        }
+        Literal::Array { data: Data::I32(v), ty, .. } => {
+            let init = match kind {
+                ReduceK::Sum => 0i32,
+                ReduceK::Max => i32::MIN,
+                ReduceK::Mean => return err("reduce_mean requires f32"),
+            };
+            let mut acc = vec![init; out_n];
+            for flat in 0..in_n {
+                let idx = unravel(flat, &dims);
+                let kidx: Vec<usize> = kept.iter().map(|&i| idx[i]).collect();
+                let o = ravel(&kidx, &kept_dims);
+                match kind {
+                    ReduceK::Sum => acc[o] = acc[o].wrapping_add(v[flat]),
+                    ReduceK::Max => acc[o] = acc[o].max(v[flat]),
+                    ReduceK::Mean => unreachable!(),
+                }
+            }
+            Ok(i32_array(*ty, out_dims, acc))
+        }
+        Literal::Tuple(_) => err("reduce on tuple"),
+    }
+}
+
+fn eval_softmax(a: &Literal, dim: i64) -> Result<Literal> {
+    let dims = a.dims()?.to_vec();
+    let v = a.as_f32()?;
+    let d = dim as usize;
+    if d >= dims.len() {
+        return err("softmax dim out of range");
+    }
+    let n = dims[d] as usize;
+    let inner: usize = dims[d + 1..].iter().map(|&x| x as usize).product();
+    let outer: usize = dims[..d].iter().map(|&x| x as usize).product();
+    let mut out = vec![0f32; v.len()];
+    for o in 0..outer {
+        for inn in 0..inner {
+            let at = |k: usize| (o * n + k) * inner + inn;
+            let mut mx = f32::NEG_INFINITY;
+            for k in 0..n {
+                mx = mx.max(v[at(k)]);
+            }
+            let mut sum = 0f32;
+            for k in 0..n {
+                let e = (v[at(k)] - mx).exp();
+                out[at(k)] = e;
+                sum += e;
+            }
+            for k in 0..n {
+                out[at(k)] /= sum;
+            }
+        }
+    }
+    Ok(f32_array(dims, out))
+}
+
+fn eval_take(data: &Literal, indices: &Literal, dim: i64) -> Result<Literal> {
+    let ddims = data.dims()?.to_vec();
+    let idims = indices.dims()?.to_vec();
+    let idx = indices.as_i32()?;
+    let d = dim as usize;
+    if d >= ddims.len() {
+        return err("take dim out of range");
+    }
+    let axis_len = ddims[d] as usize;
+    let inner: usize = ddims[d + 1..].iter().map(|&x| x as usize).product();
+    let mut out_dims: Vec<i64> = ddims[..d].to_vec();
+    out_dims.extend_from_slice(&idims);
+    out_dims.extend_from_slice(&ddims[d + 1..]);
+    let out_n = num_elems(&out_dims);
+    let n_idx = idx.len().max(1);
+    let idx_owned: Vec<usize> = idx
+        .iter()
+        .map(|&i| (i.max(0) as usize).min(axis_len.saturating_sub(1)))
+        .collect();
+    let map = move |out_flat: usize| -> usize {
+        let inn = out_flat % inner;
+        let rest = out_flat / inner;
+        let j = rest % n_idx;
+        let o = rest / n_idx;
+        (o * axis_len + idx_owned[j]) * inner + inn
+    };
+    permute_literal(data, out_dims, out_n, map)
+}
+
+fn eval_convert(a: &Literal, ty: PrimitiveType) -> Result<Literal> {
+    let dims = a.dims()?.to_vec();
+    let src = a.primitive_type()?;
+    if src == ty {
+        return Ok(a.clone());
+    }
+    match (a, ty) {
+        (Literal::Array { data: Data::F32(v), .. }, PrimitiveType::S32) => Ok(i32_array(
+            PrimitiveType::S32,
+            dims,
+            v.iter().map(|&x| x.trunc() as i32).collect(),
+        )),
+        (Literal::Array { data: Data::I32(v), .. }, PrimitiveType::S32) => {
+            // Pred -> S32 (0/1 values already i32-backed).
+            Ok(i32_array(PrimitiveType::S32, dims, (**v).clone()))
+        }
+        (Literal::Array { data: Data::I32(v), .. }, PrimitiveType::F32) => Ok(f32_array(
+            dims,
+            v.iter().map(|&x| x as f32).collect(),
+        )),
+        (Literal::Array { data: Data::F32(v), .. }, PrimitiveType::Pred) => Ok(i32_array(
+            PrimitiveType::Pred,
+            dims,
+            v.iter().map(|&x| (x != 0.0) as i32).collect(),
+        )),
+        (Literal::Array { data: Data::I32(v), .. }, PrimitiveType::Pred) => Ok(i32_array(
+            PrimitiveType::Pred,
+            dims,
+            v.iter().map(|&x| (x != 0) as i32).collect(),
+        )),
+        _ => err(format!("unsupported convert {src:?} -> {ty:?}")),
+    }
+}

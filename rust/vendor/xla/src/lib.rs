@@ -2,26 +2,39 @@
 //!
 //! The real crate binds the XLA C++ compiler and a PJRT runtime; neither is
 //! available in this offline build environment, so this vendored crate
-//! re-implements the *API surface terra actually uses* as a small expression
-//! interpreter:
+//! re-implements the *API surface terra actually uses* with two execution
+//! backends behind one `compile` entry point:
 //!
 //! * [`XlaBuilder`] records ops into an append-only expression graph
 //!   (node arguments always point at earlier nodes, so node order is a
 //!   topological order).
 //! * [`XlaBuilder::build`] snapshots the graph into an [`XlaComputation`].
-//! * [`PjRtClient::compile`] wraps the computation into a
-//!   [`PjRtLoadedExecutable`] whose `execute_b` evaluates the graph over
-//!   host [`Literal`] values.
+//! * [`PjRtClient::compile`] lowers the computation. By default it compiles
+//!   to a linear register bytecode program ([`bytecode`]) with shapes and
+//!   dtypes resolved once, elementwise chains fused into single-pass loops,
+//!   and output buffers recycled from dead registers via a liveness
+//!   analysis. Setting `XLA_SHIM_BACKEND=interp` (or a graph the bytecode
+//!   pipeline cannot lower) falls back to the original per-execute tree
+//!   interpreter ([`interp`]), which is retained as the differential-testing
+//!   oracle. See `rust/vendor/xla/README.md` for the bytecode format and
+//!   the backend contract.
 //!
 //! Semantics follow XLA where terra's lowering relies on them (elementwise
 //! ops on equal shapes, `Broadcast` prepending major dims, row-major
-//! literals, comparisons producing PRED, convert-with-truncation). HLO-text
-//! artifacts are not supported: [`HloModuleProto::from_text_file`] returns an
-//! error, and the artifact integration tests skip when no artifacts exist.
+//! literals, comparisons producing PRED, convert-with-truncation). The two
+//! backends are bit-identical, including the deterministic RNG stream.
+//! HLO-text artifacts are not supported: [`HloModuleProto::from_text_file`]
+//! returns an error, and the artifact integration tests skip when no
+//! artifacts exist.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub(crate) mod bytecode;
+pub(crate) mod interp;
 
 // ---------------------------------------------------------------------------
 // Error
@@ -49,7 +62,7 @@ impl std::error::Error for Error {}
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-fn err<T>(msg: impl Into<String>) -> Result<T> {
+pub(crate) fn err<T>(msg: impl Into<String>) -> Result<T> {
     Err(Error::new(msg))
 }
 
@@ -96,11 +109,11 @@ pub trait NativeType: Copy {
 impl NativeType for f32 {
     const PRIM: PrimitiveType = PrimitiveType::F32;
     fn write_to(data: &[Self], out: &mut Data) {
-        *out = Data::F32(data.to_vec());
+        *out = Data::F32(Arc::new(data.to_vec()));
     }
     fn read_from(data: &Data) -> Result<Vec<Self>> {
         match data {
-            Data::F32(v) => Ok(v.clone()),
+            Data::F32(v) => Ok((**v).clone()),
             Data::I32(_) => err("literal is not f32"),
         }
     }
@@ -109,11 +122,11 @@ impl NativeType for f32 {
 impl NativeType for i32 {
     const PRIM: PrimitiveType = PrimitiveType::S32;
     fn write_to(data: &[Self], out: &mut Data) {
-        *out = Data::I32(data.to_vec());
+        *out = Data::I32(Arc::new(data.to_vec()));
     }
     fn read_from(data: &Data) -> Result<Vec<Self>> {
         match data {
-            Data::I32(v) => Ok(v.clone()),
+            Data::I32(v) => Ok((**v).clone()),
             Data::F32(_) => err("literal is not i32"),
         }
     }
@@ -155,7 +168,7 @@ pub enum Shape {
     Tuple(Vec<Shape>),
 }
 
-fn num_elems(dims: &[i64]) -> usize {
+pub(crate) fn num_elems(dims: &[i64]) -> usize {
     dims.iter().map(|&d| d as usize).product()
 }
 
@@ -164,10 +177,14 @@ fn num_elems(dims: &[i64]) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Backing storage of an array literal. `Pred` values are stored as 0/1 i32.
+///
+/// The payload is behind an `Arc`, so cloning a `Literal` (device buffers,
+/// untupling, host round-trips) is a refcount bump, never a deep copy; data
+/// is written exactly once when the literal is built.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
 }
 
 /// A host-resident value: a dense array or a tuple of literals.
@@ -184,18 +201,19 @@ pub enum Literal {
 impl Literal {
     /// Rank-1 literal from a host slice.
     pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
-        let mut d = Data::I32(Vec::new());
+        let mut d = Data::I32(Arc::new(Vec::new()));
         T::write_to(data, &mut d);
         Literal::Array { ty: T::PRIM, dims: vec![data.len() as i64], data: d }
     }
 
     pub fn scalar<T: NativeType>(v: T) -> Literal {
-        let mut d = Data::I32(Vec::new());
+        let mut d = Data::I32(Arc::new(Vec::new()));
         T::write_to(&[v], &mut d);
         Literal::Array { ty: T::PRIM, dims: vec![], data: d }
     }
 
-    /// Reinterpret with new dims (element count must match).
+    /// Reinterpret with new dims (element count must match). The payload is
+    /// shared, not copied.
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
         match self {
             Literal::Array { ty, data, dims: old } => {
@@ -247,21 +265,21 @@ impl Literal {
         }
     }
 
-    fn dims(&self) -> Result<&[i64]> {
+    pub(crate) fn dims(&self) -> Result<&[i64]> {
         match self {
             Literal::Array { dims, .. } => Ok(dims),
             Literal::Tuple(_) => err("tuple literal has no dims"),
         }
     }
 
-    fn as_f32(&self) -> Result<&[f32]> {
+    pub(crate) fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Literal::Array { data: Data::F32(v), .. } => Ok(v),
             _ => err("literal is not f32"),
         }
     }
 
-    fn as_i32(&self) -> Result<&[i32]> {
+    pub(crate) fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Literal::Array { data: Data::I32(v), .. } => Ok(v),
             _ => err("literal is not i32-backed"),
@@ -269,12 +287,24 @@ impl Literal {
     }
 }
 
+pub(crate) fn array(ty: PrimitiveType, dims: Vec<i64>, data: Data) -> Literal {
+    Literal::Array { ty, dims, data }
+}
+
+pub(crate) fn f32_array(dims: Vec<i64>, data: Vec<f32>) -> Literal {
+    array(PrimitiveType::F32, dims, Data::F32(Arc::new(data)))
+}
+
+pub(crate) fn i32_array(ty: PrimitiveType, dims: Vec<i64>, data: Vec<i32>) -> Literal {
+    array(ty, dims, Data::I32(Arc::new(data)))
+}
+
 // ---------------------------------------------------------------------------
 // Expression graph
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum UnaryK {
+pub(crate) enum UnaryK {
     Neg,
     Exp,
     Log,
@@ -288,7 +318,7 @@ enum UnaryK {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum BinaryK {
+pub(crate) enum BinaryK {
     Add,
     Sub,
     Mul,
@@ -299,7 +329,7 @@ enum BinaryK {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum CmpK {
+pub(crate) enum CmpK {
     Gt,
     Ge,
     Lt,
@@ -309,14 +339,14 @@ enum CmpK {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ReduceK {
+pub(crate) enum ReduceK {
     Sum,
     Mean,
     Max,
 }
 
 #[derive(Debug, Clone)]
-enum Op {
+pub(crate) enum Op {
     Parameter { index: usize, ty: PrimitiveType, dims: Vec<i64> },
     Constant(Literal),
     Iota { ty: PrimitiveType, n: usize },
@@ -346,9 +376,9 @@ enum Op {
 }
 
 #[derive(Debug, Clone)]
-struct Node {
-    op: Op,
-    args: Vec<usize>,
+pub(crate) struct Node {
+    pub(crate) op: Op,
+    pub(crate) args: Vec<usize>,
 }
 
 #[derive(Debug)]
@@ -371,9 +401,9 @@ pub struct XlaOp {
 /// A snapshot of a builder graph with a chosen root.
 #[derive(Debug, Clone)]
 pub struct XlaComputation {
-    name: String,
-    nodes: Vec<Node>,
-    root: usize,
+    pub(crate) name: String,
+    pub(crate) nodes: Vec<Node>,
+    pub(crate) root: usize,
 }
 
 impl XlaBuilder {
@@ -427,11 +457,7 @@ impl XlaBuilder {
         let lit = match ty {
             ElementType::F32 => Literal::scalar(0f32),
             ElementType::S32 => Literal::scalar(0i32),
-            ElementType::Pred => Literal::Array {
-                ty: PrimitiveType::Pred,
-                dims: vec![],
-                data: Data::I32(vec![0]),
-            },
+            ElementType::Pred => i32_array(PrimitiveType::Pred, vec![], vec![0]),
         };
         Ok(self.push(Op::Constant(lit), vec![]))
     }
@@ -644,14 +670,14 @@ impl XlaOp {
 }
 
 // ---------------------------------------------------------------------------
-// HLO-text artifacts (unsupported by the interpreter)
+// HLO-text artifacts (unsupported by both backends)
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy)]
 enum Never {}
 
-/// Placeholder for parsed HLO modules. Never constructible: the interpreter
-/// backend cannot execute HLO text, so loading always fails cleanly and
+/// Placeholder for parsed HLO modules. Never constructible: neither shim
+/// backend can execute HLO text, so loading always fails cleanly and
 /// artifact-dependent paths are skipped.
 #[derive(Debug)]
 pub struct HloModuleProto {
@@ -662,7 +688,7 @@ impl HloModuleProto {
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         err(format!(
             "HLO-text artifact '{path}' cannot be loaded: the vendored CPU \
-             interpreter has no HLO parser (build against real XLA for AOT artifacts)"
+             shim has no HLO parser (build against real XLA for AOT artifacts)"
         ))
     }
 }
@@ -678,91 +704,15 @@ impl XlaComputation {
 }
 
 // ---------------------------------------------------------------------------
-// PJRT stand-ins
+// Deterministic RNG stream (shared by both backends)
 // ---------------------------------------------------------------------------
 
-/// CPU "device" handle (stateless).
-#[derive(Debug)]
-pub struct PjRtClient;
-
-/// A device buffer: host literal + identity.
-#[derive(Debug, Clone)]
-pub struct PjRtBuffer {
-    lit: Literal,
-}
-
-/// A "compiled" computation: the captured graph, interpreted per execution.
-#[derive(Debug, Clone)]
-pub struct PjRtLoadedExecutable {
-    comp: XlaComputation,
-}
-
-impl PjRtClient {
-    pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient)
-    }
-
-    pub fn platform_name(&self) -> String {
-        "interp-cpu".to_string()
-    }
-
-    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        if comp.root >= comp.nodes.len() {
-            return err("computation root out of range");
-        }
-        Ok(PjRtLoadedExecutable { comp: comp.clone() })
-    }
-
-    pub fn buffer_from_host_buffer<T: NativeType>(
-        &self,
-        data: &[T],
-        dims: &[usize],
-        _device: Option<usize>,
-    ) -> Result<PjRtBuffer> {
-        let n: usize = dims.iter().product();
-        if n != data.len() {
-            return err(format!(
-                "buffer_from_host_buffer: {dims:?} needs {n} elements, got {}",
-                data.len()
-            ));
-        }
-        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        Ok(PjRtBuffer { lit: Literal::vec1(data).reshape(&dims_i64)? })
-    }
-}
-
-impl PjRtBuffer {
-    pub fn to_literal_sync(&self) -> Result<Literal> {
-        Ok(self.lit.clone())
-    }
-
-    pub fn on_device_shape(&self) -> Result<Shape> {
-        Ok(self.lit.shape())
-    }
-}
-
-impl PjRtLoadedExecutable {
-    /// Execute over device buffers. Returns one replica holding one buffer
-    /// per tuple leaf (tuples are "untupled", matching PJRT CPU behaviour).
-    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        let arg_lits: Vec<&Literal> = args.iter().map(|b| &b.lit).collect();
-        let root = eval_graph(&self.comp, &arg_lits)?;
-        let bufs = match root {
-            Literal::Tuple(parts) => parts.into_iter().map(|lit| PjRtBuffer { lit }).collect(),
-            lit @ Literal::Array { .. } => vec![PjRtBuffer { lit }],
-        };
-        Ok(vec![bufs])
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Interpreter
-// ---------------------------------------------------------------------------
-
-/// Process-global deterministic RNG stream (splitmix64).
+/// Process-global deterministic RNG stream (splitmix64). Both backends draw
+/// from this stream in node order, so a program executes identically on
+/// either backend from the same state.
 static RNG_STATE: AtomicU64 = AtomicU64::new(0x243F_6A88_85A3_08D3);
 
-fn next_u64() -> u64 {
+pub(crate) fn next_u64() -> u64 {
     let mut z = RNG_STATE
         .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
         .wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -771,18 +721,32 @@ fn next_u64() -> u64 {
     z ^ (z >> 31)
 }
 
-fn next_uniform() -> f32 {
+pub(crate) fn next_uniform() -> f32 {
     ((next_u64() >> 40) as f32) / ((1u64 << 24) as f32)
 }
 
-fn next_normal() -> f32 {
+pub(crate) fn next_normal() -> f32 {
     // Box-Muller; u1 in (0, 1].
     let u1 = (1.0 - next_uniform()).max(1e-12);
     let u2 = next_uniform();
     (-2.0 * (u1 as f64).ln()).sqrt() as f32 * (2.0 * std::f64::consts::PI * u2 as f64).cos() as f32
 }
 
-fn unravel(mut flat: usize, dims: &[i64]) -> Vec<usize> {
+/// Read the RNG stream state (for save/replay in differential tests).
+pub fn rng_state() -> u64 {
+    RNG_STATE.load(Ordering::Relaxed)
+}
+
+/// Restore a previously saved RNG stream state, aligning subsequent draws.
+pub fn set_rng_state(state: u64) {
+    RNG_STATE.store(state, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Shared index helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) fn unravel(mut flat: usize, dims: &[i64]) -> Vec<usize> {
     let mut idx = vec![0usize; dims.len()];
     for d in (0..dims.len()).rev() {
         let size = dims[d] as usize;
@@ -792,7 +756,7 @@ fn unravel(mut flat: usize, dims: &[i64]) -> Vec<usize> {
     idx
 }
 
-fn ravel(idx: &[usize], dims: &[i64]) -> usize {
+pub(crate) fn ravel(idx: &[usize], dims: &[i64]) -> usize {
     let mut flat = 0usize;
     for (d, &i) in idx.iter().enumerate() {
         flat = flat * dims[d] as usize + i;
@@ -800,150 +764,10 @@ fn ravel(idx: &[usize], dims: &[i64]) -> usize {
     flat
 }
 
-fn array(ty: PrimitiveType, dims: Vec<i64>, data: Data) -> Literal {
-    Literal::Array { ty, dims, data }
-}
-
-fn f32_array(dims: Vec<i64>, data: Vec<f32>) -> Literal {
-    array(PrimitiveType::F32, dims, Data::F32(data))
-}
-
-/// Evaluate every node in order (ids are topological) and return the root.
-fn eval_graph(comp: &XlaComputation, args: &[&Literal]) -> Result<Literal> {
-    let mut values: Vec<Literal> = Vec::with_capacity(comp.nodes.len());
-    for (id, node) in comp.nodes.iter().enumerate() {
-        let v = eval_node(node, &values, args)
-            .map_err(|e| Error::new(format!("node {id} of '{}': {}", comp.name, e.msg)))?;
-        values.push(v);
-    }
-    Ok(values[comp.root].clone())
-}
-
-fn eval_node(node: &Node, values: &[Literal], args: &[&Literal]) -> Result<Literal> {
-    let arg = |i: usize| -> &Literal { &values[node.args[i]] };
-    match &node.op {
-        Op::Parameter { index, ty, dims } => {
-            let v = args
-                .get(*index)
-                .ok_or_else(|| Error::new(format!("missing argument {index}")))?;
-            let (aty, adims) = match v {
-                Literal::Array { ty, dims, .. } => (*ty, dims.clone()),
-                Literal::Tuple(_) => return err("tuple arguments are unsupported"),
-            };
-            if aty != *ty || &adims != dims {
-                return err(format!(
-                    "parameter {index} expects {ty:?}{dims:?}, got {aty:?}{adims:?}"
-                ));
-            }
-            Ok((*v).clone())
-        }
-        Op::Constant(lit) => Ok(lit.clone()),
-        Op::Iota { ty, n } => match ty {
-            PrimitiveType::F32 => Ok(f32_array(
-                vec![*n as i64],
-                (0..*n).map(|i| i as f32).collect(),
-            )),
-            PrimitiveType::S32 | PrimitiveType::Pred => Ok(array(
-                PrimitiveType::S32,
-                vec![*n as i64],
-                Data::I32((0..*n as i32).collect()),
-            )),
-            PrimitiveType::F64 => err("f64 iota unsupported"),
-        },
-        Op::RngUniform { dims } => {
-            let lo = arg(0).as_f32()?[0];
-            let hi = arg(1).as_f32()?[0];
-            let n = num_elems(dims);
-            let data = (0..n).map(|_| lo + next_uniform() * (hi - lo)).collect();
-            Ok(f32_array(dims.clone(), data))
-        }
-        Op::RngNormal { dims } => {
-            let mu = arg(0).as_f32()?[0];
-            let sigma = arg(1).as_f32()?[0];
-            let n = num_elems(dims);
-            let data = (0..n).map(|_| mu + sigma * next_normal()).collect();
-            Ok(f32_array(dims.clone(), data))
-        }
-        Op::Unary(k) => eval_unary(*k, arg(0)),
-        Op::Binary(k) => eval_binary(*k, arg(0), arg(1)),
-        Op::Compare(k) => eval_compare(*k, arg(0), arg(1)),
-        Op::Select => eval_select(arg(0), arg(1), arg(2)),
-        Op::MatMul => eval_matmul(arg(0), arg(1)),
-        Op::Transpose(perm) => eval_transpose(arg(0), perm),
-        Op::Reshape(dims) => arg(0).reshape(dims),
-        Op::Broadcast(sizes) => eval_broadcast(arg(0), sizes),
-        Op::BroadcastInDim { dims, broadcast_dims } => {
-            eval_broadcast_in_dim(arg(0), dims, broadcast_dims)
-        }
-        Op::ConcatInDim(dim) => {
-            let parts: Vec<&Literal> = node.args.iter().map(|&a| &values[a]).collect();
-            eval_concat(&parts, *dim)
-        }
-        Op::SliceInDim { start, stop, dim } => eval_slice(arg(0), *start, *stop, *dim),
-        Op::Reduce { kind, dims, keep_dims } => eval_reduce(arg(0), *kind, dims, *keep_dims),
-        Op::Softmax(dim) => eval_softmax(arg(0), *dim),
-        Op::Take(dim) => eval_take(arg(0), arg(1), *dim),
-        Op::Convert(ty) => eval_convert(arg(0), *ty),
-        Op::Tuple => Ok(Literal::Tuple(
-            node.args.iter().map(|&a| values[a].clone()).collect(),
-        )),
-    }
-}
-
-fn eval_unary(k: UnaryK, a: &Literal) -> Result<Literal> {
-    let (ty, dims) = (a.primitive_type()?, a.dims()?.to_vec());
-    if k == UnaryK::ZerosLike {
-        return Ok(match a {
-            Literal::Array { data: Data::F32(v), .. } => {
-                array(ty, dims, Data::F32(vec![0.0; v.len()]))
-            }
-            Literal::Array { data: Data::I32(v), .. } => {
-                array(ty, dims, Data::I32(vec![0; v.len()]))
-            }
-            Literal::Tuple(_) => unreachable!(),
-        });
-    }
-    match a {
-        Literal::Array { data: Data::F32(v), .. } => {
-            let f: fn(f32) -> f32 = match k {
-                UnaryK::Neg => |x| -x,
-                UnaryK::Exp => f32::exp,
-                UnaryK::Log => f32::ln,
-                UnaryK::Sqrt => f32::sqrt,
-                UnaryK::Rsqrt => |x| 1.0 / x.sqrt(),
-                UnaryK::Tanh => f32::tanh,
-                UnaryK::Logistic => |x| 1.0 / (1.0 + (-x).exp()),
-                UnaryK::Abs => f32::abs,
-                UnaryK::Sign => |x| {
-                    if x > 0.0 {
-                        1.0
-                    } else if x < 0.0 {
-                        -1.0
-                    } else {
-                        x // preserves ±0, propagates NaN like XLA's sign
-                    }
-                },
-                UnaryK::ZerosLike => unreachable!(),
-            };
-            Ok(array(ty, dims, Data::F32(v.iter().map(|&x| f(x)).collect())))
-        }
-        Literal::Array { data: Data::I32(v), .. } => {
-            let f: fn(i32) -> i32 = match k {
-                UnaryK::Neg => |x| x.wrapping_neg(),
-                UnaryK::Abs => |x| x.wrapping_abs(),
-                UnaryK::Sign => i32::signum,
-                _ => return err(format!("{k:?} requires f32 input")),
-            };
-            Ok(array(ty, dims, Data::I32(v.iter().map(|&x| f(x)).collect())))
-        }
-        Literal::Tuple(_) => err("unary op on tuple"),
-    }
-}
-
 /// numpy-style broadcast shape (right-aligned; size-1 dims expand). XLA's
 /// builder applies this implicit broadcasting for binary ops — the seed's
 /// LogSoftmax lowering relies on `[..,n] - [..,1]` working directly.
-fn broadcast_shape(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
+pub(crate) fn broadcast_shape(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
     let r = a.len().max(b.len());
     let mut out = vec![0i64; r];
     for i in 0..r {
@@ -963,7 +787,7 @@ fn broadcast_shape(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
 }
 
 /// Flat input index for a broadcast output index (right-aligned).
-fn bcast_index(out_idx: &[usize], in_dims: &[i64]) -> usize {
+pub(crate) fn bcast_index(out_idx: &[usize], in_dims: &[i64]) -> usize {
     let off = out_idx.len() - in_dims.len();
     let mut flat = 0usize;
     for (d, &s) in in_dims.iter().enumerate() {
@@ -973,665 +797,230 @@ fn bcast_index(out_idx: &[usize], in_dims: &[i64]) -> usize {
     flat
 }
 
-/// Apply `f` elementwise over the broadcast of two same-backing arrays.
-fn broadcast_zip<T: Copy>(
-    out_dims: &[i64],
-    a_dims: &[i64],
-    b_dims: &[i64],
-    x: &[T],
-    y: &[T],
-    f: impl Fn(T, T) -> T,
-) -> Vec<T> {
-    let n = num_elems(out_dims);
-    if a_dims == out_dims && b_dims == out_dims {
-        return (0..n).map(|i| f(x[i], y[i])).collect();
-    }
-    (0..n)
-        .map(|i| {
-            let out_idx = unravel(i, out_dims);
-            f(x[bcast_index(&out_idx, a_dims)], y[bcast_index(&out_idx, b_dims)])
-        })
-        .collect()
+// ---------------------------------------------------------------------------
+// Backend selection + process-wide counters
+// ---------------------------------------------------------------------------
+
+/// Which execution backend `compile` lowers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShimBackend {
+    /// Per-execute tree interpretation (the original backend; retained as
+    /// the differential-testing oracle and the `XLA_SHIM_BACKEND=interp`
+    /// escape hatch).
+    Interp,
+    /// Compile-once register bytecode with fusion and buffer reuse.
+    Bytecode,
 }
 
-fn eval_binary(k: BinaryK, a: &Literal, b: &Literal) -> Result<Literal> {
-    let dims = broadcast_shape(a.dims()?, b.dims()?)?;
-    match (a, b) {
-        (
-            Literal::Array { data: Data::F32(x), ty, dims: ad },
-            Literal::Array { data: Data::F32(y), dims: bd, .. },
-        ) => {
-            let f: fn(f32, f32) -> f32 = match k {
-                BinaryK::Add => |p, q| p + q,
-                BinaryK::Sub => |p, q| p - q,
-                BinaryK::Mul => |p, q| p * q,
-                BinaryK::Div => |p, q| p / q,
-                BinaryK::Max => f32::max,
-                BinaryK::Min => f32::min,
-                BinaryK::Pow => f32::powf,
-            };
-            let data = broadcast_zip(&dims, ad, bd, x, y, f);
-            Ok(array(*ty, dims, Data::F32(data)))
-        }
-        (
-            Literal::Array { data: Data::I32(x), ty, dims: ad },
-            Literal::Array { data: Data::I32(y), dims: bd, .. },
-        ) => {
-            let f: fn(i32, i32) -> i32 = match k {
-                BinaryK::Add => i32::wrapping_add,
-                BinaryK::Sub => i32::wrapping_sub,
-                BinaryK::Mul => i32::wrapping_mul,
-                BinaryK::Div => |p, q| if q == 0 { 0 } else { p.wrapping_div(q) },
-                BinaryK::Max => i32::max,
-                BinaryK::Min => i32::min,
-                BinaryK::Pow => |p, q| (p as f64).powi(q) as i32,
-            };
-            let data = broadcast_zip(&dims, ad, bd, x, y, f);
-            Ok(array(*ty, dims, Data::I32(data)))
-        }
-        _ => err("binary op operands must share a backing type"),
+fn env_backend() -> ShimBackend {
+    match std::env::var("XLA_SHIM_BACKEND") {
+        Ok(v) if v.eq_ignore_ascii_case("interp") => ShimBackend::Interp,
+        _ => ShimBackend::Bytecode,
     }
 }
 
-fn eval_compare(k: CmpK, a: &Literal, b: &Literal) -> Result<Literal> {
-    let dims = broadcast_shape(a.dims()?, b.dims()?)?;
-    let n = num_elems(&dims);
-    let cmp_f = |p: f32, q: f32| -> bool {
-        match k {
-            CmpK::Gt => p > q,
-            CmpK::Ge => p >= q,
-            CmpK::Lt => p < q,
-            CmpK::Le => p <= q,
-            CmpK::Eq => p == q,
-            CmpK::Ne => p != q,
-        }
-    };
-    let cmp_i = |p: i32, q: i32| -> bool {
-        match k {
-            CmpK::Gt => p > q,
-            CmpK::Ge => p >= q,
-            CmpK::Lt => p < q,
-            CmpK::Le => p <= q,
-            CmpK::Eq => p == q,
-            CmpK::Ne => p != q,
-        }
-    };
-    let data: Vec<i32> = match (a, b) {
-        (
-            Literal::Array { data: Data::F32(x), dims: ad, .. },
-            Literal::Array { data: Data::F32(y), dims: bd, .. },
-        ) => (0..n)
-            .map(|i| {
-                let out_idx = unravel(i, &dims);
-                cmp_f(x[bcast_index(&out_idx, ad)], y[bcast_index(&out_idx, bd)]) as i32
-            })
-            .collect(),
-        (
-            Literal::Array { data: Data::I32(x), dims: ad, .. },
-            Literal::Array { data: Data::I32(y), dims: bd, .. },
-        ) => (0..n)
-            .map(|i| {
-                let out_idx = unravel(i, &dims);
-                cmp_i(x[bcast_index(&out_idx, ad)], y[bcast_index(&out_idx, bd)]) as i32
-            })
-            .collect(),
-        _ => return err("comparison operands must share a backing type"),
-    };
-    Ok(array(PrimitiveType::Pred, dims, Data::I32(data)))
+static COMPILES: AtomicU64 = AtomicU64::new(0);
+static COMPILE_NS: AtomicU64 = AtomicU64::new(0);
+static EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+static EXECUTE_NS: AtomicU64 = AtomicU64::new(0);
+static INSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
+static FUSED_INSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
+static BYTES_REUSED: AtomicU64 = AtomicU64::new(0);
+static INTERP_EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative process-wide backend counters: the compile-vs-execute time
+/// split and the bytecode backend's work/savings breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShimTotals {
+    /// `compile` invocations.
+    pub compiles: u64,
+    /// Total nanoseconds spent inside `compile`.
+    pub compile_ns: u64,
+    /// `execute_b` invocations (either backend).
+    pub executions: u64,
+    /// Total nanoseconds spent inside `execute_b`.
+    pub execute_ns: u64,
+    /// Bytecode instructions executed.
+    pub instructions: u64,
+    /// Fused elementwise-loop instructions across compiled programs (static
+    /// count, incremented once per compile).
+    pub fused_instructions: u64,
+    /// Bytes served from the executables' buffer pools instead of fresh
+    /// allocations.
+    pub bytes_reused: u64,
+    /// Executions that ran on the interpreter (env override or bytecode
+    /// lowering fallback).
+    pub interp_executions: u64,
 }
 
-fn eval_select(pred: &Literal, t: &Literal, f: &Literal) -> Result<Literal> {
-    let p = pred.as_i32()?; // Pred and S32 are both i32-backed
-    let dims = t.dims()?.to_vec();
-    if pred.dims()? != dims.as_slice() || f.dims()? != dims.as_slice() {
-        return err("select operands must have equal shapes");
-    }
-    match (t, f) {
-        (
-            Literal::Array { data: Data::F32(x), ty, .. },
-            Literal::Array { data: Data::F32(y), .. },
-        ) => {
-            let data = (0..x.len()).map(|i| if p[i] != 0 { x[i] } else { y[i] }).collect();
-            Ok(array(*ty, dims, Data::F32(data)))
-        }
-        (
-            Literal::Array { data: Data::I32(x), ty, .. },
-            Literal::Array { data: Data::I32(y), .. },
-        ) => {
-            let data = (0..x.len()).map(|i| if p[i] != 0 { x[i] } else { y[i] }).collect();
-            Ok(array(*ty, dims, Data::I32(data)))
-        }
-        _ => err("select branches must share a backing type"),
+/// Snapshot the process-wide backend counters.
+pub fn shim_totals() -> ShimTotals {
+    ShimTotals {
+        compiles: COMPILES.load(Ordering::Relaxed),
+        compile_ns: COMPILE_NS.load(Ordering::Relaxed),
+        executions: EXECUTIONS.load(Ordering::Relaxed),
+        execute_ns: EXECUTE_NS.load(Ordering::Relaxed),
+        instructions: INSTRUCTIONS.load(Ordering::Relaxed),
+        fused_instructions: FUSED_INSTRUCTIONS.load(Ordering::Relaxed),
+        bytes_reused: BYTES_REUSED.load(Ordering::Relaxed),
+        interp_executions: INTERP_EXECUTIONS.load(Ordering::Relaxed),
     }
 }
 
-fn eval_matmul(a: &Literal, b: &Literal) -> Result<Literal> {
-    let (ad, bd) = (a.dims()?.to_vec(), b.dims()?.to_vec());
-    let (x, y) = (a.as_f32()?, b.as_f32()?);
-    if ad.len() < 2 || bd.len() < 2 {
-        return err(format!("matmul requires rank >= 2, got {ad:?} x {bd:?}"));
-    }
-    let (m, ka) = (ad[ad.len() - 2] as usize, ad[ad.len() - 1] as usize);
-    let (kb, n) = (bd[bd.len() - 2] as usize, bd[bd.len() - 1] as usize);
-    if ka != kb {
-        return err(format!("matmul inner dim mismatch: {ad:?} x {bd:?}"));
-    }
-    let a_batch = num_elems(&ad[..ad.len() - 2]);
-    let b_batch = num_elems(&bd[..bd.len() - 2]);
-    let (batch, out_prefix): (usize, Vec<i64>) = if ad.len() == bd.len()
-        && ad[..ad.len() - 2] == bd[..bd.len() - 2]
-    {
-        (a_batch, ad[..ad.len() - 2].to_vec())
-    } else if bd.len() == 2 {
-        // [.., m, k] @ [k, n]: the rhs is shared across lhs batches.
-        (a_batch, ad[..ad.len() - 2].to_vec())
-    } else if ad.len() == 2 {
-        (b_batch, bd[..bd.len() - 2].to_vec())
-    } else {
-        return err(format!("unsupported matmul batching: {ad:?} x {bd:?}"));
-    };
-    let mut out = vec![0f32; batch * m * n];
-    for bi in 0..batch {
-        let a_off = (if a_batch == 1 { 0 } else { bi }) * m * ka;
-        let b_off = (if b_batch == 1 { 0 } else { bi }) * ka * n;
-        for i in 0..m {
-            for kk in 0..ka {
-                let av = x[a_off + i * ka + kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &y[b_off + kk * n..b_off + kk * n + n];
-                let orow = &mut out[bi * m * n + i * n..bi * m * n + i * n + n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    }
-    let mut dims = out_prefix;
-    dims.push(m as i64);
-    dims.push(n as i64);
-    Ok(f32_array(dims, out))
+/// Per-executable backend statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Bytecode instructions in the program (0 for the interpreter).
+    pub instructions: u64,
+    /// Fused elementwise-loop instructions in the program.
+    pub fused_instructions: u64,
+    /// Completed executions of this executable.
+    pub executions: u64,
+    /// Bytes served from this executable's buffer pool instead of fresh
+    /// allocations, cumulative over executions.
+    pub bytes_reused: u64,
 }
 
-fn eval_transpose(a: &Literal, perm: &[i64]) -> Result<Literal> {
-    let dims = a.dims()?.to_vec();
-    if perm.len() != dims.len() {
-        return err(format!("transpose perm {perm:?} vs rank {}", dims.len()));
-    }
-    let out_dims: Vec<i64> = perm.iter().map(|&p| dims[p as usize]).collect();
-    let n = num_elems(&dims);
-    let out_dims2 = out_dims.clone();
-    let perm2 = perm.to_vec();
-    let map = move |out_flat: usize| -> usize {
-        let out_idx = unravel(out_flat, &out_dims2);
-        let mut in_idx = vec![0usize; dims.len()];
-        for (d, &p) in perm2.iter().enumerate() {
-            in_idx[p as usize] = out_idx[d];
-        }
-        ravel(&in_idx, &dims)
-    };
-    permute_literal(a, out_dims, n, map)
+// ---------------------------------------------------------------------------
+// PJRT stand-ins
+// ---------------------------------------------------------------------------
+
+/// CPU "device" handle (stateless).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+/// A device buffer: a shared host literal. Cloning, untupling and host
+/// round-trips are refcount bumps (the payload lives behind `Arc`s).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Arc<Literal>,
 }
 
-fn permute_literal(
-    a: &Literal,
-    out_dims: Vec<i64>,
-    out_n: usize,
-    map: impl Fn(usize) -> usize,
-) -> Result<Literal> {
-    match a {
-        Literal::Array { data: Data::F32(v), ty, .. } => {
-            let data = (0..out_n).map(|i| v[map(i)]).collect();
-            Ok(array(*ty, out_dims, Data::F32(data)))
-        }
-        Literal::Array { data: Data::I32(v), ty, .. } => {
-            let data = (0..out_n).map(|i| v[map(i)]).collect();
-            Ok(array(*ty, out_dims, Data::I32(data)))
-        }
-        Literal::Tuple(_) => err("cannot permute a tuple"),
-    }
+/// A compiled computation. `prog` is the bytecode program; when `None`
+/// (interp backend, or a graph the bytecode pipeline rejected) `execute_b`
+/// interprets the captured graph per execution.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    comp: XlaComputation,
+    prog: Option<Arc<bytecode::Program>>,
 }
 
-fn eval_broadcast(a: &Literal, sizes: &[i64]) -> Result<Literal> {
-    // XLA Broadcast: result dims = sizes ++ operand dims; operand tiled.
-    let in_dims = a.dims()?.to_vec();
-    let mut out_dims = sizes.to_vec();
-    out_dims.extend_from_slice(&in_dims);
-    let in_n = num_elems(&in_dims).max(1);
-    let out_n = num_elems(&out_dims);
-    permute_literal(a, out_dims, out_n, |i| i % in_n)
-}
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
 
-fn eval_broadcast_in_dim(a: &Literal, dims: &[i64], broadcast_dims: &[i64]) -> Result<Literal> {
-    let in_dims = a.dims()?.to_vec();
-    if broadcast_dims.len() != in_dims.len() {
-        return err("broadcast_in_dim: broadcast_dims must match operand rank");
+    pub fn platform_name(&self) -> String {
+        "shim-cpu".to_string()
     }
-    let out_dims = dims.to_vec();
-    let out_n = num_elems(&out_dims);
-    let in_dims2 = in_dims.clone();
-    let bdims = broadcast_dims.to_vec();
-    let map = move |out_flat: usize| -> usize {
-        let out_idx = unravel(out_flat, &out_dims);
-        let mut in_idx = vec![0usize; in_dims2.len()];
-        for (d, &od) in bdims.iter().enumerate() {
-            in_idx[d] = if in_dims2[d] == 1 { 0 } else { out_idx[od as usize] };
-        }
-        ravel(&in_idx, &in_dims2)
-    };
-    permute_literal(a, dims.to_vec(), out_n, map)
-}
 
-fn eval_concat(parts: &[&Literal], dim: i64) -> Result<Literal> {
-    let d = dim as usize;
-    let first_dims = parts[0].dims()?.to_vec();
-    if d >= first_dims.len() {
-        return err("concat dim out of range");
+    /// Compile with the backend selected by `XLA_SHIM_BACKEND` (default:
+    /// bytecode).
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        self.compile_with_backend(comp, env_backend())
     }
-    let mut out_dims = first_dims.clone();
-    out_dims[d] = 0;
-    for p in parts {
-        let pd = p.dims()?;
-        if pd.len() != first_dims.len() {
-            return err("concat rank mismatch");
+
+    /// Compile with an explicit backend (differential tests force both).
+    pub fn compile_with_backend(
+        &self,
+        comp: &XlaComputation,
+        backend: ShimBackend,
+    ) -> Result<PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        if comp.root >= comp.nodes.len() {
+            return err("computation root out of range");
         }
-        out_dims[d] += pd[d];
+        let prog = match backend {
+            ShimBackend::Interp => None,
+            // Lowering is best-effort: graphs outside the bytecode subset
+            // (nested tuples, type errors the interpreter reports at
+            // execute time, ...) retain interpreter semantics exactly.
+            ShimBackend::Bytecode => bytecode::compile(comp).ok().map(Arc::new),
+        };
+        if let Some(p) = &prog {
+            FUSED_INSTRUCTIONS.fetch_add(p.fused_instructions(), Ordering::Relaxed);
+        }
+        COMPILES.fetch_add(1, Ordering::Relaxed);
+        COMPILE_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(PjRtLoadedExecutable { comp: comp.clone(), prog })
     }
-    let outer: usize = first_dims[..d].iter().map(|&x| x as usize).product();
-    let inner: usize = first_dims[d + 1..].iter().map(|&x| x as usize).product();
-    let all_f32 = parts.iter().all(|p| matches!(p, Literal::Array { data: Data::F32(_), .. }));
-    if all_f32 {
-        let mut out: Vec<f32> = Vec::with_capacity(num_elems(&out_dims));
-        for o in 0..outer {
-            for p in parts {
-                let v = p.as_f32()?;
-                let pd = p.dims()?[d] as usize;
-                let start = o * pd * inner;
-                out.extend_from_slice(&v[start..start + pd * inner]);
-            }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return err(format!(
+                "buffer_from_host_buffer: {dims:?} needs {n} elements, got {}",
+                data.len()
+            ));
         }
-        Ok(array(parts[0].primitive_type()?, out_dims, Data::F32(out)))
-    } else {
-        let mut out: Vec<i32> = Vec::with_capacity(num_elems(&out_dims));
-        for o in 0..outer {
-            for p in parts {
-                let v = p.as_i32()?;
-                let pd = p.dims()?[d] as usize;
-                let start = o * pd * inner;
-                out.extend_from_slice(&v[start..start + pd * inner]);
-            }
-        }
-        Ok(array(parts[0].primitive_type()?, out_dims, Data::I32(out)))
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(PjRtBuffer { lit: Arc::new(Literal::vec1(data).reshape(&dims_i64)?) })
     }
 }
 
-fn eval_slice(a: &Literal, start: i64, stop: i64, dim: i64) -> Result<Literal> {
-    let dims = a.dims()?.to_vec();
-    let d = dim as usize;
-    if d >= dims.len() || start < 0 || stop > dims[d] || start > stop {
-        return err(format!("slice [{start},{stop}) on dim {dim} of {dims:?}"));
+impl PjRtBuffer {
+    /// Transfer to "host". Cheap: the returned literal shares the payload.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok((*self.lit).clone())
     }
-    let mut out_dims = dims.clone();
-    out_dims[d] = stop - start;
-    let inner: usize = dims[d + 1..].iter().map(|&x| x as usize).product();
-    let out_n = num_elems(&out_dims);
-    let size = (stop - start) as usize;
-    let in_d = dims[d] as usize;
-    let map = move |out_flat: usize| -> usize {
-        let block = size * inner;
-        let o = out_flat / block;
-        let rem = out_flat % block;
-        let i = rem / inner;
-        let inn = rem % inner;
-        (o * in_d + start as usize + i) * inner + inn
-    };
-    permute_literal(a, out_dims, out_n, map)
+
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        Ok(self.lit.shape())
+    }
 }
 
-fn eval_reduce(a: &Literal, kind: ReduceK, rdims: &[i64], keep_dims: bool) -> Result<Literal> {
-    let dims = a.dims()?.to_vec();
-    let reduce_set: Vec<bool> = {
-        let mut s = vec![false; dims.len()];
-        for &d in rdims {
-            if d as usize >= dims.len() {
-                return err("reduce dim out of range");
-            }
-            s[d as usize] = true;
-        }
-        s
-    };
-    let mut out_dims: Vec<i64> = Vec::new();
-    for (i, &d) in dims.iter().enumerate() {
-        if reduce_set[i] {
-            if keep_dims {
-                out_dims.push(1);
-            }
+impl PjRtLoadedExecutable {
+    /// Which backend this executable runs on.
+    pub fn backend_name(&self) -> &'static str {
+        if self.prog.is_some() {
+            "bytecode"
         } else {
-            out_dims.push(d);
+            "interp"
         }
     }
-    // Map each input index to its output slot.
-    let kept: Vec<usize> = (0..dims.len()).filter(|&i| !reduce_set[i]).collect();
-    let kept_dims: Vec<i64> = kept.iter().map(|&i| dims[i]).collect();
-    let out_n = num_elems(&kept_dims).max(1);
-    let in_n = num_elems(&dims);
-    let count = if out_n == 0 { 1 } else { in_n / out_n.max(1) };
-    match a {
-        Literal::Array { data: Data::F32(v), .. } => {
-            let init = match kind {
-                ReduceK::Sum | ReduceK::Mean => 0.0f32,
-                ReduceK::Max => f32::NEG_INFINITY,
-            };
-            let mut acc = vec![init; out_n];
-            for flat in 0..in_n {
-                let idx = unravel(flat, &dims);
-                let kidx: Vec<usize> = kept.iter().map(|&i| idx[i]).collect();
-                let o = ravel(&kidx, &kept_dims);
-                match kind {
-                    ReduceK::Sum | ReduceK::Mean => acc[o] += v[flat],
-                    ReduceK::Max => acc[o] = acc[o].max(v[flat]),
+
+    /// Backend statistics for this executable.
+    pub fn backend_stats(&self) -> ExecStats {
+        match &self.prog {
+            Some(p) => p.stats(),
+            None => ExecStats::default(),
+        }
+    }
+
+    /// Execute over device buffers. Returns one replica holding one buffer
+    /// per tuple leaf (tuples are "untupled", matching PJRT CPU behaviour).
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let t0 = Instant::now();
+        let arg_lits: Vec<&Literal> = args.iter().map(|b| &*b.lit).collect();
+        let leaves: Vec<Literal> = match &self.prog {
+            Some(p) => {
+                let out = p.execute(&arg_lits).map_err(|e| {
+                    Error::new(format!("'{}' (bytecode): {}", self.comp.name, e.msg))
+                })?;
+                INSTRUCTIONS.fetch_add(p.instruction_count(), Ordering::Relaxed);
+                out
+            }
+            None => {
+                INTERP_EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+                match interp::eval_graph(&self.comp, &arg_lits)? {
+                    Literal::Tuple(parts) => parts,
+                    lit @ Literal::Array { .. } => vec![lit],
                 }
             }
-            if kind == ReduceK::Mean {
-                let c = count.max(1) as f32;
-                for x in &mut acc {
-                    *x /= c;
-                }
-            }
-            Ok(f32_array(out_dims, acc))
-        }
-        Literal::Array { data: Data::I32(v), ty, .. } => {
-            let init = match kind {
-                ReduceK::Sum => 0i32,
-                ReduceK::Max => i32::MIN,
-                ReduceK::Mean => return err("reduce_mean requires f32"),
-            };
-            let mut acc = vec![init; out_n];
-            for flat in 0..in_n {
-                let idx = unravel(flat, &dims);
-                let kidx: Vec<usize> = kept.iter().map(|&i| idx[i]).collect();
-                let o = ravel(&kidx, &kept_dims);
-                match kind {
-                    ReduceK::Sum => acc[o] = acc[o].wrapping_add(v[flat]),
-                    ReduceK::Max => acc[o] = acc[o].max(v[flat]),
-                    ReduceK::Mean => unreachable!(),
-                }
-            }
-            Ok(array(*ty, out_dims, Data::I32(acc)))
-        }
-        Literal::Tuple(_) => err("reduce on tuple"),
+        };
+        EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+        EXECUTE_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(vec![leaves
+            .into_iter()
+            .map(|lit| PjRtBuffer { lit: Arc::new(lit) })
+            .collect()])
     }
 }
-
-fn eval_softmax(a: &Literal, dim: i64) -> Result<Literal> {
-    let dims = a.dims()?.to_vec();
-    let v = a.as_f32()?;
-    let d = dim as usize;
-    if d >= dims.len() {
-        return err("softmax dim out of range");
-    }
-    let n = dims[d] as usize;
-    let inner: usize = dims[d + 1..].iter().map(|&x| x as usize).product();
-    let outer: usize = dims[..d].iter().map(|&x| x as usize).product();
-    let mut out = vec![0f32; v.len()];
-    for o in 0..outer {
-        for inn in 0..inner {
-            let at = |k: usize| (o * n + k) * inner + inn;
-            let mut mx = f32::NEG_INFINITY;
-            for k in 0..n {
-                mx = mx.max(v[at(k)]);
-            }
-            let mut sum = 0f32;
-            for k in 0..n {
-                let e = (v[at(k)] - mx).exp();
-                out[at(k)] = e;
-                sum += e;
-            }
-            for k in 0..n {
-                out[at(k)] /= sum;
-            }
-        }
-    }
-    Ok(f32_array(dims, out))
-}
-
-fn eval_take(data: &Literal, indices: &Literal, dim: i64) -> Result<Literal> {
-    let ddims = data.dims()?.to_vec();
-    let idims = indices.dims()?.to_vec();
-    let idx = indices.as_i32()?;
-    let d = dim as usize;
-    if d >= ddims.len() {
-        return err("take dim out of range");
-    }
-    let axis_len = ddims[d] as usize;
-    let inner: usize = ddims[d + 1..].iter().map(|&x| x as usize).product();
-    let mut out_dims: Vec<i64> = ddims[..d].to_vec();
-    out_dims.extend_from_slice(&idims);
-    out_dims.extend_from_slice(&ddims[d + 1..]);
-    let out_n = num_elems(&out_dims);
-    let n_idx = idx.len().max(1);
-    let idx_owned: Vec<usize> = idx
-        .iter()
-        .map(|&i| (i.max(0) as usize).min(axis_len.saturating_sub(1)))
-        .collect();
-    let map = move |out_flat: usize| -> usize {
-        let inn = out_flat % inner;
-        let rest = out_flat / inner;
-        let j = rest % n_idx;
-        let o = rest / n_idx;
-        (o * axis_len + idx_owned[j]) * inner + inn
-    };
-    permute_literal(data, out_dims, out_n, map)
-}
-
-fn eval_convert(a: &Literal, ty: PrimitiveType) -> Result<Literal> {
-    let dims = a.dims()?.to_vec();
-    let src = a.primitive_type()?;
-    if src == ty {
-        return Ok(a.clone());
-    }
-    match (a, ty) {
-        (Literal::Array { data: Data::F32(v), .. }, PrimitiveType::S32) => Ok(array(
-            PrimitiveType::S32,
-            dims,
-            Data::I32(v.iter().map(|&x| x.trunc() as i32).collect()),
-        )),
-        (Literal::Array { data: Data::I32(v), .. }, PrimitiveType::S32) => {
-            // Pred -> S32 (0/1 values already i32-backed).
-            Ok(array(PrimitiveType::S32, dims, Data::I32(v.clone())))
-        }
-        (Literal::Array { data: Data::I32(v), .. }, PrimitiveType::F32) => Ok(f32_array(
-            dims,
-            v.iter().map(|&x| x as f32).collect(),
-        )),
-        (Literal::Array { data: Data::F32(v), .. }, PrimitiveType::Pred) => Ok(array(
-            PrimitiveType::Pred,
-            dims,
-            Data::I32(v.iter().map(|&x| (x != 0.0) as i32).collect()),
-        )),
-        (Literal::Array { data: Data::I32(v), .. }, PrimitiveType::Pred) => Ok(array(
-            PrimitiveType::Pred,
-            dims,
-            Data::I32(v.iter().map(|&x| (x != 0) as i32).collect()),
-        )),
-        _ => err(format!("unsupported convert {src:?} -> {ty:?}")),
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Tests
-// ---------------------------------------------------------------------------
 
 #[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn run1(b: &XlaBuilder, root: &XlaOp, args: &[&PjRtBuffer]) -> Literal {
-        let comp = b.build(root).unwrap();
-        let exe = PjRtClient.compile(&comp).unwrap();
-        let mut out = exe.execute_b(args).unwrap();
-        out.remove(0).remove(0).to_literal_sync().unwrap()
-    }
-
-    fn buf(data: &[f32], dims: &[usize]) -> PjRtBuffer {
-        PjRtClient.buffer_from_host_buffer::<f32>(data, dims, None).unwrap()
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
-        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
-        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
-        assert!(l.to_vec::<i32>().is_err());
-        assert!(l.reshape(&[3]).is_err());
-    }
-
-    #[test]
-    fn add_and_compare() {
-        let b = XlaBuilder::new("t");
-        let p = b.parameter(0, ElementType::F32, &[3], "x").unwrap();
-        let q = b.parameter(1, ElementType::F32, &[3], "y").unwrap();
-        let s = p.add_(&q).unwrap();
-        let out = run1(&b, &s, &[&buf(&[1.0, 2.0, 3.0], &[3]), &buf(&[4.0, 5.0, 6.0], &[3])]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![5.0, 7.0, 9.0]);
-
-        let g = p.gt(&q).unwrap().convert(PrimitiveType::S32).unwrap();
-        let out = run1(&b, &g, &[&buf(&[9.0, 2.0, 3.0], &[3]), &buf(&[4.0, 5.0, 3.0], &[3])]);
-        assert_eq!(out.to_vec::<i32>().unwrap(), vec![1, 0, 0]);
-    }
-
-    #[test]
-    fn matmul_2d_and_batched() {
-        let b = XlaBuilder::new("mm");
-        let p = b.parameter(0, ElementType::F32, &[2, 2], "a").unwrap();
-        let q = b.parameter(1, ElementType::F32, &[2, 2], "b").unwrap();
-        let m = p.matmul(&q).unwrap();
-        let out = run1(
-            &b,
-            &m,
-            &[&buf(&[1.0, 2.0, 3.0, 4.0], &[2, 2]), &buf(&[1.0, 1.0, 1.0, 1.0], &[2, 2])],
-        );
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0, 3.0, 7.0, 7.0]);
-
-        let b2 = XlaBuilder::new("mmb");
-        let p = b2.parameter(0, ElementType::F32, &[2, 1, 2], "a").unwrap();
-        let q = b2.parameter(1, ElementType::F32, &[2, 2, 1], "b").unwrap();
-        let m = p.matmul(&q).unwrap();
-        let out = run1(
-            &b2,
-            &m,
-            &[
-                &buf(&[1.0, 2.0, 3.0, 4.0], &[2, 1, 2]),
-                &buf(&[1.0, 1.0, 2.0, 2.0], &[2, 2, 1]),
-            ],
-        );
-        // batch 0: [1,2] @ [[1],[1]] = 3; batch 1: [3,4] @ [[2],[2]] = 14
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0, 14.0]);
-    }
-
-    #[test]
-    fn broadcast_prepends_major_dims() {
-        let b = XlaBuilder::new("bc");
-        let one = b.c0(1f32).unwrap();
-        let v = one.broadcast(&[4]).unwrap();
-        let out = run1(&b, &v, &[]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![1.0; 4]);
-        assert_eq!(out.array_shape().unwrap().dims(), &[4]);
-    }
-
-    #[test]
-    fn reduce_and_softmax() {
-        let b = XlaBuilder::new("r");
-        let p = b.parameter(0, ElementType::F32, &[2, 3], "x").unwrap();
-        let s = p.reduce_sum(&[1], false).unwrap();
-        let out = run1(&b, &s, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
-
-        let m = p.reduce_max(&[0], true).unwrap();
-        let out = run1(&b, &m, &[&buf(&[1.0, 5.0, 3.0, 4.0, 2.0, 6.0], &[2, 3])]);
-        assert_eq!(out.array_shape().unwrap().dims(), &[1, 3]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![4.0, 5.0, 6.0]);
-
-        let sm = p.softmax(1).unwrap();
-        let out = run1(&b, &sm, &[&buf(&[0.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[2, 3])]);
-        for v in out.to_vec::<f32>().unwrap() {
-            assert!((v - 1.0 / 3.0).abs() < 1e-6);
-        }
-    }
-
-    #[test]
-    fn tuple_untuples_on_execute() {
-        let b = XlaBuilder::new("tp");
-        let p = b.parameter(0, ElementType::F32, &[2], "x").unwrap();
-        let d = p.add_(&p).unwrap();
-        let s = p.mul_(&p).unwrap();
-        let root = b.tuple(&[d, s]).unwrap();
-        let comp = b.build(&root).unwrap();
-        let exe = PjRtClient.compile(&comp).unwrap();
-        let out = exe.execute_b(&[&buf(&[3.0, 4.0], &[2])]).unwrap();
-        assert_eq!(out[0].len(), 2);
-        assert_eq!(out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![6.0, 8.0]);
-        assert_eq!(out[0][1].to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![9.0, 16.0]);
-    }
-
-    #[test]
-    fn take_and_transpose() {
-        let b = XlaBuilder::new("tk");
-        let p = b.parameter(0, ElementType::F32, &[3, 2], "x").unwrap();
-        let idx = PjRtClient
-            .buffer_from_host_buffer::<i32>(&[2, 0], &[2], None)
-            .unwrap();
-        let i = b.parameter(1, ElementType::S32, &[2], "i").unwrap();
-        let t = p.take(&i, 0).unwrap();
-        let out = run1(&b, &t, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]), &idx]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![5.0, 6.0, 1.0, 2.0]);
-
-        let tr = p.transpose(&[1, 0]).unwrap();
-        let out = run1(&b, &tr, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]), &idx]);
-        assert_eq!(out.array_shape().unwrap().dims(), &[2, 3]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
-    }
-
-    #[test]
-    fn slice_and_concat() {
-        let b = XlaBuilder::new("sc");
-        let p = b.parameter(0, ElementType::F32, &[2, 3], "x").unwrap();
-        let s = p.slice_in_dim1(1, 3, 1).unwrap();
-        let out = run1(&b, &s, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]);
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2.0, 3.0, 5.0, 6.0]);
-
-        let c = s.concat_in_dim(&[&s], 1).unwrap();
-        let out = run1(&b, &c, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]);
-        assert_eq!(out.array_shape().unwrap().dims(), &[2, 4]);
-        assert_eq!(
-            out.to_vec::<f32>().unwrap(),
-            vec![2.0, 3.0, 2.0, 3.0, 5.0, 6.0, 5.0, 6.0]
-        );
-    }
-
-    #[test]
-    fn rng_in_bounds() {
-        let b = XlaBuilder::new("rng");
-        let lo = b.c0(0f32).unwrap();
-        let hi = b.c0(1f32).unwrap();
-        let sh = ArrayShape::new::<f32>(vec![64]);
-        let r = XlaOp::rng_uniform(&lo, &hi, &sh).unwrap();
-        let out = run1(&b, &r, &[]);
-        assert!(out.to_vec::<f32>().unwrap().iter().all(|&v| (0.0..1.0).contains(&v)));
-    }
-
-    #[test]
-    fn hlo_text_is_rejected() {
-        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
-    }
-
-    #[test]
-    fn parameter_shape_mismatch_errors() {
-        let b = XlaBuilder::new("pm");
-        let p = b.parameter(0, ElementType::F32, &[3], "x").unwrap();
-        let comp = b.build(&p).unwrap();
-        let exe = PjRtClient.compile(&comp).unwrap();
-        assert!(exe.execute_b(&[&buf(&[1.0, 2.0], &[2])]).is_err());
-    }
-}
+mod tests;

@@ -1,0 +1,329 @@
+use super::*;
+
+fn run1(b: &XlaBuilder, root: &XlaOp, args: &[&PjRtBuffer]) -> Literal {
+    let comp = b.build(root).unwrap();
+    let exe = PjRtClient.compile(&comp).unwrap();
+    let mut out = exe.execute_b(args).unwrap();
+    out.remove(0).remove(0).to_literal_sync().unwrap()
+}
+
+fn run_on(backend: ShimBackend, comp: &XlaComputation, args: &[&PjRtBuffer]) -> Vec<Literal> {
+    let exe = PjRtClient.compile_with_backend(comp, backend).unwrap();
+    let mut out = exe.execute_b(args).unwrap();
+    out.remove(0)
+        .into_iter()
+        .map(|b| b.to_literal_sync().unwrap())
+        .collect()
+}
+
+fn buf(data: &[f32], dims: &[usize]) -> PjRtBuffer {
+    PjRtClient.buffer_from_host_buffer::<f32>(data, dims, None).unwrap()
+}
+
+/// Tests that draw from the process-global RNG stream serialize on this so
+/// parallel test threads cannot interleave draws.
+static RNG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Bitwise equality of literals (NaN-safe, unlike `PartialEq` on f32).
+fn assert_bits_eq(a: &Literal, b: &Literal) {
+    assert_eq!(a.dims().unwrap(), b.dims().unwrap());
+    assert_eq!(a.primitive_type().unwrap(), b.primitive_type().unwrap());
+    match (a, b) {
+        (
+            Literal::Array { data: Data::F32(x), .. },
+            Literal::Array { data: Data::F32(y), .. },
+        ) => {
+            let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb);
+        }
+        (
+            Literal::Array { data: Data::I32(x), .. },
+            Literal::Array { data: Data::I32(y), .. },
+        ) => assert_eq!(**x, **y),
+        _ => panic!("backing mismatch"),
+    }
+}
+
+#[test]
+fn literal_roundtrip() {
+    let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+    assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+    assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    assert!(l.to_vec::<i32>().is_err());
+    assert!(l.reshape(&[3]).is_err());
+}
+
+#[test]
+fn add_and_compare() {
+    let b = XlaBuilder::new("t");
+    let p = b.parameter(0, ElementType::F32, &[3], "x").unwrap();
+    let q = b.parameter(1, ElementType::F32, &[3], "y").unwrap();
+    let s = p.add_(&q).unwrap();
+    let out = run1(&b, &s, &[&buf(&[1.0, 2.0, 3.0], &[3]), &buf(&[4.0, 5.0, 6.0], &[3])]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![5.0, 7.0, 9.0]);
+
+    let g = p.gt(&q).unwrap().convert(PrimitiveType::S32).unwrap();
+    let out = run1(&b, &g, &[&buf(&[9.0, 2.0, 3.0], &[3]), &buf(&[4.0, 5.0, 3.0], &[3])]);
+    assert_eq!(out.to_vec::<i32>().unwrap(), vec![1, 0, 0]);
+}
+
+#[test]
+fn matmul_2d_and_batched() {
+    let b = XlaBuilder::new("mm");
+    let p = b.parameter(0, ElementType::F32, &[2, 2], "a").unwrap();
+    let q = b.parameter(1, ElementType::F32, &[2, 2], "b").unwrap();
+    let m = p.matmul(&q).unwrap();
+    let out = run1(
+        &b,
+        &m,
+        &[&buf(&[1.0, 2.0, 3.0, 4.0], &[2, 2]), &buf(&[1.0, 1.0, 1.0, 1.0], &[2, 2])],
+    );
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0, 3.0, 7.0, 7.0]);
+
+    let b2 = XlaBuilder::new("mmb");
+    let p = b2.parameter(0, ElementType::F32, &[2, 1, 2], "a").unwrap();
+    let q = b2.parameter(1, ElementType::F32, &[2, 2, 1], "b").unwrap();
+    let m = p.matmul(&q).unwrap();
+    let out = run1(
+        &b2,
+        &m,
+        &[
+            &buf(&[1.0, 2.0, 3.0, 4.0], &[2, 1, 2]),
+            &buf(&[1.0, 1.0, 2.0, 2.0], &[2, 2, 1]),
+        ],
+    );
+    // batch 0: [1,2] @ [[1],[1]] = 3; batch 1: [3,4] @ [[2],[2]] = 14
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0, 14.0]);
+}
+
+#[test]
+fn broadcast_prepends_major_dims() {
+    let b = XlaBuilder::new("bc");
+    let one = b.c0(1f32).unwrap();
+    let v = one.broadcast(&[4]).unwrap();
+    let out = run1(&b, &v, &[]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![1.0; 4]);
+    assert_eq!(out.array_shape().unwrap().dims(), &[4]);
+}
+
+#[test]
+fn reduce_and_softmax() {
+    let b = XlaBuilder::new("r");
+    let p = b.parameter(0, ElementType::F32, &[2, 3], "x").unwrap();
+    let s = p.reduce_sum(&[1], false).unwrap();
+    let out = run1(&b, &s, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+
+    let m = p.reduce_max(&[0], true).unwrap();
+    let out = run1(&b, &m, &[&buf(&[1.0, 5.0, 3.0, 4.0, 2.0, 6.0], &[2, 3])]);
+    assert_eq!(out.array_shape().unwrap().dims(), &[1, 3]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![4.0, 5.0, 6.0]);
+
+    let sm = p.softmax(1).unwrap();
+    let out = run1(&b, &sm, &[&buf(&[0.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[2, 3])]);
+    for v in out.to_vec::<f32>().unwrap() {
+        assert!((v - 1.0 / 3.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn tuple_untuples_on_execute() {
+    let b = XlaBuilder::new("tp");
+    let p = b.parameter(0, ElementType::F32, &[2], "x").unwrap();
+    let d = p.add_(&p).unwrap();
+    let s = p.mul_(&p).unwrap();
+    let root = b.tuple(&[d, s]).unwrap();
+    let comp = b.build(&root).unwrap();
+    let exe = PjRtClient.compile(&comp).unwrap();
+    let out = exe.execute_b(&[&buf(&[3.0, 4.0], &[2])]).unwrap();
+    assert_eq!(out[0].len(), 2);
+    assert_eq!(out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![6.0, 8.0]);
+    assert_eq!(out[0][1].to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![9.0, 16.0]);
+}
+
+#[test]
+fn take_and_transpose() {
+    let b = XlaBuilder::new("tk");
+    let p = b.parameter(0, ElementType::F32, &[3, 2], "x").unwrap();
+    let idx = PjRtClient
+        .buffer_from_host_buffer::<i32>(&[2, 0], &[2], None)
+        .unwrap();
+    let i = b.parameter(1, ElementType::S32, &[2], "i").unwrap();
+    let t = p.take(&i, 0).unwrap();
+    let out = run1(&b, &t, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]), &idx]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![5.0, 6.0, 1.0, 2.0]);
+
+    let tr = p.transpose(&[1, 0]).unwrap();
+    let out = run1(&b, &tr, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]), &idx]);
+    assert_eq!(out.array_shape().unwrap().dims(), &[2, 3]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+}
+
+#[test]
+fn slice_and_concat() {
+    let b = XlaBuilder::new("sc");
+    let p = b.parameter(0, ElementType::F32, &[2, 3], "x").unwrap();
+    let s = p.slice_in_dim1(1, 3, 1).unwrap();
+    let out = run1(&b, &s, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]);
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![2.0, 3.0, 5.0, 6.0]);
+
+    let c = s.concat_in_dim(&[&s], 1).unwrap();
+    let out = run1(&b, &c, &[&buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]);
+    assert_eq!(out.array_shape().unwrap().dims(), &[2, 4]);
+    assert_eq!(
+        out.to_vec::<f32>().unwrap(),
+        vec![2.0, 3.0, 2.0, 3.0, 5.0, 6.0, 5.0, 6.0]
+    );
+}
+
+#[test]
+fn rng_in_bounds() {
+    let _g = RNG_LOCK.lock().unwrap();
+    let b = XlaBuilder::new("rng");
+    let lo = b.c0(0f32).unwrap();
+    let hi = b.c0(1f32).unwrap();
+    let sh = ArrayShape::new::<f32>(vec![64]);
+    let r = XlaOp::rng_uniform(&lo, &hi, &sh).unwrap();
+    let out = run1(&b, &r, &[]);
+    assert!(out.to_vec::<f32>().unwrap().iter().all(|&v| (0.0..1.0).contains(&v)));
+}
+
+#[test]
+fn hlo_text_is_rejected() {
+    assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+}
+
+#[test]
+fn parameter_shape_mismatch_errors_on_both_backends() {
+    let b = XlaBuilder::new("pm");
+    let p = b.parameter(0, ElementType::F32, &[3], "x").unwrap();
+    let comp = b.build(&p).unwrap();
+    for backend in [ShimBackend::Interp, ShimBackend::Bytecode] {
+        let exe = PjRtClient.compile_with_backend(&comp, backend).unwrap();
+        assert!(exe.execute_b(&[&buf(&[1.0, 2.0], &[2])]).is_err());
+        assert!(exe.execute_b(&[]).is_err());
+    }
+}
+
+#[test]
+fn backends_agree_on_fused_chain() {
+    // A chain with fusable elementwise nodes, a scalar broadcast, a
+    // compare/select, and non-fusable anchors (matmul, reduce).
+    let b = XlaBuilder::new("chain");
+    let x = b.parameter(0, ElementType::F32, &[4, 4], "x").unwrap();
+    let w = b.parameter(1, ElementType::F32, &[4, 4], "w").unwrap();
+    let h = x.matmul(&w).unwrap();
+    let c = b.c0(0.5f32).unwrap();
+    let t = h.mul_(&c).unwrap().tanh().unwrap().exp().unwrap();
+    let z = h.zeros_like().unwrap();
+    let g = t.gt(&z).unwrap();
+    let sel = g.select(&t, &z).unwrap();
+    let s = sel.reduce_sum(&[1], false).unwrap();
+    let root = b.tuple(&[t, s]).unwrap();
+    let comp = b.build(&root).unwrap();
+    let xs: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.3).collect();
+    let ws: Vec<f32> = (0..16).map(|i| ((i * 7 % 5) as f32 - 2.0) * 0.25).collect();
+    let args = [&buf(&xs, &[4, 4]), &buf(&ws, &[4, 4])];
+    let a = run_on(ShimBackend::Interp, &comp, &args);
+    let c = run_on(ShimBackend::Bytecode, &comp, &args);
+    assert_eq!(a.len(), c.len());
+    for (l, r) in a.iter().zip(c.iter()) {
+        assert_bits_eq(l, r);
+    }
+}
+
+#[test]
+fn backends_align_rng_streams_including_dead_nodes() {
+    let _g = RNG_LOCK.lock().unwrap();
+    let b = XlaBuilder::new("rngalign");
+    let lo = b.c0(-1f32).unwrap();
+    let hi = b.c0(1f32).unwrap();
+    let sh = ArrayShape::new::<f32>(vec![8]);
+    let live = XlaOp::rng_uniform(&lo, &hi, &sh).unwrap();
+    // Dead RNG node: unreachable from the root but still consumes draws.
+    let _dead = XlaOp::rng_normal(&lo, &hi, &sh).unwrap();
+    let root = live.add_(&live).unwrap();
+    let comp = b.build(&root).unwrap();
+
+    let seed = 0xDEAD_BEEF_0042_u64;
+    set_rng_state(seed);
+    let a = run_on(ShimBackend::Interp, &comp, &[]);
+    let state_interp = rng_state();
+    set_rng_state(seed);
+    let c = run_on(ShimBackend::Bytecode, &comp, &[]);
+    let state_bytecode = rng_state();
+    assert_bits_eq(&a[0], &c[0]);
+    // Identical number of draws -> identical post-execution stream state.
+    assert_eq!(state_interp, state_bytecode);
+}
+
+#[test]
+fn bytecode_fuses_and_reuses_buffers() {
+    let b = XlaBuilder::new("fuse");
+    let x = b.parameter(0, ElementType::F32, &[64], "x").unwrap();
+    let y = x.tanh().unwrap().neg().unwrap().exp().unwrap();
+    let z = y.add_(&x).unwrap().logistic().unwrap();
+    // Anchor with a non-fusable op so the chain materializes.
+    let s = z.reduce_sum(&[0], false).unwrap();
+    let comp = b.build(&s).unwrap();
+    let exe = PjRtClient.compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
+    assert_eq!(exe.backend_name(), "bytecode");
+    let st = exe.backend_stats();
+    assert!(st.instructions >= 2, "expected a lowered program, got {st:?}");
+    assert!(st.fused_instructions >= 1, "expected fusion, got {st:?}");
+    let data: Vec<f32> = (0..64).map(|i| (i as f32) * 0.01 - 0.3).collect();
+    let args = [&buf(&data, &[64])];
+    let _ = exe.execute_b(&args).unwrap();
+    let _ = exe.execute_b(&args).unwrap();
+    let st = exe.backend_stats();
+    assert_eq!(st.executions, 2);
+    // The second run recycles the first run's intermediate buffers.
+    assert!(st.bytes_reused > 0, "expected buffer reuse, got {st:?}");
+}
+
+#[test]
+fn reshape_is_a_register_alias() {
+    let b = XlaBuilder::new("alias");
+    let x = b.parameter(0, ElementType::F32, &[2, 3], "x").unwrap();
+    let r = x.reshape(&[3, 2]).unwrap();
+    let t = r.transpose(&[1, 0]).unwrap();
+    let comp = b.build(&t).unwrap();
+    let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+    let args = [&buf(&data, &[2, 3])];
+    let a = run_on(ShimBackend::Interp, &comp, &args);
+    let c = run_on(ShimBackend::Bytecode, &comp, &args);
+    assert_bits_eq(&a[0], &c[0]);
+    assert_eq!(c[0].array_shape().unwrap().dims(), &[2, 3]);
+}
+
+#[test]
+fn env_escape_hatch_selects_interpreter() {
+    // Do not mutate the process env (tests run in parallel); exercise the
+    // explicit-backend path that the env knob maps onto.
+    let b = XlaBuilder::new("env");
+    let x = b.parameter(0, ElementType::F32, &[2], "x").unwrap();
+    let y = x.add_(&x).unwrap();
+    let comp = b.build(&y).unwrap();
+    let exe = PjRtClient.compile_with_backend(&comp, ShimBackend::Interp).unwrap();
+    assert_eq!(exe.backend_name(), "interp");
+    assert_eq!(exe.backend_stats().instructions, 0);
+    let out = exe.execute_b(&[&buf(&[1.0, 2.0], &[2])]).unwrap();
+    assert_eq!(out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![2.0, 4.0]);
+}
+
+#[test]
+fn shim_totals_accumulate() {
+    let before = shim_totals();
+    let b = XlaBuilder::new("totals");
+    let x = b.parameter(0, ElementType::F32, &[8], "x").unwrap();
+    let y = x.tanh().unwrap().neg().unwrap();
+    let comp = b.build(&y).unwrap();
+    let exe = PjRtClient.compile(&comp).unwrap();
+    let data = [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+    let _ = exe.execute_b(&[&buf(&data, &[8])]).unwrap();
+    let after = shim_totals();
+    assert!(after.compiles > before.compiles);
+    assert!(after.executions > before.executions);
+    assert!(after.execute_ns >= before.execute_ns);
+}
