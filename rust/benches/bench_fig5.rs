@@ -64,6 +64,19 @@ fn main() {
                                 ("shim_compile_ms_delta", Json::Num(bd.shim_compile_ms)),
                                 ("shim_execute_ms_delta", Json::Num(bd.shim_execute_ms)),
                                 ("mailbox_dropped", num(st.mailbox_dropped)),
+                                // Speculation subsystem: plan-cache traffic,
+                                // compile invocations skipped, controller
+                                // deferrals and re-entry latency
+                                // (trace-stable → first skeleton step).
+                                // `_delta` fields are measured-window deltas
+                                // like the shim counters above; the average
+                                // is over the whole run.
+                                ("plan_cache_hits_delta", num(bd.plan_cache_hits)),
+                                ("plan_cache_misses_delta", num(bd.plan_cache_misses)),
+                                ("compiles_skipped_delta", num(bd.compiles_skipped)),
+                                ("reentry_deferred_delta", num(bd.reentry_deferred)),
+                                ("reentry_ms_delta", Json::Num(bd.reentry_ms)),
+                                ("reentry_avg_ms", Json::Num(st.reentry_avg_ms())),
                             ]),
                         ));
                     }

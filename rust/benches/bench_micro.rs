@@ -12,9 +12,11 @@ use terra::eager::EagerExecutor;
 use terra::ops::{OpDef, OpKind};
 use terra::runner::Mailbox;
 use terra::runtime::{ArtifactStore, Client, ExecCache, RtValue};
+use terra::speculate::graph_signature;
 use terra::tensor::{HostTensor, TensorType};
 use terra::tracegraph::{NodeId, TraceGraph};
-use terra::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+use terra::trace::{FeedKind, Location, Trace, TraceItem, ValueId, VarId, ValueRef};
+use std::collections::HashMap;
 use std::time::Duration;
 
 fn empty_store() -> Arc<ArtifactStore> {
@@ -151,7 +153,41 @@ fn main() {
         push("opt pipeline node reduction", reduction as f64, "nodes", &mut json);
     }
 
-    // 7. Process-wide executable-cache behaviour across the whole bench run.
+    // 7. Graph-signature hashing (speculation subsystem): computed once per
+    // stable trace to decide plan-cache membership, so it sits on the
+    // tracing→co-execution transition path and must stay far cheaper than
+    // the plan pipeline it short-circuits.
+    {
+        let vars: HashMap<VarId, TensorType> = HashMap::new();
+        for n in [64usize, 512] {
+            let trace = synthetic_trace(n);
+            let mut g = TraceGraph::new();
+            g.merge(&trace).unwrap();
+            let (mean, p50, p99) = time_micro(
+                || {
+                    let _ = std::hint::black_box(graph_signature(&g, &vars));
+                },
+                2000,
+            );
+            push(&format!("graph signature {n}-node (mean)"), mean / 1000.0, "us", &mut json);
+            push(&format!("graph signature {n}-node (p50)"), p50 as f64 / 1000.0, "us", &mut json);
+            push(&format!("graph signature {n}-node (p99)"), p99 as f64 / 1000.0, "us", &mut json);
+        }
+        // Branchy variant: the redundant trace produces a wider graph with
+        // more variants per node.
+        let trace = redundant_trace(256);
+        let mut g = TraceGraph::new();
+        g.merge(&trace).unwrap();
+        let (mean, _, _) = time_micro(
+            || {
+                let _ = std::hint::black_box(graph_signature(&g, &vars));
+            },
+            2000,
+        );
+        push("graph signature 256-op redundant (mean)", mean / 1000.0, "us", &mut json);
+    }
+
+    // 8. Process-wide executable-cache behaviour across the whole bench run.
     {
         let global = ExecCache::global();
         push("exec cache hits (process)", global.hits() as f64, "count", &mut json);
@@ -159,7 +195,7 @@ fn main() {
         push("xla compiles (process)", client.compile_count() as f64, "count", &mut json);
     }
 
-    // 8. Shim backend split: isolate pure execute cost of the vendored XLA
+    // 9. Shim backend split: isolate pure execute cost of the vendored XLA
     // shim on both backends (interp oracle vs bytecode), over the shapes
     // that dominate the bench_fig5 workloads — elementwise chains (small
     // and large) and matmuls — plus the compile-vs-execute time split.

@@ -6,6 +6,7 @@
 
 use crate::config::json::Json;
 use crate::error::{Result, TerraError};
+use crate::speculate::{ReentryPolicy, SpeculateConfig};
 
 /// Which execution engine runs the program.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +66,11 @@ pub struct RunConfig {
     /// 0 = off, 1 = dead-code elimination only, >=2 = full pipeline
     /// (const-fold, algebraic, CSE, DCE to a fixpoint).
     pub opt_level: u8,
+    /// Speculation subsystem settings (plan cache + re-entry policy); JSON
+    /// key `speculate` (bool, or object `{"plan_cache": bool, "reentry":
+    /// "eager"|"adaptive"|K}`), CLI `--plan-cache` / `--reentry-policy`,
+    /// env `TERRA_SPECULATE`.
+    pub speculate: SpeculateConfig,
 }
 
 /// Default optimization level: `TERRA_OPT_LEVEL` env override, else the full
@@ -90,6 +96,7 @@ impl Default for RunConfig {
             artifacts_dir: std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             breakdown: false,
             opt_level: default_opt_level(),
+            speculate: SpeculateConfig::from_env(),
         }
     }
 }
@@ -133,6 +140,42 @@ impl RunConfig {
         if let Some(v) = json.get("opt_level").and_then(Json::as_usize) {
             self.opt_level = v.min(u8::MAX as usize) as u8;
         }
+        if let Some(s) = json.get("speculate") {
+            if let Some(on) = s.as_bool() {
+                self.speculate =
+                    if on { SpeculateConfig::default() } else { SpeculateConfig::disabled() };
+            } else if let Some(name) = s.as_str() {
+                // Same spellings as the TERRA_SPECULATE env knob; a string
+                // here must not be silently dropped.
+                self.speculate = SpeculateConfig::parse_preset(name)?;
+            } else if !matches!(s, Json::Obj(_)) {
+                return Err(TerraError::Config(
+                    "speculate must be a bool, a preset string (on|off|nocache|eager) \
+                     or an object"
+                        .into(),
+                ));
+            } else {
+                if let Some(v) = s.get("plan_cache") {
+                    self.speculate.plan_cache = v.as_bool().ok_or_else(|| {
+                        TerraError::Config("speculate.plan_cache must be a bool".into())
+                    })?;
+                }
+                if let Some(v) = s.get("reentry") {
+                    self.speculate.policy = match (v.as_str(), v.as_usize()) {
+                        (Some(name), _) => ReentryPolicy::parse(name)?,
+                        (None, Some(k)) if k >= 1 && u32::try_from(k).is_ok() => {
+                            ReentryPolicy::StableK(k as u32)
+                        }
+                        _ => {
+                            return Err(TerraError::Config(
+                                "speculate.reentry must be \"eager\", \"adaptive\" or K>=1"
+                                    .into(),
+                            ))
+                        }
+                    };
+                }
+            }
+        }
         Ok(())
     }
 
@@ -162,6 +205,36 @@ mod tests {
     fn mode_parsing() {
         assert_eq!(ExecMode::parse("terra-lazy").unwrap(), ExecMode::TerraLazy);
         assert!(ExecMode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn speculate_from_json() {
+        let j = Json::parse(r#"{"speculate": false}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().speculate, SpeculateConfig::disabled());
+        let j = Json::parse(r#"{"speculate": {"plan_cache": false, "reentry": "eager"}}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert!(!cfg.speculate.plan_cache);
+        assert_eq!(cfg.speculate.policy, ReentryPolicy::Eager);
+        let j = Json::parse(r#"{"speculate": {"reentry": 4}}"#).unwrap();
+        assert_eq!(
+            RunConfig::from_json(&j).unwrap().speculate.policy,
+            ReentryPolicy::StableK(4)
+        );
+        let j = Json::parse(r#"{"speculate": {"reentry": "yesterday"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"speculate": {"reentry": 4294967296}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "K must not silently truncate to u32");
+        // String presets share the TERRA_SPECULATE spellings and are not
+        // silently dropped.
+        let j = Json::parse(r#"{"speculate": "off"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().speculate, SpeculateConfig::disabled());
+        let j = Json::parse(r#"{"speculate": "sometimes"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"speculate": 3}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-bool/str/obj must be rejected");
+        let j = Json::parse(r#"{"speculate": {"plan_cache": "off"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-bool plan_cache must be rejected");
     }
 
     #[test]

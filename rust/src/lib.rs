@@ -11,7 +11,8 @@
 //!   [`data`], [`nn`], [`tape`]
 //! * the paper's system: [`api`] (imperative program surface), [`trace`],
 //!   [`tracegraph`], [`opt`] (graph-optimization passes between trace
-//!   merging and plan generation), [`graphgen`], [`symbolic`], [`runner`]
+//!   merging and plan generation), [`graphgen`], [`symbolic`], [`speculate`]
+//!   (plan cache + adaptive re-entry), [`runner`]
 //! * evaluation: [`baselines`], [`programs`], [`metrics`], [`bench`]
 
 pub mod api;
@@ -29,6 +30,7 @@ pub mod opt;
 pub mod programs;
 pub mod runner;
 pub mod runtime;
+pub mod speculate;
 pub mod symbolic;
 pub mod tape;
 pub mod tensor;

@@ -15,6 +15,7 @@ use terra::graphgen::{generate_plan, GenOptions};
 use terra::opt::PassManager;
 use terra::programs::{all_program_names, build_program, expected_autograph_failure};
 use terra::runner::Engine;
+use terra::speculate::ReentryPolicy;
 use std::collections::HashMap;
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -62,6 +63,16 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(v) = flags.get("opt-level") {
         cfg.opt_level = v.parse().map_err(|_| TerraError::Config("bad --opt-level".into()))?;
     }
+    if let Some(v) = flags.get("plan-cache") {
+        cfg.speculate.plan_cache = match v.as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => return Err(TerraError::Config("bad --plan-cache (expected on|off)".into())),
+        };
+    }
+    if let Some(v) = flags.get("reentry-policy") {
+        cfg.speculate.policy = ReentryPolicy::parse(v)?;
+    }
     if let Some(v) = flags.get("artifacts") {
         cfg.artifacts_dir = v.clone();
     }
@@ -73,8 +84,13 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
-    let mut engine =
-        Engine::with_opt_level(cfg.mode, &cfg.artifacts_dir, cfg.fusion, cfg.opt_level)?;
+    let mut engine = Engine::with_speculate(
+        cfg.mode,
+        &cfg.artifacts_dir,
+        cfg.fusion,
+        cfg.opt_level,
+        cfg.speculate,
+    )?;
     if let Some(v) = flags.get("loss-every") {
         engine.loss_every = v.parse().map_err(|_| TerraError::Config("bad --loss-every".into()))?;
     }
@@ -140,6 +156,14 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
         b.shim_execute_ms,
         s.mailbox_dropped,
     );
+    println!(
+        "speculate: {} plan-cache hits, {} misses, {} segment-compile calls skipped, {} deferred re-entries, avg re-entry {:.2}ms",
+        s.plan_cache_hits,
+        s.plan_cache_misses,
+        s.segment_compiles_skipped,
+        s.reentry_deferred,
+        s.reentry_avg_ms(),
+    );
 }
 
 fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
@@ -169,8 +193,13 @@ fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_trace_dump(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
-    let mut engine =
-        Engine::with_opt_level(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion, cfg.opt_level)?;
+    let mut engine = Engine::with_speculate(
+        ExecMode::Terra,
+        &cfg.artifacts_dir,
+        cfg.fusion,
+        cfg.opt_level,
+        cfg.speculate,
+    )?;
     let mut prog = build_program(&cfg.program)?;
     let steps = cfg.steps.min(12) as u64;
     engine.run(prog.as_mut(), steps, 0)?;
@@ -198,8 +227,13 @@ fn cmd_trace_dump(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_breakdown(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
-    let mut engine =
-        Engine::with_opt_level(ExecMode::Terra, &cfg.artifacts_dir, cfg.fusion, cfg.opt_level)?;
+    let mut engine = Engine::with_speculate(
+        ExecMode::Terra,
+        &cfg.artifacts_dir,
+        cfg.fusion,
+        cfg.opt_level,
+        cfg.speculate,
+    )?;
     let mut prog = build_program(&cfg.program)?;
     let report = engine.run(prog.as_mut(), cfg.steps as u64, cfg.warmup_steps as u64)?;
     let b = report.breakdown_per_step;
@@ -237,7 +271,7 @@ fn main() {
         "help" | "--help" | "-h" => {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
-                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n  \
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K]\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \

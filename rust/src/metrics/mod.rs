@@ -49,6 +49,19 @@ pub struct BreakdownSnapshot {
     pub shim_compile_ms: f64,
     /// Milliseconds spent executing inside the shim.
     pub shim_execute_ms: f64,
+    /// Co-execution entries served from the speculation plan cache (delta
+    /// after [`BreakdownSnapshot::per_step_since`]).
+    pub plan_cache_hits: u64,
+    /// Co-execution entries that compiled a fresh plan (cache enabled).
+    pub plan_cache_misses: u64,
+    /// Segment compilations skipped by plan-cache hits.
+    pub compiles_skipped: u64,
+    /// Stable traces on which the re-entry controller deferred entering
+    /// co-execution (adaptive backoff).
+    pub reentry_deferred: u64,
+    /// Milliseconds spent entering co-execution (trace-stable decision →
+    /// skeleton backend swapped in), cumulative at snapshot time.
+    pub reentry_ms: f64,
 }
 
 impl Breakdown {
@@ -94,6 +107,11 @@ impl Breakdown {
             shim_bytes_reused: 0,
             shim_compile_ms: 0.0,
             shim_execute_ms: 0.0,
+            plan_cache_hits: 0,
+            plan_cache_misses: 0,
+            compiles_skipped: 0,
+            reentry_deferred: 0,
+            reentry_ms: 0.0,
         }
     }
 }
@@ -120,6 +138,11 @@ impl BreakdownSnapshot {
             shim_bytes_reused: self.shim_bytes_reused.saturating_sub(earlier.shim_bytes_reused),
             shim_compile_ms: self.shim_compile_ms - earlier.shim_compile_ms,
             shim_execute_ms: self.shim_execute_ms - earlier.shim_execute_ms,
+            plan_cache_hits: self.plan_cache_hits.saturating_sub(earlier.plan_cache_hits),
+            plan_cache_misses: self.plan_cache_misses.saturating_sub(earlier.plan_cache_misses),
+            compiles_skipped: self.compiles_skipped.saturating_sub(earlier.compiles_skipped),
+            reentry_deferred: self.reentry_deferred.saturating_sub(earlier.reentry_deferred),
+            reentry_ms: self.reentry_ms - earlier.reentry_ms,
         }
     }
 }

@@ -26,7 +26,11 @@ use crate::runner::channels::CoExecChannels;
 use crate::runner::graph_runner::GraphRunner;
 use crate::runner::skeleton::SkeletonBackend;
 use crate::runtime::{ArtifactStore, Client, ExecCache};
-use crate::symbolic::compile_plan;
+use crate::speculate::{
+    graph_signature, GraphSig, PlanCache, PlanKey, ReentryController, ReentryPolicy,
+    SpeculateConfig,
+};
+use crate::symbolic::{compile_plan, validate_plan_artifacts, CompiledPlan};
 use crate::tensor::TensorType;
 use crate::tracegraph::TraceGraph;
 use crate::trace::VarId;
@@ -78,6 +82,38 @@ pub struct EngineStats {
     /// (feeds/variant-selects for plan-eliminated nodes, undemanded
     /// fetches), cumulative over co-execution phases.
     pub mailbox_dropped: u64,
+    /// Co-execution entries served by the speculation plan cache (zero
+    /// optimizer passes, zero fresh segment compiles; only the GraphRunner
+    /// is respawned).
+    pub plan_cache_hits: u64,
+    /// Co-execution entries that went through the full plan pipeline while
+    /// the plan cache was enabled.
+    pub plan_cache_misses: u64,
+    /// Segment-compile *invocations* skipped because a plan-cache hit reused
+    /// an already-compiled plan wholesale. Each skipped invocation would
+    /// have been an `ExecCache` hit or a fresh compile, so this bounds (not
+    /// equals) the fresh-compile work avoided; `segments_compiled` counts
+    /// only fresh compiles.
+    pub segment_compiles_skipped: u64,
+    /// Stable traces on which the adaptive re-entry controller deferred the
+    /// transition (backoff after thrashing).
+    pub reentry_deferred: u64,
+    /// Cumulative re-entry latency (trace-stable decision → skeleton backend
+    /// swapped in), nanoseconds; see [`EngineStats::reentry_avg_ms`].
+    pub reentry_ns: u64,
+}
+
+impl EngineStats {
+    /// Average co-execution entry latency in milliseconds (trace-stable
+    /// decision → skeleton backend swapped in), 0.0 before the first entry.
+    /// The single definition behind the CLI `speculate:` line and the bench
+    /// JSON `reentry_avg_ms` field.
+    pub fn reentry_avg_ms(&self) -> f64 {
+        if self.enter_coexec == 0 {
+            return 0.0;
+        }
+        self.reentry_ns as f64 / 1e6 / self.enter_coexec as f64
+    }
 }
 
 /// Result of a measured run.
@@ -121,6 +157,12 @@ pub struct Engine {
     /// Graph-optimization level for plan generation (0 = off).
     opt_level: u8,
     opt: OptTotals,
+    /// Speculation subsystem: plan cache (None = disabled) + re-entry brain.
+    plan_cache: Option<Arc<PlanCache>>,
+    controller: ReentryController,
+    /// Signature of the current merged graph, invalidated on every changing
+    /// merge and recomputed lazily on stable traces.
+    cached_sig: Option<GraphSig>,
     phase: Phase,
     graph: TraceGraph,
     runner: Option<GraphRunner>,
@@ -152,11 +194,30 @@ impl Engine {
     /// Create an engine with an explicit graph-optimization level (see
     /// [`crate::opt`]): 0 disables the pass pipeline, 1 runs DCE only, >=2
     /// runs the full fixpoint pipeline before every plan compilation.
+    /// Speculation settings come from the environment
+    /// ([`SpeculateConfig::from_env`]).
     pub fn with_opt_level(
         mode: ExecMode,
         artifacts_dir: &str,
         fusion: bool,
         opt_level: u8,
+    ) -> Result<Engine> {
+        Self::with_speculate(mode, artifacts_dir, fusion, opt_level, SpeculateConfig::from_env())
+    }
+
+    /// Create an engine with explicit speculation settings (see
+    /// [`crate::speculate`]): whether co-execution entries consult the
+    /// process-global plan cache, and which re-entry policy gates the
+    /// tracing→co-execution transition. The AutoGraph baseline always runs
+    /// with the eager policy *and without the plan cache* — its "re-entry"
+    /// is re-conversion, and deferring it or eliding its compile cost would
+    /// change the baseline the paper measures.
+    pub fn with_speculate(
+        mode: ExecMode,
+        artifacts_dir: &str,
+        fusion: bool,
+        opt_level: u8,
+        speculate: SpeculateConfig,
     ) -> Result<Engine> {
         let client = Client::global().clone();
         let artifacts = Arc::new(ArtifactStore::open(artifacts_dir)?);
@@ -176,6 +237,9 @@ impl Engine {
             _ => (Phase::Tracing, Box::new(TracingBackend::new(eager))),
         };
         let sess = Session::new(backend, artifacts.clone(), vars.clone());
+        let policy =
+            if mode == ExecMode::AutoGraph { ReentryPolicy::Eager } else { speculate.policy };
+        let plan_cache_on = speculate.plan_cache && mode != ExecMode::AutoGraph;
         Ok(Engine {
             sess,
             client,
@@ -187,6 +251,9 @@ impl Engine {
             fusion,
             opt_level,
             opt: OptTotals::default(),
+            plan_cache: if plan_cache_on { Some(PlanCache::global().clone()) } else { None },
+            controller: ReentryController::new(policy),
+            cached_sig: None,
             phase,
             graph: TraceGraph::new(),
             runner: None,
@@ -232,6 +299,12 @@ impl Engine {
         self.stats
     }
 
+    /// The speculation re-entry controller (divergence profile, current
+    /// stable-trace requirement).
+    pub fn reentry_controller(&self) -> &ReentryController {
+        &self.controller
+    }
+
     pub fn breakdown(&self) -> &Arc<Breakdown> {
         &self.breakdown
     }
@@ -262,6 +335,11 @@ impl Engine {
         snap.shim_bytes_reused = shim.bytes_reused;
         snap.shim_compile_ms = shim.compile_ns as f64 / 1e6;
         snap.shim_execute_ms = shim.execute_ns as f64 / 1e6;
+        snap.plan_cache_hits = self.stats.plan_cache_hits;
+        snap.plan_cache_misses = self.stats.plan_cache_misses;
+        snap.compiles_skipped = self.stats.segment_compiles_skipped;
+        snap.reentry_deferred = self.stats.reentry_deferred;
+        snap.reentry_ms = self.stats.reentry_ns as f64 / 1e6;
     }
 
     fn var_types(&self) -> Result<HashMap<VarId, TensorType>> {
@@ -327,6 +405,7 @@ impl Engine {
                         self.fallback(step)?;
                         self.sess.restore_host_states(host_snapshot);
                         self.stats.fallbacks += 1;
+                        self.controller.note_fallback(step, &why);
                         // Replay the whole step imperatively while tracing.
                         self.trace_step(prog, step)
                     }
@@ -349,22 +428,136 @@ impl Engine {
             .ok_or_else(|| TerraError::CoExec("tracing backend produced no trace".into()))?;
         self.stats.traces_collected += 1;
         let report = self.graph.merge(&trace)?;
+        if report.changed {
+            self.cached_sig = None;
+        }
+        self.controller.note_trace(report.changed);
         if !report.changed {
-            self.enter_coexec(step + 1)?;
+            // The re-entry controller decides whether one stable trace is
+            // enough; a plan-cache hit makes re-entry nearly free and always
+            // wins over backoff.
+            let plan_cached = self.signature_in_cache();
+            if self.controller.decide(plan_cached) {
+                self.enter_coexec(step + 1)?;
+            } else {
+                self.stats.reentry_deferred += 1;
+                debug_log(format_args!(
+                    "step {step}: stable trace, deferring re-entry (controller requires {} \
+                     stable traces)",
+                    self.controller.required(),
+                ));
+            }
         }
         Ok(loss)
     }
 
-    /// Optimize a plan-side clone of the TraceGraph, generate + compile the
-    /// plan from it, spawn the GraphRunner, swap in the skeleton backend.
+    /// Current plan-cache key, computing (and memoizing) the graph signature
+    /// if the cache is enabled. `None` while the cache is disabled.
+    fn plan_key(&mut self) -> Option<PlanKey> {
+        self.plan_cache.as_ref()?;
+        let sig = match self.cached_sig {
+            Some(s) => s,
+            None => {
+                let var_types = self.var_types_infallible();
+                let s = graph_signature(&self.graph, &var_types);
+                self.cached_sig = Some(s);
+                s
+            }
+        };
+        Some(PlanKey { sig, fusion: self.fusion, opt_level: self.opt_level })
+    }
+
+    /// Variable types for signature hashing; a variable whose type cannot be
+    /// read is simply omitted (the signature then differs from any cached
+    /// plan, which is the safe direction).
+    fn var_types_infallible(&self) -> HashMap<VarId, TensorType> {
+        let mut m = HashMap::new();
+        for id in self.vars.ids() {
+            if let Ok(ty) = self.vars.ty(id) {
+                m.insert(id, ty);
+            }
+        }
+        m
+    }
+
+    fn signature_in_cache(&mut self) -> bool {
+        match (self.plan_key(), &self.plan_cache) {
+            (Some(key), Some(cache)) => cache.contains(&key),
+            _ => false,
+        }
+    }
+
+    /// Enter co-execution: obtain a compiled plan (plan cache or full
+    /// pipeline), spawn the GraphRunner, swap in the skeleton backend.
     ///
     /// The skeleton keeps walking the *unoptimized* graph: the imperative
     /// program still issues every op, and all runner messages are keyed by
     /// NodeIds/indices the passes preserve (see `opt/README.md`). Only the
     /// symbolic side sees the reduced graph.
     fn enter_coexec(&mut self, next_iter: u64) -> Result<()> {
-        let opts = GenOptions { fusion: self.fusion };
+        let t_enter = Instant::now();
         let full = Arc::new(self.graph.clone());
+        let key = self.plan_key();
+        let cached = match (&key, &self.plan_cache) {
+            (Some(k), Some(cache)) => cache.lookup(k),
+            _ => None,
+        };
+        let plan: Arc<CompiledPlan> = match cached {
+            Some(hit) => {
+                // Speculation hit: the exact indexed structure was compiled
+                // before — skip the optimizer, plan generation and every
+                // segment compilation; only the GraphRunner is respawned.
+                // The plan may come from an engine with a different artifact
+                // store, so re-validate its Artifact steps against ours: a
+                // missing artifact must fail here, not mid-iteration.
+                validate_plan_artifacts(&hit.plan.steps, &self.artifacts)?;
+                self.stats.plan_cache_hits += 1;
+                self.stats.segment_compiles_skipped += hit.segments;
+                self.stats.plan_segments = hit.segments;
+                self.stats.plan_segment_nodes = hit.segment_nodes;
+                debug_log(format_args!(
+                    "entering co-execution from plan cache ({} segments reused)",
+                    hit.segments
+                ));
+                hit.plan
+            }
+            None => {
+                if self.plan_cache.is_some() {
+                    self.stats.plan_cache_misses += 1;
+                }
+                let plan = Arc::new(self.build_plan(&full)?);
+                if let (Some(k), Some(cache)) = (key, &self.plan_cache) {
+                    cache.insert(k, plan.clone());
+                }
+                plan
+            }
+        };
+        let lazy = self.mode == ExecMode::TerraLazy;
+        let channels = CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone());
+        let runner = GraphRunner::spawn(
+            plan,
+            self.client.clone(),
+            self.artifacts.clone(),
+            self.vars.clone(),
+            channels.clone(),
+            next_iter,
+        );
+        self.runner = Some(runner);
+        self.runner_start_iter = next_iter;
+        self.channels = Some(channels.clone());
+        let skeleton = SkeletonBackend::new(full, channels, self.vars.clone());
+        self.sess.swap_backend(Box::new(skeleton));
+        self.phase = Phase::CoExec;
+        self.stats.enter_coexec += 1;
+        self.controller.note_entered(next_iter);
+        self.stats.reentry_ns += t_enter.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    /// The full plan pipeline: optimize a plan-side clone of the TraceGraph,
+    /// generate the plan and compile its segments.
+    fn build_plan(&mut self, full: &Arc<TraceGraph>) -> Result<CompiledPlan> {
+        let opts = GenOptions { fusion: self.fusion };
         let pm = PassManager::standard(self.opt_level);
         // With the pipeline off (or inert) the plan shares the skeleton's
         // graph — no second deep clone on the retrace hot path.
@@ -400,24 +593,7 @@ impl Engine {
         let plan = compile_plan(&self.client, &self.seg_cache, &self.artifacts, graph, spec)?;
         self.stats.segments_compiled += plan.compiled_fresh as u64;
         self.stats.plans_generated += 1;
-        let lazy = self.mode == ExecMode::TerraLazy;
-        let channels = CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone());
-        let runner = GraphRunner::spawn(
-            Arc::new(plan),
-            self.client.clone(),
-            self.artifacts.clone(),
-            self.vars.clone(),
-            channels.clone(),
-            next_iter,
-        );
-        self.runner = Some(runner);
-        self.runner_start_iter = next_iter;
-        self.channels = Some(channels.clone());
-        let skeleton = SkeletonBackend::new(full, channels, self.vars.clone());
-        self.sess.swap_backend(Box::new(skeleton));
-        self.phase = Phase::CoExec;
-        self.stats.enter_coexec += 1;
-        Ok(())
+        Ok(plan)
     }
 
     /// Divergence fallback: cancel the GraphRunner from `iter` onward, join
@@ -454,25 +630,32 @@ impl Engine {
 
     /// Graceful shutdown of an active co-execution phase (end of run): wait
     /// for the GraphRunner to drain and commit every validated iteration,
-    /// then cancel the (never-started) next one.
+    /// then cancel the (never-started) next one. The wait blocks on the
+    /// runner's [`crate::runner::IterProgress`] condvar — woken on every
+    /// committed iteration and on thread exit — instead of sleep-polling.
     pub fn shutdown(&mut self) -> Result<()> {
         if let (Some(ch), Some(r)) = (self.channels.take(), self.runner.take()) {
             let expected = self.next_step.saturating_sub(self.runner_start_iter);
             let deadline = Instant::now() + std::time::Duration::from_secs(60);
-            while r.iterations_done.load(std::sync::atomic::Ordering::Relaxed) < expected {
+            loop {
+                let (done, finished) = r.progress.wait_done(expected, deadline);
                 if let Some(e) = r.take_error() {
                     ch.cancel_from(0);
                     let _ = r.join();
                     return Err(e);
                 }
-                if Instant::now() > deadline {
+                if done >= expected {
+                    break;
+                }
+                if finished || Instant::now() >= deadline {
+                    // Thread exit without error (cancelled) or timeout: the
+                    // validated iterations can no longer drain.
                     ch.cancel_from(0);
                     let _ = r.join();
                     return Err(TerraError::CoExec(
                         "GraphRunner failed to drain validated iterations".into(),
                     ));
                 }
-                std::thread::sleep(std::time::Duration::from_micros(200));
             }
             ch.cancel_from(self.next_step);
             match r.join() {
@@ -496,10 +679,15 @@ impl Engine {
         self.setup(prog)?;
         let mut tp = Throughput::new();
         let mut losses = Vec::new();
+        // With warmup == 0 this pre-loop snapshot IS the warm snapshot; the
+        // in-loop stamp below only fires for warmup > 0 (no double stamp).
         let mut warm_snapshot = self.breakdown.snapshot();
         self.stamp_runtime_counters(&mut warm_snapshot);
+        if warmup == 0 {
+            tp.start_window();
+        }
         for step in 0..steps {
-            if step == warmup {
+            if step == warmup && warmup > 0 {
                 tp.start_window();
                 warm_snapshot = self.breakdown.snapshot();
                 self.stamp_runtime_counters(&mut warm_snapshot);

@@ -16,13 +16,70 @@ use crate::symbolic::{Binding, CompiledPlan, Step};
 use crate::trace::VarId;
 use crate::tracegraph::{NodeId, TraceGraph};
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Completed-iteration counter with condvar notification: the engine's
+/// shutdown drain blocks on [`IterProgress::wait_done`] instead of
+/// sleep-polling, and is woken on every committed iteration and on thread
+/// exit.
+pub struct IterProgress {
+    state: Mutex<ProgressState>,
+    cv: Condvar,
+}
+
+#[derive(Clone, Copy)]
+struct ProgressState {
+    done: u64,
+    finished: bool,
+}
+
+impl IterProgress {
+    fn new() -> Arc<Self> {
+        Arc::new(IterProgress {
+            state: Mutex::new(ProgressState { done: 0, finished: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Iterations fully committed so far.
+    pub fn done(&self) -> u64 {
+        self.state.lock().unwrap().done
+    }
+
+    fn advance(&self) {
+        self.state.lock().unwrap().done += 1;
+        self.cv.notify_all();
+    }
+
+    fn finish(&self) {
+        self.state.lock().unwrap().finished = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until at least `target` iterations committed, the runner thread
+    /// exited, or `deadline` passed. Returns `(done, thread_finished)`.
+    pub fn wait_done(&self, target: u64, deadline: Instant) -> (u64, bool) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.done >= target || st.finished {
+                return (st.done, st.finished);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (st.done, st.finished);
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+}
 
 pub struct GraphRunner {
     handle: Option<JoinHandle<()>>,
     error: Arc<Mutex<Option<TerraError>>>,
-    pub iterations_done: Arc<std::sync::atomic::AtomicU64>,
+    pub progress: Arc<IterProgress>,
 }
 
 struct IterState {
@@ -46,8 +103,8 @@ impl GraphRunner {
     ) -> GraphRunner {
         let error: Arc<Mutex<Option<TerraError>>> = Arc::new(Mutex::new(None));
         let error2 = error.clone();
-        let iterations_done = Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let done2 = iterations_done.clone();
+        let progress = IterProgress::new();
+        let progress2 = progress.clone();
         let handle = std::thread::Builder::new()
             .name("terra-graph-runner".into())
             .spawn(move || {
@@ -57,19 +114,21 @@ impl GraphRunner {
                     match run_iteration(&plan, &client, &artifacts, &vars, &channels, &breakdown, iter)
                     {
                         Ok(()) => {
-                            done2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            progress2.advance();
                             iter += 1;
                         }
-                        Err(TerraError::Cancelled) => return,
+                        Err(TerraError::Cancelled) => break,
                         Err(e) => {
                             *error2.lock().unwrap() = Some(e);
-                            return;
+                            break;
                         }
                     }
                 }
+                // Wake any drain waiter: no further iterations will commit.
+                progress2.finish();
             })
             .expect("spawn graph runner");
-        GraphRunner { handle: Some(handle), error, iterations_done }
+        GraphRunner { handle: Some(handle), error, progress }
     }
 
     /// Wait for the thread to exit (after cancellation) and surface any error.

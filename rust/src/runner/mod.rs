@@ -10,6 +10,6 @@ mod skeleton;
 
 pub use channels::CoExecChannels;
 pub use coexec::{Engine, EngineStats, RunReport};
-pub use graph_runner::GraphRunner;
+pub use graph_runner::{GraphRunner, IterProgress};
 pub use mailbox::{Gate, Mailbox, Semaphore};
 pub use skeleton::SkeletonBackend;

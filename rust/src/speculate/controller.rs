@@ -1,0 +1,284 @@
+//! Divergence profiler + adaptive co-execution re-entry policy.
+//!
+//! The seed engine re-entered co-execution the moment one trace merged
+//! without changing the graph (`!report.changed`). That is optimal for
+//! programs that settle, but pathologically dynamic programs *thrash*: every
+//! re-entry pays plan compilation and runner spawn only to diverge a few
+//! steps later. The controller profiles fallbacks (per-site counters,
+//! inter-fallback distances) and derives the number of consecutive stable
+//! traces required before the next entry:
+//!
+//! * a short co-execution phase (few steps survived between entry and the
+//!   divergence) doubles the requirement (exponential backoff, bounded), so
+//!   thrashing programs stay in cheap tracing. Phase *length* — not raw
+//!   inter-fallback distance — is the health metric: distance would count
+//!   the controller's own deferral steps and read its backoff as recovery;
+//! * a long successful co-execution phase halves it (hysteresis — one good
+//!   phase is not instantly trusted, one bad phase is not forever punished);
+//! * a plan-cache hit overrides the backoff entirely: when the graph
+//!   signature has a compiled plan, re-entry costs only a runner spawn, so
+//!   the controller enters immediately.
+
+use std::collections::HashMap;
+
+use crate::error::{Result, TerraError};
+
+/// When to transition from tracing back to co-execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReentryPolicy {
+    /// Enter after the first stable trace (the seed behaviour).
+    Eager,
+    /// Profile-guided: K-stable with exponential backoff on thrashing and
+    /// immediate entry on plan-cache hits. The default.
+    Adaptive,
+    /// Always require exactly K consecutive stable traces.
+    StableK(u32),
+}
+
+impl ReentryPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "eager" => Ok(ReentryPolicy::Eager),
+            "adaptive" => Ok(ReentryPolicy::Adaptive),
+            other => match other.parse::<u32>() {
+                Ok(k) if k >= 1 => Ok(ReentryPolicy::StableK(k)),
+                _ => Err(TerraError::Config(format!(
+                    "unknown re-entry policy '{s}' (expected eager | adaptive | K>=1)"
+                ))),
+            },
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ReentryPolicy::Eager => "eager".into(),
+            ReentryPolicy::Adaptive => "adaptive".into(),
+            ReentryPolicy::StableK(k) => format!("stable-{k}"),
+        }
+    }
+}
+
+/// A co-execution phase surviving at most this many steps counts as
+/// thrashing.
+const THRASH_PHASE_LEN: u64 = 8;
+/// Upper bound on the adaptive stable-trace requirement.
+const MAX_REQUIRED: u32 = 16;
+/// Retained inter-fallback distances (diagnostics window).
+const DISTANCE_WINDOW: usize = 64;
+/// Per-site counter map bound (sites beyond this fold into one bucket).
+const MAX_SITES: usize = 64;
+
+/// The engine-side phase-transition brain: call [`note_trace`] after every
+/// merge, ask [`decide`] once the trace is stable, report every divergence
+/// via [`note_fallback`] and every transition via [`note_entered`].
+///
+/// [`note_trace`]: ReentryController::note_trace
+/// [`decide`]: ReentryController::decide
+/// [`note_fallback`]: ReentryController::note_fallback
+/// [`note_entered`]: ReentryController::note_entered
+pub struct ReentryController {
+    policy: ReentryPolicy,
+    /// Consecutive traces merged without changing the graph.
+    stable_run: u32,
+    /// Current adaptive requirement (>= 1).
+    required: u32,
+    /// Step at which the current/most recent co-execution phase began.
+    last_entry_step: Option<u64>,
+    last_fallback_step: Option<u64>,
+    fallbacks: u64,
+    /// Fallback counts per divergence site (the walker's description).
+    sites: HashMap<String, u64>,
+    /// Recent inter-fallback distances, oldest first.
+    distances: Vec<u64>,
+}
+
+impl ReentryController {
+    pub fn new(policy: ReentryPolicy) -> Self {
+        ReentryController {
+            policy,
+            stable_run: 0,
+            required: match policy {
+                ReentryPolicy::StableK(k) => k.max(1),
+                _ => 1,
+            },
+            last_entry_step: None,
+            last_fallback_step: None,
+            fallbacks: 0,
+            sites: HashMap::new(),
+            distances: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> ReentryPolicy {
+        self.policy
+    }
+
+    /// Stable traces currently required before re-entry.
+    pub fn required(&self) -> u32 {
+        self.required
+    }
+
+    /// One trace was merged; `changed` is the merge report's verdict.
+    pub fn note_trace(&mut self, changed: bool) {
+        if changed {
+            self.stable_run = 0;
+        } else {
+            self.stable_run = self.stable_run.saturating_add(1);
+        }
+    }
+
+    /// Should the engine enter co-execution now? Meaningful only after a
+    /// stable merge. `plan_cached` reports whether the current graph
+    /// signature already has a compiled plan.
+    pub fn decide(&self, plan_cached: bool) -> bool {
+        if self.stable_run == 0 {
+            return false;
+        }
+        match self.policy {
+            ReentryPolicy::Eager => true,
+            ReentryPolicy::StableK(k) => self.stable_run >= k.max(1),
+            ReentryPolicy::Adaptive => plan_cached || self.stable_run >= self.required,
+        }
+    }
+
+    /// A divergence fallback happened at `step`; `site` is the walker's
+    /// divergence description (location-bearing).
+    pub fn note_fallback(&mut self, step: u64, site: &str) {
+        self.fallbacks += 1;
+        if self.sites.len() < MAX_SITES || self.sites.contains_key(site) {
+            *self.sites.entry(site.to_string()).or_insert(0) += 1;
+        } else {
+            *self.sites.entry("<other>".to_string()).or_insert(0) += 1;
+        }
+        if let Some(prev) = self.last_fallback_step {
+            // Inter-fallback distance: profiling only (it includes tracing
+            // and deferral steps, so it must not drive the backoff — the
+            // backoff's own delay would read as program health).
+            if self.distances.len() == DISTANCE_WINDOW {
+                self.distances.remove(0);
+            }
+            self.distances.push(step.saturating_sub(prev));
+        }
+        if matches!(self.policy, ReentryPolicy::Adaptive) {
+            // Health metric: how many steps the phase survived after entry.
+            if let Some(entered) = self.last_entry_step {
+                if step.saturating_sub(entered) <= THRASH_PHASE_LEN {
+                    self.required = (self.required * 2).min(MAX_REQUIRED);
+                } else {
+                    self.required = (self.required / 2).max(1);
+                }
+            }
+        }
+        self.last_fallback_step = Some(step);
+    }
+
+    /// The engine entered co-execution; `step` is the first iteration the
+    /// new GraphRunner handles.
+    pub fn note_entered(&mut self, step: u64) {
+        self.stable_run = 0;
+        self.last_entry_step = Some(step);
+    }
+
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks
+    }
+
+    /// Per-site fallback counts, most frequent first.
+    pub fn hot_sites(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> = self.sites.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Mean inter-fallback distance over the profiling window.
+    pub fn mean_fallback_distance(&self) -> Option<f64> {
+        if self.distances.is_empty() {
+            return None;
+        }
+        Some(self.distances.iter().sum::<u64>() as f64 / self.distances.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(ReentryPolicy::parse("eager").unwrap(), ReentryPolicy::Eager);
+        assert_eq!(ReentryPolicy::parse("Adaptive").unwrap(), ReentryPolicy::Adaptive);
+        assert_eq!(ReentryPolicy::parse("3").unwrap(), ReentryPolicy::StableK(3));
+        assert!(ReentryPolicy::parse("0").is_err());
+        assert!(ReentryPolicy::parse("soonish").is_err());
+    }
+
+    #[test]
+    fn eager_enters_on_first_stable_trace() {
+        let mut c = ReentryController::new(ReentryPolicy::Eager);
+        c.note_trace(true);
+        assert!(!c.decide(false));
+        c.note_trace(false);
+        assert!(c.decide(false));
+    }
+
+    #[test]
+    fn stable_k_waits_for_k() {
+        let mut c = ReentryController::new(ReentryPolicy::StableK(3));
+        for expect in [false, false, true] {
+            c.note_trace(false);
+            assert_eq!(c.decide(false), expect);
+        }
+        // A changed merge resets the run.
+        c.note_trace(true);
+        c.note_trace(false);
+        assert!(!c.decide(false));
+    }
+
+    #[test]
+    fn adaptive_backs_off_on_thrashing_and_recovers() {
+        let mut c = ReentryController::new(ReentryPolicy::Adaptive);
+        assert_eq!(c.required(), 1);
+        c.note_fallback(10, "site-a");
+        assert_eq!(c.required(), 1, "fallback before any entry adjusts nothing");
+        c.note_entered(12);
+        c.note_fallback(15, "site-a");
+        assert_eq!(c.required(), 2, "3-step phase is thrashing");
+        c.note_entered(18);
+        c.note_fallback(19, "site-b");
+        assert_eq!(c.required(), 4);
+        // Backoff is bounded, and crucially the deferral gap between entries
+        // does NOT decay it: only short *phases* count.
+        let mut step = 100;
+        for _ in 0..20 {
+            step += 50; // long tracing/deferral gap...
+            c.note_entered(step);
+            c.note_fallback(step + 1, "site-b"); // ...but the phase dies at once
+            step += 1;
+        }
+        assert_eq!(c.required(), MAX_REQUIRED);
+        // A long healthy co-execution phase decays the requirement.
+        c.note_entered(1000);
+        c.note_fallback(2000, "site-c");
+        assert_eq!(c.required(), MAX_REQUIRED / 2);
+        // Deferral: one stable trace is no longer enough...
+        c.note_trace(false);
+        assert!(!c.decide(false));
+        // ...unless the plan cache already holds this signature.
+        assert!(c.decide(true));
+    }
+
+    #[test]
+    fn profiler_tracks_sites_and_distances() {
+        let mut c = ReentryController::new(ReentryPolicy::Adaptive);
+        c.note_entered(3);
+        c.note_fallback(5, "hot");
+        c.note_fallback(9, "hot");
+        c.note_fallback(20, "cold");
+        assert_eq!(c.fallbacks(), 3);
+        let sites = c.hot_sites();
+        assert_eq!(sites[0], ("hot".to_string(), 2));
+        assert_eq!(sites[1], ("cold".to_string(), 1));
+        let mean = c.mean_fallback_distance().unwrap();
+        assert!((mean - (4.0 + 11.0) / 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,83 @@
+//! The speculation subsystem: content-addressed plan caching + adaptive
+//! co-execution re-entry.
+//!
+//! Terra's phase machine pays the full plan pipeline — optimizer passes,
+//! plan generation, segment compilation, runner spawn — on every
+//! tracing→co-execution transition. After a divergence fallback the merged
+//! TraceGraph is often structurally identical to one already compiled (by a
+//! previous engine instance of the same program, or by the same bench loop
+//! one run earlier); recompiling it is pure waste. This module makes those
+//! transitions nearly free and replaces the fixed "one stable trace"
+//! re-entry rule with a profile-guided policy:
+//!
+//! * [`signature`] — a canonical 128-bit structural hash of the TraceGraph
+//!   (nodes, edges, variants, variable bindings; observation-order artifacts
+//!   erased where they are semantically irrelevant),
+//! * [`plancache`] — a process-global, LRU-bounded map from signature (+
+//!   fusion/opt-level knobs) to the `Arc` of a fully compiled plan,
+//! * [`controller`] — a divergence profiler driving K-stable re-entry with
+//!   exponential backoff for thrashing programs and immediate re-entry when
+//!   the plan cache already holds the current signature.
+//!
+//! Knobs: JSON `speculate` on [`crate::config::RunConfig`], CLI
+//! `--plan-cache` / `--reentry-policy`, env `TERRA_SPECULATE`
+//! (`off` = seed behaviour, `nocache`, `eager`; default fully on). See
+//! `README.md` in this directory for the canonicalization and
+//! cache-invalidation contract.
+
+pub mod controller;
+pub mod plancache;
+pub mod signature;
+
+pub use controller::{ReentryController, ReentryPolicy};
+pub use plancache::{CachedPlan, PlanCache, PlanKey};
+pub use signature::{graph_signature, GraphSig};
+
+/// Engine-level speculation settings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpeculateConfig {
+    /// Consult/populate the process-global plan cache on co-execution entry.
+    pub plan_cache: bool,
+    /// Phase-transition policy (see [`ReentryPolicy`]).
+    pub policy: ReentryPolicy,
+}
+
+impl Default for SpeculateConfig {
+    fn default() -> Self {
+        SpeculateConfig { plan_cache: true, policy: ReentryPolicy::Adaptive }
+    }
+}
+
+impl SpeculateConfig {
+    /// Seed behaviour: no plan cache, enter on the first stable trace.
+    pub fn disabled() -> Self {
+        SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Eager }
+    }
+
+    /// Parse a preset name (shared by the `TERRA_SPECULATE` env knob and the
+    /// JSON `speculate` string form): `0`/`off` =
+    /// [`SpeculateConfig::disabled`], `nocache` = adaptive policy without
+    /// the cache, `eager` = cache without the adaptive policy, `1`/`on` =
+    /// fully on.
+    pub fn parse_preset(name: &str) -> crate::error::Result<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "0" | "off" => Ok(Self::disabled()),
+            "nocache" => Ok(SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Adaptive }),
+            "eager" => Ok(SpeculateConfig { plan_cache: true, policy: ReentryPolicy::Eager }),
+            "1" | "on" | "adaptive" => Ok(Self::default()),
+            other => Err(crate::error::TerraError::Config(format!(
+                "unknown speculate preset '{other}' (expected on | off | nocache | eager)"
+            ))),
+        }
+    }
+
+    /// Default settings with a `TERRA_SPECULATE` env override (see
+    /// [`SpeculateConfig::parse_preset`]; an unrecognized value falls back
+    /// to the default rather than erroring, matching `TERRA_OPT_LEVEL`).
+    pub fn from_env() -> Self {
+        match std::env::var("TERRA_SPECULATE").ok() {
+            Some(v) => Self::parse_preset(&v).unwrap_or_default(),
+            None => Self::default(),
+        }
+    }
+}

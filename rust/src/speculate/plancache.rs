@@ -1,0 +1,230 @@
+//! Content-addressed cache of compiled co-execution plans.
+//!
+//! Keyed by the canonical [`GraphSig`](crate::speculate::GraphSig) of the
+//! merged TraceGraph plus the plan-shaping knobs (`fusion`, `opt_level`). A
+//! hit hands back the `Arc` of a previously compiled plan — optimized graph,
+//! generated `PlanSpec` and compiled segments included — so re-entering
+//! co-execution skips the optimizer pipeline, plan generation and every
+//! segment compilation; only the GraphRunner thread is respawned.
+//!
+//! The cache is **process-global** (like [`crate::runtime::ExecCache`]):
+//! within one engine the merged graph only ever grows, so a signature never
+//! recurs; the repeat customers are *other engine instances of the same
+//! program* — re-runs in a bench loop, the serving scenario where many
+//! short-lived engines execute one model, and each re-run's own
+//! fallback→re-entry cycles, which replay the same signature sequence. A
+//! signature match pins the full indexed structure (see `signature.rs`), so
+//! NodeIds, case indices and variant indices of the cached plan line up with
+//! the new engine's graph.
+
+use crate::symbolic::CompiledPlan;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::GraphSig;
+
+/// Full cache key: graph signature + the knobs that shape the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub sig: GraphSig,
+    /// Whole-segment fusion on/off (the ±XLA axis) changes segmentation.
+    pub fusion: bool,
+    /// Graph-optimization level changes the plan-side graph.
+    pub opt_level: u8,
+}
+
+/// A cached plan plus the compile work a hit skips.
+#[derive(Clone)]
+pub struct CachedPlan {
+    pub plan: Arc<CompiledPlan>,
+    /// Non-empty compiled segments in the plan.
+    pub segments: u64,
+    /// Op nodes compiled into those segments.
+    pub segment_nodes: u64,
+}
+
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+}
+
+struct Entry {
+    cached: CachedPlan,
+    last_used: u64,
+}
+
+/// Bounded, LRU-evicting plan cache.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+fn default_capacity() -> usize {
+    std::env::var("TERRA_PLAN_CACHE_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(64)
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::with_capacity(default_capacity())
+    }
+}
+
+impl PlanCache {
+    pub fn with_capacity(capacity: usize) -> Self {
+        PlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Process-wide cache (capacity from `TERRA_PLAN_CACHE_CAP`, default 64).
+    pub fn global() -> &'static Arc<PlanCache> {
+        static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(PlanCache::default()))
+    }
+
+    /// Look up a plan, counting a hit or miss and refreshing LRU order.
+    pub fn lookup(&self, key: &PlanKey) -> Option<CachedPlan> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.cached.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Membership probe without touching hit/miss counters or LRU order
+    /// (used by the re-entry controller to decide whether entering is free).
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.inner.lock().unwrap().map.contains_key(key)
+    }
+
+    /// Insert a compiled plan, evicting the least-recently-used entry when
+    /// over capacity.
+    pub fn insert(&self, key: PlanKey, plan: Arc<CompiledPlan>) {
+        let segments = plan.segments.iter().filter(|s| !s.spec.nodes.is_empty()).count() as u64;
+        let segment_nodes: u64 = plan.segments.iter().map(|s| s.spec.nodes.len() as u64).sum();
+        let cached = CachedPlan { plan, segments, segment_nodes };
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if inner.map.insert(key, Entry { cached, last_used: tick }).is_none() {
+            self.insertions.fetch_add(1, Ordering::Relaxed);
+        }
+        while inner.map.len() > self.capacity {
+            let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            inner.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::CompiledPlan;
+    use crate::tracegraph::TraceGraph;
+
+    fn key(n: u64) -> PlanKey {
+        PlanKey { sig: GraphSig { a: n, b: !n }, fusion: true, opt_level: 2 }
+    }
+
+    fn empty_plan() -> Arc<CompiledPlan> {
+        Arc::new(CompiledPlan {
+            steps: vec![],
+            segments: vec![],
+            graph: Arc::new(TraceGraph::new()),
+            compiled_fresh: 0,
+        })
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let c = PlanCache::with_capacity(4);
+        assert!(c.lookup(&key(1)).is_none());
+        assert_eq!(c.misses(), 1);
+        c.insert(key(1), empty_plan());
+        assert!(c.lookup(&key(1)).is_some());
+        assert_eq!(c.hits(), 1);
+        assert!(c.contains(&key(1)));
+        // `contains` counts nothing.
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn knobs_partition_the_key_space() {
+        let c = PlanCache::with_capacity(8);
+        let sig = GraphSig { a: 7, b: 9 };
+        c.insert(PlanKey { sig, fusion: true, opt_level: 2 }, empty_plan());
+        assert!(!c.contains(&PlanKey { sig, fusion: false, opt_level: 2 }));
+        assert!(!c.contains(&PlanKey { sig, fusion: true, opt_level: 0 }));
+        assert!(c.contains(&PlanKey { sig, fusion: true, opt_level: 2 }));
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let c = PlanCache::with_capacity(2);
+        c.insert(key(1), empty_plan());
+        c.insert(key(2), empty_plan());
+        let _ = c.lookup(&key(1)); // refresh 1: victim becomes 2
+        c.insert(key(3), empty_plan());
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(&key(1)));
+        assert!(!c.contains(&key(2)));
+        assert!(c.contains(&key(3)));
+        assert_eq!(c.evictions(), 1);
+    }
+}

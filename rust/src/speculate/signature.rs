@@ -1,0 +1,285 @@
+//! Canonical structural signature of a [`TraceGraph`].
+//!
+//! The plan cache (see [`crate::speculate::plancache`]) is content-addressed:
+//! two graphs with equal signatures must be interchangeable as the *symbolic*
+//! side of a co-execution phase. Because every runner↔runner message is keyed
+//! by `NodeId` plus child-/variant-list **indices** (the wire format, see
+//! `opt/README.md`), the signature hashes the fully *indexed* structure —
+//! nodes in id order, children and variants in list order — not just the
+//! shape of the DAG. A signature match therefore guarantees that a cached
+//! plan's NodeIds, case indices and variant indices line up with the current
+//! engine graph.
+//!
+//! Canonicalization (where observation order is incidental, it is erased):
+//!
+//! * **Generalized consts**: a const node observed with several values is a
+//!   feed; which value happened to be observed *first* (its `value_hash` and
+//!   stored `const_value`) is an accident of data order and is excluded.
+//! * **Variable bindings**: referenced variables are hashed as a `VarId`-
+//!   sorted list of `(id, type)` pairs, independent of the map's iteration
+//!   order.
+//!
+//! Everything a compiled plan depends on is included: op defs (kind,
+//! attributes, input types via `ItemKey`), program locations, non-generalized
+//! const values (via `value_hash` — they are embedded into compiled
+//! segments), output types, edges, dataflow variants, and the types of every
+//! referenced variable.
+
+use crate::tensor::TensorType;
+use crate::tracegraph::{GraphSrc, NodeKind, TraceGraph};
+use crate::trace::{ItemKey, VarId};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// A 128-bit structural signature (two independent FNV streams, so accidental
+/// collisions need to defeat both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphSig {
+    pub a: u64,
+    pub b: u64,
+}
+
+impl std::fmt::Display for GraphSig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.a, self.b)
+    }
+}
+
+use crate::trace::{FNV_OFFSET, FNV_PRIME};
+
+/// Offset basis of the second (independent) stream; the first stream uses
+/// the project-wide [`FNV_OFFSET`].
+const FNV_OFFSET_B: u64 = 0x6c62272e07bb0142;
+
+/// Dependency-free [`Hasher`] feeding two FNV-1a streams with different
+/// offset bases (stream B additionally whitens each byte), so `#[derive(Hash)]`
+/// impls of the graph's component types can be reused directly.
+struct SigHasher {
+    a: u64,
+    b: u64,
+}
+
+impl SigHasher {
+    fn new() -> Self {
+        SigHasher { a: FNV_OFFSET, b: FNV_OFFSET_B }
+    }
+
+    fn sig(&self) -> GraphSig {
+        GraphSig { a: self.a, b: self.b }
+    }
+}
+
+impl Hasher for SigHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.a = (self.a ^ byte as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ (byte ^ 0xa5) as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.a
+    }
+}
+
+/// Compute the canonical signature of `graph` plus the bindings of every
+/// variable it references. `var_types` is the engine's variable-store type
+/// map; unreferenced entries do not influence the signature.
+pub fn graph_signature(
+    graph: &TraceGraph,
+    var_types: &HashMap<VarId, TensorType>,
+) -> GraphSig {
+    let mut h = SigHasher::new();
+    graph.nodes.len().hash(&mut h);
+    let mut vars: Vec<VarId> = Vec::new();
+    for node in &graph.nodes {
+        // Node identity. For generalized consts, erase the first-observed
+        // value: only type + location (+ the generalized flag below) matter.
+        match &node.kind {
+            NodeKind::Start => 0u8.hash(&mut h),
+            NodeKind::End => 1u8.hash(&mut h),
+            NodeKind::Item(key) => {
+                2u8.hash(&mut h);
+                match key {
+                    ItemKey::Const { ty, loc, .. } if node.generalized => {
+                        3u8.hash(&mut h);
+                        ty.hash(&mut h);
+                        loc.hash(&mut h);
+                    }
+                    k => k.hash(&mut h),
+                }
+            }
+        }
+        node.generalized.hash(&mut h);
+        node.removed.hash(&mut h);
+        // Execution-order edges and dataflow variants, in list order: the
+        // indices are the runner wire format (Case/Variant Selects).
+        node.children.hash(&mut h);
+        node.variants.hash(&mut h);
+        node.out_types.hash(&mut h);
+        for variant in &node.variants {
+            for src in variant {
+                if let GraphSrc::Var(v) = src {
+                    vars.push(*v);
+                }
+            }
+        }
+        if let NodeKind::Item(ItemKey::Assign { var, .. }) = &node.kind {
+            vars.push(*var);
+        }
+    }
+    // Variable bindings, VarId-sorted + deduped (reference multiplicity and
+    // map iteration order are incidental).
+    vars.sort();
+    vars.dedup();
+    vars.len().hash(&mut h);
+    for v in vars {
+        v.hash(&mut h);
+        match var_types.get(&v) {
+            Some(ty) => {
+                1u8.hash(&mut h);
+                ty.hash(&mut h);
+            }
+            None => 0u8.hash(&mut h),
+        }
+    }
+    h.sig()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpDef, OpKind};
+    use crate::tensor::HostTensor;
+    use crate::trace::{FeedKind, Location, Trace, TraceItem, ValueId, ValueRef};
+
+    fn loc(line: u32) -> Location {
+        Location { file: "sig.rs", line, col: 1, scope: 0 }
+    }
+
+    fn feed(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2]),
+            loc: loc(line),
+            kind: FeedKind::Data,
+        }
+    }
+
+    fn op(kind: OpKind, inp: u64, out: u64, line: u32) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(kind, vec![TensorType::f32(&[2])]),
+            loc: loc(line),
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    fn konst(v: f32, line: u32) -> TraceItem {
+        TraceItem::Const { id: ValueId(1), value: HostTensor::scalar_f32(v), loc: loc(line) }
+    }
+
+    fn tr(items: Vec<TraceItem>) -> Trace {
+        Trace::resolve(items, 0).unwrap()
+    }
+
+    fn sig(g: &TraceGraph) -> GraphSig {
+        graph_signature(g, &HashMap::new())
+    }
+
+    #[test]
+    fn identical_merge_histories_agree() {
+        let t = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 3)]);
+        let mut g1 = TraceGraph::new();
+        let mut g2 = TraceGraph::new();
+        g1.merge(&t).unwrap();
+        g2.merge(&t).unwrap();
+        assert_eq!(sig(&g1), sig(&g2));
+        // Re-merging a covered trace leaves the signature unchanged.
+        let before = sig(&g1);
+        g1.merge(&t).unwrap();
+        assert_eq!(before, sig(&g1));
+    }
+
+    #[test]
+    fn structure_changes_change_the_signature() {
+        let base = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2)]);
+        let mut g = TraceGraph::new();
+        g.merge(&base).unwrap();
+        let s0 = sig(&g);
+        // New branch.
+        g.merge(&tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3)])).unwrap();
+        let s1 = sig(&g);
+        assert_ne!(s0, s1);
+        // Different op kind at the same site is a different graph.
+        let mut h = TraceGraph::new();
+        h.merge(&tr(vec![feed(1, 1), op(OpKind::Neg, 1, 2, 2)])).unwrap();
+        assert_ne!(s0, sig(&h));
+        // Different location, same ops: still a different graph (locations
+        // are part of node identity).
+        let mut l = TraceGraph::new();
+        l.merge(&tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 9)])).unwrap();
+        assert_ne!(s0, sig(&l));
+    }
+
+    #[test]
+    fn const_value_matters_until_generalized() {
+        let mut g1 = TraceGraph::new();
+        g1.merge(&tr(vec![konst(1.0, 5), op(OpKind::Relu, 1, 2, 6)])).unwrap();
+        let mut g2 = TraceGraph::new();
+        g2.merge(&tr(vec![konst(2.0, 5), op(OpKind::Relu, 1, 2, 6)])).unwrap();
+        // Embedded constants compile into segments: values must distinguish.
+        assert_ne!(sig(&g1), sig(&g2));
+    }
+
+    #[test]
+    fn generalized_const_is_order_independent() {
+        // Observation order 1.0-then-2.0 vs 2.0-then-1.0 yields nodes whose
+        // first-observed value differs, but both are feeds now — canonical
+        // signatures must agree.
+        let mut g12 = TraceGraph::new();
+        g12.merge(&tr(vec![konst(1.0, 5), op(OpKind::Relu, 1, 2, 6)])).unwrap();
+        g12.merge(&tr(vec![konst(2.0, 5), op(OpKind::Relu, 1, 2, 6)])).unwrap();
+        let mut g21 = TraceGraph::new();
+        g21.merge(&tr(vec![konst(2.0, 5), op(OpKind::Relu, 1, 2, 6)])).unwrap();
+        g21.merge(&tr(vec![konst(1.0, 5), op(OpKind::Relu, 1, 2, 6)])).unwrap();
+        assert_eq!(sig(&g12), sig(&g21));
+    }
+
+    #[test]
+    fn var_types_are_part_of_the_signature() {
+        let t = tr(vec![TraceItem::Op {
+            def: OpDef::new(OpKind::Relu, vec![TensorType::f32(&[4])]),
+            loc: loc(2),
+            inputs: vec![ValueRef::Var(VarId(0))],
+            outputs: vec![ValueId(2)],
+        }]);
+        let mut g = TraceGraph::new();
+        g.merge(&t).unwrap();
+        let mut small = HashMap::new();
+        small.insert(VarId(0), TensorType::f32(&[4]));
+        let mut big = HashMap::new();
+        big.insert(VarId(0), TensorType::f32(&[8]));
+        assert_ne!(graph_signature(&g, &small), graph_signature(&g, &big));
+        // Unreferenced variables do not influence the signature.
+        let mut extra = small.clone();
+        extra.insert(VarId(7), TensorType::f32(&[64, 64]));
+        assert_eq!(graph_signature(&g, &small), graph_signature(&g, &extra));
+    }
+
+    #[test]
+    fn variant_order_is_significant() {
+        // Variant indices are the wire format of Variant Selects: graphs
+        // whose join node observed its variants in different orders are NOT
+        // interchangeable, so their signatures must differ.
+        let a = tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), op(OpKind::Neg, 2, 3, 5)]);
+        let b = tr(vec![feed(1, 1), op(OpKind::Tanh, 1, 2, 3), op(OpKind::Neg, 2, 3, 5)]);
+        let mut gab = TraceGraph::new();
+        gab.merge(&a).unwrap();
+        gab.merge(&b).unwrap();
+        let mut gba = TraceGraph::new();
+        gba.merge(&b).unwrap();
+        gba.merge(&a).unwrap();
+        assert_ne!(sig(&gab), sig(&gba));
+    }
+}

@@ -228,6 +228,27 @@ fn compile_segment(
     Ok((exe, cache.misses() > misses_before))
 }
 
+/// Check that every `Artifact` step of a plan resolves in `artifacts`.
+/// Called before compiling a fresh plan, and again by the speculation plan
+/// cache when a *cached* plan is reused under a different engine's store —
+/// a missing artifact must fail at entry, not asynchronously mid-iteration.
+pub fn validate_plan_artifacts(steps: &[Step], artifacts: &ArtifactStore) -> Result<()> {
+    for s in steps {
+        match s {
+            Step::Artifact { name, .. } => {
+                artifacts.meta(name)?;
+            }
+            Step::Switch { cases, .. } => {
+                for c in cases {
+                    validate_plan_artifacts(c, artifacts)?;
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
 /// Compile every segment of a plan. Artifact steps are validated against the
 /// artifact store (their executables are compiled lazily on first use).
 pub fn compile_plan(
@@ -237,23 +258,7 @@ pub fn compile_plan(
     graph: Arc<TraceGraph>,
     spec: PlanSpec,
 ) -> Result<CompiledPlan> {
-    fn validate_artifacts(steps: &[Step], artifacts: &ArtifactStore) -> Result<()> {
-        for s in steps {
-            match s {
-                Step::Artifact { name, .. } => {
-                    artifacts.meta(name)?;
-                }
-                Step::Switch { cases, .. } => {
-                    for c in cases {
-                        validate_artifacts(c, artifacts)?;
-                    }
-                }
-                _ => {}
-            }
-        }
-        Ok(())
-    }
-    validate_artifacts(&spec.steps, artifacts)?;
+    validate_plan_artifacts(&spec.steps, artifacts)?;
 
     let mut segments = Vec::with_capacity(spec.segments.len());
     let mut compiled_fresh = 0;

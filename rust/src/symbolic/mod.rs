@@ -18,5 +18,5 @@
 mod compiler;
 mod plan;
 
-pub use compiler::{compile_plan, CompiledPlan, CompiledSegment};
+pub use compiler::{compile_plan, validate_plan_artifacts, CompiledPlan, CompiledSegment};
 pub use plan::{Binding, PlanSpec, SegId, SegmentSpec, Step};

@@ -12,12 +12,18 @@ pub struct VarId(pub u32);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct StateId(pub u32);
 
+/// FNV-1a 64-bit offset basis — the project's stable-hash parameters, shared
+/// with the speculation graph signature (`speculate::signature`).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
 /// FNV-1a 64-bit hash (dependency-free stable hashing for locations, consts).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
+    let mut h: u64 = FNV_OFFSET;
     for &b in bytes {
         h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+        h = h.wrapping_mul(FNV_PRIME);
     }
     h
 }

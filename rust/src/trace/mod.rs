@@ -13,7 +13,7 @@ mod items;
 mod loops;
 mod recorder;
 
-pub use ids::{fnv1a, Location, ScopeStack, StateId, ValueId, VarId};
+pub use ids::{fnv1a, Location, ScopeStack, StateId, ValueId, VarId, FNV_OFFSET, FNV_PRIME};
 pub use items::{const_hash, FeedKind, ItemKey, ItemPos, ResolvedSrc, Trace, TraceItem, ValueRef};
 pub use loops::detect_tandem_repeats;
 pub use recorder::TraceRecorder;
