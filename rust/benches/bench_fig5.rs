@@ -17,7 +17,13 @@ fn main() {
     );
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
-    for name in all_program_names() {
+    // The paper's ten programs, plus `moe_router` — the dynamic-control-flow
+    // workload whose recurring same-site divergence exercises profile-guided
+    // segment splitting (its `steps_saved_by_split_delta` should be > 0 with
+    // speculation on).
+    let mut programs = all_program_names();
+    programs.push("moe_router");
+    for name in programs {
         let eager = match run_program(name, ExecMode::Eager, true, cfg) {
             Ok(r) => r.steps_per_sec,
             Err(e) => {
@@ -77,6 +83,14 @@ fn main() {
                                 ("reentry_deferred_delta", num(bd.reentry_deferred)),
                                 ("reentry_ms_delta", Json::Num(bd.reentry_ms)),
                                 ("reentry_avg_ms", Json::Num(st.reentry_avg_ms())),
+                                // Segment scheduling: hot-site splits in the
+                                // last plan, and how much in-flight symbolic
+                                // work fallbacks cancelled vs salvaged at
+                                // split boundaries (measured-window deltas).
+                                ("plan_split_points", num(st.plan_split_points)),
+                                ("steps_cancelled_delta", num(bd.steps_cancelled)),
+                                ("steps_saved_by_split_delta", num(bd.steps_saved_by_split)),
+                                ("sites_overflowed", num(st.sites_overflowed)),
                             ]),
                         ));
                     }

@@ -66,10 +66,11 @@ pub struct RunConfig {
     /// 0 = off, 1 = dead-code elimination only, >=2 = full pipeline
     /// (const-fold, algebraic, CSE, DCE to a fixpoint).
     pub opt_level: u8,
-    /// Speculation subsystem settings (plan cache + re-entry policy); JSON
-    /// key `speculate` (bool, or object `{"plan_cache": bool, "reentry":
-    /// "eager"|"adaptive"|K}`), CLI `--plan-cache` / `--reentry-policy`,
-    /// env `TERRA_SPECULATE`.
+    /// Speculation subsystem settings (plan cache + re-entry policy +
+    /// profile-guided segment splitting); JSON key `speculate` (bool, or
+    /// object `{"plan_cache": bool, "reentry": "eager"|"adaptive"|K,
+    /// "split_hot_sites": bool}`), CLI `--plan-cache` / `--reentry-policy` /
+    /// `--split-hot-sites`, env `TERRA_SPECULATE` / `TERRA_SPLIT_HOT_SITES`.
     pub speculate: SpeculateConfig,
 }
 
@@ -160,6 +161,11 @@ impl RunConfig {
                         TerraError::Config("speculate.plan_cache must be a bool".into())
                     })?;
                 }
+                if let Some(v) = s.get("split_hot_sites") {
+                    self.speculate.split_hot_sites = v.as_bool().ok_or_else(|| {
+                        TerraError::Config("speculate.split_hot_sites must be a bool".into())
+                    })?;
+                }
                 if let Some(v) = s.get("reentry") {
                     self.speculate.policy = match (v.as_str(), v.as_usize()) {
                         (Some(name), _) => ReentryPolicy::parse(name)?,
@@ -235,6 +241,14 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err(), "non-bool/str/obj must be rejected");
         let j = Json::parse(r#"{"speculate": {"plan_cache": "off"}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err(), "non-bool plan_cache must be rejected");
+        // Profile-guided splitting knob.
+        let j = Json::parse(r#"{"speculate": {"split_hot_sites": false}}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert!(!cfg.speculate.split_hot_sites);
+        assert!(cfg.speculate.plan_cache, "other knobs keep their defaults");
+        let j = Json::parse(r#"{"speculate": {"split_hot_sites": "maybe"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-bool split_hot_sites must be rejected");
+        assert!(!SpeculateConfig::disabled().split_hot_sites, "off preset disables splitting");
     }
 
     #[test]

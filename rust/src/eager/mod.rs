@@ -17,6 +17,12 @@ pub struct EagerExecutor {
     client: Client,
     cache: Arc<ExecCache>,
     artifacts: Arc<ArtifactStore>,
+    /// Shim backend resolved once at construction: the executable cache is
+    /// backend-keyed, and reading `XLA_SHIM_BACKEND` per dispatch would put
+    /// an env lookup + allocation on the measured eager hot path. The env
+    /// var only flips between engine runs, and each run builds a fresh
+    /// executor.
+    backend: xla::ShimBackend,
     dispatches: AtomicU64,
     dispatch_nanos: AtomicU64,
 }
@@ -27,6 +33,7 @@ impl EagerExecutor {
             client,
             cache: ExecCache::global().clone(),
             artifacts,
+            backend: xla::active_backend(),
             dispatches: AtomicU64::new(0),
             dispatch_nanos: AtomicU64::new(0),
         }
@@ -48,7 +55,7 @@ impl EagerExecutor {
             crate::ops::OpKind::ArtifactCall { name, .. } => {
                 self.artifacts.executable(&self.client, name)?
             }
-            _ => self.cache.get_or_compile_op(&self.client, def)?,
+            _ => self.cache.get_or_compile_op_for(self.backend, &self.client, def)?,
         };
         let out = exe.run(&self.client, inputs)?;
         self.dispatches.fetch_add(1, Ordering::Relaxed);

@@ -36,11 +36,18 @@ pub struct GenOptions {
     /// Fuse whole straight-line segments into single computations (the ±XLA
     /// axis of Figure 5). `false` compiles one computation per op.
     pub fusion: bool,
+    /// Profile-guided segment split points: fused chains are cut right
+    /// *after* each of these nodes, so a divergence fallback at such a site
+    /// (the walker's position is the last validated node) lands on a segment
+    /// boundary and cancels only the downstream segments. Fed from the
+    /// speculation controller's divergence profile; irrelevant when `fusion`
+    /// is off (every op is its own segment already).
+    pub split_points: BTreeSet<NodeId>,
 }
 
 impl Default for GenOptions {
     fn default() -> Self {
-        GenOptions { fusion: true }
+        GenOptions { fusion: true, split_points: BTreeSet::new() }
     }
 }
 
@@ -55,6 +62,8 @@ pub fn generate_plan(
         graph,
         var_types,
         fusion: opts.fusion,
+        split_points: &opts.split_points,
+        splits_applied: Vec::new(),
         ipdom,
         segments: Vec::new(),
         chain: Vec::new(),
@@ -66,7 +75,7 @@ pub fn generate_plan(
     b.emit_range(START, END, &mut steps)?;
     b.flush(&mut steps)?;
 
-    let mut spec = PlanSpec { steps, segments: b.segments };
+    let mut spec = PlanSpec { steps, segments: b.segments, split_points: b.splits_applied };
     fill_outputs(graph, &mut spec);
     // Drop segments that produce nothing anyone reads (dead compute).
     prune_dead_segments(&mut spec);
@@ -77,6 +86,10 @@ struct Builder<'g> {
     graph: &'g TraceGraph,
     var_types: &'g HashMap<VarId, TensorType>,
     fusion: bool,
+    /// Requested split points (hot divergence sites).
+    split_points: &'g BTreeSet<NodeId>,
+    /// Split points that actually cut a fused chain.
+    splits_applied: Vec<NodeId>,
     ipdom: Vec<Option<NodeId>>,
     segments: Vec<SegmentSpec>,
     /// Current straight-line run of op nodes.
@@ -218,6 +231,12 @@ impl<'g> Builder<'g> {
                 self.chain.push(n);
                 self.chain_set.insert(n);
                 if !self.fusion {
+                    self.flush(out)?;
+                } else if self.split_points.contains(&n) {
+                    // Profile-guided split: end the fused chain right after a
+                    // hot divergence site, so a fallback there aligns with a
+                    // segment boundary (see `symbolic::truncation_boundary`).
+                    self.splits_applied.push(n);
                     self.flush(out)?;
                 }
             }
@@ -432,7 +451,8 @@ mod tests {
     }
 
     fn gen(graph: &TraceGraph, fusion: bool) -> PlanSpec {
-        generate_plan(graph, &HashMap::new(), &GenOptions { fusion }).unwrap()
+        generate_plan(graph, &HashMap::new(), &GenOptions { fusion, ..Default::default() })
+            .unwrap()
     }
 
     #[test]
@@ -521,6 +541,47 @@ mod tests {
             .expect("switch step");
         assert_eq!(sw.len(), 2);
         assert!(sw.iter().any(|c| c.is_empty()), "END case is empty");
+    }
+
+    #[test]
+    fn split_point_cuts_fused_chain_at_the_site() {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![
+            feed(1, 1),
+            op(OpKind::Relu, 1, 2, 2),
+            op(OpKind::Neg, 2, 3, 3),
+            op(OpKind::Tanh, 3, 4, 4),
+            fetch(4, 5),
+        ]))
+        .unwrap();
+        // Without splits the three ops fuse into one segment; find the Neg
+        // node to split after it.
+        let whole = gen(&g, true);
+        let seg = whole.segments.iter().find(|s| !s.nodes.is_empty()).unwrap();
+        assert_eq!(seg.nodes.len(), 3);
+        let site = seg.nodes[1]; // the Neg node
+        let opts = GenOptions { fusion: true, split_points: [site].into_iter().collect() };
+        let plan = generate_plan(&g, &HashMap::new(), &opts).unwrap();
+        let (segs, _, _, _, _) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(segs, 2, "split cuts the chain in two: {}", plan.summary());
+        assert_eq!(plan.split_points, vec![site], "applied split is recorded");
+        // The fallback boundary now aligns with the site: the upstream
+        // segment ends exactly at the hot divergence node.
+        let boundary = plan.truncation_boundary(site);
+        assert!(boundary.is_some(), "split site must be a truncation boundary");
+        // An un-split plan has no boundary at the (mid-segment) site.
+        assert_eq!(whole.truncation_boundary(site), None);
+    }
+
+    #[test]
+    fn split_point_outside_any_chain_is_ignored() {
+        let mut g = TraceGraph::new();
+        g.merge(&tr(vec![feed(1, 1), op(OpKind::Relu, 1, 2, 2), fetch(2, 3)])).unwrap();
+        let opts = GenOptions { fusion: true, split_points: [NodeId(999)].into_iter().collect() };
+        let plan = generate_plan(&g, &HashMap::new(), &opts).unwrap();
+        assert!(plan.split_points.is_empty());
+        let (segs, _, _, _, _) = PlanSpec::count_steps(&plan.steps);
+        assert_eq!(segs, 1);
     }
 
     #[test]

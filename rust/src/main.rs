@@ -73,6 +73,15 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(v) = flags.get("reentry-policy") {
         cfg.speculate.policy = ReentryPolicy::parse(v)?;
     }
+    if let Some(v) = flags.get("split-hot-sites") {
+        cfg.speculate.split_hot_sites = match v.as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => {
+                return Err(TerraError::Config("bad --split-hot-sites (expected on|off)".into()))
+            }
+        };
+    }
     if let Some(v) = flags.get("artifacts") {
         cfg.artifacts_dir = v.clone();
     }
@@ -164,6 +173,13 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
         s.reentry_deferred,
         s.reentry_avg_ms(),
     );
+    println!(
+        "splits: {} hot-site split(s) in last plan, {} segment steps saved by splitting, {} cancelled, {} profiler overflows",
+        s.plan_split_points,
+        s.steps_saved_by_split,
+        s.steps_cancelled,
+        s.sites_overflowed,
+    );
 }
 
 fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
@@ -210,7 +226,7 @@ fn cmd_trace_dump(flags: &HashMap<String, String>) -> Result<()> {
         .into_iter()
         .map(|id| (id, engine.vars().ty(id).unwrap()))
         .collect();
-    let opts = GenOptions { fusion: cfg.fusion };
+    let opts = GenOptions { fusion: cfg.fusion, ..Default::default() };
     let raw = generate_plan(engine.trace_graph(), &var_types, &opts)?;
     println!("raw       {}", raw.summary());
     let pm = PassManager::standard(cfg.opt_level);
@@ -271,7 +287,7 @@ fn main() {
         "help" | "--help" | "-h" => {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
-                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K]\n  \
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off]\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \

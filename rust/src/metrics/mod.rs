@@ -62,6 +62,14 @@ pub struct BreakdownSnapshot {
     /// Milliseconds spent entering co-execution (trace-stable decision →
     /// skeleton backend swapped in), cumulative at snapshot time.
     pub reentry_ms: f64,
+    /// Executable plan steps cancelled by divergence fallbacks.
+    pub steps_cancelled: u64,
+    /// Executable plan steps that survived a fallback because the divergence
+    /// site aligned with a (profile-guided) segment boundary.
+    pub steps_saved_by_split: u64,
+    /// Fallbacks the divergence profiler could not attribute because its
+    /// per-site map was saturated.
+    pub sites_overflowed: u64,
 }
 
 impl Breakdown {
@@ -112,6 +120,9 @@ impl Breakdown {
             compiles_skipped: 0,
             reentry_deferred: 0,
             reentry_ms: 0.0,
+            steps_cancelled: 0,
+            steps_saved_by_split: 0,
+            sites_overflowed: 0,
         }
     }
 }
@@ -143,6 +154,11 @@ impl BreakdownSnapshot {
             compiles_skipped: self.compiles_skipped.saturating_sub(earlier.compiles_skipped),
             reentry_deferred: self.reentry_deferred.saturating_sub(earlier.reentry_deferred),
             reentry_ms: self.reentry_ms - earlier.reentry_ms,
+            steps_cancelled: self.steps_cancelled.saturating_sub(earlier.steps_cancelled),
+            steps_saved_by_split: self
+                .steps_saved_by_split
+                .saturating_sub(earlier.steps_saved_by_split),
+            sites_overflowed: self.sites_overflowed.saturating_sub(earlier.sites_overflowed),
         }
     }
 }

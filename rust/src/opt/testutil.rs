@@ -144,5 +144,5 @@ pub fn run_pass_with_eval(pass: &dyn Pass, graph: &mut TraceGraph) -> PassStats 
 }
 
 pub fn plan_for(graph: &TraceGraph) -> crate::error::Result<PlanSpec> {
-    generate_plan(graph, &HashMap::new(), &GenOptions { fusion: true })
+    generate_plan(graph, &HashMap::new(), &GenOptions { fusion: true, ..Default::default() })
 }

@@ -24,6 +24,10 @@ pub fn all_program_names() -> Vec<&'static str> {
 pub fn build_program(name: &str) -> Result<Box<dyn Program>> {
     Ok(match name {
         "tiny_linear" => Box::new(crate::programs::TinyLinear::new(10)),
+        // Dynamic-control-flow workload for the segment-scheduling layer:
+        // recurring same-site divergence (expert switch every 8 steps, so
+        // the site gets hot inside a default 40-step bench window).
+        "moe_router" => Box::new(crate::programs::MoeRouter::new(8)),
         "resnet50" => Box::new(crate::programs::ResNetMini::new()),
         "dropblock" => Box::new(crate::programs::DropBlockCnn::new()),
         "sdpoint" => Box::new(crate::programs::SdPointCnn::new()),

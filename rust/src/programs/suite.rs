@@ -59,3 +59,73 @@ impl Program for TinyLinear {
         &[PyFeature::Materialization, PyFeature::MultiPath]
     }
 }
+
+/// Mixture-of-experts-style router: a shared trunk feeds one of four expert
+/// weight vectors, selected by *host* logic that switches expert every
+/// `switch_every` steps. Each first use of a new expert is a novel dataflow
+/// variant at the trunk→expert edge, so co-execution diverges repeatedly
+/// **at the same graph site** (the last trunk op) — the hot-divergence-site
+/// workload profile-guided segment splitting targets: after the site gets
+/// hot, plans are pre-split there and a later fallback cancels only the
+/// expert-side segments while the trunk segment's work survives.
+pub struct MoeRouter {
+    pub trunk: Option<Variable>,
+    pub experts: Vec<Variable>,
+    pub switch_every: u64,
+}
+
+impl MoeRouter {
+    pub fn new(switch_every: u64) -> Self {
+        MoeRouter { trunk: None, experts: Vec::new(), switch_every: switch_every.max(1) }
+    }
+
+    /// Host-side routing decision: monotone sweep through the experts.
+    pub fn expert_index(&self, step: u64) -> usize {
+        ((step / self.switch_every) as usize).min(3)
+    }
+}
+
+impl Program for MoeRouter {
+    fn name(&self) -> &'static str {
+        "moe_router"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.trunk = Some(sess.variable(
+            "trunk",
+            HostTensor::f32(vec![4], vec![0.6, -0.4, 0.8, 1.2])?,
+            true,
+        )?);
+        for (i, base) in [0.9f32, 1.1, 0.7, 1.3].into_iter().enumerate() {
+            self.experts.push(sess.variable(
+                &format!("expert{i}"),
+                HostTensor::f32(vec![4], (0..4).map(|j| base + j as f32 * 0.05).collect())?,
+                true,
+            )?);
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let trunk = self.trunk.as_ref().unwrap();
+        let x = sess.feed(HostTensor::f32(
+            vec![4],
+            (0..4).map(|i| (0.3 + step as f32 * 0.02 + i as f32 * 0.1).cos()).collect(),
+        )?)?;
+        // Shared trunk: everything up to here is expert-independent — the
+        // segment a pre-split fallback salvages.
+        let h = trunk.read().mul(&x)?.tanh()?;
+        // Host-driven routing: same call site every step, different expert
+        // variable — a dataflow variant, not a new op path.
+        let e = &self.experts[self.expert_index(step)];
+        let y = h.mul(&e.read())?;
+        let new_trunk = trunk.read().mul_scalar(0.95)?.add(&y.mul_scalar(0.05)?)?;
+        trunk.assign(&new_trunk)?;
+        let loss = y.mul(&y)?.reduce_mean(&[0], false)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+
+    fn features(&self) -> &'static [PyFeature] {
+        &[PyFeature::GeneratorFlow, PyFeature::MultiPath]
+    }
+}

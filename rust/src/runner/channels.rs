@@ -1,10 +1,12 @@
 //! The bundle of channels connecting the two runners.
 
+use crate::error::TerraError;
 use crate::metrics::Breakdown;
 use crate::runner::mailbox::{Gate, Mailbox, Semaphore};
+use crate::symbolic::MessageNodes;
 use crate::tensor::HostTensor;
 use crate::tracegraph::NodeId;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Shared communication state for one co-execution phase.
 ///
@@ -28,6 +30,12 @@ pub struct CoExecChannels {
     pub allowance: Semaphore,
     pub lazy_gate: Option<Gate>,
     pub breakdown: Arc<Breakdown>,
+    /// Partial-cancel bookkeeping: `(iteration, step limit)` set by a
+    /// divergence fallback whose site aligned with a segment boundary. The
+    /// GraphRunner checks it before every top-level plan step, so the
+    /// truncated iteration finishes its validated prefix (`steps[..limit]`)
+    /// and only the downstream steps are cancelled.
+    truncation: Mutex<Option<(u64, usize)>>,
 }
 
 /// Sentinel node id for iteration-level messages (commit barrier).
@@ -44,7 +52,55 @@ impl CoExecChannels {
             allowance: Semaphore::new(max_run_ahead),
             lazy_gate: if lazy { Some(Gate::new()) } else { None },
             breakdown,
+            truncation: Mutex::new(None),
         })
+    }
+
+    /// Partial cancellation of a diverged iteration whose site aligned with
+    /// a segment boundary: the GraphRunner may finish `steps[..limit]` of
+    /// iteration `iter` (its messages were all delivered before the
+    /// divergence), everything at or past `limit` — and every later
+    /// iteration — is cancelled. `downstream` names the mailbox keys of the
+    /// cancelled suffix so a runner already blocked there is woken.
+    ///
+    /// The commit token for `iter` is cancelled outright: a truncated
+    /// iteration never commits its staged variable updates (the engine
+    /// replays the whole step imperatively), it only completes the prefix
+    /// whose results the PythonRunner already consumed.
+    pub fn cancel_downstream(&self, iter: u64, limit: usize, downstream: &MessageNodes) {
+        *self.truncation.lock().unwrap() = Some((iter, limit));
+        self.feeds.cancel_keys(iter, &downstream.feeds);
+        self.cases.cancel_keys(iter, &downstream.cases);
+        self.variants.cancel_keys(iter, &downstream.variants);
+        self.commits.cancel_from(iter);
+        self.cancel_from(iter + 1);
+    }
+
+    /// May the GraphRunner execute top-level plan step `idx` of `iter`?
+    /// Returns `Cancelled` past a truncation boundary.
+    pub fn step_allowed(&self, iter: u64, idx: usize) -> Result<(), TerraError> {
+        if let Some((t_iter, limit)) = *self.truncation.lock().unwrap() {
+            if iter > t_iter || (iter == t_iter && idx >= limit) {
+                return Err(TerraError::Cancelled);
+            }
+        }
+        Ok(())
+    }
+
+    /// May the GraphRunner *begin* iteration `iter` at all? A truncation
+    /// targeting this (or an earlier) iteration means the divergence
+    /// fallback already happened while the runner had not started it: there
+    /// is no in-flight prefix to finish cleanly, so starting one after the
+    /// fact would be pure waste. A runner already past this check when the
+    /// truncation lands instead finishes its in-flight prefix and is stopped
+    /// at the boundary by [`CoExecChannels::step_allowed`].
+    pub fn iteration_allowed(&self, iter: u64) -> Result<(), TerraError> {
+        if let Some((t_iter, _)) = *self.truncation.lock().unwrap() {
+            if iter >= t_iter {
+                return Err(TerraError::Cancelled);
+            }
+        }
+        Ok(())
     }
 
     /// Per-iteration mailbox hygiene: once iteration `upto` has committed,

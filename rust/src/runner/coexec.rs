@@ -27,14 +27,14 @@ use crate::runner::graph_runner::GraphRunner;
 use crate::runner::skeleton::SkeletonBackend;
 use crate::runtime::{ArtifactStore, Client, ExecCache};
 use crate::speculate::{
-    graph_signature, GraphSig, PlanCache, PlanKey, ReentryController, ReentryPolicy,
-    SpeculateConfig,
+    graph_signature, parse_site_node, split_min_count, GraphSig, PlanCache, PlanKey,
+    ReentryController, ReentryPolicy, SpeculateConfig,
 };
 use crate::symbolic::{compile_plan, validate_plan_artifacts, CompiledPlan};
 use crate::tensor::TensorType;
-use crate::tracegraph::TraceGraph;
+use crate::tracegraph::{NodeId, TraceGraph};
 use crate::trace::VarId;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -101,6 +101,23 @@ pub struct EngineStats {
     /// Cumulative re-entry latency (trace-stable decision → skeleton backend
     /// swapped in), nanoseconds; see [`EngineStats::reentry_avg_ms`].
     pub reentry_ns: u64,
+    /// Executable plan steps (segments/artifacts) cancelled by divergence
+    /// fallbacks: the symbolic work of the in-flight iteration thrown away.
+    /// Switch cases count in full, so this is an upper bound per fallback.
+    pub steps_cancelled: u64,
+    /// Executable plan steps upstream of a fallback's truncation boundary —
+    /// the part of the plan a boundary-aligned divergence (profile-guided
+    /// splitting) did *not* cancel: a mid-flight GraphRunner finishes them
+    /// cleanly instead of being aborted, and only downstream steps are
+    /// cancelled. Structural (plan-shape) count, so it is deterministic; a
+    /// runner that had not started the iteration skips even the prefix.
+    pub steps_saved_by_split: u64,
+    /// Divergence-site split points applied to the most recent plan.
+    pub plan_split_points: u64,
+    /// Fallbacks the divergence profiler could not attribute to their own
+    /// site because its per-site map was saturated (a non-zero value means
+    /// the profile under-reports — it must not read as "no divergence").
+    pub sites_overflowed: u64,
 }
 
 impl EngineStats {
@@ -160,6 +177,13 @@ pub struct Engine {
     /// Speculation subsystem: plan cache (None = disabled) + re-entry brain.
     plan_cache: Option<Arc<PlanCache>>,
     controller: ReentryController,
+    /// Profile-guided segment splitting: cut plan segments at hot divergence
+    /// sites and truncate (rather than fully cancel) fallbacks that land on
+    /// a segment boundary.
+    split_hot_sites: bool,
+    /// The plan the current (or most recent) GraphRunner executes; consulted
+    /// by the fallback path for truncation boundaries.
+    current_plan: Option<Arc<CompiledPlan>>,
     /// Signature of the current merged graph, invalidated on every changing
     /// merge and recomputed lazily on stable traces.
     cached_sig: Option<GraphSig>,
@@ -240,6 +264,10 @@ impl Engine {
         let policy =
             if mode == ExecMode::AutoGraph { ReentryPolicy::Eager } else { speculate.policy };
         let plan_cache_on = speculate.plan_cache && mode != ExecMode::AutoGraph;
+        // The AutoGraph baseline keeps seed fallback behaviour for the same
+        // reason it skips the plan cache: its re-conversion cost is part of
+        // what the paper measures.
+        let split_hot_sites = speculate.split_hot_sites && mode != ExecMode::AutoGraph;
         Ok(Engine {
             sess,
             client,
@@ -253,6 +281,8 @@ impl Engine {
             opt: OptTotals::default(),
             plan_cache: if plan_cache_on { Some(PlanCache::global().clone()) } else { None },
             controller: ReentryController::new(policy),
+            split_hot_sites,
+            current_plan: None,
             cached_sig: None,
             phase,
             graph: TraceGraph::new(),
@@ -340,6 +370,9 @@ impl Engine {
         snap.compiles_skipped = self.stats.segment_compiles_skipped;
         snap.reentry_deferred = self.stats.reentry_deferred;
         snap.reentry_ms = self.stats.reentry_ns as f64 / 1e6;
+        snap.steps_cancelled = self.stats.steps_cancelled;
+        snap.steps_saved_by_split = self.stats.steps_saved_by_split;
+        snap.sites_overflowed = self.stats.sites_overflowed;
     }
 
     fn var_types(&self) -> Result<HashMap<VarId, TensorType>> {
@@ -402,10 +435,12 @@ impl Engine {
                             "step {step}: divergence ({why}); falling back to tracing"
                         ));
                         self.sess.clear_tape();
-                        self.fallback(step)?;
+                        let site = parse_site_node(&why);
+                        self.fallback(step, site)?;
                         self.sess.restore_host_states(host_snapshot);
                         self.stats.fallbacks += 1;
                         self.controller.note_fallback(step, &why);
+                        self.stats.sites_overflowed = self.controller.sites_overflowed();
                         // Replay the whole step imperatively while tracing.
                         self.trace_step(prog, step)
                     }
@@ -451,9 +486,22 @@ impl Engine {
         Ok(loss)
     }
 
-    /// Current plan-cache key, computing (and memoizing) the graph signature
-    /// if the cache is enabled. `None` while the cache is disabled.
-    fn plan_key(&mut self) -> Option<PlanKey> {
+    /// Split points for the next plan: divergence sites hot enough in the
+    /// controller's profile (empty while splitting is off). NodeIds are
+    /// stable across merges and preserved by the optimizer passes, so the
+    /// set remains valid on the plan-side graph clone; a site the optimizer
+    /// removed simply never starts a chain and is ignored.
+    fn current_split_set(&self) -> BTreeSet<NodeId> {
+        if !self.split_hot_sites {
+            return BTreeSet::new();
+        }
+        self.controller.profile().split_candidates(split_min_count())
+    }
+
+    /// Current plan-cache key for the given split set, computing (and
+    /// memoizing) the graph signature if the cache is enabled. `None` while
+    /// the cache is disabled.
+    fn plan_key(&mut self, splits: &BTreeSet<NodeId>) -> Option<PlanKey> {
         self.plan_cache.as_ref()?;
         let sig = match self.cached_sig {
             Some(s) => s,
@@ -464,7 +512,7 @@ impl Engine {
                 s
             }
         };
-        Some(PlanKey { sig, fusion: self.fusion, opt_level: self.opt_level })
+        Some(PlanKey::new(sig, self.fusion, self.opt_level, splits))
     }
 
     /// Variable types for signature hashing; a variable whose type cannot be
@@ -481,7 +529,8 @@ impl Engine {
     }
 
     fn signature_in_cache(&mut self) -> bool {
-        match (self.plan_key(), &self.plan_cache) {
+        let splits = self.current_split_set();
+        match (self.plan_key(&splits), &self.plan_cache) {
             (Some(key), Some(cache)) => cache.contains(&key),
             _ => false,
         }
@@ -497,7 +546,10 @@ impl Engine {
     fn enter_coexec(&mut self, next_iter: u64) -> Result<()> {
         let t_enter = Instant::now();
         let full = Arc::new(self.graph.clone());
-        let key = self.plan_key();
+        // One split set per entry: it shapes both the cache key and the
+        // generated plan, so the two must agree.
+        let splits = self.current_split_set();
+        let key = self.plan_key(&splits);
         let cached = match (&key, &self.plan_cache) {
             (Some(k), Some(cache)) => cache.lookup(k),
             _ => None,
@@ -525,13 +577,15 @@ impl Engine {
                 if self.plan_cache.is_some() {
                     self.stats.plan_cache_misses += 1;
                 }
-                let plan = Arc::new(self.build_plan(&full)?);
+                let plan = Arc::new(self.build_plan(&full, &splits)?);
                 if let (Some(k), Some(cache)) = (key, &self.plan_cache) {
                     cache.insert(k, plan.clone());
                 }
                 plan
             }
         };
+        self.stats.plan_split_points = plan.split_points.len() as u64;
+        self.current_plan = Some(plan.clone());
         let lazy = self.mode == ExecMode::TerraLazy;
         let channels = CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone());
         let runner = GraphRunner::spawn(
@@ -555,9 +609,14 @@ impl Engine {
     }
 
     /// The full plan pipeline: optimize a plan-side clone of the TraceGraph,
-    /// generate the plan and compile its segments.
-    fn build_plan(&mut self, full: &Arc<TraceGraph>) -> Result<CompiledPlan> {
-        let opts = GenOptions { fusion: self.fusion };
+    /// generate the plan (cutting segments at the given hot divergence
+    /// sites) and compile its segments.
+    fn build_plan(
+        &mut self,
+        full: &Arc<TraceGraph>,
+        splits: &BTreeSet<NodeId>,
+    ) -> Result<CompiledPlan> {
+        let opts = GenOptions { fusion: self.fusion, split_points: splits.clone() };
         let pm = PassManager::standard(self.opt_level);
         // With the pipeline off (or inert) the plan shares the skeleton's
         // graph — no second deep clone on the retrace hot path.
@@ -599,10 +658,54 @@ impl Engine {
     /// Divergence fallback: cancel the GraphRunner from `iter` onward, join
     /// it (it finishes committed earlier iterations first), and swap back to
     /// the tracing backend.
-    fn fallback(&mut self, iter: u64) -> Result<()> {
+    ///
+    /// When the divergence `site` aligns with a segment boundary of the
+    /// current plan (profile-guided splitting cuts segments at hot sites for
+    /// exactly this), the cancellation is **partial**: the runner finishes
+    /// the validated prefix of the diverged iteration — whose fetches the
+    /// PythonRunner already consumed and whose messages were all delivered —
+    /// and only the steps downstream of the site are cancelled. The
+    /// truncated iteration still never commits its staged variable updates;
+    /// the step is replayed imperatively either way.
+    fn fallback(&mut self, iter: u64, site: Option<NodeId>) -> Result<()> {
         let channels = self.channels.take();
+        let plan = self.current_plan.take();
+        // Partial cancel needs a boundary-aligned site and the concurrent
+        // (non-lazy) runner protocol. Whether any prefix work actually runs
+        // is the runner's call: a runner mid-flight in the diverged
+        // iteration completes its prefix cleanly at the boundary (work
+        // already launched — whose fetches the PythonRunner consumed — is
+        // not aborted, and downstream segments with resident inputs are
+        // never launched), while a runner that has not started the iteration
+        // skips it outright (`CoExecChannels::iteration_allowed`) — there is
+        // no in-flight prefix, so executing one after the fact would be
+        // pure waste. The lazy runner only executes on demand, so it keeps
+        // the seed whole-iteration cancel.
+        let boundary = match (&plan, site, self.split_hot_sites, self.mode) {
+            (Some(p), Some(s), true, ExecMode::Terra) => {
+                p.truncation_boundary(s).filter(|&b| b > 0)
+            }
+            _ => None,
+        };
         if let Some(ch) = &channels {
-            ch.cancel_from(iter);
+            match (boundary, &plan) {
+                (Some(limit), Some(p)) => {
+                    let (saved, cancelled) = p.split_savings(limit);
+                    debug_log(format_args!(
+                        "partial cancel at step {iter}: boundary {limit}, {saved} segment \
+                         steps saved, {cancelled} cancelled"
+                    ));
+                    ch.cancel_downstream(iter, limit, &p.downstream_message_nodes(limit));
+                    self.stats.steps_saved_by_split += saved;
+                    self.stats.steps_cancelled += cancelled;
+                }
+                _ => {
+                    ch.cancel_from(iter);
+                    if let Some(p) = &plan {
+                        self.stats.steps_cancelled += p.executable_steps();
+                    }
+                }
+            }
         }
         if let Some(r) = self.runner.take() {
             match r.join() {

@@ -157,6 +157,10 @@ fn run_iteration(
     breakdown: &Breakdown,
     iter: u64,
 ) -> Result<()> {
+    // A truncated iteration the runner has not started yet is skipped
+    // outright — only an iteration already mid-flight when the partial
+    // cancel lands finishes its prefix (see CoExecChannels::iteration_allowed).
+    channels.iteration_allowed(iter)?;
     {
         let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
         channels.allowance.acquire(iter)?;
@@ -170,7 +174,26 @@ fn run_iteration(
         staged: HashMap::new(),
         variant_sel: HashMap::new(),
     };
-    run_steps(&plan.steps, plan, client, artifacts, vars, channels, breakdown, iter, &mut st)?;
+    // Top-level steps run one at a time behind the truncation gate: a
+    // partial cancel (divergence at a segment boundary) lets the validated
+    // prefix finish and stops the runner exactly at the boundary instead of
+    // letting it barrel into downstream segments whose inputs happen to be
+    // resident. Nested Switch bodies need no gate — truncation boundaries
+    // are top-level indices (see `CompiledPlan::truncation_boundary`).
+    for (idx, step) in plan.steps.iter().enumerate() {
+        channels.step_allowed(iter, idx)?;
+        run_steps(
+            std::slice::from_ref(step),
+            plan,
+            client,
+            artifacts,
+            vars,
+            channels,
+            breakdown,
+            iter,
+            &mut st,
+        )?;
+    }
     // Commit barrier: only commit after the PythonRunner validated the trace.
     {
         let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);

@@ -8,7 +8,7 @@
 
 use crate::error::TerraError;
 use crate::tracegraph::NodeId;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
 
 type Key = (u64, NodeId);
@@ -22,6 +22,10 @@ struct State<V> {
     map: HashMap<Key, V>,
     /// All takes for iterations >= this value fail with `Cancelled`.
     cancel_from: u64,
+    /// Individually cancelled keys (partial cancellation: the truncated
+    /// iteration's *prefix* keeps draining, only the keys downstream of the
+    /// truncation boundary fail).
+    cancelled: HashSet<Key>,
     /// Messages discarded by [`Mailbox::gc_le`] (unconsumed values for
     /// already-committed iterations, e.g. feeds for plan-eliminated nodes).
     dropped: u64,
@@ -39,6 +43,7 @@ impl<V> Mailbox<V> {
             inner: Mutex::new(State {
                 map: HashMap::new(),
                 cancel_from: u64::MAX,
+                cancelled: HashSet::new(),
                 dropped: 0,
             }),
             cv: Condvar::new(),
@@ -56,7 +61,7 @@ impl<V> Mailbox<V> {
     pub fn take(&self, iter: u64, node: NodeId) -> Result<V, TerraError> {
         let mut st = self.inner.lock().unwrap();
         loop {
-            if iter >= st.cancel_from {
+            if iter >= st.cancel_from || st.cancelled.contains(&(iter, node)) {
                 return Err(TerraError::Cancelled);
             }
             if let Some(v) = st.map.remove(&(iter, node)) {
@@ -64,6 +69,23 @@ impl<V> Mailbox<V> {
             }
             st = self.cv.wait(st).unwrap();
         }
+    }
+
+    /// Cancel pending and future takes for specific `(iter, node)` keys,
+    /// leaving every other key of the same iteration alive. The partial-
+    /// cancellation counterpart of [`Mailbox::cancel_from`]: a truncated
+    /// iteration's prefix keeps draining its already-delivered messages
+    /// while a consumer blocked downstream of the truncation boundary is
+    /// woken with `Cancelled`.
+    pub fn cancel_keys(&self, iter: u64, nodes: &HashSet<NodeId>) {
+        if nodes.is_empty() {
+            return;
+        }
+        let mut st = self.inner.lock().unwrap();
+        for &n in nodes {
+            st.cancelled.insert((iter, n));
+        }
+        self.cv.notify_all();
     }
 
     /// Non-blocking probe (used in tests and diagnostics).
@@ -101,6 +123,7 @@ impl<V> Mailbox<V> {
     pub fn reset_cancel(&self) {
         let mut st = self.inner.lock().unwrap();
         st.cancel_from = u64::MAX;
+        st.cancelled.clear();
         st.map.clear();
         self.cv.notify_all();
     }
@@ -225,6 +248,24 @@ mod tests {
         // Earlier iterations still work.
         mb.put(4, NodeId(1), 9);
         assert_eq!(mb.take(4, NodeId(1)).unwrap(), 9);
+    }
+
+    #[test]
+    fn cancel_keys_is_surgical() {
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new());
+        mb.put(3, NodeId(1), 10);
+        // A blocked take on a downstream key is woken with Cancelled...
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.take(3, NodeId(2)));
+        std::thread::sleep(Duration::from_millis(20));
+        let downstream: std::collections::HashSet<NodeId> = [NodeId(2)].into_iter().collect();
+        mb.cancel_keys(3, &downstream);
+        assert!(matches!(h.join().unwrap(), Err(TerraError::Cancelled)));
+        // ...while the same iteration's other keys keep draining.
+        assert_eq!(mb.take(3, NodeId(1)).unwrap(), 10);
+        // A pre-delivered message on a cancelled key is also refused.
+        mb.put(3, NodeId(2), 11);
+        assert!(matches!(mb.take(3, NodeId(2)), Err(TerraError::Cancelled)));
     }
 
     #[test]

@@ -42,9 +42,30 @@ impl ExecCache {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// Fetch (or compile and insert) the single-op executable for `def`.
+    /// Fetch (or compile and insert) the single-op executable for `def`,
+    /// resolving the shim backend from the environment. Hot paths that
+    /// dispatch per op should resolve the backend once and use
+    /// [`ExecCache::get_or_compile_op_for`] instead.
     pub fn get_or_compile_op(&self, client: &Client, def: &OpDef) -> Result<Executable> {
-        let key = def.cache_key();
+        self.get_or_compile_op_for(xla::active_backend(), client, def)
+    }
+
+    /// [`ExecCache::get_or_compile_op`] with a pre-resolved backend. Keyed
+    /// by the backend as well: the cache is process-global and
+    /// `XLA_SHIM_BACKEND` can flip between compilations (the differential
+    /// tests and the interp CI job do), so an executable compiled under one
+    /// backend must never serve the other.
+    pub fn get_or_compile_op_for(
+        &self,
+        backend: xla::ShimBackend,
+        client: &Client,
+        def: &OpDef,
+    ) -> Result<Executable> {
+        // Suffix rather than `format!` so the per-dispatch hot path (this
+        // runs for every eager op) keeps a single String allocation.
+        let mut key = def.cache_key();
+        key.push('|');
+        key.push_str(backend.name());
         if let Some(exe) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(exe.clone());

@@ -19,9 +19,10 @@
 //!   signature has a compiled plan, re-entry costs only a runner spawn, so
 //!   the controller enters immediately.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::error::{Result, TerraError};
+use crate::tracegraph::NodeId;
 
 /// When to transition from tracing back to co-execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +69,59 @@ const DISTANCE_WINDOW: usize = 64;
 /// Per-site counter map bound (sites beyond this fold into one bucket).
 const MAX_SITES: usize = 64;
 
+/// Default fallback count at which a divergence site becomes a segment
+/// split point (see [`DivergenceProfile::split_candidates`]).
+pub const DEFAULT_SPLIT_MIN_COUNT: u64 = 2;
+
+/// Hotness threshold for segment splitting: `TERRA_SPLIT_MIN_COUNT` env
+/// override, else [`DEFAULT_SPLIT_MIN_COUNT`].
+pub fn split_min_count() -> u64 {
+    std::env::var("TERRA_SPLIT_MIN_COUNT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c >= 1)
+        .unwrap_or(DEFAULT_SPLIT_MIN_COUNT)
+}
+
+/// Extract the TraceGraph node from a walker divergence description
+/// (`"at node {id} after {n} steps: {why}"` — see `tracegraph/walker.rs`).
+/// Descriptions from other sources (e.g. untracked-value errors) yield
+/// `None`, which simply excludes them from segment scheduling.
+pub fn parse_site_node(site: &str) -> Option<NodeId> {
+    let rest = site.strip_prefix("at node ")?;
+    let digits: &str = &rest[..rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len())];
+    digits.parse::<usize>().ok().map(NodeId)
+}
+
+/// Per-site divergence statistics exported to segment scheduling: which
+/// TraceGraph nodes fallbacks historically happened at, and how often. The
+/// plan generator cuts fused segments at hot sites so a later fallback there
+/// cancels only the downstream segments (see `graphgen` / `runner/coexec`).
+#[derive(Debug, Clone, Default)]
+pub struct DivergenceProfile {
+    /// `(site node, fallback count)`, hottest first (count desc, then node
+    /// id asc for determinism). Sites whose description carried no parseable
+    /// node id are excluded.
+    pub hot_nodes: Vec<(NodeId, u64)>,
+    /// Total fallbacks recorded.
+    pub fallbacks: u64,
+    /// Fallbacks folded into the overflow bucket because the per-site map
+    /// was saturated (a non-zero value means the profile under-reports some
+    /// sites — it must read as "saturated", not as "no divergence there").
+    pub sites_overflowed: u64,
+}
+
+impl DivergenceProfile {
+    /// Sites hot enough to become segment split points.
+    pub fn split_candidates(&self, min_count: u64) -> BTreeSet<NodeId> {
+        self.hot_nodes
+            .iter()
+            .filter(|(_, c)| *c >= min_count)
+            .map(|(n, _)| *n)
+            .collect()
+    }
+}
+
 /// The engine-side phase-transition brain: call [`note_trace`] after every
 /// merge, ask [`decide`] once the trace is stable, report every divergence
 /// via [`note_fallback`] and every transition via [`note_entered`].
@@ -88,6 +142,11 @@ pub struct ReentryController {
     fallbacks: u64,
     /// Fallback counts per divergence site (the walker's description).
     sites: HashMap<String, u64>,
+    /// Fallback counts per divergence *node* (parsed from the description;
+    /// the structured view segment scheduling consumes).
+    node_counts: HashMap<NodeId, u64>,
+    /// Fallbacks not individually attributed because the site map was full.
+    sites_overflowed: u64,
     /// Recent inter-fallback distances, oldest first.
     distances: Vec<u64>,
 }
@@ -105,6 +164,8 @@ impl ReentryController {
             last_fallback_step: None,
             fallbacks: 0,
             sites: HashMap::new(),
+            node_counts: HashMap::new(),
+            sites_overflowed: 0,
             distances: Vec::new(),
         }
     }
@@ -148,7 +209,16 @@ impl ReentryController {
         if self.sites.len() < MAX_SITES || self.sites.contains_key(site) {
             *self.sites.entry(site.to_string()).or_insert(0) += 1;
         } else {
+            // Saturated: the fallback still counts, but cannot be attributed
+            // to its own site. Record the overflow so a saturated profile is
+            // visibly saturated instead of reading as "no divergence there".
             *self.sites.entry("<other>".to_string()).or_insert(0) += 1;
+            self.sites_overflowed += 1;
+        }
+        if let Some(node) = parse_site_node(site) {
+            if self.node_counts.len() < MAX_SITES || self.node_counts.contains_key(&node) {
+                *self.node_counts.entry(node).or_insert(0) += 1;
+            }
         }
         if let Some(prev) = self.last_fallback_step {
             // Inter-fallback distance: profiling only (it includes tracing
@@ -181,6 +251,24 @@ impl ReentryController {
 
     pub fn fallbacks(&self) -> u64 {
         self.fallbacks
+    }
+
+    /// Fallbacks that could not be individually attributed because the
+    /// per-site map was saturated at `MAX_SITES`.
+    pub fn sites_overflowed(&self) -> u64 {
+        self.sites_overflowed
+    }
+
+    /// Structured divergence profile for segment scheduling.
+    pub fn profile(&self) -> DivergenceProfile {
+        let mut hot_nodes: Vec<(NodeId, u64)> =
+            self.node_counts.iter().map(|(n, c)| (*n, *c)).collect();
+        hot_nodes.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0 .0.cmp(&b.0 .0)));
+        DivergenceProfile {
+            hot_nodes,
+            fallbacks: self.fallbacks,
+            sites_overflowed: self.sites_overflowed,
+        }
     }
 
     /// Per-site fallback counts, most frequent first.
@@ -265,6 +353,47 @@ mod tests {
         assert!(!c.decide(false));
         // ...unless the plan cache already holds this signature.
         assert!(c.decide(true));
+    }
+
+    #[test]
+    fn parse_site_node_extracts_walker_position() {
+        assert_eq!(
+            parse_site_node("at node 17 after 3 steps: no child matches Mul"),
+            Some(NodeId(17))
+        );
+        assert_eq!(parse_site_node("value ValueId(4) not tracked in this iteration"), None);
+        assert_eq!(parse_site_node("at node x after 1 steps: nope"), None);
+    }
+
+    #[test]
+    fn profile_ranks_hot_nodes_for_splitting() {
+        let mut c = ReentryController::new(ReentryPolicy::Adaptive);
+        for _ in 0..3 {
+            c.note_fallback(1, "at node 5 after 2 steps: novel dataflow variant for Mul");
+        }
+        c.note_fallback(2, "at node 9 after 4 steps: no child matches Tanh");
+        let p = c.profile();
+        assert_eq!(p.hot_nodes[0], (NodeId(5), 3));
+        assert_eq!(p.hot_nodes[1], (NodeId(9), 1));
+        assert_eq!(p.fallbacks, 4);
+        assert_eq!(p.sites_overflowed, 0);
+        let splits = p.split_candidates(2);
+        assert!(splits.contains(&NodeId(5)));
+        assert!(!splits.contains(&NodeId(9)));
+    }
+
+    #[test]
+    fn saturated_site_map_reports_overflow() {
+        let mut c = ReentryController::new(ReentryPolicy::Adaptive);
+        for i in 0..(MAX_SITES + 8) {
+            let site = format!("at node {i} after 1 steps: no child matches Relu");
+            c.note_fallback(i as u64, &site);
+        }
+        assert_eq!(c.sites_overflowed(), 8, "sites beyond MAX_SITES must be visible");
+        assert_eq!(c.profile().sites_overflowed, 8);
+        // Already-tracked sites keep counting without further overflow.
+        c.note_fallback(999, "at node 0 after 1 steps: no child matches Relu");
+        assert_eq!(c.sites_overflowed(), 8);
     }
 
     #[test]

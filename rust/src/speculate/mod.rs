@@ -29,7 +29,9 @@ pub mod controller;
 pub mod plancache;
 pub mod signature;
 
-pub use controller::{ReentryController, ReentryPolicy};
+pub use controller::{
+    parse_site_node, split_min_count, DivergenceProfile, ReentryController, ReentryPolicy,
+};
 pub use plancache::{CachedPlan, PlanCache, PlanKey};
 pub use signature::{graph_signature, GraphSig};
 
@@ -40,18 +42,32 @@ pub struct SpeculateConfig {
     pub plan_cache: bool,
     /// Phase-transition policy (see [`ReentryPolicy`]).
     pub policy: ReentryPolicy,
+    /// Profile-guided segment splitting: cut plan segments at historically
+    /// hot divergence sites so a fallback there cancels only the downstream
+    /// segments (JSON `speculate.split_hot_sites`, CLI `--split-hot-sites`,
+    /// env `TERRA_SPLIT_HOT_SITES`; threshold `TERRA_SPLIT_MIN_COUNT`).
+    pub split_hot_sites: bool,
 }
 
 impl Default for SpeculateConfig {
     fn default() -> Self {
-        SpeculateConfig { plan_cache: true, policy: ReentryPolicy::Adaptive }
+        SpeculateConfig {
+            plan_cache: true,
+            policy: ReentryPolicy::Adaptive,
+            split_hot_sites: true,
+        }
     }
 }
 
 impl SpeculateConfig {
-    /// Seed behaviour: no plan cache, enter on the first stable trace.
+    /// Seed behaviour: no plan cache, enter on the first stable trace, no
+    /// profile-guided splitting.
     pub fn disabled() -> Self {
-        SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Eager }
+        SpeculateConfig {
+            plan_cache: false,
+            policy: ReentryPolicy::Eager,
+            split_hot_sites: false,
+        }
     }
 
     /// Parse a preset name (shared by the `TERRA_SPECULATE` env knob and the
@@ -62,22 +78,33 @@ impl SpeculateConfig {
     pub fn parse_preset(name: &str) -> crate::error::Result<Self> {
         match name.to_ascii_lowercase().as_str() {
             "0" | "off" => Ok(Self::disabled()),
-            "nocache" => Ok(SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Adaptive }),
-            "eager" => Ok(SpeculateConfig { plan_cache: true, policy: ReentryPolicy::Eager }),
+            "nocache" => Ok(SpeculateConfig { plan_cache: false, ..Self::default() }),
+            "eager" => Ok(SpeculateConfig { policy: ReentryPolicy::Eager, ..Self::default() }),
+            "nosplit" => Ok(SpeculateConfig { split_hot_sites: false, ..Self::default() }),
             "1" | "on" | "adaptive" => Ok(Self::default()),
             other => Err(crate::error::TerraError::Config(format!(
-                "unknown speculate preset '{other}' (expected on | off | nocache | eager)"
+                "unknown speculate preset '{other}' (expected on | off | nocache | eager | nosplit)"
             ))),
         }
     }
 
-    /// Default settings with a `TERRA_SPECULATE` env override (see
-    /// [`SpeculateConfig::parse_preset`]; an unrecognized value falls back
-    /// to the default rather than erroring, matching `TERRA_OPT_LEVEL`).
+    /// Default settings with env overrides: `TERRA_SPECULATE` selects a
+    /// preset (see [`SpeculateConfig::parse_preset`]; an unrecognized value
+    /// falls back to the default rather than erroring, matching
+    /// `TERRA_OPT_LEVEL`), then `TERRA_SPLIT_HOT_SITES` overrides the
+    /// segment-splitting knob on its own.
     pub fn from_env() -> Self {
-        match std::env::var("TERRA_SPECULATE").ok() {
+        let mut cfg = match std::env::var("TERRA_SPECULATE").ok() {
             Some(v) => Self::parse_preset(&v).unwrap_or_default(),
             None => Self::default(),
+        };
+        if let Ok(v) = std::env::var("TERRA_SPLIT_HOT_SITES") {
+            match v.to_ascii_lowercase().as_str() {
+                "0" | "off" | "false" => cfg.split_hot_sites = false,
+                "1" | "on" | "true" => cfg.split_hot_sites = true,
+                _ => {}
+            }
         }
+        cfg
     }
 }

@@ -18,13 +18,15 @@
 //! the new engine's graph.
 
 use crate::symbolic::CompiledPlan;
-use std::collections::HashMap;
+use crate::tracegraph::NodeId;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::GraphSig;
 
-/// Full cache key: graph signature + the knobs that shape the plan.
+/// Full cache key: graph signature + the knobs that shape the plan + the
+/// execution backend the segments were compiled for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub sig: GraphSig,
@@ -32,6 +34,42 @@ pub struct PlanKey {
     pub fusion: bool,
     /// Graph-optimization level changes the plan-side graph.
     pub opt_level: u8,
+    /// Resolved shim backend (`XLA_SHIM_BACKEND`). The env var can differ
+    /// between the process that populated the cache entry and the one
+    /// looking it up (interp CI job, differential tests), and a cached plan
+    /// holds executables compiled for one backend only.
+    pub backend: xla::ShimBackend,
+    /// Order-independent hash of the segment split-point set (profile-guided
+    /// splitting changes segmentation the same way `fusion` does).
+    pub splits: u64,
+}
+
+/// FNV-1a over the sorted split set; stable across processes so identical
+/// profiles key identically. The empty set hashes to the FNV offset basis.
+pub fn splits_hash(splits: &BTreeSet<NodeId>) -> u64 {
+    use crate::trace::{FNV_OFFSET, FNV_PRIME};
+    let mut h: u64 = FNV_OFFSET;
+    for n in splits {
+        for b in (n.0 as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+impl PlanKey {
+    /// Build a key for the current process state: resolves the active shim
+    /// backend and hashes the split set.
+    pub fn new(sig: GraphSig, fusion: bool, opt_level: u8, splits: &BTreeSet<NodeId>) -> Self {
+        PlanKey {
+            sig,
+            fusion,
+            opt_level,
+            backend: xla::active_backend(),
+            splits: splits_hash(splits),
+        }
+    }
 }
 
 /// A cached plan plus the compile work a hit skips.
@@ -178,7 +216,7 @@ mod tests {
     use crate::tracegraph::TraceGraph;
 
     fn key(n: u64) -> PlanKey {
-        PlanKey { sig: GraphSig { a: n, b: !n }, fusion: true, opt_level: 2 }
+        PlanKey::new(GraphSig { a: n, b: !n }, true, 2, &BTreeSet::new())
     }
 
     fn empty_plan() -> Arc<CompiledPlan> {
@@ -187,6 +225,7 @@ mod tests {
             segments: vec![],
             graph: Arc::new(TraceGraph::new()),
             compiled_fresh: 0,
+            split_points: vec![],
         })
     }
 
@@ -208,10 +247,42 @@ mod tests {
     fn knobs_partition_the_key_space() {
         let c = PlanCache::with_capacity(8);
         let sig = GraphSig { a: 7, b: 9 };
-        c.insert(PlanKey { sig, fusion: true, opt_level: 2 }, empty_plan());
-        assert!(!c.contains(&PlanKey { sig, fusion: false, opt_level: 2 }));
-        assert!(!c.contains(&PlanKey { sig, fusion: true, opt_level: 0 }));
-        assert!(c.contains(&PlanKey { sig, fusion: true, opt_level: 2 }));
+        let base = PlanKey::new(sig, true, 2, &BTreeSet::new());
+        c.insert(base, empty_plan());
+        assert!(!c.contains(&PlanKey { fusion: false, ..base }));
+        assert!(!c.contains(&PlanKey { opt_level: 0, ..base }));
+        assert!(c.contains(&base));
+    }
+
+    #[test]
+    fn backend_and_splits_partition_the_key_space() {
+        let c = PlanCache::with_capacity(8);
+        let sig = GraphSig { a: 3, b: 4 };
+        let splits: BTreeSet<NodeId> = [NodeId(7), NodeId(2)].into_iter().collect();
+        let split_key = PlanKey::new(sig, true, 2, &splits);
+        c.insert(split_key, empty_plan());
+        // A different (or empty) split set is a different plan shape.
+        assert!(!c.contains(&PlanKey::new(sig, true, 2, &BTreeSet::new())));
+        let fewer: BTreeSet<NodeId> = [NodeId(7)].into_iter().collect();
+        assert!(!c.contains(&PlanKey::new(sig, true, 2, &fewer)));
+        assert!(c.contains(&PlanKey::new(sig, true, 2, &splits)));
+        // Executables compiled under one shim backend must never serve the
+        // other backend's lookups.
+        let other = match split_key.backend {
+            xla::ShimBackend::Bytecode => xla::ShimBackend::Interp,
+            xla::ShimBackend::Interp => xla::ShimBackend::Bytecode,
+        };
+        assert!(!c.contains(&PlanKey { backend: other, ..split_key }));
+    }
+
+    #[test]
+    fn splits_hash_is_order_independent_and_value_sensitive() {
+        let a: BTreeSet<NodeId> = [NodeId(1), NodeId(9), NodeId(4)].into_iter().collect();
+        let b: BTreeSet<NodeId> = [NodeId(9), NodeId(4), NodeId(1)].into_iter().collect();
+        assert_eq!(splits_hash(&a), splits_hash(&b));
+        let c: BTreeSet<NodeId> = [NodeId(1), NodeId(9)].into_iter().collect();
+        assert_ne!(splits_hash(&a), splits_hash(&c));
+        assert_ne!(splits_hash(&a), splits_hash(&BTreeSet::new()));
     }
 
     #[test]

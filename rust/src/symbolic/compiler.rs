@@ -28,6 +28,55 @@ pub struct CompiledPlan {
     pub graph: Arc<TraceGraph>,
     /// Number of fresh segment compilations (vs cache hits) for this plan.
     pub compiled_fresh: usize,
+    /// Divergence-site split points that cut fused chains in this plan
+    /// (profile-guided segment scheduling).
+    pub split_points: Vec<NodeId>,
+}
+
+impl CompiledPlan {
+    /// [`crate::symbolic::plan::truncation_boundary`] over the compiled
+    /// segments: the first top-level step index the GraphRunner must *not*
+    /// execute when a fallback diverges at `site`, or `None` when the site
+    /// does not align with a boundary (whole-iteration cancel).
+    pub fn truncation_boundary(&self, site: NodeId) -> Option<usize> {
+        crate::symbolic::plan::truncation_boundary(
+            &self.steps,
+            &|id| self.segments[id.0].spec.nodes.as_slice(),
+            site,
+        )
+    }
+
+    /// Mailbox keys consumed by the steps from `boundary` onward — the
+    /// messages a truncated GraphRunner could be blocked on and the diverged
+    /// PythonRunner will never send.
+    pub fn downstream_message_nodes(&self, boundary: usize) -> crate::symbolic::plan::MessageNodes {
+        let mut m = crate::symbolic::plan::MessageNodes::default();
+        crate::symbolic::plan::collect_message_nodes(
+            &self.steps[boundary.min(self.steps.len())..],
+            &|id| self.segments[id.0].spec.params.as_slice(),
+            &mut m,
+        );
+        m
+    }
+
+    /// `(saved, cancelled)` executable-step counts for a truncation at
+    /// `boundary`: segments/artifacts whose results survive the fallback vs
+    /// those cancelled downstream (Switch cases counted in full — an upper
+    /// bound, at most one case runs per iteration).
+    pub fn split_savings(&self, boundary: usize) -> (u64, u64) {
+        let b = boundary.min(self.steps.len());
+        let nodes = |id: crate::symbolic::SegId| self.segments[id.0].spec.nodes.as_slice();
+        (
+            crate::symbolic::plan::executable_steps(&self.steps[..b], &nodes),
+            crate::symbolic::plan::executable_steps(&self.steps[b..], &nodes),
+        )
+    }
+
+    /// Executable steps in the whole plan (whole-iteration cancel cost).
+    pub fn executable_steps(&self) -> u64 {
+        let nodes = |id: crate::symbolic::SegId| self.segments[id.0].spec.nodes.as_slice();
+        crate::symbolic::plan::executable_steps(&self.steps, &nodes)
+    }
 }
 
 /// Which (node, slot) sources and variables each parameter covers.
@@ -133,7 +182,12 @@ fn compile_segment(
     graph: &TraceGraph,
     spec: &SegmentSpec,
 ) -> Result<(Executable, bool)> {
-    let key = format!("seg|{}", segment_key(graph, spec)?);
+    // The resolved shim backend is part of the key: the process-global cache
+    // outlives `XLA_SHIM_BACKEND` flips (differential tests, the interp CI
+    // job), and an executable compiled under one backend must never serve
+    // the other. The structural part stays split-invariant, so segments
+    // untouched by a re-segmentation still hit.
+    let key = format!("seg|{}|{}", xla::active_backend().name(), segment_key(graph, spec)?);
     let misses_before = cache.misses();
     let exe = cache.get_or_compile_with(&key, || {
         let builder = xla::XlaBuilder::new("segment");
@@ -269,5 +323,11 @@ pub fn compile_plan(
         }
         segments.push(CompiledSegment { spec: seg.clone(), exe });
     }
-    Ok(CompiledPlan { steps: spec.steps, segments, graph, compiled_fresh })
+    Ok(CompiledPlan {
+        steps: spec.steps,
+        segments,
+        graph,
+        compiled_fresh,
+        split_points: spec.split_points,
+    })
 }

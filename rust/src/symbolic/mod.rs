@@ -19,4 +19,7 @@ mod compiler;
 mod plan;
 
 pub use compiler::{compile_plan, validate_plan_artifacts, CompiledPlan, CompiledSegment};
-pub use plan::{Binding, PlanSpec, SegId, SegmentSpec, Step};
+pub use plan::{
+    collect_message_nodes, executable_steps, truncation_boundary, Binding, MessageNodes,
+    PlanSpec, SegId, SegmentSpec, Step,
+};

@@ -1,8 +1,12 @@
-//! Plan IR produced by the GraphGenerator.
+//! Plan IR produced by the GraphGenerator, plus the segment-scheduling
+//! helpers partial cancellation is built on: locating the truncation
+//! boundary for a divergence site and collecting the mailbox keys consumed
+//! by the steps downstream of it.
 
 use crate::tensor::TensorType;
 use crate::tracegraph::NodeId;
 use crate::trace::VarId;
+use std::collections::HashSet;
 
 /// Index of a segment within a plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -70,6 +74,10 @@ pub struct SegmentSpec {
 pub struct PlanSpec {
     pub steps: Vec<Step>,
     pub segments: Vec<SegmentSpec>,
+    /// Divergence-site split points that actually cut a fused chain during
+    /// generation (profile-guided segment scheduling; subset of
+    /// `GenOptions::split_points`).
+    pub split_points: Vec<NodeId>,
 }
 
 impl PlanSpec {
@@ -105,5 +113,225 @@ impl PlanSpec {
             segs,
             self.segments.len()
         )
+    }
+
+    /// [`truncation_boundary`] over this spec's own segments.
+    pub fn truncation_boundary(&self, site: NodeId) -> Option<usize> {
+        truncation_boundary(&self.steps, &|id: SegId| self.segments[id.0].nodes.as_slice(), site)
+    }
+}
+
+/// Mailbox keys consumed by a run of plan steps (recursively through Switch
+/// cases): Feed nodes, Switch (case-select) nodes and variant-select
+/// consumers. The engine uses the set for the steps *downstream* of a
+/// truncation boundary to wake a GraphRunner blocked on a message the
+/// diverged PythonRunner will never send.
+#[derive(Debug, Default)]
+pub struct MessageNodes {
+    pub feeds: HashSet<NodeId>,
+    pub cases: HashSet<NodeId>,
+    pub variants: HashSet<NodeId>,
+}
+
+/// Collect [`MessageNodes`] for `steps`. `seg_params` resolves a segment id
+/// to its parameter bindings (spec- or compiled-plan-side).
+pub fn collect_message_nodes<'p>(
+    steps: &'p [Step],
+    seg_params: &impl Fn(SegId) -> &'p [Binding],
+    out: &mut MessageNodes,
+) {
+    let mut dynamic = |b: &Binding, out: &mut MessageNodes| {
+        if let Binding::Dynamic { consumer, .. } = b {
+            out.variants.insert(*consumer);
+        }
+    };
+    for s in steps {
+        match s {
+            Step::Seg(id) => {
+                for b in seg_params(*id) {
+                    dynamic(b, out);
+                }
+            }
+            Step::Artifact { params, .. } => {
+                for b in params {
+                    dynamic(b, out);
+                }
+            }
+            Step::Feed { node } => {
+                out.feeds.insert(*node);
+            }
+            Step::Fetch { src, .. } | Step::Assign { src, .. } => dynamic(src, out),
+            Step::Switch { node, cases } => {
+                out.cases.insert(*node);
+                for c in cases {
+                    collect_message_nodes(c, seg_params, out);
+                }
+            }
+        }
+    }
+}
+
+/// Truncation boundary for a divergence at `site` — the walker's position at
+/// the fallback, i.e. the last node the PythonRunner *validated*. Returns
+/// the index one past the last top-level step whose work the iteration fully
+/// covered, so the GraphRunner may finish `steps[..boundary]` and only
+/// `steps[boundary..]` is cancelled:
+///
+/// * `site` is the **last** node of a top-level segment (a split boundary —
+///   natural or cut there by profile-guided splitting) → just after it;
+/// * `site` is a top-level feed / fetch / artifact step → just after it;
+/// * `site` is a branch node or anywhere inside a top-level Switch → the
+///   Switch itself (its case select never arrives, or the case body is only
+///   partially validated);
+/// * `site` sits mid-segment (the un-split case) or is unknown → `None`:
+///   the whole in-flight iteration must be cancelled.
+pub fn truncation_boundary<'p>(
+    steps: &'p [Step],
+    seg_nodes: &impl Fn(SegId) -> &'p [NodeId],
+    site: NodeId,
+) -> Option<usize> {
+    for (i, s) in steps.iter().enumerate() {
+        match s {
+            Step::Seg(id) => {
+                let nodes = seg_nodes(*id);
+                if nodes.last() == Some(&site) {
+                    return Some(i + 1);
+                }
+                if nodes.contains(&site) {
+                    return None; // mid-segment: boundary misaligned
+                }
+            }
+            Step::Artifact { node, .. } | Step::Feed { node } | Step::Fetch { node, .. } => {
+                if *node == site {
+                    return Some(i + 1);
+                }
+            }
+            Step::Assign { .. } => {}
+            Step::Switch { node, cases } => {
+                if *node == site || switch_subtree_contains(cases, seg_nodes, site) {
+                    return Some(i);
+                }
+            }
+        }
+    }
+    None
+}
+
+pub(crate) fn switch_subtree_contains<'p>(
+    cases: &'p [Vec<Step>],
+    seg_nodes: &impl Fn(SegId) -> &'p [NodeId],
+    site: NodeId,
+) -> bool {
+    cases.iter().flatten().any(|s| match s {
+        Step::Seg(id) => seg_nodes(*id).contains(&site),
+        Step::Artifact { node, .. } | Step::Feed { node } | Step::Fetch { node, .. } => {
+            *node == site
+        }
+        Step::Assign { .. } => false,
+        Step::Switch { node, cases } => {
+            *node == site || switch_subtree_contains(cases, seg_nodes, site)
+        }
+    })
+}
+
+/// Count executable steps (non-empty segments + artifact calls) in `steps`,
+/// recursing into every Switch case. An upper bound on per-iteration work:
+/// at most one case of each Switch runs per iteration.
+pub fn executable_steps<'p>(steps: &'p [Step], seg_nodes: &impl Fn(SegId) -> &'p [NodeId]) -> u64 {
+    let mut n = 0;
+    for s in steps {
+        match s {
+            Step::Seg(id) => {
+                if !seg_nodes(*id).is_empty() {
+                    n += 1;
+                }
+            }
+            Step::Artifact { .. } => n += 1,
+            Step::Switch { cases, .. } => {
+                for c in cases {
+                    n += executable_steps(c, seg_nodes);
+                }
+            }
+            _ => {}
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built plan shape:
+    ///   0: Feed{5}
+    ///   1: Seg(0)            nodes [1, 2]
+    ///   2: Fetch{6}
+    ///   3: Seg(1)            nodes [3, 4], one Dynamic param (consumer 3)
+    ///   4: Switch{7}         case 0 = [Feed{8}], case 1 = []
+    fn sample() -> PlanSpec {
+        let seg = |id: usize, nodes: Vec<usize>, params: Vec<Binding>| SegmentSpec {
+            id: SegId(id),
+            nodes: nodes.into_iter().map(NodeId).collect(),
+            params,
+            param_types: vec![],
+            outputs: vec![(NodeId(2), 0)],
+        };
+        PlanSpec {
+            steps: vec![
+                Step::Feed { node: NodeId(5) },
+                Step::Seg(SegId(0)),
+                Step::Fetch { node: NodeId(6), src: Binding::slot(NodeId(2), 0) },
+                Step::Seg(SegId(1)),
+                Step::Switch {
+                    node: NodeId(7),
+                    cases: vec![vec![Step::Feed { node: NodeId(8) }], vec![]],
+                },
+            ],
+            segments: vec![
+                seg(0, vec![1, 2], vec![Binding::slot(NodeId(5), 0)]),
+                seg(1, vec![3, 4], vec![Binding::Dynamic { consumer: NodeId(3), pos: 0 }]),
+            ],
+            split_points: vec![NodeId(2)],
+        }
+    }
+
+    #[test]
+    fn boundary_aligns_only_at_segment_ends() {
+        let p = sample();
+        // Last node of a segment: the prefix through that segment survives.
+        assert_eq!(p.truncation_boundary(NodeId(2)), Some(2));
+        assert_eq!(p.truncation_boundary(NodeId(4)), Some(4));
+        // Mid-segment site: misaligned, whole-iteration cancel.
+        assert_eq!(p.truncation_boundary(NodeId(1)), None);
+        assert_eq!(p.truncation_boundary(NodeId(3)), None);
+        // Feed / fetch sites survive through their own step.
+        assert_eq!(p.truncation_boundary(NodeId(5)), Some(1));
+        assert_eq!(p.truncation_boundary(NodeId(6)), Some(3));
+        // Branch node or anything inside the Switch: stop before the Switch.
+        assert_eq!(p.truncation_boundary(NodeId(7)), Some(4));
+        assert_eq!(p.truncation_boundary(NodeId(8)), Some(4));
+        // Unknown site.
+        assert_eq!(p.truncation_boundary(NodeId(99)), None);
+    }
+
+    #[test]
+    fn downstream_message_nodes_cover_nested_cases() {
+        let p = sample();
+        let mut m = MessageNodes::default();
+        let params = |id: SegId| p.segments[id.0].params.as_slice();
+        collect_message_nodes(&p.steps[3..], &params, &mut m);
+        assert!(m.variants.contains(&NodeId(3)), "dynamic param consumer: {m:?}");
+        assert!(m.cases.contains(&NodeId(7)), "switch case select: {m:?}");
+        assert!(m.feeds.contains(&NodeId(8)), "feed nested in a case: {m:?}");
+        assert!(!m.feeds.contains(&NodeId(5)), "upstream feed excluded: {m:?}");
+    }
+
+    #[test]
+    fn executable_step_counts() {
+        let p = sample();
+        let nodes = |id: SegId| p.segments[id.0].nodes.as_slice();
+        assert_eq!(executable_steps(&p.steps, &nodes), 2);
+        assert_eq!(executable_steps(&p.steps[..2], &nodes), 1);
+        assert_eq!(executable_steps(&p.steps[4..], &nodes), 0, "feeds are not compute");
     }
 }

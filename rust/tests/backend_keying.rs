@@ -1,0 +1,82 @@
+//! Cross-backend cache-staleness regression (ISSUE 4 bugfix): flipping
+//! `XLA_SHIM_BACKEND` between engine runs inside one process — as the
+//! differential tests and the interp CI job do — must invalidate both the
+//! speculation plan cache and the segment executable cache. Before the fix,
+//! `PlanKey` ignored the backend and `segment_key` did too, so a process
+//! that switched to the interpreter could silently reuse executables
+//! compiled for the bytecode backend.
+//!
+//! Kept in its own test binary: it mutates process-global environment
+//! variables, and every other `#[test]` in the same binary would run
+//! concurrently under the flipped backend.
+
+use std::env;
+use terra::config::ExecMode;
+use terra::programs::TinyLinear;
+use terra::runner::{Engine, EngineStats};
+use terra::speculate::{ReentryPolicy, SpeculateConfig};
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_backend_keying_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        std::fs::write(manifest, r#"{"artifacts": []}"#).unwrap();
+    }
+    dir.to_string_lossy().into_owned()
+}
+
+fn run(spec: SpeculateConfig) -> (EngineStats, f32) {
+    let dir = artifacts_dir();
+    let mut engine = Engine::with_speculate(ExecMode::Terra, &dir, true, 2, spec).unwrap();
+    let mut prog = TinyLinear::new(5);
+    let report = engine.run(&mut prog, 23, 0).unwrap();
+    let w = prog.w.as_ref().unwrap().id();
+    let w0 = engine.vars().host(w).unwrap().as_f32().unwrap()[0];
+    (report.stats, w0)
+}
+
+#[test]
+fn flipping_shim_backend_invalidates_cached_plans_and_segments() {
+    let spec = SpeculateConfig {
+        plan_cache: true,
+        policy: ReentryPolicy::Eager,
+        split_hot_sites: false,
+    };
+
+    // Run 1 under the default bytecode backend.
+    env::remove_var("XLA_SHIM_BACKEND");
+    let (s1, w1) = run(spec);
+    assert!(s1.enter_coexec >= 1, "{s1:?}");
+    assert!(s1.plan_cache_misses >= 1, "first run must populate the cache: {s1:?}");
+
+    // Run 2 under the interpreter. Same program, same graph signatures —
+    // with backend-blind keys the plan cache would hand back executables
+    // compiled for the bytecode backend and the interpreter would never run.
+    let interp_before = xla::shim_totals().interp_executions;
+    env::set_var("XLA_SHIM_BACKEND", "interp");
+    let (s2, w2) = run(spec);
+    assert_eq!(
+        s2.plan_cache_hits, 0,
+        "a plan compiled under the bytecode backend must not serve the interp backend: {s2:?}"
+    );
+    assert!(s2.plan_cache_misses >= 1, "{s2:?}");
+    assert!(
+        s2.segments_compiled >= 1,
+        "segments must recompile for the interp backend instead of reusing bytecode \
+         executables: {s2:?}"
+    );
+    assert!(
+        xla::shim_totals().interp_executions > interp_before,
+        "co-execution under XLA_SHIM_BACKEND=interp must actually run on the interpreter"
+    );
+    // The backends are bit-identical by contract (shim_differential.rs), so
+    // the flip must not change numerics either.
+    assert!((w1 - w2).abs() <= 1e-6, "backend flip changed results: {w1} vs {w2}");
+
+    // Run 3 under the same (interp) backend: reuse is still allowed.
+    let (s3, _) = run(spec);
+    assert!(s3.plan_cache_hits >= 1, "same-backend plans must still hit: {s3:?}");
+
+    env::remove_var("XLA_SHIM_BACKEND");
+}

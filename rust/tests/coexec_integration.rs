@@ -138,3 +138,87 @@ fn eager_and_terra_agree_on_multi_path_program() {
     assert!(eager_w.allclose(&terra_w, 1e-4, 1e-6));
     assert!(stats.enter_coexec >= 1);
 }
+
+/// Profile-guided segment splitting (ISSUE 4 tentpole): a program whose
+/// co-execution diverges repeatedly at the *same* graph site (an MoE-style
+/// expert switch: same call site, novel dataflow variant). After the site
+/// gets hot the engine pre-splits plans there, so a later fallback at the
+/// site truncates the in-flight iteration at the segment boundary — the
+/// validated upstream segment survives, only downstream segments are
+/// cancelled — while every committed upstream iteration and the replayed
+/// step stay exactly on the eager oracle's trajectory.
+#[test]
+fn mid_plan_fallback_with_splitting_cancels_only_downstream() {
+    use terra::programs::MoeRouter;
+    use terra::speculate::{ReentryPolicy, SpeculateConfig};
+
+    let dir = artifacts_dir();
+    let steps = 40;
+    let switch_every = 6; // expert switches at steps 6, 12, 18
+    let spec = SpeculateConfig {
+        plan_cache: true,
+        // Eager re-entry makes the fallback schedule deterministic: the
+        // engine is back in co-execution before every expert switch.
+        policy: ReentryPolicy::Eager,
+        split_hot_sites: true,
+    };
+
+    let run = |mode: ExecMode, spec: SpeculateConfig| {
+        let mut engine = Engine::with_speculate(mode, &dir, true, 2, spec).unwrap();
+        let mut prog = MoeRouter::new(switch_every);
+        let report = engine.run(&mut prog, steps, 0).unwrap();
+        let vars: Vec<HostTensor> = engine
+            .vars()
+            .ids()
+            .into_iter()
+            .map(|id| engine.vars().host(id).unwrap())
+            .collect();
+        (report, vars)
+    };
+
+    let (eager_report, eager_vars) = run(ExecMode::Eager, spec);
+    let (report, vars) = run(ExecMode::Terra, spec);
+    let stats = report.stats;
+
+    // Each first use of a new expert diverges at the trunk's tanh node.
+    assert!(stats.fallbacks >= 3, "expert switches must diverge: {stats:?}");
+    // The first two fallbacks see un-split plans (the site is mid-segment):
+    // whole-iteration cancels.
+    assert!(stats.steps_cancelled >= 1, "{stats:?}");
+    // By the third fallback the site is hot (count >= 2): the plan was
+    // pre-split there, so the fallback truncated at the boundary and the
+    // upstream trunk segment survived.
+    assert!(
+        stats.plan_split_points >= 1,
+        "hot site must split the plan: {stats:?}"
+    );
+    assert!(
+        stats.steps_saved_by_split >= 1,
+        "a fallback at the split site must salvage the upstream segment: {stats:?}"
+    );
+
+    // Exactness: partial cancellation must not change observable results —
+    // losses step for step and every variable (trunk + all four experts)
+    // identical to the eager oracle.
+    assert_eq!(eager_report.losses.len(), report.losses.len());
+    for ((s1, l1), (s2, l2)) in eager_report.losses.iter().zip(report.losses.iter()) {
+        assert_eq!(s1, s2);
+        assert!(
+            (l1 - l2).abs() <= 1e-5 * l1.abs().max(1.0),
+            "loss mismatch at step {s1}: eager {l1} vs terra {l2}"
+        );
+    }
+    assert_eq!(eager_vars.len(), vars.len());
+    for (i, (a, b)) in eager_vars.iter().zip(vars.iter()).enumerate() {
+        assert!(a.allclose(b, 1e-5, 1e-6), "var {i} mismatch: {a} vs {b}");
+    }
+
+    // The knob off = seed behaviour: same numerics, no splits, no salvage.
+    let off = SpeculateConfig { split_hot_sites: false, ..spec };
+    let (report_off, vars_off) = run(ExecMode::Terra, off);
+    assert_eq!(report_off.stats.steps_saved_by_split, 0, "{:?}", report_off.stats);
+    assert_eq!(report_off.stats.plan_split_points, 0, "{:?}", report_off.stats);
+    for (a, b) in eager_vars.iter().zip(vars_off.iter()) {
+        assert!(a.allclose(b, 1e-5, 1e-6), "split=off diverged from oracle");
+    }
+}

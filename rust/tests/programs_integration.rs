@@ -108,6 +108,16 @@ fn music_transformer_trains_identically() {
 }
 
 #[test]
+fn moe_router_trains_identically_across_expert_switches() {
+    // Host-driven expert routing: each first use of a new expert (steps 8
+    // and 16 with the registry's switch_every = 8) diverges at the same
+    // trunk site and falls back.
+    let (_, _, stats) = run("moe_router", ExecMode::Terra, 20);
+    assert!(stats.fallbacks >= 1, "expert switch must diverge: {stats:?}");
+    check_program("moe_router", 20, true);
+}
+
+#[test]
 fn losses_decrease_under_terra() {
     // Training sanity: first-vs-last loss for a deterministic program.
     let (losses, _, _) = run("resnet50", ExecMode::Terra, 20);

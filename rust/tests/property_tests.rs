@@ -321,8 +321,9 @@ fn prop_opt_pipeline_preserves_wire_format_invariants() {
         }
         // Both graphs still generate plans, and the optimized one keeps all
         // communication steps.
-        let p_raw = generate_plan(&g, &HashMap::new(), &GenOptions { fusion: true }).unwrap();
-        let p_opt = generate_plan(&opt, &HashMap::new(), &GenOptions { fusion: true }).unwrap();
+        let opts = GenOptions { fusion: true, ..Default::default() };
+        let p_raw = generate_plan(&g, &HashMap::new(), &opts).unwrap();
+        let p_opt = generate_plan(&opt, &HashMap::new(), &opts).unwrap();
         let c_raw = terra::symbolic::PlanSpec::count_steps(&p_raw.steps);
         let c_opt = terra::symbolic::PlanSpec::count_steps(&p_opt.steps);
         assert_eq!(c_raw.1, c_opt.1, "seed {seed}: feed steps changed");

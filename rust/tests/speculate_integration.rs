@@ -84,7 +84,11 @@ fn assert_close(a: f32, b: f32, what: &str) {
 #[test]
 fn plan_cache_makes_reentries_free_and_exact() {
     let steps = 30; // phases 0,1,2,3,0,1 — later phases revisit merged paths
-    let spec = SpeculateConfig { plan_cache: true, policy: ReentryPolicy::Adaptive };
+    let spec = SpeculateConfig {
+        plan_cache: true,
+        policy: ReentryPolicy::Adaptive,
+        ..Default::default()
+    };
 
     let (_, oracle_w) = run_rotator(ExecMode::Eager, spec, steps);
 
@@ -182,8 +186,16 @@ fn run_growing(mode: ExecMode, spec: SpeculateConfig, steps: u64) -> (EngineStat
 #[test]
 fn adaptive_controller_stops_thrashing() {
     let steps = 16;
-    let eager = SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Eager };
-    let adaptive = SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Adaptive };
+    let eager = SpeculateConfig {
+        plan_cache: false,
+        policy: ReentryPolicy::Eager,
+        ..Default::default()
+    };
+    let adaptive = SpeculateConfig {
+        plan_cache: false,
+        policy: ReentryPolicy::Adaptive,
+        ..Default::default()
+    };
 
     let (_, oracle_w, _) = run_growing(ExecMode::Eager, eager, steps);
     let (es, ew, _) = run_growing(ExecMode::Terra, eager, steps);
@@ -207,7 +219,11 @@ fn adaptive_controller_stops_thrashing() {
 #[test]
 fn controller_profiles_divergence_sites() {
     let dir = artifacts_dir();
-    let spec = SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Adaptive };
+    let spec = SpeculateConfig {
+        plan_cache: false,
+        policy: ReentryPolicy::Adaptive,
+        ..Default::default()
+    };
     let mut engine = Engine::with_speculate(ExecMode::Terra, &dir, true, 2, spec).unwrap();
     let mut prog = PhaseRotator { w: None, phase_len: 4 };
     let report = engine.run(&mut prog, 20, 0).unwrap();

@@ -802,7 +802,7 @@ pub(crate) fn bcast_index(out_idx: &[usize], in_dims: &[i64]) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Which execution backend `compile` lowers to.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ShimBackend {
     /// Per-execute tree interpretation (the original backend; retained as
     /// the differential-testing oracle and the `XLA_SHIM_BACKEND=interp`
@@ -817,6 +817,25 @@ fn env_backend() -> ShimBackend {
         Ok(v) if v.eq_ignore_ascii_case("interp") => ShimBackend::Interp,
         _ => ShimBackend::Bytecode,
     }
+}
+
+impl ShimBackend {
+    /// Stable token for cache keys and diagnostics.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShimBackend::Interp => "interp",
+            ShimBackend::Bytecode => "bytecode",
+        }
+    }
+}
+
+/// The backend [`PjRtClient::compile`] will use right now (the
+/// `XLA_SHIM_BACKEND` env knob, resolved). Exposed so executable caches
+/// above the shim can key compiled artifacts by the backend that produced
+/// them — the env var can change between compilations within one process
+/// (the differential tests and the interp CI job do exactly that).
+pub fn active_backend() -> ShimBackend {
+    env_backend()
 }
 
 static COMPILES: AtomicU64 = AtomicU64::new(0);
