@@ -21,7 +21,7 @@ fn run(mode: ExecMode, fusion: bool, loss_every: u64, opt_level: u8, cfg: BenchC
 }
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let cfg = BenchConfig::from_env_or_exit();
     println!("ablations on resnet50, {} steps ({} warmup)", cfg.steps, cfg.warmup);
     let eager = run(ExecMode::Eager, true, 1, 2, cfg);
     let rows = vec![

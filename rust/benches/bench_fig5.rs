@@ -10,7 +10,7 @@ use terra::error::TerraError;
 use terra::programs::all_program_names;
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let cfg = BenchConfig::from_env_or_exit();
     println!(
         "Figure 5: {} steps per run ({} warmup), 1-core PJRT-CPU testbed",
         cfg.steps, cfg.warmup
@@ -69,6 +69,15 @@ fn main() {
                                 ("shim_bytes_reused_delta", num(bd.shim_bytes_reused)),
                                 ("shim_compile_ms_delta", Json::Num(bd.shim_compile_ms)),
                                 ("shim_execute_ms_delta", Json::Num(bd.shim_execute_ms)),
+                                // Worker-pool breakdown: resolved thread
+                                // count (gauge) and how many kernels went
+                                // parallel vs stayed serial (small shapes).
+                                ("shim_threads", num(bd.shim_threads)),
+                                ("shim_parallel_loops_delta", num(bd.shim_parallel_loops)),
+                                (
+                                    "shim_serial_fallbacks_delta",
+                                    num(bd.shim_serial_fallbacks),
+                                ),
                                 ("mailbox_dropped", num(st.mailbox_dropped)),
                                 // Speculation subsystem: plan-cache traffic,
                                 // compile invocations skipped, controller

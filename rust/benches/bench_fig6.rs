@@ -9,7 +9,7 @@ use terra::config::{ExecMode, Json};
 use terra::programs::all_program_names;
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let cfg = BenchConfig::from_env_or_exit();
     println!("Figure 6: per-step breakdown over {} measured steps", cfg.steps - cfg.warmup);
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();

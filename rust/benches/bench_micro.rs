@@ -271,6 +271,83 @@ fn main() {
                 &mut json,
             );
         }
+        // Parallel execution: a large fused loop and a large matmul at 1 vs
+        // 4 worker threads. The partitioning is deterministic (outputs are
+        // bit-identical at every count — shim_differential asserts it);
+        // this group records the throughput win of the worker pool.
+        {
+            let client0 = xla::PjRtClient::cpu().unwrap();
+            let mut speedups: Vec<(String, f64)> = Vec::new();
+            {
+                let comp = elementwise_chain_comp(512);
+                let x: Vec<f32> =
+                    (0..512 * 512).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
+                let xb =
+                    client0.buffer_from_host_buffer::<f32>(&x, &[512, 512], None).unwrap();
+                let exe =
+                    client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
+                let mut per_threads = [0f64; 2];
+                for (ti, threads) in [1usize, 4].into_iter().enumerate() {
+                    xla::set_shim_threads(threads);
+                    let _ = exe.execute_b(&[&xb]).unwrap();
+                    let (mean, _, _) = time_micro(
+                        || {
+                            let _ = exe.execute_b(&[&xb]).unwrap();
+                        },
+                        60,
+                    );
+                    per_threads[ti] = mean;
+                    push(
+                        &format!("shim exec ew-chain 512x512 ({threads} thread)"),
+                        mean / 1000.0,
+                        "us",
+                        &mut json,
+                    );
+                }
+                speedups.push((
+                    "shim ew-chain 512x512 parallel speedup (4 vs 1)".into(),
+                    per_threads[0] / per_threads[1].max(1e-9),
+                ));
+            }
+            {
+                let (m, k, nn) = (192usize, 192usize, 192usize);
+                let comp = matmul_comp(m, k, nn);
+                let a: Vec<f32> =
+                    (0..m * k).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+                let b: Vec<f32> =
+                    (0..k * nn).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+                let ab = client0.buffer_from_host_buffer::<f32>(&a, &[m, k], None).unwrap();
+                let bb = client0.buffer_from_host_buffer::<f32>(&b, &[k, nn], None).unwrap();
+                let exe =
+                    client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
+                let mut per_threads = [0f64; 2];
+                for (ti, threads) in [1usize, 4].into_iter().enumerate() {
+                    xla::set_shim_threads(threads);
+                    let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                    let (mean, _, _) = time_micro(
+                        || {
+                            let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                        },
+                        60,
+                    );
+                    per_threads[ti] = mean;
+                    push(
+                        &format!("shim exec matmul {m}x{k}x{nn} ({threads} thread)"),
+                        mean / 1000.0,
+                        "us",
+                        &mut json,
+                    );
+                }
+                speedups.push((
+                    format!("shim matmul {m}x{k}x{nn} parallel speedup (4 vs 1)"),
+                    per_threads[0] / per_threads[1].max(1e-9),
+                ));
+            }
+            xla::set_shim_threads(0); // back to env/auto for the rest
+            for (name, s) in speedups {
+                push(&name, s, "x", &mut json);
+            }
+        }
         // Compile cost of the bytecode pipeline vs the interp wrapper.
         {
             let comp = elementwise_chain_comp(64);
@@ -305,6 +382,9 @@ fn main() {
         push("shim instructions executed", t.instructions as f64, "count", &mut json);
         push("shim fused instructions", t.fused_instructions as f64, "count", &mut json);
         push("shim bytes reused", t.bytes_reused as f64, "bytes", &mut json);
+        push("shim parallel loops", t.parallel_loops as f64, "count", &mut json);
+        push("shim serial fallbacks", t.serial_fallbacks as f64, "count", &mut json);
+        push("shim threads used", t.threads_used as f64, "count", &mut json);
     }
 
     print_table("micro-benchmarks (§Perf)", &["metric", "value", "unit"], &rows);

@@ -8,7 +8,7 @@ use terra::bench::{obj, print_table, run_program, write_json_report, BenchConfig
 use terra::config::{ExecMode, Json};
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let cfg = BenchConfig::from_env_or_exit();
     let programs = ["resnet50", "bert_qa", "dcgan"];
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();

@@ -4,8 +4,8 @@
 //! (`benches/bench_fig5.rs` etc.), micro-benchmark timing utilities, table
 //! printing, and JSON report emission under `target/bench-results/`.
 
-use crate::config::{ExecMode, Json};
-use crate::error::Result;
+use crate::config::{parse_env, parse_env_min, ExecMode, Json};
+use crate::error::{Result, TerraError};
 use crate::programs::build_program;
 use crate::runner::{Engine, RunReport};
 use std::collections::BTreeMap;
@@ -20,11 +20,44 @@ pub struct BenchConfig {
     pub warmup: u64,
 }
 
+impl BenchConfig {
+    /// Read the env knobs, rejecting malformed values (`abc` used to fall
+    /// back to the default silently) and degenerate measured windows.
+    pub fn from_env() -> Result<Self> {
+        let steps = parse_env_min("TERRA_BENCH_STEPS", 1)?.unwrap_or(40);
+        let warmup = parse_env("TERRA_BENCH_WARMUP")?.unwrap_or(20);
+        Self::validated(steps, warmup)
+    }
+
+    /// [`BenchConfig::from_env`] for the bench binaries: print the config
+    /// error and exit(1) instead of panicking with a backtrace.
+    pub fn from_env_or_exit() -> Self {
+        Self::from_env().unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        })
+    }
+
+    /// Guard the measured window: `warmup >= steps` would feed
+    /// `steps_per_sec` an empty (or negative) window and emit garbage rows.
+    pub fn validated(steps: u64, warmup: u64) -> Result<Self> {
+        if warmup >= steps {
+            return Err(TerraError::Config(format!(
+                "bench warmup ({warmup}) must be smaller than total steps ({steps}): \
+                 the measured window would be empty (set TERRA_BENCH_STEPS > \
+                 TERRA_BENCH_WARMUP)"
+            )));
+        }
+        Ok(BenchConfig { steps, warmup })
+    }
+}
+
 impl Default for BenchConfig {
+    /// Panics on malformed env knobs or an empty measured window — the
+    /// bench binaries use [`BenchConfig::from_env`] and exit with a clean
+    /// error instead.
     fn default() -> Self {
-        let steps = std::env::var("TERRA_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
-        let warmup = std::env::var("TERRA_BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
-        BenchConfig { steps, warmup }
+        Self::from_env().unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -142,5 +175,14 @@ mod tests {
         let (n, rate) = time_budgeted(|| std::hint::black_box(()), Duration::from_millis(5));
         assert!(n > 0);
         assert!(rate > 0.0);
+    }
+
+    #[test]
+    fn bench_window_guard_rejects_empty_windows() {
+        assert!(BenchConfig::validated(40, 20).is_ok());
+        assert!(BenchConfig::validated(2, 1).is_ok());
+        let e = BenchConfig::validated(20, 20).unwrap_err();
+        assert!(e.to_string().contains("measured window"), "{e}");
+        assert!(BenchConfig::validated(10, 20).is_err());
     }
 }

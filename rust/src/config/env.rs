@@ -1,0 +1,98 @@
+//! Validated environment-knob parsing.
+//!
+//! Every numeric `TERRA_*` env knob routes through [`parse_env`] /
+//! [`parse_env_min`], so a malformed value fails loudly — naming the
+//! variable and the offending text — instead of silently falling back to
+//! the default (the seed's `.parse().ok()` knobs made `TERRA_BENCH_STEPS=abc`
+//! indistinguishable from "unset"). This matches the strict `speculate`
+//! JSON validation: junk is an error, absence is the default.
+//!
+//! Call sites that cannot propagate a `Result` (`Default` impls, free
+//! getter functions) panic with the same message via
+//! `unwrap_or_else(|e| panic!("{e}"))` — still loud, still actionable.
+
+use crate::error::{Result, TerraError};
+use std::fmt::Display;
+use std::str::FromStr;
+
+/// Parse env var `name` if set: `Ok(None)` when unset, `Ok(Some(v))` when
+/// valid, `Err` when malformed.
+pub fn parse_env<T: FromStr>(name: &str) -> Result<Option<T>> {
+    match std::env::var(name) {
+        Ok(v) => parse_value(name, Some(&v)),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(TerraError::Config(format!("{name}: {e}"))),
+    }
+}
+
+/// Like [`parse_env`], with an inclusive lower bound (e.g. a capacity that
+/// must be at least 1).
+pub fn parse_env_min<T: FromStr + PartialOrd + Display>(name: &str, min: T) -> Result<Option<T>> {
+    let v = parse_env(name)?;
+    check_min(name, v, min)
+}
+
+/// Testable core of [`parse_env`]: `raw` is the variable's value, if set.
+pub(crate) fn parse_value<T: FromStr>(name: &str, raw: Option<&str>) -> Result<Option<T>> {
+    match raw {
+        None => Ok(None),
+        Some(s) => s.trim().parse::<T>().map(Some).map_err(|_| {
+            TerraError::Config(format!("{name}: invalid value '{s}' (expected a number)"))
+        }),
+    }
+}
+
+/// Testable core of [`parse_env_min`]'s bound check.
+pub(crate) fn check_min<T: PartialOrd + Display>(
+    name: &str,
+    v: Option<T>,
+    min: T,
+) -> Result<Option<T>> {
+    match v {
+        Some(x) if x < min => Err(TerraError::Config(format!(
+            "{name}: value {x} is below the minimum {min}"
+        ))),
+        other => Ok(other),
+    }
+}
+
+/// [`parse_value`] + [`check_min`] over an injected raw value (the shape
+/// knob-specific unit tests use, so they never mutate the process env).
+pub(crate) fn value_min<T: FromStr + PartialOrd + Display>(
+    name: &str,
+    raw: Option<&str>,
+    min: T,
+) -> Result<Option<T>> {
+    let v = parse_value(name, raw)?;
+    check_min(name, v, min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absent_is_default_valid_is_some() {
+        assert_eq!(parse_value::<u64>("TERRA_TEST_KNOB", None).unwrap(), None);
+        assert_eq!(parse_value::<u64>("TERRA_TEST_KNOB", Some("42")).unwrap(), Some(42));
+        assert_eq!(parse_value::<u64>("TERRA_TEST_KNOB", Some(" 7 ")).unwrap(), Some(7));
+        assert_eq!(parse_value::<usize>("TERRA_TEST_KNOB", Some("0")).unwrap(), Some(0));
+    }
+
+    #[test]
+    fn junk_is_a_loud_error_naming_the_knob() {
+        for bad in ["abc", "", "1.5", "-3", "0x10", "1e3"] {
+            let e = parse_value::<u64>("TERRA_TEST_KNOB", Some(bad)).unwrap_err();
+            let msg = e.to_string();
+            assert!(msg.contains("TERRA_TEST_KNOB"), "error must name the knob: {msg}");
+        }
+    }
+
+    #[test]
+    fn minimum_is_enforced() {
+        assert_eq!(value_min::<usize>("K", Some("3"), 1).unwrap(), Some(3));
+        assert_eq!(value_min::<usize>("K", None, 1).unwrap(), None);
+        let e = value_min::<usize>("K", Some("0"), 1).unwrap_err();
+        assert!(e.to_string().contains("below the minimum"));
+    }
+}

@@ -1,7 +1,10 @@
-//! Configuration system: JSON substrate + typed run configuration.
+//! Configuration system: JSON substrate + typed run configuration +
+//! validated env-knob parsing.
 
+pub(crate) mod env;
 pub mod json;
 mod run_config;
 
+pub use env::{parse_env, parse_env_min};
 pub use json::Json;
-pub use run_config::{default_opt_level, ExecMode, RunConfig};
+pub use run_config::{default_opt_level, default_shim_threads, ExecMode, RunConfig};

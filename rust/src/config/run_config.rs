@@ -72,16 +72,29 @@ pub struct RunConfig {
     /// "split_hot_sites": bool}`), CLI `--plan-cache` / `--reentry-policy` /
     /// `--split-hot-sites`, env `TERRA_SPECULATE` / `TERRA_SPLIT_HOT_SITES`.
     pub speculate: SpeculateConfig,
+    /// Worker threads for the shim's parallel bytecode kernels: 0 = auto
+    /// (the machine's available parallelism), 1 = the seed's single-threaded
+    /// behaviour (results are bit-identical at every count). JSON
+    /// `shim_threads`, CLI `--shim-threads`, env `TERRA_SHIM_THREADS`.
+    pub shim_threads: usize,
 }
 
-/// Default optimization level: `TERRA_OPT_LEVEL` env override, else the full
-/// pipeline (the optimizer is semantics-preserving by construction, so it is
-/// on unless explicitly disabled).
+/// Default optimization level: `TERRA_OPT_LEVEL` env override (validated;
+/// malformed values panic with the knob name), else the full pipeline (the
+/// optimizer is semantics-preserving by construction, so it is on unless
+/// explicitly disabled).
 pub fn default_opt_level() -> u8 {
-    std::env::var("TERRA_OPT_LEVEL")
-        .ok()
-        .and_then(|v| v.parse().ok())
+    super::env::parse_env::<u8>("TERRA_OPT_LEVEL")
+        .unwrap_or_else(|e| panic!("{e}"))
         .unwrap_or(2)
+}
+
+/// Default shim worker count: `TERRA_SHIM_THREADS` env override (validated,
+/// `>= 1`), else 0 = auto-detect at execution time.
+pub fn default_shim_threads() -> usize {
+    super::env::parse_env_min::<usize>("TERRA_SHIM_THREADS", 1)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .unwrap_or(0)
 }
 
 impl Default for RunConfig {
@@ -98,6 +111,7 @@ impl Default for RunConfig {
             breakdown: false,
             opt_level: default_opt_level(),
             speculate: SpeculateConfig::from_env(),
+            shim_threads: default_shim_threads(),
         }
     }
 }
@@ -140,6 +154,13 @@ impl RunConfig {
         }
         if let Some(v) = json.get("opt_level").and_then(Json::as_usize) {
             self.opt_level = v.min(u8::MAX as usize) as u8;
+        }
+        if let Some(v) = json.get("shim_threads") {
+            self.shim_threads = v.as_usize().ok_or_else(|| {
+                TerraError::Config(
+                    "shim_threads must be a non-negative integer (0 = auto)".into(),
+                )
+            })?;
         }
         if let Some(s) = json.get("speculate") {
             if let Some(on) = s.as_bool() {
@@ -188,6 +209,13 @@ impl RunConfig {
     pub fn load_file(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Push the resolved worker count into the vendored shim (the knob is
+    /// process-level: executions resolve it per call). 0 clears the
+    /// override, so the shim falls back to `TERRA_SHIM_THREADS` / auto.
+    pub fn apply_shim_threads(&self) {
+        xla::set_shim_threads(self.shim_threads);
     }
 }
 
@@ -258,5 +286,15 @@ mod tests {
         assert_eq!(cfg.opt_level, 0);
         let j = Json::parse(r#"{"opt_level": 2}"#).unwrap();
         assert_eq!(RunConfig::from_json(&j).unwrap().opt_level, 2);
+    }
+
+    #[test]
+    fn shim_threads_from_json() {
+        let j = Json::parse(r#"{"shim_threads": 4}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().shim_threads, 4);
+        let j = Json::parse(r#"{"shim_threads": 0}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().shim_threads, 0, "0 = auto is valid");
+        let j = Json::parse(r#"{"shim_threads": "many"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-numeric shim_threads must be rejected");
     }
 }

@@ -82,12 +82,21 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
             }
         };
     }
+    if let Some(v) = flags.get("shim-threads") {
+        cfg.shim_threads = v.parse().map_err(|_| {
+            TerraError::Config("bad --shim-threads (expected 0 = auto or N >= 1)".into())
+        })?;
+    }
     if let Some(v) = flags.get("artifacts") {
         cfg.artifacts_dir = v.clone();
     }
     if flags.contains_key("breakdown") {
         cfg.breakdown = true;
     }
+    // The worker count is a process-level shim knob, not an Engine field:
+    // push it down here so every command honours --shim-threads / the JSON
+    // key (env-only runs resolve inside the shim without an override).
+    cfg.apply_shim_threads();
     Ok(cfg)
 }
 
@@ -164,6 +173,10 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
         b.shim_compile_ms,
         b.shim_execute_ms,
         s.mailbox_dropped,
+    );
+    println!(
+        "shim threads: {} worker(s), {} kernel(s) dispatched to the pool, {} small-shape serial fallback(s)",
+        b.shim_threads, b.shim_parallel_loops, b.shim_serial_fallbacks,
     );
     println!(
         "speculate: {} plan-cache hits, {} misses, {} segment-compile calls skipped, {} deferred re-entries, avg re-entry {:.2}ms",
@@ -287,7 +300,7 @@ fn main() {
         "help" | "--help" | "-h" => {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
-                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off]\n  \
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off] [--shim-threads 0|N]\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \

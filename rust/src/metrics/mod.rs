@@ -49,6 +49,16 @@ pub struct BreakdownSnapshot {
     pub shim_compile_ms: f64,
     /// Milliseconds spent executing inside the shim.
     pub shim_execute_ms: f64,
+    /// Shim jobs actually dispatched to the worker pool (delta after
+    /// [`BreakdownSnapshot::per_step_since`]; busy-pool serial
+    /// degradations are not counted).
+    pub shim_parallel_loops: u64,
+    /// Parallel-eligible shim kernels that stayed serial because the shape
+    /// was below the dispatch threshold (threads > 1 only).
+    pub shim_serial_fallbacks: u64,
+    /// Worker count resolved by the shim's most recent execution (gauge —
+    /// carried through `per_step_since` unchanged, not a delta).
+    pub shim_threads: u64,
     /// Co-execution entries served from the speculation plan cache (delta
     /// after [`BreakdownSnapshot::per_step_since`]).
     pub plan_cache_hits: u64,
@@ -115,6 +125,9 @@ impl Breakdown {
             shim_bytes_reused: 0,
             shim_compile_ms: 0.0,
             shim_execute_ms: 0.0,
+            shim_parallel_loops: 0,
+            shim_serial_fallbacks: 0,
+            shim_threads: 0,
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             compiles_skipped: 0,
@@ -149,6 +162,13 @@ impl BreakdownSnapshot {
             shim_bytes_reused: self.shim_bytes_reused.saturating_sub(earlier.shim_bytes_reused),
             shim_compile_ms: self.shim_compile_ms - earlier.shim_compile_ms,
             shim_execute_ms: self.shim_execute_ms - earlier.shim_execute_ms,
+            shim_parallel_loops: self
+                .shim_parallel_loops
+                .saturating_sub(earlier.shim_parallel_loops),
+            shim_serial_fallbacks: self
+                .shim_serial_fallbacks
+                .saturating_sub(earlier.shim_serial_fallbacks),
+            shim_threads: self.shim_threads,
             plan_cache_hits: self.plan_cache_hits.saturating_sub(earlier.plan_cache_hits),
             plan_cache_misses: self.plan_cache_misses.saturating_sub(earlier.plan_cache_misses),
             compiles_skipped: self.compiles_skipped.saturating_sub(earlier.compiles_skipped),

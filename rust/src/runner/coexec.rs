@@ -365,6 +365,9 @@ impl Engine {
         snap.shim_bytes_reused = shim.bytes_reused;
         snap.shim_compile_ms = shim.compile_ns as f64 / 1e6;
         snap.shim_execute_ms = shim.execute_ns as f64 / 1e6;
+        snap.shim_parallel_loops = shim.parallel_loops;
+        snap.shim_serial_fallbacks = shim.serial_fallbacks;
+        snap.shim_threads = shim.threads_used;
         snap.plan_cache_hits = self.stats.plan_cache_hits;
         snap.plan_cache_misses = self.stats.plan_cache_misses;
         snap.compiles_skipped = self.stats.segment_compiles_skipped;

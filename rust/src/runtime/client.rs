@@ -29,9 +29,29 @@ pub struct Client {
 impl Client {
     /// Create a fresh client. Prefer [`Client::global`] so all subsystems
     /// share one device allocator.
+    ///
+    /// Each client owns a **private deterministic RNG stream** (seeded with
+    /// the shim's default), so two engines running on distinct clients can
+    /// never interleave each other's draws — the shim's process-global
+    /// stream previously made that nondeterministic. Executables compiled
+    /// through a shared cache keep the stream of the client that compiled
+    /// them; engines sharing [`Client::global`] therefore share one stream,
+    /// exactly like the seed. The global stream stays reachable via the raw
+    /// `xla::rng_state` / `xla::set_rng_state` API.
     pub fn new() -> Result<Self> {
-        let c = xla::PjRtClient::cpu()?;
+        let c = xla::PjRtClient::cpu_with_rng(xla::DEFAULT_RNG_SEED)?;
         Ok(Client { inner: Arc::new(ClientInner(c)), compile_count: Arc::new(AtomicU64::new(0)) })
+    }
+
+    /// This client's RNG stream state (save/replay; see the shim's
+    /// determinism contract in `rust/vendor/xla/README.md`).
+    pub fn rng_state(&self) -> u64 {
+        self.inner.0.rng_state()
+    }
+
+    /// Reset this client's RNG stream, aligning subsequent draws.
+    pub fn set_rng_state(&self, state: u64) {
+        self.inner.0.set_rng_state(state);
     }
 
     /// The process-wide client (initialized on first use).
@@ -314,6 +334,41 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].to_host().unwrap().as_f32().unwrap(), &[6.0, 8.0]);
         assert_eq!(out[1].to_host().unwrap().as_f32().unwrap(), &[9.0, 16.0]);
+    }
+
+    #[test]
+    fn fresh_clients_have_isolated_rng_streams() {
+        let rng_comp = || {
+            let b = xla::XlaBuilder::new("rng");
+            let lo = b.c0(0f32).unwrap();
+            let hi = b.c0(1f32).unwrap();
+            let sh = xla::ArrayShape::new::<f32>(vec![8]);
+            let r = xla::XlaOp::rng_uniform(&lo, &hi, &sh).unwrap();
+            b.build(&r).unwrap()
+        };
+        let out_ty = || vec![TensorType::new(DType::F32, Shape::of(&[8]))];
+        let draw = |c: &Client, exe: &Executable| {
+            exe.run(c, &[]).unwrap().remove(0).to_host().unwrap().as_f32().unwrap().to_vec()
+        };
+        // Serial oracle: one fresh client drawing twice.
+        let c0 = Client::new().unwrap();
+        let e0 = c0.compile(&rng_comp(), out_ty()).unwrap();
+        let first = draw(&c0, &e0);
+        let second = draw(&c0, &e0);
+        // Two fresh clients, executions interleaved: each reproduces the
+        // oracle's sequence — no cross-client interleaving.
+        let c1 = Client::new().unwrap();
+        let c2 = Client::new().unwrap();
+        let e1 = c1.compile(&rng_comp(), out_ty()).unwrap();
+        let e2 = c2.compile(&rng_comp(), out_ty()).unwrap();
+        assert_eq!(draw(&c1, &e1), first);
+        assert_eq!(draw(&c2, &e2), first);
+        assert_eq!(draw(&c1, &e1), second);
+        assert_eq!(draw(&c2, &e2), second);
+        assert_eq!(c1.rng_state(), c2.rng_state());
+        // And the stream is resettable per client.
+        c1.set_rng_state(xla::DEFAULT_RNG_SEED);
+        assert_eq!(draw(&c1, &e1), first);
     }
 
     #[test]

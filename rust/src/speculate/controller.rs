@@ -73,14 +73,20 @@ const MAX_SITES: usize = 64;
 /// split point (see [`DivergenceProfile::split_candidates`]).
 pub const DEFAULT_SPLIT_MIN_COUNT: u64 = 2;
 
+/// Threshold from a raw `TERRA_SPLIT_MIN_COUNT` value: absent =
+/// [`DEFAULT_SPLIT_MIN_COUNT`], `>= 1` accepted, junk a hard error (the
+/// seed silently ignored `TERRA_SPLIT_MIN_COUNT=junk`).
+fn split_min_from_raw(raw: Option<&str>) -> crate::error::Result<u64> {
+    Ok(crate::config::env::value_min("TERRA_SPLIT_MIN_COUNT", raw, 1)?
+        .unwrap_or(DEFAULT_SPLIT_MIN_COUNT))
+}
+
 /// Hotness threshold for segment splitting: `TERRA_SPLIT_MIN_COUNT` env
-/// override, else [`DEFAULT_SPLIT_MIN_COUNT`].
+/// override (validated; malformed values panic with the knob name), else
+/// [`DEFAULT_SPLIT_MIN_COUNT`].
 pub fn split_min_count() -> u64 {
-    std::env::var("TERRA_SPLIT_MIN_COUNT")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .filter(|&c| c >= 1)
-        .unwrap_or(DEFAULT_SPLIT_MIN_COUNT)
+    split_min_from_raw(std::env::var("TERRA_SPLIT_MIN_COUNT").ok().as_deref())
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Extract the TraceGraph node from a walker divergence description
@@ -409,5 +415,14 @@ mod tests {
         assert_eq!(sites[1], ("cold".to_string(), 1));
         let mean = c.mean_fallback_distance().unwrap();
         assert!((mean - (4.0 + 11.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_min_env_knob_rejects_junk_and_zero() {
+        assert_eq!(split_min_from_raw(None).unwrap(), DEFAULT_SPLIT_MIN_COUNT);
+        assert_eq!(split_min_from_raw(Some("5")).unwrap(), 5);
+        let e = split_min_from_raw(Some("junk")).unwrap_err();
+        assert!(e.to_string().contains("TERRA_SPLIT_MIN_COUNT"), "{e}");
+        assert!(split_min_from_raw(Some("0")).is_err());
     }
 }

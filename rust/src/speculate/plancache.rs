@@ -102,12 +102,16 @@ pub struct PlanCache {
     evictions: AtomicU64,
 }
 
+/// Capacity from a raw `TERRA_PLAN_CACHE_CAP` value: absent = 64, `>= 1`
+/// accepted, anything else (junk, zero) a hard error — the seed silently
+/// fell back to 64 on `TERRA_PLAN_CACHE_CAP=0`.
+fn capacity_from_raw(raw: Option<&str>) -> crate::error::Result<usize> {
+    Ok(crate::config::env::value_min("TERRA_PLAN_CACHE_CAP", raw, 1)?.unwrap_or(64))
+}
+
 fn default_capacity() -> usize {
-    std::env::var("TERRA_PLAN_CACHE_CAP")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .filter(|&c| c > 0)
-        .unwrap_or(64)
+    capacity_from_raw(std::env::var("TERRA_PLAN_CACHE_CAP").ok().as_deref())
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 impl Default for PlanCache {
@@ -297,5 +301,15 @@ mod tests {
         assert!(!c.contains(&key(2)));
         assert!(c.contains(&key(3)));
         assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn capacity_env_knob_rejects_junk_and_zero() {
+        assert_eq!(capacity_from_raw(None).unwrap(), 64);
+        assert_eq!(capacity_from_raw(Some("8")).unwrap(), 8);
+        let e = capacity_from_raw(Some("0")).unwrap_err();
+        assert!(e.to_string().contains("TERRA_PLAN_CACHE_CAP"), "{e}");
+        let e = capacity_from_raw(Some("abc")).unwrap_err();
+        assert!(e.to_string().contains("TERRA_PLAN_CACHE_CAP"), "{e}");
     }
 }

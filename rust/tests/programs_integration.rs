@@ -118,6 +118,31 @@ fn moe_router_trains_identically_across_expert_switches() {
 }
 
 #[test]
+fn moe_router_trains_identically_on_interp_backend() {
+    // The interpreter escape hatch must cover the dynamic-control-flow
+    // workload too. The CI interp job runs the whole suite under
+    // XLA_SHIM_BACKEND=interp; this pins the combination in the default job
+    // as well. The knob is process-global, so concurrently running tests in
+    // this binary may compile the odd segment on the interpreter while it
+    // is set — harmless: the backends are bit-identical by contract, and
+    // the segment caches key on the active backend (PR 4).
+    let prev = std::env::var("XLA_SHIM_BACKEND").ok();
+    std::env::set_var("XLA_SHIM_BACKEND", "interp");
+    let result = std::panic::catch_unwind(|| {
+        let (_, _, stats) = run("moe_router", ExecMode::Terra, 20);
+        assert!(stats.fallbacks >= 1, "expert switch must diverge: {stats:?}");
+        check_program("moe_router", 20, true);
+    });
+    match prev {
+        Some(v) => std::env::set_var("XLA_SHIM_BACKEND", v),
+        None => std::env::remove_var("XLA_SHIM_BACKEND"),
+    }
+    if let Err(p) = result {
+        std::panic::resume_unwind(p);
+    }
+}
+
+#[test]
 fn losses_decrease_under_terra() {
     // Training sanity: first-vs-last loss for a deterministic program.
     let (losses, _, _) = run("resnet50", ExecMode::Terra, 20);

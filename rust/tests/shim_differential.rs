@@ -444,37 +444,54 @@ fn run_backend(comp: &XlaComputation, args: &[ArgData], backend: ShimBackend) ->
         .collect())
 }
 
+/// Thread counts the bytecode backend is fuzzed over (the
+/// `TERRA_SHIM_THREADS` axis, driven through its programmatic override so
+/// the process env stays untouched): the seed's single-threaded path, one
+/// extra worker, and an oversubscribed pool.
+const THREAD_AXIS: [usize; 3] = [1, 2, 8];
+
 fn check_seed(seed: u64, allow_rng: bool) {
     let (comp, args) = build_case(seed, allow_rng);
     let rng_seed = 0x5EED_0000 ^ seed;
     xla::set_rng_state(rng_seed);
     let a = run_backend(&comp, &args, ShimBackend::Interp);
     let state_interp = xla::rng_state();
-    xla::set_rng_state(rng_seed);
-    let c = run_backend(&comp, &args, ShimBackend::Bytecode);
-    let state_bytecode = xla::rng_state();
-    match (a, c) {
-        (Ok(a), Ok(c)) => {
-            assert_eq!(a.len(), c.len(), "output arity differs at seed {seed}");
-            for (j, (l, r)) in a.iter().zip(c.iter()).enumerate() {
-                assert_eq!(l.0, r.0, "output {j} dtype differs at seed {seed}");
-                assert_eq!(l.1, r.1, "output {j} dims differ at seed {seed}");
-                assert_eq!(l.2, r.2, "output {j} bits differ at seed {seed}");
+    // Every thread count must reproduce the single-threaded interp oracle
+    // bit for bit, RNG stream state included (draws stay on the dispatch
+    // thread, never in the worker pool).
+    for threads in THREAD_AXIS {
+        xla::set_shim_threads(threads);
+        xla::set_rng_state(rng_seed);
+        let c = run_backend(&comp, &args, ShimBackend::Bytecode);
+        let state_bytecode = xla::rng_state();
+        match (&a, &c) {
+            (Ok(a), Ok(c)) => {
+                assert_eq!(a.len(), c.len(), "output arity differs at seed {seed}");
+                for (j, (l, r)) in a.iter().zip(c.iter()).enumerate() {
+                    assert_eq!(l.0, r.0, "output {j} dtype differs at seed {seed}");
+                    assert_eq!(l.1, r.1, "output {j} dims differ at seed {seed}");
+                    assert_eq!(
+                        l.2, r.2,
+                        "output {j} bits differ at seed {seed} (threads {threads})"
+                    );
+                }
+                if allow_rng {
+                    assert_eq!(
+                        state_interp, state_bytecode,
+                        "RNG stream state diverged at seed {seed} (threads {threads})"
+                    );
+                }
             }
-            if allow_rng {
-                assert_eq!(
-                    state_interp, state_bytecode,
-                    "RNG stream state diverged at seed {seed}"
-                );
-            }
+            (Err(_), Err(_)) => {} // both backends reject the graph: acceptable
+            (a, c) => panic!(
+                "backend disagreement at seed {seed} (threads {threads}): \
+                 interp ok={}, bytecode ok={}",
+                a.is_ok(),
+                c.is_ok()
+            ),
         }
-        (Err(_), Err(_)) => {} // both backends reject the graph: acceptable
-        (a, c) => panic!(
-            "backend disagreement at seed {seed}: interp ok={}, bytecode ok={}",
-            a.is_ok(),
-            c.is_ok()
-        ),
     }
+    xla::set_shim_threads(0);
 }
 
 /// The full fuzz sweep, RNG ops included. Runs serially in one test so the
@@ -517,11 +534,22 @@ fn bytecode_matches_interpreter_on_elementwise_chains() {
     }
 }
 
-/// Matmul sizes drawn from the bench_fig5 workloads: bitwise-identical
-/// accumulation (k-order and zero-skip preserved by the blocked kernel).
+/// Matmul sizes drawn from the bench_fig5 workloads, swept over the thread
+/// axis: bitwise-identical accumulation (k-order and zero-skip preserved by
+/// the blocked kernel; row partitioning never regroups a sum). The last two
+/// sizes clear the parallel flop threshold.
 #[test]
 fn bytecode_matches_interpreter_on_matmul_sizes() {
-    for (m, k, n) in [(4, 8, 4), (16, 16, 16), (32, 64, 8), (64, 32, 48), (1, 128, 1)] {
+    let sizes = [
+        (4, 8, 4),
+        (16, 16, 16),
+        (32, 64, 8),
+        (64, 32, 48),
+        (1, 128, 1),
+        (48, 96, 32),
+        (96, 64, 96),
+    ];
+    for (m, k, n) in sizes {
         let mut rng = Rng::new((m * 1000 + k * 10 + n) as u64);
         let b = XlaBuilder::new("mm");
         let a = b.parameter(0, ElementType::F32, &[m, k], "a").unwrap();
@@ -539,7 +567,49 @@ fn bytecode_matches_interpreter_on_matmul_sizes() {
             ArgData::F { data: bv, dims: vec![k as usize, n as usize] },
         ];
         let x = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
-        let y = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
-        assert_eq!(x, y, "matmul {m}x{k}x{n} diverged");
+        for threads in THREAD_AXIS {
+            xla::set_shim_threads(threads);
+            let y = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+            assert_eq!(x, y, "matmul {m}x{k}x{n} diverged (threads {threads})");
+        }
+        xla::set_shim_threads(0);
     }
+}
+
+/// Shapes big enough that every parallel kernel genuinely dispatches to the
+/// worker pool (the fuzz corpus shapes mostly sit below the thresholds):
+/// fused chain, softmax, keep-dims and full reduces, and a batched matmul,
+/// all bit-identical across the thread axis and to the interp oracle.
+#[test]
+fn parallel_kernels_match_oracle_on_large_shapes() {
+    let b = XlaBuilder::new("parlarge");
+    let x = b.parameter(0, ElementType::F32, &[128, 512], "x").unwrap();
+    let w = b.parameter(1, ElementType::F32, &[512, 64], "w").unwrap();
+    let c = b.c0(0.37f32).unwrap();
+    let chain = x.mul_(&c).unwrap().tanh().unwrap().add_(&x).unwrap().logistic().unwrap();
+    let sm = chain.softmax(1).unwrap();
+    let mm = sm.matmul(&w).unwrap();
+    let rsum = sm.reduce_sum(&[1], false).unwrap();
+    let rmean = chain.reduce_mean(&[0], true).unwrap();
+    let rmax = chain.reduce_max(&[0, 1], false).unwrap();
+    let root = b.tuple(&[mm, rsum, rmean, rmax]).unwrap();
+    let comp = b.build(&root).unwrap();
+
+    let mut rng = Rng::new(0x9A55_1E57);
+    let mut xv = rng.normal_vec(128 * 512, 1.2);
+    for i in (0..xv.len()).step_by(11) {
+        xv[i] = 0.0; // exercise the matmul zero-skip on the parallel path
+    }
+    let wv = rng.normal_vec(512 * 64, 0.8);
+    let args = vec![
+        ArgData::F { data: xv, dims: vec![128, 512] },
+        ArgData::F { data: wv, dims: vec![512, 64] },
+    ];
+    let oracle = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
+    for threads in THREAD_AXIS {
+        xla::set_shim_threads(threads);
+        let got = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+        assert_eq!(oracle, got, "large-shape parallel run diverged (threads {threads})");
+    }
+    xla::set_shim_threads(0);
 }

@@ -30,11 +30,11 @@
 use crate::interp::{binary_f32_fn, binary_i32_fn, cmp_f32, cmp_i32, unary_f32_fn, unary_i32_fn};
 use crate::{
     broadcast_shape, err, num_elems, unravel, BinaryK, CmpK, Data, Error, Literal, Op,
-    PrimitiveType, ReduceK, Result, UnaryK, XlaComputation,
+    PrimitiveType, ReduceK, Result, RngStream, UnaryK, XlaComputation,
 };
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Reg = u32;
 
@@ -194,6 +194,15 @@ enum Inst {
         in_n: usize,
         count: usize,
         backing: Backing,
+        /// Sizes of the kept dims (original dim order) — the output's shape
+        /// as a mixed radix for the parallel per-output walk.
+        kept_sizes: Vec<usize>,
+        /// Input strides of the kept dims, matching `kept_sizes`.
+        kept_in_strides: Vec<usize>,
+        /// Sizes of the reduced dims (original dim order).
+        red_sizes: Vec<usize>,
+        /// Input strides of the reduced dims, matching `red_sizes`.
+        red_in_strides: Vec<usize>,
     },
     Softmax {
         dst: Reg,
@@ -362,6 +371,213 @@ impl Pool {
 }
 
 // ---------------------------------------------------------------------------
+// Deterministic worker pool (TERRA_SHIM_THREADS)
+// ---------------------------------------------------------------------------
+//
+// Parallel kernels partition their *output* index space into fixed
+// contiguous chunks; every chunk computes exactly what the serial kernel
+// would compute for the same indices, in the same per-element order, so
+// results are bit-identical to the single-threaded run for every thread
+// count and schedule. RNG instructions never enter the pool: draws stay on
+// the dispatching thread, in node order, exactly like the interpreter.
+
+/// Minimum output elements (fused loops, reduce inputs, softmax totals)
+/// before a kernel is worth dispatching to the pool; below this the
+/// dispatch overhead beats the win and the kernel stays serial (counted in
+/// `serial_fallbacks`).
+const PAR_MIN_ELEMS: usize = 4096;
+/// Minimum `batch*m*k*n` multiply-adds for a parallel matmul.
+const PAR_MIN_FLOPS: usize = 32_768;
+
+/// One dispatched job. Workers claim chunk indices from `next` until it
+/// exceeds `chunks`; each claimed chunk runs the closure and then bumps
+/// `done` — even if the closure panicked (the panic is caught and recorded
+/// in `panicked`), so the completion protocol can never wedge and the job
+/// is always unpublished. The `'static` on `f` is a lie confined to the
+/// pool (see [`run_parallel`]): the closure is only dereferenced for
+/// successfully claimed chunks, and the dispatcher blocks until
+/// `done == chunks` before its frame (which owns the closure) returns.
+#[derive(Clone)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    next: Arc<AtomicUsize>,
+    chunks: usize,
+    done: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<AtomicBool>,
+}
+
+struct PoolState {
+    job: Option<Job>,
+    /// Bumped on every publish so a worker never re-enters a job it already
+    /// drained.
+    seq: u64,
+    workers: usize,
+}
+
+/// Persistent worker pool shared by every executable in the process.
+/// Workers park on `work` between jobs and are spawned lazily, up to one
+/// less than the largest thread count ever requested (the dispatching
+/// thread always acts as the remaining worker).
+struct WorkerPool {
+    state: Mutex<PoolState>,
+    work: Condvar,
+}
+
+fn pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool {
+        state: Mutex::new(PoolState { job: None, seq: 0, workers: 0 }),
+        work: Condvar::new(),
+    })
+}
+
+impl WorkerPool {
+    fn ensure_workers(&'static self, want: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.workers < want {
+            st.workers += 1;
+            let idx = st.workers;
+            std::thread::Builder::new()
+                .name(format!("xla-shim-worker-{idx}"))
+                .spawn(move || self.worker_loop())
+                .expect("failed to spawn shim worker thread");
+        }
+    }
+
+    fn worker_loop(&self) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.seq != seen {
+                        if let Some(j) = &st.job {
+                            seen = st.seq;
+                            break j.clone();
+                        }
+                    }
+                    st = self.work.wait(st).unwrap();
+                }
+            };
+            run_chunks(&job);
+        }
+    }
+}
+
+/// Claim and run chunks of `job` until none remain. A panicking chunk is
+/// caught here (and re-raised by the dispatcher after the job completes):
+/// letting it unwind would skip the `done` bump — wedging the dispatcher
+/// forever — or kill a worker thread while the job (with its
+/// lifetime-erased closure) is still published.
+fn run_chunks(job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.chunks {
+            return;
+        }
+        let f = job.f;
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(c))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        let (lock, cv) = &*job.done;
+        let mut d = lock.lock().unwrap();
+        *d += 1;
+        if *d == job.chunks {
+            cv.notify_all();
+        }
+    }
+}
+
+/// Run `chunks` fixed tasks on up to `threads` threads (dispatcher
+/// included). Falls back to running everything on the caller when the pool
+/// is busy with a concurrent dispatch — results are identical either way,
+/// only the wall-clock changes. Counts `parallel_loops` only when the job
+/// actually went to the pool. A chunk panic (caught in [`run_chunks`]) is
+/// re-raised here on the dispatching thread, after the job has fully
+/// drained and been unpublished, so the pool stays sound.
+fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if threads <= 1 || chunks <= 1 {
+        for c in 0..chunks {
+            f(c);
+        }
+        return;
+    }
+    let p = pool();
+    p.ensure_workers(threads - 1);
+    // SAFETY: the 'static lifetime is never exercised beyond this frame —
+    // workers dereference `f` only for claimed chunks, every claimed chunk
+    // increments `done` afterwards (panics included), and this function
+    // blocks until `done == chunks` (and unpublishes the job) before
+    // returning or unwinding.
+    let f_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe { &*(f as *const (dyn Fn(usize) + Sync)) };
+    let job = Job {
+        f: f_static,
+        next: Arc::new(AtomicUsize::new(0)),
+        chunks,
+        done: Arc::new((Mutex::new(0), Condvar::new())),
+        panicked: Arc::new(AtomicBool::new(false)),
+    };
+    {
+        let mut st = p.state.lock().unwrap();
+        if st.job.is_some() {
+            drop(st);
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+        st.seq += 1;
+        st.job = Some(job.clone());
+        p.work.notify_all();
+    }
+    crate::PARALLEL_LOOPS.fetch_add(1, Ordering::Relaxed);
+    run_chunks(&job);
+    let (lock, cv) = &*job.done;
+    let mut d = lock.lock().unwrap();
+    while *d < chunks {
+        d = cv.wait(d).unwrap();
+    }
+    drop(d);
+    p.state.lock().unwrap().job = None;
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("a parallel shim kernel chunk panicked (re-raised on the dispatch thread)");
+    }
+}
+
+/// The fixed contiguous ranges `chunk_range(n, chunks, 0..chunks)`
+/// partition `0..n`; the partition depends only on `n` and `chunks`, never
+/// on which thread runs a chunk.
+fn chunk_range(n: usize, chunks: usize, c: usize) -> std::ops::Range<usize> {
+    (n * c / chunks)..(n * (c + 1) / chunks)
+}
+
+/// Shared mutable base pointer for parallel kernels; chunks write disjoint
+/// ranges of the pre-sized output buffer.
+#[derive(Clone, Copy)]
+struct OutPtr<T>(*mut T);
+unsafe impl<T: Send> Send for OutPtr<T> {}
+unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+/// Count a small-shape serial fallback: a parallel-eligible kernel kind
+/// that stayed serial because the shape was below its dispatch threshold
+/// (only meaningful when threads > 1). Actual pool dispatches are counted
+/// inside [`run_parallel`], where the busy-pool serial degradation is
+/// visible — so `parallel_loops` never over-reports under contention.
+fn note_parallel(threads: usize, eligible: bool) {
+    if threads > 1 && !eligible {
+        crate::SERIAL_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-execution context: the client's RNG stream and the resolved worker
+/// count.
+struct ExecCtx<'a> {
+    rng: &'a RngStream,
+    threads: usize,
+}
+
+// ---------------------------------------------------------------------------
 // Program
 // ---------------------------------------------------------------------------
 
@@ -419,7 +635,14 @@ impl Program {
     }
 
     /// Run the program, returning the output leaves (the untupled root).
-    pub(crate) fn execute(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+    /// RNG instructions draw from `rng` on this thread in node order;
+    /// parallel kernels use the worker count resolved by
+    /// [`crate::shim_threads`] (1 = the seed's single-threaded behaviour,
+    /// bit-identical results at every count).
+    pub(crate) fn execute(&self, args: &[&Literal], rng: &RngStream) -> Result<Vec<Literal>> {
+        let threads = crate::shim_threads()?;
+        crate::THREADS_USED.store(threads as u64, Ordering::Relaxed);
+        let ctx = ExecCtx { rng, threads };
         for p in &self.params {
             let v = args
                 .get(p.index)
@@ -442,7 +665,7 @@ impl Program {
         regs.resize_with(self.insts.len(), || None);
         let mut failed: Option<Error> = None;
         for (i, inst) in self.insts.iter().enumerate() {
-            match exec_inst(inst, &regs, &self.consts, args, &mut pool) {
+            match exec_inst(inst, &regs, &self.consts, args, &mut pool, &ctx) {
                 Ok(buf) => regs[inst.dst() as usize] = Some(buf),
                 Err(e) => {
                     failed = Some(e);
@@ -1107,6 +1330,9 @@ pub(crate) fn compile(comp: &XlaComputation) -> Result<Program> {
                     out_strides[d] = kstr[pos];
                 }
                 let out_n = num_elems(&kept_dims).max(1);
+                let istr = row_major_strides(&a.dims);
+                let red: Vec<usize> =
+                    (0..a.dims.len()).filter(|&i| reduce_set[i]).collect();
                 Inst::Reduce {
                     dst,
                     src: node_src[&node.args[0]],
@@ -1117,6 +1343,10 @@ pub(crate) fn compile(comp: &XlaComputation) -> Result<Program> {
                     in_n: a.n,
                     count: a.n / out_n,
                     backing: a.backing(),
+                    kept_sizes: kept.iter().map(|&i| a.dims[i] as usize).collect(),
+                    kept_in_strides: kept.iter().map(|&i| istr[i]).collect(),
+                    red_sizes: red.iter().map(|&i| a.dims[i] as usize).collect(),
+                    red_in_strides: red.iter().map(|&i| istr[i]).collect(),
                 }
             }
             Op::Softmax(dim) => {
@@ -1417,10 +1647,11 @@ fn exec_inst(
     consts: &[Literal],
     args: &[&Literal],
     pool: &mut Pool,
+    ctx: &ExecCtx,
 ) -> Result<Buf> {
     match inst {
         Inst::Fused { n, srcs, ops, stack, all_f32, out, .. } => {
-            exec_fused(*n, srcs, ops, *stack, *all_f32, *out, regs, consts, args, pool)
+            exec_fused(*n, srcs, ops, *stack, *all_f32, *out, regs, consts, args, pool, ctx)
         }
         Inst::FillZero { n, out, .. } => Ok(match out {
             Backing::F => {
@@ -1450,12 +1681,14 @@ fn exec_inst(
                 Buf::I(v)
             }
         }),
+        // RNG kernels never enter the worker pool: draws stay on the
+        // dispatch thread, in node order, matching the interpreter exactly.
         Inst::RngUniform { lo, hi, n, .. } => {
             let lov = f32s(view(*lo, regs, consts, args)?)?[0];
             let hiv = f32s(view(*hi, regs, consts, args)?)?[0];
             let mut out = pool.alloc_f32(*n);
             for _ in 0..*n {
-                out.push(lov + crate::next_uniform() * (hiv - lov));
+                out.push(lov + ctx.rng.next_uniform() * (hiv - lov));
             }
             Ok(Buf::F(out))
         }
@@ -1464,7 +1697,7 @@ fn exec_inst(
             let sv = f32s(view(*sigma, regs, consts, args)?)?[0];
             let mut out = pool.alloc_f32(*n);
             for _ in 0..*n {
-                out.push(muv + sv * crate::next_normal());
+                out.push(muv + sv * ctx.rng.next_normal());
             }
             Ok(Buf::F(out))
         }
@@ -1536,33 +1769,72 @@ fn exec_inst(
             let av = f32s(view(*a, regs, consts, args)?)?;
             let bv = f32s(view(*b, regs, consts, args)?)?;
             let (m, k, n, batch) = (*m, *k, *n, *batch);
+            let (a_shared, b_shared) = (*a_shared, *b_shared);
             let mut out = pool.alloc_f32(batch * m * n);
+            out.resize(batch * m * n, 0.0);
             let mut bt = pool.alloc_f32(k * n);
-            for bi in 0..batch {
-                let a_off = if *a_shared { 0 } else { bi * m * k };
-                let b_off = if *b_shared { 0 } else { bi * k * n };
-                if bi == 0 || !*b_shared {
-                    bt.clear();
-                    for j in 0..n {
-                        for kk in 0..k {
-                            bt.push(bv[b_off + kk * n + j]);
-                        }
+            let transpose_bt = |bt: &mut Vec<f32>, b_off: usize| {
+                bt.clear();
+                for j in 0..n {
+                    for kk in 0..k {
+                        bt.push(bv[b_off + kk * n + j]);
                     }
                 }
-                for i in 0..m {
-                    let arow = &av[a_off + i * k..a_off + i * k + k];
-                    for j in 0..n {
-                        let brow = &bt[j * k..j * k + k];
-                        let mut acc = 0f32;
-                        // Same accumulation order and zero-skip as the
-                        // interpreter's saxpy loop: bit-identical sums.
-                        for kk in 0..k {
-                            let x = arow[kk];
-                            if x != 0.0 {
-                                acc += x * brow[kk];
-                            }
+            };
+            let rows = batch * m;
+            let par = ctx.threads > 1 && rows >= 2 && rows * n * k >= PAR_MIN_FLOPS;
+            note_parallel(ctx.threads, par);
+            if par && (b_shared || batch == 1) {
+                // One RHS transpose serves every row: partition the full
+                // batch*m row space into fixed chunks. Each (i, j) keeps the
+                // serial kernel's k-ascending, zero-skipping accumulation,
+                // so which thread computes a row never changes its bits.
+                transpose_bt(&mut bt, 0);
+                let ptr = OutPtr(out.as_mut_ptr());
+                let chunks = ctx.threads;
+                let btr: &[f32] = &bt;
+                run_parallel(ctx.threads, chunks, &|c| {
+                    for row in chunk_range(rows, chunks, c) {
+                        let a_off = if a_shared { (row % m) * k } else { row * k };
+                        let arow = &av[a_off..a_off + k];
+                        // SAFETY: row regions of the pre-sized output are
+                        // disjoint across chunks.
+                        let dst =
+                            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(row * n), n) };
+                        matmul_row(arow, btr, dst, k);
+                    }
+                });
+            } else if par {
+                // Per-batch RHS: transpose serially on the dispatch thread,
+                // row-partition each batch.
+                for bi in 0..batch {
+                    transpose_bt(&mut bt, bi * k * n);
+                    let ptr = OutPtr(out.as_mut_ptr());
+                    let chunks = ctx.threads;
+                    let btr: &[f32] = &bt;
+                    run_parallel(ctx.threads, chunks, &|c| {
+                        for i in chunk_range(m, chunks, c) {
+                            let a_off = if a_shared { i * k } else { bi * m * k + i * k };
+                            let arow = &av[a_off..a_off + k];
+                            // SAFETY: disjoint row regions, as above.
+                            let dst = unsafe {
+                                std::slice::from_raw_parts_mut(ptr.0.add((bi * m + i) * n), n)
+                            };
+                            matmul_row(arow, btr, dst, k);
                         }
-                        out.push(acc);
+                    });
+                }
+            } else {
+                for bi in 0..batch {
+                    let a_off = if a_shared { 0 } else { bi * m * k };
+                    let b_off = if b_shared { 0 } else { bi * k * n };
+                    if bi == 0 || !b_shared {
+                        transpose_bt(&mut bt, b_off);
+                    }
+                    for i in 0..m {
+                        let arow = &av[a_off + i * k..a_off + i * k + k];
+                        let dst = &mut out[(bi * m + i) * n..(bi * m + i + 1) * n];
+                        matmul_row(arow, &bt, dst, k);
                     }
                 }
             }
@@ -1652,8 +1924,24 @@ fn exec_inst(
                 }
             }
         }
-        Inst::Reduce { src, kind, in_dims, out_strides, out_n, in_n, count, backing, .. } => {
+        Inst::Reduce {
+            src,
+            kind,
+            in_dims,
+            out_strides,
+            out_n,
+            in_n,
+            count,
+            backing,
+            kept_sizes,
+            kept_in_strides,
+            red_sizes,
+            red_in_strides,
+            ..
+        } => {
             let sv = view(*src, regs, consts, args)?;
+            let par = ctx.threads > 1 && *out_n >= 2 && *in_n >= PAR_MIN_ELEMS;
+            note_parallel(ctx.threads, par);
             match backing {
                 Backing::F => {
                     let v = f32s(sv)?;
@@ -1661,12 +1949,40 @@ fn exec_inst(
                         ReduceK::Sum | ReduceK::Mean => 0.0f32,
                         ReduceK::Max => f32::NEG_INFINITY,
                     };
-                    let mut acc = pool.alloc_f32(*out_n);
-                    acc.resize(*out_n, init);
-                    reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, |a, x| match kind {
+                    let scalar = |a: &mut f32, x: f32| match kind {
                         ReduceK::Sum | ReduceK::Mean => *a += x,
                         ReduceK::Max => *a = a.max(x),
-                    });
+                    };
+                    let mut acc = pool.alloc_f32(*out_n);
+                    acc.resize(*out_n, init);
+                    if par {
+                        // Partition the *output* range: each slot's
+                        // contributions keep their full serial accumulation
+                        // order (combining cross-chunk partials would not be
+                        // bit-identical for f32 sums).
+                        let ptr = OutPtr(acc.as_mut_ptr());
+                        let chunks = ctx.threads;
+                        run_parallel(ctx.threads, chunks, &|c| {
+                            let r = chunk_range(*out_n, chunks, c);
+                            // SAFETY: chunks write disjoint output ranges.
+                            let dst = unsafe {
+                                std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len())
+                            };
+                            reduce_rows(
+                                v,
+                                dst,
+                                r.start,
+                                kept_sizes,
+                                kept_in_strides,
+                                red_sizes,
+                                red_in_strides,
+                                init,
+                                scalar,
+                            );
+                        });
+                    } else {
+                        reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, scalar);
+                    }
                     if *kind == ReduceK::Mean {
                         let c = (*count).max(1) as f32;
                         for x in acc.iter_mut() {
@@ -1682,13 +1998,37 @@ fn exec_inst(
                         ReduceK::Max => i32::MIN,
                         ReduceK::Mean => return err("internal: i32 reduce_mean"),
                     };
-                    let mut acc = pool.alloc_i32(*out_n);
-                    acc.resize(*out_n, init);
-                    reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, |a, x| match kind {
+                    let scalar = |a: &mut i32, x: i32| match kind {
                         ReduceK::Sum => *a = a.wrapping_add(x),
                         ReduceK::Max => *a = (*a).max(x),
                         ReduceK::Mean => unreachable!(),
-                    });
+                    };
+                    let mut acc = pool.alloc_i32(*out_n);
+                    acc.resize(*out_n, init);
+                    if par {
+                        let ptr = OutPtr(acc.as_mut_ptr());
+                        let chunks = ctx.threads;
+                        run_parallel(ctx.threads, chunks, &|c| {
+                            let r = chunk_range(*out_n, chunks, c);
+                            // SAFETY: chunks write disjoint output ranges.
+                            let dst = unsafe {
+                                std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len())
+                            };
+                            reduce_rows(
+                                v,
+                                dst,
+                                r.start,
+                                kept_sizes,
+                                kept_in_strides,
+                                red_sizes,
+                                red_in_strides,
+                                init,
+                                scalar,
+                            );
+                        });
+                    } else {
+                        reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, scalar);
+                    }
                     Ok(Buf::I(acc))
                 }
             }
@@ -1699,44 +2039,27 @@ fn exec_inst(
             let total = outer * axis * inner;
             let mut out = pool.alloc_f32(total);
             out.resize(total, 0.0);
-            if inner == 1 {
-                // Contiguous rows: single-pass max / exp-sum / normalize.
-                for o in 0..outer {
-                    let row = &v[o * axis..(o + 1) * axis];
-                    let orow = &mut out[o * axis..(o + 1) * axis];
-                    let mut mx = f32::NEG_INFINITY;
-                    for &x in row {
-                        mx = mx.max(x);
-                    }
-                    let mut sum = 0f32;
-                    for kx in 0..axis {
-                        let e = (row[kx] - mx).exp();
-                        orow[kx] = e;
-                        sum += e;
-                    }
-                    for e in orow.iter_mut() {
-                        *e /= sum;
-                    }
-                }
+            let par = ctx.threads > 1 && outer >= 2 && total >= PAR_MIN_ELEMS;
+            note_parallel(ctx.threads, par);
+            if par {
+                // Outer groups are independent and contiguous
+                // (`axis * inner` elements each): fixed-partition them.
+                let block = axis * inner;
+                let ptr = OutPtr(out.as_mut_ptr());
+                let chunks = ctx.threads;
+                run_parallel(ctx.threads, chunks, &|c| {
+                    let r = chunk_range(outer, chunks, c);
+                    // SAFETY: chunks write disjoint outer-group regions.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            ptr.0.add(r.start * block),
+                            r.len() * block,
+                        )
+                    };
+                    softmax_block(v, dst, r.start, r.len(), axis, inner);
+                });
             } else {
-                for o in 0..outer {
-                    for inn in 0..inner {
-                        let at = |kx: usize| (o * axis + kx) * inner + inn;
-                        let mut mx = f32::NEG_INFINITY;
-                        for kx in 0..axis {
-                            mx = mx.max(v[at(kx)]);
-                        }
-                        let mut sum = 0f32;
-                        for kx in 0..axis {
-                            let e = (v[at(kx)] - mx).exp();
-                            out[at(kx)] = e;
-                            sum += e;
-                        }
-                        for kx in 0..axis {
-                            out[at(kx)] /= sum;
-                        }
-                    }
-                }
+                softmax_block(v, &mut out, 0, outer, axis, inner);
             }
             Ok(Buf::F(out))
         }
@@ -1773,6 +2096,122 @@ fn exec_inst(
     }
 }
 
+/// Softmax over `outers` consecutive outer groups starting at `o0`,
+/// writing into `out` (whose element 0 is outer group `o0`). Shared by the
+/// serial path (`o0 = 0`, the whole buffer) and the outer-partitioned
+/// parallel path — identical per-group max / exp-sum / normalize order, so
+/// results are bit-identical at every thread count.
+fn softmax_block(v: &[f32], out: &mut [f32], o0: usize, outers: usize, axis: usize, inner: usize) {
+    if inner == 1 {
+        // Contiguous rows: single-pass max / exp-sum / normalize.
+        for oo in 0..outers {
+            let row = &v[(o0 + oo) * axis..(o0 + oo + 1) * axis];
+            let orow = &mut out[oo * axis..(oo + 1) * axis];
+            let mut mx = f32::NEG_INFINITY;
+            for &x in row {
+                mx = mx.max(x);
+            }
+            let mut sum = 0f32;
+            for kx in 0..axis {
+                let e = (row[kx] - mx).exp();
+                orow[kx] = e;
+                sum += e;
+            }
+            for e in orow.iter_mut() {
+                *e /= sum;
+            }
+        }
+    } else {
+        for oo in 0..outers {
+            for inn in 0..inner {
+                let src_at = |kx: usize| ((o0 + oo) * axis + kx) * inner + inn;
+                let dst_at = |kx: usize| (oo * axis + kx) * inner + inn;
+                let mut mx = f32::NEG_INFINITY;
+                for kx in 0..axis {
+                    mx = mx.max(v[src_at(kx)]);
+                }
+                let mut sum = 0f32;
+                for kx in 0..axis {
+                    let e = (v[src_at(kx)] - mx).exp();
+                    out[dst_at(kx)] = e;
+                    sum += e;
+                }
+                for kx in 0..axis {
+                    out[dst_at(kx)] /= sum;
+                }
+            }
+        }
+    }
+}
+
+/// One output row of the blocked matmul: dot products of `arow` against the
+/// transposed-RHS rows. Shared by the serial and the row-partitioned
+/// parallel paths — same accumulation order and zero-skip as the
+/// interpreter's saxpy loop, so sums are bit-identical.
+fn matmul_row(arow: &[f32], bt: &[f32], dst: &mut [f32], k: usize) {
+    for (j, slot) in dst.iter_mut().enumerate() {
+        let brow = &bt[j * k..j * k + k];
+        let mut acc = 0f32;
+        for kk in 0..k {
+            let x = arow[kk];
+            if x != 0.0 {
+                acc += x * brow[kk];
+            }
+        }
+        *slot = acc;
+    }
+}
+
+/// Per-output reduction for the parallel path: computes `out[..]` (outputs
+/// `o_lo..` in flat output order) by walking each output's contributions in
+/// ascending input-flat order — the exact per-slot accumulation sequence of
+/// the serial [`reduce_loop`] sweep, so results are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn reduce_rows<T: Copy>(
+    v: &[T],
+    out: &mut [T],
+    o_lo: usize,
+    kept_sizes: &[usize],
+    kept_in_strides: &[usize],
+    red_sizes: &[usize],
+    red_in_strides: &[usize],
+    init: T,
+    f: impl Fn(&mut T, T),
+) {
+    let rank = red_sizes.len();
+    let count: usize = red_sizes.iter().product();
+    let mut idx = vec![0usize; rank];
+    for (slot, o) in out.iter_mut().zip(o_lo..) {
+        // Decompose the flat output index over the kept dims (row-major,
+        // original dim order — matching `out_strides`' construction).
+        let mut rem = o;
+        let mut base = 0usize;
+        for d in (0..kept_sizes.len()).rev() {
+            base += (rem % kept_sizes[d]) * kept_in_strides[d];
+            rem /= kept_sizes[d];
+        }
+        let mut acc = init;
+        // Odometer over the reduced subspace in ascending input-flat order.
+        idx.fill(0);
+        let mut off = base;
+        for _ in 0..count {
+            f(&mut acc, v[off]);
+            let mut d = rank;
+            while d > 0 {
+                d -= 1;
+                idx[d] += 1;
+                off += red_in_strides[d];
+                if idx[d] < red_sizes[d] {
+                    break;
+                }
+                off -= red_in_strides[d] * red_sizes[d];
+                idx[d] = 0;
+            }
+        }
+        *slot = acc;
+    }
+}
+
 /// Flat-ascending accumulation into `acc[o]`, with `o` tracked by an
 /// odometer over the input dims (identical order to the interpreter's
 /// unravel/ravel walk, without the per-element allocations).
@@ -1803,6 +2242,101 @@ fn reduce_loop<T: Copy>(
     }
 }
 
+/// A pre-resolved fused op for the all-f32 fast path.
+enum ROp {
+    Load(usize),
+    Splat(usize),
+    Un(fn(f32) -> f32),
+    Bin(fn(f32, f32) -> f32),
+}
+
+/// One element of the f32 fast path: identical for the serial loop and
+/// every parallel chunk, so element `i`'s bits never depend on the thread
+/// count.
+fn fused_f32_elem(rops: &[ROp], fs: &[&[f32]], st: &mut Vec<f32>, i: usize) -> f32 {
+    st.clear();
+    for rop in rops {
+        match rop {
+            ROp::Load(j) => st.push(fs[*j][i]),
+            ROp::Splat(j) => st.push(fs[*j][0]),
+            ROp::Un(f) => {
+                let x = st.pop().unwrap();
+                st.push(f(x));
+            }
+            ROp::Bin(f) => {
+                let b = st.pop().unwrap();
+                let a = st.pop().unwrap();
+                st.push(f(a, b));
+            }
+        }
+    }
+    st.pop().unwrap()
+}
+
+/// One element of the general (typed-cell) fused path.
+fn fused_cell_elem(ops: &[EOp], views: &[View], st: &mut Vec<Cell>, i: usize) -> Cell {
+    st.clear();
+    for op in ops {
+        match op {
+            EOp::Load(j) => st.push(match views[*j as usize] {
+                View::F(v) => Cell::F(v[i]),
+                View::I(v) => Cell::I(v[i]),
+            }),
+            EOp::Splat(j) => st.push(match views[*j as usize] {
+                View::F(v) => Cell::F(v[0]),
+                View::I(v) => Cell::I(v[0]),
+            }),
+            EOp::Un(k) => {
+                let c = st.pop().unwrap();
+                st.push(match c {
+                    Cell::F(x) => Cell::F(unary_f32_fn(*k)(x)),
+                    Cell::I(x) => Cell::I(unary_i32_fn(*k).unwrap()(x)),
+                });
+            }
+            EOp::Bin(k) => {
+                let b = st.pop().unwrap();
+                let a = st.pop().unwrap();
+                st.push(match (a, b) {
+                    (Cell::F(x), Cell::F(y)) => Cell::F(binary_f32_fn(*k)(x, y)),
+                    (Cell::I(x), Cell::I(y)) => Cell::I(binary_i32_fn(*k)(x, y)),
+                    _ => unreachable!(),
+                });
+            }
+            EOp::Cmp(k) => {
+                let b = st.pop().unwrap();
+                let a = st.pop().unwrap();
+                st.push(match (a, b) {
+                    (Cell::F(x), Cell::F(y)) => Cell::I(cmp_f32(*k, x, y) as i32),
+                    (Cell::I(x), Cell::I(y)) => Cell::I(cmp_i32(*k, x, y) as i32),
+                    _ => unreachable!(),
+                });
+            }
+            EOp::Sel => {
+                let fv = st.pop().unwrap();
+                let tv = st.pop().unwrap();
+                let pv = st.pop().unwrap();
+                let p = match pv {
+                    Cell::I(x) => x,
+                    Cell::F(_) => unreachable!(),
+                };
+                st.push(if p != 0 { tv } else { fv });
+            }
+            EOp::Conv(ty) => {
+                let c = st.pop().unwrap();
+                st.push(match (c, ty) {
+                    (Cell::F(x), PrimitiveType::S32) => Cell::I(x.trunc() as i32),
+                    (Cell::I(x), PrimitiveType::S32) => Cell::I(x),
+                    (Cell::I(x), PrimitiveType::F32) => Cell::F(x as f32),
+                    (Cell::F(x), PrimitiveType::Pred) => Cell::I((x != 0.0) as i32),
+                    (Cell::I(x), PrimitiveType::Pred) => Cell::I((x != 0) as i32),
+                    _ => unreachable!(),
+                });
+            }
+        }
+    }
+    st.pop().unwrap()
+}
+
 #[allow(clippy::too_many_arguments)]
 fn exec_fused(
     n: usize,
@@ -1815,19 +2349,16 @@ fn exec_fused(
     consts: &[Literal],
     args: &[&Literal],
     pool: &mut Pool,
+    ctx: &ExecCtx,
 ) -> Result<Buf> {
     let mut views: Vec<View> = Vec::with_capacity(srcs.len());
     for s in srcs {
         views.push(view(*s, regs, consts, args)?);
     }
+    let par = ctx.threads > 1 && n >= PAR_MIN_ELEMS;
+    note_parallel(ctx.threads, par);
     if all_f32 {
         // Fast path: pre-resolved fn pointers, flat f32 stack.
-        enum ROp {
-            Load(usize),
-            Splat(usize),
-            Un(fn(f32) -> f32),
-            Bin(fn(f32, f32) -> f32),
-        }
         let mut fs: Vec<&[f32]> = Vec::with_capacity(views.len());
         for v in &views {
             fs.push(f32s(*v)?);
@@ -1843,97 +2374,63 @@ fn exec_fused(
             });
         }
         let mut out = pool.alloc_f32(n);
+        if par {
+            out.resize(n, 0.0);
+            let ptr = OutPtr(out.as_mut_ptr());
+            let chunks = ctx.threads;
+            let (rops, fs) = (&rops, &fs);
+            run_parallel(ctx.threads, chunks, &|c| {
+                let r = chunk_range(n, chunks, c);
+                // SAFETY: chunks write disjoint output ranges.
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len()) };
+                let mut st: Vec<f32> = Vec::with_capacity(stack_cap);
+                for (slot, i) in dst.iter_mut().zip(r) {
+                    *slot = fused_f32_elem(rops, fs, &mut st, i);
+                }
+            });
+            return Ok(Buf::F(out));
+        }
         let mut st: Vec<f32> = Vec::with_capacity(stack_cap);
         for i in 0..n {
-            st.clear();
-            for rop in &rops {
-                match rop {
-                    ROp::Load(j) => st.push(fs[*j][i]),
-                    ROp::Splat(j) => st.push(fs[*j][0]),
-                    ROp::Un(f) => {
-                        let x = st.pop().unwrap();
-                        st.push(f(x));
-                    }
-                    ROp::Bin(f) => {
-                        let b = st.pop().unwrap();
-                        let a = st.pop().unwrap();
-                        st.push(f(a, b));
-                    }
-                }
-            }
-            out.push(st.pop().unwrap());
+            out.push(fused_f32_elem(&rops, &fs, &mut st, i));
         }
         return Ok(Buf::F(out));
     }
     // General path: typed cells on the stack.
-    let mut st: Vec<Cell> = Vec::with_capacity(stack_cap);
-    let mut eval_elem = |i: usize| -> Cell {
-        st.clear();
-        for op in ops {
-            match op {
-                EOp::Load(j) => st.push(match views[*j as usize] {
-                    View::F(v) => Cell::F(v[i]),
-                    View::I(v) => Cell::I(v[i]),
-                }),
-                EOp::Splat(j) => st.push(match views[*j as usize] {
-                    View::F(v) => Cell::F(v[0]),
-                    View::I(v) => Cell::I(v[0]),
-                }),
-                EOp::Un(k) => {
-                    let c = st.pop().unwrap();
-                    st.push(match c {
-                        Cell::F(x) => Cell::F(unary_f32_fn(*k)(x)),
-                        Cell::I(x) => Cell::I(unary_i32_fn(*k).unwrap()(x)),
-                    });
-                }
-                EOp::Bin(k) => {
-                    let b = st.pop().unwrap();
-                    let a = st.pop().unwrap();
-                    st.push(match (a, b) {
-                        (Cell::F(x), Cell::F(y)) => Cell::F(binary_f32_fn(*k)(x, y)),
-                        (Cell::I(x), Cell::I(y)) => Cell::I(binary_i32_fn(*k)(x, y)),
-                        _ => unreachable!(),
-                    });
-                }
-                EOp::Cmp(k) => {
-                    let b = st.pop().unwrap();
-                    let a = st.pop().unwrap();
-                    st.push(match (a, b) {
-                        (Cell::F(x), Cell::F(y)) => Cell::I(cmp_f32(*k, x, y) as i32),
-                        (Cell::I(x), Cell::I(y)) => Cell::I(cmp_i32(*k, x, y) as i32),
-                        _ => unreachable!(),
-                    });
-                }
-                EOp::Sel => {
-                    let fv = st.pop().unwrap();
-                    let tv = st.pop().unwrap();
-                    let pv = st.pop().unwrap();
-                    let p = match pv {
-                        Cell::I(x) => x,
-                        Cell::F(_) => unreachable!(),
-                    };
-                    st.push(if p != 0 { tv } else { fv });
-                }
-                EOp::Conv(ty) => {
-                    let c = st.pop().unwrap();
-                    st.push(match (c, ty) {
-                        (Cell::F(x), PrimitiveType::S32) => Cell::I(x.trunc() as i32),
-                        (Cell::I(x), PrimitiveType::S32) => Cell::I(x),
-                        (Cell::I(x), PrimitiveType::F32) => Cell::F(x as f32),
-                        (Cell::F(x), PrimitiveType::Pred) => Cell::I((x != 0.0) as i32),
-                        (Cell::I(x), PrimitiveType::Pred) => Cell::I((x != 0) as i32),
-                        _ => unreachable!(),
-                    });
-                }
-            }
-        }
-        st.pop().unwrap()
-    };
     match out_backing {
         Backing::F => {
             let mut out = pool.alloc_f32(n);
+            if par {
+                out.resize(n, 0.0);
+                let bad = AtomicBool::new(false);
+                let ptr = OutPtr(out.as_mut_ptr());
+                let chunks = ctx.threads;
+                let (ops, views, bad_r) = (&ops, &views, &bad);
+                run_parallel(ctx.threads, chunks, &|c| {
+                    let r = chunk_range(n, chunks, c);
+                    // SAFETY: chunks write disjoint output ranges.
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len()) };
+                    let mut st: Vec<Cell> = Vec::with_capacity(stack_cap);
+                    for (slot, i) in dst.iter_mut().zip(r) {
+                        match fused_cell_elem(ops, views, &mut st, i) {
+                            Cell::F(x) => *slot = x,
+                            // Type-checked at compile time; flag the
+                            // impossible mismatch instead of panicking a
+                            // worker.
+                            Cell::I(_) => bad_r.store(true, Ordering::Relaxed),
+                        }
+                    }
+                });
+                if bad.load(Ordering::Relaxed) {
+                    return err("internal: fused output type");
+                }
+                return Ok(Buf::F(out));
+            }
+            let mut st: Vec<Cell> = Vec::with_capacity(stack_cap);
             for i in 0..n {
-                match eval_elem(i) {
+                match fused_cell_elem(ops, &views, &mut st, i) {
                     Cell::F(x) => out.push(x),
                     Cell::I(_) => return err("internal: fused output type"),
                 }
@@ -1942,8 +2439,33 @@ fn exec_fused(
         }
         Backing::I => {
             let mut out = pool.alloc_i32(n);
+            if par {
+                out.resize(n, 0);
+                let bad = AtomicBool::new(false);
+                let ptr = OutPtr(out.as_mut_ptr());
+                let chunks = ctx.threads;
+                let (ops, views, bad_r) = (&ops, &views, &bad);
+                run_parallel(ctx.threads, chunks, &|c| {
+                    let r = chunk_range(n, chunks, c);
+                    // SAFETY: chunks write disjoint output ranges.
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len()) };
+                    let mut st: Vec<Cell> = Vec::with_capacity(stack_cap);
+                    for (slot, i) in dst.iter_mut().zip(r) {
+                        match fused_cell_elem(ops, views, &mut st, i) {
+                            Cell::I(x) => *slot = x,
+                            Cell::F(_) => bad_r.store(true, Ordering::Relaxed),
+                        }
+                    }
+                });
+                if bad.load(Ordering::Relaxed) {
+                    return err("internal: fused output type");
+                }
+                return Ok(Buf::I(out));
+            }
+            let mut st: Vec<Cell> = Vec::with_capacity(stack_cap);
             for i in 0..n {
-                match eval_elem(i) {
+                match fused_cell_elem(ops, &views, &mut st, i) {
                     Cell::I(x) => out.push(x),
                     Cell::F(_) => return err("internal: fused output type"),
                 }

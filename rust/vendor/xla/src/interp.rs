@@ -9,9 +9,9 @@
 //! bit-identical results, including NaN propagation and signed zeros.
 
 use crate::{
-    array, bcast_index, broadcast_shape, err, f32_array, i32_array, next_normal, next_uniform,
-    num_elems, ravel, unravel, BinaryK, CmpK, Data, Error, Literal, Node, Op, PrimitiveType,
-    ReduceK, Result, UnaryK, XlaComputation,
+    array, bcast_index, broadcast_shape, err, f32_array, i32_array, num_elems, ravel, unravel,
+    BinaryK, CmpK, Data, Error, Literal, Node, Op, PrimitiveType, ReduceK, Result, RngStream,
+    UnaryK, XlaComputation,
 };
 
 // ---------------------------------------------------------------------------
@@ -106,18 +106,28 @@ pub(crate) fn cmp_i32(k: CmpK, p: i32, q: i32) -> bool {
 /// Evaluate every node in order (ids are topological) and return the root.
 /// Evaluating *all* nodes — even ones unreachable from the root — is part of
 /// the backend contract: dead RNG nodes still consume stream draws, which
-/// the bytecode backend replicates.
-pub(crate) fn eval_graph(comp: &XlaComputation, args: &[&Literal]) -> Result<Literal> {
+/// the bytecode backend replicates. Draws come from `rng` — the compiling
+/// client's stream — in node order.
+pub(crate) fn eval_graph(
+    comp: &XlaComputation,
+    args: &[&Literal],
+    rng: &RngStream,
+) -> Result<Literal> {
     let mut values: Vec<Literal> = Vec::with_capacity(comp.nodes.len());
     for (id, node) in comp.nodes.iter().enumerate() {
-        let v = eval_node(node, &values, args)
+        let v = eval_node(node, &values, args, rng)
             .map_err(|e| Error::new(format!("node {id} of '{}': {}", comp.name, e.msg)))?;
         values.push(v);
     }
     Ok(values[comp.root].clone())
 }
 
-fn eval_node(node: &Node, values: &[Literal], args: &[&Literal]) -> Result<Literal> {
+fn eval_node(
+    node: &Node,
+    values: &[Literal],
+    args: &[&Literal],
+    rng: &RngStream,
+) -> Result<Literal> {
     let arg = |i: usize| -> &Literal { &values[node.args[i]] };
     match &node.op {
         Op::Parameter { index, ty, dims } => {
@@ -152,14 +162,14 @@ fn eval_node(node: &Node, values: &[Literal], args: &[&Literal]) -> Result<Liter
             let lo = arg(0).as_f32()?[0];
             let hi = arg(1).as_f32()?[0];
             let n = num_elems(dims);
-            let data = (0..n).map(|_| lo + next_uniform() * (hi - lo)).collect();
+            let data = (0..n).map(|_| lo + rng.next_uniform() * (hi - lo)).collect();
             Ok(f32_array(dims.clone(), data))
         }
         Op::RngNormal { dims } => {
             let mu = arg(0).as_f32()?[0];
             let sigma = arg(1).as_f32()?[0];
             let n = num_elems(dims);
-            let data = (0..n).map(|_| mu + sigma * next_normal()).collect();
+            let data = (0..n).map(|_| mu + sigma * rng.next_normal()).collect();
             Ok(f32_array(dims.clone(), data))
         }
         Op::Unary(k) => eval_unary(*k, arg(0)),

@@ -704,42 +704,92 @@ impl XlaComputation {
 }
 
 // ---------------------------------------------------------------------------
-// Deterministic RNG stream (shared by both backends)
+// Deterministic RNG streams (shared by both backends, scoped per client)
 // ---------------------------------------------------------------------------
 
-/// Process-global deterministic RNG stream (splitmix64). Both backends draw
-/// from this stream in node order, so a program executes identically on
-/// either backend from the same state.
-static RNG_STATE: AtomicU64 = AtomicU64::new(0x243F_6A88_85A3_08D3);
+/// Seed of the process-global stream, and the default seed for private
+/// per-client streams ([`PjRtClient::cpu_with_rng`]).
+pub const DEFAULT_RNG_SEED: u64 = 0x243F_6A88_85A3_08D3;
 
-pub(crate) fn next_u64() -> u64 {
-    let mut z = RNG_STATE
-        .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
-        .wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
+/// A deterministic splitmix64 RNG stream. Both backends draw from their
+/// client's stream in node order, so a program executes identically on
+/// either backend from the same stream state — and two clients with
+/// private streams ([`PjRtClient::cpu_with_rng`]) cannot interleave each
+/// other's draws, however their executions overlap.
+#[derive(Debug)]
+pub struct RngStream {
+    state: AtomicU64,
 }
 
-pub(crate) fn next_uniform() -> f32 {
-    ((next_u64() >> 40) as f32) / ((1u64 << 24) as f32)
+impl RngStream {
+    pub const fn new(seed: u64) -> RngStream {
+        RngStream { state: AtomicU64::new(seed) }
+    }
+
+    /// Read the stream state (for save/replay in differential tests).
+    pub fn state(&self) -> u64 {
+        self.state.load(Ordering::Relaxed)
+    }
+
+    /// Restore a previously saved stream state, aligning subsequent draws.
+    pub fn set_state(&self, state: u64) {
+        self.state.store(state, Ordering::Relaxed);
+    }
+
+    pub(crate) fn next_u64(&self) -> u64 {
+        let mut z = self
+            .state
+            .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub(crate) fn next_uniform(&self) -> f32 {
+        ((self.next_u64() >> 40) as f32) / ((1u64 << 24) as f32)
+    }
+
+    pub(crate) fn next_normal(&self) -> f32 {
+        // Box-Muller; u1 in (0, 1].
+        let u1 = (1.0 - self.next_uniform()).max(1e-12);
+        let u2 = self.next_uniform();
+        (-2.0 * (u1 as f64).ln()).sqrt() as f32
+            * (2.0 * std::f64::consts::PI * u2 as f64).cos() as f32
+    }
 }
 
-pub(crate) fn next_normal() -> f32 {
-    // Box-Muller; u1 in (0, 1].
-    let u1 = (1.0 - next_uniform()).max(1e-12);
-    let u2 = next_uniform();
-    (-2.0 * (u1 as f64).ln()).sqrt() as f32 * (2.0 * std::f64::consts::PI * u2 as f64).cos() as f32
+/// The process-global stream: what `PjRtClient::cpu()` draws from, and the
+/// only stream the free `rng_state`/`set_rng_state` functions touch.
+static GLOBAL_RNG: RngStream = RngStream::new(DEFAULT_RNG_SEED);
+
+/// Which stream a client — and every executable it compiles — draws from.
+#[derive(Debug, Clone)]
+pub(crate) enum RngScope {
+    Global,
+    Private(Arc<RngStream>),
 }
 
-/// Read the RNG stream state (for save/replay in differential tests).
+impl RngScope {
+    pub(crate) fn stream(&self) -> &RngStream {
+        match self {
+            RngScope::Global => &GLOBAL_RNG,
+            RngScope::Private(s) => s,
+        }
+    }
+}
+
+/// Read the *process-global* RNG stream state (clients created with
+/// [`PjRtClient::cpu_with_rng`] have their own; see
+/// [`PjRtClient::rng_state`]).
 pub fn rng_state() -> u64 {
-    RNG_STATE.load(Ordering::Relaxed)
+    GLOBAL_RNG.state()
 }
 
-/// Restore a previously saved RNG stream state, aligning subsequent draws.
+/// Restore the process-global RNG stream state, aligning subsequent draws
+/// of global-scoped clients.
 pub fn set_rng_state(state: u64) {
-    RNG_STATE.store(state, Ordering::Relaxed);
+    GLOBAL_RNG.set_state(state);
 }
 
 // ---------------------------------------------------------------------------
@@ -846,6 +896,50 @@ static INSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
 static FUSED_INSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
 static BYTES_REUSED: AtomicU64 = AtomicU64::new(0);
 static INTERP_EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static PARALLEL_LOOPS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static SERIAL_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static THREADS_USED: AtomicU64 = AtomicU64::new(1);
+
+/// Programmatic override backing the `TERRA_SHIM_THREADS` env knob (the
+/// launcher's `--shim-threads` flag and the JSON `shim_threads` key route
+/// through this): `n >= 1` pins the bytecode backend's worker count, `0`
+/// clears the override (back to the env var / auto-detection).
+static SHIM_THREADS_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_shim_threads(n: usize) {
+    SHIM_THREADS_OVERRIDE.store(n as u64, Ordering::Relaxed);
+}
+
+/// Strictly parse a `TERRA_SHIM_THREADS` value: an integer `>= 1`, nothing
+/// else. Junk is an error — a malformed knob must fail the execution loudly
+/// rather than silently run single-threaded.
+fn parse_shim_threads(raw: &str) -> Result<usize> {
+    match raw.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => err(format!(
+            "TERRA_SHIM_THREADS: invalid value '{raw}' (expected an integer >= 1)"
+        )),
+    }
+}
+
+/// Resolve the worker count the bytecode backend uses for its next
+/// execution: the [`set_shim_threads`] override, else `TERRA_SHIM_THREADS`
+/// (validated by [`parse_shim_threads`]), else the machine's available
+/// parallelism. `1` is the seed's single-threaded behaviour. Resolved per
+/// execution, so tests and benches can flip the knob in-process.
+pub fn shim_threads() -> Result<usize> {
+    let o = SHIM_THREADS_OVERRIDE.load(Ordering::Relaxed);
+    if o >= 1 {
+        return Ok(o as usize);
+    }
+    match std::env::var("TERRA_SHIM_THREADS") {
+        Ok(v) => parse_shim_threads(&v),
+        Err(std::env::VarError::NotPresent) => {
+            Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        }
+        Err(e) => err(format!("TERRA_SHIM_THREADS: {e}")),
+    }
+}
 
 /// Cumulative process-wide backend counters: the compile-vs-execute time
 /// split and the bytecode backend's work/savings breakdown.
@@ -870,6 +964,16 @@ pub struct ShimTotals {
     /// Executions that ran on the interpreter (env override or bytecode
     /// lowering fallback).
     pub interp_executions: u64,
+    /// Jobs actually dispatched to the worker pool (fused loops, matmul —
+    /// one per batch when the RHS differs per batch — reduce, softmax).
+    /// Busy-pool serial degradations are not counted.
+    pub parallel_loops: u64,
+    /// Parallel-eligible kernels that stayed serial because the shape was
+    /// below the dispatch threshold (counted only when threads > 1).
+    pub serial_fallbacks: u64,
+    /// Worker count resolved by the most recent bytecode execution (gauge,
+    /// not cumulative).
+    pub threads_used: u64,
 }
 
 /// Snapshot the process-wide backend counters.
@@ -883,6 +987,9 @@ pub fn shim_totals() -> ShimTotals {
         fused_instructions: FUSED_INSTRUCTIONS.load(Ordering::Relaxed),
         bytes_reused: BYTES_REUSED.load(Ordering::Relaxed),
         interp_executions: INTERP_EXECUTIONS.load(Ordering::Relaxed),
+        parallel_loops: PARALLEL_LOOPS.load(Ordering::Relaxed),
+        serial_fallbacks: SERIAL_FALLBACKS.load(Ordering::Relaxed),
+        threads_used: THREADS_USED.load(Ordering::Relaxed),
     }
 }
 
@@ -904,9 +1011,14 @@ pub struct ExecStats {
 // PJRT stand-ins
 // ---------------------------------------------------------------------------
 
-/// CPU "device" handle (stateless).
+/// CPU "device" handle. Carries the RNG scope its executables draw from:
+/// the process-global stream by default ([`PjRtClient::cpu`]), or a private
+/// stream ([`PjRtClient::cpu_with_rng`]) so two clients executing
+/// concurrently cannot interleave each other's draws.
 #[derive(Debug)]
-pub struct PjRtClient;
+pub struct PjRtClient {
+    rng: RngScope,
+}
 
 /// A device buffer: a shared host literal. Cloning, untupling and host
 /// round-trips are refcount bumps (the payload lives behind `Arc`s).
@@ -917,16 +1029,37 @@ pub struct PjRtBuffer {
 
 /// A compiled computation. `prog` is the bytecode program; when `None`
 /// (interp backend, or a graph the bytecode pipeline rejected) `execute_b`
-/// interprets the captured graph per execution.
+/// interprets the captured graph per execution. `rng` is the compiling
+/// client's stream scope: draws at execute time stay on that stream.
 #[derive(Debug, Clone)]
 pub struct PjRtLoadedExecutable {
     comp: XlaComputation,
     prog: Option<Arc<bytecode::Program>>,
+    rng: RngScope,
 }
 
 impl PjRtClient {
+    /// A client drawing from the process-global RNG stream (seed behaviour).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient)
+        Ok(PjRtClient { rng: RngScope::Global })
+    }
+
+    /// A client with a private RNG stream seeded at `seed`: executions of
+    /// this client's executables draw only from that stream, isolated from
+    /// every other client in the process.
+    pub fn cpu_with_rng(seed: u64) -> Result<PjRtClient> {
+        Ok(PjRtClient { rng: RngScope::Private(Arc::new(RngStream::new(seed))) })
+    }
+
+    /// This client's RNG stream state (the global stream for
+    /// [`PjRtClient::cpu`] clients).
+    pub fn rng_state(&self) -> u64 {
+        self.rng.stream().state()
+    }
+
+    /// Reset this client's RNG stream, aligning subsequent draws.
+    pub fn set_rng_state(&self, state: u64) {
+        self.rng.stream().set_state(state);
     }
 
     pub fn platform_name(&self) -> String {
@@ -961,7 +1094,7 @@ impl PjRtClient {
         }
         COMPILES.fetch_add(1, Ordering::Relaxed);
         COMPILE_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Ok(PjRtLoadedExecutable { comp: comp.clone(), prog })
+        Ok(PjRtLoadedExecutable { comp: comp.clone(), prog, rng: self.rng.clone() })
     }
 
     pub fn buffer_from_host_buffer<T: NativeType>(
@@ -1016,9 +1149,10 @@ impl PjRtLoadedExecutable {
     pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
         let t0 = Instant::now();
         let arg_lits: Vec<&Literal> = args.iter().map(|b| &*b.lit).collect();
+        let rng = self.rng.stream();
         let leaves: Vec<Literal> = match &self.prog {
             Some(p) => {
-                let out = p.execute(&arg_lits).map_err(|e| {
+                let out = p.execute(&arg_lits, rng).map_err(|e| {
                     Error::new(format!("'{}' (bytecode): {}", self.comp.name, e.msg))
                 })?;
                 INSTRUCTIONS.fetch_add(p.instruction_count(), Ordering::Relaxed);
@@ -1026,7 +1160,7 @@ impl PjRtLoadedExecutable {
             }
             None => {
                 INTERP_EXECUTIONS.fetch_add(1, Ordering::Relaxed);
-                match interp::eval_graph(&self.comp, &arg_lits)? {
+                match interp::eval_graph(&self.comp, &arg_lits, rng)? {
                     Literal::Tuple(parts) => parts,
                     lit @ Literal::Array { .. } => vec![lit],
                 }
