@@ -78,6 +78,16 @@ fn main() {
                                     "shim_serial_fallbacks_delta",
                                     num(bd.shim_serial_fallbacks),
                                 ),
+                                // SIMD breakdown: vector-path dispatches,
+                                // scalar-tail output elements, and transposes
+                                // compiled to strided copies (what the layout
+                                // pass minimizes) over the measured window.
+                                ("shim_simd_loops_delta", num(bd.shim_simd_loops)),
+                                (
+                                    "shim_scalar_tail_elems_delta",
+                                    num(bd.shim_scalar_tail_elems),
+                                ),
+                                ("shim_layout_copies_delta", num(bd.shim_layout_copies)),
                                 ("mailbox_dropped", num(st.mailbox_dropped)),
                                 // Speculation subsystem: plan-cache traffic,
                                 // compile invocations skipped, controller

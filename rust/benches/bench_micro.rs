@@ -290,6 +290,7 @@ fn main() {
                 for (ti, threads) in [1usize, 4].into_iter().enumerate() {
                     xla::set_shim_threads(threads);
                     let _ = exe.execute_b(&[&xb]).unwrap();
+                    let before = xla::shim_totals();
                     let (mean, _, _) = time_micro(
                         || {
                             let _ = exe.execute_b(&[&xb]).unwrap();
@@ -297,10 +298,23 @@ fn main() {
                         60,
                     );
                     per_threads[ti] = mean;
+                    let t = xla::shim_totals();
                     push(
                         &format!("shim exec ew-chain 512x512 ({threads} thread)"),
                         mean / 1000.0,
                         "us",
+                        &mut json,
+                    );
+                    push(
+                        &format!("shim ew-chain 512x512 threads used ({threads} thread)"),
+                        t.threads_used as f64,
+                        "count",
+                        &mut json,
+                    );
+                    push(
+                        &format!("shim ew-chain 512x512 simd loops ({threads} thread)"),
+                        (t.simd_loops - before.simd_loops) as f64,
+                        "count",
                         &mut json,
                     );
                 }
@@ -324,6 +338,7 @@ fn main() {
                 for (ti, threads) in [1usize, 4].into_iter().enumerate() {
                     xla::set_shim_threads(threads);
                     let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                    let before = xla::shim_totals();
                     let (mean, _, _) = time_micro(
                         || {
                             let _ = exe.execute_b(&[&ab, &bb]).unwrap();
@@ -331,10 +346,23 @@ fn main() {
                         60,
                     );
                     per_threads[ti] = mean;
+                    let t = xla::shim_totals();
                     push(
                         &format!("shim exec matmul {m}x{k}x{nn} ({threads} thread)"),
                         mean / 1000.0,
                         "us",
+                        &mut json,
+                    );
+                    push(
+                        &format!("shim matmul {m}x{k}x{nn} threads used ({threads} thread)"),
+                        t.threads_used as f64,
+                        "count",
+                        &mut json,
+                    );
+                    push(
+                        &format!("shim matmul {m}x{k}x{nn} simd loops ({threads} thread)"),
+                        (t.simd_loops - before.simd_loops) as f64,
+                        "count",
                         &mut json,
                     );
                 }
@@ -344,6 +372,120 @@ fn main() {
                 ));
             }
             xla::set_shim_threads(0); // back to env/auto for the rest
+            for (name, s) in speedups {
+                push(&name, s, "x", &mut json);
+            }
+        }
+        // SIMD execution: the same kernels with the explicit-width vector
+        // path off vs on, pinned to one worker thread so the lane-level win
+        // is isolated from the pool (outputs are bit-identical either way —
+        // shim_differential asserts it across the full matrix). Acceptance
+        // target: >= 1.5x single-thread speedup on ew-chain and matmul.
+        {
+            let client0 = xla::PjRtClient::cpu().unwrap();
+            xla::set_shim_threads(1);
+            let mut speedups: Vec<(String, f64)> = Vec::new();
+            {
+                let comp = elementwise_chain_comp(256);
+                let x: Vec<f32> =
+                    (0..256 * 256).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
+                let xb =
+                    client0.buffer_from_host_buffer::<f32>(&x, &[256, 256], None).unwrap();
+                let exe =
+                    client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
+                let mut per_simd = [0f64; 2];
+                for (si, simd) in [false, true].into_iter().enumerate() {
+                    xla::set_shim_simd(Some(simd));
+                    let _ = exe.execute_b(&[&xb]).unwrap();
+                    let (mean, _, _) = time_micro(
+                        || {
+                            let _ = exe.execute_b(&[&xb]).unwrap();
+                        },
+                        120,
+                    );
+                    per_simd[si] = mean;
+                    let tag = if simd { "on" } else { "off" };
+                    push(
+                        &format!("shim exec ew-chain 256x256 1-thread (simd {tag})"),
+                        mean / 1000.0,
+                        "us",
+                        &mut json,
+                    );
+                }
+                speedups.push((
+                    "shim ew-chain 256x256 simd speedup (target >= 1.5)".into(),
+                    per_simd[0] / per_simd[1].max(1e-9),
+                ));
+            }
+            {
+                let (m, k, nn) = (128usize, 256usize, 128usize);
+                let comp = matmul_comp(m, k, nn);
+                let a: Vec<f32> =
+                    (0..m * k).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+                let b: Vec<f32> =
+                    (0..k * nn).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+                let ab = client0.buffer_from_host_buffer::<f32>(&a, &[m, k], None).unwrap();
+                let bb = client0.buffer_from_host_buffer::<f32>(&b, &[k, nn], None).unwrap();
+                let exe =
+                    client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
+                let mut per_simd = [0f64; 2];
+                for (si, simd) in [false, true].into_iter().enumerate() {
+                    xla::set_shim_simd(Some(simd));
+                    let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                    let (mean, _, _) = time_micro(
+                        || {
+                            let _ = exe.execute_b(&[&ab, &bb]).unwrap();
+                        },
+                        120,
+                    );
+                    per_simd[si] = mean;
+                    let tag = if simd { "on" } else { "off" };
+                    push(
+                        &format!("shim exec matmul {m}x{k}x{nn} 1-thread (simd {tag})"),
+                        mean / 1000.0,
+                        "us",
+                        &mut json,
+                    );
+                }
+                speedups.push((
+                    format!("shim matmul {m}x{k}x{nn} simd speedup (target >= 1.5)"),
+                    per_simd[0] / per_simd[1].max(1e-9),
+                ));
+            }
+            {
+                let comp = reduce_comp(256, 512);
+                let x: Vec<f32> =
+                    (0..256 * 512).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+                let xb =
+                    client0.buffer_from_host_buffer::<f32>(&x, &[256, 512], None).unwrap();
+                let exe =
+                    client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
+                let mut per_simd = [0f64; 2];
+                for (si, simd) in [false, true].into_iter().enumerate() {
+                    xla::set_shim_simd(Some(simd));
+                    let _ = exe.execute_b(&[&xb]).unwrap();
+                    let (mean, _, _) = time_micro(
+                        || {
+                            let _ = exe.execute_b(&[&xb]).unwrap();
+                        },
+                        120,
+                    );
+                    per_simd[si] = mean;
+                    let tag = if simd { "on" } else { "off" };
+                    push(
+                        &format!("shim exec reduce 256x512 1-thread (simd {tag})"),
+                        mean / 1000.0,
+                        "us",
+                        &mut json,
+                    );
+                }
+                speedups.push((
+                    "shim reduce 256x512 simd speedup".into(),
+                    per_simd[0] / per_simd[1].max(1e-9),
+                ));
+            }
+            xla::set_shim_simd(None); // back to env/default
+            xla::set_shim_threads(0);
             for (name, s) in speedups {
                 push(&name, s, "x", &mut json);
             }
@@ -385,6 +527,14 @@ fn main() {
         push("shim parallel loops", t.parallel_loops as f64, "count", &mut json);
         push("shim serial fallbacks", t.serial_fallbacks as f64, "count", &mut json);
         push("shim threads used", t.threads_used as f64, "count", &mut json);
+        push("shim simd loops", t.simd_loops as f64, "count", &mut json);
+        push("shim scalar tail elems", t.scalar_tail_elems as f64, "count", &mut json);
+        push(
+            "shim layout copies compiled",
+            t.layout_copies_inserted as f64,
+            "count",
+            &mut json,
+        );
     }
 
     print_table("micro-benchmarks (§Perf)", &["metric", "value", "unit"], &rows);
@@ -415,6 +565,15 @@ fn matmul_comp(m: usize, k: usize, n: usize) -> xla::XlaComputation {
     let w = b.parameter(1, xla::ElementType::F32, &[k as i64, n as i64], "b").unwrap();
     let mm = a.matmul(&w).unwrap();
     b.build(&mm).unwrap()
+}
+
+/// A row-sum reduction over an `[m, n]` input (the wide-output shape the
+/// SIMD reduce kernel targets: lanes span adjacent output rows).
+fn reduce_comp(m: usize, n: usize) -> xla::XlaComputation {
+    let b = xla::XlaBuilder::new("reduce");
+    let x = b.parameter(0, xla::ElementType::F32, &[m as i64, n as i64], "x").unwrap();
+    let s = x.reduce_sum(&[1], false).unwrap();
+    b.build(&s).unwrap()
 }
 
 /// A trace with systematic redundancy: pairs of identical relu ops (CSE

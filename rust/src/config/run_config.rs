@@ -77,6 +77,10 @@ pub struct RunConfig {
     /// behaviour (results are bit-identical at every count). JSON
     /// `shim_threads`, CLI `--shim-threads`, env `TERRA_SHIM_THREADS`.
     pub shim_threads: usize,
+    /// Explicit-width SIMD kernels in the shim's bytecode backend (results
+    /// are bit-identical either way; `false` = the seed's scalar loops).
+    /// JSON `shim_simd`, CLI `--shim-simd`, env `TERRA_SHIM_SIMD`.
+    pub shim_simd: bool,
 }
 
 /// Default optimization level: `TERRA_OPT_LEVEL` env override (validated;
@@ -97,6 +101,12 @@ pub fn default_shim_threads() -> usize {
         .unwrap_or(0)
 }
 
+/// Default SIMD setting: `TERRA_SHIM_SIMD` env override (validated by the
+/// shim; malformed values panic with the knob name), else on.
+pub fn default_shim_simd() -> bool {
+    xla::shim_simd().unwrap_or_else(|e| panic!("{e}"))
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
@@ -112,6 +122,7 @@ impl Default for RunConfig {
             opt_level: default_opt_level(),
             speculate: SpeculateConfig::from_env(),
             shim_threads: default_shim_threads(),
+            shim_simd: default_shim_simd(),
         }
     }
 }
@@ -160,6 +171,11 @@ impl RunConfig {
                 TerraError::Config(
                     "shim_threads must be a non-negative integer (0 = auto)".into(),
                 )
+            })?;
+        }
+        if let Some(v) = json.get("shim_simd") {
+            self.shim_simd = v.as_bool().ok_or_else(|| {
+                TerraError::Config("shim_simd must be a bool".into())
             })?;
         }
         if let Some(s) = json.get("speculate") {
@@ -216,6 +232,13 @@ impl RunConfig {
     /// override, so the shim falls back to `TERRA_SHIM_THREADS` / auto.
     pub fn apply_shim_threads(&self) {
         xla::set_shim_threads(self.shim_threads);
+    }
+
+    /// Push the resolved SIMD setting into the vendored shim. Unlike
+    /// threads, the config value is always concrete (the default already
+    /// resolved `TERRA_SHIM_SIMD`), so this always sets the override.
+    pub fn apply_shim_simd(&self) {
+        xla::set_shim_simd(Some(self.shim_simd));
     }
 }
 
@@ -296,5 +319,15 @@ mod tests {
         assert_eq!(RunConfig::from_json(&j).unwrap().shim_threads, 0, "0 = auto is valid");
         let j = Json::parse(r#"{"shim_threads": "many"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err(), "non-numeric shim_threads must be rejected");
+    }
+
+    #[test]
+    fn shim_simd_from_json() {
+        let j = Json::parse(r#"{"shim_simd": false}"#).unwrap();
+        assert!(!RunConfig::from_json(&j).unwrap().shim_simd);
+        let j = Json::parse(r#"{"shim_simd": true}"#).unwrap();
+        assert!(RunConfig::from_json(&j).unwrap().shim_simd);
+        let j = Json::parse(r#"{"shim_simd": "fast"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-bool shim_simd must be rejected");
     }
 }

@@ -87,16 +87,25 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
             TerraError::Config("bad --shim-threads (expected 0 = auto or N >= 1)".into())
         })?;
     }
+    if let Some(v) = flags.get("shim-simd") {
+        cfg.shim_simd = match v.as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => return Err(TerraError::Config("bad --shim-simd (expected on|off)".into())),
+        };
+    }
     if let Some(v) = flags.get("artifacts") {
         cfg.artifacts_dir = v.clone();
     }
     if flags.contains_key("breakdown") {
         cfg.breakdown = true;
     }
-    // The worker count is a process-level shim knob, not an Engine field:
-    // push it down here so every command honours --shim-threads / the JSON
-    // key (env-only runs resolve inside the shim without an override).
+    // The worker count and SIMD setting are process-level shim knobs, not
+    // Engine fields: push them down here so every command honours
+    // --shim-threads / --shim-simd / the JSON keys (env-only runs resolve
+    // inside the shim without an override).
     cfg.apply_shim_threads();
+    cfg.apply_shim_simd();
     Ok(cfg)
 }
 
@@ -177,6 +186,10 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
     println!(
         "shim threads: {} worker(s), {} kernel(s) dispatched to the pool, {} small-shape serial fallback(s)",
         b.shim_threads, b.shim_parallel_loops, b.shim_serial_fallbacks,
+    );
+    println!(
+        "shim simd: {} vector kernel dispatch(es), {} scalar-tail element(s), {} layout copies compiled",
+        b.shim_simd_loops, b.shim_scalar_tail_elems, b.shim_layout_copies,
     );
     println!(
         "speculate: {} plan-cache hits, {} misses, {} segment-compile calls skipped, {} deferred re-entries, avg re-entry {:.2}ms",
@@ -300,7 +313,7 @@ fn main() {
         "help" | "--help" | "-h" => {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
-                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off] [--shim-threads 0|N]\n  \
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off] [--shim-threads 0|N] [--shim-simd on|off]\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \

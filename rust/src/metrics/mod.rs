@@ -59,6 +59,15 @@ pub struct BreakdownSnapshot {
     /// Worker count resolved by the shim's most recent execution (gauge —
     /// carried through `per_step_since` unchanged, not a delta).
     pub shim_threads: u64,
+    /// Shim kernel dispatches that took the explicit-width SIMD path
+    /// (delta after [`BreakdownSnapshot::per_step_since`]).
+    pub shim_simd_loops: u64,
+    /// Output elements handled by scalar tail loops on SIMD-path
+    /// dispatches (non-multiple-of-lane-width shapes).
+    pub shim_scalar_tail_elems: u64,
+    /// Transposes the shim lowered to strided layout copies at compile
+    /// time — what the layout-assignment pass minimizes.
+    pub shim_layout_copies: u64,
     /// Co-execution entries served from the speculation plan cache (delta
     /// after [`BreakdownSnapshot::per_step_since`]).
     pub plan_cache_hits: u64,
@@ -128,6 +137,9 @@ impl Breakdown {
             shim_parallel_loops: 0,
             shim_serial_fallbacks: 0,
             shim_threads: 0,
+            shim_simd_loops: 0,
+            shim_scalar_tail_elems: 0,
+            shim_layout_copies: 0,
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             compiles_skipped: 0,
@@ -169,6 +181,11 @@ impl BreakdownSnapshot {
                 .shim_serial_fallbacks
                 .saturating_sub(earlier.shim_serial_fallbacks),
             shim_threads: self.shim_threads,
+            shim_simd_loops: self.shim_simd_loops.saturating_sub(earlier.shim_simd_loops),
+            shim_scalar_tail_elems: self
+                .shim_scalar_tail_elems
+                .saturating_sub(earlier.shim_scalar_tail_elems),
+            shim_layout_copies: self.shim_layout_copies.saturating_sub(earlier.shim_layout_copies),
             plan_cache_hits: self.plan_cache_hits.saturating_sub(earlier.plan_cache_hits),
             plan_cache_misses: self.plan_cache_misses.saturating_sub(earlier.plan_cache_misses),
             compiles_skipped: self.compiles_skipped.saturating_sub(earlier.compiles_skipped),

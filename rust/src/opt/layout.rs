@@ -1,0 +1,350 @@
+//! Layout assignment: minimize the strided layout copies the shim backend
+//! materializes for transposes.
+//!
+//! The bytecode backend lowers every `Transpose` to a strided odometer copy
+//! (counted by `shim_layout_copies`). Transpose-heavy chains therefore pay
+//! one full materialization per hop even when the net permutation is simple.
+//! This pass propagates the preferred layout through such chains so that at
+//! most one copy survives per chain boundary:
+//!
+//! * **Composition** — `transpose(transpose(x, p), q)` becomes a single
+//!   `transpose(x, r)` with `r[i] = p[q[i]]`, reading `x` directly. The
+//!   inner transpose loses its only use and is swept by DCE. Chains of
+//!   depth d converge in d-1 fixpoint rounds (one hop per round).
+//! * **Elementwise sandwich** — `transpose(ew(transpose(x, p)), q)` with
+//!   `q∘p = id` becomes `ew(x)`: a shape-preserving unary elementwise op
+//!   commutes with any permutation, and the two transposes cancel. Both
+//!   inner nodes become dead.
+//!
+//! Both rewrites mutate the chain-*terminal* node in place via
+//! [`TraceGraph::rewrite_op`], so its `NodeId`, position in the execution
+//! DAG and output types are untouched — downstream consumers (and the
+//! runner wire format) never notice. Value equality is exact, not
+//! approximate: permuting elements and applying a per-element function
+//! commute bit-for-bit, so the bit-identity oracle contract holds with the
+//! pass on or off.
+//!
+//! Like `Algebraic`, rewrites that would forward a variable read are
+//! suppressed when the variable has assigns in the graph (staged updates
+//! make var reads time-dependent).
+
+use crate::error::Result;
+use crate::opt::analysis::assigned_vars;
+use crate::opt::{OptContext, Pass, PassStats};
+use crate::ops::{OpDef, OpKind};
+use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TgNode, TraceGraph};
+use crate::trace::{ItemKey, VarId};
+use std::collections::HashSet;
+
+pub struct Layout;
+
+/// The single-variant op producer of `src`, if any.
+fn producer_op<'g>(graph: &'g TraceGraph, src: &GraphSrc) -> Option<(&'g TgNode, &'g OpDef)> {
+    match src {
+        GraphSrc::Node { node, slot: 0 } => {
+            let n = graph.node(*node);
+            if n.removed || n.variants.len() != 1 {
+                return None;
+            }
+            match &n.kind {
+                NodeKind::Item(ItemKey::Op { def, .. }) => Some((n, def)),
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+fn identity_perm(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| p == i)
+}
+
+/// `q` after `p` is the identity permutation.
+fn composes_to_identity(p: &[usize], q: &[usize]) -> bool {
+    p.len() == q.len() && q.iter().enumerate().all(|(i, &qi)| p.get(qi) == Some(&i))
+}
+
+/// The permutation of `transpose(transpose(x, p), q)` as one transpose of x.
+fn compose_perms(p: &[usize], q: &[usize]) -> Option<Vec<usize>> {
+    if p.len() != q.len() {
+        return None;
+    }
+    q.iter().map(|&qi| p.get(qi).copied()).collect()
+}
+
+/// Shape-preserving elementwise unary ops, which commute with any
+/// permutation of the element order. (Relu/Abs/Sign included; Convert is
+/// excluded to keep the sandwich dtype-invariant by construction.)
+fn is_ew_unary(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::Neg
+            | OpKind::Exp
+            | OpKind::Log
+            | OpKind::Sqrt
+            | OpKind::Rsqrt
+            | OpKind::Tanh
+            | OpKind::Sigmoid
+            | OpKind::Relu
+            | OpKind::Abs
+            | OpKind::Sign
+    )
+}
+
+/// Decide the in-place rewrite for an outer transpose node, if any.
+fn plan_rewrite(
+    graph: &TraceGraph,
+    node: &TgNode,
+    q: &[usize],
+) -> Option<(OpDef, Vec<GraphSrc>)> {
+    let (inner, inner_def) = producer_op(graph, &node.variants[0][0])?;
+    match &inner_def.kind {
+        // transpose(transpose(x, p), q) -> transpose(x, p∘q-composed).
+        OpKind::Transpose { perm: p } => {
+            // Exact cancellation is Algebraic's job (it forwards the use
+            // without keeping any node at all); composing to identity here
+            // would leave a copy Algebraic removes for free.
+            if composes_to_identity(p, q) {
+                return None;
+            }
+            let r = compose_perms(p, q)?;
+            // An identity result still materializes one copy; leave it for
+            // Algebraic to forward after composition in a later round.
+            let def = OpDef::new(OpKind::Transpose { perm: r }, inner_def.in_types.clone());
+            Some((def, vec![inner.variants[0][0]]))
+        }
+        // transpose(ew(transpose(x, p)), q) with q∘p = id -> ew(x).
+        kind if is_ew_unary(kind) => {
+            let (tin, tin_def) = producer_op(graph, &inner.variants[0][0])?;
+            let OpKind::Transpose { perm: p } = &tin_def.kind else {
+                return None;
+            };
+            if !composes_to_identity(p, q) {
+                return None;
+            }
+            let def = OpDef::new(kind.clone(), tin_def.in_types.clone());
+            Some((def, vec![tin.variants[0][0]]))
+        }
+        _ => None,
+    }
+}
+
+fn var_of(src: &GraphSrc) -> Option<VarId> {
+    match src {
+        GraphSrc::Var(v) => Some(*v),
+        GraphSrc::Node { .. } => None,
+    }
+}
+
+impl Pass for Layout {
+    fn name(&self) -> &'static str {
+        "layout"
+    }
+
+    fn run(&self, graph: &mut TraceGraph, _ctx: &mut OptContext<'_>) -> Result<PassStats> {
+        let mut stats = PassStats::default();
+        let assigned: HashSet<VarId> = assigned_vars(graph);
+        let mut planned: Vec<(NodeId, OpDef, Vec<GraphSrc>)> = Vec::new();
+        for node in graph.live_nodes() {
+            if node.variants.len() != 1 || node.out_types.len() != 1 {
+                continue;
+            }
+            let q = match &node.kind {
+                NodeKind::Item(ItemKey::Op { def, .. }) => match &def.kind {
+                    OpKind::Transpose { perm } if !identity_perm(perm) => perm,
+                    _ => continue,
+                },
+                _ => continue,
+            };
+            let Some((def, srcs)) = plan_rewrite(graph, node, q) else {
+                continue;
+            };
+            // Forwarding a variable read changes *when* the variable is
+            // read; only safe when no assign can interleave.
+            if srcs.iter().any(|s| var_of(s).is_some_and(|v| assigned.contains(&v))) {
+                continue;
+            }
+            planned.push((node.id, def, srcs));
+        }
+        for (n, def, srcs) in planned {
+            // The guard in rewrite_op re-checks type preservation; both
+            // rewrites are type-preserving by construction, so a failure
+            // here is a real bug worth surfacing, not skipping.
+            graph.rewrite_op(n, def, srcs)?;
+            stats.rewrites += 1;
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::dce::Dce;
+    use crate::opt::testutil::*;
+    use crate::ops::OpKind;
+    use crate::tensor::TensorType;
+    use crate::trace::{Location, TraceItem, ValueId, ValueRef};
+    use crate::tracegraph::START;
+
+    /// Transpose with an explicit perm over an explicit input shape.
+    fn transpose_p(inp: u64, out: u64, line: u32, perm: &[usize], in_shape: &[usize]) -> TraceItem {
+        TraceItem::Op {
+            def: OpDef::new(
+                OpKind::Transpose { perm: perm.to_vec() },
+                vec![TensorType::f32(in_shape)],
+            ),
+            loc: Location { file: "opt_test.rs", line, col: 1, scope: 0 },
+            inputs: vec![ValueRef::Out(ValueId(inp))],
+            outputs: vec![ValueId(out)],
+        }
+    }
+
+    /// Rank-3 feed so non-involutive permutations exist.
+    fn feed3(id: u64, line: u32) -> TraceItem {
+        TraceItem::Feed {
+            id: ValueId(id),
+            ty: TensorType::f32(&[2, 3, 4]),
+            loc: Location { file: "opt_test.rs", line, col: 1, scope: 0 },
+            kind: crate::trace::FeedKind::Data,
+        }
+    }
+
+    fn find_fetch(g: &TraceGraph) -> &crate::tracegraph::TgNode {
+        g.live_nodes()
+            .find(|n| matches!(&n.kind, NodeKind::Item(ItemKey::Fetch { .. })))
+            .unwrap()
+    }
+
+    #[test]
+    fn transpose_chain_composes_to_one_copy() {
+        // t2(t1(x)) with perms [1,2,0] then [1,2,0]: net [2,0,1], NOT id.
+        let mut g = graph_of(vec![
+            feed3(1, 1),
+            transpose_p(1, 2, 2, &[1, 2, 0], &[2, 3, 4]), // f32[3,4,2]
+            transpose_p(2, 3, 3, &[1, 2, 0], &[3, 4, 2]), // f32[4,2,3]
+            fetch(3, 4),
+        ]);
+        let stats = run_pass(&Layout, &mut g);
+        assert_eq!(stats.rewrites, 1);
+        let f = g.node(START).children[0];
+        let outer = find_fetch(&g).variants[0][0];
+        let GraphSrc::Node { node: outer, .. } = outer else { panic!("fetch reads an op") };
+        let n = g.node(outer);
+        match &n.kind {
+            NodeKind::Item(ItemKey::Op { def, .. }) => match &def.kind {
+                OpKind::Transpose { perm } => {
+                    assert_eq!(perm, &[2, 0, 1], "composed permutation");
+                }
+                other => panic!("expected transpose, got {other:?}"),
+            },
+            other => panic!("expected op, got {other:?}"),
+        }
+        assert_eq!(n.out_types, vec![TensorType::f32(&[4, 2, 3])], "types unchanged");
+        assert_eq!(n.variants[0][0], GraphSrc::Node { node: f, slot: 0 }, "reads x directly");
+        // The inner transpose is now dead and sweepable.
+        let removed = run_pass(&Dce, &mut g).nodes_removed;
+        assert!(removed >= 1, "inner transpose swept, got {removed}");
+        assert!(plan_for(&g).is_ok());
+    }
+
+    #[test]
+    fn ew_sandwich_drops_both_transposes() {
+        // t_back(tanh(t(x))) with cancelling perms -> tanh(x).
+        let mut g = graph_of(vec![
+            feed3(1, 1),
+            transpose_p(1, 2, 2, &[1, 2, 0], &[2, 3, 4]), // f32[3,4,2]
+            TraceItem::Op {
+                def: OpDef::new(OpKind::Tanh, vec![TensorType::f32(&[3, 4, 2])]),
+                loc: Location { file: "opt_test.rs", line: 3, col: 1, scope: 0 },
+                inputs: vec![ValueRef::Out(ValueId(2))],
+                outputs: vec![ValueId(3)],
+            },
+            transpose_p(3, 4, 4, &[2, 0, 1], &[3, 4, 2]), // back to f32[2,3,4]
+            fetch(4, 5),
+        ]);
+        let stats = run_pass(&Layout, &mut g);
+        assert_eq!(stats.rewrites, 1);
+        let f = g.node(START).children[0];
+        let GraphSrc::Node { node: outer, .. } = find_fetch(&g).variants[0][0] else {
+            panic!("fetch reads an op")
+        };
+        let n = g.node(outer);
+        match &n.kind {
+            NodeKind::Item(ItemKey::Op { def, .. }) => {
+                assert!(matches!(def.kind, OpKind::Tanh), "outer became the ew op");
+            }
+            other => panic!("expected op, got {other:?}"),
+        }
+        assert_eq!(n.out_types, vec![TensorType::f32(&[2, 3, 4])], "types unchanged");
+        assert_eq!(n.variants[0][0], GraphSrc::Node { node: f, slot: 0 });
+        // Inner tanh and transpose both die; two DCE rounds sweep the chain.
+        run_pass(&Dce, &mut g);
+        let survivors = g
+            .live_nodes()
+            .filter(|n| matches!(&n.kind, NodeKind::Item(ItemKey::Op { .. })))
+            .count();
+        assert_eq!(survivors, 1, "only the rewritten ew op remains");
+        assert!(plan_for(&g).is_ok());
+    }
+
+    #[test]
+    fn identity_cancellation_is_left_to_algebraic() {
+        // t2(t1(x)) with q∘p = id: Algebraic forwards this without keeping
+        // any node; Layout must not claim it.
+        let mut g = graph_of(vec![
+            feed_mat(1, 1),
+            transpose2(1, 2, 2),
+            transpose2(2, 3, 3),
+            fetch(3, 4),
+        ]);
+        assert_eq!(run_pass(&Layout, &mut g).rewrites, 0);
+    }
+
+    #[test]
+    fn non_cancelling_sandwich_is_kept() {
+        // t(tanh(t(x))) where the perms do NOT cancel: net layout change is
+        // real, so the sandwich rewrite must not fire (and the transposes
+        // are not directly adjacent, so composition does not fire either).
+        let mut g = graph_of(vec![
+            feed3(1, 1),
+            transpose_p(1, 2, 2, &[1, 2, 0], &[2, 3, 4]),
+            TraceItem::Op {
+                def: OpDef::new(OpKind::Tanh, vec![TensorType::f32(&[3, 4, 2])]),
+                loc: Location { file: "opt_test.rs", line: 3, col: 1, scope: 0 },
+                inputs: vec![ValueRef::Out(ValueId(2))],
+                outputs: vec![ValueId(3)],
+            },
+            transpose_p(3, 4, 4, &[1, 2, 0], &[3, 4, 2]),
+            fetch(4, 5),
+        ]);
+        assert_eq!(run_pass(&Layout, &mut g).rewrites, 0);
+    }
+
+    #[test]
+    fn multi_use_inner_transpose_survives() {
+        // The inner transpose also feeds a second consumer: composition
+        // still fires on the outer node (in place), and the inner node must
+        // remain live for its other use.
+        let mut g = graph_of(vec![
+            feed3(1, 1),
+            transpose_p(1, 2, 2, &[1, 2, 0], &[2, 3, 4]),
+            transpose_p(2, 3, 3, &[1, 2, 0], &[3, 4, 2]),
+            fetch(3, 4),
+            fetch(2, 5), // second use of the inner transpose
+        ]);
+        assert_eq!(run_pass(&Layout, &mut g).rewrites, 1);
+        run_pass(&Dce, &mut g);
+        let transposes = g
+            .live_nodes()
+            .filter(|n| match &n.kind {
+                NodeKind::Item(ItemKey::Op { def, .. }) => {
+                    matches!(def.kind, OpKind::Transpose { .. })
+                }
+                _ => false,
+            })
+            .count();
+        assert_eq!(transposes, 2, "inner transpose kept for its second fetch");
+        assert!(plan_for(&g).is_ok());
+    }
+}

@@ -24,6 +24,9 @@
 //!   executor and embeds the result.
 //! * [`Algebraic`] — forwards x·1, x+0, double-transpose, double-negation
 //!   and no-op reshape/broadcast/convert to their inputs.
+//! * [`Layout`] — composes transpose chains into a single strided copy and
+//!   cancels transpose/elementwise/transpose sandwiches, minimizing the
+//!   layout copies the shim backend materializes.
 //!
 //! `opt_level` semantics: `0` = pipeline off (plan generated from the raw
 //! graph, as the seed did), `1` = DCE only, `>=2` = the full pipeline run to
@@ -34,6 +37,7 @@ pub mod analysis;
 pub mod cse;
 pub mod dce;
 pub mod fold;
+pub mod layout;
 #[cfg(test)]
 pub(crate) mod testutil;
 
@@ -41,6 +45,7 @@ pub use algebraic::Algebraic;
 pub use cse::Cse;
 pub use dce::Dce;
 pub use fold::ConstFold;
+pub use layout::Layout;
 
 use crate::error::Result;
 use crate::ops::OpDef;
@@ -194,6 +199,9 @@ impl PassManager {
         if opt_level >= 2 {
             passes.push(Box::new(ConstFold));
             passes.push(Box::new(Algebraic));
+            // After Algebraic so exact double-transpose cancellations are
+            // already forwarded; multi-hop chains converge across rounds.
+            passes.push(Box::new(Layout));
             passes.push(Box::new(Cse));
         }
         if opt_level >= 1 {

@@ -368,6 +368,9 @@ impl Engine {
         snap.shim_parallel_loops = shim.parallel_loops;
         snap.shim_serial_fallbacks = shim.serial_fallbacks;
         snap.shim_threads = shim.threads_used;
+        snap.shim_simd_loops = shim.simd_loops;
+        snap.shim_scalar_tail_elems = shim.scalar_tail_elems;
+        snap.shim_layout_copies = shim.layout_copies_inserted;
         snap.plan_cache_hits = self.stats.plan_cache_hits;
         snap.plan_cache_misses = self.stats.plan_cache_misses;
         snap.compiles_skipped = self.stats.segment_compiles_skipped;
@@ -588,6 +591,10 @@ impl Engine {
             }
         };
         self.stats.plan_split_points = plan.split_points.len() as u64;
+        // Kernel-level cost feedback: the backend's static per-iteration
+        // element-op estimate scales the controller's thrash window, so
+        // expensive plans earn more re-entry patience than cheap ones.
+        self.controller.note_plan_cost(plan.kernel_cost());
         self.current_plan = Some(plan.clone());
         let lazy = self.mode == ExecMode::TerraLazy;
         let channels = CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone());

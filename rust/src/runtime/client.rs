@@ -197,6 +197,13 @@ impl Executable {
         &self.out_types
     }
 
+    /// Per-executable backend statistics from the shim (instruction count,
+    /// fusion count, executions, pool reuse, and the static `kernel_cost`
+    /// estimate the segment scheduler feeds back into speculation control).
+    pub fn backend_stats(&self) -> xla::ExecStats {
+        self.inner.0.backend_stats()
+    }
+
     /// Execute with device buffers, keeping outputs on device where PJRT
     /// permits. Multi-output (tuple-rooted) computations may come back as a
     /// single tuple buffer depending on the PJRT `untuple_result` behaviour;

@@ -62,6 +62,12 @@ impl ReentryPolicy {
 /// A co-execution phase surviving at most this many steps counts as
 /// thrashing.
 const THRASH_PHASE_LEN: u64 = 8;
+/// Kernel cost (element-ops per iteration, from the bytecode backend's
+/// static `kernel_cost` estimate) below which a plan counts as cheap; each
+/// doubling beyond it lengthens the thrash window by one step.
+const COST_BASE: u64 = 1 << 20;
+/// Cap on the cost-scaled thrash-window extension.
+const MAX_COST_EXTRA: u64 = 8;
 /// Upper bound on the adaptive stable-trace requirement.
 const MAX_REQUIRED: u32 = 16;
 /// Retained inter-fallback distances (diagnostics window).
@@ -145,6 +151,11 @@ pub struct ReentryController {
     /// Step at which the current/most recent co-execution phase began.
     last_entry_step: Option<u64>,
     last_fallback_step: Option<u64>,
+    /// Kernel cost of the most recently compiled plan (see
+    /// [`note_plan_cost`]; 0 until a plan reports in).
+    ///
+    /// [`note_plan_cost`]: ReentryController::note_plan_cost
+    plan_cost: u64,
     fallbacks: u64,
     /// Fallback counts per divergence site (the walker's description).
     sites: HashMap<String, u64>,
@@ -168,6 +179,7 @@ impl ReentryController {
             },
             last_entry_step: None,
             last_fallback_step: None,
+            plan_cost: 0,
             fallbacks: 0,
             sites: HashMap::new(),
             node_counts: HashMap::new(),
@@ -237,8 +249,11 @@ impl ReentryController {
         }
         if matches!(self.policy, ReentryPolicy::Adaptive) {
             // Health metric: how many steps the phase survived after entry.
+            // The window is kernel-cost-scaled: an expensive plan must
+            // survive longer before a fallback reads as "healthy phase
+            // ended", because each aborted iteration wastes more work.
             if let Some(entered) = self.last_entry_step {
-                if step.saturating_sub(entered) <= THRASH_PHASE_LEN {
+                if step.saturating_sub(entered) <= self.thrash_phase_len() {
                     self.required = (self.required * 2).min(MAX_REQUIRED);
                 } else {
                     self.required = (self.required / 2).max(1);
@@ -246,6 +261,30 @@ impl ReentryController {
             }
         }
         self.last_fallback_step = Some(step);
+    }
+
+    /// The compiled plan's kernel-level cost
+    /// ([`CompiledPlan::kernel_cost`]): the static element-op estimate the
+    /// bytecode backend attaches to each executable, summed over segments.
+    /// Called whenever the engine (re)compiles a plan; the latest value
+    /// wins. Interpreter-backed plans report 0 and keep the base window.
+    ///
+    /// [`CompiledPlan::kernel_cost`]: crate::symbolic::CompiledPlan::kernel_cost
+    pub fn note_plan_cost(&mut self, cost: u64) {
+        self.plan_cost = cost;
+    }
+
+    /// The thrash window for the current plan: [`THRASH_PHASE_LEN`] plus
+    /// one step per doubling of `plan_cost` beyond [`COST_BASE`], capped at
+    /// [`MAX_COST_EXTRA`] extra steps. Deterministic in the plan.
+    fn thrash_phase_len(&self) -> u64 {
+        let mut extra = 0u64;
+        let mut c = self.plan_cost / COST_BASE;
+        while c > 0 && extra < MAX_COST_EXTRA {
+            extra += 1;
+            c >>= 1;
+        }
+        THRASH_PHASE_LEN + extra
     }
 
     /// The engine entered co-execution; `step` is the first iteration the
@@ -359,6 +398,33 @@ mod tests {
         assert!(!c.decide(false));
         // ...unless the plan cache already holds this signature.
         assert!(c.decide(true));
+    }
+
+    #[test]
+    fn plan_cost_widens_the_thrash_window() {
+        // A 12-step phase is healthy under the base window (8)...
+        let mut cheap = ReentryController::new(ReentryPolicy::Adaptive);
+        cheap.note_entered(100);
+        cheap.note_fallback(112, "site-a");
+        assert_eq!(cheap.required(), 1, "12-step phase is healthy for a cheap plan");
+        // ...but counts as thrashing once the plan is expensive enough that
+        // the window stretches past it.
+        let mut costly = ReentryController::new(ReentryPolicy::Adaptive);
+        costly.note_plan_cost(COST_BASE << 6); // extra = 7 -> window 15
+        costly.note_entered(100);
+        costly.note_fallback(112, "site-a");
+        assert_eq!(costly.required(), 2, "12-step phase thrashes for a costly plan");
+        // The extension is capped: window never exceeds the base plus
+        // MAX_COST_EXTRA regardless of cost.
+        let mut huge = ReentryController::new(ReentryPolicy::Adaptive);
+        huge.note_plan_cost(u64::MAX);
+        assert_eq!(huge.thrash_phase_len(), THRASH_PHASE_LEN + MAX_COST_EXTRA);
+        huge.note_entered(100);
+        huge.note_fallback(100 + THRASH_PHASE_LEN + MAX_COST_EXTRA + 1, "site-a");
+        assert_eq!(huge.required(), 1, "phase longer than the capped window is healthy");
+        // Zero-cost (interpreter) plans keep the base window.
+        let base = ReentryController::new(ReentryPolicy::Adaptive);
+        assert_eq!(base.thrash_phase_len(), THRASH_PHASE_LEN);
     }
 
     #[test]

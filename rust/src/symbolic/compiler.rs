@@ -77,6 +77,17 @@ impl CompiledPlan {
         let nodes = |id: crate::symbolic::SegId| self.segments[id.0].spec.nodes.as_slice();
         crate::symbolic::plan::executable_steps(&self.steps, &nodes)
     }
+
+    /// Kernel-level cost of one plan iteration: the sum of the segments'
+    /// per-executable `backend_stats().kernel_cost` (a static element-op
+    /// estimate the bytecode backend computes at compile time; 0 for
+    /// interpreter-backed segments). Deterministic for a given plan and
+    /// backend — the speculation controller scales its re-entry patience by
+    /// this, so expensive plans are not thrashed in and out of co-execution
+    /// on the same evidence as cheap ones.
+    pub fn kernel_cost(&self) -> u64 {
+        self.segments.iter().map(|s| s.exe.backend_stats().kernel_cost).sum()
+    }
 }
 
 /// Which (node, slot) sources and variables each parameter covers.

@@ -20,6 +20,7 @@
 //! and index-keyed messages stay aligned between the two.
 
 use crate::error::{Result, TerraError};
+use crate::ops::OpDef;
 use crate::tensor::HostTensor;
 use crate::trace::{const_hash, ItemKey};
 use crate::tracegraph::{GraphSrc, NodeId, NodeKind, TraceGraph, END, START};
@@ -178,6 +179,61 @@ impl TraceGraph {
         node.variants.clear();
         Ok(())
     }
+
+    /// Replace an op node's operation and input sources *in place*, keeping
+    /// its id, position in the execution-order DAG, and output types. This
+    /// is the primitive behind value-preserving strength reductions (e.g.
+    /// the layout pass turning `transpose(transpose(x))` into a single
+    /// composed transpose of `x`): downstream consumers keep reading the
+    /// same (node, slot) and see the same values, so no use rewriting or
+    /// index shifting is needed.
+    ///
+    /// Refuses to rewrite:
+    /// * a removed or non-op node,
+    /// * a node with multiple dataflow variants (variant indices are wire
+    ///   format; rewriting one would desynchronize Variant-Select),
+    /// * a rewrite whose inferred output types differ from the node's
+    ///   recorded `out_types` (the rewrite must be shape/type-preserving),
+    /// * a source list whose length does not match `def`'s input arity.
+    pub fn rewrite_op(&mut self, n: NodeId, def: OpDef, srcs: Vec<GraphSrc>) -> Result<()> {
+        let new_out = def.out_types()?;
+        let node = &mut self.nodes[n.0];
+        if node.removed {
+            return Err(TerraError::Trace(format!("node {n:?} is removed")));
+        }
+        if node.variants.len() > 1 {
+            return Err(TerraError::Trace(format!(
+                "node {n:?} has {} dataflow variants; variant indices are wire \
+                 format and rewriting would desynchronize them",
+                node.variants.len()
+            )));
+        }
+        let loc = match &node.kind {
+            NodeKind::Item(ItemKey::Op { loc, .. }) => *loc,
+            other => {
+                return Err(TerraError::Trace(format!(
+                    "only op nodes can be rewritten, got {other:?}"
+                )))
+            }
+        };
+        if new_out != node.out_types {
+            return Err(TerraError::Trace(format!(
+                "rewrite changes output types {:?} -> {new_out:?}; only \
+                 value-preserving rewrites are allowed",
+                node.out_types
+            )));
+        }
+        if srcs.len() != def.in_types.len() {
+            return Err(TerraError::Trace(format!(
+                "rewrite provides {} sources for {} inputs",
+                srcs.len(),
+                def.in_types.len()
+            )));
+        }
+        node.kind = NodeKind::Item(ItemKey::Op { def, loc });
+        node.variants = vec![srcs];
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -303,5 +359,53 @@ mod tests {
         // Type mismatch is rejected.
         let neg = g.node(relu).children[0];
         assert!(g.fold_to_const(neg, HostTensor::scalar_f32(0.0)).is_err());
+    }
+
+    #[test]
+    fn rewrite_op_swaps_kind_and_sources_in_place() {
+        let mut g = chain();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        let neg = g.node(relu).children[0];
+        // Retarget neg to read the feed directly and become a Tanh.
+        let def = OpDef::new(OpKind::Tanh, vec![TensorType::f32(&[2])]);
+        let src = GraphSrc::Node { node: f, slot: 0 };
+        g.rewrite_op(neg, def, vec![src]).unwrap();
+        let n = g.node(neg);
+        match &n.kind {
+            NodeKind::Item(ItemKey::Op { def, loc }) => {
+                assert!(matches!(def.kind, OpKind::Tanh));
+                assert_eq!(loc.line, 3, "location survives the rewrite");
+            }
+            other => panic!("expected op node, got {other:?}"),
+        }
+        assert_eq!(n.variants, vec![vec![src]]);
+        assert_eq!(n.out_types, vec![TensorType::f32(&[2])]);
+        // relu's output is now unused: removable.
+        g.remove_node(relu).unwrap();
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn rewrite_op_refuses_type_changes_and_arity_mismatch() {
+        let mut g = chain();
+        let f = g.node(START).children[0];
+        let relu = g.node(f).children[0];
+        let src = GraphSrc::Node { node: f, slot: 0 };
+        // Output type would change: refuse.
+        let bad_ty = OpDef::new(OpKind::Tanh, vec![TensorType::f32(&[3])]);
+        assert!(g.rewrite_op(relu, bad_ty, vec![src]).is_err());
+        // Source list shorter than the op's arity: refuse.
+        let good = OpDef::new(OpKind::Tanh, vec![TensorType::f32(&[2])]);
+        assert!(g.rewrite_op(relu, good.clone(), vec![]).is_err());
+        // Non-op nodes: refuse.
+        assert!(g.rewrite_op(f, good, vec![src]).is_err());
+        // The failed attempts left the node untouched.
+        match &g.node(relu).kind {
+            NodeKind::Item(ItemKey::Op { def, .. }) => {
+                assert!(matches!(def.kind, OpKind::Relu))
+            }
+            other => panic!("expected op node, got {other:?}"),
+        }
     }
 }

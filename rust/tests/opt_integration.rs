@@ -114,6 +114,96 @@ fn dce_only_level_is_also_safe() {
     assert_eq!(r1.stats.opt_nodes_folded, 0);
 }
 
+/// Transpose-heavy program: a two-hop transpose chain (composable to one
+/// copy) plus a transpose/tanh/transpose sandwich whose permutations cancel
+/// (collapsible to a bare tanh). Bait for the layout-assignment pass.
+struct TransposeHeavyProgram;
+
+impl Program for TransposeHeavyProgram {
+    fn name(&self) -> &'static str {
+        "transpose_heavy"
+    }
+
+    fn setup(&mut self, _sess: &Session) -> Result<()> {
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let data: Vec<f32> = (0..24)
+            .map(|i| ((i as f32) * 0.7 + (step as f32) * 0.13).sin())
+            .collect();
+        let x = sess.feed(HostTensor::f32(vec![2, 3, 4], data)?)?;
+        // Chain: two non-involutive transposes, net perm [2,0,1] (not id).
+        let chain = x.transpose(&[1, 2, 0])?.transpose(&[1, 2, 0])?;
+        // Sandwich: perms cancel ([1,2,0] then [2,0,1]), tanh commutes.
+        let sandwich = x.transpose(&[1, 2, 0])?.tanh()?.transpose(&[2, 0, 1])?;
+        let a = chain.reduce_mean(&[0, 1, 2], false)?;
+        let b = sandwich.reduce_mean(&[0, 1, 2], false)?;
+        let loss = a.add(&b)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+}
+
+#[test]
+fn layout_pass_preserves_values_and_bounds_copies() {
+    let dir = artifacts_dir();
+    let run = |opt: u8| -> (RunReport, u64) {
+        let before = xla::shim_totals().layout_copies_inserted;
+        let mut engine = Engine::with_opt_level(ExecMode::Terra, &dir, true, opt).unwrap();
+        let report = engine.run(&mut TransposeHeavyProgram, 12, 0).unwrap();
+        (report, xla::shim_totals().layout_copies_inserted - before)
+    };
+    let (r0, copies0) = run(0);
+    let (r2, _copies2) = run(2);
+    assert!(r0.stats.enter_coexec >= 1, "{:?}", r0.stats);
+    assert!(r2.stats.enter_coexec >= 1, "{:?}", r2.stats);
+
+    // Pass off vs on: identical fetched losses (transposes and tanh are
+    // exact, so even bit equality would hold; the engine API hands back
+    // f32s, compared with the suite's standard tolerance).
+    assert_eq!(r0.losses.len(), r2.losses.len());
+    for ((s, a), (_, b)) in r0.losses.iter().zip(r2.losses.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "step {s}: layout off {a} vs on {b}"
+        );
+    }
+
+    // The raw plan materializes one strided copy per transpose: the program
+    // has four, so the counter moves by at least that much (a lower bound —
+    // the counter is process-global, so concurrent tests may add to it).
+    assert!(copies0 >= 4, "raw plan compiled only {copies0} layout copies");
+
+    // The layout pass itself reports its work deterministically: one chain
+    // composition plus one sandwich collapse, bounded by the chain count.
+    let layout = r2
+        .opt
+        .per_pass
+        .iter()
+        .find(|(name, _)| *name == "layout")
+        .map(|(_, s)| *s)
+        .expect("layout pass ran at opt level 2");
+    assert!(
+        layout.rewrites >= 2,
+        "expected the chain composition and the sandwich collapse, got {layout:?}"
+    );
+    assert!(
+        layout.rewrites <= 2 * r2.opt.pipelines,
+        "layout rewrites are bounded by the chain count per pipeline run: \
+         {} rewrites over {} run(s)",
+        layout.rewrites,
+        r2.opt.pipelines
+    );
+    // With the chain composed and the sandwich collapsed, the optimized
+    // plan compiles fewer op nodes overall.
+    assert!(
+        r2.stats.plan_segment_nodes < r0.stats.plan_segment_nodes,
+        "optimized plan must shrink: opt2 {} vs opt0 {}",
+        r2.stats.plan_segment_nodes,
+        r0.stats.plan_segment_nodes
+    );
+}
+
 #[test]
 fn registry_program_identical_across_opt_levels() {
     let dir = artifacts_dir();

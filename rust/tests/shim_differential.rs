@@ -450,48 +450,60 @@ fn run_backend(comp: &XlaComputation, args: &[ArgData], backend: ShimBackend) ->
 /// extra worker, and an oversubscribed pool.
 const THREAD_AXIS: [usize; 3] = [1, 2, 8];
 
+/// SIMD settings the bytecode backend is fuzzed over (the `TERRA_SHIM_SIMD`
+/// axis, driven through its programmatic override): the seed's scalar loops
+/// and the explicit-width vector kernels, which must be indistinguishable
+/// bit for bit.
+const SIMD_AXIS: [bool; 2] = [false, true];
+
 fn check_seed(seed: u64, allow_rng: bool) {
     let (comp, args) = build_case(seed, allow_rng);
     let rng_seed = 0x5EED_0000 ^ seed;
     xla::set_rng_state(rng_seed);
     let a = run_backend(&comp, &args, ShimBackend::Interp);
     let state_interp = xla::rng_state();
-    // Every thread count must reproduce the single-threaded interp oracle
-    // bit for bit, RNG stream state included (draws stay on the dispatch
-    // thread, never in the worker pool).
-    for threads in THREAD_AXIS {
-        xla::set_shim_threads(threads);
-        xla::set_rng_state(rng_seed);
-        let c = run_backend(&comp, &args, ShimBackend::Bytecode);
-        let state_bytecode = xla::rng_state();
-        match (&a, &c) {
-            (Ok(a), Ok(c)) => {
-                assert_eq!(a.len(), c.len(), "output arity differs at seed {seed}");
-                for (j, (l, r)) in a.iter().zip(c.iter()).enumerate() {
-                    assert_eq!(l.0, r.0, "output {j} dtype differs at seed {seed}");
-                    assert_eq!(l.1, r.1, "output {j} dims differ at seed {seed}");
-                    assert_eq!(
-                        l.2, r.2,
-                        "output {j} bits differ at seed {seed} (threads {threads})"
-                    );
+    // Every (thread count, SIMD setting) must reproduce the single-threaded
+    // interp oracle bit for bit, RNG stream state included (draws stay on
+    // the dispatch thread, never in the worker pool, and never vectorize).
+    for simd in SIMD_AXIS {
+        xla::set_shim_simd(Some(simd));
+        for threads in THREAD_AXIS {
+            xla::set_shim_threads(threads);
+            xla::set_rng_state(rng_seed);
+            let c = run_backend(&comp, &args, ShimBackend::Bytecode);
+            let state_bytecode = xla::rng_state();
+            match (&a, &c) {
+                (Ok(a), Ok(c)) => {
+                    assert_eq!(a.len(), c.len(), "output arity differs at seed {seed}");
+                    for (j, (l, r)) in a.iter().zip(c.iter()).enumerate() {
+                        assert_eq!(l.0, r.0, "output {j} dtype differs at seed {seed}");
+                        assert_eq!(l.1, r.1, "output {j} dims differ at seed {seed}");
+                        assert_eq!(
+                            l.2, r.2,
+                            "output {j} bits differ at seed {seed} \
+                             (threads {threads}, simd {simd})"
+                        );
+                    }
+                    if allow_rng {
+                        assert_eq!(
+                            state_interp, state_bytecode,
+                            "RNG stream state diverged at seed {seed} \
+                             (threads {threads}, simd {simd})"
+                        );
+                    }
                 }
-                if allow_rng {
-                    assert_eq!(
-                        state_interp, state_bytecode,
-                        "RNG stream state diverged at seed {seed} (threads {threads})"
-                    );
-                }
+                (Err(_), Err(_)) => {} // both backends reject the graph: acceptable
+                (a, c) => panic!(
+                    "backend disagreement at seed {seed} (threads {threads}, simd {simd}): \
+                     interp ok={}, bytecode ok={}",
+                    a.is_ok(),
+                    c.is_ok()
+                ),
             }
-            (Err(_), Err(_)) => {} // both backends reject the graph: acceptable
-            (a, c) => panic!(
-                "backend disagreement at seed {seed} (threads {threads}): \
-                 interp ok={}, bytecode ok={}",
-                a.is_ok(),
-                c.is_ok()
-            ),
         }
     }
     xla::set_shim_threads(0);
+    xla::set_shim_simd(None);
 }
 
 /// The full fuzz sweep, RNG ops included. Runs serially in one test so the
@@ -529,8 +541,12 @@ fn bytecode_matches_interpreter_on_elementwise_chains() {
         let data = rng.normal_vec(n, 1.0);
         let args = vec![ArgData::F { data, dims: vec![n] }];
         let a = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
-        let cres = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
-        assert_eq!(a, cres, "chain seed {seed} diverged");
+        for simd in SIMD_AXIS {
+            xla::set_shim_simd(Some(simd));
+            let cres = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+            assert_eq!(a, cres, "chain seed {seed} diverged (simd {simd})");
+        }
+        xla::set_shim_simd(None);
     }
 }
 
@@ -567,12 +583,19 @@ fn bytecode_matches_interpreter_on_matmul_sizes() {
             ArgData::F { data: bv, dims: vec![k as usize, n as usize] },
         ];
         let x = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
-        for threads in THREAD_AXIS {
-            xla::set_shim_threads(threads);
-            let y = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
-            assert_eq!(x, y, "matmul {m}x{k}x{n} diverged (threads {threads})");
+        for simd in SIMD_AXIS {
+            xla::set_shim_simd(Some(simd));
+            for threads in THREAD_AXIS {
+                xla::set_shim_threads(threads);
+                let y = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+                assert_eq!(
+                    x, y,
+                    "matmul {m}x{k}x{n} diverged (threads {threads}, simd {simd})"
+                );
+            }
         }
         xla::set_shim_threads(0);
+        xla::set_shim_simd(None);
     }
 }
 
@@ -606,10 +629,17 @@ fn parallel_kernels_match_oracle_on_large_shapes() {
         ArgData::F { data: wv, dims: vec![512, 64] },
     ];
     let oracle = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
-    for threads in THREAD_AXIS {
-        xla::set_shim_threads(threads);
-        let got = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
-        assert_eq!(oracle, got, "large-shape parallel run diverged (threads {threads})");
+    for simd in SIMD_AXIS {
+        xla::set_shim_simd(Some(simd));
+        for threads in THREAD_AXIS {
+            xla::set_shim_threads(threads);
+            let got = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+            assert_eq!(
+                oracle, got,
+                "large-shape parallel run diverged (threads {threads}, simd {simd})"
+            );
+        }
     }
     xla::set_shim_threads(0);
+    xla::set_shim_simd(None);
 }

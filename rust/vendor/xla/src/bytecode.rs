@@ -28,6 +28,7 @@
 //! draw order.
 
 use crate::interp::{binary_f32_fn, binary_i32_fn, cmp_f32, cmp_i32, unary_f32_fn, unary_i32_fn};
+use crate::simd::{F32x8, LANES};
 use crate::{
     broadcast_shape, err, num_elems, unravel, BinaryK, CmpK, Data, Error, Literal, Op,
     PrimitiveType, ReduceK, Result, RngStream, UnaryK, XlaComputation,
@@ -570,11 +571,19 @@ fn note_parallel(threads: usize, eligible: bool) {
     }
 }
 
-/// Per-execution context: the client's RNG stream and the resolved worker
-/// count.
+/// Per-execution context: the client's RNG stream, the resolved worker
+/// count, and whether the 8-lane SIMD kernel paths are enabled.
 struct ExecCtx<'a> {
     rng: &'a RngStream,
     threads: usize,
+    simd: bool,
+}
+
+/// Count one kernel dispatch down an 8-lane SIMD path, plus the output
+/// elements its scalar tail loops handled.
+fn note_simd(tail_elems: usize) {
+    crate::SIMD_LOOPS.fetch_add(1, Ordering::Relaxed);
+    crate::SCALAR_TAIL_ELEMS.fetch_add(tail_elems as u64, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------------
@@ -611,6 +620,9 @@ pub(crate) struct Program {
     params: Vec<ParamSpec>,
     outputs: Vec<OutSpec>,
     fused: u64,
+    /// Static per-execution element-op estimate, summed over instructions
+    /// at compile time (see [`inst_cost`]).
+    kernel_cost: u64,
     pool: Mutex<Pool>,
     executions: AtomicU64,
     bytes_reused: AtomicU64,
@@ -631,6 +643,7 @@ impl Program {
             fused_instructions: self.fused,
             executions: self.executions.load(Ordering::Relaxed),
             bytes_reused: self.bytes_reused.load(Ordering::Relaxed),
+            kernel_cost: self.kernel_cost,
         }
     }
 
@@ -642,7 +655,8 @@ impl Program {
     pub(crate) fn execute(&self, args: &[&Literal], rng: &RngStream) -> Result<Vec<Literal>> {
         let threads = crate::shim_threads()?;
         crate::THREADS_USED.store(threads as u64, Ordering::Relaxed);
-        let ctx = ExecCtx { rng, threads };
+        let simd = crate::shim_simd()?;
+        let ctx = ExecCtx { rng, threads, simd };
         for p in &self.params {
             let v = args
                 .get(p.index)
@@ -1250,6 +1264,10 @@ pub(crate) fn compile(comp: &XlaComputation) -> Result<Program> {
                 let a = &metas[node.args[0]];
                 let istr = row_major_strides(&a.dims);
                 let strides: Vec<usize> = perm.iter().map(|&p| istr[p as usize]).collect();
+                // Every transpose materializes one strided layout copy; the
+                // layout pass upstream composes transpose chains so at most
+                // one survives per chain. Counted at compile time (static).
+                crate::LAYOUT_COPIES_INSERTED.fetch_add(1, Ordering::Relaxed);
                 Inst::Strided {
                     dst,
                     src: node_src[&node.args[0]],
@@ -1424,6 +1442,7 @@ pub(crate) fn compile(comp: &XlaComputation) -> Result<Program> {
         }
     }
 
+    let kernel_cost = insts.iter().map(inst_cost).sum();
     Ok(Program {
         insts,
         frees,
@@ -1431,10 +1450,41 @@ pub(crate) fn compile(comp: &XlaComputation) -> Result<Program> {
         params,
         outputs,
         fused: fused_count,
+        kernel_cost,
         pool: Mutex::new(Pool::default()),
         executions: AtomicU64::new(0),
         bytes_reused: AtomicU64::new(0),
     })
+}
+
+/// Static element-op estimate for one instruction execution — the basis of
+/// [`crate::ExecStats::kernel_cost`]. Deliberately coarse (element counts,
+/// not cycle models) but deterministic and monotone in problem size, which
+/// is all the segment scheduler above needs.
+fn inst_cost(inst: &Inst) -> u64 {
+    match inst {
+        Inst::Fused { n, ops, .. } => (*n as u64) * (ops.len() as u64),
+        Inst::MatMul { m, k, n, batch, .. } => {
+            (*batch as u64) * (*m as u64) * (*n as u64) * (*k as u64)
+        }
+        Inst::Reduce { in_n, .. } => *in_n as u64,
+        Inst::Softmax { outer, axis, inner, .. } => {
+            // max + exp + normalize: three passes over the data.
+            3 * (*outer as u64) * (*axis as u64) * (*inner as u64)
+        }
+        Inst::FillZero { n, .. }
+        | Inst::Iota { n, .. }
+        | Inst::RngUniform { n, .. }
+        | Inst::RngNormal { n, .. }
+        | Inst::Strided { n, .. } => *n as u64,
+        Inst::BinaryBcast { out_dims, .. } | Inst::CompareBcast { out_dims, .. } => {
+            num_elems(out_dims) as u64
+        }
+        Inst::BroadcastTile { out_n, .. } => *out_n as u64,
+        Inst::Concat { out_n, .. } => *out_n as u64,
+        Inst::Slice { outer, copy, .. } => (*outer as u64) * (*copy as u64),
+        Inst::Take { outer, inner, idx: _, .. } => (*outer as u64) * (*inner as u64),
+    }
 }
 
 /// Build the post-order fused expression for the cluster rooted at `root`.
@@ -1772,6 +1822,79 @@ fn exec_inst(
             let (a_shared, b_shared) = (*a_shared, *b_shared);
             let mut out = pool.alloc_f32(batch * m * n);
             out.resize(batch * m * n, 0.0);
+            let rows = batch * m;
+            let par = ctx.threads > 1 && rows >= 2 && rows * n * k >= PAR_MIN_FLOPS;
+            note_parallel(ctx.threads, par);
+            if ctx.simd && n >= LANES {
+                // 8-lane path: pack the RHS's 8-column blocks into k-major
+                // micro-panels once per B matrix (dispatch thread), then
+                // sweep rows panel-outer so each k×8 panel stays
+                // cache-resident across the whole row chunk. Per (i, j) the
+                // accumulation is the scalar kernel's, per lane.
+                let mut panels = pool.alloc_f32((n / LANES) * k * LANES);
+                if par && (b_shared || batch == 1) {
+                    pack_b_panels(bv, 0, k, n, &mut panels);
+                    let ptr = OutPtr(out.as_mut_ptr());
+                    let chunks = ctx.threads;
+                    let pr: &[f32] = &panels;
+                    let a_mod = if a_shared { m } else { rows };
+                    run_parallel(ctx.threads, chunks, &|c| {
+                        let r = chunk_range(rows, chunks, c);
+                        // SAFETY: row regions of the pre-sized output are
+                        // disjoint across chunks.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(ptr.0.add(r.start * n), r.len() * n)
+                        };
+                        matmul_rows_simd(av, 0, a_mod, r.start, dst, r.len(), pr, bv, 0, k, n);
+                    });
+                } else if par {
+                    for bi in 0..batch {
+                        let b_off = bi * k * n;
+                        pack_b_panels(bv, b_off, k, n, &mut panels);
+                        let ptr = OutPtr(out.as_mut_ptr());
+                        let chunks = ctx.threads;
+                        let pr: &[f32] = &panels;
+                        let a_base = if a_shared { 0 } else { bi * m * k };
+                        run_parallel(ctx.threads, chunks, &|c| {
+                            let r = chunk_range(m, chunks, c);
+                            // SAFETY: disjoint row regions, as above.
+                            let dst = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    ptr.0.add((bi * m + r.start) * n),
+                                    r.len() * n,
+                                )
+                            };
+                            matmul_rows_simd(
+                                av, a_base, m, r.start, dst, r.len(), pr, bv, b_off, k, n,
+                            );
+                        });
+                    }
+                } else {
+                    for bi in 0..batch {
+                        let a_base = if a_shared { 0 } else { bi * m * k };
+                        let b_off = if b_shared { 0 } else { bi * k * n };
+                        if bi == 0 || !b_shared {
+                            pack_b_panels(bv, b_off, k, n, &mut panels);
+                        }
+                        matmul_rows_simd(
+                            av,
+                            a_base,
+                            m,
+                            0,
+                            &mut out[bi * m * n..(bi + 1) * m * n],
+                            m,
+                            &panels,
+                            bv,
+                            b_off,
+                            k,
+                            n,
+                        );
+                    }
+                }
+                note_simd(rows * (n % LANES));
+                pool.put(Buf::F(panels));
+                return Ok(Buf::F(out));
+            }
             let mut bt = pool.alloc_f32(k * n);
             let transpose_bt = |bt: &mut Vec<f32>, b_off: usize| {
                 bt.clear();
@@ -1781,9 +1904,6 @@ fn exec_inst(
                     }
                 }
             };
-            let rows = batch * m;
-            let par = ctx.threads > 1 && rows >= 2 && rows * n * k >= PAR_MIN_FLOPS;
-            note_parallel(ctx.threads, par);
             if par && (b_shared || batch == 1) {
                 // One RHS transpose serves every row: partition the full
                 // batch*m row space into fixed chunks. Each (i, j) keeps the
@@ -1955,6 +2075,7 @@ fn exec_inst(
                     };
                     let mut acc = pool.alloc_f32(*out_n);
                     acc.resize(*out_n, init);
+                    let simd = ctx.simd && *out_n >= LANES;
                     if par {
                         // Partition the *output* range: each slot's
                         // contributions keep their full serial accumulation
@@ -1968,18 +2089,54 @@ fn exec_inst(
                             let dst = unsafe {
                                 std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len())
                             };
-                            reduce_rows(
-                                v,
-                                dst,
-                                r.start,
-                                kept_sizes,
-                                kept_in_strides,
-                                red_sizes,
-                                red_in_strides,
-                                init,
-                                scalar,
-                            );
+                            if simd {
+                                reduce_rows_f32_simd(
+                                    v,
+                                    dst,
+                                    r.start,
+                                    kept_sizes,
+                                    kept_in_strides,
+                                    red_sizes,
+                                    red_in_strides,
+                                    init,
+                                    *kind,
+                                );
+                            } else {
+                                reduce_rows(
+                                    v,
+                                    dst,
+                                    r.start,
+                                    kept_sizes,
+                                    kept_in_strides,
+                                    red_sizes,
+                                    red_in_strides,
+                                    init,
+                                    scalar,
+                                );
+                            }
                         });
+                        if simd {
+                            let tail = (0..chunks)
+                                .map(|c| chunk_range(*out_n, chunks, c).len() % LANES)
+                                .sum::<usize>();
+                            note_simd(tail);
+                        }
+                    } else if simd {
+                        // Serial SIMD path: the per-slot walk is
+                        // bit-identical to the flat sweep (see
+                        // `reduce_rows`), so one wide kernel serves both.
+                        reduce_rows_f32_simd(
+                            v,
+                            &mut acc,
+                            0,
+                            kept_sizes,
+                            kept_in_strides,
+                            red_sizes,
+                            red_in_strides,
+                            init,
+                            *kind,
+                        );
+                        note_simd(*out_n % LANES);
                     } else {
                         reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, scalar);
                     }
@@ -2041,6 +2198,7 @@ fn exec_inst(
             out.resize(total, 0.0);
             let par = ctx.threads > 1 && outer >= 2 && total >= PAR_MIN_ELEMS;
             note_parallel(ctx.threads, par);
+            let simd = ctx.simd && (inner >= LANES || (inner == 1 && axis >= LANES));
             if par {
                 // Outer groups are independent and contiguous
                 // (`axis * inner` elements each): fixed-partition them.
@@ -2056,10 +2214,21 @@ fn exec_inst(
                             r.len() * block,
                         )
                     };
-                    softmax_block(v, dst, r.start, r.len(), axis, inner);
+                    if simd {
+                        softmax_block_simd(v, dst, r.start, r.len(), axis, inner);
+                    } else {
+                        softmax_block(v, dst, r.start, r.len(), axis, inner);
+                    }
                 });
+            } else if simd {
+                softmax_block_simd(v, &mut out, 0, outer, axis, inner);
             } else {
                 softmax_block(v, &mut out, 0, outer, axis, inner);
+            }
+            if simd {
+                let tail_per_outer =
+                    if inner == 1 { axis % LANES } else { (inner % LANES) * axis };
+                note_simd(outer * tail_per_outer);
             }
             Ok(Buf::F(out))
         }
@@ -2144,6 +2313,91 @@ fn softmax_block(v: &[f32], out: &mut [f32], o0: usize, outers: usize, axis: usi
     }
 }
 
+/// 8-wide variant of [`softmax_block`]. For `inner > 1` lanes are 8
+/// adjacent `inner` columns — loads are contiguous (flat index is
+/// `(o*axis + kx)*inner + inn`) and each lane runs the scalar column's
+/// max / exp-sum / normalize passes in the scalar order: max via per-lane
+/// `f32::max`, `exp` via the per-lane scalar `f32::exp`, the subtract,
+/// per-lane sums and the final divide as wide IEEE ops. For `inner == 1`
+/// the max and exp-sum passes are serial dependences per row and stay
+/// scalar; only the normalize pass (independent divides) is vectorized.
+/// Tail columns fall back to the scalar walk, so bits match
+/// [`softmax_block`] exactly.
+fn softmax_block_simd(
+    v: &[f32],
+    out: &mut [f32],
+    o0: usize,
+    outers: usize,
+    axis: usize,
+    inner: usize,
+) {
+    if inner == 1 {
+        let nb = axis / LANES;
+        for oo in 0..outers {
+            let row = &v[(o0 + oo) * axis..(o0 + oo + 1) * axis];
+            let orow = &mut out[oo * axis..(oo + 1) * axis];
+            let mut mx = f32::NEG_INFINITY;
+            for &x in row {
+                mx = mx.max(x);
+            }
+            let mut sum = 0f32;
+            for kx in 0..axis {
+                let e = (row[kx] - mx).exp();
+                orow[kx] = e;
+                sum += e;
+            }
+            let s = F32x8::splat(sum);
+            for b in 0..nb {
+                let d = &mut orow[b * LANES..];
+                F32x8::load(d).div(s).store(d);
+            }
+            for e in orow[nb * LANES..].iter_mut() {
+                *e /= sum;
+            }
+        }
+    } else {
+        let nb = inner / LANES;
+        for oo in 0..outers {
+            for ib in 0..nb {
+                let inn0 = ib * LANES;
+                let src_at = |kx: usize| ((o0 + oo) * axis + kx) * inner + inn0;
+                let dst_at = |kx: usize| (oo * axis + kx) * inner + inn0;
+                let mut mx = F32x8::splat(f32::NEG_INFINITY);
+                for kx in 0..axis {
+                    mx = mx.zip(F32x8::load(&v[src_at(kx)..]), f32::max);
+                }
+                let mut sum = F32x8::splat(0.0);
+                for kx in 0..axis {
+                    let e = F32x8::load(&v[src_at(kx)..]).sub(mx).map(f32::exp);
+                    e.store(&mut out[dst_at(kx)..]);
+                    sum = sum.add(e);
+                }
+                for kx in 0..axis {
+                    let d = &mut out[dst_at(kx)..];
+                    F32x8::load(d).div(sum).store(d);
+                }
+            }
+            for inn in nb * LANES..inner {
+                let src_at = |kx: usize| ((o0 + oo) * axis + kx) * inner + inn;
+                let dst_at = |kx: usize| (oo * axis + kx) * inner + inn;
+                let mut mx = f32::NEG_INFINITY;
+                for kx in 0..axis {
+                    mx = mx.max(v[src_at(kx)]);
+                }
+                let mut sum = 0f32;
+                for kx in 0..axis {
+                    let e = (v[src_at(kx)] - mx).exp();
+                    out[dst_at(kx)] = e;
+                    sum += e;
+                }
+                for kx in 0..axis {
+                    out[dst_at(kx)] /= sum;
+                }
+            }
+        }
+    }
+}
+
 /// One output row of the blocked matmul: dot products of `arow` against the
 /// transposed-RHS rows. Shared by the serial and the row-partitioned
 /// parallel paths — same accumulation order and zero-skip as the
@@ -2159,6 +2413,77 @@ fn matmul_row(arow: &[f32], bt: &[f32], dst: &mut [f32], k: usize) {
             }
         }
         *slot = acc;
+    }
+}
+
+/// Pack the 8-column blocks of one RHS matrix into contiguous k-major
+/// micro-panels: `panels[(jb*k + kk)*8 + l] = bv[b_off + kk*n + jb*8 + l]`.
+/// One panel is `k × 8` floats — the tile the SIMD row sweep keeps
+/// L1/L2-resident across a whole row chunk. Tail columns (`n % 8`) are not
+/// packed; they read the RHS in place.
+fn pack_b_panels(bv: &[f32], b_off: usize, k: usize, n: usize, panels: &mut Vec<f32>) {
+    let nb = n / LANES;
+    panels.clear();
+    for jb in 0..nb {
+        for kk in 0..k {
+            let s = b_off + kk * n + jb * LANES;
+            panels.extend_from_slice(&bv[s..s + LANES]);
+        }
+    }
+}
+
+/// SIMD row sweep over `nrows` consecutive output rows (`row0` is the
+/// global row index of `dst`'s first row; row `r`'s LHS starts at
+/// `a_base + ((row0 + r) % a_mod) * k`). Loop order is panel-outer /
+/// row-inner — the cache-blocked tiling: one k×8 B panel services every
+/// row of the chunk before the next panel is touched. Per (row, j) lane
+/// the accumulation is exactly [`matmul_row`]'s k-ascending walk — the
+/// zero-skip predicate reads only `arow[kk]`, so it is uniform across the
+/// 8 lanes, and `acc + x * b` is two IEEE roundings per step in both
+/// kernels (no FMA). The `n % 8` tail columns run the scalar dot against
+/// the unpacked RHS (same values as the transposed scratch rows the scalar
+/// kernel reads).
+#[allow(clippy::too_many_arguments)]
+fn matmul_rows_simd(
+    av: &[f32],
+    a_base: usize,
+    a_mod: usize,
+    row0: usize,
+    dst: &mut [f32],
+    nrows: usize,
+    panels: &[f32],
+    bv: &[f32],
+    b_off: usize,
+    k: usize,
+    n: usize,
+) {
+    let nb = n / LANES;
+    for jb in 0..nb {
+        let panel = &panels[jb * k * LANES..(jb + 1) * k * LANES];
+        for r in 0..nrows {
+            let a0 = a_base + ((row0 + r) % a_mod) * k;
+            let arow = &av[a0..a0 + k];
+            let mut acc = F32x8::splat(0.0);
+            for (kk, &x) in arow.iter().enumerate() {
+                if x != 0.0 {
+                    acc = acc.add(F32x8::splat(x).mul(F32x8::load(&panel[kk * LANES..])));
+                }
+            }
+            acc.store(&mut dst[r * n + jb * LANES..]);
+        }
+    }
+    for r in 0..nrows {
+        let a0 = a_base + ((row0 + r) % a_mod) * k;
+        let arow = &av[a0..a0 + k];
+        for j in nb * LANES..n {
+            let mut acc = 0f32;
+            for (kk, &x) in arow.iter().enumerate() {
+                if x != 0.0 {
+                    acc += x * bv[b_off + kk * n + j];
+                }
+            }
+            dst[r * n + j] = acc;
+        }
     }
 }
 
@@ -2212,6 +2537,86 @@ fn reduce_rows<T: Copy>(
     }
 }
 
+/// 8-wide f32 variant of [`reduce_rows`]: lanes are 8 adjacent output
+/// slots. The base-relative offset sequence of a slot's contributions
+/// (ascending input-flat order) depends only on the reduced dims, not on
+/// the slot, so one shared odometer drives all 8 lanes; each lane
+/// accumulates its own slot's contributions in exactly the serial
+/// per-slot order — Sum/Mean via the wide IEEE add, Max via per-lane
+/// `f32::max`. [`reduce_rows`] is itself bit-identical per slot to the
+/// serial [`reduce_loop`] sweep, so this path serves the serial kernel
+/// too. Tail slots (`out.len() % 8`) fall back to [`reduce_rows`].
+#[allow(clippy::too_many_arguments)]
+fn reduce_rows_f32_simd(
+    v: &[f32],
+    out: &mut [f32],
+    o_lo: usize,
+    kept_sizes: &[usize],
+    kept_in_strides: &[usize],
+    red_sizes: &[usize],
+    red_in_strides: &[usize],
+    init: f32,
+    kind: ReduceK,
+) {
+    let nb = out.len() / LANES;
+    let rank = red_sizes.len();
+    let count: usize = red_sizes.iter().product();
+    let mut idx = vec![0usize; rank];
+    for b in 0..nb {
+        // Decompose the 8 flat output indices over the kept dims, exactly
+        // like the scalar walk does per slot.
+        let mut bases = [0usize; LANES];
+        for (l, base) in bases.iter_mut().enumerate() {
+            let mut rem = o_lo + b * LANES + l;
+            for d in (0..kept_sizes.len()).rev() {
+                *base += (rem % kept_sizes[d]) * kept_in_strides[d];
+                rem /= kept_sizes[d];
+            }
+        }
+        let mut acc = F32x8::splat(init);
+        idx.fill(0);
+        let mut off = 0usize;
+        for _ in 0..count {
+            let mut xs = [0f32; LANES];
+            for (l, x) in xs.iter_mut().enumerate() {
+                *x = v[bases[l] + off];
+            }
+            acc = match kind {
+                ReduceK::Sum | ReduceK::Mean => acc.add(F32x8(xs)),
+                ReduceK::Max => acc.zip(F32x8(xs), f32::max),
+            };
+            let mut d = rank;
+            while d > 0 {
+                d -= 1;
+                idx[d] += 1;
+                off += red_in_strides[d];
+                if idx[d] < red_sizes[d] {
+                    break;
+                }
+                off -= red_in_strides[d] * red_sizes[d];
+                idx[d] = 0;
+            }
+        }
+        acc.store(&mut out[b * LANES..]);
+    }
+    if out.len() % LANES != 0 {
+        reduce_rows(
+            v,
+            &mut out[nb * LANES..],
+            o_lo + nb * LANES,
+            kept_sizes,
+            kept_in_strides,
+            red_sizes,
+            red_in_strides,
+            init,
+            |a: &mut f32, x: f32| match kind {
+                ReduceK::Sum | ReduceK::Mean => *a += x,
+                ReduceK::Max => *a = a.max(x),
+            },
+        );
+    }
+}
+
 /// Flat-ascending accumulation into `acc[o]`, with `o` tracked by an
 /// odometer over the input dims (identical order to the interpreter's
 /// unravel/ravel walk, without the per-element allocations).
@@ -2248,6 +2653,99 @@ enum ROp {
     Splat(usize),
     Un(fn(f32) -> f32),
     Bin(fn(f32, f32) -> f32),
+}
+
+/// A pre-resolved fused op for the 8-lane wide path. `Add`..`Div` execute
+/// as wide IEEE ops (correctly rounded per lane, so bit-identical to the
+/// scalar op applied per lane); everything else applies the *same* scalar
+/// fn-table entry the scalar path uses, per lane.
+enum WOp {
+    Load(usize),
+    Splat(usize),
+    Map(fn(f32) -> f32),
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Zip(fn(f32, f32) -> f32),
+}
+
+/// Lower the all-f32 fused expression to wide ops. Only called when
+/// `all_f32` held at compile time, so every op is Load/Splat/Un/Bin.
+fn wide_ops(ops: &[EOp]) -> Result<Vec<WOp>> {
+    let mut wops = Vec::with_capacity(ops.len());
+    for op in ops {
+        wops.push(match op {
+            EOp::Load(j) => WOp::Load(*j as usize),
+            EOp::Splat(j) => WOp::Splat(*j as usize),
+            EOp::Un(k) => WOp::Map(unary_f32_fn(*k)),
+            EOp::Bin(BinaryK::Add) => WOp::Add,
+            EOp::Bin(BinaryK::Sub) => WOp::Sub,
+            EOp::Bin(BinaryK::Mul) => WOp::Mul,
+            EOp::Bin(BinaryK::Div) => WOp::Div,
+            EOp::Bin(k) => WOp::Zip(binary_f32_fn(*k)),
+            _ => return err("internal: non-f32 op on f32 fast path"),
+        });
+    }
+    Ok(wops)
+}
+
+/// One 8-lane block (output elements `i0..i0+8`) of the f32 fast path.
+/// Lane `l` evaluates exactly [`fused_f32_elem`]`(rops, fs, _, i0 + l)`:
+/// same post-order, same fns, wide ops only where IEEE-exact.
+fn fused_f32_block(wops: &[WOp], fs: &[&[f32]], st: &mut Vec<F32x8>, i0: usize) -> F32x8 {
+    st.clear();
+    for wop in wops {
+        match wop {
+            WOp::Load(j) => st.push(F32x8::load(&fs[*j][i0..])),
+            WOp::Splat(j) => st.push(F32x8::splat(fs[*j][0])),
+            WOp::Map(f) => {
+                let x = st.pop().unwrap();
+                st.push(x.map(*f));
+            }
+            WOp::Zip(f) => {
+                let b = st.pop().unwrap();
+                let a = st.pop().unwrap();
+                st.push(a.zip(b, *f));
+            }
+            wide => {
+                let b = st.pop().unwrap();
+                let a = st.pop().unwrap();
+                st.push(match wide {
+                    WOp::Add => a.add(b),
+                    WOp::Sub => a.sub(b),
+                    WOp::Mul => a.mul(b),
+                    WOp::Div => a.div(b),
+                    _ => unreachable!(),
+                });
+            }
+        }
+    }
+    st.pop().unwrap()
+}
+
+/// Evaluate output elements `start..start + dst.len()` of the all-f32 fused
+/// expression into `dst`: 8-wide blocks first, then the scalar tail loop
+/// ([`fused_f32_elem`]) for the remainder. Used by the serial path and by
+/// each parallel chunk — every element's bits are those of the scalar loop.
+fn fused_f32_range(
+    rops: &[ROp],
+    wops: &[WOp],
+    fs: &[&[f32]],
+    dst: &mut [f32],
+    start: usize,
+    stack_cap: usize,
+) {
+    let n = dst.len();
+    let nb = n / LANES;
+    let mut wst: Vec<F32x8> = Vec::with_capacity(stack_cap);
+    for b in 0..nb {
+        fused_f32_block(wops, fs, &mut wst, start + b * LANES).store(&mut dst[b * LANES..]);
+    }
+    let mut st: Vec<f32> = Vec::with_capacity(stack_cap);
+    for i in nb * LANES..n {
+        dst[i] = fused_f32_elem(rops, fs, &mut st, start + i);
+    }
 }
 
 /// One element of the f32 fast path: identical for the serial loop and
@@ -2373,22 +2871,40 @@ fn exec_fused(
                 _ => return err("internal: non-f32 op on f32 fast path"),
             });
         }
+        let simd = ctx.simd && n >= LANES;
+        let wops = if simd { Some(wide_ops(ops)?) } else { None };
         let mut out = pool.alloc_f32(n);
         if par {
             out.resize(n, 0.0);
             let ptr = OutPtr(out.as_mut_ptr());
             let chunks = ctx.threads;
-            let (rops, fs) = (&rops, &fs);
+            let (rops, fs, wops) = (&rops, &fs, &wops);
             run_parallel(ctx.threads, chunks, &|c| {
                 let r = chunk_range(n, chunks, c);
                 // SAFETY: chunks write disjoint output ranges.
                 let dst =
                     unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r.start), r.len()) };
-                let mut st: Vec<f32> = Vec::with_capacity(stack_cap);
-                for (slot, i) in dst.iter_mut().zip(r) {
-                    *slot = fused_f32_elem(rops, fs, &mut st, i);
+                match wops {
+                    Some(w) => fused_f32_range(rops, w, fs, dst, r.start, stack_cap),
+                    None => {
+                        let mut st: Vec<f32> = Vec::with_capacity(stack_cap);
+                        for (slot, i) in dst.iter_mut().zip(r) {
+                            *slot = fused_f32_elem(rops, fs, &mut st, i);
+                        }
+                    }
                 }
             });
+            if simd {
+                let tail =
+                    (0..chunks).map(|c| chunk_range(n, chunks, c).len() % LANES).sum::<usize>();
+                note_simd(tail);
+            }
+            return Ok(Buf::F(out));
+        }
+        if let Some(w) = &wops {
+            out.resize(n, 0.0);
+            fused_f32_range(&rops, w, &fs, &mut out, 0, stack_cap);
+            note_simd(n % LANES);
             return Ok(Buf::F(out));
         }
         let mut st: Vec<f32> = Vec::with_capacity(stack_cap);

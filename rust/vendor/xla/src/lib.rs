@@ -35,6 +35,7 @@ use std::time::Instant;
 
 pub(crate) mod bytecode;
 pub(crate) mod interp;
+pub(crate) mod simd;
 
 // ---------------------------------------------------------------------------
 // Error
@@ -899,6 +900,9 @@ static INTERP_EXECUTIONS: AtomicU64 = AtomicU64::new(0);
 pub(crate) static PARALLEL_LOOPS: AtomicU64 = AtomicU64::new(0);
 pub(crate) static SERIAL_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 pub(crate) static THREADS_USED: AtomicU64 = AtomicU64::new(1);
+pub(crate) static SIMD_LOOPS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static SCALAR_TAIL_ELEMS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static LAYOUT_COPIES_INSERTED: AtomicU64 = AtomicU64::new(0);
 
 /// Programmatic override backing the `TERRA_SHIM_THREADS` env knob (the
 /// launcher's `--shim-threads` flag and the JSON `shim_threads` key route
@@ -941,6 +945,55 @@ pub fn shim_threads() -> Result<usize> {
     }
 }
 
+/// Programmatic override backing the `TERRA_SHIM_SIMD` env knob (the
+/// launcher's `--shim-simd` flag and the JSON `shim_simd` key route through
+/// this): `Some(true)`/`Some(false)` pin the bytecode backend's SIMD kernel
+/// selection, `None` clears the override (back to the env var / default-on).
+/// Encoded as 0 = unset, 1 = off, 2 = on.
+static SHIM_SIMD_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_shim_simd(v: Option<bool>) {
+    let enc = match v {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    SHIM_SIMD_OVERRIDE.store(enc, Ordering::Relaxed);
+}
+
+/// Strictly parse a `TERRA_SHIM_SIMD` value: `on`/`true`/`1` or
+/// `off`/`false`/`0`, nothing else. Junk is an error — a malformed knob must
+/// fail the execution loudly rather than silently pick a kernel path.
+fn parse_shim_simd(raw: &str) -> Result<bool> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => err(format!(
+            "TERRA_SHIM_SIMD: invalid value '{raw}' (expected on|off)"
+        )),
+    }
+}
+
+/// Resolve whether the bytecode backend uses its 8-lane SIMD kernels for the
+/// next execution: the [`set_shim_simd`] override, else `TERRA_SHIM_SIMD`
+/// (validated by [`parse_shim_simd`]), else on. `off` reproduces the seed's
+/// scalar kernels exactly — but either way results are bit-identical: SIMD
+/// lanes cover adjacent *output* elements only, each element's accumulation
+/// walk stays serial in seed order. Resolved per execution, so tests and
+/// benches can flip the knob in-process.
+pub fn shim_simd() -> Result<bool> {
+    match SHIM_SIMD_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return Ok(false),
+        2 => return Ok(true),
+        _ => {}
+    }
+    match std::env::var("TERRA_SHIM_SIMD") {
+        Ok(v) => parse_shim_simd(&v),
+        Err(std::env::VarError::NotPresent) => Ok(true),
+        Err(e) => err(format!("TERRA_SHIM_SIMD: {e}")),
+    }
+}
+
 /// Cumulative process-wide backend counters: the compile-vs-execute time
 /// split and the bytecode backend's work/savings breakdown.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -974,6 +1027,17 @@ pub struct ShimTotals {
     /// Worker count resolved by the most recent bytecode execution (gauge,
     /// not cumulative).
     pub threads_used: u64,
+    /// Kernel executions that took an 8-lane SIMD path (fused f32 loops,
+    /// matmul, f32 reduce, softmax), counted once per kernel dispatch.
+    pub simd_loops: u64,
+    /// Output elements computed by the scalar tail loops of SIMD-path
+    /// kernels (ranges not divisible by the lane width).
+    pub scalar_tail_elems: u64,
+    /// Layout copies materialized at bytecode compile time: one per
+    /// `Transpose` lowered to a strided odometer copy. The layout pass
+    /// composes transpose chains so at most one copy survives per chain —
+    /// this counter is how that claim is measured.
+    pub layout_copies_inserted: u64,
 }
 
 /// Snapshot the process-wide backend counters.
@@ -990,6 +1054,9 @@ pub fn shim_totals() -> ShimTotals {
         parallel_loops: PARALLEL_LOOPS.load(Ordering::Relaxed),
         serial_fallbacks: SERIAL_FALLBACKS.load(Ordering::Relaxed),
         threads_used: THREADS_USED.load(Ordering::Relaxed),
+        simd_loops: SIMD_LOOPS.load(Ordering::Relaxed),
+        scalar_tail_elems: SCALAR_TAIL_ELEMS.load(Ordering::Relaxed),
+        layout_copies_inserted: LAYOUT_COPIES_INSERTED.load(Ordering::Relaxed),
     }
 }
 
@@ -1005,6 +1072,12 @@ pub struct ExecStats {
     /// Bytes served from this executable's buffer pool instead of fresh
     /// allocations, cumulative over executions.
     pub bytes_reused: u64,
+    /// Static per-execution kernel cost estimate: element-ops summed over
+    /// the program's instructions (matmul counts `batch*m*n*k`, fused loops
+    /// `elems * expr_len`, everything else its output element count).
+    /// 0 for the interpreter. Deterministic — a compile-time property of the
+    /// program, so schedulers can key decisions on it.
+    pub kernel_cost: u64,
 }
 
 // ---------------------------------------------------------------------------

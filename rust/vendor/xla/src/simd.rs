@@ -1,0 +1,158 @@
+//! Explicit-width 8-lane f32 blocks for the bytecode backend's kernels.
+//!
+//! The vectorization contract mirrors the PR 5 threading contract: lanes
+//! cover **adjacent output elements only**. Every lane runs exactly the
+//! scalar kernel's per-element computation, in the scalar kernel's order —
+//! a wide op is legal here only when it is bit-identical to applying the
+//! scalar op per lane. That holds for IEEE-754 add/sub/mul/div (the AVX
+//! `_mm256_{add,sub,mul,div}_ps` instructions are correctly-rounded
+//! per-lane, exactly like Rust's scalar `f32` ops), so only those four get
+//! hardware paths. Everything else — transcendentals, min/max (whose AVX
+//! NaN/±0 semantics differ from `f32::max`/`f32::min`), comparisons —
+//! routes through [`F32x8::map`]/[`F32x8::zip`], which call the *same*
+//! scalar `fn` tables the interpreter oracle uses, per lane. No FMA
+//! anywhere: the scalar kernels compute `acc + x * b` as two roundings and
+//! a fused multiply-add would not be bit-identical.
+//!
+//! On non-x86_64 targets (or x86_64 without AVX at runtime) the four
+//! arithmetic ops fall back to per-lane scalar loops — same values, since
+//! the hardware path was only ever an encoding of the same IEEE operation.
+
+pub(crate) const LANES: usize = 8;
+
+/// An 8-lane block of `f32` output elements.
+#[derive(Clone, Copy)]
+pub(crate) struct F32x8(pub [f32; LANES]);
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use std::sync::OnceLock;
+
+    pub fn available() -> bool {
+        static AVAILABLE: OnceLock<bool> = OnceLock::new();
+        *AVAILABLE.get_or_init(|| is_x86_feature_detected!("avx"))
+    }
+
+    macro_rules! avx_binop {
+        ($name:ident, $intr:ident) => {
+            /// # Safety
+            /// Caller must have checked [`available`].
+            #[target_feature(enable = "avx")]
+            pub unsafe fn $name(a: &[f32; 8], b: &[f32; 8]) -> [f32; 8] {
+                use std::arch::x86_64::*;
+                let va = _mm256_loadu_ps(a.as_ptr());
+                let vb = _mm256_loadu_ps(b.as_ptr());
+                let mut out = [0f32; 8];
+                _mm256_storeu_ps(out.as_mut_ptr(), $intr(va, vb));
+                out
+            }
+        };
+    }
+
+    avx_binop!(add, _mm256_add_ps);
+    avx_binop!(sub, _mm256_sub_ps);
+    avx_binop!(mul, _mm256_mul_ps);
+    avx_binop!(div, _mm256_div_ps);
+}
+
+macro_rules! lanewise_binop {
+    ($name:ident, $op:tt) => {
+        #[inline]
+        pub fn $name(self, rhs: F32x8) -> F32x8 {
+            #[cfg(target_arch = "x86_64")]
+            if avx::available() {
+                // SAFETY: AVX support was runtime-checked.
+                return F32x8(unsafe { avx::$name(&self.0, &rhs.0) });
+            }
+            let mut out = [0f32; LANES];
+            for l in 0..LANES {
+                out[l] = self.0[l] $op rhs.0[l];
+            }
+            F32x8(out)
+        }
+    };
+}
+
+impl F32x8 {
+    #[inline]
+    pub fn splat(x: f32) -> F32x8 {
+        F32x8([x; LANES])
+    }
+
+    /// Load 8 adjacent elements; `s` must have at least `LANES` elements.
+    #[inline]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut out = [0f32; LANES];
+        out.copy_from_slice(&s[..LANES]);
+        F32x8(out)
+    }
+
+    /// Store into 8 adjacent output slots.
+    #[inline]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    lanewise_binop!(add, +);
+    lanewise_binop!(sub, -);
+    lanewise_binop!(mul, *);
+    lanewise_binop!(div, /);
+
+    /// Apply the scalar op table's unary fn per lane (bit-identity by
+    /// construction: it is the oracle's own fn).
+    #[inline]
+    pub fn map(self, f: fn(f32) -> f32) -> F32x8 {
+        let mut out = [0f32; LANES];
+        for l in 0..LANES {
+            out[l] = f(self.0[l]);
+        }
+        F32x8(out)
+    }
+
+    /// Apply the scalar op table's binary fn per lane.
+    #[inline]
+    pub fn zip(self, rhs: F32x8, f: fn(f32, f32) -> f32) -> F32x8 {
+        let mut out = [0f32; LANES];
+        for l in 0..LANES {
+            out[l] = f(self.0[l], rhs.0[l]);
+        }
+        F32x8(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wide_arith_matches_scalar_bitwise() {
+        let a = F32x8([1.5, -0.0, f32::INFINITY, 1e-38, 3.25, -7.5, 0.1, 2.0]);
+        let b = F32x8([2.5, 4.0, -1.0, 3e-39, 0.3, -0.2, 0.7, -2.0]);
+        let cases: [(fn(F32x8, F32x8) -> F32x8, fn(f32, f32) -> f32); 4] = [
+            (F32x8::add, |x, y| x + y),
+            (F32x8::sub, |x, y| x - y),
+            (F32x8::mul, |x, y| x * y),
+            (F32x8::div, |x, y| x / y),
+        ];
+        for (wide, scalar) in cases {
+            let w = wide(a, b);
+            for l in 0..LANES {
+                assert_eq!(
+                    w.0[l].to_bits(),
+                    scalar(a.0[l], b.0[l]).to_bits(),
+                    "lane {l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut dst = vec![0f32; 10];
+        F32x8::load(&src[1..]).store(&mut dst[1..]);
+        assert_eq!(&dst[1..9], &src[1..9]);
+        assert_eq!(dst[0], 0.0);
+        assert_eq!(dst[9], 0.0);
+    }
+}

@@ -433,6 +433,103 @@ fn shim_threads_env_values_are_strictly_validated() {
 }
 
 #[test]
+fn shim_simd_env_values_are_strictly_validated() {
+    // The pure parser behind the env knob: junk is a hard error (the env
+    // var itself is process-global, so tests do not mutate it).
+    assert!(parse_shim_simd("on").unwrap());
+    assert!(parse_shim_simd(" TRUE ").unwrap());
+    assert!(parse_shim_simd("1").unwrap());
+    assert!(!parse_shim_simd("off").unwrap());
+    assert!(!parse_shim_simd("False").unwrap());
+    assert!(!parse_shim_simd("0").unwrap());
+    assert!(parse_shim_simd("yes").is_err());
+    assert!(parse_shim_simd("2").is_err());
+    assert!(parse_shim_simd("").is_err());
+}
+
+#[test]
+fn simd_execution_is_bit_identical_to_scalar_and_oracle() {
+    // SIMD on/off × threads {1, 4} must agree bitwise with each other and
+    // with the interpreter oracle across every SIMD-path kernel (fused
+    // chain, softmax, matmul, reduce — odd sizes force scalar tails).
+    let _g = THREADS_LOCK.lock().unwrap();
+    let b = XlaBuilder::new("simdcorpus");
+    let x = b.parameter(0, ElementType::F32, &[67, 93], "x").unwrap();
+    let w = b.parameter(1, ElementType::F32, &[93, 61], "w").unwrap();
+    let c = b.c0(0.35f32).unwrap();
+    let chain = x.mul_(&c).unwrap().tanh().unwrap().add_(&x).unwrap().logistic().unwrap();
+    let sm = chain.softmax(0).unwrap();
+    let mm = sm.matmul(&w).unwrap();
+    let red = mm.reduce_sum(&[0], false).unwrap();
+    let mx = mm.reduce_max(&[1], true).unwrap();
+    let root = b.tuple(&[mm, red, mx]).unwrap();
+    let comp = b.build(&root).unwrap();
+    let xs: Vec<f32> = (0..67 * 93).map(|i| ((i % 41) as f32 - 20.0) * 0.09).collect();
+    let ws: Vec<f32> = (0..93 * 61).map(|i| ((i * 17 % 31) as f32 - 15.0) * 0.05).collect();
+    let args = [&buf(&xs, &[67, 93]), &buf(&ws, &[93, 61])];
+    let oracle = run_on(ShimBackend::Interp, &comp, &args);
+    let mut runs = Vec::new();
+    for simd in [false, true] {
+        set_shim_simd(Some(simd));
+        for threads in [1usize, 4] {
+            set_shim_threads(threads);
+            runs.push(run_on(ShimBackend::Bytecode, &comp, &args));
+        }
+    }
+    set_shim_simd(None);
+    set_shim_threads(0);
+    for run in &runs {
+        assert_eq!(run.len(), oracle.len());
+        for (o, r) in oracle.iter().zip(run.iter()) {
+            assert_bits_eq(o, r);
+        }
+    }
+}
+
+#[test]
+fn simd_dispatch_and_tails_are_counted() {
+    let _g = THREADS_LOCK.lock().unwrap();
+    set_shim_simd(Some(true));
+    set_shim_threads(1);
+    let before = shim_totals();
+    let b = XlaBuilder::new("simdcount");
+    // 67 is not a multiple of the lane width: every row leaves a tail.
+    let x = b.parameter(0, ElementType::F32, &[67], "x").unwrap();
+    let y = x.tanh().unwrap().neg().unwrap().exp().unwrap();
+    let comp = b.build(&y).unwrap();
+    let data: Vec<f32> = (0..67).map(|i| (i as f32) * 0.01 - 0.3).collect();
+    let _ = run_on(ShimBackend::Bytecode, &comp, &[&buf(&data, &[67])]);
+    let mid = shim_totals();
+    set_shim_simd(None);
+    set_shim_threads(0);
+    // Counters are process-global and other tests bump them concurrently,
+    // so only monotone (>=) properties are assertable here.
+    assert!(
+        mid.simd_loops > before.simd_loops,
+        "expected a SIMD kernel dispatch: {before:?} -> {mid:?}"
+    );
+    assert!(
+        mid.scalar_tail_elems >= before.scalar_tail_elems + 3,
+        "expected 67 % 8 = 3 tail elements: {before:?} -> {mid:?}"
+    );
+}
+
+#[test]
+fn transpose_layout_copies_are_counted_at_compile() {
+    let before = shim_totals();
+    let b = XlaBuilder::new("layoutcount");
+    let x = b.parameter(0, ElementType::F32, &[4, 5], "x").unwrap();
+    let t = x.transpose(&[1, 0]).unwrap().transpose(&[1, 0]).unwrap();
+    let comp = b.build(&t).unwrap();
+    let _ = client().compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
+    let after = shim_totals();
+    assert!(
+        after.layout_copies_inserted >= before.layout_copies_inserted + 2,
+        "each lowered transpose is one strided copy: {before:?} -> {after:?}"
+    );
+}
+
+#[test]
 fn private_rng_streams_do_not_interleave() {
     // Global-stream quiescence is asserted below, so serialize against the
     // tests that draw from it.
