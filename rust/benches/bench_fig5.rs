@@ -110,6 +110,17 @@ fn main() {
                                 ("steps_cancelled_delta", num(bd.steps_cancelled)),
                                 ("steps_saved_by_split_delta", num(bd.steps_saved_by_split)),
                                 ("sites_overflowed", num(st.sites_overflowed)),
+                                // Fault isolation: injected faults, panics
+                                // contained, watchdog expiries, plans pinned
+                                // to eager, and steps replayed imperatively
+                                // (measured-window deltas except the
+                                // quarantine gauge). All zero on a healthy
+                                // run with no TERRA_FAULTS schedule.
+                                ("faults_injected_delta", num(bd.faults_injected)),
+                                ("panics_recovered_delta", num(bd.panics_recovered)),
+                                ("watchdog_timeouts_delta", num(bd.watchdog_timeouts)),
+                                ("plans_quarantined", num(st.plans_quarantined)),
+                                ("degraded_steps_delta", num(bd.degraded_steps)),
                             ]),
                         ));
                     }

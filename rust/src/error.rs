@@ -37,6 +37,74 @@ impl std::fmt::Display for ConvertFailure {
     }
 }
 
+/// Where in the symbolic pipeline a contained fault originated. The stage
+/// determines which rung of the degradation ladder handles it: plan-side
+/// stages (`PlanBuild`) strike the plan before it ever runs, runner-side
+/// stages (`SegmentExec`, `Watchdog`, `Channel`) cancel the in-flight
+/// co-execution phase and replay the uncommitted iterations imperatively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultStage {
+    /// Optimizer pipeline, plan generation or segment compilation panicked
+    /// or was injected with a fault (engine-side, before any runner spawn).
+    PlanBuild,
+    /// A GraphRunner iteration panicked or returned an injected fault.
+    SegmentExec,
+    /// The watchdog deadline (`TERRA_SYMBOLIC_TIMEOUT_MS`) expired while
+    /// waiting on the symbolic side.
+    Watchdog,
+    /// A co-execution channel failed structurally (poisoned lock recovered
+    /// into an inconsistent state, mailbox fault injection, ...).
+    Channel,
+}
+
+impl std::fmt::Display for FaultStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultStage::PlanBuild => "plan-build",
+            FaultStage::SegmentExec => "segment-exec",
+            FaultStage::Watchdog => "watchdog",
+            FaultStage::Channel => "channel",
+        })
+    }
+}
+
+/// A contained symbolic-side failure: a panic caught at an isolation
+/// boundary, an injected fault, or a watchdog expiry. Faults never abort the
+/// process — they route through the engine's fallback machinery
+/// (`runner/coexec.rs`) so the iteration replays imperatively, and they
+/// strike the plan in the quarantine registry (`speculate/plancache.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SymbolicFault {
+    pub stage: FaultStage,
+    /// Panic payload / error text / injected-fault description.
+    pub message: String,
+    /// True when the fault came from a caught panic (as opposed to an error
+    /// return or a timeout) — surfaced in stats as `panics_recovered`.
+    pub panicked: bool,
+}
+
+impl SymbolicFault {
+    pub fn panic(stage: FaultStage, payload: &(dyn std::any::Any + Send)) -> Self {
+        let message = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        SymbolicFault { stage, message, panicked: true }
+    }
+
+    pub fn error(stage: FaultStage, message: impl Into<String>) -> Self {
+        SymbolicFault { stage, message: message.into(), panicked: false }
+    }
+}
+
+impl std::fmt::Display for SymbolicFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.panicked { "panic" } else { "error" };
+        write!(f, "symbolic fault at {} ({kind}): {}", self.stage, self.message)
+    }
+}
+
 /// Top-level error type for all Terra subsystems.
 #[derive(Debug)]
 pub enum TerraError {
@@ -55,6 +123,10 @@ pub enum TerraError {
     Diverged(String),
     /// Co-execution channel cancelled (GraphRunner shutdown path).
     Cancelled,
+    /// A contained symbolic-side failure (panic, injected fault, watchdog
+    /// expiry). Handled by the engine's fault-fallback path; reaching the
+    /// caller means containment itself failed.
+    Fault(SymbolicFault),
     Config(String),
     Xla(xla::Error),
     Io(std::io::Error),
@@ -74,6 +146,7 @@ impl std::fmt::Display for TerraError {
             TerraError::CoExec(m) => write!(f, "co-execution error: {m}"),
             TerraError::Diverged(m) => write!(f, "trace diverged: {m}"),
             TerraError::Cancelled => write!(f, "co-execution cancelled"),
+            TerraError::Fault(fault) => write!(f, "{fault}"),
             TerraError::Config(m) => write!(f, "config error: {m}"),
             TerraError::Xla(e) => write!(f, "{e}"),
             TerraError::Io(e) => write!(f, "{e}"),
@@ -100,6 +173,12 @@ impl From<xla::Error> for TerraError {
 impl From<std::io::Error> for TerraError {
     fn from(e: std::io::Error) -> Self {
         TerraError::Io(e)
+    }
+}
+
+impl From<SymbolicFault> for TerraError {
+    fn from(fault: SymbolicFault) -> Self {
+        TerraError::Fault(fault)
     }
 }
 

@@ -1,0 +1,435 @@
+//! Deterministic fault injection for the symbolic side (`TERRA_FAULTS`).
+//!
+//! The fault-isolation contract — any symbolic-side panic, error or hang
+//! degrades to imperative execution, never a process abort — is only
+//! trustworthy if it is *exercised*. This module parses a fault schedule
+//! from the environment and exposes cheap check hooks the engine and the
+//! GraphRunner consult at the four symbolic choke points:
+//!
+//! | site           | hook location                                        |
+//! |----------------|------------------------------------------------------|
+//! | `compile`      | `Engine::build_plan` (optimizer + plangen + compile) |
+//! | `segment_exec` | `GraphRunner::run_iteration`, before the step loop   |
+//! | `worker`       | vendored shim worker pool, per claimed chunk         |
+//! | `mailbox`      | `GraphRunner::run_iteration`, before a fetch `put`   |
+//!
+//! Schedule grammar (rules separated by `;`):
+//!
+//! ```text
+//! TERRA_FAULTS = rule (';' rule)*
+//! rule         = site ':' kind [':' trigger (',' trigger)*]
+//! site         = 'compile' | 'segment_exec' | 'worker' | 'mailbox'
+//! kind         = 'panic' | 'error' | 'hang' | '*'        (* = panic)
+//! trigger      = 'iter=' N | 'chunk=' N | 'every=' N | 'p=' F
+//! ```
+//!
+//! e.g. `compile:*:iter=2;segment_exec:panic:iter=5;worker:panic:chunk=3`.
+//!
+//! Occurrence counting is 1-based per site: `iter=N` fires on the Nth check
+//! at that site over the plan's lifetime (once), `every=N` on every Nth, no
+//! trigger on every check. `p=F` thins whatever the trigger selected with a
+//! per-rule splitmix64 stream seeded from `TERRA_FAULTS_SEED` (default 0) —
+//! seeded determinism: the same schedule, seed and program fault at the
+//! same points on every run. `chunk=N` is exclusive to the `worker` site:
+//! the shim's pool hook (armed by the GraphRunner around each segment
+//! execution) panics the worker closure claiming the Nth chunk, exercising
+//! the pool's own panic containment rather than a hook above it.
+//!
+//! `hang` is only meaningful where a watchdog can observe it
+//! (`segment_exec`, `mailbox`); the runner implements it as a cancellable
+//! sleep so an engine-side cancel (watchdog or shutdown) still reclaims the
+//! thread. `hang` on `compile` is rejected at parse time: plan build runs on
+//! the engine thread, where a hang would stall the program with no one left
+//! to cancel it.
+//!
+//! Malformed schedules are a loud [`TerraError::Config`] naming
+//! `TERRA_FAULTS` (same strictness contract as every other knob in
+//! `config/env.rs`); absence means no injection and zero overhead beyond an
+//! `Option` check.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Result, TerraError};
+
+/// Injection sites (indices into the per-site occurrence counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    Compile,
+    SegmentExec,
+    Worker,
+    Mailbox,
+}
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Compile => 0,
+            FaultSite::SegmentExec => 1,
+            FaultSite::Worker => 2,
+            FaultSite::Mailbox => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Compile => "compile",
+            FaultSite::SegmentExec => "segment_exec",
+            FaultSite::Worker => "worker",
+            FaultSite::Mailbox => "mailbox",
+        }
+    }
+}
+
+/// What an armed hook does when its rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the hook (exercises the `catch_unwind` boundaries).
+    Panic,
+    /// Return a structured fault error (exercises the error routing).
+    Error,
+    /// Block until cancelled (exercises the watchdog).
+    Hang,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// Fire on exactly the Nth occurrence (1-based), once.
+    Nth(u64),
+    /// Fire on every Nth occurrence.
+    Every(u64),
+    /// Fire on every occurrence (subject to `p`, if any).
+    Always,
+}
+
+#[derive(Debug)]
+struct FaultRule {
+    site: FaultSite,
+    kind: FaultKind,
+    trigger: Trigger,
+    /// `chunk=N` payload (worker rules only).
+    chunk: Option<u64>,
+    /// Probabilistic thinning: `(p, splitmix64 state)`.
+    prob: Option<(f64, AtomicU64)>,
+}
+
+impl FaultRule {
+    /// Does this rule fire at the given 1-based occurrence?
+    fn fires(&self, occurrence: u64) -> bool {
+        let triggered = match self.trigger {
+            Trigger::Nth(n) => occurrence == n,
+            Trigger::Every(n) => occurrence % n == 0,
+            Trigger::Always => true,
+        };
+        if !triggered {
+            return false;
+        }
+        match &self.prob {
+            None => true,
+            Some((p, state)) => {
+                let draw = state
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                        Some(s.wrapping_add(0x9E37_79B9_7F4A_7C15))
+                    })
+                    .map(|prev| splitmix64_mix(prev.wrapping_add(0x9E37_79B9_7F4A_7C15)))
+                    .unwrap_or(0);
+                // Map the draw onto [0, 1): 53 bits of mantissa, like a
+                // standard uniform double construction.
+                let unit = (draw >> 11) as f64 / (1u64 << 53) as f64;
+                unit < *p
+            }
+        }
+    }
+}
+
+fn splitmix64_mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A parsed, armed fault schedule. Shared (`Arc`) between the engine and
+/// its GraphRunner threads; all state is atomic, so checks are lock-free.
+#[derive(Debug)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    /// Per-site occurrence counters (1-based after increment).
+    counts: [AtomicU64; 4],
+    /// Faults this plan has injected (worker-chunk faults are folded in by
+    /// the GraphRunner via [`note_injected`](FaultPlan::note_injected)).
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `TERRA_FAULTS` schedule. `seed` drives the `p=` streams.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let bad = |detail: String| TerraError::Config(format!("TERRA_FAULTS: {detail}"));
+        let mut rules = Vec::new();
+        for (idx, rule_str) in
+            spec.split(';').map(str::trim).filter(|r| !r.is_empty()).enumerate()
+        {
+            let mut parts = rule_str.splitn(3, ':');
+            let site = match parts.next().unwrap_or("").trim() {
+                "compile" => FaultSite::Compile,
+                "segment_exec" => FaultSite::SegmentExec,
+                "worker" => FaultSite::Worker,
+                "mailbox" => FaultSite::Mailbox,
+                other => {
+                    return Err(bad(format!(
+                        "unknown site '{other}' in '{rule_str}' \
+                         (expected compile | segment_exec | worker | mailbox)"
+                    )))
+                }
+            };
+            let kind = match parts.next().map(str::trim) {
+                Some("panic") | Some("*") => FaultKind::Panic,
+                Some("error") => FaultKind::Error,
+                Some("hang") => FaultKind::Hang,
+                Some(other) => {
+                    return Err(bad(format!(
+                        "unknown kind '{other}' in '{rule_str}' \
+                         (expected panic | error | hang | *)"
+                    )))
+                }
+                None => {
+                    return Err(bad(format!("rule '{rule_str}' is missing its kind")))
+                }
+            };
+            if kind == FaultKind::Hang && site == FaultSite::Compile {
+                return Err(bad(format!(
+                    "'{rule_str}': hang is not injectable at compile (plan \
+                     build runs on the engine thread, nothing could cancel it)"
+                )));
+            }
+            if kind == FaultKind::Hang && site == FaultSite::Worker {
+                return Err(bad(format!(
+                    "'{rule_str}': worker faults are chunk panics only"
+                )));
+            }
+            let mut trigger = Trigger::Always;
+            let mut chunk = None;
+            let mut prob = None;
+            if let Some(trigger_str) = parts.next() {
+                for t in trigger_str.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+                    let (key, value) = t.split_once('=').ok_or_else(|| {
+                        bad(format!(
+                            "trigger '{t}' in '{rule_str}' is not key=value"
+                        ))
+                    })?;
+                    let num = |v: &str| -> Result<u64> {
+                        v.trim().parse::<u64>().map_err(|_| {
+                            bad(format!("trigger '{t}' in '{rule_str}': '{v}' is not a number"))
+                        })
+                    };
+                    match key.trim() {
+                        "iter" => {
+                            let n = num(value)?;
+                            if n == 0 {
+                                return Err(bad(format!(
+                                    "trigger '{t}' in '{rule_str}': occurrences are 1-based"
+                                )));
+                            }
+                            trigger = Trigger::Nth(n);
+                        }
+                        "every" => {
+                            let n = num(value)?;
+                            if n == 0 {
+                                return Err(bad(format!(
+                                    "trigger '{t}' in '{rule_str}': every=0 is meaningless"
+                                )));
+                            }
+                            trigger = Trigger::Every(n);
+                        }
+                        "chunk" => chunk = Some(num(value)?),
+                        "p" => {
+                            let p: f64 = value.trim().parse().map_err(|_| {
+                                bad(format!(
+                                    "trigger '{t}' in '{rule_str}': '{value}' is not a probability"
+                                ))
+                            })?;
+                            if !(0.0..=1.0).contains(&p) {
+                                return Err(bad(format!(
+                                    "trigger '{t}' in '{rule_str}': p must be in [0, 1]"
+                                )));
+                            }
+                            // Per-rule stream: the seed offset by the rule
+                            // index keeps rules independent but reproducible.
+                            let state = splitmix64_mix(seed ^ (idx as u64).wrapping_mul(0xA5A5));
+                            prob = Some((p, AtomicU64::new(state)));
+                        }
+                        other => {
+                            return Err(bad(format!(
+                                "unknown trigger '{other}' in '{rule_str}' \
+                                 (expected iter= | chunk= | every= | p=)"
+                            )))
+                        }
+                    }
+                }
+            }
+            if (site == FaultSite::Worker) != chunk.is_some() {
+                return Err(bad(format!(
+                    "'{rule_str}': chunk= is required for worker rules and \
+                     invalid everywhere else"
+                )));
+            }
+            rules.push(FaultRule { site, kind, trigger, chunk, prob });
+        }
+        if rules.is_empty() {
+            return Err(bad("empty schedule (unset the variable to disable injection)".into()));
+        }
+        Ok(FaultPlan {
+            rules,
+            counts: Default::default(),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    /// Build the process fault plan from `TERRA_FAULTS` /
+    /// `TERRA_FAULTS_SEED`: `Ok(None)` when unset, strict errors on junk.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        let spec = match std::env::var("TERRA_FAULTS") {
+            Ok(v) => v,
+            Err(std::env::VarError::NotPresent) => return Ok(None),
+            Err(e) => return Err(TerraError::Config(format!("TERRA_FAULTS: {e}"))),
+        };
+        let seed = crate::config::env::parse_env::<u64>("TERRA_FAULTS_SEED")?.unwrap_or(0);
+        FaultPlan::parse(&spec, seed).map(|p| Some(Arc::new(p)))
+    }
+
+    /// Record one occurrence at `site` and report the fault to inject, if
+    /// any. First matching rule wins. `Worker` occurrences are counted by
+    /// the shim's own chunk hook, never through here.
+    pub fn check(&self, site: FaultSite) -> Option<FaultKind> {
+        debug_assert_ne!(site, FaultSite::Worker, "worker faults go through the shim hook");
+        let occurrence = self.counts[site.index()].fetch_add(1, Ordering::Relaxed) + 1;
+        for rule in self.rules.iter().filter(|r| r.site == site) {
+            if rule.fires(occurrence) {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Some(rule.kind);
+            }
+        }
+        None
+    }
+
+    /// The chunk ordinal at which the shim's worker hook should panic for
+    /// the *next* segment execution, if a worker rule fires for it. Each
+    /// call counts one `worker` occurrence (the GraphRunner calls this once
+    /// per segment execution when arming `xla::set_chunk_fault`), so
+    /// `iter=`/`every=`/`p=` triggers select *which* executions are armed.
+    /// The injected total is counted by the shim hook itself and folded in
+    /// via [`note_injected`](FaultPlan::note_injected), not here.
+    pub fn worker_chunk_fault(&self) -> Option<u64> {
+        if !self.rules.iter().any(|r| r.site == FaultSite::Worker) {
+            return None;
+        }
+        let occurrence = self.counts[FaultSite::Worker.index()].fetch_add(1, Ordering::Relaxed) + 1;
+        self.rules
+            .iter()
+            .filter(|r| r.site == FaultSite::Worker)
+            .find(|r| r.fires(occurrence))
+            .and_then(|r| r.chunk)
+    }
+
+    /// Faults injected so far (shim-side chunk faults included once the
+    /// GraphRunner folds them in).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Fold externally counted injections (the shim's chunk faults) into
+    /// this plan's total.
+    pub fn note_injected(&self, n: u64) {
+        if n > 0 {
+            self.injected.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let plan =
+            FaultPlan::parse("compile:*:iter=2;segment_exec:panic:iter=5;worker:panic:chunk=3", 0)
+                .unwrap();
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(plan.worker_chunk_fault(), Some(3));
+        // compile fires on its 2nd occurrence only.
+        assert_eq!(plan.check(FaultSite::Compile), None);
+        assert_eq!(plan.check(FaultSite::Compile), Some(FaultKind::Panic));
+        assert_eq!(plan.check(FaultSite::Compile), None);
+        // segment_exec fires on its 5th occurrence only.
+        for _ in 0..4 {
+            assert_eq!(plan.check(FaultSite::SegmentExec), None);
+        }
+        assert_eq!(plan.check(FaultSite::SegmentExec), Some(FaultKind::Panic));
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn every_and_untriggered_rules() {
+        let plan = FaultPlan::parse("mailbox:error:every=3", 0).unwrap();
+        let fired: Vec<bool> =
+            (0..9).map(|_| plan.check(FaultSite::Mailbox).is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, true, false, false, true]);
+        let always = FaultPlan::parse("segment_exec:error", 0).unwrap();
+        assert_eq!(always.check(FaultSite::SegmentExec), Some(FaultKind::Error));
+        assert_eq!(always.check(FaultSite::SegmentExec), Some(FaultKind::Error));
+    }
+
+    #[test]
+    fn probabilistic_rules_are_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::parse("segment_exec:error:p=0.5", seed).unwrap();
+            (0..64).map(|_| plan.check(FaultSite::SegmentExec).is_some()).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed, same schedule");
+        assert_ne!(run(7), run(8), "different seeds diverge");
+        let fired = run(7).iter().filter(|f| **f).count();
+        assert!(fired > 8 && fired < 56, "p=0.5 should fire roughly half: {fired}");
+        // p=0 never fires, p=1 always fires.
+        let never = FaultPlan::parse("segment_exec:error:p=0", 1).unwrap();
+        assert!((0..32).all(|_| never.check(FaultSite::SegmentExec).is_none()));
+        let always = FaultPlan::parse("segment_exec:error:p=1", 1).unwrap();
+        assert!((0..32).all(|_| always.check(FaultSite::SegmentExec).is_some()));
+    }
+
+    #[test]
+    fn junk_schedules_are_loud_errors_naming_the_knob() {
+        for bad in [
+            "gpu:panic",                     // unknown site
+            "compile:explode",               // unknown kind
+            "compile",                       // missing kind
+            "compile:hang",                  // hang not injectable at compile
+            "worker:hang:chunk=1",           // worker faults are panics
+            "compile:panic:iter",            // trigger not key=value
+            "compile:panic:iter=abc",        // non-numeric
+            "compile:panic:when=3",          // unknown trigger
+            "compile:panic:every=0",         // meaningless period
+            "segment_exec:error:p=1.5",      // probability out of range
+            "segment_exec:error:p=x",        // probability junk
+            "worker:panic",                  // worker requires chunk=
+            "compile:panic:chunk=3",         // chunk= outside worker
+            "",                              // empty schedule
+            " ; ",                           // whitespace-only schedule
+        ] {
+            let e = FaultPlan::parse(bad, 0).unwrap_err();
+            let msg = e.to_string();
+            assert!(msg.contains("TERRA_FAULTS"), "error must name the knob: {msg} (for {bad:?})");
+        }
+    }
+
+    #[test]
+    fn first_matching_rule_wins_and_sites_are_independent() {
+        let plan =
+            FaultPlan::parse("segment_exec:error:iter=1;segment_exec:panic:iter=1", 0).unwrap();
+        assert_eq!(plan.check(FaultSite::SegmentExec), Some(FaultKind::Error));
+        // A compile check does not advance the segment_exec counter.
+        let plan2 = FaultPlan::parse("segment_exec:hang:iter=2;mailbox:panic:iter=1", 0).unwrap();
+        assert_eq!(plan2.check(FaultSite::SegmentExec), None);
+        assert_eq!(plan2.check(FaultSite::Mailbox), Some(FaultKind::Panic));
+        assert_eq!(plan2.check(FaultSite::SegmentExec), Some(FaultKind::Hang));
+    }
+}

@@ -22,6 +22,7 @@ pub mod config;
 pub mod data;
 pub mod eager;
 pub mod error;
+pub mod faults;
 pub mod graphgen;
 pub mod metrics;
 pub mod nn;
@@ -37,7 +38,7 @@ pub mod tensor;
 pub mod trace;
 pub mod tracegraph;
 
-pub use error::{ConvertFailure, Result, TerraError};
+pub use error::{ConvertFailure, FaultStage, Result, SymbolicFault, TerraError};
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {

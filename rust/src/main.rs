@@ -206,6 +206,14 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
         s.steps_cancelled,
         s.sites_overflowed,
     );
+    println!(
+        "faults: {} injected, {} panic(s) recovered, {} watchdog timeout(s), {} plan(s) quarantined, {} degraded step(s)",
+        s.faults_injected,
+        s.panics_recovered,
+        s.watchdog_timeouts,
+        s.plans_quarantined,
+        s.degraded_steps,
+    );
 }
 
 fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {

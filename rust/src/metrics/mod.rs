@@ -89,6 +89,22 @@ pub struct BreakdownSnapshot {
     /// Fallbacks the divergence profiler could not attribute because its
     /// per-site map was saturated.
     pub sites_overflowed: u64,
+    /// Faults injected by the `TERRA_FAULTS` harness (delta after
+    /// [`BreakdownSnapshot::per_step_since`]; 0 outside fault testing).
+    pub faults_injected: u64,
+    /// Symbolic-side panics caught by a `catch_unwind` boundary and
+    /// converted into structured faults (runner iterations + plan builds).
+    pub panics_recovered: u64,
+    /// Symbolic steps abandoned because the watchdog deadline
+    /// (`TERRA_SYMBOLIC_TIMEOUT_MS`) expired.
+    pub watchdog_timeouts: u64,
+    /// Plans pinned to eager execution after `TERRA_PLAN_MAX_FAULTS`
+    /// strikes (gauge of this engine's quarantine events — carried through
+    /// `per_step_since` as a delta like the other counters).
+    pub plans_quarantined: u64,
+    /// Steps that completed on a degraded rung of the fault ladder
+    /// (imperative replay after a symbolic fault).
+    pub degraded_steps: u64,
 }
 
 impl Breakdown {
@@ -148,6 +164,11 @@ impl Breakdown {
             steps_cancelled: 0,
             steps_saved_by_split: 0,
             sites_overflowed: 0,
+            faults_injected: 0,
+            panics_recovered: 0,
+            watchdog_timeouts: 0,
+            plans_quarantined: 0,
+            degraded_steps: 0,
         }
     }
 }
@@ -196,6 +217,11 @@ impl BreakdownSnapshot {
                 .steps_saved_by_split
                 .saturating_sub(earlier.steps_saved_by_split),
             sites_overflowed: self.sites_overflowed.saturating_sub(earlier.sites_overflowed),
+            faults_injected: self.faults_injected.saturating_sub(earlier.faults_injected),
+            panics_recovered: self.panics_recovered.saturating_sub(earlier.panics_recovered),
+            watchdog_timeouts: self.watchdog_timeouts.saturating_sub(earlier.watchdog_timeouts),
+            plans_quarantined: self.plans_quarantined.saturating_sub(earlier.plans_quarantined),
+            degraded_steps: self.degraded_steps.saturating_sub(earlier.degraded_steps),
         }
     }
 }

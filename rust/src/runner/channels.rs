@@ -2,11 +2,12 @@
 
 use crate::error::TerraError;
 use crate::metrics::Breakdown;
-use crate::runner::mailbox::{Gate, Mailbox, Semaphore};
+use crate::runner::mailbox::{lock_recover, Gate, Mailbox, Semaphore};
 use crate::symbolic::MessageNodes;
 use crate::tensor::HostTensor;
 use crate::tracegraph::NodeId;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Shared communication state for one co-execution phase.
 ///
@@ -30,6 +31,12 @@ pub struct CoExecChannels {
     pub allowance: Semaphore,
     pub lazy_gate: Option<Gate>,
     pub breakdown: Arc<Breakdown>,
+    /// Watchdog deadline for blocking on symbolic progress
+    /// (`TERRA_SYMBOLIC_TIMEOUT_MS`): the skeleton's fetch rendezvous and
+    /// the engine's commit-progress gate wait at most this long before the
+    /// step is treated as a symbolic fault and replayed imperatively.
+    /// `None` = watchdog off (the default).
+    pub watchdog: Option<Duration>,
     /// Partial-cancel bookkeeping: `(iteration, step limit)` set by a
     /// divergence fallback whose site aligned with a segment boundary. The
     /// GraphRunner checks it before every top-level plan step, so the
@@ -42,7 +49,12 @@ pub struct CoExecChannels {
 pub const ITER_TOKEN: NodeId = NodeId(usize::MAX);
 
 impl CoExecChannels {
-    pub fn new(lazy: bool, max_run_ahead: i64, breakdown: Arc<Breakdown>) -> Arc<Self> {
+    pub fn new(
+        lazy: bool,
+        max_run_ahead: i64,
+        breakdown: Arc<Breakdown>,
+        watchdog: Option<Duration>,
+    ) -> Arc<Self> {
         Arc::new(CoExecChannels {
             feeds: Mailbox::new(),
             fetches: Mailbox::new(),
@@ -52,6 +64,7 @@ impl CoExecChannels {
             allowance: Semaphore::new(max_run_ahead),
             lazy_gate: if lazy { Some(Gate::new()) } else { None },
             breakdown,
+            watchdog,
             truncation: Mutex::new(None),
         })
     }
@@ -68,7 +81,7 @@ impl CoExecChannels {
     /// replays the whole step imperatively), it only completes the prefix
     /// whose results the PythonRunner already consumed.
     pub fn cancel_downstream(&self, iter: u64, limit: usize, downstream: &MessageNodes) {
-        *self.truncation.lock().unwrap() = Some((iter, limit));
+        *lock_recover(&self.truncation) = Some((iter, limit));
         self.feeds.cancel_keys(iter, &downstream.feeds);
         self.cases.cancel_keys(iter, &downstream.cases);
         self.variants.cancel_keys(iter, &downstream.variants);
@@ -79,7 +92,7 @@ impl CoExecChannels {
     /// May the GraphRunner execute top-level plan step `idx` of `iter`?
     /// Returns `Cancelled` past a truncation boundary.
     pub fn step_allowed(&self, iter: u64, idx: usize) -> Result<(), TerraError> {
-        if let Some((t_iter, limit)) = *self.truncation.lock().unwrap() {
+        if let Some((t_iter, limit)) = *lock_recover(&self.truncation) {
             if iter > t_iter || (iter == t_iter && idx >= limit) {
                 return Err(TerraError::Cancelled);
             }
@@ -95,7 +108,7 @@ impl CoExecChannels {
     /// truncation lands instead finishes its in-flight prefix and is stopped
     /// at the boundary by [`CoExecChannels::step_allowed`].
     pub fn iteration_allowed(&self, iter: u64) -> Result<(), TerraError> {
-        if let Some((t_iter, _)) = *self.truncation.lock().unwrap() {
+        if let Some((t_iter, _)) = *lock_recover(&self.truncation) {
             if iter >= t_iter {
                 return Err(TerraError::Cancelled);
             }
@@ -125,6 +138,14 @@ impl CoExecChannels {
             + self.cases.dropped()
             + self.variants.dropped()
             + self.commits.dropped()
+    }
+
+    /// Has iteration `from` been cancelled? (Any of the full-channel-set
+    /// cancellations — fallback, fault fallback, shutdown — cancel the
+    /// fetches mailbox, so it is the representative probe.) Polled by
+    /// injected hang faults in the GraphRunner.
+    pub fn is_cancelled(&self, from: u64) -> bool {
+        self.fetches.is_cancelled(from)
     }
 
     /// Cancel everything from iteration `from` onward and wake all waiters.

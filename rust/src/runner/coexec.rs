@@ -17,7 +17,8 @@
 use crate::api::{Backend, EagerBackend, Session, TracingBackend, VarStore};
 use crate::config::{default_opt_level, ExecMode};
 use crate::eager::EagerExecutor;
-use crate::error::{Result, TerraError};
+use crate::error::{FaultStage, Result, SymbolicFault, TerraError};
+use crate::faults::{FaultKind, FaultPlan, FaultSite};
 use crate::graphgen::{generate_plan, GenOptions};
 use crate::metrics::{Breakdown, BreakdownSnapshot, Throughput};
 use crate::opt::{ConstEvaluator, OptTotals, PassManager};
@@ -27,19 +28,40 @@ use crate::runner::graph_runner::GraphRunner;
 use crate::runner::skeleton::SkeletonBackend;
 use crate::runtime::{ArtifactStore, Client, ExecCache};
 use crate::speculate::{
-    graph_signature, parse_site_node, split_min_count, GraphSig, PlanCache, PlanKey,
-    ReentryController, ReentryPolicy, SpeculateConfig,
+    graph_signature, parse_site_node, split_min_count, GraphSig, PlanCache, PlanKey, Quarantine,
+    QuarantineVerdict, ReentryController, ReentryPolicy, SpeculateConfig,
 };
 use crate::symbolic::{compile_plan, validate_plan_artifacts, CompiledPlan};
 use crate::tensor::TensorType;
 use crate::tracegraph::{NodeId, TraceGraph};
-use crate::trace::VarId;
-use std::collections::{BTreeSet, HashMap};
+use crate::trace::{StateId, VarId};
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// How many iterations the PythonRunner may run ahead of the GraphRunner.
 const MAX_RUN_AHEAD: i64 = 2;
+
+/// Commit-gap bound: how many *validated-but-uncommitted* iterations the
+/// engine tolerates before blocking on the GraphRunner's commit progress
+/// (only enforced while the watchdog is armed — it is what bounds the
+/// imperative replay window after a fault). Distinct from `MAX_RUN_AHEAD`,
+/// which bounds how far the runner may trail the PythonRunner's
+/// `begin_step`s; this bounds how far *commits* may trail validation.
+const MAX_COMMIT_GAP: u64 = 4;
+
+/// Grace period granted to a cancelled-but-unresponsive GraphRunner thread
+/// before the engine abandons (detaches) it instead of joining.
+const DETACH_GRACE: Duration = Duration::from_millis(500);
+
+/// Watchdog deadline from `TERRA_SYMBOLIC_TIMEOUT_MS` (strict parse): unset
+/// or `0` = watchdog off.
+fn watchdog_from_env() -> Result<Option<Duration>> {
+    Ok(crate::config::env::parse_env::<u64>("TERRA_SYMBOLIC_TIMEOUT_MS")?
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis))
+}
 
 /// Engine-phase diagnostics, printed when `TERRA_DEBUG` is set (the crate has
 /// no external logging dependency).
@@ -118,6 +140,24 @@ pub struct EngineStats {
     /// site because its per-site map was saturated (a non-zero value means
     /// the profile under-reports — it must not read as "no divergence").
     pub sites_overflowed: u64,
+    /// Faults injected by the deterministic `TERRA_FAULTS` harness
+    /// (shim-side worker-chunk faults included); 0 outside fault testing.
+    pub faults_injected: u64,
+    /// Symbolic-side panics caught at a `catch_unwind` boundary (GraphRunner
+    /// iterations, plan builds) and converted into structured faults instead
+    /// of aborting the process.
+    pub panics_recovered: u64,
+    /// Symbolic waits abandoned because the `TERRA_SYMBOLIC_TIMEOUT_MS`
+    /// deadline expired (skeleton fetch rendezvous or commit-progress gate).
+    pub watchdog_timeouts: u64,
+    /// Plans this engine pinned to eager execution after
+    /// `TERRA_PLAN_MAX_FAULTS` strikes (quarantine events, counted once per
+    /// plan at the deciding strike).
+    pub plans_quarantined: u64,
+    /// Steps that completed on a degraded rung of the fault ladder: the
+    /// symbolic side faulted and the step (plus any validated-but-uncommitted
+    /// predecessors) was replayed imperatively.
+    pub degraded_steps: u64,
 }
 
 impl EngineStats {
@@ -199,6 +239,27 @@ pub struct Engine {
     stats: EngineStats,
     /// Host-state values baked at conversion (AutoGraph mode).
     baked: Arc<crate::baselines::BakedStates>,
+    /// Deterministic fault-injection schedule (`TERRA_FAULTS`); `None` = no
+    /// injection. Always `None` in AutoGraph mode (the baseline keeps seed
+    /// behaviour).
+    faults: Option<Arc<FaultPlan>>,
+    /// Per-plan fault registry: strikes, exponential backoff, and the
+    /// quarantined-eager terminal rung of the degradation ladder.
+    quarantine: Arc<Quarantine>,
+    /// Watchdog deadline for symbolic progress
+    /// (`TERRA_SYMBOLIC_TIMEOUT_MS`); `None` = off.
+    watchdog: Option<Duration>,
+    /// Plan-cache key of the current (most recent) co-execution entry, for
+    /// fault attribution: a symbolic fault strikes this key.
+    current_key: Option<PlanKey>,
+    /// Host-state snapshots taken at the start of each step whose iteration
+    /// the GraphRunner has not committed yet: the rewind points for the
+    /// fault fallback's imperative replay. Pruned as commits land; bounded
+    /// by the commit-progress gate while the watchdog is armed.
+    host_snapshots: VecDeque<(u64, HashMap<StateId, f32>)>,
+    /// True while the fault fallback replays uncommitted steps imperatively
+    /// (suppresses re-entry decisions until the replay finishes).
+    replaying: bool,
     /// Materialize the returned loss every N steps (0 = never).
     pub loss_every: u64,
 }
@@ -268,6 +329,13 @@ impl Engine {
         // reason it skips the plan cache: its re-conversion cost is part of
         // what the paper measures.
         let split_hot_sites = speculate.split_hot_sites && mode != ExecMode::AutoGraph;
+        // Fault isolation is a Terra-side contract: the AutoGraph baseline
+        // keeps its seed failure behaviour (the paper measures it).
+        let (faults, watchdog) = if mode == ExecMode::AutoGraph {
+            (None, None)
+        } else {
+            (FaultPlan::from_env()?, watchdog_from_env()?)
+        };
         Ok(Engine {
             sess,
             client,
@@ -293,8 +361,46 @@ impl Engine {
             breakdown: Arc::new(Breakdown::new()),
             stats: EngineStats::default(),
             baked,
+            faults,
+            quarantine: Quarantine::global().clone(),
+            watchdog,
+            current_key: None,
+            host_snapshots: VecDeque::new(),
+            replaying: false,
             loss_every: 1,
         })
+    }
+
+    /// Replace the fault-injection schedule (test harness: deterministic
+    /// injection without touching the process environment).
+    pub fn set_fault_plan(&mut self, faults: Option<Arc<FaultPlan>>) {
+        if self.mode != ExecMode::AutoGraph {
+            self.faults = faults;
+        }
+    }
+
+    /// The active fault-injection schedule, if any.
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
+    }
+
+    /// Replace the quarantine registry (test isolation: the default is
+    /// process-global, which cross-test strikes would pollute).
+    pub fn set_quarantine(&mut self, quarantine: Arc<Quarantine>) {
+        self.quarantine = quarantine;
+    }
+
+    /// The quarantine registry consulted before co-execution entries.
+    pub fn quarantine(&self) -> &Arc<Quarantine> {
+        &self.quarantine
+    }
+
+    /// Override the symbolic watchdog deadline (tests; `None` = off). The
+    /// AutoGraph baseline ignores it.
+    pub fn set_watchdog(&mut self, deadline: Option<Duration>) {
+        if self.mode != ExecMode::AutoGraph {
+            self.watchdog = deadline;
+        }
     }
 
     /// Run the program's step body plus the harness-side fetch of returned
@@ -326,7 +432,11 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats
+        let mut s = self.stats;
+        if let Some(f) = &self.faults {
+            s.faults_injected = f.injected();
+        }
+        s
     }
 
     /// The speculation re-entry controller (divergence profile, current
@@ -379,6 +489,11 @@ impl Engine {
         snap.steps_cancelled = self.stats.steps_cancelled;
         snap.steps_saved_by_split = self.stats.steps_saved_by_split;
         snap.sites_overflowed = self.stats.sites_overflowed;
+        snap.faults_injected = self.faults.as_ref().map_or(0, |f| f.injected());
+        snap.panics_recovered = self.stats.panics_recovered;
+        snap.watchdog_timeouts = self.stats.watchdog_timeouts;
+        snap.plans_quarantined = self.stats.plans_quarantined;
+        snap.degraded_steps = self.stats.degraded_steps;
     }
 
     fn var_types(&self) -> Result<HashMap<VarId, TensorType>> {
@@ -424,7 +539,22 @@ impl Engine {
             }
             Phase::Tracing => self.trace_step(prog, step),
             Phase::CoExec => {
+                // Fault containment is a Terra-mode contract; the AutoGraph
+                // baseline keeps the seed's fail-hard behaviour.
+                let contain = self.mode != ExecMode::AutoGraph;
+                if contain {
+                    // Commit-progress gate (watchdog-armed only): bound the
+                    // validated-but-uncommitted window so a fault can always
+                    // be repaired by a bounded imperative replay.
+                    if let Err(e) = self.commit_gate(step) {
+                        return self.fault_recover(prog, step, e, None);
+                    }
+                    self.prune_snapshots();
+                }
                 let host_snapshot = self.sess.snapshot_host_states();
+                if contain {
+                    self.host_snapshots.push_back((step, host_snapshot.clone()));
+                }
                 let t0 = Instant::now();
                 match self.exec_step(prog, step) {
                     Ok(loss) => {
@@ -432,6 +562,9 @@ impl Engine {
                         self.breakdown.add_step();
                         // Surface asynchronous GraphRunner failures.
                         if let Some(err) = self.runner.as_ref().and_then(|r| r.take_error()) {
+                            if contain {
+                                return self.fault_recover(prog, step, err, Some(loss));
+                            }
                             return Err(err);
                         }
                         Ok(loss)
@@ -450,9 +583,55 @@ impl Engine {
                         // Replay the whole step imperatively while tracing.
                         self.trace_step(prog, step)
                     }
+                    Err(e @ (TerraError::Cancelled | TerraError::Fault(_))) if contain => {
+                        // A cancelled rendezvous mid-step means the runner
+                        // died (its failure path cancels the channels); a
+                        // Fault is the skeleton's own watchdog firing.
+                        self.sess.clear_tape();
+                        self.fault_recover(prog, step, e, None)
+                    }
                     Err(e) => Err(e),
                 }
             }
+        }
+    }
+
+    /// Block until the GraphRunner's commit frontier is within
+    /// [`MAX_COMMIT_GAP`] of the current step, so the snapshot window (and a
+    /// fault's replay cost) stays bounded. Only enforced while the watchdog
+    /// is armed: without a deadline the gate could turn a wedged runner into
+    /// an unbounded stall the seed never had, and the snapshots it bounds
+    /// are scalar host states — cheap enough to let accumulate.
+    fn commit_gate(&mut self, step: u64) -> Result<()> {
+        let Some(deadline) = self.watchdog else { return Ok(()) };
+        let Some(r) = &self.runner else { return Ok(()) };
+        let target = (step.saturating_sub(self.runner_start_iter)).saturating_sub(MAX_COMMIT_GAP);
+        if target == 0 {
+            return Ok(());
+        }
+        let (done, finished) = r.progress.wait_done(target, Instant::now() + deadline);
+        if done >= target || finished {
+            // A finished thread either erred (surfaced right after the step
+            // via `take_error`) or was cancelled; nothing to wait for.
+            return Ok(());
+        }
+        Err(TerraError::Fault(SymbolicFault::error(
+            FaultStage::Watchdog,
+            format!(
+                "commit progress stalled before step {step}: {done}/{target} iterations \
+                 committed within {}ms",
+                deadline.as_millis()
+            ),
+        )))
+    }
+
+    /// Drop snapshots of steps whose iterations the GraphRunner has
+    /// committed — they can no longer be replay targets.
+    fn prune_snapshots(&mut self) {
+        let Some(r) = &self.runner else { return };
+        let committed_below = self.runner_start_iter + r.progress.done();
+        while self.host_snapshots.front().is_some_and(|(s, _)| *s < committed_below) {
+            self.host_snapshots.pop_front();
         }
     }
 
@@ -473,13 +652,56 @@ impl Engine {
             self.cached_sig = None;
         }
         self.controller.note_trace(report.changed);
-        if !report.changed {
+        if !report.changed && !self.replaying {
             // The re-entry controller decides whether one stable trace is
             // enough; a plan-cache hit makes re-entry nearly free and always
             // wins over backoff.
             let plan_cached = self.signature_in_cache();
             if self.controller.decide(plan_cached) {
-                self.enter_coexec(step + 1)?;
+                match self.quarantine_verdict() {
+                    QuarantineVerdict::Quarantined => {
+                        // Terminal rung of the fault ladder: this plan
+                        // exhausted its strikes and stays eager for the
+                        // process lifetime.
+                        debug_log(format_args!(
+                            "step {step}: stable trace, but the plan is quarantined \
+                             (pinned to eager execution)"
+                        ));
+                    }
+                    QuarantineVerdict::Backoff => {
+                        self.stats.reentry_deferred += 1;
+                        debug_log(format_args!(
+                            "step {step}: stable trace, deferring re-entry (fault backoff)"
+                        ));
+                    }
+                    QuarantineVerdict::Allow => match self.enter_coexec(step + 1) {
+                        Ok(()) => {}
+                        Err(TerraError::Fault(fault)) => {
+                            // Plan build faulted (contained panic or injected
+                            // error): strike and stay imperative; the backoff
+                            // schedule decides when the compile is retried.
+                            debug_log(format_args!(
+                                "step {step}: co-execution entry failed ({fault}); \
+                                 staying imperative"
+                            ));
+                            if fault.panicked {
+                                self.stats.panics_recovered += 1;
+                            }
+                            if let Some(key) = self.current_key.take() {
+                                if let Some(cache) = &self.plan_cache {
+                                    cache.remove(&key);
+                                }
+                                if self.quarantine.strike(key) {
+                                    self.stats.plans_quarantined += 1;
+                                }
+                            }
+                            if let Some(f) = &self.faults {
+                                self.stats.faults_injected = f.injected();
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    },
+                }
             } else {
                 self.stats.reentry_deferred += 1;
                 debug_log(format_args!(
@@ -490,6 +712,18 @@ impl Engine {
             }
         }
         Ok(loss)
+    }
+
+    /// Consult the quarantine registry for the plan the next co-execution
+    /// entry would use. AutoGraph bypasses quarantine entirely (its
+    /// re-conversion cost is part of what the paper measures).
+    fn quarantine_verdict(&mut self) -> QuarantineVerdict {
+        if self.mode == ExecMode::AutoGraph {
+            return QuarantineVerdict::Allow;
+        }
+        let splits = self.current_split_set();
+        let key = self.plan_key(&splits);
+        self.quarantine.admit(&key)
     }
 
     /// Split points for the next plan: divergence sites hot enough in the
@@ -504,11 +738,11 @@ impl Engine {
         self.controller.profile().split_candidates(split_min_count())
     }
 
-    /// Current plan-cache key for the given split set, computing (and
-    /// memoizing) the graph signature if the cache is enabled. `None` while
-    /// the cache is disabled.
-    fn plan_key(&mut self, splits: &BTreeSet<NodeId>) -> Option<PlanKey> {
-        self.plan_cache.as_ref()?;
+    /// Current plan key for the given split set, computing (and memoizing)
+    /// the graph signature. Keys both the plan cache and the fault
+    /// quarantine, so it is computed regardless of whether the cache is
+    /// enabled.
+    fn plan_key(&mut self, splits: &BTreeSet<NodeId>) -> PlanKey {
         let sig = match self.cached_sig {
             Some(s) => s,
             None => {
@@ -518,7 +752,7 @@ impl Engine {
                 s
             }
         };
-        Some(PlanKey::new(sig, self.fusion, self.opt_level, splits))
+        PlanKey::new(sig, self.fusion, self.opt_level, splits)
     }
 
     /// Variable types for signature hashing; a variable whose type cannot be
@@ -535,11 +769,12 @@ impl Engine {
     }
 
     fn signature_in_cache(&mut self) -> bool {
-        let splits = self.current_split_set();
-        match (self.plan_key(&splits), &self.plan_cache) {
-            (Some(key), Some(cache)) => cache.contains(&key),
-            _ => false,
+        if self.plan_cache.is_none() {
+            return false;
         }
+        let splits = self.current_split_set();
+        let key = self.plan_key(&splits);
+        self.plan_cache.as_ref().is_some_and(|cache| cache.contains(&key))
     }
 
     /// Enter co-execution: obtain a compiled plan (plan cache or full
@@ -556,10 +791,10 @@ impl Engine {
         // generated plan, so the two must agree.
         let splits = self.current_split_set();
         let key = self.plan_key(&splits);
-        let cached = match (&key, &self.plan_cache) {
-            (Some(k), Some(cache)) => cache.lookup(k),
-            _ => None,
-        };
+        // Attribute any fault of this co-execution phase (including a
+        // failing plan build) to this key.
+        self.current_key = Some(key);
+        let cached = self.plan_cache.as_ref().and_then(|cache| cache.lookup(&key));
         let plan: Arc<CompiledPlan> = match cached {
             Some(hit) => {
                 // Speculation hit: the exact indexed structure was compiled
@@ -583,9 +818,9 @@ impl Engine {
                 if self.plan_cache.is_some() {
                     self.stats.plan_cache_misses += 1;
                 }
-                let plan = Arc::new(self.build_plan(&full, &splits)?);
-                if let (Some(k), Some(cache)) = (key, &self.plan_cache) {
-                    cache.insert(k, plan.clone());
+                let plan = Arc::new(self.build_plan_contained(&full, &splits)?);
+                if let Some(cache) = &self.plan_cache {
+                    cache.insert(key, plan.clone());
                 }
                 plan
             }
@@ -597,7 +832,8 @@ impl Engine {
         self.controller.note_plan_cost(plan.kernel_cost());
         self.current_plan = Some(plan.clone());
         let lazy = self.mode == ExecMode::TerraLazy;
-        let channels = CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone());
+        let channels =
+            CoExecChannels::new(lazy, MAX_RUN_AHEAD, self.breakdown.clone(), self.watchdog);
         let runner = GraphRunner::spawn(
             plan,
             self.client.clone(),
@@ -605,9 +841,11 @@ impl Engine {
             self.vars.clone(),
             channels.clone(),
             next_iter,
+            self.faults.clone(),
         );
         self.runner = Some(runner);
         self.runner_start_iter = next_iter;
+        self.host_snapshots.clear();
         self.channels = Some(channels.clone());
         let skeleton = SkeletonBackend::new(full, channels, self.vars.clone());
         self.sess.swap_backend(Box::new(skeleton));
@@ -618,6 +856,27 @@ impl Engine {
         Ok(())
     }
 
+    /// [`Engine::build_plan`] behind a panic boundary (Terra modes): a panic
+    /// anywhere in the optimizer, plan generation or segment compilation
+    /// becomes a structured plan-build fault the caller degrades on instead
+    /// of unwinding through the engine. AutoGraph keeps seed behaviour.
+    fn build_plan_contained(
+        &mut self,
+        full: &Arc<TraceGraph>,
+        splits: &BTreeSet<NodeId>,
+    ) -> Result<CompiledPlan> {
+        if self.mode == ExecMode::AutoGraph {
+            return self.build_plan(full, splits);
+        }
+        match catch_unwind(AssertUnwindSafe(|| self.build_plan(full, splits))) {
+            Ok(res) => res,
+            Err(payload) => Err(TerraError::Fault(SymbolicFault::panic(
+                FaultStage::PlanBuild,
+                payload.as_ref(),
+            ))),
+        }
+    }
+
     /// The full plan pipeline: optimize a plan-side clone of the TraceGraph,
     /// generate the plan (cutting segments at the given hot divergence
     /// sites) and compile its segments.
@@ -626,6 +885,21 @@ impl Engine {
         full: &Arc<TraceGraph>,
         splits: &BTreeSet<NodeId>,
     ) -> Result<CompiledPlan> {
+        if let Some(f) = &self.faults {
+            match f.check(FaultSite::Compile) {
+                None => {}
+                Some(FaultKind::Panic) => panic!("injected plan-build panic"),
+                Some(FaultKind::Error) => {
+                    return Err(TerraError::Fault(SymbolicFault::error(
+                        FaultStage::PlanBuild,
+                        "injected plan-build error".into(),
+                    )))
+                }
+                // Rejected at parse time: nothing could cancel an
+                // engine-thread hang.
+                Some(FaultKind::Hang) => unreachable!("hang is not injectable at compile"),
+            }
+        }
         let opts = GenOptions { fusion: self.fusion, split_points: splits.clone() };
         let pm = PassManager::standard(self.opt_level);
         // With the pipeline off (or inert) the plan shares the skeleton's
@@ -738,7 +1012,146 @@ impl Engine {
         };
         self.sess.swap_backend(backend);
         self.phase = Phase::Tracing;
+        self.host_snapshots.clear();
         Ok(())
+    }
+
+    /// The fault rung of the degradation ladder: normalize the failure into
+    /// a [`SymbolicFault`], reclaim the GraphRunner within a bounded wait,
+    /// strike the plan's quarantine entry (evicting its cached
+    /// executables), and repair program state by replaying every
+    /// validated-but-uncommitted step imperatively from the oldest
+    /// uncommitted host snapshot. Imperative execution is ground truth, so
+    /// the replayed steps produce bit-identical results to an
+    /// eager-from-the-start run.
+    ///
+    /// `validated_loss` is `Some(loss)` when the current step already
+    /// validated end-to-end (the fault surfaced asynchronously after it);
+    /// the replay then repairs the lost commits, and the replayed loss —
+    /// identical by the bit-identity contract — replaces the original.
+    fn fault_recover(
+        &mut self,
+        prog: &mut dyn Program,
+        step: u64,
+        err: TerraError,
+        validated_loss: Option<Option<f32>>,
+    ) -> Result<Option<f32>> {
+        let fault = self.normalize_fault(err);
+        debug_log(format_args!("step {step}: {fault}; degrading to imperative replay"));
+        if fault.panicked {
+            self.stats.panics_recovered += 1;
+        }
+        if fault.stage == FaultStage::Watchdog {
+            self.stats.watchdog_timeouts += 1;
+        }
+        let first_uncommitted = self.reclaim_faulted_runner();
+        if let Some(key) = self.current_key.take() {
+            if let Some(cache) = &self.plan_cache {
+                cache.remove(&key);
+            }
+            if self.quarantine.strike(key) {
+                self.stats.plans_quarantined += 1;
+                debug_log(format_args!(
+                    "plan quarantined after {} faults (pinned to eager execution)",
+                    self.quarantine.strikes(&key)
+                ));
+            }
+        }
+        if let Some(f) = &self.faults {
+            self.stats.faults_injected = f.injected();
+        }
+        let mut loss = validated_loss.unwrap_or(None);
+        if first_uncommitted <= step {
+            let snap = self
+                .host_snapshots
+                .iter()
+                .find(|(s, _)| *s == first_uncommitted)
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| {
+                    TerraError::CoExec(format!(
+                        "fault fallback has no host snapshot for step {first_uncommitted}"
+                    ))
+                })?;
+            self.sess.restore_host_states(snap);
+            // Replay the uncommitted window while tracing. The `replaying`
+            // guard keeps the stable replayed traces from re-entering
+            // co-execution mid-repair.
+            self.replaying = true;
+            let replayed =
+                (first_uncommitted..=step).try_fold(None, |_, s| self.trace_step(prog, s));
+            self.replaying = false;
+            loss = replayed?;
+            self.stats.degraded_steps += step - first_uncommitted + 1;
+        }
+        self.host_snapshots.clear();
+        Ok(loss)
+    }
+
+    /// Collapse a fault-path error into its structured [`SymbolicFault`]. A
+    /// bare `Cancelled` means the dying runner cancelled the channels under
+    /// the imperative side; the runner's stored error (if still unclaimed)
+    /// carries the real fault.
+    fn normalize_fault(&mut self, err: TerraError) -> SymbolicFault {
+        let err = match err {
+            TerraError::Cancelled => {
+                match self.runner.as_ref().and_then(|r| r.take_error()) {
+                    Some(e) => e,
+                    None => {
+                        return SymbolicFault::error(
+                            FaultStage::Channel,
+                            "co-execution channels cancelled under the imperative side".into(),
+                        )
+                    }
+                }
+            }
+            e => e,
+        };
+        match err {
+            TerraError::Fault(f) => f,
+            e => SymbolicFault::error(FaultStage::SegmentExec, e.to_string()),
+        }
+    }
+
+    /// Cancel and reclaim a faulted GraphRunner, swapping the imperative
+    /// side back to tracing. Returns the first iteration whose staged
+    /// updates were lost (everything before it committed). The wait for the
+    /// thread is bounded: a runner that stays wedged past the watchdog (or
+    /// a short default grace) is *abandoned* — its channels stay cancelled,
+    /// so every rendezvous it ever reaches returns `Cancelled` and the
+    /// thread exits on its own if the wedge clears; joining it could block
+    /// the engine forever.
+    fn reclaim_faulted_runner(&mut self) -> u64 {
+        let channels = self.channels.take();
+        self.current_plan = None;
+        let mut first_uncommitted = self.next_step;
+        if let Some(r) = self.runner.take() {
+            if let Some(ch) = &channels {
+                // Cancel from the committed frontier: commits the runner is
+                // mid-flight on still land (they were validated), everything
+                // after wakes with `Cancelled`.
+                ch.cancel_from(self.runner_start_iter + r.progress.done());
+            }
+            let grace = self.watchdog.unwrap_or(DETACH_GRACE);
+            let (done, finished) = r.progress.wait_done(u64::MAX, Instant::now() + grace);
+            first_uncommitted = self.runner_start_iter + done;
+            if finished {
+                // The fault was already claimed; any residual error is moot.
+                let _ = r.join();
+            } else {
+                debug_log(format_args!(
+                    "GraphRunner unresponsive {}ms after cancellation; abandoning the thread",
+                    grace.as_millis()
+                ));
+                let _ = r.detach();
+            }
+        }
+        if let Some(ch) = &channels {
+            self.stats.mailbox_dropped += ch.dropped_total();
+        }
+        let eager = EagerBackend::new(self.exec.clone(), self.vars.clone());
+        self.sess.swap_backend(Box::new(TracingBackend::new(eager)));
+        self.phase = Phase::Tracing;
+        first_uncommitted
     }
 
     /// Graceful shutdown of an active co-execution phase (end of run): wait
@@ -746,13 +1159,20 @@ impl Engine {
     /// then cancel the (never-started) next one. The wait blocks on the
     /// runner's [`crate::runner::IterProgress`] condvar — woken on every
     /// committed iteration and on thread exit — instead of sleep-polling.
+    /// The drain deadline is the watchdog (`TERRA_SYMBOLIC_TIMEOUT_MS`)
+    /// when armed, 60s otherwise, and the wait is bounded even against a
+    /// *wedged* runner: a thread that stays unresponsive after cancellation
+    /// is abandoned (detached) rather than joined, so shutdown completes
+    /// within the deadline plus a short grace instead of hanging forever.
     pub fn shutdown(&mut self) -> Result<()> {
         if let (Some(ch), Some(r)) = (self.channels.take(), self.runner.take()) {
             let expected = self.next_step.saturating_sub(self.runner_start_iter);
-            let deadline = Instant::now() + std::time::Duration::from_secs(60);
+            let deadline = Instant::now() + self.watchdog.unwrap_or(Duration::from_secs(60));
             loop {
                 let (done, finished) = r.progress.wait_done(expected, deadline);
                 if let Some(e) = r.take_error() {
+                    // An errored runner already broke out of its loop; the
+                    // join below cannot block.
                     ch.cancel_from(0);
                     let _ = r.join();
                     return Err(e);
@@ -760,14 +1180,36 @@ impl Engine {
                 if done >= expected {
                     break;
                 }
-                if finished || Instant::now() >= deadline {
-                    // Thread exit without error (cancelled) or timeout: the
-                    // validated iterations can no longer drain.
+                if finished {
+                    // Thread exit without error (cancelled): the validated
+                    // iterations can no longer drain.
                     ch.cancel_from(0);
                     let _ = r.join();
                     return Err(TerraError::CoExec(
                         "GraphRunner failed to drain validated iterations".into(),
                     ));
+                }
+                if Instant::now() >= deadline {
+                    // Wedged runner: cancel everything, grant a short grace
+                    // for the cancellation to register, then abandon the
+                    // thread — its staged iterations are lost, which is a
+                    // hard error, but a *bounded* one.
+                    self.stats.watchdog_timeouts += 1;
+                    ch.cancel_from(0);
+                    let (_, fin) = r.progress.wait_done(u64::MAX, Instant::now() + DETACH_GRACE);
+                    let residual = if fin { r.join().err() } else { r.detach() };
+                    let detail = match residual {
+                        None | Some(TerraError::Cancelled) => String::new(),
+                        Some(e) => format!(" ({e})"),
+                    };
+                    return Err(TerraError::Fault(SymbolicFault::error(
+                        FaultStage::Watchdog,
+                        format!(
+                            "GraphRunner failed to drain {} validated iteration(s) within \
+                             the shutdown deadline{detail}",
+                            expected.saturating_sub(done),
+                        ),
+                    )));
                 }
             }
             ch.cancel_from(self.next_step);
@@ -778,6 +1220,7 @@ impl Engine {
             self.stats.mailbox_dropped += ch.dropped_total();
         }
         self.channels = None;
+        self.host_snapshots.clear();
         Ok(())
     }
 
@@ -815,6 +1258,9 @@ impl Engine {
         }
         // Drain the GraphRunner before reading final state.
         self.shutdown()?;
+        if let Some(f) = &self.faults {
+            self.stats.faults_injected = f.injected();
+        }
         let mut end_snapshot = self.breakdown.snapshot();
         self.stamp_runtime_counters(&mut end_snapshot);
         Ok(RunReport {

@@ -6,19 +6,30 @@
 //! only after the PythonRunner's end-of-iteration validation (commit
 //! barrier). Cancellation (divergence fallback) unwinds the thread cleanly
 //! without committing the cancelled iteration.
+//!
+//! Fault isolation: the iteration loop runs behind `catch_unwind`, so a
+//! panic anywhere in plan execution is converted into a structured
+//! [`SymbolicFault`] instead of tearing down the thread (and, via the
+//! default panic-abort-on-unwind-across-FFI hazards, the process). Any
+//! failure — panic or error — cancels the channels from the failing
+//! iteration so a PythonRunner blocked on a rendezvous wakes with
+//! `Cancelled` and the engine can degrade to imperative replay.
 
 use crate::api::VarStore;
-use crate::error::{Result, TerraError};
+use crate::error::{FaultStage, Result, SymbolicFault, TerraError};
+use crate::faults::{FaultKind, FaultPlan, FaultSite};
 use crate::metrics::{Breakdown, Bucket, ScopeTimer};
 use crate::runner::channels::{CoExecChannels, ITER_TOKEN};
+use crate::runner::mailbox::lock_recover;
 use crate::runtime::{ArtifactStore, Client, RtValue};
 use crate::symbolic::{Binding, CompiledPlan, Step};
 use crate::trace::VarId;
 use crate::tracegraph::{NodeId, TraceGraph};
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Completed-iteration counter with condvar notification: the engine's
 /// shutdown drain blocks on [`IterProgress::wait_done`] instead of
@@ -45,23 +56,23 @@ impl IterProgress {
 
     /// Iterations fully committed so far.
     pub fn done(&self) -> u64 {
-        self.state.lock().unwrap().done
+        lock_recover(&self.state).done
     }
 
     fn advance(&self) {
-        self.state.lock().unwrap().done += 1;
+        lock_recover(&self.state).done += 1;
         self.cv.notify_all();
     }
 
     fn finish(&self) {
-        self.state.lock().unwrap().finished = true;
+        lock_recover(&self.state).finished = true;
         self.cv.notify_all();
     }
 
     /// Block until at least `target` iterations committed, the runner thread
     /// exited, or `deadline` passed. Returns `(done, thread_finished)`.
     pub fn wait_done(&self, target: u64, deadline: Instant) -> (u64, bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.done >= target || st.finished {
                 return (st.done, st.finished);
@@ -70,7 +81,10 @@ impl IterProgress {
             if now >= deadline {
                 return (st.done, st.finished);
             }
-            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             st = guard;
         }
     }
@@ -92,7 +106,15 @@ struct IterState {
 
 impl GraphRunner {
     /// Spawn the runner thread, executing iterations `start_iter..` until
-    /// cancelled or an error occurs.
+    /// cancelled or an error occurs. `faults` arms the deterministic
+    /// injection hooks (`TERRA_FAULTS`); `None` means no injection.
+    ///
+    /// Each iteration runs behind `catch_unwind`: a panic in segment
+    /// execution (or an injected one) is stored as a
+    /// [`TerraError::Fault`] instead of unwinding out of the thread. Both
+    /// panics and errors cancel the channels from the failing iteration so
+    /// the PythonRunner cannot stay blocked on a rendezvous the dead runner
+    /// will never complete.
     pub fn spawn(
         plan: Arc<CompiledPlan>,
         client: Client,
@@ -100,6 +122,7 @@ impl GraphRunner {
         vars: Arc<VarStore>,
         channels: Arc<CoExecChannels>,
         start_iter: u64,
+        faults: Option<Arc<FaultPlan>>,
     ) -> GraphRunner {
         let error: Arc<Mutex<Option<TerraError>>> = Arc::new(Mutex::new(None));
         let error2 = error.clone();
@@ -111,15 +134,34 @@ impl GraphRunner {
                 let breakdown = channels.breakdown.clone();
                 let mut iter = start_iter;
                 loop {
-                    match run_iteration(&plan, &client, &artifacts, &vars, &channels, &breakdown, iter)
-                    {
-                        Ok(()) => {
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        run_iteration(
+                            &plan,
+                            &client,
+                            &artifacts,
+                            &vars,
+                            &channels,
+                            &breakdown,
+                            faults.as_deref(),
+                            iter,
+                        )
+                    }));
+                    match outcome {
+                        Ok(Ok(())) => {
                             progress2.advance();
                             iter += 1;
                         }
-                        Err(TerraError::Cancelled) => break,
-                        Err(e) => {
-                            *error2.lock().unwrap() = Some(e);
+                        Ok(Err(TerraError::Cancelled)) => break,
+                        Ok(Err(e)) => {
+                            *lock_recover(&error2) = Some(e);
+                            channels.cancel_from(iter);
+                            break;
+                        }
+                        Err(payload) => {
+                            let fault =
+                                SymbolicFault::panic(FaultStage::SegmentExec, payload.as_ref());
+                            *lock_recover(&error2) = Some(TerraError::Fault(fault));
+                            channels.cancel_from(iter);
                             break;
                         }
                     }
@@ -136,18 +178,105 @@ impl GraphRunner {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
-        match self.error.lock().unwrap().take() {
+        match lock_recover(&self.error).take() {
             Some(e) => Err(e),
             None => Ok(()),
         }
     }
 
+    /// Abandon a wedged runner thread: drop the `JoinHandle` without
+    /// joining, surfacing any stored error. Used by the engine's fault
+    /// fallback and shutdown after a bounded grace wait expired — the
+    /// channels stay cancelled, so every rendezvous the thread reaches
+    /// returns `Cancelled` and it exits on its own whenever the wedge
+    /// clears; joining it could block the engine forever.
+    pub fn detach(mut self) -> Option<TerraError> {
+        drop(self.handle.take());
+        lock_recover(&self.error).take()
+    }
+
     /// Check for an asynchronous runner error without joining.
     pub fn take_error(&self) -> Option<TerraError> {
-        self.error.lock().unwrap().take()
+        lock_recover(&self.error).take()
     }
 }
 
+/// An injected `segment_exec` fault, checked once per iteration before the
+/// step loop. Panics unwind into the spawn loop's `catch_unwind`; errors
+/// route through the normal error path; hangs block *cancellably* (the
+/// engine's watchdog — or any fallback/shutdown — cancels the channels and
+/// reclaims the thread), mirroring a kernel that never returns without
+/// actually leaking a thread in tests.
+fn inject_iteration_fault(
+    faults: &FaultPlan,
+    channels: &CoExecChannels,
+    iter: u64,
+) -> Result<()> {
+    match faults.check(FaultSite::SegmentExec) {
+        None => Ok(()),
+        Some(FaultKind::Panic) => panic!("injected segment-exec panic (iteration {iter})"),
+        Some(FaultKind::Error) => Err(TerraError::Fault(SymbolicFault::error(
+            FaultStage::SegmentExec,
+            format!("injected segment-exec error (iteration {iter})"),
+        ))),
+        Some(FaultKind::Hang) => {
+            while !channels.is_cancelled(iter) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(TerraError::Cancelled)
+        }
+    }
+}
+
+/// An injected `mailbox` fault, checked before each fetch publication (one
+/// occurrence per fetch). Same kind semantics as
+/// [`inject_iteration_fault`], at the channel choke point instead.
+fn inject_mailbox_fault(
+    faults: &FaultPlan,
+    channels: &CoExecChannels,
+    iter: u64,
+    node: NodeId,
+) -> Result<()> {
+    match faults.check(FaultSite::Mailbox) {
+        None => Ok(()),
+        Some(FaultKind::Panic) => {
+            panic!("injected mailbox panic (iteration {iter}, fetch {node:?})")
+        }
+        Some(FaultKind::Error) => Err(TerraError::Fault(SymbolicFault::error(
+            FaultStage::Channel,
+            format!("injected mailbox error (iteration {iter}, fetch {node:?})"),
+        ))),
+        Some(FaultKind::Hang) => {
+            while !channels.is_cancelled(iter) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(TerraError::Cancelled)
+        }
+    }
+}
+
+/// Arms the shim's worker-chunk panic hook for one segment execution and
+/// guarantees disarm + injected-count folding on every exit path (success,
+/// error, panic) via `Drop`.
+struct ChunkFaultGuard<'a> {
+    faults: &'a FaultPlan,
+}
+
+impl<'a> ChunkFaultGuard<'a> {
+    fn arm(faults: &'a FaultPlan) -> Self {
+        xla::set_chunk_fault(faults.worker_chunk_fault());
+        ChunkFaultGuard { faults }
+    }
+}
+
+impl Drop for ChunkFaultGuard<'_> {
+    fn drop(&mut self) {
+        xla::set_chunk_fault(None);
+        self.faults.note_injected(xla::take_injected_chunk_faults());
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_iteration(
     plan: &CompiledPlan,
     client: &Client,
@@ -155,12 +284,16 @@ fn run_iteration(
     vars: &VarStore,
     channels: &CoExecChannels,
     breakdown: &Breakdown,
+    faults: Option<&FaultPlan>,
     iter: u64,
 ) -> Result<()> {
     // A truncated iteration the runner has not started yet is skipped
     // outright — only an iteration already mid-flight when the partial
     // cancel lands finishes its prefix (see CoExecChannels::iteration_allowed).
     channels.iteration_allowed(iter)?;
+    if let Some(f) = faults {
+        inject_iteration_fault(f, channels, iter)?;
+    }
     {
         let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
         channels.allowance.acquire(iter)?;
@@ -190,6 +323,7 @@ fn run_iteration(
             vars,
             channels,
             breakdown,
+            faults,
             iter,
             &mut st,
         )?;
@@ -220,6 +354,7 @@ fn run_steps(
     vars: &VarStore,
     channels: &CoExecChannels,
     breakdown: &Breakdown,
+    faults: Option<&FaultPlan>,
     iter: u64,
     st: &mut IterState,
 ) -> Result<()> {
@@ -236,6 +371,7 @@ fn run_steps(
                 }
                 let outs = {
                     let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
+                    let _chunk_fault = faults.map(ChunkFaultGuard::arm);
                     seg.exe.run(client, &args)?
                 };
                 for ((n, slot), v) in seg.spec.outputs.iter().zip(outs) {
@@ -272,6 +408,9 @@ fn run_steps(
                     let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
                     v.to_host()?
                 };
+                if let Some(f) = faults {
+                    inject_mailbox_fault(f, channels, iter, *node)?;
+                }
                 channels.fetches.put(iter, *node, host);
                 st.executed.insert(*node);
             }
@@ -290,7 +429,9 @@ fn run_steps(
                         cases.len()
                     ))
                 })?;
-                run_steps(body, plan, client, artifacts, vars, channels, breakdown, iter, st)?;
+                run_steps(
+                    body, plan, client, artifacts, vars, channels, breakdown, faults, iter, st,
+                )?;
             }
         }
     }

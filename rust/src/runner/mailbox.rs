@@ -6,12 +6,31 @@
 //! arrives or the channel set is cancelled from some iteration onward (the
 //! GraphRunner cancellation of §4.1's fallback).
 
-use crate::error::TerraError;
+use crate::error::{FaultStage, SymbolicFault, TerraError};
 use crate::tracegraph::NodeId;
 use std::collections::{HashMap, HashSet};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 type Key = (u64, NodeId);
+
+/// Lock with poison recovery. A mutex here is poisoned when some thread
+/// panicked while holding it — with panic containment (`catch_unwind` in the
+/// GraphRunner and the engine) that panic has already been converted into a
+/// `SymbolicFault`, and letting every *other* thread then abort on
+/// `PoisonError` would turn one contained fault into a process-wide cascade.
+/// Recovery is sound for every lock in this module: the guarded state is
+/// plain data (maps, sets, counters, cancel marks) whose invariants hold
+/// field-by-field at every point a panic can occur, and the fallback path
+/// re-validates via cancellation marks anyway.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_recover`].
+pub(crate) fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
 
 pub struct Mailbox<V> {
     inner: Mutex<State<V>>,
@@ -51,7 +70,7 @@ impl<V> Mailbox<V> {
     }
 
     pub fn put(&self, iter: u64, node: NodeId, v: V) {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         st.map.insert((iter, node), v);
         self.cv.notify_all();
     }
@@ -59,7 +78,7 @@ impl<V> Mailbox<V> {
     /// Blocking take. Fails with `Cancelled` if the mailbox is cancelled for
     /// this iteration.
     pub fn take(&self, iter: u64, node: NodeId) -> Result<V, TerraError> {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         loop {
             if iter >= st.cancel_from || st.cancelled.contains(&(iter, node)) {
                 return Err(TerraError::Cancelled);
@@ -67,7 +86,41 @@ impl<V> Mailbox<V> {
             if let Some(v) = st.map.remove(&(iter, node)) {
                 return Ok(v);
             }
-            st = self.cv.wait(st).unwrap();
+            st = wait_recover(&self.cv, st);
+        }
+    }
+
+    /// [`Mailbox::take`] with a watchdog deadline: if the value has not
+    /// arrived within `timeout`, fail with a structured watchdog
+    /// [`SymbolicFault`] instead of blocking forever. This is the engine's
+    /// defence against a wedged GraphRunner (`TERRA_SYMBOLIC_TIMEOUT_MS`):
+    /// the skeleton's fetch rendezvous is the one place the imperative side
+    /// blocks on symbolic progress.
+    pub fn take_timeout(&self, iter: u64, node: NodeId, timeout: Duration) -> Result<V, TerraError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock_recover(&self.inner);
+        loop {
+            if iter >= st.cancel_from || st.cancelled.contains(&(iter, node)) {
+                return Err(TerraError::Cancelled);
+            }
+            if let Some(v) = st.map.remove(&(iter, node)) {
+                return Ok(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TerraError::Fault(SymbolicFault::error(
+                    FaultStage::Watchdog,
+                    format!(
+                        "fetch for iteration {iter} node {node:?} not delivered within {}ms",
+                        timeout.as_millis()
+                    ),
+                )));
+            }
+            let (guard, _timed_out) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
         }
     }
 
@@ -81,7 +134,7 @@ impl<V> Mailbox<V> {
         if nodes.is_empty() {
             return;
         }
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         for &n in nodes {
             st.cancelled.insert((iter, n));
         }
@@ -90,7 +143,14 @@ impl<V> Mailbox<V> {
 
     /// Non-blocking probe (used in tests and diagnostics).
     pub fn try_take(&self, iter: u64, node: NodeId) -> Option<V> {
-        self.inner.lock().unwrap().map.remove(&(iter, node))
+        lock_recover(&self.inner).map.remove(&(iter, node))
+    }
+
+    /// Has this mailbox been cancelled for `iter`? Polled by injected hang
+    /// faults so a simulated wedge stays reclaimable: the sleeping runner
+    /// observes the engine's cancel and exits instead of leaking a thread.
+    pub fn is_cancelled(&self, iter: u64) -> bool {
+        lock_recover(&self.inner).cancel_from <= iter
     }
 
     /// Garbage-collect every message for iterations `<= iter`. The runners
@@ -99,7 +159,7 @@ impl<V> Mailbox<V> {
     /// the fetch was never demanded) and would otherwise accumulate until
     /// the next cancellation. Returns how many messages were dropped.
     pub fn gc_le(&self, iter: u64) -> u64 {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         let before = st.map.len();
         st.map.retain(|k, _| k.0 > iter);
         let dropped = (before - st.map.len()) as u64;
@@ -109,19 +169,19 @@ impl<V> Mailbox<V> {
 
     /// Messages dropped by [`Mailbox::gc_le`] over this mailbox's lifetime.
     pub fn dropped(&self) -> u64 {
-        self.inner.lock().unwrap().dropped
+        lock_recover(&self.inner).dropped
     }
 
     /// Cancel all pending and future takes for iterations >= `from`.
     pub fn cancel_from(&self, from: u64) {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         st.cancel_from = st.cancel_from.min(from);
         self.cv.notify_all();
     }
 
     /// Lift a previous cancellation (used when co-execution restarts).
     pub fn reset_cancel(&self) {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         st.cancel_from = u64::MAX;
         st.cancelled.clear();
         st.map.clear();
@@ -142,13 +202,13 @@ impl Semaphore {
     }
 
     pub fn release(&self) {
-        let mut c = self.count.lock().unwrap();
+        let mut c = lock_recover(&self.count);
         c.0 += 1;
         self.cv.notify_all();
     }
 
     pub fn acquire(&self, iter: u64) -> Result<(), TerraError> {
-        let mut c = self.count.lock().unwrap();
+        let mut c = lock_recover(&self.count);
         loop {
             if iter >= c.1 {
                 return Err(TerraError::Cancelled);
@@ -157,12 +217,12 @@ impl Semaphore {
                 c.0 -= 1;
                 return Ok(());
             }
-            c = self.cv.wait(c).unwrap();
+            c = wait_recover(&self.cv, c);
         }
     }
 
     pub fn cancel_from(&self, from: u64) {
-        let mut c = self.count.lock().unwrap();
+        let mut c = lock_recover(&self.count);
         c.1 = c.1.min(from);
         self.cv.notify_all();
     }
@@ -189,13 +249,13 @@ impl Gate {
 
     /// Allow execution of iterations <= `iter`.
     pub fn allow(&self, iter: u64) {
-        let mut a = self.allowed.lock().unwrap();
+        let mut a = lock_recover(&self.allowed);
         a.0 = a.0.max(iter + 1);
         self.cv.notify_all();
     }
 
     pub fn wait_allowed(&self, iter: u64) -> Result<(), TerraError> {
-        let mut a = self.allowed.lock().unwrap();
+        let mut a = lock_recover(&self.allowed);
         loop {
             if iter >= a.1 {
                 return Err(TerraError::Cancelled);
@@ -203,12 +263,12 @@ impl Gate {
             if a.0 > iter {
                 return Ok(());
             }
-            a = self.cv.wait(a).unwrap();
+            a = wait_recover(&self.cv, a);
         }
     }
 
     pub fn cancel_from(&self, from: u64) {
-        let mut a = self.allowed.lock().unwrap();
+        let mut a = lock_recover(&self.allowed);
         a.1 = a.1.min(from);
         self.cv.notify_all();
     }
@@ -282,6 +342,50 @@ mod tests {
         assert!(mb.try_take(3, NodeId(1)).is_none());
         assert_eq!(mb.gc_le(10), 0);
         assert_eq!(mb.dropped(), 2);
+    }
+
+    #[test]
+    fn take_timeout_delivers_or_faults_on_the_watchdog() {
+        let mb: Mailbox<u32> = Mailbox::new();
+        mb.put(0, NodeId(1), 7);
+        assert_eq!(mb.take_timeout(0, NodeId(1), Duration::from_secs(5)).unwrap(), 7);
+        // Nothing delivered: the deadline expires into a structured
+        // watchdog fault, not a hang and not a process abort.
+        let start = std::time::Instant::now();
+        match mb.take_timeout(0, NodeId(2), Duration::from_millis(30)) {
+            Err(TerraError::Fault(f)) => {
+                assert_eq!(f.stage, crate::error::FaultStage::Watchdog);
+                assert!(!f.panicked);
+            }
+            other => panic!("expected a watchdog fault, got {other:?}"),
+        }
+        assert!(start.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn take_timeout_cancellation_beats_the_deadline() {
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.take_timeout(5, NodeId(1), Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.cancel_from(5);
+        assert!(matches!(h.join().unwrap(), Err(TerraError::Cancelled)));
+    }
+
+    #[test]
+    fn poisoned_locks_recover_instead_of_cascading() {
+        // A panic while a guard is live poisons the mutex; lock_recover must
+        // hand the next thread the data instead of propagating the poison.
+        let m = Arc::new(Mutex::new(41));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex should be poisoned");
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
     }
 
     #[test]

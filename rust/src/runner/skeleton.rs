@@ -184,7 +184,14 @@ impl Backend for SkeletonBackend {
             g.allow(self.iter);
         }
         let _t = ScopeTimer::new(&self.channels.breakdown, Bucket::PyStall);
-        self.channels.fetches.take(self.iter, ev.node)
+        // Watchdog: with TERRA_SYMBOLIC_TIMEOUT_MS set, a fetch the runner
+        // never delivers (wedged segment, injected hang) turns into a
+        // structured watchdog fault after the deadline instead of blocking
+        // the imperative side forever; the engine replays the step eagerly.
+        match self.channels.watchdog {
+            Some(d) => self.channels.fetches.take_timeout(self.iter, ev.node, d),
+            None => self.channels.fetches.take(self.iter, ev.node),
+        }
     }
 
     fn create_var(&mut self, _var: VarId, _init: HostTensor) -> Result<()> {

@@ -188,6 +188,13 @@ impl PlanCache {
         }
     }
 
+    /// Evict one entry (a plan that faulted at runtime: the cached
+    /// executables are suspect, the next admission recompiles from the
+    /// trace). Returns whether the key was present.
+    pub fn remove(&self, key: &PlanKey) -> bool {
+        self.inner.lock().unwrap().map.remove(key).is_some()
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
@@ -210,6 +217,113 @@ impl PlanCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+/// Verdict of a quarantine admission check before entering co-execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuarantineVerdict {
+    /// No (remaining) suspicion: co-execution may be entered.
+    Allow,
+    /// The plan faulted recently; this entry attempt is skipped as part of
+    /// its exponential backoff (the engine stays in tracing and retries on
+    /// a later stable trace, recompiling from scratch).
+    Backoff,
+    /// `TERRA_PLAN_MAX_FAULTS` strikes accumulated: the plan is pinned to
+    /// eager execution for the rest of the process.
+    Quarantined,
+}
+
+struct QuarantineEntry {
+    strikes: u32,
+    /// Entry attempts still to skip before the next recompile is allowed.
+    skip: u64,
+}
+
+/// Per-plan fault registry: the retry/backoff/quarantine brain of the fault
+/// degradation ladder (see `speculate/README.md`).
+///
+/// Every symbolic fault attributed to a plan key is a *strike*. After
+/// strike `n` (1-based) the next `2^n` co-execution entry attempts for that
+/// key are skipped (exponential backoff; each retry recompiles, because the
+/// fault fallback also evicts the key from the [`PlanCache`]). At
+/// `TERRA_PLAN_MAX_FAULTS` strikes (default 3, minimum 1) the key is
+/// quarantined: pinned to eager/tracing execution for the process lifetime.
+///
+/// Process-global by default (like the plan cache: the repeat customers are
+/// re-runs of the same signature), with per-engine instances available for
+/// test isolation ([`Engine::set_quarantine`](crate::runner::Engine)).
+pub struct Quarantine {
+    inner: Mutex<HashMap<PlanKey, QuarantineEntry>>,
+    max_faults: u32,
+}
+
+/// Strike limit from a raw `TERRA_PLAN_MAX_FAULTS` value: absent = 3,
+/// `>= 1` accepted, junk or zero a hard error naming the knob.
+fn max_faults_from_raw(raw: Option<&str>) -> crate::error::Result<u32> {
+    Ok(crate::config::env::value_min("TERRA_PLAN_MAX_FAULTS", raw, 1)?.unwrap_or(3))
+}
+
+impl Quarantine {
+    pub fn with_max_faults(max_faults: u32) -> Self {
+        Quarantine { inner: Mutex::new(HashMap::new()), max_faults: max_faults.max(1) }
+    }
+
+    /// Strike limit from `TERRA_PLAN_MAX_FAULTS` (strict parse).
+    pub fn from_env() -> crate::error::Result<Self> {
+        let raw = std::env::var("TERRA_PLAN_MAX_FAULTS").ok();
+        Ok(Self::with_max_faults(max_faults_from_raw(raw.as_deref())?))
+    }
+
+    /// Process-wide registry.
+    pub fn global() -> &'static Arc<Quarantine> {
+        static GLOBAL: OnceLock<Arc<Quarantine>> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            Arc::new(Quarantine::from_env().unwrap_or_else(|e| panic!("{e}")))
+        })
+    }
+
+    pub fn max_faults(&self) -> u32 {
+        self.max_faults
+    }
+
+    /// Admission check before a co-execution entry for `key`. `Backoff`
+    /// consumes one skipped attempt.
+    pub fn admit(&self, key: &PlanKey) -> QuarantineVerdict {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.get_mut(key) {
+            None => QuarantineVerdict::Allow,
+            Some(e) if e.strikes >= self.max_faults => QuarantineVerdict::Quarantined,
+            Some(e) if e.skip > 0 => {
+                e.skip -= 1;
+                QuarantineVerdict::Backoff
+            }
+            Some(_) => QuarantineVerdict::Allow,
+        }
+    }
+
+    /// Record a symbolic fault attributed to `key`. Returns `true` iff this
+    /// strike is the one that quarantined the key (so callers can count
+    /// quarantine *events* exactly once).
+    pub fn strike(&self, key: PlanKey) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.entry(key).or_insert(QuarantineEntry { strikes: 0, skip: 0 });
+        e.strikes += 1;
+        if e.strikes >= self.max_faults {
+            e.skip = 0;
+            e.strikes == self.max_faults
+        } else {
+            e.skip = 1u64 << e.strikes.min(32);
+            false
+        }
+    }
+
+    pub fn strikes(&self, key: &PlanKey) -> u32 {
+        self.inner.lock().unwrap().get(key).map_or(0, |e| e.strikes)
+    }
+
+    pub fn is_quarantined(&self, key: &PlanKey) -> bool {
+        self.inner.lock().unwrap().get(key).is_some_and(|e| e.strikes >= self.max_faults)
     }
 }
 
@@ -301,6 +415,61 @@ mod tests {
         assert!(!c.contains(&key(2)));
         assert!(c.contains(&key(3)));
         assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn remove_evicts_a_faulted_plan() {
+        let c = PlanCache::with_capacity(4);
+        c.insert(key(1), empty_plan());
+        assert!(c.remove(&key(1)));
+        assert!(!c.contains(&key(1)));
+        assert!(!c.remove(&key(1)), "double eviction is a no-op");
+    }
+
+    #[test]
+    fn quarantine_ladder_backoff_then_pin() {
+        let q = Quarantine::with_max_faults(3);
+        let k = key(9);
+        assert_eq!(q.admit(&k), QuarantineVerdict::Allow);
+        // Strike 1: skip the next 2 entry attempts, then allow a retry.
+        assert!(!q.strike(k));
+        assert_eq!(q.admit(&k), QuarantineVerdict::Backoff);
+        assert_eq!(q.admit(&k), QuarantineVerdict::Backoff);
+        assert_eq!(q.admit(&k), QuarantineVerdict::Allow);
+        // Strike 2: skip 4.
+        assert!(!q.strike(k));
+        for _ in 0..4 {
+            assert_eq!(q.admit(&k), QuarantineVerdict::Backoff);
+        }
+        assert_eq!(q.admit(&k), QuarantineVerdict::Allow);
+        // Strike 3 = TERRA_PLAN_MAX_FAULTS: quarantined, exactly once.
+        assert!(q.strike(k));
+        assert!(q.is_quarantined(&k));
+        assert_eq!(q.admit(&k), QuarantineVerdict::Quarantined);
+        assert_eq!(q.admit(&k), QuarantineVerdict::Quarantined);
+        // Further strikes (e.g. a racing engine) do not re-count the event.
+        assert!(!q.strike(k));
+        assert_eq!(q.strikes(&k), 4);
+        // Other keys are unaffected.
+        assert_eq!(q.admit(&key(10)), QuarantineVerdict::Allow);
+    }
+
+    #[test]
+    fn quarantine_max_faults_one_pins_on_first_strike() {
+        let q = Quarantine::with_max_faults(1);
+        let k = key(2);
+        assert!(q.strike(k));
+        assert_eq!(q.admit(&k), QuarantineVerdict::Quarantined);
+    }
+
+    #[test]
+    fn max_faults_env_knob_rejects_junk_and_zero() {
+        assert_eq!(max_faults_from_raw(None).unwrap(), 3);
+        assert_eq!(max_faults_from_raw(Some("1")).unwrap(), 1);
+        let e = max_faults_from_raw(Some("0")).unwrap_err();
+        assert!(e.to_string().contains("TERRA_PLAN_MAX_FAULTS"), "{e}");
+        let e = max_faults_from_raw(Some("many")).unwrap_err();
+        assert!(e.to_string().contains("TERRA_PLAN_MAX_FAULTS"), "{e}");
     }
 
     #[test]

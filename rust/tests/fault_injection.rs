@@ -1,0 +1,260 @@
+//! Deterministic fault-injection tests of the fault degradation ladder
+//! (ISSUE 7): every symbolic-side failure — panic, error, or hang — must
+//! resolve to the imperative fallback path without aborting the process,
+//! and the run's observable results (losses, final variables) must match
+//! the pure-eager oracle exactly.
+//!
+//! Exactness: these runs use `fusion = false, opt_level = 0`, so every plan
+//! node compiles to the same single-op shim kernel the eager executor uses
+//! — no fused-arithmetic reordering — which makes bitwise `assert_eq!`
+//! against the eager oracle valid.
+//!
+//! Every Terra engine here installs its schedule via `set_fault_plan` and a
+//! private `Quarantine`, so the tests are independent of any `TERRA_FAULTS`
+//! / `TERRA_PLAN_MAX_FAULTS` in the environment (the CI fault matrix sets
+//! those process-wide). The shim's worker-pool hooks are process-global, so
+//! all tests serialize on one lock.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+use terra::api::{Session, Variable};
+use terra::config::ExecMode;
+use terra::error::{FaultStage, Result, TerraError};
+use terra::faults::FaultPlan;
+use terra::programs::{Program, StepOutput, TinyLinear};
+use terra::runner::Engine;
+use terra::speculate::{Quarantine, ReentryPolicy, SpeculateConfig};
+use terra::tensor::HostTensor;
+
+fn serialize() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(Mutex::default).lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_fault_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+/// Plan cache off (so every entry attempt actually runs the compile hook)
+/// and eager re-entry (deterministic entry timing).
+fn spec() -> SpeculateConfig {
+    SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Eager, split_hot_sites: false }
+}
+
+/// A Terra engine with an explicit fault schedule, a private quarantine
+/// registry, and no watchdog unless a test arms one — independent of the
+/// process environment.
+fn fault_engine(dir: &str, schedule: &str, max_faults: u32) -> Engine {
+    let mut engine = Engine::with_speculate(ExecMode::Terra, dir, false, 0, spec()).unwrap();
+    engine.set_quarantine(Arc::new(Quarantine::with_max_faults(max_faults)));
+    engine.set_fault_plan(Some(Arc::new(FaultPlan::parse(schedule, 0).unwrap())));
+    engine.set_watchdog(None);
+    engine
+}
+
+fn final_vars(engine: &Engine) -> Vec<HostTensor> {
+    engine.vars().ids().into_iter().map(|id| engine.vars().host(id).unwrap()).collect()
+}
+
+/// Eager oracle for `prog`: same unfused/unoptimized kernels, no faults.
+fn eager_oracle(
+    dir: &str,
+    prog: &mut dyn Program,
+    steps: u64,
+) -> (Vec<(u64, f32)>, Vec<HostTensor>) {
+    let mut engine = Engine::with_speculate(ExecMode::Eager, dir, false, 0, spec()).unwrap();
+    let report = engine.run(prog, steps, 0).unwrap();
+    (report.losses, final_vars(&engine))
+}
+
+/// Run TinyLinear under Terra with `schedule` injected, and assert the run
+/// completes with losses and final variables *bit-identical* to the eager
+/// oracle. Returns the engine stats for schedule-specific assertions.
+fn run_faulted_tiny(schedule: &str, max_faults: u32, steps: u64) -> terra::runner::EngineStats {
+    let dir = artifacts_dir();
+    let (eager_losses, eager_vars) = eager_oracle(&dir, &mut TinyLinear::new(0), steps);
+    let mut engine = fault_engine(&dir, schedule, max_faults);
+    let mut prog = TinyLinear::new(0);
+    let report = engine
+        .run(&mut prog, steps, 0)
+        .unwrap_or_else(|e| panic!("faulted run must still complete ({schedule}): {e}"));
+    assert_eq!(eager_losses, report.losses, "losses diverged from eager oracle ({schedule})");
+    assert_eq!(eager_vars, final_vars(&engine), "final vars diverged ({schedule})");
+    report.stats
+}
+
+#[test]
+fn compile_panic_is_contained_and_retried() {
+    let _g = serialize();
+    // First co-execution entry panics inside the plan build; the engine
+    // strikes the plan, backs off, and a later recompile succeeds.
+    let stats = run_faulted_tiny("compile:*:iter=1", 3, 23);
+    assert!(stats.faults_injected >= 1, "{stats:?}");
+    assert!(stats.panics_recovered >= 1, "{stats:?}");
+    assert!(stats.enter_coexec >= 1, "recompile after backoff must succeed: {stats:?}");
+    assert_eq!(stats.plans_quarantined, 0, "{stats:?}");
+}
+
+#[test]
+fn segment_exec_panic_degrades_to_replay() {
+    let _g = serialize();
+    let stats = run_faulted_tiny("segment_exec:panic:iter=2", 3, 23);
+    assert!(stats.faults_injected >= 1, "{stats:?}");
+    assert!(stats.panics_recovered >= 1, "{stats:?}");
+    assert!(stats.degraded_steps >= 1, "{stats:?}");
+}
+
+#[test]
+fn segment_exec_error_degrades_without_panic() {
+    let _g = serialize();
+    let stats = run_faulted_tiny("segment_exec:error:iter=2", 3, 23);
+    assert!(stats.faults_injected >= 1, "{stats:?}");
+    assert_eq!(stats.panics_recovered, 0, "error faults are not panics: {stats:?}");
+    assert!(stats.degraded_steps >= 1, "{stats:?}");
+}
+
+#[test]
+fn mailbox_error_cancels_and_replays() {
+    let _g = serialize();
+    let stats = run_faulted_tiny("mailbox:error:iter=1", 3, 23);
+    assert!(stats.faults_injected >= 1, "{stats:?}");
+    assert!(stats.degraded_steps >= 1, "{stats:?}");
+}
+
+#[test]
+fn hang_is_cancelled_by_the_watchdog() {
+    let _g = serialize();
+    let dir = artifacts_dir();
+    let steps = 23;
+    let (eager_losses, eager_vars) = eager_oracle(&dir, &mut TinyLinear::new(0), steps);
+    let mut engine = fault_engine(&dir, "segment_exec:hang:iter=2", 3);
+    engine.set_watchdog(Some(Duration::from_millis(200)));
+    let mut prog = TinyLinear::new(0);
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    assert_eq!(eager_losses, report.losses);
+    assert_eq!(eager_vars, final_vars(&engine));
+    let stats = report.stats;
+    assert!(stats.faults_injected >= 1, "{stats:?}");
+    assert!(stats.watchdog_timeouts >= 1, "{stats:?}");
+    assert!(stats.degraded_steps >= 1, "{stats:?}");
+}
+
+#[test]
+fn repeated_faults_quarantine_the_plan() {
+    let _g = serialize();
+    // Always-firing segment panic, two strikes allowed: entry 1 faults
+    // (strike 1, backoff), entry 2 faults (strike 2, quarantined). The plan
+    // must never re-enter co-execution over the remaining ~35 steps.
+    let stats = run_faulted_tiny("segment_exec:panic", 2, 40);
+    assert_eq!(stats.enter_coexec, 2, "quarantined plan re-entered co-execution: {stats:?}");
+    assert_eq!(stats.plans_quarantined, 1, "{stats:?}");
+    assert!(stats.panics_recovered >= 2, "{stats:?}");
+    assert!(stats.degraded_steps >= 2, "{stats:?}");
+}
+
+/// Wide elementwise pipeline: tensors large enough (>= the shim pool's
+/// 4096-element dispatch threshold) that kernels go parallel whenever the
+/// worker pool has threads, so an armed worker-chunk fault actually lands
+/// inside a pool chunk.
+struct WidePipe {
+    w: Option<Variable>,
+}
+
+impl Program for WidePipe {
+    fn name(&self) -> &'static str {
+        "wide_pipe"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.w = Some(sess.variable("w", HostTensor::filled_f32(vec![8192], 0.5), true)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let x = sess.feed(HostTensor::filled_f32(vec![8192], 1.0 + step as f32 * 1e-3))?;
+        let y = w.read().mul(&x)?.tanh()?;
+        let loss_t = y.mul(&y)?.reduce_mean(&[0], false)?;
+        w.assign(&y)?;
+        Ok(StepOutput { loss: Some(loss_t), extra: vec![] })
+    }
+}
+
+/// Restores the shim worker-thread override (a process-global) on drop.
+struct ThreadsOverride;
+
+impl ThreadsOverride {
+    fn set(n: usize) -> Self {
+        xla::set_shim_threads(n);
+        ThreadsOverride
+    }
+}
+
+impl Drop for ThreadsOverride {
+    fn drop(&mut self) {
+        xla::set_shim_threads(0);
+    }
+}
+
+#[test]
+fn worker_chunk_panic_surfaces_as_error() {
+    let _g = serialize();
+    if xla::active_backend() != xla::ShimBackend::Bytecode {
+        // The worker pool (and its chunk-fault hook) is bytecode-only.
+        return;
+    }
+    let _threads = ThreadsOverride::set(2);
+    let dir = artifacts_dir();
+    let steps = 12;
+    let (eager_losses, eager_vars) = eager_oracle(&dir, &mut WidePipe { w: None }, steps);
+    // One strike allowed: the first chunk fault pins the plan to eager, so
+    // the rest of the run is deterministic imperative execution.
+    let mut engine = fault_engine(&dir, "worker:panic:chunk=0", 1);
+    let mut prog = WidePipe { w: None };
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    assert_eq!(eager_losses, report.losses);
+    assert_eq!(eager_vars, final_vars(&engine));
+    let stats = report.stats;
+    assert!(stats.faults_injected >= 1, "{stats:?}");
+    // The pool's catch_unwind contains the chunk panic and surfaces it as an
+    // execution `Err` — the runner sees an error, not an unwind.
+    assert_eq!(stats.panics_recovered, 0, "{stats:?}");
+    assert!(stats.degraded_steps >= 1, "{stats:?}");
+    assert_eq!(stats.plans_quarantined, 1, "{stats:?}");
+    assert_eq!(stats.enter_coexec, 1, "{stats:?}");
+}
+
+#[test]
+fn wedged_runner_shutdown_is_bounded() {
+    let _g = serialize();
+    // A runner iteration hangs while the python side never blocks on a
+    // fetch (loss_every = 0 materializes nothing), so the hang is only
+    // discovered at shutdown. The drain must give up at the watchdog
+    // deadline, abandon the wedged thread, and report a watchdog fault —
+    // bounded, not a process hang.
+    let dir = artifacts_dir();
+    let mut engine = fault_engine(&dir, "segment_exec:hang:iter=2", 3);
+    engine.set_watchdog(Some(Duration::from_millis(300)));
+    engine.loss_every = 0;
+    let mut prog = TinyLinear::new(0);
+    engine.setup(&mut prog).unwrap();
+    for step in 0..6 {
+        engine.run_step(&mut prog, step).unwrap();
+    }
+    let t0 = Instant::now();
+    let err = engine.shutdown().expect_err("undrained iterations must be reported");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown not bounded: took {:?}",
+        t0.elapsed()
+    );
+    match err {
+        TerraError::Fault(f) => assert_eq!(f.stage, FaultStage::Watchdog, "{f:?}"),
+        other => panic!("expected a watchdog fault, got: {other}"),
+    }
+    assert!(engine.stats().watchdog_timeouts >= 1, "{:?}", engine.stats());
+}

@@ -477,7 +477,12 @@ fn run_chunks(job: &Job) {
             return;
         }
         let f = job.f;
-        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(c))).is_err() {
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::chunk_fault_check();
+            f(c)
+        }))
+        .is_err()
+        {
             job.panicked.store(true, Ordering::Relaxed);
         }
         let (lock, cv) = &*job.done;
@@ -493,15 +498,18 @@ fn run_chunks(job: &Job) {
 /// included). Falls back to running everything on the caller when the pool
 /// is busy with a concurrent dispatch — results are identical either way,
 /// only the wall-clock changes. Counts `parallel_loops` only when the job
-/// actually went to the pool. A chunk panic (caught in [`run_chunks`]) is
-/// re-raised here on the dispatching thread, after the job has fully
-/// drained and been unpublished, so the pool stays sound.
-fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+/// actually went to the pool. A chunk panic (caught in [`run_chunks`])
+/// surfaces here as an `Err` on the dispatching thread — after the job has
+/// fully drained and been unpublished, so the pool stays sound — and
+/// propagates through the execution result; it never unwinds into the
+/// caller, so an embedding runtime (terra's GraphRunner) sees a failed
+/// execution, not an abort.
+fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
     if threads <= 1 || chunks <= 1 {
         for c in 0..chunks {
             f(c);
         }
-        return;
+        return Ok(());
     }
     let p = pool();
     p.ensure_workers(threads - 1);
@@ -526,7 +534,7 @@ fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
             for c in 0..chunks {
                 f(c);
             }
-            return;
+            return Ok(());
         }
         st.seq += 1;
         st.job = Some(job.clone());
@@ -542,8 +550,9 @@ fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
     drop(d);
     p.state.lock().unwrap().job = None;
     if job.panicked.load(Ordering::Relaxed) {
-        panic!("a parallel shim kernel chunk panicked (re-raised on the dispatch thread)");
+        return err("a parallel shim kernel chunk panicked (caught on the dispatch thread)");
     }
+    Ok(())
 }
 
 /// The fixed contiguous ranges `chunk_range(n, chunks, 0..chunks)`
@@ -1846,7 +1855,7 @@ fn exec_inst(
                             std::slice::from_raw_parts_mut(ptr.0.add(r.start * n), r.len() * n)
                         };
                         matmul_rows_simd(av, 0, a_mod, r.start, dst, r.len(), pr, bv, 0, k, n);
-                    });
+                    })?;
                 } else if par {
                     for bi in 0..batch {
                         let b_off = bi * k * n;
@@ -1867,7 +1876,7 @@ fn exec_inst(
                             matmul_rows_simd(
                                 av, a_base, m, r.start, dst, r.len(), pr, bv, b_off, k, n,
                             );
-                        });
+                        })?;
                     }
                 } else {
                     for bi in 0..batch {
@@ -1923,7 +1932,7 @@ fn exec_inst(
                             unsafe { std::slice::from_raw_parts_mut(ptr.0.add(row * n), n) };
                         matmul_row(arow, btr, dst, k);
                     }
-                });
+                })?;
             } else if par {
                 // Per-batch RHS: transpose serially on the dispatch thread,
                 // row-partition each batch.
@@ -1942,7 +1951,7 @@ fn exec_inst(
                             };
                             matmul_row(arow, btr, dst, k);
                         }
-                    });
+                    })?;
                 }
             } else {
                 for bi in 0..batch {
@@ -2114,7 +2123,7 @@ fn exec_inst(
                                     scalar,
                                 );
                             }
-                        });
+                        })?;
                         if simd {
                             let tail = (0..chunks)
                                 .map(|c| chunk_range(*out_n, chunks, c).len() % LANES)
@@ -2182,7 +2191,7 @@ fn exec_inst(
                                 init,
                                 scalar,
                             );
-                        });
+                        })?;
                     } else {
                         reduce_loop(v, &mut acc, in_dims, out_strides, *in_n, scalar);
                     }
@@ -2219,7 +2228,7 @@ fn exec_inst(
                     } else {
                         softmax_block(v, dst, r.start, r.len(), axis, inner);
                     }
-                });
+                })?;
             } else if simd {
                 softmax_block_simd(v, &mut out, 0, outer, axis, inner);
             } else {
@@ -2893,7 +2902,7 @@ fn exec_fused(
                         }
                     }
                 }
-            });
+            })?;
             if simd {
                 let tail =
                     (0..chunks).map(|c| chunk_range(n, chunks, c).len() % LANES).sum::<usize>();
@@ -2938,7 +2947,7 @@ fn exec_fused(
                             Cell::I(_) => bad_r.store(true, Ordering::Relaxed),
                         }
                     }
-                });
+                })?;
                 if bad.load(Ordering::Relaxed) {
                     return err("internal: fused output type");
                 }
@@ -2973,7 +2982,7 @@ fn exec_fused(
                             Cell::F(_) => bad_r.store(true, Ordering::Relaxed),
                         }
                     }
-                });
+                })?;
                 if bad.load(Ordering::Relaxed) {
                     return err("internal: fused output type");
                 }

@@ -904,6 +904,48 @@ pub(crate) static SIMD_LOOPS: AtomicU64 = AtomicU64::new(0);
 pub(crate) static SCALAR_TAIL_ELEMS: AtomicU64 = AtomicU64::new(0);
 pub(crate) static LAYOUT_COPIES_INSERTED: AtomicU64 = AtomicU64::new(0);
 
+/// Fault-injection hook for the worker pool: the 0-based ordinal of the
+/// chunk (counted from the last [`set_chunk_fault`] arming) whose closure
+/// panics, or `u64::MAX` when disarmed. The panic happens *inside* the
+/// per-chunk `catch_unwind`, so it exercises the pool's real containment:
+/// the job drains, `run_parallel` returns `Err`, the execution fails — the
+/// process does not abort. Armed by terra's GraphRunner around a segment
+/// execution when a `TERRA_FAULTS` worker rule is active; disarmed (the
+/// default) it costs one relaxed atomic load per chunk.
+static CHUNK_FAULT_AT: AtomicU64 = AtomicU64::new(u64::MAX);
+/// Chunks executed since the last arming (the ordinal stream
+/// [`CHUNK_FAULT_AT`] indexes into).
+static CHUNK_FAULT_SEEN: AtomicU64 = AtomicU64::new(0);
+/// Chunk faults injected since the last [`take_injected_chunk_faults`].
+static INJECTED_CHUNK_FAULTS: AtomicU64 = AtomicU64::new(0);
+
+/// Arm (`Some(ordinal)`) or disarm (`None`) the worker-pool chunk fault.
+/// Arming resets the chunk ordinal counter, so the ordinal is relative to
+/// the arming point.
+pub fn set_chunk_fault(target: Option<u64>) {
+    CHUNK_FAULT_SEEN.store(0, Ordering::Relaxed);
+    CHUNK_FAULT_AT.store(target.unwrap_or(u64::MAX), Ordering::Relaxed);
+}
+
+/// Drain the injected-chunk-fault count (terra's GraphRunner folds it into
+/// its fault-plan totals after each armed segment execution).
+pub fn take_injected_chunk_faults() -> u64 {
+    INJECTED_CHUNK_FAULTS.swap(0, Ordering::Relaxed)
+}
+
+/// Per-chunk check called from the pool's worker closure (under its
+/// `catch_unwind`): panics on the armed ordinal.
+pub(crate) fn chunk_fault_check() {
+    if CHUNK_FAULT_AT.load(Ordering::Relaxed) == u64::MAX {
+        return;
+    }
+    let ord = CHUNK_FAULT_SEEN.fetch_add(1, Ordering::Relaxed);
+    if ord == CHUNK_FAULT_AT.load(Ordering::Relaxed) {
+        INJECTED_CHUNK_FAULTS.fetch_add(1, Ordering::Relaxed);
+        panic!("injected worker chunk fault (chunk ordinal {ord})");
+    }
+}
+
 /// Programmatic override backing the `TERRA_SHIM_THREADS` env knob (the
 /// launcher's `--shim-threads` flag and the JSON `shim_threads` key route
 /// through this): `n >= 1` pins the bytecode backend's worker count, `0`

@@ -400,6 +400,36 @@ fn parallel_dispatch_is_counted() {
 }
 
 #[test]
+fn chunk_panic_surfaces_as_err_and_pool_stays_sound() {
+    let _g = THREADS_LOCK.lock().unwrap();
+    set_shim_threads(4);
+    let comp = parallel_corpus_comp();
+    let xs: Vec<f32> = (0..96 * 96).map(|i| (i % 13) as f32 * 0.1).collect();
+    let ws: Vec<f32> = (0..96 * 96).map(|i| (i % 5) as f32 * 0.2).collect();
+    let args = [&buf(&xs, &[96, 96]), &buf(&ws, &[96, 96])];
+    let exe = client().compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
+    let clean = exe.execute_b(&args).unwrap();
+    // Panic the first chunk the pool claims: the execution must fail with an
+    // Err — never unwind out of execute_b — and the fault must be counted.
+    set_chunk_fault(Some(0));
+    let faulted = exe.execute_b(&args);
+    set_chunk_fault(None);
+    assert!(faulted.is_err(), "chunk panic must surface as an execution error");
+    let msg = faulted.err().unwrap().to_string();
+    assert!(msg.contains("chunk panicked"), "error should name the chunk panic: {msg}");
+    assert!(take_injected_chunk_faults() >= 1, "injected fault must be counted");
+    // The pool must remain fully usable: the same executable re-runs clean
+    // and bit-identical after the fault.
+    let again = exe.execute_b(&args).unwrap();
+    set_shim_threads(0);
+    assert_eq!(clean.len(), again.len());
+    for (a, b) in clean.iter().zip(again.iter()) {
+        assert_bits_eq(a, b);
+    }
+    assert_eq!(take_injected_chunk_faults(), 0, "drain is a swap");
+}
+
+#[test]
 fn small_shapes_fall_back_to_serial_and_are_counted() {
     let _g = THREADS_LOCK.lock().unwrap();
     set_shim_threads(4);
