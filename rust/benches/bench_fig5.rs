@@ -121,6 +121,19 @@ fn main() {
                                 ("watchdog_timeouts_delta", num(bd.watchdog_timeouts)),
                                 ("plans_quarantined", num(st.plans_quarantined)),
                                 ("degraded_steps_delta", num(bd.degraded_steps)),
+                                // Streaming latency histograms (always on,
+                                // log2-bucket midpoints): per-iteration wall
+                                // clock, per-segment execution, mailbox
+                                // rendezvous waits. Run-cumulative gauges.
+                                ("iter_p50_ms", Json::Num(bd.iter_p50_ms)),
+                                ("iter_p90_ms", Json::Num(bd.iter_p90_ms)),
+                                ("iter_p99_ms", Json::Num(bd.iter_p99_ms)),
+                                ("seg_exec_p50_ms", Json::Num(bd.seg_exec_p50_ms)),
+                                ("seg_exec_p90_ms", Json::Num(bd.seg_exec_p90_ms)),
+                                ("seg_exec_p99_ms", Json::Num(bd.seg_exec_p99_ms)),
+                                ("mailbox_wait_p50_ms", Json::Num(bd.mailbox_wait_p50_ms)),
+                                ("mailbox_wait_p90_ms", Json::Num(bd.mailbox_wait_p90_ms)),
+                                ("mailbox_wait_p99_ms", Json::Num(bd.mailbox_wait_p99_ms)),
                             ]),
                         ));
                     }

@@ -537,6 +537,69 @@ fn main() {
         );
     }
 
+    // 10. Flight-recorder overhead (§Observability): the costs the tracing
+    // contract promises are negligible — a disabled span/instant must be a
+    // single relaxed load, an enabled record one short mutex-guarded ring
+    // write, and the always-on histograms one relaxed fetch_add.
+    {
+        use terra::obs::{self, InstantKind, SpanKind, Track};
+        obs::install(None);
+        obs::clear();
+        let (mean, _, _) = time_micro(
+            || {
+                let _s = obs::span(Track::Engine, SpanKind::PyExec, 0, 0, 0);
+            },
+            50000,
+        );
+        push("obs span disabled", mean, "ns", &mut json);
+        let (mean, _, _) = time_micro(
+            || obs::instant(Track::Engine, InstantKind::PlanCacheHit, 0, 0, 0),
+            50000,
+        );
+        push("obs instant disabled", mean, "ns", &mut json);
+        let trace_path = std::env::temp_dir().join("terra_micro_trace.json");
+        let cfg = terra::obs::TraceConfig::parse(
+            "bench",
+            &format!("chrome:{}", trace_path.display()),
+        )
+        .unwrap();
+        obs::install(Some(cfg));
+        let (mean, _, p99) = time_micro(
+            || {
+                let _s = obs::span(Track::Engine, SpanKind::PyExec, 0, 0, 0);
+            },
+            50000,
+        );
+        push("obs span enabled (mean)", mean, "ns", &mut json);
+        push("obs span enabled (p99)", p99 as f64, "ns", &mut json);
+        let (mean, _, _) = time_micro(
+            || obs::instant(Track::Engine, InstantKind::PlanCacheHit, 0, 0, 0),
+            50000,
+        );
+        push("obs instant enabled", mean, "ns", &mut json);
+        let n_events = obs::events().len() as f64;
+        push("obs ring events after bench", n_events, "count", &mut json);
+        obs::install(None);
+        obs::clear();
+        let hist = obs::Hist::default();
+        let mut tick = 1u64;
+        let (mean, _, _) = time_micro(
+            || {
+                hist.record_ns(tick);
+                tick = tick.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+            },
+            50000,
+        );
+        push("obs hist record", mean, "ns", &mut json);
+        let (mean, _, _) = time_micro(
+            || {
+                let _ = std::hint::black_box(hist.percentile_ns(0.99));
+            },
+            20000,
+        );
+        push("obs hist percentile", mean, "ns", &mut json);
+    }
+
     print_table("micro-benchmarks (§Perf)", &["metric", "value", "unit"], &rows);
     write_json_report("micro", Json::Arr(json));
 }

@@ -67,6 +67,25 @@ pub(crate) fn value_min<T: FromStr + PartialOrd + Display>(
     check_min(name, v, min)
 }
 
+/// Strict `TERRA_TRACE` knob: unset = tracing off, `chrome:<path>` = a
+/// validated [`TraceConfig`](crate::obs::TraceConfig), anything else a loud
+/// error naming the knob (same contract as the numeric knobs above).
+pub fn parse_env_trace() -> Result<Option<crate::obs::TraceConfig>> {
+    match std::env::var("TERRA_TRACE") {
+        Ok(v) => trace_value("TERRA_TRACE", Some(&v)),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(TerraError::Config(format!("TERRA_TRACE: {e}"))),
+    }
+}
+
+/// Testable core of [`parse_env_trace`].
+pub(crate) fn trace_value(
+    name: &str,
+    raw: Option<&str>,
+) -> Result<Option<crate::obs::TraceConfig>> {
+    raw.map(|r| crate::obs::TraceConfig::parse(name, r)).transpose()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +113,17 @@ mod tests {
         assert_eq!(value_min::<usize>("K", None, 1).unwrap(), None);
         let e = value_min::<usize>("K", Some("0"), 1).unwrap_err();
         assert!(e.to_string().contains("below the minimum"));
+    }
+
+    #[test]
+    fn trace_knob_is_strict() {
+        assert_eq!(trace_value("TERRA_TRACE", None).unwrap(), None);
+        let cfg = trace_value("TERRA_TRACE", Some("chrome:out/t.json")).unwrap().unwrap();
+        assert_eq!(cfg.path, "out/t.json");
+        for bad in ["", "on", "chrome", "chrome:", "json:/tmp/x"] {
+            let e = trace_value("TERRA_TRACE", Some(bad)).unwrap_err();
+            let msg = e.to_string();
+            assert!(msg.contains("TERRA_TRACE"), "error must name the knob: {msg}");
+        }
     }
 }

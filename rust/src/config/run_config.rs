@@ -81,6 +81,14 @@ pub struct RunConfig {
     /// are bit-identical either way; `false` = the seed's scalar loops).
     /// JSON `shim_simd`, CLI `--shim-simd`, env `TERRA_SHIM_SIMD`.
     pub shim_simd: bool,
+    /// Flight-recorder trace spec (`chrome:<path>`): `None` = tracing off.
+    /// JSON `trace` (string, strictly validated), CLI `--trace`, env
+    /// `TERRA_TRACE`. An explicit config/CLI value wins over the env knob
+    /// (see [`crate::obs::init_from_env`]).
+    pub trace: Option<crate::obs::TraceConfig>,
+    /// Dump the final [`crate::runner::RunReport`] as JSON to this path
+    /// after the run. JSON `stats_json` (string), CLI `--stats-json`.
+    pub stats_json: Option<String>,
 }
 
 /// Default optimization level: `TERRA_OPT_LEVEL` env override (validated;
@@ -123,6 +131,8 @@ impl Default for RunConfig {
             speculate: SpeculateConfig::from_env(),
             shim_threads: default_shim_threads(),
             shim_simd: default_shim_simd(),
+            trace: None,
+            stats_json: None,
         }
     }
 }
@@ -177,6 +187,18 @@ impl RunConfig {
             self.shim_simd = v.as_bool().ok_or_else(|| {
                 TerraError::Config("shim_simd must be a bool".into())
             })?;
+        }
+        if let Some(v) = json.get("trace") {
+            let spec = v.as_str().ok_or_else(|| {
+                TerraError::Config("trace must be a string (`chrome:<path>`)".into())
+            })?;
+            self.trace = Some(crate::obs::TraceConfig::parse("trace", spec)?);
+        }
+        if let Some(v) = json.get("stats_json") {
+            let path = v.as_str().ok_or_else(|| {
+                TerraError::Config("stats_json must be a string path".into())
+            })?;
+            self.stats_json = Some(path.to_string());
         }
         if let Some(s) = json.get("speculate") {
             if let Some(on) = s.as_bool() {
@@ -239,6 +261,17 @@ impl RunConfig {
     /// resolved `TERRA_SHIM_SIMD`), so this always sets the override.
     pub fn apply_shim_simd(&self) {
         xla::set_shim_simd(Some(self.shim_simd));
+    }
+
+    /// Install the flight-recorder config into the process recorder. A
+    /// `Some` here (explicit `--trace` / JSON `trace`) wins over
+    /// `TERRA_TRACE` because [`crate::obs::init_from_env`] — called on every
+    /// engine construction — no-ops once a config is installed. With `None`
+    /// this does nothing, leaving the env knob in charge.
+    pub fn apply_trace(&self) {
+        if let Some(cfg) = &self.trace {
+            crate::obs::install(Some(cfg.clone()));
+        }
     }
 }
 
@@ -319,6 +352,24 @@ mod tests {
         assert_eq!(RunConfig::from_json(&j).unwrap().shim_threads, 0, "0 = auto is valid");
         let j = Json::parse(r#"{"shim_threads": "many"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err(), "non-numeric shim_threads must be rejected");
+    }
+
+    #[test]
+    fn trace_and_stats_json_from_json() {
+        let cfg = RunConfig::default();
+        assert!(cfg.trace.is_none() && cfg.stats_json.is_none());
+        let j = Json::parse(r#"{"trace": "chrome:out/t.json", "stats_json": "out/s.json"}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.trace.unwrap().path, "out/t.json");
+        assert_eq!(cfg.stats_json.as_deref(), Some("out/s.json"));
+        // The trace spec is validated with the same strictness as TERRA_TRACE.
+        let j = Json::parse(r#"{"trace": "perfetto:/x"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "junk trace spec must be rejected");
+        let j = Json::parse(r#"{"trace": true}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-string trace must be rejected");
+        let j = Json::parse(r#"{"stats_json": 3}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-string stats_json must be rejected");
     }
 
     #[test]

@@ -305,6 +305,18 @@ impl FaultPlan {
         for rule in self.rules.iter().filter(|r| r.site == site) {
             if rule.fires(occurrence) {
                 self.injected.fetch_add(1, Ordering::Relaxed);
+                let kind_code = match rule.kind {
+                    FaultKind::Panic => 0,
+                    FaultKind::Error => 1,
+                    FaultKind::Hang => 2,
+                };
+                crate::obs::instant(
+                    crate::obs::Track::Engine,
+                    crate::obs::InstantKind::FaultInjected,
+                    0,
+                    site.index() as u64,
+                    kind_code,
+                );
                 return Some(rule.kind);
             }
         }
@@ -341,6 +353,18 @@ impl FaultPlan {
     pub fn note_injected(&self, n: u64) {
         if n > 0 {
             self.injected.fetch_add(n, Ordering::Relaxed);
+            // Worker-chunk faults are observed after the fact (the shim hook
+            // counted them); one instant per folded fault keeps the trace
+            // honest about the total.
+            for _ in 0..n {
+                crate::obs::instant(
+                    crate::obs::Track::Engine,
+                    crate::obs::InstantKind::FaultInjected,
+                    0,
+                    FaultSite::Worker.index() as u64,
+                    0,
+                );
+            }
         }
     }
 }

@@ -14,6 +14,8 @@
 //!   merging and plan generation), [`graphgen`], [`symbolic`], [`speculate`]
 //!   (plan cache + adaptive re-entry), [`runner`]
 //! * evaluation: [`baselines`], [`programs`], [`metrics`], [`bench`]
+//! * observability: [`obs`] (flight-recorder tracing, Chrome-trace export,
+//!   latency histograms, fault dumps)
 
 pub mod api;
 pub mod baselines;
@@ -26,6 +28,7 @@ pub mod faults;
 pub mod graphgen;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod ops;
 pub mod opt;
 pub mod programs;

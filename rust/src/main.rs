@@ -100,12 +100,22 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if flags.contains_key("breakdown") {
         cfg.breakdown = true;
     }
+    if let Some(v) = flags.get("trace") {
+        cfg.trace = Some(terra::obs::TraceConfig::parse("--trace", v)?);
+    }
+    if let Some(v) = flags.get("stats-json") {
+        cfg.stats_json = Some(v.clone());
+    }
     // The worker count and SIMD setting are process-level shim knobs, not
     // Engine fields: push them down here so every command honours
     // --shim-threads / --shim-simd / the JSON keys (env-only runs resolve
     // inside the shim without an override).
     cfg.apply_shim_threads();
     cfg.apply_shim_simd();
+    // Same push-down for the flight recorder: an explicit --trace / JSON
+    // `trace` beats TERRA_TRACE (engine construction then no-ops the env
+    // install).
+    cfg.apply_trace();
     Ok(cfg)
 }
 
@@ -143,6 +153,13 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     print_opt_stats(&report);
+    if let Some(path) = &cfg.stats_json {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("stats written to {path}");
+    }
+    if let Some(path) = terra::obs::export()? {
+        println!("trace written to {path} (load in Perfetto or chrome://tracing)");
+    }
     Ok(())
 }
 
@@ -213,6 +230,18 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
         s.watchdog_timeouts,
         s.plans_quarantined,
         s.degraded_steps,
+    );
+    println!(
+        "latency: iter p50/p90/p99 {:.3}/{:.3}/{:.3}ms | segment {:.3}/{:.3}/{:.3}ms | mailbox wait {:.3}/{:.3}/{:.3}ms",
+        b.iter_p50_ms,
+        b.iter_p90_ms,
+        b.iter_p99_ms,
+        b.seg_exec_p50_ms,
+        b.seg_exec_p90_ms,
+        b.seg_exec_p99_ms,
+        b.mailbox_wait_p50_ms,
+        b.mailbox_wait_p90_ms,
+        b.mailbox_wait_p99_ms,
     );
 }
 
@@ -321,11 +350,17 @@ fn main() {
         "help" | "--help" | "-h" => {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
-                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off] [--shim-threads 0|N] [--shim-simd on|off]\n  \
+                 commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off] [--shim-threads 0|N] [--shim-simd on|off]\n      [--trace chrome:<path>] [--stats-json <path>]\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \
-                 list                    list programs"
+                 list                    list programs\n\n\
+                 tracing (flight recorder):\n  \
+                 --trace chrome:<path> (or TERRA_TRACE=chrome:<path>, or JSON key \"trace\") records\n  \
+                 co-execution timeline spans in a fixed-size ring and writes Chrome trace-event JSON\n  \
+                 loadable in Perfetto / chrome://tracing. On a contained symbolic fault the last ring\n  \
+                 events are dumped to <path>.fault<k>.json. Off by default; zero-cost when off.\n  \
+                 --stats-json <path> dumps the final run report (stats + latency percentiles) as JSON."
             );
             Ok(())
         }

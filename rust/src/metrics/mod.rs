@@ -1,5 +1,6 @@
 //! Runner instrumentation: the Figure-6 breakdown and throughput statistics.
 
+use crate::obs::Hist;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
@@ -9,6 +10,13 @@ use std::time::{Duration, Instant};
 /// * `graph_exec` — GraphRunner executing segments / artifacts,
 /// * `graph_stall`— GraphRunner blocked on feeds / case selects / commit
 ///   barriers / the lazy-evaluation gate.
+///
+/// Alongside the four aggregates, the breakdown owns three always-on
+/// streaming latency histograms (per-iteration wall clock, per-segment
+/// execution, mailbox rendezvous wait) whose p50/p90/p99 land in every
+/// [`BreakdownSnapshot`] — unlike the event recorder in [`crate::obs`],
+/// these do not require `TERRA_TRACE` (a relaxed atomic increment per
+/// sample is cheap enough to keep on).
 #[derive(Debug, Default)]
 pub struct Breakdown {
     py_exec_ns: AtomicU64,
@@ -16,6 +24,9 @@ pub struct Breakdown {
     graph_exec_ns: AtomicU64,
     graph_stall_ns: AtomicU64,
     steps: AtomicU64,
+    iter_hist: Hist,
+    seg_hist: Hist,
+    mailbox_hist: Hist,
 }
 
 /// A point-in-time copy of the breakdown, in milliseconds, plus process-wide
@@ -105,6 +116,22 @@ pub struct BreakdownSnapshot {
     /// Steps that completed on a degraded rung of the fault ladder
     /// (imperative replay after a symbolic fault).
     pub degraded_steps: u64,
+    /// Per-iteration wall-clock latency percentiles in milliseconds
+    /// (log2-bucket midpoints, see [`crate::obs::Hist`]). Run-cumulative
+    /// gauges: carried through [`BreakdownSnapshot::per_step_since`]
+    /// unchanged, since percentiles cannot be differenced.
+    pub iter_p50_ms: f64,
+    pub iter_p90_ms: f64,
+    pub iter_p99_ms: f64,
+    /// Per-segment execution latency percentiles (gauges, ms).
+    pub seg_exec_p50_ms: f64,
+    pub seg_exec_p90_ms: f64,
+    pub seg_exec_p99_ms: f64,
+    /// Mailbox rendezvous wait percentiles — skeleton fetch waits plus
+    /// GraphRunner feed waits (gauges, ms).
+    pub mailbox_wait_p50_ms: f64,
+    pub mailbox_wait_p90_ms: f64,
+    pub mailbox_wait_p99_ms: f64,
 }
 
 impl Breakdown {
@@ -130,6 +157,21 @@ impl Breakdown {
 
     pub fn add_step(&self) {
         self.steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one training iteration's wall-clock time.
+    pub fn record_iter(&self, d: Duration) {
+        self.iter_hist.record(d);
+    }
+
+    /// Record one compiled-segment execution.
+    pub fn record_seg_exec(&self, d: Duration) {
+        self.seg_hist.record(d);
+    }
+
+    /// Record one mailbox rendezvous wait (fetch or feed side).
+    pub fn record_mailbox_wait(&self, d: Duration) {
+        self.mailbox_hist.record(d);
     }
 
     pub fn snapshot(&self) -> BreakdownSnapshot {
@@ -169,6 +211,15 @@ impl Breakdown {
             watchdog_timeouts: 0,
             plans_quarantined: 0,
             degraded_steps: 0,
+            iter_p50_ms: self.iter_hist.percentile_ms(0.50),
+            iter_p90_ms: self.iter_hist.percentile_ms(0.90),
+            iter_p99_ms: self.iter_hist.percentile_ms(0.99),
+            seg_exec_p50_ms: self.seg_hist.percentile_ms(0.50),
+            seg_exec_p90_ms: self.seg_hist.percentile_ms(0.90),
+            seg_exec_p99_ms: self.seg_hist.percentile_ms(0.99),
+            mailbox_wait_p50_ms: self.mailbox_hist.percentile_ms(0.50),
+            mailbox_wait_p90_ms: self.mailbox_hist.percentile_ms(0.90),
+            mailbox_wait_p99_ms: self.mailbox_hist.percentile_ms(0.99),
         }
     }
 }
@@ -222,6 +273,17 @@ impl BreakdownSnapshot {
             watchdog_timeouts: self.watchdog_timeouts.saturating_sub(earlier.watchdog_timeouts),
             plans_quarantined: self.plans_quarantined.saturating_sub(earlier.plans_quarantined),
             degraded_steps: self.degraded_steps.saturating_sub(earlier.degraded_steps),
+            // Percentiles are run-cumulative gauges (a histogram cannot be
+            // windowed after the fact): the later snapshot's values carry.
+            iter_p50_ms: self.iter_p50_ms,
+            iter_p90_ms: self.iter_p90_ms,
+            iter_p99_ms: self.iter_p99_ms,
+            seg_exec_p50_ms: self.seg_exec_p50_ms,
+            seg_exec_p90_ms: self.seg_exec_p90_ms,
+            seg_exec_p99_ms: self.seg_exec_p99_ms,
+            mailbox_wait_p50_ms: self.mailbox_wait_p50_ms,
+            mailbox_wait_p90_ms: self.mailbox_wait_p90_ms,
+            mailbox_wait_p99_ms: self.mailbox_wait_p99_ms,
         }
     }
 }
@@ -347,5 +409,28 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         assert!(b.snapshot().graph_stall_ms >= 1.0);
+    }
+
+    #[test]
+    fn latency_percentiles_land_in_snapshots_as_gauges() {
+        let b = Breakdown::new();
+        let early = b.snapshot();
+        assert_eq!(early.iter_p99_ms, 0.0);
+        for _ in 0..99 {
+            b.record_iter(Duration::from_micros(100));
+            b.record_seg_exec(Duration::from_micros(10));
+            b.record_mailbox_wait(Duration::from_micros(1));
+        }
+        b.record_iter(Duration::from_millis(50));
+        b.add_step();
+        let late = b.snapshot();
+        assert!(late.iter_p50_ms > 0.0 && late.iter_p50_ms < 1.0, "{}", late.iter_p50_ms);
+        assert!(late.iter_p99_ms > late.iter_p50_ms);
+        assert!(late.seg_exec_p90_ms > 0.0);
+        assert!(late.mailbox_wait_p99_ms > 0.0);
+        // per_step_since carries the later gauges unchanged.
+        let d = late.per_step_since(&early);
+        assert_eq!(d.iter_p99_ms, late.iter_p99_ms);
+        assert_eq!(d.mailbox_wait_p50_ms, late.mailbox_wait_p50_ms);
     }
 }

@@ -1,0 +1,748 @@
+//! Flight-recorder tracing for the co-execution engine.
+//!
+//! An always-compiled, off-by-default observability layer: a fixed-capacity
+//! ring buffer of timeline events (the *flight recorder*) fed by
+//! instrumentation points in both runners, the engine control path, and the
+//! shim, plus streaming log-scale latency histograms ([`Hist`]) that the
+//! engine's [`Breakdown`](crate::metrics::Breakdown) owns.
+//!
+//! Design contract (see `obs/README.md` for the long form):
+//!
+//! - **Off by default, cheap when off.** Every emit helper first reads one
+//!   relaxed atomic; when tracing is disabled nothing is timestamped, locked,
+//!   or heap-allocated on the hot path.
+//! - **Recording only.** Instrumentation never changes control flow,
+//!   rendezvous order, or results — a traced run is bit-identical to an
+//!   untraced run (enforced by `tests/obs_tracing.rs`).
+//! - **Bounded.** The ring holds [`RING_CAPACITY`] events and overwrites the
+//!   oldest, so a week-long run records the *recent* past — exactly what a
+//!   fault dump needs.
+//!
+//! Enable with `TERRA_TRACE=chrome:<path>` (strictly parsed: junk is a loud
+//! config error), the `--trace chrome:<path>` CLI flag, or the `trace` key of
+//! a JSON run config. [`export`] writes Chrome trace-event JSON loadable in
+//! Perfetto / `chrome://tracing`, with the PythonRunner, GraphRunner, and
+//! engine control path as separate named tracks. On any contained
+//! `SymbolicFault` the engine calls [`fault_dump`], serializing the last
+//! [`FAULT_DUMP_EVENTS`] events next to the trace path.
+
+use crate::config::Json;
+use crate::error::{Result, TerraError};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Ring-buffer capacity in events (~4.5 MB resident once tracing is on).
+pub const RING_CAPACITY: usize = 65_536;
+/// How many trailing events a fault dump serializes.
+pub const FAULT_DUMP_EVENTS: usize = 256;
+
+// ---- taxonomy --------------------------------------------------------------
+
+/// Timeline an event belongs to. Each track renders as one Chrome trace
+/// thread (`tid`) so Perfetto shows the two runners and the engine control
+/// path as separate swim lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    /// The imperative side: skeleton step execution and fetch waits.
+    Python,
+    /// The symbolic side: GraphRunner iterations, segments, kernels.
+    Graph,
+    /// Engine control: trace/merge/optimize/compile, re-entry, faults.
+    Engine,
+}
+
+impl Track {
+    fn tid(self) -> u64 {
+        match self {
+            Track::Python => 1,
+            Track::Graph => 2,
+            Track::Engine => 3,
+        }
+    }
+
+    fn thread_name(self) -> &'static str {
+        match self {
+            Track::Python => "PythonRunner",
+            Track::Graph => "GraphRunner",
+            Track::Engine => "Engine",
+        }
+    }
+}
+
+/// Interval events: phases with a start time and a duration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Imperative execution of one step (eager or co-execution skeleton).
+    PyExec,
+    /// Imperative execution of one step while (re)tracing.
+    TraceExec,
+    /// Skeleton blocked on a fetch rendezvous (`materialize`).
+    PyFetchWait,
+    /// One whole GraphRunner iteration (encloses the segment spans).
+    GraphIter,
+    /// GraphRunner blocked on run-ahead allowance or the commit barrier.
+    GraphStall,
+    /// One compiled segment execution (args: segment id, kernel cost).
+    SegExec,
+    /// One shim kernel execution inside a segment (args: instructions,
+    /// kernel cost), reported via `xla::take_last_exec`.
+    KernelExec,
+    /// GraphRunner blocked on a feed rendezvous.
+    FeedWait,
+    /// Merging a fresh trace into the TraceGraph.
+    TraceMerge,
+    /// Optimizer pass pipeline over the merged graph.
+    Optimize,
+    /// Plan generation (segmentation / scheduling).
+    PlanGen,
+    /// Segment compilation through the shim.
+    SegmentCompile,
+    /// Co-execution (re-)entry: plan lookup/build plus runner spawn.
+    EnterCoexec,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::PyExec => "py_exec",
+            SpanKind::TraceExec => "trace_exec",
+            SpanKind::PyFetchWait => "py_fetch_wait",
+            SpanKind::GraphIter => "graph_iter",
+            SpanKind::GraphStall => "graph_stall",
+            SpanKind::SegExec => "segment_exec",
+            SpanKind::KernelExec => "kernel",
+            SpanKind::FeedWait => "feed_wait",
+            SpanKind::TraceMerge => "trace_merge",
+            SpanKind::Optimize => "optimize",
+            SpanKind::PlanGen => "plan_gen",
+            SpanKind::SegmentCompile => "segment_compile",
+            SpanKind::EnterCoexec => "enter_coexec",
+        }
+    }
+
+    fn arg_names(self) -> (&'static str, &'static str) {
+        match self {
+            SpanKind::PyExec | SpanKind::TraceExec | SpanKind::Optimize => ("", ""),
+            SpanKind::PyFetchWait | SpanKind::FeedWait => ("node", ""),
+            SpanKind::GraphIter => ("steps", ""),
+            SpanKind::GraphStall => ("phase", ""),
+            SpanKind::SegExec => ("segment", "kernel_cost"),
+            SpanKind::KernelExec => ("instructions", "kernel_cost"),
+            SpanKind::TraceMerge => ("changed", ""),
+            SpanKind::PlanGen => ("segments", ""),
+            SpanKind::SegmentCompile => ("compiled_fresh", ""),
+            SpanKind::EnterCoexec => ("segments", "cache_hit"),
+        }
+    }
+}
+
+/// Point-in-time events (Chrome `ph:"i"` instants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstantKind {
+    /// Divergence fallback: the skeleton left the traced path.
+    Fallback,
+    /// Fallback truncated in-flight work at a split boundary instead of
+    /// cancelling the whole iteration window.
+    PartialCancel,
+    /// Uncommitted iterations replayed imperatively after a fault.
+    Replay,
+    /// A watchdog deadline expired while waiting on the symbolic side.
+    WatchdogFire,
+    /// A plan accumulated a quarantine strike.
+    QuarantineStrike,
+    /// Co-execution entry skipped during a plan's exponential backoff.
+    QuarantineBackoff,
+    /// A plan crossed the strike limit and is pinned to eager execution.
+    Quarantined,
+    /// The deterministic fault harness injected a fault.
+    FaultInjected,
+    /// A contained `SymbolicFault` reached the engine's recovery path.
+    Fault,
+    /// Plan-cache lookup outcomes on co-execution entry.
+    PlanCacheHit,
+    PlanCacheMiss,
+    /// Re-entry controller verdicts on a stable trace.
+    ReentryGo,
+    ReentryDefer,
+}
+
+impl InstantKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::Fallback => "fallback",
+            InstantKind::PartialCancel => "partial_cancel",
+            InstantKind::Replay => "imperative_replay",
+            InstantKind::WatchdogFire => "watchdog_fire",
+            InstantKind::QuarantineStrike => "quarantine_strike",
+            InstantKind::QuarantineBackoff => "quarantine_backoff",
+            InstantKind::Quarantined => "quarantined",
+            InstantKind::FaultInjected => "fault_injected",
+            InstantKind::Fault => "fault",
+            InstantKind::PlanCacheHit => "plan_cache_hit",
+            InstantKind::PlanCacheMiss => "plan_cache_miss",
+            InstantKind::ReentryGo => "reentry_go",
+            InstantKind::ReentryDefer => "reentry_defer",
+        }
+    }
+
+    fn arg_names(self) -> (&'static str, &'static str) {
+        match self {
+            InstantKind::Fallback => ("site", ""),
+            InstantKind::PartialCancel => ("boundary", ""),
+            InstantKind::Replay => ("from", "to"),
+            InstantKind::WatchdogFire => ("node", "timeout_ms"),
+            InstantKind::QuarantineStrike => ("strikes", "quarantined"),
+            InstantKind::QuarantineBackoff | InstantKind::Quarantined => ("", ""),
+            InstantKind::FaultInjected => ("site", "kind"),
+            InstantKind::Fault => ("stage", "panicked"),
+            InstantKind::PlanCacheHit | InstantKind::PlanCacheMiss => ("", ""),
+            InstantKind::ReentryGo | InstantKind::ReentryDefer => ("stable_run", "plan_cached"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum EventKind {
+    Span(SpanKind),
+    Instant(InstantKind),
+}
+
+/// One recorded timeline event. `Copy` with `&'static str` names only — the
+/// ring never owns heap data, so recording is a plain slot write.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub track: Track,
+    pub kind: EventKind,
+    /// Training-loop iteration the event belongs to (0 when not applicable).
+    pub iter: u64,
+    /// Start time, nanoseconds since the process trace epoch.
+    pub t_ns: u64,
+    /// Duration in nanoseconds; 0 for instants.
+    pub dur_ns: u64,
+    /// Two kind-specific arguments (see `arg_names`); 0 when unused.
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Event {
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            EventKind::Span(k) => k.name(),
+            EventKind::Instant(k) => k.name(),
+        }
+    }
+
+    pub fn is_instant(&self) -> bool {
+        matches!(self.kind, EventKind::Instant(_))
+    }
+
+    /// Chrome trace-event object (`ph:"X"` complete span / `ph:"i"` instant;
+    /// `ts`/`dur` in microseconds as the format requires).
+    fn chrome_json(&self) -> Json {
+        let (an, bn) = match self.kind {
+            EventKind::Span(k) => k.arg_names(),
+            EventKind::Instant(k) => k.arg_names(),
+        };
+        let mut args = BTreeMap::new();
+        args.insert("iter".to_string(), Json::Num(self.iter as f64));
+        if !an.is_empty() {
+            args.insert(an.to_string(), Json::Num(self.a as f64));
+        }
+        if !bn.is_empty() {
+            args.insert(bn.to_string(), Json::Num(self.b as f64));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name().to_string()));
+        m.insert("pid".to_string(), Json::Num(1.0));
+        m.insert("tid".to_string(), Json::Num(self.track.tid() as f64));
+        m.insert("ts".to_string(), Json::Num(self.t_ns as f64 / 1000.0));
+        match self.kind {
+            EventKind::Span(_) => {
+                m.insert("ph".to_string(), Json::Str("X".to_string()));
+                m.insert("dur".to_string(), Json::Num(self.dur_ns as f64 / 1000.0));
+            }
+            EventKind::Instant(_) => {
+                m.insert("ph".to_string(), Json::Str("i".to_string()));
+                m.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+        }
+        m.insert("args".to_string(), Json::Obj(args));
+        Json::Obj(m)
+    }
+}
+
+// ---- recorder --------------------------------------------------------------
+
+/// Trace sink configuration. Only the Chrome trace-event format exists today,
+/// so a config is a validated output path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    pub path: String,
+}
+
+impl TraceConfig {
+    /// Strict spec parser: `chrome:<nonempty path>` or a loud config error
+    /// naming `source` (the env knob, CLI flag, or JSON key it came from).
+    pub fn parse(source: &str, raw: &str) -> Result<TraceConfig> {
+        match raw.split_once(':') {
+            Some(("chrome", path)) if !path.is_empty() => {
+                Ok(TraceConfig { path: path.to_string() })
+            }
+            _ => Err(TerraError::Config(format!(
+                "{source}: expected `chrome:<path>`, got `{raw}`"
+            ))),
+        }
+    }
+}
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Oldest-slot index once the buffer has wrapped.
+    head: usize,
+}
+
+struct Recorder {
+    enabled: AtomicBool,
+    ring: Mutex<Ring>,
+    cfg: Mutex<Option<TraceConfig>>,
+    fault_dumps: AtomicU64,
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        enabled: AtomicBool::new(false),
+        ring: Mutex::new(Ring { buf: Vec::new(), head: 0 }),
+        cfg: Mutex::new(None),
+        fault_dumps: AtomicU64::new(0),
+    })
+}
+
+/// Poison-tolerant lock: fault containment catches panics elsewhere in the
+/// process, and the recorder must keep recording through them.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (monotonic).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Whether event recording is on. The one check every emit helper makes
+/// first; a single relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    recorder().enabled.load(Ordering::Relaxed)
+}
+
+/// Install (or with `None`, uninstall) the trace configuration. Installing
+/// preallocates the ring so [`record`-path] pushes never allocate; existing
+/// events are kept (use [`clear`] for a fresh session).
+pub fn install(cfg: Option<TraceConfig>) {
+    let r = recorder();
+    let on = cfg.is_some();
+    if on {
+        let mut ring = lock(&r.ring);
+        let want = RING_CAPACITY.saturating_sub(ring.buf.len());
+        ring.buf.reserve_exact(want);
+        let _ = epoch();
+    }
+    *lock(&r.cfg) = cfg;
+    r.enabled.store(on, Ordering::Relaxed);
+}
+
+/// The installed trace configuration, if any.
+pub fn config() -> Option<TraceConfig> {
+    lock(&recorder().cfg).clone()
+}
+
+/// Install from `TERRA_TRACE` unless a config is already installed (an
+/// explicit `--trace` / JSON `trace` wins over the environment). Called on
+/// engine construction so every binary honours the knob; junk values are a
+/// hard error via the strict `config::env` parser.
+pub fn init_from_env() -> Result<()> {
+    if config().is_some() {
+        return Ok(());
+    }
+    if let Some(cfg) = crate::config::env::parse_env_trace()? {
+        install(Some(cfg));
+    }
+    Ok(())
+}
+
+/// Drop all recorded events (the config and enable state stay).
+pub fn clear() {
+    let mut ring = lock(&recorder().ring);
+    ring.buf.clear();
+    ring.head = 0;
+}
+
+fn record(ev: Event) {
+    let r = recorder();
+    if !r.enabled.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut ring = lock(&r.ring);
+    if ring.buf.len() < RING_CAPACITY {
+        ring.buf.push(ev);
+    } else {
+        let h = ring.head;
+        ring.buf[h] = ev;
+        ring.head = (h + 1) % RING_CAPACITY;
+    }
+}
+
+/// Snapshot of the recorded events in chronological (record) order.
+pub fn events() -> Vec<Event> {
+    let ring = lock(&recorder().ring);
+    let mut out = Vec::with_capacity(ring.buf.len());
+    out.extend_from_slice(&ring.buf[ring.head..]);
+    out.extend_from_slice(&ring.buf[..ring.head]);
+    out
+}
+
+/// Drain the ring: snapshot then clear (test hygiene between runs).
+pub fn take_events() -> Vec<Event> {
+    let out = events();
+    clear();
+    out
+}
+
+// ---- emit helpers ----------------------------------------------------------
+
+/// Record an instant event.
+pub fn instant(track: Track, kind: InstantKind, iter: u64, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        track,
+        kind: EventKind::Instant(kind),
+        iter,
+        t_ns: now_ns(),
+        dur_ns: 0,
+        a,
+        b,
+    });
+}
+
+/// Record a span from explicit epoch-relative times (used for shim kernel
+/// spans whose duration is reported after the fact).
+pub fn span_raw(track: Track, kind: SpanKind, iter: u64, t_ns: u64, dur_ns: u64, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    record(Event { track, kind: EventKind::Span(kind), iter, t_ns, dur_ns, a, b });
+}
+
+/// Record a span that started at `start` and ends now.
+pub fn span_since(track: Track, kind: SpanKind, iter: u64, start: Instant, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let dur = start.elapsed().as_nanos() as u64;
+    let end = now_ns();
+    span_raw(track, kind, iter, end.saturating_sub(dur), dur, a, b);
+}
+
+/// RAII span: records on drop, so early `?` returns still close the
+/// interval. Inert (no timestamp taken) when tracing is disabled.
+pub struct SpanGuard {
+    start: Option<Instant>,
+    track: Track,
+    kind: SpanKind,
+    iter: u64,
+    a: u64,
+    b: u64,
+}
+
+/// Open a [`SpanGuard`].
+pub fn span(track: Track, kind: SpanKind, iter: u64, a: u64, b: u64) -> SpanGuard {
+    SpanGuard { start: enabled().then(Instant::now), track, kind, iter, a, b }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            span_since(self.track, self.kind, self.iter, start, self.a, self.b);
+        }
+    }
+}
+
+// ---- exporters -------------------------------------------------------------
+
+fn meta_event(tid: u64, name: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(name.to_string()));
+    let mut m = BTreeMap::new();
+    m.insert(
+        "name".to_string(),
+        Json::Str(if tid == 0 { "process_name" } else { "thread_name" }.to_string()),
+    );
+    m.insert("ph".to_string(), Json::Str("M".to_string()));
+    m.insert("pid".to_string(), Json::Num(1.0));
+    m.insert("tid".to_string(), Json::Num(tid as f64));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+/// Render events as a Chrome trace-event JSON document (Perfetto /
+/// `chrome://tracing` compatible): process/thread name metadata, then the
+/// events sorted by start time so spans nest visually.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut sorted: Vec<&Event> = events.iter().collect();
+    sorted.sort_by_key(|e| e.t_ns);
+    let mut arr = vec![meta_event(0, "terra")];
+    for track in [Track::Python, Track::Graph, Track::Engine] {
+        arr.push(meta_event(track.tid(), track.thread_name()));
+    }
+    arr.extend(sorted.iter().map(|e| e.chrome_json()));
+    let mut m = BTreeMap::new();
+    m.insert("traceEvents".to_string(), Json::Arr(arr));
+    m.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(m)
+}
+
+/// Write the Chrome trace to the configured path. `Ok(None)` when tracing is
+/// not installed.
+pub fn export() -> Result<Option<String>> {
+    let Some(cfg) = config() else { return Ok(None) };
+    let doc = chrome_trace(&events());
+    std::fs::write(&cfg.path, doc.to_string())?;
+    Ok(Some(cfg.path))
+}
+
+/// Serialize the last [`FAULT_DUMP_EVENTS`] ring events next to the trace
+/// path (`<path>.fault<k>.json`) so a contained fault ships its timeline
+/// context. Returns the dump path, or `None` when tracing is off or the
+/// write fails — a failed dump must never escalate the fault it documents.
+pub fn fault_dump(stage: &str, message: &str) -> Option<String> {
+    let cfg = config()?;
+    let evs = events();
+    let tail = &evs[evs.len().saturating_sub(FAULT_DUMP_EVENTS)..];
+    let k = recorder().fault_dumps.fetch_add(1, Ordering::Relaxed);
+    let path = format!("{}.fault{k}.json", cfg.path);
+    let mut m = BTreeMap::new();
+    m.insert("stage".to_string(), Json::Str(stage.to_string()));
+    m.insert("message".to_string(), Json::Str(message.to_string()));
+    m.insert(
+        "events".to_string(),
+        Json::Arr(tail.iter().map(Event::chrome_json).collect()),
+    );
+    std::fs::write(&path, Json::Obj(m).to_string()).ok()?;
+    Some(path)
+}
+
+// ---- histograms ------------------------------------------------------------
+
+/// Streaming latency histogram: 64 power-of-two buckets over nanoseconds
+/// (bucket `i` holds values in `[2^i, 2^(i+1))`), lock-free relaxed counts.
+/// Percentiles report the bucket midpoint, so they carry log2-bucket
+/// resolution (±50%) — plenty for p50/p90/p99 latency lines, constant
+/// memory, and no per-sample allocation.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl Hist {
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        let idx = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Percentile `p` in `[0, 1]` as the midpoint of the covering bucket,
+    /// in nanoseconds; 0 when the histogram is empty.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << i) + ((1u64 << i) >> 1);
+            }
+        }
+        (1u64 << 63) + (1u64 << 62)
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile_ns(p) as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is process-global state; tests that touch it serialize.
+    fn guard() -> MutexGuard<'static, ()> {
+        static G: OnceLock<Mutex<()>> = OnceLock::new();
+        lock(G.get_or_init(|| Mutex::new(())))
+    }
+
+    #[test]
+    fn disabled_recorder_stays_empty() {
+        let _g = guard();
+        install(None);
+        clear();
+        instant(Track::Engine, InstantKind::Fallback, 3, 7, 0);
+        span_since(Track::Python, SpanKind::PyExec, 3, Instant::now(), 0, 0);
+        drop(span(Track::Graph, SpanKind::GraphIter, 3, 0, 0));
+        assert!(events().is_empty());
+    }
+
+    #[test]
+    fn ring_records_and_wraps() {
+        let _g = guard();
+        install(Some(TraceConfig { path: "unused".into() }));
+        clear();
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            instant(Track::Engine, InstantKind::FaultInjected, i, 0, 0);
+        }
+        let evs = take_events();
+        install(None);
+        assert_eq!(evs.len(), RING_CAPACITY);
+        // Oldest events were overwritten; order stays chronological.
+        assert_eq!(evs.first().unwrap().iter, 10);
+        assert_eq!(evs.last().unwrap().iter, RING_CAPACITY as u64 + 9);
+        assert!(evs.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+    }
+
+    #[test]
+    fn spans_measure_and_instants_do_not() {
+        let _g = guard();
+        install(Some(TraceConfig { path: "unused".into() }));
+        clear();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        span_since(Track::Graph, SpanKind::SegExec, 2, t0, 4, 99);
+        instant(Track::Engine, InstantKind::Fault, 2, 1, 0);
+        let evs = take_events();
+        install(None);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name(), "segment_exec");
+        assert!(!evs[0].is_instant());
+        assert!(evs[0].dur_ns >= 5_000_000, "span too short: {}", evs[0].dur_ns);
+        assert_eq!((evs[0].a, evs[0].b), (4, 99));
+        assert!(evs[1].is_instant());
+        assert_eq!(evs[1].name(), "fault");
+    }
+
+    #[test]
+    fn trace_spec_parses_strictly() {
+        assert_eq!(
+            TraceConfig::parse("TERRA_TRACE", "chrome:/tmp/t.json").unwrap(),
+            TraceConfig { path: "/tmp/t.json".into() }
+        );
+        for junk in ["", "chrome", "chrome:", "perfetto:/x", "yes"] {
+            let err = TraceConfig::parse("TERRA_TRACE", junk).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("TERRA_TRACE"), "error must name the knob: {msg}");
+        }
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let evs = vec![
+            Event {
+                track: Track::Graph,
+                kind: EventKind::Span(SpanKind::GraphIter),
+                iter: 1,
+                t_ns: 2_000,
+                dur_ns: 10_000,
+                a: 0,
+                b: 0,
+            },
+            Event {
+                track: Track::Graph,
+                kind: EventKind::Span(SpanKind::SegExec),
+                iter: 1,
+                t_ns: 3_000,
+                dur_ns: 4_000,
+                a: 0,
+                b: 12,
+            },
+            Event {
+                track: Track::Engine,
+                kind: EventKind::Instant(InstantKind::Fallback),
+                iter: 1,
+                t_ns: 9_000,
+                dur_ns: 0,
+                a: 5,
+                b: 0,
+            },
+        ];
+        let doc = Json::parse(&chrome_trace(&evs).to_string()).unwrap();
+        let arr = doc.arr_field("traceEvents").unwrap();
+        // 1 process + 3 thread metadata records, then the events.
+        assert_eq!(arr.len(), 4 + evs.len());
+        // Thread names live in the metadata records' args.
+        let threads: Vec<&str> = arr
+            .iter()
+            .filter(|e| e.str_field("name").ok() == Some("thread_name"))
+            .map(|e| e.get("args").unwrap().str_field("name").unwrap())
+            .collect();
+        assert!(threads.contains(&"PythonRunner") && threads.contains(&"GraphRunner"));
+        let named = |want: &'static str| {
+            arr.iter().find(move |e| e.str_field("name").ok() == Some(want)).unwrap()
+        };
+        let seg = named("segment_exec");
+        assert_eq!(seg.str_field("ph").unwrap(), "X");
+        assert_eq!(seg.get("ts").unwrap().as_f64(), Some(3.0));
+        assert_eq!(seg.get("dur").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            seg.get("args").unwrap().get("kernel_cost").unwrap().as_f64(),
+            Some(12.0)
+        );
+        let fb = named("fallback");
+        assert_eq!(fb.str_field("ph").unwrap(), "i");
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_the_data() {
+        let h = Hist::default();
+        assert_eq!(h.percentile_ns(0.99), 0);
+        // 90 fast samples (~1µs) and 10 slow ones (~1ms).
+        for _ in 0..90 {
+            h.record_ns(1_000);
+        }
+        for _ in 0..10 {
+            h.record_ns(1_000_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_ns(0.50);
+        let p99 = h.percentile_ns(0.99);
+        assert!((512..2_048).contains(&p50), "p50 {p50}");
+        assert!((524_288..2_097_152).contains(&p99), "p99 {p99}");
+        assert!(h.percentile_ms(0.99) > h.percentile_ms(0.50));
+        // Duration-based recording lands in the same buckets.
+        h.record(Duration::from_nanos(1_500));
+        assert_eq!(h.count(), 101);
+    }
+}

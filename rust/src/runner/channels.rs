@@ -81,6 +81,13 @@ impl CoExecChannels {
     /// replays the whole step imperatively), it only completes the prefix
     /// whose results the PythonRunner already consumed.
     pub fn cancel_downstream(&self, iter: u64, limit: usize, downstream: &MessageNodes) {
+        crate::obs::instant(
+            crate::obs::Track::Engine,
+            crate::obs::InstantKind::PartialCancel,
+            iter,
+            limit as u64,
+            0,
+        );
         *lock_recover(&self.truncation) = Some((iter, limit));
         self.feeds.cancel_keys(iter, &downstream.feeds);
         self.cases.cancel_keys(iter, &downstream.cases);

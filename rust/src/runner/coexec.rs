@@ -15,12 +15,13 @@
 //! dropped, host state is restored before the step is replayed imperatively.
 
 use crate::api::{Backend, EagerBackend, Session, TracingBackend, VarStore};
-use crate::config::{default_opt_level, ExecMode};
+use crate::config::{default_opt_level, ExecMode, Json};
 use crate::eager::EagerExecutor;
 use crate::error::{FaultStage, Result, SymbolicFault, TerraError};
 use crate::faults::{FaultKind, FaultPlan, FaultSite};
 use crate::graphgen::{generate_plan, GenOptions};
 use crate::metrics::{Breakdown, BreakdownSnapshot, Throughput};
+use crate::obs::{self, InstantKind, SpanKind, Track};
 use crate::opt::{ConstEvaluator, OptTotals, PassManager};
 use crate::programs::Program;
 use crate::runner::channels::CoExecChannels;
@@ -68,6 +69,16 @@ fn watchdog_from_env() -> Result<Option<Duration>> {
 fn debug_log(msg: std::fmt::Arguments<'_>) {
     if std::env::var_os("TERRA_DEBUG").is_some() {
         eprintln!("[terra] {msg}");
+    }
+}
+
+/// Stable numeric encoding of a [`FaultStage`] for trace-event arguments.
+fn fault_stage_code(stage: FaultStage) -> u64 {
+    match stage {
+        FaultStage::PlanBuild => 0,
+        FaultStage::SegmentExec => 1,
+        FaultStage::Watchdog => 2,
+        FaultStage::Channel => 3,
     }
 }
 
@@ -200,6 +211,83 @@ impl RunReport {
             self.stats.fallbacks,
         )
     }
+
+    /// The full report as a JSON document (the `--stats-json` dump): run
+    /// identity and throughput, sampled losses, every [`EngineStats`]
+    /// counter, and the per-step breakdown including the latency
+    /// percentiles. One flat schema shared by the CLI and scripts.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let num = Json::Num;
+        let int = |v: u64| Json::Num(v as f64);
+        let s = &self.stats;
+        let stats = Json::Obj(BTreeMap::from([
+            ("enter_coexec".to_string(), int(s.enter_coexec)),
+            ("fallbacks".to_string(), int(s.fallbacks)),
+            ("traces_collected".to_string(), int(s.traces_collected)),
+            ("segments_compiled".to_string(), int(s.segments_compiled)),
+            ("plans_generated".to_string(), int(s.plans_generated)),
+            ("opt_nodes_removed".to_string(), int(s.opt_nodes_removed)),
+            ("opt_nodes_folded".to_string(), int(s.opt_nodes_folded)),
+            ("opt_rewrites".to_string(), int(s.opt_rewrites)),
+            ("plan_segment_nodes".to_string(), int(s.plan_segment_nodes)),
+            ("plan_segments".to_string(), int(s.plan_segments)),
+            ("mailbox_dropped".to_string(), int(s.mailbox_dropped)),
+            ("plan_cache_hits".to_string(), int(s.plan_cache_hits)),
+            ("plan_cache_misses".to_string(), int(s.plan_cache_misses)),
+            ("segment_compiles_skipped".to_string(), int(s.segment_compiles_skipped)),
+            ("reentry_deferred".to_string(), int(s.reentry_deferred)),
+            ("reentry_avg_ms".to_string(), num(s.reentry_avg_ms())),
+            ("steps_cancelled".to_string(), int(s.steps_cancelled)),
+            ("steps_saved_by_split".to_string(), int(s.steps_saved_by_split)),
+            ("plan_split_points".to_string(), int(s.plan_split_points)),
+            ("sites_overflowed".to_string(), int(s.sites_overflowed)),
+            ("faults_injected".to_string(), int(s.faults_injected)),
+            ("panics_recovered".to_string(), int(s.panics_recovered)),
+            ("watchdog_timeouts".to_string(), int(s.watchdog_timeouts)),
+            ("plans_quarantined".to_string(), int(s.plans_quarantined)),
+            ("degraded_steps".to_string(), int(s.degraded_steps)),
+        ]));
+        let bd = &self.breakdown_per_step;
+        let breakdown = Json::Obj(BTreeMap::from([
+            ("py_exec_ms".to_string(), num(bd.py_exec_ms)),
+            ("py_stall_ms".to_string(), num(bd.py_stall_ms)),
+            ("graph_exec_ms".to_string(), num(bd.graph_exec_ms)),
+            ("graph_stall_ms".to_string(), num(bd.graph_stall_ms)),
+            ("steps".to_string(), int(bd.steps)),
+            ("cache_hits".to_string(), int(bd.cache_hits)),
+            ("cache_misses".to_string(), int(bd.cache_misses)),
+            ("compile_count".to_string(), int(bd.compile_count)),
+            ("shim_instructions".to_string(), int(bd.shim_instructions)),
+            ("shim_compile_ms".to_string(), num(bd.shim_compile_ms)),
+            ("shim_execute_ms".to_string(), num(bd.shim_execute_ms)),
+            ("iter_p50_ms".to_string(), num(bd.iter_p50_ms)),
+            ("iter_p90_ms".to_string(), num(bd.iter_p90_ms)),
+            ("iter_p99_ms".to_string(), num(bd.iter_p99_ms)),
+            ("seg_exec_p50_ms".to_string(), num(bd.seg_exec_p50_ms)),
+            ("seg_exec_p90_ms".to_string(), num(bd.seg_exec_p90_ms)),
+            ("seg_exec_p99_ms".to_string(), num(bd.seg_exec_p99_ms)),
+            ("mailbox_wait_p50_ms".to_string(), num(bd.mailbox_wait_p50_ms)),
+            ("mailbox_wait_p90_ms".to_string(), num(bd.mailbox_wait_p90_ms)),
+            ("mailbox_wait_p99_ms".to_string(), num(bd.mailbox_wait_p99_ms)),
+        ]));
+        let losses = Json::Arr(
+            self.losses
+                .iter()
+                .map(|(step, l)| Json::Arr(vec![int(*step), num(*l as f64)]))
+                .collect(),
+        );
+        Json::Obj(BTreeMap::from([
+            ("program".to_string(), Json::Str(self.program.clone())),
+            ("mode".to_string(), Json::Str(self.mode.name().to_string())),
+            ("steps".to_string(), int(self.steps)),
+            ("measured_steps".to_string(), int(self.measured_steps)),
+            ("steps_per_sec".to_string(), num(self.steps_per_sec)),
+            ("losses".to_string(), losses),
+            ("stats".to_string(), stats),
+            ("breakdown_per_step".to_string(), breakdown),
+        ]))
+    }
 }
 
 pub struct Engine {
@@ -304,6 +392,9 @@ impl Engine {
         opt_level: u8,
         speculate: SpeculateConfig,
     ) -> Result<Engine> {
+        // Honour `TERRA_TRACE` in every binary that constructs an engine
+        // (CLI, benches, tests); an explicit `--trace` install wins.
+        obs::init_from_env()?;
         let client = Client::global().clone();
         let artifacts = Arc::new(ArtifactStore::open(artifacts_dir)?);
         let vars = Arc::new(VarStore::new(client.clone()));
@@ -507,7 +598,12 @@ impl Engine {
     /// Execute one training step under the current phase. Returns the
     /// materialized loss, if fetched this step.
     pub fn run_step(&mut self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
+        let t0 = Instant::now();
         let out = self.run_step_inner(prog, step);
+        // Per-iteration wall clock feeds the always-on latency histogram
+        // (fault recovery and fallback replays included — the p99 tail is
+        // exactly what they show up in).
+        self.breakdown.record_iter(t0.elapsed());
         if out.is_ok() {
             self.next_step = step + 1;
         }
@@ -533,6 +629,7 @@ impl Engine {
             Phase::Eager => {
                 let t0 = Instant::now();
                 let loss = self.exec_step(prog, step)?;
+                obs::span_since(Track::Python, SpanKind::PyExec, step, t0, 0, 0);
                 self.breakdown.add_py_exec(t0.elapsed());
                 self.breakdown.add_step();
                 Ok(loss)
@@ -558,6 +655,7 @@ impl Engine {
                 let t0 = Instant::now();
                 match self.exec_step(prog, step) {
                     Ok(loss) => {
+                        obs::span_since(Track::Python, SpanKind::PyExec, step, t0, 0, 0);
                         self.breakdown.add_py_exec(t0.elapsed());
                         self.breakdown.add_step();
                         // Surface asynchronous GraphRunner failures.
@@ -640,6 +738,7 @@ impl Engine {
     fn trace_step(&mut self, prog: &mut dyn Program, step: u64) -> Result<Option<f32>> {
         let t0 = Instant::now();
         let loss = self.exec_step(prog, step)?;
+        obs::span_since(Track::Python, SpanKind::TraceExec, step, t0, 0, 0);
         self.breakdown.add_py_exec(t0.elapsed());
         self.breakdown.add_step();
         let trace = self
@@ -647,7 +746,9 @@ impl Engine {
             .take_trace()
             .ok_or_else(|| TerraError::CoExec("tracing backend produced no trace".into()))?;
         self.stats.traces_collected += 1;
+        let t_merge = Instant::now();
         let report = self.graph.merge(&trace)?;
+        obs::span_since(Track::Engine, SpanKind::TraceMerge, step, t_merge, report.changed as u64, 0);
         if report.changed {
             self.cached_sig = None;
         }
@@ -658,11 +759,19 @@ impl Engine {
             // wins over backoff.
             let plan_cached = self.signature_in_cache();
             if self.controller.decide(plan_cached) {
+                obs::instant(
+                    Track::Engine,
+                    InstantKind::ReentryGo,
+                    step,
+                    self.controller.stable_run() as u64,
+                    plan_cached as u64,
+                );
                 match self.quarantine_verdict() {
                     QuarantineVerdict::Quarantined => {
                         // Terminal rung of the fault ladder: this plan
                         // exhausted its strikes and stays eager for the
                         // process lifetime.
+                        obs::instant(Track::Engine, InstantKind::Quarantined, step, 0, 0);
                         debug_log(format_args!(
                             "step {step}: stable trace, but the plan is quarantined \
                              (pinned to eager execution)"
@@ -670,6 +779,7 @@ impl Engine {
                     }
                     QuarantineVerdict::Backoff => {
                         self.stats.reentry_deferred += 1;
+                        obs::instant(Track::Engine, InstantKind::QuarantineBackoff, step, 0, 0);
                         debug_log(format_args!(
                             "step {step}: stable trace, deferring re-entry (fault backoff)"
                         ));
@@ -680,6 +790,18 @@ impl Engine {
                             // Plan build faulted (contained panic or injected
                             // error): strike and stay imperative; the backoff
                             // schedule decides when the compile is retried.
+                            obs::instant(
+                                Track::Engine,
+                                InstantKind::Fault,
+                                step,
+                                fault_stage_code(fault.stage),
+                                fault.panicked as u64,
+                            );
+                            if let Some(path) =
+                                obs::fault_dump(&fault.stage.to_string(), &fault.message)
+                            {
+                                debug_log(format_args!("fault dump written to {path}"));
+                            }
                             debug_log(format_args!(
                                 "step {step}: co-execution entry failed ({fault}); \
                                  staying imperative"
@@ -704,6 +826,13 @@ impl Engine {
                 }
             } else {
                 self.stats.reentry_deferred += 1;
+                obs::instant(
+                    Track::Engine,
+                    InstantKind::ReentryDefer,
+                    step,
+                    self.controller.stable_run() as u64,
+                    plan_cached as u64,
+                );
                 debug_log(format_args!(
                     "step {step}: stable trace, deferring re-entry (controller requires {} \
                      stable traces)",
@@ -795,6 +924,7 @@ impl Engine {
         // failing plan build) to this key.
         self.current_key = Some(key);
         let cached = self.plan_cache.as_ref().and_then(|cache| cache.lookup(&key));
+        let cache_hit = cached.is_some();
         let plan: Arc<CompiledPlan> = match cached {
             Some(hit) => {
                 // Speculation hit: the exact indexed structure was compiled
@@ -804,6 +934,7 @@ impl Engine {
                 // store, so re-validate its Artifact steps against ours: a
                 // missing artifact must fail here, not mid-iteration.
                 validate_plan_artifacts(&hit.plan.steps, &self.artifacts)?;
+                obs::instant(Track::Engine, InstantKind::PlanCacheHit, next_iter, 0, 0);
                 self.stats.plan_cache_hits += 1;
                 self.stats.segment_compiles_skipped += hit.segments;
                 self.stats.plan_segments = hit.segments;
@@ -816,9 +947,10 @@ impl Engine {
             }
             None => {
                 if self.plan_cache.is_some() {
+                    obs::instant(Track::Engine, InstantKind::PlanCacheMiss, next_iter, 0, 0);
                     self.stats.plan_cache_misses += 1;
                 }
-                let plan = Arc::new(self.build_plan_contained(&full, &splits)?);
+                let plan = Arc::new(self.build_plan_contained(&full, &splits, next_iter)?);
                 if let Some(cache) = &self.plan_cache {
                     cache.insert(key, plan.clone());
                 }
@@ -853,6 +985,14 @@ impl Engine {
         self.stats.enter_coexec += 1;
         self.controller.note_entered(next_iter);
         self.stats.reentry_ns += t_enter.elapsed().as_nanos() as u64;
+        obs::span_since(
+            Track::Engine,
+            SpanKind::EnterCoexec,
+            next_iter,
+            t_enter,
+            self.stats.plan_segments,
+            cache_hit as u64,
+        );
         Ok(())
     }
 
@@ -864,11 +1004,12 @@ impl Engine {
         &mut self,
         full: &Arc<TraceGraph>,
         splits: &BTreeSet<NodeId>,
+        iter: u64,
     ) -> Result<CompiledPlan> {
         if self.mode == ExecMode::AutoGraph {
-            return self.build_plan(full, splits);
+            return self.build_plan(full, splits, iter);
         }
-        match catch_unwind(AssertUnwindSafe(|| self.build_plan(full, splits))) {
+        match catch_unwind(AssertUnwindSafe(|| self.build_plan(full, splits, iter))) {
             Ok(res) => res,
             Err(payload) => Err(TerraError::Fault(SymbolicFault::panic(
                 FaultStage::PlanBuild,
@@ -884,6 +1025,7 @@ impl Engine {
         &mut self,
         full: &Arc<TraceGraph>,
         splits: &BTreeSet<NodeId>,
+        iter: u64,
     ) -> Result<CompiledPlan> {
         if let Some(f) = &self.faults {
             match f.check(FaultSite::Compile) {
@@ -909,7 +1051,10 @@ impl Engine {
         } else {
             let mut optimized = self.graph.clone();
             let evaluator: &dyn ConstEvaluator = self.exec.as_ref();
-            match pm.run(&mut optimized, Some(evaluator)) {
+            let t_opt = Instant::now();
+            let opt_result = pm.run(&mut optimized, Some(evaluator));
+            obs::span_since(Track::Engine, SpanKind::Optimize, iter, t_opt, 0, 0);
+            match opt_result {
                 Ok(report) => {
                     debug_log(format_args!("{}", report.summary()));
                     let total = report.total();
@@ -927,13 +1072,24 @@ impl Engine {
                 }
             }
         };
+        let t_gen = Instant::now();
         let spec = generate_plan(&graph, &self.var_types()?, &opts)?;
         self.stats.plan_segment_nodes =
             spec.segments.iter().map(|s| s.nodes.len() as u64).sum();
         self.stats.plan_segments =
             spec.segments.iter().filter(|s| !s.nodes.is_empty()).count() as u64;
+        obs::span_since(Track::Engine, SpanKind::PlanGen, iter, t_gen, self.stats.plan_segments, 0);
         debug_log(format_args!("entering co-execution: {}", spec.summary()));
+        let t_compile = Instant::now();
         let plan = compile_plan(&self.client, &self.seg_cache, &self.artifacts, graph, spec)?;
+        obs::span_since(
+            Track::Engine,
+            SpanKind::SegmentCompile,
+            iter,
+            t_compile,
+            plan.compiled_fresh as u64,
+            0,
+        );
         self.stats.segments_compiled += plan.compiled_fresh as u64;
         self.stats.plans_generated += 1;
         Ok(plan)
@@ -952,6 +1108,13 @@ impl Engine {
     /// truncated iteration still never commits its staged variable updates;
     /// the step is replayed imperatively either way.
     fn fallback(&mut self, iter: u64, site: Option<NodeId>) -> Result<()> {
+        obs::instant(
+            Track::Engine,
+            InstantKind::Fallback,
+            iter,
+            site.map_or(0, |s| s.0 as u64),
+            0,
+        );
         let channels = self.channels.take();
         let plan = self.current_plan.take();
         // Partial cancel needs a boundary-aligned site and the concurrent
@@ -1037,6 +1200,16 @@ impl Engine {
         validated_loss: Option<Option<f32>>,
     ) -> Result<Option<f32>> {
         let fault = self.normalize_fault(err);
+        obs::instant(
+            Track::Engine,
+            InstantKind::Fault,
+            step,
+            fault_stage_code(fault.stage),
+            fault.panicked as u64,
+        );
+        if let Some(path) = obs::fault_dump(&fault.stage.to_string(), &fault.message) {
+            debug_log(format_args!("fault dump written to {path}"));
+        }
         debug_log(format_args!("step {step}: {fault}; degrading to imperative replay"));
         if fault.panicked {
             self.stats.panics_recovered += 1;
@@ -1073,6 +1246,7 @@ impl Engine {
                     ))
                 })?;
             self.sess.restore_host_states(snap);
+            obs::instant(Track::Engine, InstantKind::Replay, step, first_uncommitted, step);
             // Replay the uncommitted window while tracing. The `replaying`
             // guard keeps the stable replayed traces from re-entering
             // co-execution mid-repair.
@@ -1195,6 +1369,13 @@ impl Engine {
                     // thread — its staged iterations are lost, which is a
                     // hard error, but a *bounded* one.
                     self.stats.watchdog_timeouts += 1;
+                    obs::instant(
+                        Track::Engine,
+                        InstantKind::WatchdogFire,
+                        self.next_step,
+                        0,
+                        self.watchdog.map_or(60_000, |d| d.as_millis() as u64),
+                    );
                     ch.cancel_from(0);
                     let (_, fin) = r.progress.wait_done(u64::MAX, Instant::now() + DETACH_GRACE);
                     let residual = if fin { r.join().err() } else { r.detach() };

@@ -19,6 +19,7 @@ use crate::api::VarStore;
 use crate::error::{FaultStage, Result, SymbolicFault, TerraError};
 use crate::faults::{FaultKind, FaultPlan, FaultSite};
 use crate::metrics::{Breakdown, Bucket, ScopeTimer};
+use crate::obs::{self, SpanKind, Track};
 use crate::runner::channels::{CoExecChannels, ITER_TOKEN};
 use crate::runner::mailbox::lock_recover;
 use crate::runtime::{ArtifactStore, Client, RtValue};
@@ -30,6 +31,11 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// `graph_stall` span `phase` argument values (which gate the runner was
+/// blocked on).
+const STALL_ALLOWANCE: u64 = 0;
+const STALL_COMMIT: u64 = 1;
 
 /// Completed-iteration counter with condvar notification: the engine's
 /// shutdown drain blocks on [`IterProgress::wait_done`] instead of
@@ -276,6 +282,37 @@ impl Drop for ChunkFaultGuard<'_> {
     }
 }
 
+/// Emit the `segment_exec` span for a plan step that started at `t0`, plus a
+/// nested `kernel` span from the shim's per-thread last-execution report
+/// (`xla::take_last_exec`). Only consulted when tracing is enabled — the
+/// report is a passive thread-local, so draining it never alters execution.
+fn record_seg_spans(iter: u64, seg: u64, t0: Instant) {
+    if !obs::enabled() {
+        return;
+    }
+    let kernel = xla::take_last_exec();
+    let cost = kernel.as_ref().map_or(0, |k| k.kernel_cost);
+    let dur = t0.elapsed().as_nanos() as u64;
+    let end = obs::now_ns();
+    let start = end.saturating_sub(dur);
+    obs::span_raw(Track::Graph, SpanKind::SegExec, iter, start, dur, seg, cost);
+    if let Some(k) = kernel {
+        // The kernel ran at the tail of the segment interval: anchor its
+        // span at the segment end (clamped into the interval) so Perfetto
+        // nests it inside the segment span.
+        let kns = k.ns.min(dur);
+        obs::span_raw(
+            Track::Graph,
+            SpanKind::KernelExec,
+            iter,
+            end.saturating_sub(kns),
+            kns,
+            k.instructions,
+            k.kernel_cost,
+        );
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_iteration(
     plan: &CompiledPlan,
@@ -291,11 +328,16 @@ fn run_iteration(
     // outright — only an iteration already mid-flight when the partial
     // cancel lands finishes its prefix (see CoExecChannels::iteration_allowed).
     channels.iteration_allowed(iter)?;
+    // Whole-iteration span: encloses the stall, segment, and rendezvous
+    // spans below (closed by Drop on every exit path, including faults).
+    let _iter_span =
+        obs::span(Track::Graph, SpanKind::GraphIter, iter, plan.steps.len() as u64, 0);
     if let Some(f) = faults {
         inject_iteration_fault(f, channels, iter)?;
     }
     {
         let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+        let _s = obs::span(Track::Graph, SpanKind::GraphStall, iter, STALL_ALLOWANCE, 0);
         channels.allowance.acquire(iter)?;
         if let Some(g) = &channels.lazy_gate {
             g.wait_allowed(iter)?;
@@ -331,6 +373,7 @@ fn run_iteration(
     // Commit barrier: only commit after the PythonRunner validated the trace.
     {
         let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+        let _s = obs::span(Track::Graph, SpanKind::GraphStall, iter, STALL_COMMIT, 0);
         channels.commits.take(iter, ITER_TOKEN)?;
     }
     for (var, v) in st.staged.drain() {
@@ -369,11 +412,14 @@ fn run_steps(
                 for b in &seg.spec.params {
                     args.push(resolve(b, &plan.graph, vars, channels, breakdown, iter, st)?);
                 }
+                let t0 = Instant::now();
                 let outs = {
                     let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
                     let _chunk_fault = faults.map(ChunkFaultGuard::arm);
                     seg.exe.run(client, &args)?
                 };
+                breakdown.record_seg_exec(t0.elapsed());
+                record_seg_spans(iter, id.0 as u64, t0);
                 for ((n, slot), v) in seg.spec.outputs.iter().zip(outs) {
                     st.store.insert((*n, *slot), v);
                 }
@@ -385,20 +431,27 @@ fn run_steps(
                 for b in params {
                     args.push(resolve(b, &plan.graph, vars, channels, breakdown, iter, st)?);
                 }
+                let t0 = Instant::now();
                 let outs = {
                     let _t = ScopeTimer::new(breakdown, Bucket::GraphExec);
                     exe.run(client, &args)?
                 };
+                breakdown.record_seg_exec(t0.elapsed());
+                record_seg_spans(iter, node.0 as u64, t0);
                 for (slot, v) in outs.into_iter().enumerate() {
                     st.store.insert((*node, slot), v);
                 }
                 st.executed.insert(*node);
             }
             Step::Feed { node } => {
+                let t0 = Instant::now();
                 let v = {
                     let _t = ScopeTimer::new(breakdown, Bucket::GraphStall);
+                    let _s =
+                        obs::span(Track::Graph, SpanKind::FeedWait, iter, node.0 as u64, 0);
                     channels.feeds.take(iter, *node)?
                 };
+                breakdown.record_mailbox_wait(t0.elapsed());
                 st.store.insert((*node, 0), RtValue::Host(v));
                 st.executed.insert(*node);
             }

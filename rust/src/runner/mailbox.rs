@@ -108,6 +108,13 @@ impl<V> Mailbox<V> {
             }
             let now = Instant::now();
             if now >= deadline {
+                crate::obs::instant(
+                    crate::obs::Track::Python,
+                    crate::obs::InstantKind::WatchdogFire,
+                    iter,
+                    node.0 as u64,
+                    timeout.as_millis() as u64,
+                );
                 return Err(TerraError::Fault(SymbolicFault::error(
                     FaultStage::Watchdog,
                     format!(

@@ -13,6 +13,7 @@
 use crate::api::{Backend, Issue, VarStore};
 use crate::error::{Result, TerraError};
 use crate::metrics::{Bucket, ScopeTimer};
+use crate::obs::{self, SpanKind, Track};
 use crate::runner::channels::{CoExecChannels, ITER_TOKEN};
 use crate::tensor::{HostTensor, TensorType};
 use crate::tracegraph::{GraphSrc, NodeId, TraceGraph, Walker};
@@ -183,15 +184,20 @@ impl Backend for SkeletonBackend {
             // the accumulated graph for this iteration.
             g.allow(self.iter);
         }
+        let t0 = std::time::Instant::now();
         let _t = ScopeTimer::new(&self.channels.breakdown, Bucket::PyStall);
+        let _s =
+            obs::span(Track::Python, SpanKind::PyFetchWait, self.iter, ev.node.0 as u64, 0);
         // Watchdog: with TERRA_SYMBOLIC_TIMEOUT_MS set, a fetch the runner
         // never delivers (wedged segment, injected hang) turns into a
         // structured watchdog fault after the deadline instead of blocking
         // the imperative side forever; the engine replays the step eagerly.
-        match self.channels.watchdog {
+        let out = match self.channels.watchdog {
             Some(d) => self.channels.fetches.take_timeout(self.iter, ev.node, d),
             None => self.channels.fetches.take(self.iter, ev.node),
-        }
+        };
+        self.channels.breakdown.record_mailbox_wait(t0.elapsed());
+        out
     }
 
     fn create_var(&mut self, _var: VarId, _init: HostTensor) -> Result<()> {

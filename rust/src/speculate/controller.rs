@@ -197,6 +197,14 @@ impl ReentryController {
         self.required
     }
 
+    /// Length of the current stable-trace run (0 right after a changing
+    /// merge) — the other half of every re-entry decision, surfaced so the
+    /// tracing layer can record `reentry_go`/`reentry_defer` events with
+    /// the state that produced them.
+    pub fn stable_run(&self) -> u32 {
+        self.stable_run
+    }
+
     /// One trace was merged; `changed` is the merge report's verdict.
     pub fn note_trace(&mut self, changed: bool) {
         if changed {

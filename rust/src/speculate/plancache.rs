@@ -309,13 +309,21 @@ impl Quarantine {
         let mut inner = self.inner.lock().unwrap();
         let e = inner.entry(key).or_insert(QuarantineEntry { strikes: 0, skip: 0 });
         e.strikes += 1;
-        if e.strikes >= self.max_faults {
+        let deciding = if e.strikes >= self.max_faults {
             e.skip = 0;
             e.strikes == self.max_faults
         } else {
             e.skip = 1u64 << e.strikes.min(32);
             false
-        }
+        };
+        crate::obs::instant(
+            crate::obs::Track::Engine,
+            crate::obs::InstantKind::QuarantineStrike,
+            0,
+            e.strikes as u64,
+            deciding as u64,
+        );
+        deciding
     }
 
     pub fn strikes(&self, key: &PlanKey) -> u32 {

@@ -1,0 +1,244 @@
+//! Flight-recorder contract tests (ISSUE 8): tracing must be free when off,
+//! invisible when on, and the Chrome-trace export must carry the structure
+//! the observability layer promises.
+//!
+//! - **Overhead guard**: with no trace config installed, a full Terra run
+//!   records zero events; with tracing on, losses and final variables are
+//!   *bit-identical* to the untraced run (recording never alters control
+//!   flow, rendezvous order, or arithmetic).
+//! - **Golden structure**: a traced `moe_router` run with an injected
+//!   segment fault exports valid Chrome trace-event JSON with named
+//!   PythonRunner/GraphRunner tracks, `segment_exec` spans nested inside
+//!   their `graph_iter` span, fault/fallback instants, and a fault-dump
+//!   file beside the trace.
+//!
+//! The recorder is process-global, so every test serializes on one lock and
+//! restores the disabled state on exit (panic included) via `ObsReset`.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+use terra::config::{ExecMode, Json};
+use terra::faults::FaultPlan;
+use terra::obs;
+use terra::programs::{build_program, Program, TinyLinear};
+use terra::runner::Engine;
+use terra::speculate::{Quarantine, ReentryPolicy, SpeculateConfig};
+use terra::tensor::HostTensor;
+
+fn serialize() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(Mutex::default).lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Restores the recorder to its disabled, empty state on drop, so a failing
+/// test cannot leak an installed config into the next one.
+struct ObsReset;
+
+impl Drop for ObsReset {
+    fn drop(&mut self) {
+        obs::install(None);
+        obs::clear();
+    }
+}
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_obs_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+/// Plan cache off and eager re-entry: deterministic entry timing, same as
+/// the fault-injection suite.
+fn spec() -> SpeculateConfig {
+    SpeculateConfig { plan_cache: false, policy: ReentryPolicy::Eager, split_hot_sites: false }
+}
+
+fn terra_engine(dir: &str) -> Engine {
+    let mut engine = Engine::with_speculate(ExecMode::Terra, dir, false, 0, spec()).unwrap();
+    engine.set_quarantine(Arc::new(Quarantine::with_max_faults(100)));
+    engine.set_watchdog(None);
+    engine
+}
+
+fn final_vars(engine: &Engine) -> Vec<HostTensor> {
+    engine.vars().ids().into_iter().map(|id| engine.vars().host(id).unwrap()).collect()
+}
+
+fn run_tiny(dir: &str, steps: u64) -> (Vec<(u64, f32)>, Vec<HostTensor>) {
+    let mut engine = terra_engine(dir);
+    let mut prog = TinyLinear::new(0);
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    (report.losses, final_vars(&engine))
+}
+
+#[test]
+fn disabled_tracing_records_nothing() {
+    let _g = serialize();
+    let _reset = ObsReset;
+    std::env::remove_var("TERRA_TRACE");
+    obs::install(None);
+    obs::clear();
+    let _ = run_tiny(&artifacts_dir(), 12);
+    assert!(
+        obs::events().is_empty(),
+        "a run without a trace config must not record events (got {})",
+        obs::events().len()
+    );
+    assert!(!obs::enabled());
+}
+
+#[test]
+fn traced_run_is_bit_identical_to_untraced() {
+    let _g = serialize();
+    let _reset = ObsReset;
+    std::env::remove_var("TERRA_TRACE");
+    let dir = artifacts_dir();
+    obs::install(None);
+    obs::clear();
+    let (plain_losses, plain_vars) = run_tiny(&dir, 23);
+
+    let path = std::env::temp_dir().join("terra_obs_identical_trace.json");
+    let cfg = obs::TraceConfig::parse("test", &format!("chrome:{}", path.display())).unwrap();
+    obs::install(Some(cfg));
+    obs::clear();
+    let (traced_losses, traced_vars) = run_tiny(&dir, 23);
+
+    assert!(!obs::events().is_empty(), "the traced run must record events");
+    assert_eq!(plain_losses, traced_losses, "tracing changed the losses");
+    assert_eq!(plain_vars, traced_vars, "tracing changed the final variables");
+}
+
+/// Chrome events are flat JSON objects; pull the fields the structure
+/// assertions need. `ts`/`dur` stay in microseconds as written.
+struct Ev {
+    name: String,
+    ph: String,
+    tid: u64,
+    ts: f64,
+    dur: f64,
+    iter: u64,
+}
+
+fn parse_events(doc: &Json) -> Vec<Ev> {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array")
+        .iter()
+        .map(|e| Ev {
+            name: e.str_field("name").unwrap().to_string(),
+            ph: e.str_field("ph").unwrap().to_string(),
+            tid: e.get("tid").and_then(Json::as_f64).unwrap() as u64,
+            ts: e.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+            dur: e.get("dur").and_then(Json::as_f64).unwrap_or(0.0),
+            iter: e
+                .get("args")
+                .and_then(|a| a.get("iter"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64,
+        })
+        .collect()
+}
+
+#[test]
+fn golden_trace_structure_with_injected_fault() {
+    let _g = serialize();
+    let _reset = ObsReset;
+    std::env::remove_var("TERRA_TRACE");
+    let dir = std::env::temp_dir().join("terra_obs_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Stale dumps from a previous run of this binary would satisfy the
+    // fault-dump assertion vacuously.
+    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+        let _ = std::fs::remove_file(entry.path());
+    }
+    let trace_path = dir.join("trace.json");
+    let cfg =
+        obs::TraceConfig::parse("test", &format!("chrome:{}", trace_path.display())).unwrap();
+    obs::install(Some(cfg));
+    obs::clear();
+
+    // moe_router: dynamic control flow (expert switch every 8 steps) forces
+    // divergence fallbacks; the injected segment error at iteration 2 forces
+    // the fault → dump → imperative-replay path.
+    let mut engine = terra_engine(&artifacts_dir());
+    engine.set_fault_plan(Some(Arc::new(
+        FaultPlan::parse("segment_exec:error:iter=2", 0).unwrap(),
+    )));
+    let mut prog: Box<dyn Program> = build_program("moe_router").unwrap();
+    let report = engine.run(prog.as_mut(), 32, 0).unwrap();
+    assert!(report.stats.faults_injected >= 1, "{:?}", report.stats);
+    assert!(report.stats.enter_coexec >= 1, "{:?}", report.stats);
+
+    let written = obs::export().unwrap().expect("a config is installed");
+    let doc = Json::parse(&std::fs::read_to_string(&written).unwrap())
+        .expect("exported trace must be valid JSON");
+    let evs = parse_events(&doc);
+
+    // Named runner tracks (Perfetto swim lanes).
+    for (tid, name) in [(1u64, "PythonRunner"), (2, "GraphRunner")] {
+        assert!(
+            evs.iter().any(|e| {
+                e.ph == "M" && e.name == "thread_name" && e.tid == tid
+            }),
+            "missing thread_name metadata for tid {tid} ({name})"
+        );
+        assert!(
+            evs.iter().any(|e| e.ph != "M" && e.tid == tid),
+            "no events recorded on the {name} track"
+        );
+    }
+
+    // Every segment execution nests inside its iteration's graph_iter span
+    // (1 µs tolerance: start/end are reconstructed from two monotonic reads).
+    let iters: Vec<&Ev> = evs.iter().filter(|e| e.name == "graph_iter").collect();
+    let segs: Vec<&Ev> = evs.iter().filter(|e| e.name == "segment_exec").collect();
+    assert!(!iters.is_empty(), "no graph_iter spans");
+    assert!(!segs.is_empty(), "no segment_exec spans");
+    for seg in &segs {
+        assert!(
+            iters.iter().any(|it| it.iter == seg.iter
+                && seg.ts + 1.0 >= it.ts
+                && seg.ts + seg.dur <= it.ts + it.dur + 1.0),
+            "segment_exec at iter {} (ts {:.3}) not nested in any graph_iter span",
+            seg.iter,
+            seg.ts
+        );
+    }
+
+    // The fault ladder leaves its instants on the timeline: the injection,
+    // the contained fault, the imperative replay of uncommitted steps, and
+    // (from moe_router's expert switch) a divergence fallback.
+    for name in ["fault_injected", "fault", "imperative_replay", "fallback"] {
+        assert!(
+            evs.iter().any(|e| e.ph == "i" && e.name == name),
+            "missing `{name}` instant in the exported trace"
+        );
+    }
+    // Both runners contribute nested span work under the engine's phases.
+    for name in ["py_exec", "trace_exec", "enter_coexec", "plan_gen"] {
+        assert!(
+            evs.iter().any(|e| e.ph == "X" && e.name == name),
+            "missing `{name}` span in the exported trace"
+        );
+    }
+
+    // The contained fault dumped its timeline context next to the trace.
+    let dumps: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.starts_with("trace.json.fault") && n.ends_with(".json")
+        })
+        .collect();
+    assert!(!dumps.is_empty(), "no fault-dump file written next to the trace");
+    let dump = Json::parse(&std::fs::read_to_string(dumps[0].path()).unwrap())
+        .expect("fault dump must be valid JSON");
+    assert!(dump.str_field("stage").is_ok(), "dump missing `stage`");
+    assert!(dump.str_field("message").is_ok(), "dump missing `message`");
+    assert!(
+        !dump.arr_field("events").unwrap().is_empty(),
+        "fault dump carries no ring events"
+    );
+}

@@ -27,7 +27,7 @@
 //! returns an error, and the artifact integration tests skip when no
 //! artifacts exist.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -1122,6 +1122,29 @@ pub struct ExecStats {
     pub kernel_cost: u64,
 }
 
+/// Record of the calling thread's most recent [`PjRtLoadedExecutable::
+/// execute_b`]: wall time plus the executed program's static instruction
+/// count and kernel-cost estimate. A tracing layer drains it right after an
+/// execution to attach a kernel span without the shim knowing about the
+/// tracer (same pattern as the `shim_totals` counters, but per-execution
+/// and race-free because it is thread-local).
+#[derive(Debug, Clone, Copy)]
+pub struct LastExec {
+    pub ns: u64,
+    pub instructions: u64,
+    pub kernel_cost: u64,
+}
+
+thread_local! {
+    static LAST_EXEC: Cell<Option<LastExec>> = const { Cell::new(None) };
+}
+
+/// Take (and clear) the calling thread's last-execution record. `None` when
+/// no execution happened on this thread since the previous take.
+pub fn take_last_exec() -> Option<LastExec> {
+    LAST_EXEC.with(Cell::take)
+}
+
 // ---------------------------------------------------------------------------
 // PJRT stand-ins
 // ---------------------------------------------------------------------------
@@ -1282,7 +1305,16 @@ impl PjRtLoadedExecutable {
             }
         };
         EXECUTIONS.fetch_add(1, Ordering::Relaxed);
-        EXECUTE_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let ns = t0.elapsed().as_nanos() as u64;
+        EXECUTE_NS.fetch_add(ns, Ordering::Relaxed);
+        let stats = self.backend_stats();
+        LAST_EXEC.with(|c| {
+            c.set(Some(LastExec {
+                ns,
+                instructions: stats.instructions,
+                kernel_cost: stats.kernel_cost,
+            }))
+        });
         Ok(vec![leaves
             .into_iter()
             .map(|lit| PjRtBuffer { lit: Arc::new(lit) })
