@@ -1,25 +1,33 @@
-//! Lazy evaluation vs co-execution, live (the Table-2 story): run the same
-//! program under Terra and under Terra-with-serialized-runners (LazyTensor
-//! semantics) and print the runner breakdown of each.
+//! Lazy evaluation vs co-execution, live (the Table-2 story), served through
+//! the multi-tenant runtime: each mode runs as one [`terra::serve::Session`]
+//! on its own [`terra::serve::Runtime`] (a fresh runtime per mode keeps the
+//! plan cache cold, so every mode pays its own compiles), and the runner
+//! breakdown of each is printed.
 //!
 //!     cargo run --release --example serve_like_lazy -- [program]
+//!
+//! Obs events from each run carry the session's id, so a `--trace` capture
+//! of this example separates the modes into their own Chrome-trace lanes.
 
-use terra::config::ExecMode;
+use terra::config::{ExecMode, RunConfig};
 use terra::error::Result;
 use terra::programs::build_program;
-use terra::runner::Engine;
+use terra::serve::Runtime;
 
 fn main() -> Result<()> {
     let program = std::env::args().nth(1).unwrap_or_else(|| "bert_qa".to_string());
-    let artifacts = std::env::var("TERRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let steps = 40;
     let warmup = 20;
 
+    let mut cfg = RunConfig { program: program.clone(), ..RunConfig::default() };
+
     let mut rows = Vec::new();
     for mode in [ExecMode::Eager, ExecMode::Terra, ExecMode::TerraLazy] {
-        let mut engine = Engine::new(mode, &artifacts, true)?;
+        cfg.mode = mode;
+        let rt = Runtime::with_defaults()?;
+        let mut sess = rt.open_session(&cfg)?;
         let mut prog = build_program(&program)?;
-        let report = engine.run(prog.as_mut(), steps, warmup)?;
+        let report = sess.run(prog.as_mut(), steps, warmup)?;
         let b = report.breakdown_per_step;
         rows.push(vec![
             mode.name().to_string(),
@@ -38,6 +46,10 @@ fn main() -> Result<()> {
     println!(
         "\nLazy evaluation serializes the runners: the GraphRunner only starts when a value \
          is demanded, so the PythonRunner's time is no longer hidden (paper Table 2)."
+    );
+    println!(
+        "To serve many tenants from one process instead, share a single Runtime and open \
+         one session per tenant: `terra serve --sessions N --budget M`."
     );
     Ok(())
 }

@@ -288,7 +288,7 @@ fn main() {
                     client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
                 let mut per_threads = [0f64; 2];
                 for (ti, threads) in [1usize, 4].into_iter().enumerate() {
-                    xla::set_shim_threads(threads);
+                    client0.set_threads(threads);
                     let _ = exe.execute_b(&[&xb]).unwrap();
                     let before = xla::shim_totals();
                     let (mean, _, _) = time_micro(
@@ -336,7 +336,7 @@ fn main() {
                     client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
                 let mut per_threads = [0f64; 2];
                 for (ti, threads) in [1usize, 4].into_iter().enumerate() {
-                    xla::set_shim_threads(threads);
+                    client0.set_threads(threads);
                     let _ = exe.execute_b(&[&ab, &bb]).unwrap();
                     let before = xla::shim_totals();
                     let (mean, _, _) = time_micro(
@@ -371,7 +371,7 @@ fn main() {
                     per_threads[0] / per_threads[1].max(1e-9),
                 ));
             }
-            xla::set_shim_threads(0); // back to env/auto for the rest
+            client0.set_threads(0); // back to env/auto for the rest
             for (name, s) in speedups {
                 push(&name, s, "x", &mut json);
             }
@@ -383,7 +383,7 @@ fn main() {
         // target: >= 1.5x single-thread speedup on ew-chain and matmul.
         {
             let client0 = xla::PjRtClient::cpu().unwrap();
-            xla::set_shim_threads(1);
+            client0.set_threads(1);
             let mut speedups: Vec<(String, f64)> = Vec::new();
             {
                 let comp = elementwise_chain_comp(256);
@@ -395,7 +395,7 @@ fn main() {
                     client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
                 let mut per_simd = [0f64; 2];
                 for (si, simd) in [false, true].into_iter().enumerate() {
-                    xla::set_shim_simd(Some(simd));
+                    client0.set_simd(Some(simd));
                     let _ = exe.execute_b(&[&xb]).unwrap();
                     let (mean, _, _) = time_micro(
                         || {
@@ -430,7 +430,7 @@ fn main() {
                     client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
                 let mut per_simd = [0f64; 2];
                 for (si, simd) in [false, true].into_iter().enumerate() {
-                    xla::set_shim_simd(Some(simd));
+                    client0.set_simd(Some(simd));
                     let _ = exe.execute_b(&[&ab, &bb]).unwrap();
                     let (mean, _, _) = time_micro(
                         || {
@@ -462,7 +462,7 @@ fn main() {
                     client0.compile_with_backend(&comp, xla::ShimBackend::Bytecode).unwrap();
                 let mut per_simd = [0f64; 2];
                 for (si, simd) in [false, true].into_iter().enumerate() {
-                    xla::set_shim_simd(Some(simd));
+                    client0.set_simd(Some(simd));
                     let _ = exe.execute_b(&[&xb]).unwrap();
                     let (mean, _, _) = time_micro(
                         || {
@@ -484,8 +484,8 @@ fn main() {
                     per_simd[0] / per_simd[1].max(1e-9),
                 ));
             }
-            xla::set_shim_simd(None); // back to env/default
-            xla::set_shim_threads(0);
+            client0.set_simd(None); // back to env/default
+            client0.set_threads(0);
             for (name, s) in speedups {
                 push(&name, s, "x", &mut json);
             }

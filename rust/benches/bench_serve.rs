@@ -1,0 +1,163 @@
+//! Serving-throughput benchmark (ISSUE 9): aggregate steps/sec and
+//! per-request latency (p50/p99) versus concurrent session count on one
+//! shared [`terra::serve::Runtime`].
+//!
+//! A *request* is one tenant job: open a session on the shared runtime, run
+//! the program for `STEPS` steps, return. Each round launches `n` requests
+//! concurrently; the runtime's plan cache persists across rounds, so after
+//! the warmup round every request executes on shared cached plans — the
+//! steady serving state.
+//!
+//!     cargo bench --bench bench_serve                # auto budget
+//!     cargo bench --bench bench_serve -- --budget 4  # 4 total threads
+//!
+//! Emits `target/bench-results/serve.json` (one row per session count).
+
+use std::time::Instant;
+use terra::api::{Session, Variable};
+use terra::bench::{obj, print_table, write_json_report};
+use terra::config::{ExecMode, Json, RunConfig};
+use terra::error::Result;
+use terra::programs::{Program, StepOutput};
+use terra::serve::{Runtime, RuntimeConfig};
+use terra::speculate::{ReentryPolicy, SpeculateConfig};
+use terra::tensor::HostTensor;
+
+const SESSION_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const STEPS: u64 = 40;
+/// Measured rounds per session count (after one unmeasured cache-warming
+/// round that absorbs the cold plan builds).
+const ROUNDS: usize = 6;
+
+/// Single-path tenant job: `w <- tanh(w * x)` on a [256] vector, loss =
+/// mean(y^2). One graph signature, so every post-warmup request is served
+/// from the shared plan cache.
+struct ServeLoop {
+    w: Option<Variable>,
+}
+
+impl Program for ServeLoop {
+    fn name(&self) -> &'static str {
+        "bench_serve_loop"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.w = Some(sess.variable("w", HostTensor::filled_f32(vec![256], 0.5), true)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let x = sess.feed(HostTensor::filled_f32(
+            vec![256],
+            1.0 + (step % 7) as f32 * 1e-3,
+        ))?;
+        let y = w.read().mul(&x)?.tanh()?;
+        let loss = y.mul(&y)?.reduce_mean(&[0], false)?;
+        w.assign(&y)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+}
+
+fn bench_cfg() -> RunConfig {
+    let dir = std::env::temp_dir().join("terra_bench_serve_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        std::fs::write(manifest, r#"{"artifacts": []}"#).unwrap();
+    }
+    RunConfig {
+        mode: ExecMode::Terra,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        speculate: SpeculateConfig {
+            plan_cache: true,
+            policy: ReentryPolicy::Adaptive,
+            split_hot_sites: false,
+        },
+        ..RunConfig::default()
+    }
+}
+
+/// One round: `n` concurrent requests on `rt`. Returns each request's wall
+/// time in nanoseconds plus the round's wall time.
+fn round(rt: &Runtime, cfg: &RunConfig, n: usize) -> (Vec<u64>, f64) {
+    let t0 = Instant::now();
+    let lat: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                s.spawn(|| {
+                    let req0 = Instant::now();
+                    let mut sess = rt.open_session(cfg).expect("open_session");
+                    let mut prog = ServeLoop { w: None };
+                    sess.run(&mut prog, STEPS, 0).expect("session run");
+                    req0.elapsed().as_nanos() as u64
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    (lat, t0.elapsed().as_secs_f64())
+}
+
+fn arg_after(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let budget: usize = arg_after("--budget")
+        .or_else(|| std::env::var("TERRA_SERVE_BUDGET").ok())
+        .map(|s| s.parse().expect("--budget must be a number"))
+        .unwrap_or(0);
+
+    let cfg = bench_cfg();
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for &n in &SESSION_COUNTS {
+        let rt = Runtime::new(RuntimeConfig { budget, max_active: 0 }).unwrap();
+        let mut latencies: Vec<u64> = Vec::new();
+        let mut agg = Vec::new();
+        for r in 0..=ROUNDS {
+            let (lat, wall) = round(&rt, &cfg, n);
+            if r == 0 {
+                continue; // cold round: plan builds land in the shared cache
+            }
+            latencies.extend(lat);
+            agg.push((n as u64 * STEPS) as f64 / wall);
+        }
+        latencies.sort_unstable();
+        let p50 = latencies[latencies.len() / 2] as f64 / 1e6;
+        let p99 =
+            latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)] as f64 / 1e6;
+        let steps_per_sec = agg.iter().sum::<f64>() / agg.len() as f64;
+        let coalesced = rt.plan_cache().coalesced();
+        rows.push(vec![
+            n.to_string(),
+            latencies.len().to_string(),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            format!("{steps_per_sec:.1}"),
+            coalesced.to_string(),
+        ]);
+        json.push(obj(vec![
+            ("sessions", Json::Num(n as f64)),
+            ("budget", Json::Num(budget as f64)),
+            ("budget_cap", Json::Num(rt.budget_cap() as f64)),
+            ("requests", Json::Num(latencies.len() as f64)),
+            ("steps_per_request", Json::Num(STEPS as f64)),
+            ("p50_ms", Json::Num(p50)),
+            ("p99_ms", Json::Num(p99)),
+            ("steps_per_sec", Json::Num(steps_per_sec)),
+            ("plan_builds_coalesced", Json::Num(coalesced as f64)),
+        ]));
+    }
+    print_table(
+        &format!(
+            "serving throughput vs session count (budget {})",
+            if budget == 0 { "auto".to_string() } else { budget.to_string() }
+        ),
+        &["sessions", "requests", "p50 ms", "p99 ms", "agg steps/s", "coalesced"],
+        &rows,
+    );
+    write_json_report("serve", Json::Arr(json));
+}

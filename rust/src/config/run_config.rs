@@ -81,6 +81,13 @@ pub struct RunConfig {
     /// are bit-identical either way; `false` = the seed's scalar loops).
     /// JSON `shim_simd`, CLI `--shim-simd`, env `TERRA_SHIM_SIMD`.
     pub shim_simd: bool,
+    /// Concurrent serve sessions for the multi-tenant entrypoints (JSON
+    /// `sessions`, CLI `--sessions`); 1 = single-tenant.
+    pub sessions: usize,
+    /// Process-wide worker-thread budget shared by concurrent sessions'
+    /// shim executions (JSON `budget`, CLI `--budget`): 0 = auto (the
+    /// resolved `TERRA_SHIM_THREADS` / available-parallelism default).
+    pub budget: usize,
     /// Flight-recorder trace spec (`chrome:<path>`): `None` = tracing off.
     /// JSON `trace` (string, strictly validated), CLI `--trace`, env
     /// `TERRA_TRACE`. An explicit config/CLI value wins over the env knob
@@ -131,6 +138,8 @@ impl Default for RunConfig {
             speculate: SpeculateConfig::from_env(),
             shim_threads: default_shim_threads(),
             shim_simd: default_shim_simd(),
+            sessions: 1,
+            budget: 0,
             trace: None,
             stats_json: None,
         }
@@ -186,6 +195,17 @@ impl RunConfig {
         if let Some(v) = json.get("shim_simd") {
             self.shim_simd = v.as_bool().ok_or_else(|| {
                 TerraError::Config("shim_simd must be a bool".into())
+            })?;
+        }
+        if let Some(v) = json.get("sessions") {
+            let n = v.as_usize().filter(|&n| n >= 1).ok_or_else(|| {
+                TerraError::Config("sessions must be an integer >= 1".into())
+            })?;
+            self.sessions = n;
+        }
+        if let Some(v) = json.get("budget") {
+            self.budget = v.as_usize().ok_or_else(|| {
+                TerraError::Config("budget must be a non-negative integer (0 = auto)".into())
             })?;
         }
         if let Some(v) = json.get("trace") {
@@ -249,18 +269,21 @@ impl RunConfig {
         Self::from_json(&Json::parse(&text)?)
     }
 
-    /// Push the resolved worker count into the vendored shim (the knob is
-    /// process-level: executions resolve it per call). 0 clears the
-    /// override, so the shim falls back to `TERRA_SHIM_THREADS` / auto.
-    pub fn apply_shim_threads(&self) {
-        xla::set_shim_threads(self.shim_threads);
+    /// Pin the resolved shim execution knobs (worker count + SIMD) onto a
+    /// runtime client. Since the serve refactor these are **per-client**
+    /// settings — the old process-global `xla::set_shim_threads` /
+    /// `set_shim_simd` overrides are gone, and the `TERRA_SHIM_THREADS` /
+    /// `TERRA_SHIM_SIMD` env knobs survive only as the defaults a client
+    /// resolves when nothing is pinned. 0 threads = auto.
+    pub fn apply_shim_settings(&self, client: &crate::runtime::Client) {
+        client.set_threads(self.shim_threads);
+        client.set_simd(Some(self.shim_simd));
     }
 
-    /// Push the resolved SIMD setting into the vendored shim. Unlike
-    /// threads, the config value is always concrete (the default already
-    /// resolved `TERRA_SHIM_SIMD`), so this always sets the override.
-    pub fn apply_shim_simd(&self) {
-        xla::set_shim_simd(Some(self.shim_simd));
+    /// [`RunConfig::apply_shim_settings`] on the process-global client —
+    /// the single-engine CLI path.
+    pub fn apply_shim_global(&self) {
+        self.apply_shim_settings(crate::runtime::Client::global());
     }
 
     /// Install the flight-recorder config into the process recorder. A
@@ -370,6 +393,21 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err(), "non-string trace must be rejected");
         let j = Json::parse(r#"{"stats_json": 3}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err(), "non-string stats_json must be rejected");
+    }
+
+    #[test]
+    fn sessions_and_budget_from_json() {
+        let cfg = RunConfig::default();
+        assert_eq!((cfg.sessions, cfg.budget), (1, 0));
+        let j = Json::parse(r#"{"sessions": 4, "budget": 8}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!((cfg.sessions, cfg.budget), (4, 8));
+        let j = Json::parse(r#"{"sessions": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "0 sessions must be rejected");
+        let j = Json::parse(r#"{"budget": "lots"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "non-numeric budget must be rejected");
+        let j = Json::parse(r#"{"budget": 0}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().budget, 0, "0 = auto is valid");
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //! * evaluation: [`baselines`], [`programs`], [`metrics`], [`bench`]
 //! * observability: [`obs`] (flight-recorder tracing, Chrome-trace export,
 //!   latency histograms, fault dumps)
+//! * serving: [`serve`] (multi-tenant runtime/session split: shared plan
+//!   cache with cross-session build coalescing, pooled workers behind a
+//!   parallelism budget, FIFO admission)
 
 pub mod api;
 pub mod baselines;
@@ -34,6 +37,7 @@ pub mod opt;
 pub mod programs;
 pub mod runner;
 pub mod runtime;
+pub mod serve;
 pub mod speculate;
 pub mod symbolic;
 pub mod tape;

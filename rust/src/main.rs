@@ -94,6 +94,18 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
             _ => return Err(TerraError::Config("bad --shim-simd (expected on|off)".into())),
         };
     }
+    if let Some(v) = flags.get("sessions") {
+        cfg.sessions = v
+            .parse()
+            .ok()
+            .filter(|&n: &usize| n >= 1)
+            .ok_or_else(|| TerraError::Config("bad --sessions (expected N >= 1)".into()))?;
+    }
+    if let Some(v) = flags.get("budget") {
+        cfg.budget = v.parse().map_err(|_| {
+            TerraError::Config("bad --budget (expected 0 = auto or N >= 1)".into())
+        })?;
+    }
     if let Some(v) = flags.get("artifacts") {
         cfg.artifacts_dir = v.clone();
     }
@@ -106,12 +118,12 @@ fn config_from(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(v) = flags.get("stats-json") {
         cfg.stats_json = Some(v.clone());
     }
-    // The worker count and SIMD setting are process-level shim knobs, not
-    // Engine fields: push them down here so every command honours
-    // --shim-threads / --shim-simd / the JSON keys (env-only runs resolve
-    // inside the shim without an override).
-    cfg.apply_shim_threads();
-    cfg.apply_shim_simd();
+    // The worker count and SIMD setting are per-client shim settings: pin
+    // them on the process-global client here so every single-engine command
+    // honours --shim-threads / --shim-simd / the JSON keys (env-only runs
+    // resolve inside the shim without a pinned value). The serve command
+    // re-applies them per session client.
+    cfg.apply_shim_global();
     // Same push-down for the flight recorder: an explicit --trace / JSON
     // `trace` beats TERRA_TRACE (engine construction then no-ops the env
     // install).
@@ -245,6 +257,53 @@ fn print_opt_stats(report: &terra::runner::RunReport) {
     );
 }
 
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from(flags)?;
+    let rt = terra::serve::Runtime::new(terra::serve::RuntimeConfig {
+        budget: cfg.budget,
+        max_active: 0,
+    })?;
+    println!(
+        "serving {} session(s) of {} under {} (budget {}, fusion={}, opt-level={}) for {} steps each ...",
+        cfg.sessions,
+        cfg.program,
+        cfg.mode.name(),
+        rt.budget_cap(),
+        cfg.fusion,
+        cfg.opt_level,
+        cfg.steps,
+    );
+    let reports: Vec<Result<terra::runner::RunReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.sessions)
+            .map(|_| {
+                let rt = &rt;
+                let cfg = &cfg;
+                s.spawn(move || {
+                    let mut sess = rt.open_session(cfg)?;
+                    let mut prog = build_program(&cfg.program)?;
+                    sess.run(prog.as_mut(), cfg.steps as u64, cfg.warmup_steps as u64)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("session thread panicked"))
+            .collect()
+    });
+    let mut agg = 0.0;
+    for (i, r) in reports.into_iter().enumerate() {
+        let r = r?;
+        agg += r.steps_per_sec;
+        println!("S{}: {}", i + 1, r.summary());
+    }
+    println!(
+        "aggregate: {agg:.2} steps/s across {} session(s), {} coalesced plan build(s)",
+        cfg.sessions,
+        rt.plan_cache().coalesced(),
+    );
+    Ok(())
+}
+
 fn cmd_coverage(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from(flags)?;
     let mut rows = Vec::new();
@@ -338,6 +397,7 @@ fn main() {
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
         "coverage" => cmd_coverage(&flags),
         "trace-dump" => cmd_trace_dump(&flags),
         "breakdown" => cmd_breakdown(&flags),
@@ -351,6 +411,11 @@ fn main() {
             println!(
                 "terra — imperative-symbolic co-execution (NeurIPS'21 reproduction)\n\n\
                  commands:\n  run --program P --mode eager|terra|terra-lazy|autograph [--steps N] [--no-fusion] [--opt-level 0|1|2]\n      [--plan-cache on|off] [--reentry-policy eager|adaptive|K] [--split-hot-sites on|off] [--shim-threads 0|N] [--shim-simd on|off]\n      [--trace chrome:<path>] [--stats-json <path>]\n  \
+                 serve --program P [--sessions N] [--budget 0|N] [run flags]\n      \
+                 multi-tenant serving: N concurrent sessions share one runtime (plan cache,\n      \
+                 worker pool, quarantine); --sessions sets the tenant count (default 1) and\n      \
+                 --budget caps the worker threads all sessions' kernels share (0 = auto from\n      \
+                 TERRA_SHIM_THREADS / available parallelism)\n  \
                  coverage                reproduce Table 1\n  \
                  breakdown --program P   Figure-6 row for one program\n  \
                  trace-dump --program P  dump the TraceGraph + plan summary\n  \

@@ -84,6 +84,9 @@ pub struct BreakdownSnapshot {
     pub plan_cache_hits: u64,
     /// Co-execution entries that compiled a fresh plan (cache enabled).
     pub plan_cache_misses: u64,
+    /// Cache misses resolved by waiting on another session's in-flight
+    /// build of the identical plan instead of compiling it again.
+    pub plan_builds_coalesced: u64,
     /// Segment compilations skipped by plan-cache hits.
     pub compiles_skipped: u64,
     /// Stable traces on which the re-entry controller deferred entering
@@ -200,6 +203,7 @@ impl Breakdown {
             shim_layout_copies: 0,
             plan_cache_hits: 0,
             plan_cache_misses: 0,
+            plan_builds_coalesced: 0,
             compiles_skipped: 0,
             reentry_deferred: 0,
             reentry_ms: 0.0,
@@ -260,6 +264,9 @@ impl BreakdownSnapshot {
             shim_layout_copies: self.shim_layout_copies.saturating_sub(earlier.shim_layout_copies),
             plan_cache_hits: self.plan_cache_hits.saturating_sub(earlier.plan_cache_hits),
             plan_cache_misses: self.plan_cache_misses.saturating_sub(earlier.plan_cache_misses),
+            plan_builds_coalesced: self
+                .plan_builds_coalesced
+                .saturating_sub(earlier.plan_builds_coalesced),
             compiles_skipped: self.compiles_skipped.saturating_sub(earlier.compiles_skipped),
             reentry_deferred: self.reentry_deferred.saturating_sub(earlier.reentry_deferred),
             reentry_ms: self.reentry_ms - earlier.reentry_ms,

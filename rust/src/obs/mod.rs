@@ -215,6 +215,9 @@ pub enum EventKind {
 pub struct Event {
     pub track: Track,
     pub kind: EventKind,
+    /// Serve-session the event belongs to (0 = the standalone engine; serve
+    /// sessions tag their runner threads via [`set_session`]).
+    pub session: u64,
     /// Training-loop iteration the event belongs to (0 when not applicable).
     pub iter: u64,
     /// Start time, nanoseconds since the process trace epoch.
@@ -238,6 +241,18 @@ impl Event {
         matches!(self.kind, EventKind::Instant(_))
     }
 
+    /// Chrome `tid` for this event: session 0 keeps the bare track tids
+    /// (1/2/3) so single-engine traces are unchanged; serve sessions get a
+    /// disjoint namespaced range (`session*10 + track`) so each session's
+    /// runners render as their own swim lanes.
+    fn chrome_tid(&self) -> u64 {
+        if self.session == 0 {
+            self.track.tid()
+        } else {
+            self.session * 10 + self.track.tid()
+        }
+    }
+
     /// Chrome trace-event object (`ph:"X"` complete span / `ph:"i"` instant;
     /// `ts`/`dur` in microseconds as the format requires).
     fn chrome_json(&self) -> Json {
@@ -247,6 +262,9 @@ impl Event {
         };
         let mut args = BTreeMap::new();
         args.insert("iter".to_string(), Json::Num(self.iter as f64));
+        if self.session != 0 {
+            args.insert("session".to_string(), Json::Num(self.session as f64));
+        }
         if !an.is_empty() {
             args.insert(an.to_string(), Json::Num(self.a as f64));
         }
@@ -256,7 +274,7 @@ impl Event {
         let mut m = BTreeMap::new();
         m.insert("name".to_string(), Json::Str(self.name().to_string()));
         m.insert("pid".to_string(), Json::Num(1.0));
-        m.insert("tid".to_string(), Json::Num(self.track.tid() as f64));
+        m.insert("tid".to_string(), Json::Num(self.chrome_tid() as f64));
         m.insert("ts".to_string(), Json::Num(self.t_ns as f64 / 1000.0));
         match self.kind {
             EventKind::Span(_) => {
@@ -334,6 +352,26 @@ fn epoch() -> Instant {
 /// Nanoseconds since the process trace epoch (monotonic).
 pub fn now_ns() -> u64 {
     epoch().elapsed().as_nanos() as u64
+}
+
+thread_local! {
+    /// Serve-session id stamped onto events recorded by this thread.
+    static CURRENT_SESSION: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Tag every event subsequently recorded *on this thread* with a
+/// serve-session id. Session 0 (the default) is the standalone engine; the
+/// serve runtime assigns ids from 1 and calls this on each session's
+/// PythonRunner thread (the GraphRunner spawn path propagates it). Purely a
+/// labelling concern — recording behaviour is identical either way.
+pub fn set_session(id: u64) {
+    CURRENT_SESSION.with(|c| c.set(id));
+}
+
+/// The serve-session id events recorded on this thread carry (see
+/// [`set_session`]).
+pub fn current_session() -> u64 {
+    CURRENT_SESSION.with(|c| c.get())
 }
 
 /// Whether event recording is on. The one check every emit helper makes
@@ -426,6 +464,7 @@ pub fn instant(track: Track, kind: InstantKind, iter: u64, a: u64, b: u64) {
     record(Event {
         track,
         kind: EventKind::Instant(kind),
+        session: current_session(),
         iter,
         t_ns: now_ns(),
         dur_ns: 0,
@@ -440,7 +479,16 @@ pub fn span_raw(track: Track, kind: SpanKind, iter: u64, t_ns: u64, dur_ns: u64,
     if !enabled() {
         return;
     }
-    record(Event { track, kind: EventKind::Span(kind), iter, t_ns, dur_ns, a, b });
+    record(Event {
+        track,
+        kind: EventKind::Span(kind),
+        session: current_session(),
+        iter,
+        t_ns,
+        dur_ns,
+        a,
+        b,
+    });
 }
 
 /// Record a span that started at `start` and ends now.
@@ -496,13 +544,25 @@ fn meta_event(tid: u64, name: &str) -> Json {
 
 /// Render events as a Chrome trace-event JSON document (Perfetto /
 /// `chrome://tracing` compatible): process/thread name metadata, then the
-/// events sorted by start time so spans nest visually.
+/// events sorted by start time so spans nest visually. Session 0's tracks
+/// keep their bare names and tids; every serve session present in the event
+/// stream additionally gets its own `S<id> <Track>` lanes.
 pub fn chrome_trace(events: &[Event]) -> Json {
     let mut sorted: Vec<&Event> = events.iter().collect();
     sorted.sort_by_key(|e| e.t_ns);
     let mut arr = vec![meta_event(0, "terra")];
     for track in [Track::Python, Track::Graph, Track::Engine] {
         arr.push(meta_event(track.tid(), track.thread_name()));
+    }
+    let sessions: std::collections::BTreeSet<u64> =
+        events.iter().map(|e| e.session).filter(|&s| s != 0).collect();
+    for s in sessions {
+        for track in [Track::Python, Track::Graph, Track::Engine] {
+            arr.push(meta_event(
+                s * 10 + track.tid(),
+                &format!("S{s} {}", track.thread_name()),
+            ));
+        }
     }
     arr.extend(sorted.iter().map(|e| e.chrome_json()));
     let mut m = BTreeMap::new();
@@ -673,6 +733,7 @@ mod tests {
             Event {
                 track: Track::Graph,
                 kind: EventKind::Span(SpanKind::GraphIter),
+                session: 0,
                 iter: 1,
                 t_ns: 2_000,
                 dur_ns: 10_000,
@@ -682,6 +743,7 @@ mod tests {
             Event {
                 track: Track::Graph,
                 kind: EventKind::Span(SpanKind::SegExec),
+                session: 0,
                 iter: 1,
                 t_ns: 3_000,
                 dur_ns: 4_000,
@@ -691,6 +753,7 @@ mod tests {
             Event {
                 track: Track::Engine,
                 kind: EventKind::Instant(InstantKind::Fallback),
+                session: 0,
                 iter: 1,
                 t_ns: 9_000,
                 dur_ns: 0,
@@ -722,6 +785,53 @@ mod tests {
         );
         let fb = named("fallback");
         assert_eq!(fb.str_field("ph").unwrap(), "i");
+    }
+
+    #[test]
+    fn session_tags_namespace_chrome_tids() {
+        let _g = guard();
+        install(Some(TraceConfig { path: "unused".into() }));
+        clear();
+        // Default thread state is session 0 (the standalone engine).
+        assert_eq!(current_session(), 0);
+        instant(Track::Engine, InstantKind::PlanCacheHit, 1, 0, 0);
+        set_session(2);
+        instant(Track::Python, InstantKind::Fallback, 1, 0, 0);
+        set_session(0);
+        let evs = take_events();
+        install(None);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].session, 0);
+        assert_eq!(evs[1].session, 2);
+
+        let doc = Json::parse(&chrome_trace(&evs).to_string()).unwrap();
+        let arr = doc.arr_field("traceEvents").unwrap();
+        // Session 0's event keeps the bare engine tid; session 2's lands on
+        // the namespaced range and is arg-tagged with its session id.
+        let hit = arr
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("plan_cache_hit"))
+            .unwrap();
+        assert_eq!(hit.get("tid").unwrap().as_f64(), Some(3.0));
+        assert!(hit.get("args").unwrap().get("session").is_none());
+        let fb = arr
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("fallback"))
+            .unwrap();
+        assert_eq!(fb.get("tid").unwrap().as_f64(), Some(21.0));
+        assert_eq!(
+            fb.get("args").unwrap().get("session").unwrap().as_f64(),
+            Some(2.0)
+        );
+        // The serve session gets its own named swim lanes.
+        let threads: Vec<&str> = arr
+            .iter()
+            .filter(|e| e.str_field("name").ok() == Some("thread_name"))
+            .map(|e| e.get("args").unwrap().str_field("name").unwrap())
+            .collect();
+        assert!(threads.contains(&"PythonRunner"), "{threads:?}");
+        assert!(threads.contains(&"S2 PythonRunner"), "{threads:?}");
+        assert!(threads.contains(&"S2 Engine"), "{threads:?}");
     }
 
     #[test]

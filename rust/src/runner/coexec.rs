@@ -29,8 +29,8 @@ use crate::runner::graph_runner::GraphRunner;
 use crate::runner::skeleton::SkeletonBackend;
 use crate::runtime::{ArtifactStore, Client, ExecCache};
 use crate::speculate::{
-    graph_signature, parse_site_node, split_min_count, GraphSig, PlanCache, PlanKey, Quarantine,
-    QuarantineVerdict, ReentryController, ReentryPolicy, SpeculateConfig,
+    graph_signature, parse_site_node, split_min_count, BuildRole, GraphSig, PlanCache, PlanKey,
+    Quarantine, QuarantineVerdict, ReentryController, ReentryPolicy, SpeculateConfig,
 };
 use crate::symbolic::{compile_plan, validate_plan_artifacts, CompiledPlan};
 use crate::tensor::TensorType;
@@ -55,6 +55,12 @@ const MAX_COMMIT_GAP: u64 = 4;
 /// Grace period granted to a cancelled-but-unresponsive GraphRunner thread
 /// before the engine abandons (detaches) it instead of joining.
 const DETACH_GRACE: Duration = Duration::from_millis(500);
+
+/// How long a coalescing follower waits on another engine's in-flight build
+/// of the same plan before giving up and building it itself (the watchdog
+/// deadline takes precedence when armed). Generous: a self-build after a
+/// near-complete foreign build is pure duplicated work.
+const PLAN_BUILD_WAIT: Duration = Duration::from_secs(30);
 
 /// Watchdog deadline from `TERRA_SYMBOLIC_TIMEOUT_MS` (strict parse): unset
 /// or `0` = watchdog off.
@@ -122,6 +128,11 @@ pub struct EngineStats {
     /// Co-execution entries that went through the full plan pipeline while
     /// the plan cache was enabled.
     pub plan_cache_misses: u64,
+    /// Plan-cache misses resolved without running the pipeline because
+    /// *another* engine (a concurrent serve session) was already building —
+    /// or had just finished building — the identical-signature plan: this
+    /// engine waited on the build lease and shares the `Arc` of the result.
+    pub plan_builds_coalesced: u64,
     /// Segment-compile *invocations* skipped because a plan-cache hit reused
     /// an already-compiled plan wholesale. Each skipped invocation would
     /// have been an `ExecCache` hit or a fresh compile, so this bounds (not
@@ -235,6 +246,7 @@ impl RunReport {
             ("mailbox_dropped".to_string(), int(s.mailbox_dropped)),
             ("plan_cache_hits".to_string(), int(s.plan_cache_hits)),
             ("plan_cache_misses".to_string(), int(s.plan_cache_misses)),
+            ("plan_builds_coalesced".to_string(), int(s.plan_builds_coalesced)),
             ("segment_compiles_skipped".to_string(), int(s.segment_compiles_skipped)),
             ("reentry_deferred".to_string(), int(s.reentry_deferred)),
             ("reentry_avg_ms".to_string(), num(s.reentry_avg_ms())),
@@ -348,6 +360,9 @@ pub struct Engine {
     /// True while the fault fallback replays uncommitted steps imperatively
     /// (suppresses re-entry decisions until the replay finishes).
     replaying: bool,
+    /// Serve-session id stamped onto this engine's obs events (0 = the
+    /// standalone engine; the serve runtime assigns ids from 1).
+    session_id: u64,
     /// Materialize the returned loss every N steps (0 = never).
     pub loss_every: u64,
 }
@@ -392,10 +407,24 @@ impl Engine {
         opt_level: u8,
         speculate: SpeculateConfig,
     ) -> Result<Engine> {
+        Self::with_client(mode, artifacts_dir, fusion, opt_level, speculate, Client::global().clone())
+    }
+
+    /// Create an engine on an explicit runtime [`Client`]. The serve layer
+    /// gives each session a fresh client so RNG streams and executor
+    /// settings (thread/SIMD knobs, parallelism budget) stay isolated per
+    /// session; every other constructor defaults to [`Client::global`].
+    pub fn with_client(
+        mode: ExecMode,
+        artifacts_dir: &str,
+        fusion: bool,
+        opt_level: u8,
+        speculate: SpeculateConfig,
+        client: Client,
+    ) -> Result<Engine> {
         // Honour `TERRA_TRACE` in every binary that constructs an engine
         // (CLI, benches, tests); an explicit `--trace` install wins.
         obs::init_from_env()?;
-        let client = Client::global().clone();
         let artifacts = Arc::new(ArtifactStore::open(artifacts_dir)?);
         let vars = Arc::new(VarStore::new(client.clone()));
         let exec = Arc::new(EagerExecutor::new(client.clone(), artifacts.clone()));
@@ -458,8 +487,42 @@ impl Engine {
             current_key: None,
             host_snapshots: VecDeque::new(),
             replaying: false,
+            session_id: 0,
             loss_every: 1,
         })
+    }
+
+    /// Tag this engine (and the calling thread) with a serve-session id so
+    /// obs events from its runners land in the session's own trace lanes.
+    /// Call from the thread that will drive `run_step` (the PythonRunner
+    /// thread); the GraphRunner spawn path propagates the tag.
+    pub fn set_session_id(&mut self, id: u64) {
+        self.session_id = id;
+        obs::set_session(id);
+    }
+
+    /// The serve-session id assigned via [`Engine::set_session_id`] (0 = the
+    /// standalone engine).
+    pub fn session_id(&self) -> u64 {
+        self.session_id
+    }
+
+    /// The runtime client this engine executes on.
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Replace the plan cache consulted on co-execution entries (`None`
+    /// disables caching). The serve runtime shares one cache across all
+    /// sessions; tests use it for isolation from the process-global cache.
+    pub fn set_plan_cache(&mut self, cache: Option<Arc<PlanCache>>) {
+        self.plan_cache = cache;
+        self.cached_sig = None;
+    }
+
+    /// The plan cache consulted on co-execution entries, if enabled.
+    pub fn plan_cache(&self) -> Option<&Arc<PlanCache>> {
+        self.plan_cache.as_ref()
     }
 
     /// Replace the fault-injection schedule (test harness: deterministic
@@ -574,6 +637,7 @@ impl Engine {
         snap.shim_layout_copies = shim.layout_copies_inserted;
         snap.plan_cache_hits = self.stats.plan_cache_hits;
         snap.plan_cache_misses = self.stats.plan_cache_misses;
+        snap.plan_builds_coalesced = self.stats.plan_builds_coalesced;
         snap.compiles_skipped = self.stats.segment_compiles_skipped;
         snap.reentry_deferred = self.stats.reentry_deferred;
         snap.reentry_ms = self.stats.reentry_ns as f64 / 1e6;
@@ -950,11 +1014,12 @@ impl Engine {
                     obs::instant(Track::Engine, InstantKind::PlanCacheMiss, next_iter, 0, 0);
                     self.stats.plan_cache_misses += 1;
                 }
-                let plan = Arc::new(self.build_plan_contained(&full, &splits, next_iter)?);
-                if let Some(cache) = &self.plan_cache {
-                    cache.insert(key, plan.clone());
+                match self.plan_cache.clone() {
+                    None => Arc::new(self.build_plan_contained(&full, &splits, next_iter)?),
+                    Some(cache) => {
+                        self.build_plan_coalesced(&cache, key, &full, &splits, next_iter)?
+                    }
                 }
-                plan
             }
         };
         self.stats.plan_split_points = plan.split_points.len() as u64;
@@ -994,6 +1059,66 @@ impl Engine {
             cache_hit as u64,
         );
         Ok(())
+    }
+
+    /// Resolve a plan-cache miss through the cache's build-coalescing
+    /// protocol: the first engine to miss on a key becomes the *lead* and
+    /// runs the full pipeline; concurrent engines missing on the same key
+    /// become *followers* and block (bounded) on the lead's build lease,
+    /// sharing the compiled `Arc` instead of duplicating optimizer passes
+    /// and segment compiles. A follower whose wait times out — or whose
+    /// lead faulted — falls back to building the plan itself.
+    fn build_plan_coalesced(
+        &mut self,
+        cache: &Arc<PlanCache>,
+        key: PlanKey,
+        full: &Arc<TraceGraph>,
+        splits: &BTreeSet<NodeId>,
+        next_iter: u64,
+    ) -> Result<Arc<CompiledPlan>> {
+        match cache.begin_build(key) {
+            BuildRole::Ready(hit) => {
+                // Raced: another engine finished this exact build between
+                // our lookup miss and here. Same contract as a cache hit.
+                validate_plan_artifacts(&hit.plan.steps, &self.artifacts)?;
+                self.stats.plan_builds_coalesced += 1;
+                self.stats.segment_compiles_skipped += hit.segments;
+                self.stats.plan_segments = hit.segments;
+                self.stats.plan_segment_nodes = hit.segment_nodes;
+                Ok(hit.plan)
+            }
+            BuildRole::Lead(ticket) => {
+                // A build error drops the ticket unfulfilled, which fails
+                // the lease and wakes every follower into its self-build
+                // path — a faulting lead must not wedge other sessions.
+                let plan = Arc::new(self.build_plan_contained(full, splits, next_iter)?);
+                ticket.fulfill(plan.clone());
+                Ok(plan)
+            }
+            BuildRole::Follow(lease) => {
+                let wait = self.watchdog.unwrap_or(PLAN_BUILD_WAIT);
+                match cache.await_build(&lease, wait) {
+                    Some(hit) => {
+                        validate_plan_artifacts(&hit.plan.steps, &self.artifacts)?;
+                        self.stats.plan_builds_coalesced += 1;
+                        self.stats.segment_compiles_skipped += hit.segments;
+                        self.stats.plan_segments = hit.segments;
+                        self.stats.plan_segment_nodes = hit.segment_nodes;
+                        Ok(hit.plan)
+                    }
+                    None => {
+                        debug_log(format_args!(
+                            "coalesced plan build unresolved after {}ms; building locally",
+                            wait.as_millis()
+                        ));
+                        let plan =
+                            Arc::new(self.build_plan_contained(full, splits, next_iter)?);
+                        cache.insert(key, plan.clone());
+                        Ok(plan)
+                    }
+                }
+            }
+        }
     }
 
     /// [`Engine::build_plan`] behind a panic boundary (Terra modes): a panic

@@ -134,9 +134,13 @@ impl GraphRunner {
         let error2 = error.clone();
         let progress = IterProgress::new();
         let progress2 = progress.clone();
+        // Carry the spawning thread's serve-session tag onto the runner
+        // thread so its obs events land in the same session's swim lanes.
+        let session = crate::obs::current_session();
         let handle = std::thread::Builder::new()
             .name("terra-graph-runner".into())
             .spawn(move || {
+                crate::obs::set_session(session);
                 let breakdown = channels.breakdown.clone();
                 let mut iter = start_iter;
                 loop {

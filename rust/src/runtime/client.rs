@@ -78,6 +78,27 @@ impl Client {
         xla::shim_totals()
     }
 
+    /// Pin this client's executions to `n` shim pool workers (0 = back to
+    /// the `TERRA_SHIM_THREADS` env default). Per-client state, shared with
+    /// every executable compiled through this client — there is no process
+    /// global to race on.
+    pub fn set_threads(&self, n: usize) {
+        self.inner.0.set_threads(n);
+    }
+
+    /// Pin this client's SIMD kernel selection (`None` = back to the
+    /// `TERRA_SHIM_SIMD` env default).
+    pub fn set_simd(&self, v: Option<bool>) {
+        self.inner.0.set_simd(v);
+    }
+
+    /// Attach (or detach) a shared parallelism budget: executions through
+    /// this client claim extra pool workers from it instead of assuming the
+    /// full resolved width, so concurrent sessions share cores fairly.
+    pub fn set_budget(&self, budget: Option<Arc<xla::ThreadBudget>>) {
+        self.inner.0.set_budget(budget);
+    }
+
     pub fn compile(&self, computation: &xla::XlaComputation, out_types: Vec<TensorType>) -> Result<Executable> {
         self.compile_count.fetch_add(1, Ordering::Relaxed);
         let exe = self.inner.0.compile(computation)?;
@@ -208,13 +229,18 @@ impl Executable {
     /// permits. Multi-output (tuple-rooted) computations may come back as a
     /// single tuple buffer depending on the PJRT `untuple_result` behaviour;
     /// we detect that case and decompose via a host literal.
+    ///
+    /// RNG draws and execution settings (threads / SIMD / budget) come from
+    /// the *executing* `client`, not the compiling one — so a plan-cache
+    /// executable shared across sessions stays session-correct: each
+    /// session's runs draw from its own stream under its own budget.
     pub fn run(&self, client: &Client, args: &[RtValue]) -> Result<Vec<RtValue>> {
         let mut bufs: Vec<DeviceBuffer> = Vec::with_capacity(args.len());
         for a in args {
             bufs.push(a.to_device(client)?);
         }
         let raw: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| &b.inner.0).collect();
-        let mut outputs = self.inner.0.execute_b(&raw)?;
+        let mut outputs = self.inner.0.execute_on(&client.inner.0, &raw)?;
         if outputs.is_empty() || outputs[0].is_empty() {
             return Err(TerraError::runtime("executable produced no outputs"));
         }

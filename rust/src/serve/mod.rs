@@ -1,0 +1,358 @@
+//! Multi-tenant serving runtime: the session/runtime split.
+//!
+//! The single-engine architecture ties one [`Engine`] to the process-global
+//! client, plan cache, and quarantine. That is the right default for the
+//! paper's single-tenant benchmarks, but serving N independent imperative
+//! programs from one process needs a different ownership story:
+//!
+//! * [`Runtime`] — one per process (or per tenant group): owns the shared
+//!   [`xla::ThreadBudget`] all sessions' shim executions draw pool workers
+//!   from, a *shared* [`PlanCache`] so identical-signature programs compile
+//!   once (with cross-session build coalescing — one lead compiles, every
+//!   follower shares the `Arc`), a shared [`Quarantine`] so a plan that
+//!   faults for one tenant is backed off for all, and a FIFO admission gate
+//!   bounding how many sessions run steps concurrently.
+//! * [`Session`] — one per tenant: wraps an [`Engine`] on a **fresh**
+//!   [`Client`] whose private RNG stream and per-client thread/SIMD settings
+//!   are isolated from every other session, so per-session results are
+//!   bit-identical to running that session's program alone.
+//!
+//! Determinism contract: the shim's chunk partitioning is bit-identical at
+//! every worker count, so budget contention (a session executing with fewer
+//! granted workers than it asked for) changes *latency only*, never results.
+//! Session ids (from 1) tag obs events; the standalone engine stays id 0.
+//!
+//! See `README.md` in this directory for the full design.
+
+use crate::config::RunConfig;
+use crate::error::Result;
+use crate::programs::Program;
+use crate::runner::{Engine, RunReport};
+use crate::runtime::Client;
+use crate::speculate::{PlanCache, Quarantine};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Runtime construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeConfig {
+    /// Worker threads all sessions' shim executions share: 0 = auto (the
+    /// `TERRA_SHIM_THREADS` / available-parallelism default). The budget
+    /// counts total compute threads when one session is active; each
+    /// session's own dispatching thread always works, so the shared pool
+    /// allowance is `budget - 1` extra workers.
+    pub budget: usize,
+    /// Admission cap: how many sessions may run steps concurrently; the
+    /// rest queue FIFO. 0 = unlimited.
+    pub max_active: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { budget: 0, max_active: 0 }
+    }
+}
+
+/// Poison-tolerant lock (a panicking session must not wedge admission for
+/// every other tenant).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---- admission -------------------------------------------------------------
+
+#[derive(Default)]
+struct AdmissionState {
+    /// Next ticket to hand out.
+    next_ticket: u64,
+    /// Ticket currently allowed to claim an active slot (strict FIFO: a
+    /// later ticket never overtakes an earlier one still waiting).
+    now_serving: u64,
+    /// Sessions currently admitted.
+    active: usize,
+}
+
+/// FIFO admission gate: `acquire` blocks until this caller's ticket is at
+/// the head of the queue *and* an active slot is free.
+struct Admission {
+    state: Mutex<AdmissionState>,
+    cv: Condvar,
+}
+
+impl Admission {
+    fn new() -> Self {
+        Admission { state: Mutex::new(AdmissionState::default()), cv: Condvar::new() }
+    }
+
+    fn acquire(&self, cap: usize) -> AdmissionPermit<'_> {
+        if cap == 0 {
+            return AdmissionPermit { admission: None };
+        }
+        let mut st = lock(&self.state);
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        while st.now_serving != ticket || st.active >= cap {
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        st.now_serving += 1;
+        st.active += 1;
+        AdmissionPermit { admission: Some(self) }
+    }
+
+    fn release(&self) {
+        lock(&self.state).active -= 1;
+        self.cv.notify_all();
+    }
+}
+
+/// RAII admission slot: dropping it (normal return or panic path) frees the
+/// slot and wakes the queue head.
+struct AdmissionPermit<'a> {
+    admission: Option<&'a Admission>,
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        if let Some(a) = self.admission {
+            a.release();
+        }
+    }
+}
+
+// ---- runtime ---------------------------------------------------------------
+
+struct Shared {
+    budget: Arc<xla::ThreadBudget>,
+    /// The resolved total-thread budget (`RuntimeConfig::budget`, or the env
+    /// default when that was 0).
+    budget_cap: usize,
+    plan_cache: Arc<PlanCache>,
+    quarantine: Arc<Quarantine>,
+    admission: Admission,
+    max_active: usize,
+    next_session: AtomicU64,
+    active_runs: AtomicUsize,
+}
+
+/// Process-wide serving runtime: shared plan cache, quarantine, parallelism
+/// budget, and admission queue. Cheap to clone handles out of via
+/// [`Runtime::open_session`]; sessions keep the shared state alive.
+pub struct Runtime {
+    shared: Arc<Shared>,
+}
+
+impl Runtime {
+    /// Build a runtime. A `budget` of 0 resolves the `TERRA_SHIM_THREADS`
+    /// env default (else available parallelism) — the old process-global
+    /// thread knob survives exactly here, as the default budget.
+    pub fn new(cfg: RuntimeConfig) -> Result<Runtime> {
+        let cap = if cfg.budget == 0 { xla::shim_threads()? } else { cfg.budget };
+        Ok(Runtime {
+            shared: Arc::new(Shared {
+                budget: Arc::new(xla::ThreadBudget::new(cap.saturating_sub(1))),
+                budget_cap: cap,
+                plan_cache: Arc::new(PlanCache::default()),
+                quarantine: Arc::new(Quarantine::from_env()?),
+                admission: Admission::new(),
+                max_active: cfg.max_active,
+                next_session: AtomicU64::new(1),
+                active_runs: AtomicUsize::new(0),
+            }),
+        })
+    }
+
+    /// [`Runtime::new`] with all defaults (auto budget, unlimited admission).
+    pub fn with_defaults() -> Result<Runtime> {
+        Self::new(RuntimeConfig::default())
+    }
+
+    /// The shared worker budget sessions' executions claim from.
+    pub fn budget(&self) -> &Arc<xla::ThreadBudget> {
+        &self.shared.budget
+    }
+
+    /// The resolved total-thread budget.
+    pub fn budget_cap(&self) -> usize {
+        self.shared.budget_cap
+    }
+
+    /// The plan cache shared by every session of this runtime.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.shared.plan_cache
+    }
+
+    /// The fault quarantine shared by every session of this runtime.
+    pub fn quarantine(&self) -> &Arc<Quarantine> {
+        &self.shared.quarantine
+    }
+
+    /// Sessions opened so far.
+    pub fn sessions_opened(&self) -> u64 {
+        self.shared.next_session.load(Ordering::Relaxed) - 1
+    }
+
+    /// Sessions currently inside an admitted [`Session::run`].
+    pub fn active_runs(&self) -> usize {
+        self.shared.active_runs.load(Ordering::Relaxed)
+    }
+
+    /// Open a session: a fresh [`Client`] (private RNG stream seeded at the
+    /// deterministic default, per-client thread/SIMD pins from `cfg`, the
+    /// runtime's shared budget attached) wrapping a new [`Engine`] wired to
+    /// the runtime's shared plan cache and quarantine.
+    pub fn open_session(&self, cfg: &RunConfig) -> Result<Session> {
+        let id = self.shared.next_session.fetch_add(1, Ordering::Relaxed);
+        let client = Client::new()?;
+        cfg.apply_shim_settings(&client);
+        client.set_budget(Some(self.shared.budget.clone()));
+        let mut engine = Engine::with_client(
+            cfg.mode,
+            &cfg.artifacts_dir,
+            cfg.fusion,
+            cfg.opt_level,
+            cfg.speculate,
+            client,
+        )?;
+        engine.set_plan_cache(if cfg.speculate.plan_cache {
+            Some(self.shared.plan_cache.clone())
+        } else {
+            None
+        });
+        engine.set_quarantine(self.shared.quarantine.clone());
+        Ok(Session { id, engine, shared: self.shared.clone() })
+    }
+}
+
+// ---- session ---------------------------------------------------------------
+
+/// One tenant: an isolated [`Engine`] plus its runtime membership. `Send`,
+/// so a serving thread can own it outright.
+pub struct Session {
+    id: u64,
+    engine: Engine,
+    shared: Arc<Shared>,
+}
+
+impl Session {
+    /// This session's id (>= 1; obs events are tagged with it).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The wrapped engine (stats, fine-grained stepping, test hooks). Steps
+    /// driven directly through the engine bypass the admission gate.
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// The wrapped engine, read-only.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Run a program through the admission gate: waits FIFO for an active
+    /// slot (when the runtime caps concurrency), tags the calling thread
+    /// with this session's id for the flight recorder, and releases the
+    /// slot on every exit path.
+    pub fn run(
+        &mut self,
+        prog: &mut dyn Program,
+        steps: u64,
+        warmup: u64,
+    ) -> Result<RunReport> {
+        self.engine.set_session_id(self.id);
+        let _permit = self.shared.admission.acquire(self.shared.max_active);
+        self.shared.active_runs.fetch_add(1, Ordering::Relaxed);
+        let out = self.engine.run(prog, steps, warmup);
+        self.shared.active_runs.fetch_sub(1, Ordering::Relaxed);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("terra-serve-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn session_is_send() {
+        // Serving threads own sessions outright (`thread::scope` in
+        // `cmd_serve` and the stress tests); keep that statically true.
+        fn assert_send<T: Send>() {}
+        assert_send::<Session>();
+        assert_send::<Runtime>();
+    }
+
+    #[test]
+    fn sessions_get_unique_ids_and_isolated_clients() {
+        let rt = Runtime::with_defaults().unwrap();
+        let cfg = RunConfig { artifacts_dir: tmp_dir("ids"), ..RunConfig::default() };
+        let a = rt.open_session(&cfg).unwrap();
+        let b = rt.open_session(&cfg).unwrap();
+        assert_eq!((a.id(), b.id()), (1, 2));
+        assert_eq!(rt.sessions_opened(), 2);
+        // Both clients start on the same deterministic seed (bit-identical
+        // per-session runs) but advance independently.
+        let s0 = a.engine().client().rng_state();
+        assert_eq!(s0, b.engine().client().rng_state());
+        a.engine().client().set_rng_state(s0.wrapping_add(99));
+        assert_eq!(b.engine().client().rng_state(), s0, "streams must be isolated");
+    }
+
+    #[test]
+    fn runtime_resolves_budget_cap() {
+        let rt = Runtime::new(RuntimeConfig { budget: 4, max_active: 0 }).unwrap();
+        assert_eq!(rt.budget_cap(), 4);
+        // 4 total threads = the dispatching thread + 3 shared pool workers.
+        assert_eq!(rt.budget().cap(), 3);
+        let auto = Runtime::with_defaults().unwrap();
+        assert!(auto.budget_cap() >= 1);
+    }
+
+    #[test]
+    fn admission_is_fifo_and_bounds_active() {
+        let adm = Arc::new(Admission::new());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        // Serialize ticket issuance: take tickets in a known order by
+        // staggering thread starts; cap 1 then forces strict FIFO service.
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            let (adm, order, active, peak) =
+                (adm.clone(), order.clone(), active.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                let permit = adm.acquire(1);
+                let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                lock(&order).push(i);
+                std::thread::sleep(Duration::from_millis(5));
+                active.fetch_sub(1, Ordering::SeqCst);
+                drop(permit);
+            }));
+            // Stagger so ticket order matches spawn order.
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "cap 1 must serialize");
+        assert_eq!(*lock(&order), vec![0, 1, 2, 3], "service order must be FIFO");
+    }
+
+    #[test]
+    fn admission_cap_zero_is_unlimited() {
+        let adm = Admission::new();
+        let p1 = adm.acquire(0);
+        let p2 = adm.acquire(0);
+        // No state was taken, so nothing to release either.
+        assert_eq!(lock(&adm.state).active, 0);
+        drop((p1, p2));
+    }
+}

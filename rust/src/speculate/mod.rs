@@ -32,7 +32,10 @@ pub mod signature;
 pub use controller::{
     parse_site_node, split_min_count, DivergenceProfile, ReentryController, ReentryPolicy,
 };
-pub use plancache::{CachedPlan, PlanCache, PlanKey, Quarantine, QuarantineVerdict};
+pub use plancache::{
+    BuildLease, BuildRole, BuildTicket, CachedPlan, PlanCache, PlanKey, Quarantine,
+    QuarantineVerdict,
+};
 pub use signature::{graph_signature, GraphSig};
 
 /// Engine-level speculation settings.

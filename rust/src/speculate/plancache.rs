@@ -21,7 +21,8 @@ use crate::symbolic::CompiledPlan;
 use crate::tracegraph::NodeId;
 use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use super::GraphSig;
 
@@ -92,14 +93,23 @@ struct Entry {
     last_used: u64,
 }
 
-/// Bounded, LRU-evicting plan cache.
+/// Bounded, LRU-evicting plan cache with cross-request build coalescing:
+/// when several sessions miss on the same key concurrently, exactly one
+/// (the *lead*, picked by [`PlanCache::begin_build`]) compiles while the
+/// others wait on a [`BuildLease`] and receive the same `Arc` — one
+/// compile, all waiters served.
 pub struct PlanCache {
     inner: Mutex<Inner>,
+    /// In-flight coalesced builds, keyed like the cache itself. An entry
+    /// exists from the lead's `begin_build` until its ticket fulfills or
+    /// drops; followers found here wait instead of compiling.
+    building: Mutex<HashMap<PlanKey, Arc<BuildLease>>>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     insertions: AtomicU64,
     evictions: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 /// Capacity from a raw `TERRA_PLAN_CACHE_CAP` value: absent = 64, `>= 1`
@@ -124,11 +134,13 @@ impl PlanCache {
     pub fn with_capacity(capacity: usize) -> Self {
         PlanCache {
             inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            building: Mutex::new(HashMap::new()),
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
         }
     }
 
@@ -217,6 +229,153 @@ impl PlanCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Plan builds avoided by coalescing: requests served a plan another
+    /// request was already compiling (or had just inserted).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Claim (or join) the in-flight build for `key` after a cache miss.
+    ///
+    /// * [`BuildRole::Lead`]: no one is building — the caller must compile
+    ///   and [`BuildTicket::fulfill`] (dropping the ticket unfulfilled, e.g.
+    ///   on a panic or error, fails the lease and wakes the waiters so they
+    ///   self-build).
+    /// * [`BuildRole::Follow`]: another request holds the lease; wait on it
+    ///   with [`PlanCache::await_build`].
+    /// * [`BuildRole::Ready`]: the plan landed in the cache between the
+    ///   caller's miss and this call — counted as coalesced, no compile.
+    pub fn begin_build(&self, key: PlanKey) -> BuildRole<'_> {
+        let mut building = self.building.lock().unwrap();
+        if let Some(lease) = building.get(&key) {
+            return BuildRole::Follow(lease.clone());
+        }
+        // Re-check the cache under the building lock: the previous lead may
+        // have fulfilled (insert + lease removal) since the caller's miss.
+        if let Some(e) = self.inner.lock().unwrap().map.get(&key) {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            return BuildRole::Ready(e.cached.clone());
+        }
+        let lease = Arc::new(BuildLease {
+            state: Mutex::new(LeaseState::Building),
+            cv: Condvar::new(),
+        });
+        building.insert(key, lease.clone());
+        BuildRole::Lead(BuildTicket { cache: self, key, lease, fulfilled: false })
+    }
+
+    /// Wait (bounded) for a lead's build. `Some` means the lease was
+    /// fulfilled and this request coalesced onto it; `None` (failed lease or
+    /// timeout) means the caller should build for itself.
+    pub fn await_build(&self, lease: &BuildLease, timeout: Duration) -> Option<CachedPlan> {
+        let got = lease.wait(timeout);
+        if got.is_some() {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// In-flight coalesced builds right now (tests / stats).
+    pub fn building_len(&self) -> usize {
+        self.building.lock().unwrap().len()
+    }
+}
+
+/// Outcome of [`PlanCache::begin_build`].
+pub enum BuildRole<'a> {
+    /// Caller owns the build; fulfill or drop the ticket.
+    Lead(BuildTicket<'a>),
+    /// Another request is building; wait via [`PlanCache::await_build`].
+    Follow(Arc<BuildLease>),
+    /// The plan is already cached (raced with a fulfilling lead).
+    Ready(CachedPlan),
+}
+
+enum LeaseState {
+    Building,
+    Done(CachedPlan),
+    Failed,
+}
+
+/// Shared wait-point for one in-flight plan build (one per key at a time).
+pub struct BuildLease {
+    state: Mutex<LeaseState>,
+    cv: Condvar,
+}
+
+impl BuildLease {
+    fn wait(&self, timeout: Duration) -> Option<CachedPlan> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                LeaseState::Done(c) => return Some(c.clone()),
+                LeaseState::Failed => return None,
+                LeaseState::Building => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn settle(&self, state: LeaseState) {
+        *self.state.lock().unwrap() = state;
+        self.cv.notify_all();
+    }
+}
+
+/// The lead builder's obligation: exactly one exists per in-flight key.
+/// [`fulfill`](BuildTicket::fulfill) inserts the plan into the cache and
+/// wakes every waiter with it; dropping the ticket without fulfilling
+/// (error or panic paths) fails the lease — waiters fall back to building
+/// for themselves, so a crashed lead can never wedge its followers.
+pub struct BuildTicket<'a> {
+    cache: &'a PlanCache,
+    key: PlanKey,
+    lease: Arc<BuildLease>,
+    fulfilled: bool,
+}
+
+impl BuildTicket<'_> {
+    /// The key this ticket is building.
+    pub fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    /// Publish the built plan: cache insert, lease fulfilment, waiter
+    /// wake-up — in that order, so a waiter that times out right here still
+    /// finds the plan in the cache.
+    pub fn fulfill(mut self, plan: Arc<CompiledPlan>) {
+        self.cache.insert(self.key, plan);
+        let cached = self
+            .cache
+            .lookup_quiet(&self.key)
+            .expect("a just-inserted plan must be present");
+        self.cache.building.lock().unwrap().remove(&self.key);
+        self.lease.settle(LeaseState::Done(cached));
+        self.fulfilled = true;
+    }
+}
+
+impl Drop for BuildTicket<'_> {
+    fn drop(&mut self) {
+        if !self.fulfilled {
+            self.cache.building.lock().unwrap().remove(&self.key);
+            self.lease.settle(LeaseState::Failed);
+        }
+    }
+}
+
+impl PlanCache {
+    /// Internal lookup that touches neither counters nor LRU order.
+    fn lookup_quiet(&self, key: &PlanKey) -> Option<CachedPlan> {
+        self.inner.lock().unwrap().map.get(key).map(|e| e.cached.clone())
     }
 }
 
@@ -478,6 +637,103 @@ mod tests {
         assert!(e.to_string().contains("TERRA_PLAN_MAX_FAULTS"), "{e}");
         let e = max_faults_from_raw(Some("many")).unwrap_err();
         assert!(e.to_string().contains("TERRA_PLAN_MAX_FAULTS"), "{e}");
+    }
+
+    #[test]
+    fn coalesced_build_one_lead_many_followers() {
+        let c = Arc::new(PlanCache::with_capacity(4));
+        let k = key(21);
+        // First claim is the lead.
+        let ticket = match c.begin_build(k) {
+            BuildRole::Lead(t) => t,
+            _ => panic!("first begin_build must lead"),
+        };
+        assert_eq!(c.building_len(), 1);
+        // Concurrent claims follow and block until the lead fulfills.
+        let waiters: Vec<_> = (0..3)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || match c.begin_build(k) {
+                    BuildRole::Follow(lease) => {
+                        c.await_build(&lease, Duration::from_secs(10)).is_some()
+                    }
+                    BuildRole::Ready(_) => true,
+                    BuildRole::Lead(_) => false,
+                })
+            })
+            .collect();
+        // Give the waiters a moment to park on the lease, then publish.
+        std::thread::sleep(Duration::from_millis(20));
+        ticket.fulfill(empty_plan());
+        for w in waiters {
+            assert!(w.join().unwrap(), "every waiter must be served the lead's plan");
+        }
+        assert_eq!(c.building_len(), 0);
+        assert!(c.contains(&k));
+        assert!(c.coalesced() >= 3, "got {}", c.coalesced());
+        // A late request finds the plan cached — a plain hit, not a lease.
+        assert!(c.lookup(&k).is_some());
+    }
+
+    #[test]
+    fn dropped_ticket_fails_the_lease_and_waiters_self_build() {
+        let c = Arc::new(PlanCache::with_capacity(4));
+        let k = key(22);
+        let ticket = match c.begin_build(k) {
+            BuildRole::Lead(t) => t,
+            _ => panic!("must lead"),
+        };
+        let lease = match c.begin_build(k) {
+            BuildRole::Follow(l) => l,
+            _ => panic!("second claim must follow"),
+        };
+        drop(ticket); // lead dies without fulfilling (build error / panic)
+        assert!(
+            c.await_build(&lease, Duration::from_secs(10)).is_none(),
+            "a failed lease must release waiters empty-handed"
+        );
+        assert_eq!(c.building_len(), 0, "the dead lead's lease must be unpublished");
+        // The key is claimable again: the former waiter becomes the lead.
+        match c.begin_build(k) {
+            BuildRole::Lead(t) => t.fulfill(empty_plan()),
+            _ => panic!("retry after a failed lease must lead"),
+        }
+        assert!(c.contains(&k));
+    }
+
+    #[test]
+    fn begin_build_after_fulfil_returns_ready() {
+        let c = PlanCache::with_capacity(4);
+        let k = key(23);
+        match c.begin_build(k) {
+            BuildRole::Lead(t) => t.fulfill(empty_plan()),
+            _ => panic!("must lead"),
+        }
+        // A request that missed before the fulfil but claims after it gets
+        // the cached plan straight from the claim, counted as coalesced.
+        let before = c.coalesced();
+        match c.begin_build(k) {
+            BuildRole::Ready(_) => {}
+            _ => panic!("cached key must resolve Ready"),
+        }
+        assert_eq!(c.coalesced(), before + 1);
+    }
+
+    #[test]
+    fn await_build_times_out_on_a_stuck_lead() {
+        let c = PlanCache::with_capacity(4);
+        let k = key(24);
+        let _ticket = match c.begin_build(k) {
+            BuildRole::Lead(t) => t,
+            _ => panic!("must lead"),
+        };
+        let lease = match c.begin_build(k) {
+            BuildRole::Follow(l) => l,
+            _ => panic!("must follow"),
+        };
+        let t0 = Instant::now();
+        assert!(c.await_build(&lease, Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
     }
 
     #[test]

@@ -184,19 +184,20 @@ impl Program for WidePipe {
     }
 }
 
-/// Restores the shim worker-thread override (a process-global) on drop.
+/// Restores the worker-thread override on the process's shared client (the
+/// one engines built through `with_speculate` execute on) when dropped.
 struct ThreadsOverride;
 
 impl ThreadsOverride {
     fn set(n: usize) -> Self {
-        xla::set_shim_threads(n);
+        terra::runtime::Client::global().set_threads(n);
         ThreadsOverride
     }
 }
 
 impl Drop for ThreadsOverride {
     fn drop(&mut self) {
-        xla::set_shim_threads(0);
+        terra::runtime::Client::global().set_threads(0);
     }
 }
 

@@ -1,0 +1,292 @@
+//! Multi-tenant serving stress tests (ISSUE 9 acceptance): N sessions of one
+//! [`terra::serve::Runtime`] running concurrently must produce per-session
+//! results bit-identical to each session running alone — the shared plan
+//! cache serves cross-session hits without staleness, each session's private
+//! client RNG stream is isolated from its neighbours, and the shared worker
+//! budget changes latency only, never numerics.
+
+use terra::api::{Session, Variable};
+use terra::config::{ExecMode, RunConfig};
+use terra::error::Result;
+use terra::programs::{Program, StepOutput};
+use terra::serve::{Runtime, RuntimeConfig};
+use terra::speculate::{ReentryPolicy, SpeculateConfig};
+use terra::tensor::HostTensor;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_serve_it_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Write-if-absent: tests in this binary run concurrently, and a truncate
+    // rewrite could be observed half-written by a parallel ArtifactStore::open.
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        std::fs::write(manifest, r#"{"artifacts": []}"#).unwrap();
+    }
+    dir.to_string_lossy().into_owned()
+}
+
+fn serve_cfg() -> RunConfig {
+    RunConfig {
+        mode: ExecMode::Terra,
+        artifacts_dir: artifacts_dir(),
+        // Pin the speculation knobs (the default reads env) so every engine
+        // in this binary replays the same signature sequence
+        // deterministically.
+        speculate: SpeculateConfig {
+            plan_cache: true,
+            policy: ReentryPolicy::Adaptive,
+            split_hot_sites: false,
+        },
+        ..RunConfig::default()
+    }
+}
+
+/// Single-path program with an RNG draw every step: `w <- tanh(w*x + 0.01*u)`
+/// where `u` comes from the session's private client stream. Two sessions
+/// running this concurrently only agree with their solo runs if their RNG
+/// streams never cross.
+struct NoisyScale {
+    w: Option<Variable>,
+    scale: f32,
+}
+
+impl Program for NoisyScale {
+    fn name(&self) -> &'static str {
+        "serve_noisy_scale"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.w = Some(sess.variable("w", HostTensor::filled_f32(vec![8], 0.6), true)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let x = sess.feed(HostTensor::filled_f32(
+            vec![8],
+            1.0 + step as f32 * 1e-3 * self.scale,
+        ))?;
+        let u = sess.rng_uniform(&[8])?;
+        let y = w.read().mul(&x)?.add(&u.mul_scalar(0.01)?)?.tanh()?;
+        let loss = y.mul(&y)?.reduce_mean(&[0], false)?;
+        w.assign(&y)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+}
+
+/// Multi-path program (four call sites rotating every `phase_len` steps):
+/// each phase boundary is a divergence fallback and a co-execution re-entry,
+/// so one run touches the plan cache several times with distinct signatures.
+struct Rotator {
+    w: Option<Variable>,
+    phase_len: u64,
+}
+
+impl Program for Rotator {
+    fn name(&self) -> &'static str {
+        "serve_rotator"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        self.w = Some(sess.variable("w", HostTensor::scalar_f32(0.7), true)?);
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let w = self.w.as_ref().unwrap();
+        let x = sess.feed(HostTensor::scalar_f32(0.5 + (step % 5) as f32 * 0.02))?;
+        let y = w.read().mul(&x)?;
+        let z = match (step / self.phase_len) % 4 {
+            0 => y.relu()?,
+            1 => y.tanh()?,
+            2 => y.sigmoid()?,
+            _ => y.abs()?,
+        };
+        w.assign(&z)?;
+        Ok(StepOutput { loss: Some(z), extra: vec![] })
+    }
+}
+
+/// What one session run leaves behind, for exact comparison.
+struct Outcome {
+    losses: Vec<(u64, f32)>,
+    rng_state: u64,
+    stats: terra::runner::EngineStats,
+}
+
+/// Run `prog` alone: a private runtime (fresh plan cache, fresh budget), one
+/// session, serial execution. The ground truth every concurrent run must hit
+/// bit for bit.
+fn solo(make: &dyn Fn() -> Box<dyn Program>, steps: u64) -> Outcome {
+    let rt = Runtime::with_defaults().unwrap();
+    let cfg = serve_cfg();
+    let mut sess = rt.open_session(&cfg).unwrap();
+    let mut prog = make();
+    let report = sess.run(prog.as_mut(), steps, 0).unwrap();
+    Outcome {
+        losses: report.losses,
+        rng_state: sess.engine().client().rng_state(),
+        stats: report.stats,
+    }
+}
+
+/// Run every program in `makes` concurrently, one session each, on a shared
+/// runtime. Returns outcomes in input order.
+fn concurrent(
+    rt: &Runtime,
+    makes: &[&(dyn Fn() -> Box<dyn Program> + Sync)],
+    steps: u64,
+) -> Vec<Outcome> {
+    let cfg = serve_cfg();
+    let mut sessions: Vec<_> = makes.iter().map(|_| rt.open_session(&cfg).unwrap()).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = sessions
+            .iter_mut()
+            .zip(makes.iter())
+            .map(|(sess, make)| {
+                s.spawn(move || {
+                    let mut prog = make();
+                    let report = sess.run(prog.as_mut(), steps, 0).unwrap();
+                    Outcome {
+                        losses: report.losses,
+                        rng_state: sess.engine().client().rng_state(),
+                        stats: report.stats,
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+fn assert_identical(solo: &Outcome, concurrent: &Outcome, who: &str) {
+    assert_eq!(
+        solo.losses.len(),
+        concurrent.losses.len(),
+        "{who}: step counts differ"
+    );
+    for ((s, a), (_, b)) in solo.losses.iter().zip(concurrent.losses.iter()) {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{who}: loss at step {s} not bit-identical ({a} vs {b})"
+        );
+    }
+    assert_eq!(
+        solo.rng_state, concurrent.rng_state,
+        "{who}: client RNG stream diverged from the solo run"
+    );
+}
+
+/// The headline acceptance property: three sessions of the *same* program
+/// shape (identical graph signatures — the shared cache and build coalescing
+/// are fully exercised) but distinct data trajectories and private RNG
+/// streams, run concurrently, each land bit-identical to running alone.
+#[test]
+fn concurrent_sessions_bit_identical_to_solo() {
+    let steps = 24;
+    let scales = [1.0f32, 2.0, 3.0];
+    let solos: Vec<Outcome> = scales
+        .iter()
+        .map(|&sc| {
+            solo(&move || Box::new(NoisyScale { w: None, scale: sc }) as Box<dyn Program>, steps)
+        })
+        .collect();
+    // Distinct trajectories: the data (and therefore the losses) must differ
+    // across scales, or the isolation assertions below are vacuous.
+    assert_ne!(
+        solos[0].losses.last().unwrap().1.to_bits(),
+        solos[1].losses.last().unwrap().1.to_bits(),
+        "scales must produce distinct trajectories"
+    );
+
+    let rt = Runtime::with_defaults().unwrap();
+    let mk0 = || Box::new(NoisyScale { w: None, scale: 1.0 }) as Box<dyn Program>;
+    let mk1 = || Box::new(NoisyScale { w: None, scale: 2.0 }) as Box<dyn Program>;
+    let mk2 = || Box::new(NoisyScale { w: None, scale: 3.0 }) as Box<dyn Program>;
+    let outcomes = concurrent(&rt, &[&mk0, &mk1, &mk2], steps);
+    for (i, (s, c)) in solos.iter().zip(outcomes.iter()).enumerate() {
+        assert_identical(s, c, &format!("session scale={}", scales[i]));
+    }
+    assert_eq!(rt.sessions_opened(), 3);
+    assert_eq!(rt.active_runs(), 0, "all admission slots released");
+    // The budget pool must end fully released no matter how execution
+    // interleaved (RAII claims).
+    assert_eq!(rt.budget().in_use(), 0);
+}
+
+/// Zero cross-session plan-cache staleness, deterministically: one session
+/// warms the shared cache serially, then two more sessions replay the same
+/// signature sequence concurrently. Every one of their re-entries must be a
+/// cache hit (no compiles at all), and the numbers must still match a solo
+/// run on a *cold* cache — i.e. a plan compiled by session 1 executed on
+/// session 2's client produces session 2's exact results.
+#[test]
+fn warm_shared_cache_serves_sessions_exactly() {
+    let steps = 30; // phases 0,1,2,3,0,1 at phase_len 5
+    let mk = || Box::new(Rotator { w: None, phase_len: 5 }) as Box<dyn Program>;
+    let cold = solo(&mk, steps);
+    assert!(
+        cold.stats.plan_cache_misses >= 1,
+        "cold run must build plans: {:?}",
+        cold.stats
+    );
+
+    let rt = Runtime::with_defaults().unwrap();
+    let warm_run = concurrent(&rt, &[&mk], steps);
+    assert_identical(&cold, &warm_run[0], "cache-warming session");
+
+    let warmed = concurrent(&rt, &[&mk, &mk], steps);
+    for (i, outcome) in warmed.iter().enumerate() {
+        assert_identical(&cold, outcome, &format!("warmed session {i}"));
+        let st = &outcome.stats;
+        assert!(st.enter_coexec >= 3, "rotator must re-enter repeatedly: {st:?}");
+        assert_eq!(
+            st.plan_cache_misses, 0,
+            "warmed session {i} must never build: {st:?}"
+        );
+        assert_eq!(
+            st.plan_cache_hits, st.enter_coexec,
+            "every re-entry served by the shared cache: {st:?}"
+        );
+        assert_eq!(st.segments_compiled, 0, "no fresh compiles: {st:?}");
+    }
+}
+
+/// Different program shapes (disjoint signature sets) sharing one runtime:
+/// concurrent tenants must not perturb each other through the shared cache,
+/// budget, or quarantine.
+#[test]
+fn mixed_programs_one_runtime_no_interference() {
+    let steps = 25;
+    let mk_noisy = || Box::new(NoisyScale { w: None, scale: 1.5 }) as Box<dyn Program>;
+    let mk_rot = || Box::new(Rotator { w: None, phase_len: 6 }) as Box<dyn Program>;
+    let solo_noisy = solo(&mk_noisy, steps);
+    let solo_rot = solo(&mk_rot, steps);
+
+    let rt = Runtime::with_defaults().unwrap();
+    let outcomes = concurrent(&rt, &[&mk_noisy, &mk_rot], steps);
+    assert_identical(&solo_noisy, &outcomes[0], "noisy-scale tenant");
+    assert_identical(&solo_rot, &outcomes[1], "rotator tenant");
+}
+
+/// A budget of 1 total thread (zero shared pool workers: every execution is
+/// dispatch-thread-only) plus an admission cap of 1 fully serializes the
+/// tenants — and, per the determinism contract, changes nothing numerically.
+#[test]
+fn budget_one_serializes_compute_without_changing_results() {
+    let steps = 24;
+    let mk0 = || Box::new(NoisyScale { w: None, scale: 1.0 }) as Box<dyn Program>;
+    let mk1 = || Box::new(Rotator { w: None, phase_len: 5 }) as Box<dyn Program>;
+    let solo0 = solo(&mk0, steps);
+    let solo1 = solo(&mk1, steps);
+
+    let rt = Runtime::new(RuntimeConfig { budget: 1, max_active: 1 }).unwrap();
+    assert_eq!(rt.budget_cap(), 1);
+    assert_eq!(rt.budget().cap(), 0, "budget 1 = no extra pool workers");
+    let outcomes = concurrent(&rt, &[&mk0, &mk1], steps);
+    assert_identical(&solo0, &outcomes[0], "budget-1 session 0");
+    assert_identical(&solo1, &outcomes[1], "budget-1 session 1");
+    assert_eq!(rt.budget().in_use(), 0);
+    assert_eq!(rt.active_runs(), 0);
+}

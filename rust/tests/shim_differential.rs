@@ -432,7 +432,22 @@ fn fingerprint(lit: &Literal) -> (PrimitiveType, Vec<i64>, Vec<u32>) {
 type RunOut = Result<Vec<(PrimitiveType, Vec<i64>, Vec<u32>)>, String>;
 
 fn run_backend(comp: &XlaComputation, args: &[ArgData], backend: ShimBackend) -> RunOut {
+    run_backend_with(comp, args, backend, 0, None)
+}
+
+/// Like [`run_backend`] but pinning the fresh client's worker-thread count
+/// and SIMD selection (the process-global overrides are gone; settings live
+/// on each client and are captured by its executables).
+fn run_backend_with(
+    comp: &XlaComputation,
+    args: &[ArgData],
+    backend: ShimBackend,
+    threads: usize,
+    simd: Option<bool>,
+) -> RunOut {
     let client = PjRtClient::cpu().unwrap();
+    client.set_threads(threads);
+    client.set_simd(simd);
     let bufs = make_buffers(&client, args);
     let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
     let exe = client.compile_with_backend(comp, backend).map_err(|e| e.to_string())?;
@@ -445,13 +460,13 @@ fn run_backend(comp: &XlaComputation, args: &[ArgData], backend: ShimBackend) ->
 }
 
 /// Thread counts the bytecode backend is fuzzed over (the
-/// `TERRA_SHIM_THREADS` axis, driven through its programmatic override so
+/// `TERRA_SHIM_THREADS` axis, driven through the per-client override so
 /// the process env stays untouched): the seed's single-threaded path, one
 /// extra worker, and an oversubscribed pool.
 const THREAD_AXIS: [usize; 3] = [1, 2, 8];
 
 /// SIMD settings the bytecode backend is fuzzed over (the `TERRA_SHIM_SIMD`
-/// axis, driven through its programmatic override): the seed's scalar loops
+/// axis, driven through the per-client override): the seed's scalar loops
 /// and the explicit-width vector kernels, which must be indistinguishable
 /// bit for bit.
 const SIMD_AXIS: [bool; 2] = [false, true];
@@ -466,11 +481,9 @@ fn check_seed(seed: u64, allow_rng: bool) {
     // interp oracle bit for bit, RNG stream state included (draws stay on
     // the dispatch thread, never in the worker pool, and never vectorize).
     for simd in SIMD_AXIS {
-        xla::set_shim_simd(Some(simd));
         for threads in THREAD_AXIS {
-            xla::set_shim_threads(threads);
             xla::set_rng_state(rng_seed);
-            let c = run_backend(&comp, &args, ShimBackend::Bytecode);
+            let c = run_backend_with(&comp, &args, ShimBackend::Bytecode, threads, Some(simd));
             let state_bytecode = xla::rng_state();
             match (&a, &c) {
                 (Ok(a), Ok(c)) => {
@@ -502,8 +515,6 @@ fn check_seed(seed: u64, allow_rng: bool) {
             }
         }
     }
-    xla::set_shim_threads(0);
-    xla::set_shim_simd(None);
 }
 
 /// The full fuzz sweep, RNG ops included. Runs serially in one test so the
@@ -542,11 +553,10 @@ fn bytecode_matches_interpreter_on_elementwise_chains() {
         let args = vec![ArgData::F { data, dims: vec![n] }];
         let a = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
         for simd in SIMD_AXIS {
-            xla::set_shim_simd(Some(simd));
-            let cres = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+            let cres =
+                run_backend_with(&comp, &args, ShimBackend::Bytecode, 0, Some(simd)).unwrap();
             assert_eq!(a, cres, "chain seed {seed} diverged (simd {simd})");
         }
-        xla::set_shim_simd(None);
     }
 }
 
@@ -584,18 +594,15 @@ fn bytecode_matches_interpreter_on_matmul_sizes() {
         ];
         let x = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
         for simd in SIMD_AXIS {
-            xla::set_shim_simd(Some(simd));
             for threads in THREAD_AXIS {
-                xla::set_shim_threads(threads);
-                let y = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+                let y = run_backend_with(&comp, &args, ShimBackend::Bytecode, threads, Some(simd))
+                    .unwrap();
                 assert_eq!(
                     x, y,
                     "matmul {m}x{k}x{n} diverged (threads {threads}, simd {simd})"
                 );
             }
         }
-        xla::set_shim_threads(0);
-        xla::set_shim_simd(None);
     }
 }
 
@@ -630,16 +637,13 @@ fn parallel_kernels_match_oracle_on_large_shapes() {
     ];
     let oracle = run_backend(&comp, &args, ShimBackend::Interp).unwrap();
     for simd in SIMD_AXIS {
-        xla::set_shim_simd(Some(simd));
         for threads in THREAD_AXIS {
-            xla::set_shim_threads(threads);
-            let got = run_backend(&comp, &args, ShimBackend::Bytecode).unwrap();
+            let got = run_backend_with(&comp, &args, ShimBackend::Bytecode, threads, Some(simd))
+                .unwrap();
             assert_eq!(
                 oracle, got,
                 "large-shape parallel run diverged (threads {threads}, simd {simd})"
             );
         }
     }
-    xla::set_shim_threads(0);
-    xla::set_shim_simd(None);
 }

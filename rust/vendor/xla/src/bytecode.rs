@@ -394,24 +394,34 @@ const PAR_MIN_FLOPS: usize = 32_768;
 /// exceeds `chunks`; each claimed chunk runs the closure and then bumps
 /// `done` — even if the closure panicked (the panic is caught and recorded
 /// in `panicked`), so the completion protocol can never wedge and the job
-/// is always unpublished. The `'static` on `f` is a lie confined to the
-/// pool (see [`run_parallel`]): the closure is only dereferenced for
-/// successfully claimed chunks, and the dispatcher blocks until
-/// `done == chunks` before its frame (which owns the closure) returns.
+/// is always unpublished. `cap` bounds how many pool workers may *join* the
+/// job over its lifetime (`joined`, mutated under the pool lock) — that is
+/// how a per-session parallelism budget is enforced at the chunk level
+/// while several jobs share one pool. The `'static` on `f` is a lie
+/// confined to the pool (see [`run_parallel`]): the closure is only
+/// dereferenced for successfully claimed chunks, and the dispatcher blocks
+/// until `done == chunks` before its frame (which owns the closure)
+/// returns.
 #[derive(Clone)]
 struct Job {
+    id: u64,
     f: &'static (dyn Fn(usize) + Sync),
     next: Arc<AtomicUsize>,
     chunks: usize,
+    /// Max pool workers allowed to join this job (dispatcher not counted).
+    cap: usize,
+    /// Pool workers that have joined so far; guarded by the pool lock.
+    joined: usize,
     done: Arc<(Mutex<usize>, Condvar)>,
     panicked: Arc<AtomicBool>,
 }
 
 struct PoolState {
-    job: Option<Job>,
-    /// Bumped on every publish so a worker never re-enters a job it already
-    /// drained.
-    seq: u64,
+    /// Every job currently published. Workers scan for one with headroom
+    /// (`joined < cap`) and unclaimed chunks; dispatchers remove their own
+    /// entry (by `id`) once it drains. Multiple jobs in flight is the
+    /// normal concurrent-sessions case, not an error.
+    jobs: Vec<Job>,
     workers: usize,
 }
 
@@ -427,7 +437,7 @@ struct WorkerPool {
 fn pool() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
     POOL.get_or_init(|| WorkerPool {
-        state: Mutex::new(PoolState { job: None, seq: 0, workers: 0 }),
+        state: Mutex::new(PoolState { jobs: Vec::new(), workers: 0 }),
         work: Condvar::new(),
     })
 }
@@ -446,16 +456,19 @@ impl WorkerPool {
     }
 
     fn worker_loop(&self) {
-        let mut seen = 0u64;
         loop {
             let job = {
                 let mut st = self.state.lock().unwrap();
                 loop {
-                    if st.seq != seen {
-                        if let Some(j) = &st.job {
-                            seen = st.seq;
-                            break j.clone();
-                        }
+                    // A drained job (next >= chunks) self-excludes, so a
+                    // worker can never re-enter a job it already finished;
+                    // `joined < cap` enforces the job's worker budget.
+                    let found = st.jobs.iter_mut().find(|j| {
+                        j.joined < j.cap && j.next.load(Ordering::Relaxed) < j.chunks
+                    });
+                    if let Some(j) = found {
+                        j.joined += 1;
+                        break j.clone();
                     }
                     st = self.work.wait(st).unwrap();
                 }
@@ -495,15 +508,16 @@ fn run_chunks(job: &Job) {
 }
 
 /// Run `chunks` fixed tasks on up to `threads` threads (dispatcher
-/// included). Falls back to running everything on the caller when the pool
-/// is busy with a concurrent dispatch — results are identical either way,
-/// only the wall-clock changes. Counts `parallel_loops` only when the job
-/// actually went to the pool. A chunk panic (caught in [`run_chunks`])
-/// surfaces here as an `Err` on the dispatching thread — after the job has
-/// fully drained and been unpublished, so the pool stays sound — and
-/// propagates through the execution result; it never unwinds into the
-/// caller, so an embedding runtime (terra's GraphRunner) sees a failed
-/// execution, not an abort.
+/// included). Concurrent dispatches coexist: each publishes its own job
+/// into the pool's job list, capped at `threads - 1` pool workers, and
+/// idle workers pick whichever published job has headroom — so sessions
+/// with separate budgets share the pool fairly instead of one grabbing it
+/// whole (or degrading to serial as the old single-slot pool did). A chunk
+/// panic (caught in [`run_chunks`]) surfaces here as an `Err` on the
+/// dispatching thread — after the job has fully drained and been
+/// unpublished, so the pool stays sound — and propagates through the
+/// execution result; it never unwinds into the caller, so an embedding
+/// runtime (terra's GraphRunner) sees a failed execution, not an abort.
 fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
     if threads <= 1 || chunks <= 1 {
         for c in 0..chunks {
@@ -511,6 +525,7 @@ fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Re
         }
         return Ok(());
     }
+    static JOB_IDS: AtomicU64 = AtomicU64::new(0);
     let p = pool();
     p.ensure_workers(threads - 1);
     // SAFETY: the 'static lifetime is never exercised beyond this frame —
@@ -521,23 +536,18 @@ fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Re
     let f_static: &'static (dyn Fn(usize) + Sync) =
         unsafe { &*(f as *const (dyn Fn(usize) + Sync)) };
     let job = Job {
+        id: JOB_IDS.fetch_add(1, Ordering::Relaxed),
         f: f_static,
         next: Arc::new(AtomicUsize::new(0)),
         chunks,
+        cap: threads - 1,
+        joined: 0,
         done: Arc::new((Mutex::new(0), Condvar::new())),
         panicked: Arc::new(AtomicBool::new(false)),
     };
     {
         let mut st = p.state.lock().unwrap();
-        if st.job.is_some() {
-            drop(st);
-            for c in 0..chunks {
-                f(c);
-            }
-            return Ok(());
-        }
-        st.seq += 1;
-        st.job = Some(job.clone());
+        st.jobs.push(job.clone());
         p.work.notify_all();
     }
     crate::PARALLEL_LOOPS.fetch_add(1, Ordering::Relaxed);
@@ -548,7 +558,7 @@ fn run_parallel(threads: usize, chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Re
         d = cv.wait(d).unwrap();
     }
     drop(d);
-    p.state.lock().unwrap().job = None;
+    p.state.lock().unwrap().jobs.retain(|j| j.id != job.id);
     if job.panicked.load(Ordering::Relaxed) {
         return err("a parallel shim kernel chunk panicked (caught on the dispatch thread)");
     }
@@ -572,20 +582,49 @@ unsafe impl<T: Send> Sync for OutPtr<T> {}
 /// Count a small-shape serial fallback: a parallel-eligible kernel kind
 /// that stayed serial because the shape was below its dispatch threshold
 /// (only meaningful when threads > 1). Actual pool dispatches are counted
-/// inside [`run_parallel`], where the busy-pool serial degradation is
-/// visible — so `parallel_loops` never over-reports under contention.
+/// inside [`run_parallel`].
 fn note_parallel(threads: usize, eligible: bool) {
     if threads > 1 && !eligible {
         crate::SERIAL_FALLBACKS.fetch_add(1, Ordering::Relaxed);
     }
 }
 
-/// Per-execution context: the client's RNG stream, the resolved worker
-/// count, and whether the 8-lane SIMD kernel paths are enabled.
+/// Per-execution context: the client's RNG stream, the effective worker
+/// count (budget claim already applied), and whether the 8-lane SIMD
+/// kernel paths are enabled.
 struct ExecCtx<'a> {
     rng: &'a RngStream,
     threads: usize,
     simd: bool,
+}
+
+/// RAII claim of extra pool workers from a shared [`crate::ThreadBudget`]
+/// for the duration of one program execution. With no budget attached the
+/// full `threads - 1` is granted unconditionally (solo behaviour); with one,
+/// `granted` is whatever the budget had free — possibly 0, which degrades
+/// this execution to serial rather than blocking. Dropping releases the
+/// claim on every exit path, early validation errors included.
+struct BudgetClaim<'a> {
+    budget: Option<&'a crate::ThreadBudget>,
+    granted: usize,
+}
+
+impl<'a> BudgetClaim<'a> {
+    fn take(budget: Option<&'a crate::ThreadBudget>, threads: usize) -> BudgetClaim<'a> {
+        let want = threads.saturating_sub(1);
+        match budget {
+            None => BudgetClaim { budget: None, granted: want },
+            Some(b) => BudgetClaim { budget: Some(b), granted: b.try_claim(want) },
+        }
+    }
+}
+
+impl Drop for BudgetClaim<'_> {
+    fn drop(&mut self) {
+        if let Some(b) = self.budget {
+            b.release(self.granted);
+        }
+    }
 }
 
 /// Count one kernel dispatch down an 8-lane SIMD path, plus the output
@@ -658,14 +697,20 @@ impl Program {
 
     /// Run the program, returning the output leaves (the untupled root).
     /// RNG instructions draw from `rng` on this thread in node order;
-    /// parallel kernels use the worker count resolved by
-    /// [`crate::shim_threads`] (1 = the seed's single-threaded behaviour,
-    /// bit-identical results at every count).
-    pub(crate) fn execute(&self, args: &[&Literal], rng: &RngStream) -> Result<Vec<Literal>> {
-        let threads = crate::shim_threads()?;
+    /// parallel kernels use the worker count from `opts` (the executing
+    /// client's resolved [`crate::ExecSettings`]), reduced by whatever the
+    /// attached budget could not grant (1 = the seed's single-threaded
+    /// behaviour, bit-identical results at every count).
+    pub(crate) fn execute(
+        &self,
+        args: &[&Literal],
+        rng: &RngStream,
+        opts: &crate::ResolvedExec,
+    ) -> Result<Vec<Literal>> {
+        let claim = BudgetClaim::take(opts.budget.as_deref(), opts.threads);
+        let threads = 1 + claim.granted;
         crate::THREADS_USED.store(threads as u64, Ordering::Relaxed);
-        let simd = crate::shim_simd()?;
-        let ctx = ExecCtx { rng, threads, simd };
+        let ctx = ExecCtx { rng, threads, simd: opts.simd };
         for p in &self.params {
             let v = args
                 .get(p.index)

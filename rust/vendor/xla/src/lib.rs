@@ -29,8 +29,8 @@
 
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 pub(crate) mod bytecode;
@@ -946,16 +946,6 @@ pub(crate) fn chunk_fault_check() {
     }
 }
 
-/// Programmatic override backing the `TERRA_SHIM_THREADS` env knob (the
-/// launcher's `--shim-threads` flag and the JSON `shim_threads` key route
-/// through this): `n >= 1` pins the bytecode backend's worker count, `0`
-/// clears the override (back to the env var / auto-detection).
-static SHIM_THREADS_OVERRIDE: AtomicU64 = AtomicU64::new(0);
-
-pub fn set_shim_threads(n: usize) {
-    SHIM_THREADS_OVERRIDE.store(n as u64, Ordering::Relaxed);
-}
-
 /// Strictly parse a `TERRA_SHIM_THREADS` value: an integer `>= 1`, nothing
 /// else. Junk is an error — a malformed knob must fail the execution loudly
 /// rather than silently run single-threaded.
@@ -968,16 +958,14 @@ fn parse_shim_threads(raw: &str) -> Result<usize> {
     }
 }
 
-/// Resolve the worker count the bytecode backend uses for its next
-/// execution: the [`set_shim_threads`] override, else `TERRA_SHIM_THREADS`
-/// (validated by [`parse_shim_threads`]), else the machine's available
-/// parallelism. `1` is the seed's single-threaded behaviour. Resolved per
-/// execution, so tests and benches can flip the knob in-process.
+/// Resolve the process-default worker count for the bytecode backend:
+/// `TERRA_SHIM_THREADS` (validated by [`parse_shim_threads`]), else the
+/// machine's available parallelism. `1` is the seed's single-threaded
+/// behaviour. This is a pure env resolver — there is no process-global
+/// mutable override any more; per-execution settings live on the client
+/// ([`ExecSettings`], [`PjRtClient::set_threads`]) and are captured by its
+/// executables.
 pub fn shim_threads() -> Result<usize> {
-    let o = SHIM_THREADS_OVERRIDE.load(Ordering::Relaxed);
-    if o >= 1 {
-        return Ok(o as usize);
-    }
     match std::env::var("TERRA_SHIM_THREADS") {
         Ok(v) => parse_shim_threads(&v),
         Err(std::env::VarError::NotPresent) => {
@@ -985,22 +973,6 @@ pub fn shim_threads() -> Result<usize> {
         }
         Err(e) => err(format!("TERRA_SHIM_THREADS: {e}")),
     }
-}
-
-/// Programmatic override backing the `TERRA_SHIM_SIMD` env knob (the
-/// launcher's `--shim-simd` flag and the JSON `shim_simd` key route through
-/// this): `Some(true)`/`Some(false)` pin the bytecode backend's SIMD kernel
-/// selection, `None` clears the override (back to the env var / default-on).
-/// Encoded as 0 = unset, 1 = off, 2 = on.
-static SHIM_SIMD_OVERRIDE: AtomicU64 = AtomicU64::new(0);
-
-pub fn set_shim_simd(v: Option<bool>) {
-    let enc = match v {
-        None => 0,
-        Some(false) => 1,
-        Some(true) => 2,
-    };
-    SHIM_SIMD_OVERRIDE.store(enc, Ordering::Relaxed);
 }
 
 /// Strictly parse a `TERRA_SHIM_SIMD` value: `on`/`true`/`1` or
@@ -1016,24 +988,143 @@ fn parse_shim_simd(raw: &str) -> Result<bool> {
     }
 }
 
-/// Resolve whether the bytecode backend uses its 8-lane SIMD kernels for the
-/// next execution: the [`set_shim_simd`] override, else `TERRA_SHIM_SIMD`
-/// (validated by [`parse_shim_simd`]), else on. `off` reproduces the seed's
-/// scalar kernels exactly — but either way results are bit-identical: SIMD
-/// lanes cover adjacent *output* elements only, each element's accumulation
-/// walk stays serial in seed order. Resolved per execution, so tests and
-/// benches can flip the knob in-process.
+/// Resolve the process-default SIMD kernel selection for the bytecode
+/// backend: `TERRA_SHIM_SIMD` (validated by [`parse_shim_simd`]), else on.
+/// `off` reproduces the seed's scalar kernels exactly — but either way
+/// results are bit-identical: SIMD lanes cover adjacent *output* elements
+/// only, each element's accumulation walk stays serial in seed order. A pure
+/// env resolver; per-execution settings live on the client
+/// ([`ExecSettings`], [`PjRtClient::set_simd`]).
 pub fn shim_simd() -> Result<bool> {
-    match SHIM_SIMD_OVERRIDE.load(Ordering::Relaxed) {
-        1 => return Ok(false),
-        2 => return Ok(true),
-        _ => {}
-    }
     match std::env::var("TERRA_SHIM_SIMD") {
         Ok(v) => parse_shim_simd(&v),
         Err(std::env::VarError::NotPresent) => Ok(true),
         Err(e) => err(format!("TERRA_SHIM_SIMD: {e}")),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Per-client execution settings & shared parallelism budgets
+// ---------------------------------------------------------------------------
+
+/// A shared cap on *extra* pool workers claimable across every execution
+/// that carries it (via [`ExecSettings::set_budget`]). Claims are
+/// non-blocking CAS grabs: an execution asks for `threads - 1` extra
+/// workers, gets whatever is still free (possibly 0 ⇒ it runs serial), and
+/// releases on completion — so concurrent executables share cores fairly
+/// instead of each resolving the full machine width. The dispatching thread
+/// itself is never counted: a budget of 0 still makes progress, serially.
+#[derive(Debug)]
+pub struct ThreadBudget {
+    cap: usize,
+    in_use: AtomicUsize,
+}
+
+impl ThreadBudget {
+    pub fn new(cap: usize) -> ThreadBudget {
+        ThreadBudget { cap, in_use: AtomicUsize::new(0) }
+    }
+
+    /// Total extra workers this budget allows in flight at once.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Extra workers currently claimed (gauge; racy by nature, for stats).
+    pub fn in_use(&self) -> usize {
+        self.in_use.load(Ordering::Relaxed)
+    }
+
+    /// Claim up to `want` extra workers. Returns how many were granted
+    /// (0..=want) — never blocks. Pair every granted claim with
+    /// [`ThreadBudget::release`].
+    pub fn try_claim(&self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            let free = self.cap.saturating_sub(cur);
+            let take = want.min(free);
+            if take == 0 {
+                return 0;
+            }
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + take,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return take,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return `n` previously claimed workers to the budget.
+    pub fn release(&self, n: usize) {
+        if n > 0 {
+            self.in_use.fetch_sub(n, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Per-client execution settings, shared (`Arc`) between a client and every
+/// executable it compiles — so flipping a client's threads/SIMD after
+/// compilation affects its already-compiled executables' next runs (the
+/// in-process knob the benches and tests rely on), without any process
+/// global. `0` / unset means "fall back to the env default"
+/// ([`shim_threads`] / [`shim_simd`]).
+#[derive(Debug, Default)]
+pub struct ExecSettings {
+    /// Worker count for this client's executions; 0 = env default.
+    threads: AtomicUsize,
+    /// SIMD selection: 0 = env default, 1 = off, 2 = on.
+    simd: AtomicU8,
+    /// Shared parallelism budget extra workers are claimed from, if any.
+    budget: Mutex<Option<Arc<ThreadBudget>>>,
+}
+
+impl ExecSettings {
+    pub fn set_threads(&self, n: usize) {
+        self.threads.store(n, Ordering::Relaxed);
+    }
+
+    pub fn set_simd(&self, v: Option<bool>) {
+        let enc = match v {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        };
+        self.simd.store(enc, Ordering::Relaxed);
+    }
+
+    pub fn set_budget(&self, budget: Option<Arc<ThreadBudget>>) {
+        *self.budget.lock().unwrap_or_else(|e| e.into_inner()) = budget;
+    }
+
+    /// Resolve these settings against the env defaults into the concrete
+    /// per-execution options. Called once per `execute_b`/`execute_on`.
+    pub(crate) fn resolve(&self) -> Result<ResolvedExec> {
+        let threads = match self.threads.load(Ordering::Relaxed) {
+            0 => shim_threads()?,
+            n => n,
+        };
+        let simd = match self.simd.load(Ordering::Relaxed) {
+            1 => false,
+            2 => true,
+            _ => shim_simd()?,
+        };
+        let budget = self.budget.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        Ok(ResolvedExec { threads, simd, budget })
+    }
+}
+
+/// Concrete options for one execution, resolved from [`ExecSettings`].
+pub(crate) struct ResolvedExec {
+    pub(crate) threads: usize,
+    pub(crate) simd: bool,
+    pub(crate) budget: Option<Arc<ThreadBudget>>,
 }
 
 /// Cumulative process-wide backend counters: the compile-vs-execute time
@@ -1149,13 +1240,16 @@ pub fn take_last_exec() -> Option<LastExec> {
 // PJRT stand-ins
 // ---------------------------------------------------------------------------
 
-/// CPU "device" handle. Carries the RNG scope its executables draw from:
+/// CPU "device" handle. Carries the RNG scope its executables draw from —
 /// the process-global stream by default ([`PjRtClient::cpu`]), or a private
 /// stream ([`PjRtClient::cpu_with_rng`]) so two clients executing
-/// concurrently cannot interleave each other's draws.
+/// concurrently cannot interleave each other's draws — and the client's
+/// [`ExecSettings`] (threads / SIMD / parallelism budget), likewise shared
+/// with its executables.
 #[derive(Debug)]
 pub struct PjRtClient {
     rng: RngScope,
+    settings: Arc<ExecSettings>,
 }
 
 /// A device buffer: a shared host literal. Cloning, untupling and host
@@ -1167,26 +1261,54 @@ pub struct PjRtBuffer {
 
 /// A compiled computation. `prog` is the bytecode program; when `None`
 /// (interp backend, or a graph the bytecode pipeline rejected) `execute_b`
-/// interprets the captured graph per execution. `rng` is the compiling
-/// client's stream scope: draws at execute time stay on that stream.
+/// interprets the captured graph per execution. `rng` and `settings` are the
+/// compiling client's stream scope and execution settings: draws at execute
+/// time stay on that stream, and thread/SIMD/budget changes on the client
+/// are visible here through the shared `Arc`. [`execute_on`]
+/// (PjRtLoadedExecutable::execute_on) substitutes a different client's
+/// scope+settings for session-isolated runs of a shared executable.
 #[derive(Debug, Clone)]
 pub struct PjRtLoadedExecutable {
     comp: XlaComputation,
     prog: Option<Arc<bytecode::Program>>,
     rng: RngScope,
+    settings: Arc<ExecSettings>,
 }
 
 impl PjRtClient {
     /// A client drawing from the process-global RNG stream (seed behaviour).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { rng: RngScope::Global })
+        Ok(PjRtClient { rng: RngScope::Global, settings: Arc::new(ExecSettings::default()) })
     }
 
     /// A client with a private RNG stream seeded at `seed`: executions of
     /// this client's executables draw only from that stream, isolated from
     /// every other client in the process.
     pub fn cpu_with_rng(seed: u64) -> Result<PjRtClient> {
-        Ok(PjRtClient { rng: RngScope::Private(Arc::new(RngStream::new(seed))) })
+        Ok(PjRtClient {
+            rng: RngScope::Private(Arc::new(RngStream::new(seed))),
+            settings: Arc::new(ExecSettings::default()),
+        })
+    }
+
+    /// Pin this client's executions to `n` pool workers (0 = back to the
+    /// `TERRA_SHIM_THREADS` env default). Shared with every executable this
+    /// client compiled, past and future.
+    pub fn set_threads(&self, n: usize) {
+        self.settings.set_threads(n);
+    }
+
+    /// Pin this client's SIMD kernel selection (`None` = back to the
+    /// `TERRA_SHIM_SIMD` env default).
+    pub fn set_simd(&self, v: Option<bool>) {
+        self.settings.set_simd(v);
+    }
+
+    /// Attach (or detach) a shared [`ThreadBudget`]: this client's
+    /// executions claim their extra workers from it instead of assuming the
+    /// full resolved width is theirs.
+    pub fn set_budget(&self, budget: Option<Arc<ThreadBudget>>) {
+        self.settings.set_budget(budget);
     }
 
     /// This client's RNG stream state (the global stream for
@@ -1232,7 +1354,12 @@ impl PjRtClient {
         }
         COMPILES.fetch_add(1, Ordering::Relaxed);
         COMPILE_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Ok(PjRtLoadedExecutable { comp: comp.clone(), prog, rng: self.rng.clone() })
+        Ok(PjRtLoadedExecutable {
+            comp: comp.clone(),
+            prog,
+            rng: self.rng.clone(),
+            settings: self.settings.clone(),
+        })
     }
 
     pub fn buffer_from_host_buffer<T: NativeType>(
@@ -1282,15 +1409,40 @@ impl PjRtLoadedExecutable {
         }
     }
 
-    /// Execute over device buffers. Returns one replica holding one buffer
-    /// per tuple leaf (tuples are "untupled", matching PJRT CPU behaviour).
+    /// Execute over device buffers, drawing RNG and execution settings from
+    /// the *compiling* client (captured at compile time). Returns one
+    /// replica holding one buffer per tuple leaf (tuples are "untupled",
+    /// matching PJRT CPU behaviour).
     pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.execute_scoped(args, &self.rng, &self.settings)
+    }
+
+    /// Execute over device buffers, drawing RNG and execution settings from
+    /// the *executing* `client` instead of the compiling one. This is how a
+    /// plan-cache-shared executable stays session-correct: each session runs
+    /// it on its own client, so draws land on that session's stream and the
+    /// run honours that session's thread/SIMD/budget settings.
+    pub fn execute_on(
+        &self,
+        client: &PjRtClient,
+        args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.execute_scoped(args, &client.rng, &client.settings)
+    }
+
+    fn execute_scoped(
+        &self,
+        args: &[&PjRtBuffer],
+        rng: &RngScope,
+        settings: &ExecSettings,
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
         let t0 = Instant::now();
         let arg_lits: Vec<&Literal> = args.iter().map(|b| &*b.lit).collect();
-        let rng = self.rng.stream();
+        let rng = rng.stream();
+        let opts = settings.resolve()?;
         let leaves: Vec<Literal> = match &self.prog {
             Some(p) => {
-                let out = p.execute(&arg_lits, rng).map_err(|e| {
+                let out = p.execute(&arg_lits, rng, &opts).map_err(|e| {
                     Error::new(format!("'{}' (bytecode): {}", self.comp.name, e.msg))
                 })?;
                 INSTRUCTIONS.fetch_add(p.instruction_count(), Ordering::Relaxed);

@@ -12,7 +12,18 @@ fn run1(b: &XlaBuilder, root: &XlaOp, args: &[&PjRtBuffer]) -> Literal {
 }
 
 fn run_on(backend: ShimBackend, comp: &XlaComputation, args: &[&PjRtBuffer]) -> Vec<Literal> {
-    let exe = client().compile_with_backend(comp, backend).unwrap();
+    run_on_client(&client(), backend, comp, args)
+}
+
+/// Like [`run_on`], but compiling (and therefore executing) through the
+/// given client — the way tests exercise per-client [`ExecSettings`].
+fn run_on_client(
+    c: &PjRtClient,
+    backend: ShimBackend,
+    comp: &XlaComputation,
+    args: &[&PjRtBuffer],
+) -> Vec<Literal> {
+    let exe = c.compile_with_backend(comp, backend).unwrap();
     let mut out = exe.execute_b(args).unwrap();
     out.remove(0)
         .into_iter()
@@ -28,8 +39,10 @@ fn buf(data: &[f32], dims: &[usize]) -> PjRtBuffer {
 /// parallel test threads cannot interleave draws.
 static RNG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
-/// Tests that flip the process-global `set_shim_threads` override (or
-/// assert on the pool counters it drives) serialize on this.
+/// Tests that assert on the process-global pool counters (`parallel_loops`,
+/// `serial_fallbacks`, `threads_used`, SIMD counters) or the global chunk
+/// fault serialize on this. Thread/SIMD settings themselves are per-client
+/// now, so the settings need no lock — only the shared counters do.
 static THREADS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// Bitwise equality of literals (NaN-safe, unlike `PartialEq` on f32).
@@ -360,33 +373,33 @@ fn parallel_execution_is_bit_identical_to_serial() {
     let xs: Vec<f32> = (0..96 * 96).map(|i| ((i % 37) as f32 - 18.0) * 0.11).collect();
     let ws: Vec<f32> = (0..96 * 96).map(|i| ((i * 13 % 29) as f32 - 14.0) * 0.07).collect();
     let args = [&buf(&xs, &[96, 96]), &buf(&ws, &[96, 96])];
-    set_shim_threads(1);
-    let serial = run_on(ShimBackend::Bytecode, &comp, &args);
+    let c = client();
+    c.set_threads(1);
+    let serial = run_on_client(&c, ShimBackend::Bytecode, &comp, &args);
     let oracle = run_on(ShimBackend::Interp, &comp, &args);
     for threads in [2usize, 3, 8] {
-        set_shim_threads(threads);
-        let par = run_on(ShimBackend::Bytecode, &comp, &args);
+        c.set_threads(threads);
+        let par = run_on_client(&c, ShimBackend::Bytecode, &comp, &args);
         assert_eq!(par.len(), serial.len());
         for ((s, p), o) in serial.iter().zip(par.iter()).zip(oracle.iter()) {
             assert_bits_eq(s, p);
             assert_bits_eq(o, p);
         }
     }
-    set_shim_threads(0);
 }
 
 #[test]
 fn parallel_dispatch_is_counted() {
     let _g = THREADS_LOCK.lock().unwrap();
-    set_shim_threads(4);
+    let c = client();
+    c.set_threads(4);
     let before = shim_totals();
     let comp = parallel_corpus_comp();
     let xs: Vec<f32> = (0..96 * 96).map(|i| (i % 11) as f32 * 0.1).collect();
     let ws: Vec<f32> = (0..96 * 96).map(|i| (i % 7) as f32 * 0.2).collect();
     let args = [&buf(&xs, &[96, 96]), &buf(&ws, &[96, 96])];
-    let _ = run_on(ShimBackend::Bytecode, &comp, &args);
+    let _ = run_on_client(&c, ShimBackend::Bytecode, &comp, &args);
     let after = shim_totals();
-    set_shim_threads(0);
     // The 96x96 fused chain / softmax / matmul clear their thresholds; the
     // [96,1] reduce_mean output is parallel too (in_n = 9216 >= threshold).
     assert!(
@@ -402,12 +415,13 @@ fn parallel_dispatch_is_counted() {
 #[test]
 fn chunk_panic_surfaces_as_err_and_pool_stays_sound() {
     let _g = THREADS_LOCK.lock().unwrap();
-    set_shim_threads(4);
+    let c = client();
+    c.set_threads(4);
     let comp = parallel_corpus_comp();
     let xs: Vec<f32> = (0..96 * 96).map(|i| (i % 13) as f32 * 0.1).collect();
     let ws: Vec<f32> = (0..96 * 96).map(|i| (i % 5) as f32 * 0.2).collect();
     let args = [&buf(&xs, &[96, 96]), &buf(&ws, &[96, 96])];
-    let exe = client().compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
+    let exe = c.compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
     let clean = exe.execute_b(&args).unwrap();
     // Panic the first chunk the pool claims: the execution must fail with an
     // Err — never unwind out of execute_b — and the fault must be counted.
@@ -421,7 +435,6 @@ fn chunk_panic_surfaces_as_err_and_pool_stays_sound() {
     // The pool must remain fully usable: the same executable re-runs clean
     // and bit-identical after the fault.
     let again = exe.execute_b(&args).unwrap();
-    set_shim_threads(0);
     assert_eq!(clean.len(), again.len());
     for (a, b) in clean.iter().zip(again.iter()) {
         assert_bits_eq(a, b);
@@ -432,17 +445,17 @@ fn chunk_panic_surfaces_as_err_and_pool_stays_sound() {
 #[test]
 fn small_shapes_fall_back_to_serial_and_are_counted() {
     let _g = THREADS_LOCK.lock().unwrap();
-    set_shim_threads(4);
+    let c = client();
+    c.set_threads(4);
     let before = shim_totals();
     let b = XlaBuilder::new("small");
     let x = b.parameter(0, ElementType::F32, &[8], "x").unwrap();
     let y = x.tanh().unwrap().neg().unwrap().exp().unwrap();
     let comp = b.build(&y).unwrap();
-    let exe = client().compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
+    let exe = c.compile_with_backend(&comp, ShimBackend::Bytecode).unwrap();
     let data = [0.1f32, -0.2, 0.3, -0.4, 0.5, -0.6, 0.7, -0.8];
     let _ = exe.execute_b(&[&buf(&data, &[8])]).unwrap();
     let after = shim_totals();
-    set_shim_threads(0);
     assert!(
         after.serial_fallbacks > before.serial_fallbacks,
         "expected a small-shape serial fallback: {before:?} -> {after:?}"
@@ -498,16 +511,15 @@ fn simd_execution_is_bit_identical_to_scalar_and_oracle() {
     let ws: Vec<f32> = (0..93 * 61).map(|i| ((i * 17 % 31) as f32 - 15.0) * 0.05).collect();
     let args = [&buf(&xs, &[67, 93]), &buf(&ws, &[93, 61])];
     let oracle = run_on(ShimBackend::Interp, &comp, &args);
+    let c = client();
     let mut runs = Vec::new();
     for simd in [false, true] {
-        set_shim_simd(Some(simd));
+        c.set_simd(Some(simd));
         for threads in [1usize, 4] {
-            set_shim_threads(threads);
-            runs.push(run_on(ShimBackend::Bytecode, &comp, &args));
+            c.set_threads(threads);
+            runs.push(run_on_client(&c, ShimBackend::Bytecode, &comp, &args));
         }
     }
-    set_shim_simd(None);
-    set_shim_threads(0);
     for run in &runs {
         assert_eq!(run.len(), oracle.len());
         for (o, r) in oracle.iter().zip(run.iter()) {
@@ -519,8 +531,9 @@ fn simd_execution_is_bit_identical_to_scalar_and_oracle() {
 #[test]
 fn simd_dispatch_and_tails_are_counted() {
     let _g = THREADS_LOCK.lock().unwrap();
-    set_shim_simd(Some(true));
-    set_shim_threads(1);
+    let c = client();
+    c.set_simd(Some(true));
+    c.set_threads(1);
     let before = shim_totals();
     let b = XlaBuilder::new("simdcount");
     // 67 is not a multiple of the lane width: every row leaves a tail.
@@ -528,10 +541,8 @@ fn simd_dispatch_and_tails_are_counted() {
     let y = x.tanh().unwrap().neg().unwrap().exp().unwrap();
     let comp = b.build(&y).unwrap();
     let data: Vec<f32> = (0..67).map(|i| (i as f32) * 0.01 - 0.3).collect();
-    let _ = run_on(ShimBackend::Bytecode, &comp, &[&buf(&data, &[67])]);
+    let _ = run_on_client(&c, ShimBackend::Bytecode, &comp, &[&buf(&data, &[67])]);
     let mid = shim_totals();
-    set_shim_simd(None);
-    set_shim_threads(0);
     // Counters are process-global and other tests bump them concurrently,
     // so only monotone (>=) properties are assertable here.
     assert!(
@@ -620,4 +631,113 @@ fn private_rng_streams_are_backend_bit_identical() {
     assert_bits_eq(&a, &c);
     // Dead-draw alignment holds per stream: identical post-run states.
     assert_eq!(ci.rng_state(), cb.rng_state());
+}
+
+#[test]
+fn thread_budget_claims_are_bounded_and_released() {
+    let b = ThreadBudget::new(3);
+    assert_eq!(b.cap(), 3);
+    assert_eq!(b.try_claim(2), 2);
+    assert_eq!(b.in_use(), 2);
+    // Only 1 left: a claim for 4 is partially granted, never blocks.
+    assert_eq!(b.try_claim(4), 1);
+    assert_eq!(b.try_claim(1), 0);
+    b.release(1);
+    assert_eq!(b.try_claim(5), 1);
+    b.release(3);
+    assert_eq!(b.in_use(), 0);
+    assert_eq!(b.try_claim(0), 0);
+}
+
+#[test]
+fn exhausted_budget_degrades_to_serial_but_stays_bit_identical() {
+    let _g = THREADS_LOCK.lock().unwrap();
+    let comp = parallel_corpus_comp();
+    let xs: Vec<f32> = (0..96 * 96).map(|i| ((i % 23) as f32 - 11.0) * 0.13).collect();
+    let ws: Vec<f32> = (0..96 * 96).map(|i| ((i * 11 % 19) as f32 - 9.0) * 0.06).collect();
+    let args = [&buf(&xs, &[96, 96]), &buf(&ws, &[96, 96])];
+    let serial_client = client();
+    serial_client.set_threads(1);
+    let serial = run_on_client(&serial_client, ShimBackend::Bytecode, &comp, &args);
+
+    // A zero-capacity budget grants no extra workers: the execution runs
+    // serially on the dispatch thread (never blocks), results unchanged.
+    // (Counters are process-global and other tests bump them concurrently,
+    // so serial-ness is asserted via the budget gauge, not the counters.)
+    let c = client();
+    c.set_threads(4);
+    let empty = Arc::new(ThreadBudget::new(0));
+    c.set_budget(Some(empty.clone()));
+    let after = shim_totals();
+    let starved = run_on_client(&c, ShimBackend::Bytecode, &comp, &args);
+    assert_eq!(empty.in_use(), 0, "a zero budget can never have claims in flight");
+    for (s, p) in serial.iter().zip(starved.iter()) {
+        assert_bits_eq(s, p);
+    }
+
+    // With headroom the same client dispatches in parallel again — and the
+    // claim was released, so the budget reads idle afterwards.
+    let budget = Arc::new(ThreadBudget::new(3));
+    c.set_budget(Some(budget.clone()));
+    let fed = run_on_client(&c, ShimBackend::Bytecode, &comp, &args);
+    let end = shim_totals();
+    assert!(end.parallel_loops > after.parallel_loops, "budgeted run should dispatch");
+    assert_eq!(budget.in_use(), 0, "claims must be released after the execution");
+    for (s, p) in serial.iter().zip(fed.iter()) {
+        assert_bits_eq(s, p);
+    }
+}
+
+#[test]
+fn concurrent_dispatches_share_the_pool_and_stay_bit_identical() {
+    // Two clients with separate thread settings dispatching concurrently:
+    // the multi-job pool runs both jobs (the old single-slot pool degraded
+    // one to caller-serial) and results stay bit-identical to serial.
+    let comp = parallel_corpus_comp();
+    let xs: Vec<f32> = (0..96 * 96).map(|i| ((i % 31) as f32 - 15.0) * 0.08).collect();
+    let ws: Vec<f32> = (0..96 * 96).map(|i| ((i * 7 % 27) as f32 - 13.0) * 0.05).collect();
+    let serial_client = client();
+    serial_client.set_threads(1);
+    let serial = {
+        let args = [&buf(&xs, &[96, 96]), &buf(&ws, &[96, 96])];
+        run_on_client(&serial_client, ShimBackend::Bytecode, &comp, &args)
+    };
+    let budget = Arc::new(ThreadBudget::new(4));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let comp = &comp;
+                let xs = &xs;
+                let ws = &ws;
+                let budget = budget.clone();
+                s.spawn(move || {
+                    let c = client();
+                    c.set_threads(4);
+                    c.set_budget(Some(budget));
+                    let exe = c.compile_with_backend(comp, ShimBackend::Bytecode).unwrap();
+                    let args = [&buf(xs, &[96, 96]), &buf(ws, &[96, 96])];
+                    let mut outs = Vec::new();
+                    for _ in 0..8 {
+                        let mut o = exe.execute_b(&args).unwrap();
+                        outs.push(
+                            o.remove(0)
+                                .into_iter()
+                                .map(|b| b.to_literal_sync().unwrap())
+                                .collect::<Vec<_>>(),
+                        );
+                    }
+                    outs
+                })
+            })
+            .collect();
+        for h in handles {
+            for run in h.join().unwrap() {
+                assert_eq!(run.len(), serial.len());
+                for (s0, p) in serial.iter().zip(run.iter()) {
+                    assert_bits_eq(s0, p);
+                }
+            }
+        }
+    });
+    assert_eq!(budget.in_use(), 0, "all concurrent claims released");
 }
