@@ -55,7 +55,10 @@ impl Program for EncoderLm {
             .chain(lm.vars().iter())
             .map(|v| v.ty().shape.num_elements())
             .sum();
-        println!("model: dim={} heads={} blocks={} -> {n_params} parameters", self.cfg.dim, self.cfg.heads, self.cfg.blocks);
+        println!(
+            "model: dim={} heads={} blocks={} -> {n_params} parameters",
+            self.cfg.dim, self.cfg.heads, self.cfg.blocks
+        );
         self.model = Some(model);
         self.lm = Some(lm);
         Ok(())
@@ -107,10 +110,22 @@ fn main() -> Result<()> {
     let last = report.losses.last().map(|(_, l)| *l).unwrap_or(f32::NAN);
     println!("\n{}", report.summary());
     println!(
-        "loss {first:.4} -> {last:.4}  ({} transitions, {} fallbacks, {} fused segments compiled)",
-        report.stats.enter_coexec, report.stats.fallbacks, report.stats.segments_compiled
+        "loss {first:.4} -> {last:.4}  ({} transitions, {} fallbacks, {} fused segments compiled, {} fused optimizer steps)",
+        report.stats.enter_coexec,
+        report.stats.fallbacks,
+        report.stats.segments_compiled,
+        report.stats.optim_steps_fused
     );
     let used_kernel = engine.trace_graph().dump().contains("artifact:attn_fwd");
     println!("fused Pallas attention on hot path: {used_kernel}");
+    if mode == ExecMode::Terra {
+        // The unified training path: once co-execution is entered, the SGD
+        // update runs as staged assigns inside the compiled plan.
+        assert!(
+            report.stats.optim_steps_fused > 0,
+            "Terra mode must execute fused optimizer steps: {:?}",
+            report.stats
+        );
+    }
     Ok(())
 }

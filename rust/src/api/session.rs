@@ -8,7 +8,7 @@ use crate::runtime::ArtifactStore;
 use crate::tensor::{HostTensor, TensorType};
 use crate::trace::{FeedKind, Location, ScopeStack, StateId, Trace, ValueId, ValueRef, VarId};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 struct St {
@@ -27,6 +27,14 @@ struct Inner {
     artifacts: Arc<ArtifactStore>,
     vars: Arc<VarStore>,
     host_states: Mutex<HashMap<StateId, f32>>,
+    /// Sticky: a gradient tape was started at least once on this session.
+    /// The engine uses it to classify the merged TraceGraph as a *gradient*
+    /// graph (training-shaped) for the `grad_plan_cache_hits` counter.
+    tape_used: AtomicBool,
+    /// Optimizer applies whose staged-assign updates executed inside a
+    /// compiled plan (skeleton backend installed and the optimizer on its
+    /// traced-update path) — the `optim_steps_fused` counter.
+    optim_fused: AtomicU64,
     st: Mutex<St>,
 }
 
@@ -73,6 +81,8 @@ impl Session {
                 artifacts,
                 vars,
                 host_states: Mutex::new(HashMap::new()),
+                tape_used: AtomicBool::new(false),
+                optim_fused: AtomicU64::new(0),
                 st: Mutex::new(St {
                     backend,
                     scopes: ScopeStack::new(),
@@ -438,7 +448,36 @@ impl Session {
             return Err(TerraError::runtime("a gradient tape is already active"));
         }
         st.tape = Some(TapeData::default());
+        self.inner.tape_used.store(true, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Whether a gradient tape was ever started on this session (sticky).
+    /// A merged TraceGraph built from tape-bearing steps is a *gradient*
+    /// graph: its cached plans count as `grad_plan_cache_hits`.
+    pub fn tape_was_used(&self) -> bool {
+        self.inner.tape_used.load(Ordering::Relaxed)
+    }
+
+    // ---- optimizer accounting --------------------------------------------------
+
+    /// Called by [`crate::nn::Optimizer::apply`] after issuing one full
+    /// parameter update. `fused` means the update was emitted as pure graph
+    /// ops ending in staged assigns (the traced-update path); it counts as a
+    /// *fused optimizer step* only when the skeleton backend is installed —
+    /// i.e. the assigns validate against, and execute inside, the compiled
+    /// plan, committing under the iteration barrier.
+    pub fn note_optim_apply(&self, fused: bool) {
+        if fused && self.backend_name() == "skeleton" {
+            self.inner.optim_fused.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Optimizer applies that executed inside a compiled plan (see
+    /// [`Session::note_optim_apply`]); surfaced as the engine's
+    /// `optim_steps_fused` counter.
+    pub fn optim_steps_fused(&self) -> u64 {
+        self.inner.optim_fused.load(Ordering::Relaxed)
     }
 
     /// Drop any active tape (divergence-fallback cleanup: a step aborted

@@ -84,6 +84,12 @@ pub struct BreakdownSnapshot {
     pub plan_cache_hits: u64,
     /// Co-execution entries that compiled a fresh plan (cache enabled).
     pub plan_cache_misses: u64,
+    /// Plan-cache hits whose reused plan carries a gradient graph (a full
+    /// train step re-entering co-execution without recompilation).
+    pub grad_plan_cache_hits: u64,
+    /// Optimizer applies executed inside the compiled plan (traced-update
+    /// staged assigns) instead of per-variable eager round-trips.
+    pub optim_steps_fused: u64,
     /// Cache misses resolved by waiting on another session's in-flight
     /// build of the identical plan instead of compiling it again.
     pub plan_builds_coalesced: u64,
@@ -203,6 +209,8 @@ impl Breakdown {
             shim_layout_copies: 0,
             plan_cache_hits: 0,
             plan_cache_misses: 0,
+            grad_plan_cache_hits: 0,
+            optim_steps_fused: 0,
             plan_builds_coalesced: 0,
             compiles_skipped: 0,
             reentry_deferred: 0,
@@ -264,6 +272,10 @@ impl BreakdownSnapshot {
             shim_layout_copies: self.shim_layout_copies.saturating_sub(earlier.shim_layout_copies),
             plan_cache_hits: self.plan_cache_hits.saturating_sub(earlier.plan_cache_hits),
             plan_cache_misses: self.plan_cache_misses.saturating_sub(earlier.plan_cache_misses),
+            grad_plan_cache_hits: self
+                .grad_plan_cache_hits
+                .saturating_sub(earlier.grad_plan_cache_hits),
+            optim_steps_fused: self.optim_steps_fused.saturating_sub(earlier.optim_steps_fused),
             plan_builds_coalesced: self
                 .plan_builds_coalesced
                 .saturating_sub(earlier.plan_builds_coalesced),

@@ -1,5 +1,14 @@
 //! Optimizers: parameter updates emitted as ordinary session ops, so they are
 //! traced, fused and staged like the rest of the training step.
+//!
+//! Both optimizers default to the **traced-update path** (`fused = true`):
+//! the per-variable update loop lowers into pure graph ops ending in staged
+//! assigns, so in co-execution the whole update executes inside the compiled
+//! plan and commits atomically under the iteration barrier (see
+//! `src/tape/README.md`). `with_fused(false)` selects the legacy eager-update
+//! shape — each new value is materialized to the host and re-fed before the
+//! assign, paying one fetch/feed round-trip per variable — kept as the
+//! baseline the `bench_train` harness measures the traced path against.
 
 use crate::api::{Session, Tensor, Variable};
 use crate::error::Result;
@@ -12,14 +21,34 @@ pub trait Optimizer {
     fn apply(&mut self, sess: &Session, vars: &[Variable], grads: &[Tensor]) -> Result<()>;
 }
 
+/// Assign `new` to `v` on the configured update path: fused = the graph value
+/// is staged directly; unfused = materialize → re-feed → assign (the
+/// N-round-trips-per-step shape the traced path replaces).
+fn assign_update(sess: &Session, v: &Variable, new: &Tensor, fused: bool) -> Result<()> {
+    if fused {
+        v.assign(new)
+    } else {
+        let fed = sess.feed(new.value()?)?;
+        v.assign(&fed)
+    }
+}
+
 /// Plain SGD: `w <- w - lr * g`.
 pub struct Sgd {
     pub lr: f32,
+    fused: bool,
 }
 
 impl Sgd {
     pub fn new(lr: f32) -> Self {
-        Sgd { lr }
+        Sgd { lr, fused: true }
+    }
+
+    /// Select the update path: `true` (default) stages updates as in-plan
+    /// assigns; `false` materializes each update to the host first.
+    pub fn with_fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
     }
 }
 
@@ -32,25 +61,45 @@ impl Optimizer for Sgd {
         for (i, (v, g)) in vars.iter().zip(grads.iter()).enumerate() {
             let _s = sess.scope(&format!("sgd{i}"));
             let new = v.read().sub(&g.mul_scalar(self.lr)?)?;
-            v.assign(&new)?;
+            assign_update(sess, v, &new, self.fused)?;
         }
+        sess.note_optim_apply(self.fused);
         Ok(())
     }
 }
 
 /// Adam with slot variables for first/second moments and a step counter.
+///
+/// The moment buffers and the step counter are ordinary session variables
+/// created at `register` (setup) time, so in co-execution they are
+/// plan-managed: their updates stage alongside the parameter assigns and the
+/// whole step commits — or is dropped — atomically.
 pub struct Adam {
     pub lr: f32,
     pub beta1: f32,
     pub beta2: f32,
     pub eps: f32,
+    fused: bool,
     slots: Vec<(Variable, Variable)>, // (m, v) per registered variable
     t: Option<Variable>,
 }
 
 impl Adam {
     pub fn new(lr: f32) -> Self {
-        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, slots: Vec::new(), t: None }
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, fused: true, slots: Vec::new(), t: None }
+    }
+
+    /// Select the update path (see [`Sgd::with_fused`]).
+    pub fn with_fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
+    }
+
+    /// The (m, v) moment slot variables, in registration order (empty before
+    /// [`Optimizer::register`]). Exposed so tests can compare moment buffers
+    /// bit-for-bit across update paths and engines.
+    pub fn slots(&self) -> &[(Variable, Variable)] {
+        &self.slots
     }
 }
 
@@ -71,7 +120,7 @@ impl Optimizer for Adam {
         let t = self.t.as_ref().expect("Adam::register not called");
         let _root = sess.scope("adam");
         let t_new = t.read().add_scalar(1.0)?;
-        t.assign(&t_new)?;
+        assign_update(sess, t, &t_new, self.fused)?;
         // Bias corrections: 1 - beta^t (scalars, computed on-graph).
         let b1t = sess.scalar(self.beta1)?.pow(&t_new)?;
         let b2t = sess.scalar(self.beta2)?.pow(&t_new)?;
@@ -85,13 +134,14 @@ impl Optimizer for Adam {
                 .read()
                 .mul_scalar(self.beta2)?
                 .add(&g.mul(g)?.mul_scalar(1.0 - self.beta2)?)?;
-            m.assign(&m_new)?;
-            s.assign(&s_new)?;
+            assign_update(sess, m, &m_new, self.fused)?;
+            assign_update(sess, s, &s_new, self.fused)?;
             let m_hat = m_new.div(&c1.broadcast_to(m_new.shape_dims())?)?;
             let s_hat = s_new.div(&c2.broadcast_to(s_new.shape_dims())?)?;
             let update = m_hat.div(&s_hat.sqrt()?.add_scalar(self.eps)?)?.mul_scalar(self.lr)?;
-            v.assign(&v.read().sub(&update)?)?;
+            assign_update(sess, v, &v.read().sub(&update)?, self.fused)?;
         }
+        sess.note_optim_apply(self.fused);
         Ok(())
     }
 }
@@ -147,5 +197,36 @@ mod tests {
         let mut opt = Adam::new(0.2);
         let final_loss = descend(&mut opt, 60);
         assert!(final_loss < 0.05, "Adam failed to descend: {final_loss}");
+    }
+
+    /// The eager-update (unfused) path must compute the same trajectory: in
+    /// eager mode the materialize→re-feed detour is value-preserving, so
+    /// losses match the fused path bit-for-bit.
+    #[test]
+    fn unfused_paths_match_fused_in_eager() {
+        let fused_sgd = descend(&mut Sgd::new(0.1), 30);
+        let unfused_sgd = descend(&mut Sgd::new(0.1).with_fused(false), 30);
+        assert_eq!(fused_sgd.to_bits(), unfused_sgd.to_bits());
+        let fused_adam = descend(&mut Adam::new(0.2), 40);
+        let unfused_adam = descend(&mut Adam::new(0.2).with_fused(false), 40);
+        assert_eq!(fused_adam.to_bits(), unfused_adam.to_bits());
+    }
+
+    /// Eager sessions never count fused optimizer steps — the counter is
+    /// reserved for applies executed inside a compiled plan.
+    #[test]
+    fn fused_counter_stays_zero_outside_coexec() {
+        let mut opt = Sgd::new(0.1);
+        let sess = test_session();
+        let w = sess.variable("w", HostTensor::scalar_f32(2.0), true).unwrap();
+        opt.register(&sess, &[w.clone()]).unwrap();
+        sess.begin_step(0).unwrap();
+        let tape = Tape::start(&sess).unwrap();
+        let loss = w.read().mul(&w.read()).unwrap();
+        let grads = tape.gradient(&loss, &[&w]).unwrap();
+        opt.apply(&sess, &[w.clone()], &grads).unwrap();
+        sess.end_step().unwrap();
+        assert_eq!(sess.optim_steps_fused(), 0);
+        assert!(sess.tape_was_used());
     }
 }

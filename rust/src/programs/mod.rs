@@ -5,10 +5,12 @@ pub mod common;
 mod registry;
 mod suite;
 mod text;
+mod train;
 mod vision;
 
 pub use registry::{all_program_names, build_program, expected_autograph_failure};
 pub use suite::*;
+pub use train::{TrainMlp, TrainOptim};
 pub use text::{BertCls, BertQa, Gpt2, MusicTransformer};
 pub use vision::{Dcgan, DropBlockCnn, FasterRcnnMini, ResNetMini, SdPointCnn, YoloMini};
 

@@ -28,6 +28,11 @@ pub fn build_program(name: &str) -> Result<Box<dyn Program>> {
         // recurring same-site divergence (expert switch every 8 steps, so
         // the site gets hot inside a default 40-step bench window).
         "moe_router" => Box::new(crate::programs::MoeRouter::new(8)),
+        // Full train step (forward + tape backward + fused Adam update) as
+        // one merged trace — the unified-training-path workload.
+        "train_mlp" => {
+            Box::new(crate::programs::TrainMlp::new(crate::programs::TrainOptim::Adam, true))
+        }
         "resnet50" => Box::new(crate::programs::ResNetMini::new()),
         "dropblock" => Box::new(crate::programs::DropBlockCnn::new()),
         "sdpoint" => Box::new(crate::programs::SdPointCnn::new()),

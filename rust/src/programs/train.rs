@@ -1,0 +1,132 @@
+//! Canonical *training-shaped* programs: forward pass, tape-generated
+//! gradient graph and optimizer update in one step body — the merged
+//! TraceGraph the speculative plan pipeline compiles end to end (ROADMAP
+//! open item 5). Used by `bench_train`, the train-integration tests and the
+//! CLI (`--program train_mlp`).
+
+use crate::api::{Session, Variable};
+use crate::data::Rng;
+use crate::error::Result;
+use crate::nn::{mse, Adam, Dense, HasVars, Optimizer, Sgd};
+use crate::programs::{Program, StepOutput};
+use crate::tape::Tape;
+use crate::tensor::HostTensor;
+
+const SEED: u64 = 0x7e88;
+
+/// Which optimizer drives the update half of the train step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainOptim {
+    Sgd,
+    Adam,
+}
+
+/// A two-layer MLP regression step trained through the gradient tape: the
+/// smallest program whose trace contains all three phases of a train step
+/// (forward ops, VJP backward ops, staged optimizer assigns — including
+/// Adam's plan-managed moment buffers).
+pub struct TrainMlp {
+    dim: usize,
+    batch: usize,
+    lr: f32,
+    optim: TrainOptim,
+    fused: bool,
+    l1: Option<Dense>,
+    l2: Option<Dense>,
+    opt: Option<Box<dyn Optimizer + Send>>,
+    vars: Vec<Variable>,
+}
+
+impl TrainMlp {
+    pub fn new(optim: TrainOptim, fused: bool) -> Self {
+        TrainMlp {
+            dim: 8,
+            batch: 4,
+            lr: match optim {
+                TrainOptim::Sgd => 0.05,
+                TrainOptim::Adam => 0.01,
+            },
+            optim,
+            fused,
+            l1: None,
+            l2: None,
+            opt: None,
+            vars: Vec::new(),
+        }
+    }
+
+    /// Override the learning rate (the signature-stability tests change it
+    /// to prove hyperparameters are part of the plan-cache key).
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// Override the hidden width (shape changes must change the signature).
+    pub fn with_dim(mut self, dim: usize) -> Self {
+        self.dim = dim;
+        self
+    }
+
+    /// Trainable parameters plus optimizer slot variables, in creation
+    /// order (valid after `setup`).
+    pub fn all_vars(&self) -> &[Variable] {
+        &self.vars
+    }
+
+    /// Deterministic per-step batch: inputs and targets derived from `step`
+    /// only, so replayed iterations see identical data.
+    fn batch_data(&self, step: u64) -> Result<(HostTensor, HostTensor)> {
+        let n = self.batch * self.dim;
+        let xs: Vec<f32> =
+            (0..n).map(|i| ((step as f32) * 0.07 + i as f32 * 0.13).sin()).collect();
+        let ys: Vec<f32> = (0..self.batch)
+            .map(|b| ((step as f32) * 0.05 + b as f32 * 0.31).cos())
+            .collect();
+        Ok((
+            HostTensor::f32(vec![self.batch, self.dim], xs)?,
+            HostTensor::f32(vec![self.batch, 1], ys)?,
+        ))
+    }
+}
+
+impl Program for TrainMlp {
+    fn name(&self) -> &'static str {
+        "train_mlp"
+    }
+
+    fn setup(&mut self, sess: &Session) -> Result<()> {
+        let mut rng = Rng::new(SEED);
+        let l1 = Dense::new(sess, "mlp1", self.dim, self.dim, true, &mut rng)?;
+        let l2 = Dense::new(sess, "mlp2", self.dim, 1, true, &mut rng)?;
+        let mut vars = l1.vars();
+        vars.extend(l2.vars());
+        // Optimizer registration must happen at setup: Adam's moment buffers
+        // are session variables, and variables cannot be created once
+        // co-execution starts.
+        let mut opt: Box<dyn Optimizer + Send> = match self.optim {
+            TrainOptim::Sgd => Box::new(Sgd::new(self.lr).with_fused(self.fused)),
+            TrainOptim::Adam => Box::new(Adam::new(self.lr).with_fused(self.fused)),
+        };
+        opt.register(sess, &vars)?;
+        self.l1 = Some(l1);
+        self.l2 = Some(l2);
+        self.opt = Some(opt);
+        self.vars = vars;
+        Ok(())
+    }
+
+    fn step(&mut self, sess: &Session, step: u64) -> Result<StepOutput> {
+        let (xs, ys) = self.batch_data(step)?;
+        let x = sess.feed(xs)?;
+        let y = sess.feed(ys)?;
+        let tape = Tape::start(sess)?;
+        let h = self.l1.as_ref().unwrap().forward(&x)?.relu()?;
+        let pred = self.l2.as_ref().unwrap().forward(&h)?;
+        let loss = mse(&pred, &y)?;
+        let refs: Vec<&Variable> = self.vars.iter().collect();
+        let grads = tape.gradient(&loss, &refs)?;
+        self.opt.as_mut().unwrap().apply(sess, &self.vars, &grads)?;
+        Ok(StepOutput { loss: Some(loss), extra: vec![] })
+    }
+}

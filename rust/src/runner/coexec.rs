@@ -128,6 +128,16 @@ pub struct EngineStats {
     /// Co-execution entries that went through the full plan pipeline while
     /// the plan cache was enabled.
     pub plan_cache_misses: u64,
+    /// Plan-cache hits whose reused plan carries gradient structure (the
+    /// session traced at least one tape-bearing step, so the merged graph is
+    /// a full train step: forward + backward + optimizer update). A repeated
+    /// train step re-entering from the cache lands here as well as in
+    /// `plan_cache_hits`.
+    pub grad_plan_cache_hits: u64,
+    /// Optimizer applies whose staged-assign updates executed inside the
+    /// compiled plan (traced-update path under the skeleton backend) instead
+    /// of as per-variable eager round-trips. Stamped from the session.
+    pub optim_steps_fused: u64,
     /// Plan-cache misses resolved without running the pipeline because
     /// *another* engine (a concurrent serve session) was already building —
     /// or had just finished building — the identical-signature plan: this
@@ -246,6 +256,8 @@ impl RunReport {
             ("mailbox_dropped".to_string(), int(s.mailbox_dropped)),
             ("plan_cache_hits".to_string(), int(s.plan_cache_hits)),
             ("plan_cache_misses".to_string(), int(s.plan_cache_misses)),
+            ("grad_plan_cache_hits".to_string(), int(s.grad_plan_cache_hits)),
+            ("optim_steps_fused".to_string(), int(s.optim_steps_fused)),
             ("plan_builds_coalesced".to_string(), int(s.plan_builds_coalesced)),
             ("segment_compiles_skipped".to_string(), int(s.segment_compiles_skipped)),
             ("reentry_deferred".to_string(), int(s.reentry_deferred)),
@@ -590,6 +602,7 @@ impl Engine {
         if let Some(f) = &self.faults {
             s.faults_injected = f.injected();
         }
+        s.optim_steps_fused = self.sess.optim_steps_fused();
         s
     }
 
@@ -637,6 +650,8 @@ impl Engine {
         snap.shim_layout_copies = shim.layout_copies_inserted;
         snap.plan_cache_hits = self.stats.plan_cache_hits;
         snap.plan_cache_misses = self.stats.plan_cache_misses;
+        snap.grad_plan_cache_hits = self.stats.grad_plan_cache_hits;
+        snap.optim_steps_fused = self.sess.optim_steps_fused();
         snap.plan_builds_coalesced = self.stats.plan_builds_coalesced;
         snap.compiles_skipped = self.stats.segment_compiles_skipped;
         snap.reentry_deferred = self.stats.reentry_deferred;
@@ -1000,6 +1015,12 @@ impl Engine {
                 validate_plan_artifacts(&hit.plan.steps, &self.artifacts)?;
                 obs::instant(Track::Engine, InstantKind::PlanCacheHit, next_iter, 0, 0);
                 self.stats.plan_cache_hits += 1;
+                if self.sess.tape_was_used() {
+                    // The reused plan carries a gradient graph: this is a
+                    // whole train step (forward + backward + optimizer
+                    // update) re-entering without recompilation.
+                    self.stats.grad_plan_cache_hits += 1;
+                }
                 self.stats.segment_compiles_skipped += hit.segments;
                 self.stats.plan_segments = hit.segments;
                 self.stats.plan_segment_nodes = hit.segment_nodes;
@@ -1567,6 +1588,7 @@ impl Engine {
         if let Some(f) = &self.faults {
             self.stats.faults_injected = f.injected();
         }
+        self.stats.optim_steps_fused = self.sess.optim_steps_fused();
         let mut end_snapshot = self.breakdown.snapshot();
         self.stamp_runtime_counters(&mut end_snapshot);
         Ok(RunReport {

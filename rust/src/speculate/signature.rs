@@ -24,6 +24,17 @@
 //! const values (via `value_hash` — they are embedded into compiled
 //! segments), output types, edges, dataflow variants, and the types of every
 //! referenced variable.
+//!
+//! **Gradient graphs need no special casing.** The tape emits backward ops
+//! into the active trace session in fixed reverse-program order under
+//! deterministic scopes (`tape`, `g{idx}`), and the optimizers emit staged
+//! updates under deterministic scopes (`sgd{i}` / `adam` / `p{i}`) — see
+//! `src/tape/README.md`. A train step's merged trace is therefore already
+//! canonical: identical train steps hash identically across iterations *and*
+//! sessions (cross-session gradient-plan cache hits), while hyperparameters
+//! (lr, betas) re-key through non-generalized const `value_hash`es and
+//! parameter shapes re-key through the variable `(id, type)` list. Pinned by
+//! `tests/speculate_integration.rs::gradient_graph_signature_is_stable_across_sessions`.
 
 use crate::tensor::TensorType;
 use crate::tracegraph::{GraphSrc, NodeKind, TraceGraph};

@@ -2,11 +2,15 @@
 //! (im2col), pooling, layer norm and the attention layer are validated
 //! against straightforward host-side reimplementations.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use terra::api::{Backend, EagerBackend, Session, VarStore};
+use terra::config::ExecMode;
 use terra::data::Rng;
 use terra::eager::EagerExecutor;
 use terra::nn::{avg_pool2, global_avg_pool, max_pool2, Conv2d, LayerNorm, MultiHeadAttention, Padding};
+use terra::programs::{TrainMlp, TrainOptim};
+use terra::runner::Engine;
 use terra::runtime::{ArtifactStore, Client};
 use terra::tensor::HostTensor;
 
@@ -169,6 +173,64 @@ fn attention_rows_are_convex_combinations_of_values() {
     assert_eq!(y.shape_dims(), &[1, 4, 8]);
     let v = y.value().unwrap();
     assert!(v.as_f32().unwrap().iter().all(|f| f.is_finite()));
+}
+
+/// Run the Adam train loop end to end and return the per-step loss bits plus
+/// every committed variable buffer (params + adam.m*/adam.v*/adam.t) as bits.
+/// Fusion off / opt 0 so every plan node compiles to the same single-op shim
+/// kernel the eager executor uses — bitwise comparison is valid.
+fn adam_train(mode: ExecMode, fused: bool, steps: u64) -> (Vec<u32>, BTreeMap<String, Vec<u32>>) {
+    let dir = std::env::temp_dir().join("terra_nn_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    let mut engine =
+        Engine::with_opt_level(mode, dir.to_string_lossy().as_ref(), false, 0).unwrap();
+    engine.loss_every = 1;
+    let mut prog = TrainMlp::new(TrainOptim::Adam, fused);
+    let report = engine.run(&mut prog, steps, 0).unwrap();
+    let losses = report.losses.iter().map(|(_, l)| l.to_bits()).collect();
+    let mut bufs = BTreeMap::new();
+    for id in engine.vars().ids() {
+        let name = engine.vars().meta(id).unwrap().name;
+        let host = engine.vars().host(id).unwrap();
+        bufs.insert(name, host.as_f32().unwrap().iter().map(|f| f.to_bits()).collect());
+    }
+    (losses, bufs)
+}
+
+/// ISSUE satellite: the traced-fused Adam update must be bit-exact against
+/// the eager unfused oracle over ≥50 steps — losses AND moment buffers — on
+/// both shim backends (bytecode default + interpreter).
+#[test]
+fn traced_fused_adam_matches_eager_oracle_bitwise_on_both_backends() {
+    let steps = 50;
+    let (oracle_losses, oracle_bufs) = adam_train(ExecMode::Eager, false, steps);
+    assert_eq!(oracle_losses.len() as u64, steps);
+    assert!(oracle_bufs.keys().any(|k| k.starts_with("adam.m")), "{oracle_bufs:?}");
+    assert!(oracle_bufs.keys().any(|k| k.starts_with("adam.v")), "{oracle_bufs:?}");
+
+    // Default backend (bytecode unless the environment overrides it).
+    let (losses, bufs) = adam_train(ExecMode::Terra, true, steps);
+    assert_eq!(oracle_losses, losses, "fused losses must match eager Adam bit for bit");
+    assert_eq!(oracle_bufs, bufs, "fused params + moments must match eager Adam bit for bit");
+
+    // Interpreter backend. Process-global knob: save/restore around the run
+    // (backends are bit-identical by contract, and segment caches key on the
+    // active backend, so concurrent tests in this binary are unaffected).
+    let prev = std::env::var("XLA_SHIM_BACKEND").ok();
+    std::env::set_var("XLA_SHIM_BACKEND", "interp");
+    let result = std::panic::catch_unwind(|| {
+        let (losses, bufs) = adam_train(ExecMode::Terra, true, steps);
+        assert_eq!(oracle_losses, losses, "interp: fused losses must match eager Adam");
+        assert_eq!(oracle_bufs, bufs, "interp: fused params + moments must match eager Adam");
+    });
+    match prev {
+        Some(v) => std::env::set_var("XLA_SHIM_BACKEND", v),
+        None => std::env::remove_var("XLA_SHIM_BACKEND"),
+    }
+    if let Err(p) = result {
+        std::panic::resume_unwind(p);
+    }
 }
 
 #[test]

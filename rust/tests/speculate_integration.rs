@@ -4,12 +4,14 @@
 //! compilation) and the adaptive re-entry controller (thrashing programs
 //! back off instead of recompiling, and stay numerically exact).
 
+use std::collections::HashMap;
+
 use terra::api::{Session, Variable};
 use terra::config::ExecMode;
 use terra::error::Result;
-use terra::programs::{Program, StepOutput};
+use terra::programs::{Program, StepOutput, TrainMlp, TrainOptim};
 use terra::runner::{Engine, EngineStats, RunReport};
-use terra::speculate::{ReentryPolicy, SpeculateConfig};
+use terra::speculate::{graph_signature, GraphSig, ReentryPolicy, SpeculateConfig};
 use terra::tensor::HostTensor;
 
 fn artifacts_dir() -> String {
@@ -212,6 +214,50 @@ fn adaptive_controller_stops_thrashing() {
     // Correctness is untouched by when (or whether) the engine re-enters.
     assert_close(oracle_w, ew, "eager-policy run diverged from oracle");
     assert_close(oracle_w, aw, "adaptive run diverged from oracle");
+}
+
+/// Trace a full train step (forward + tape backward + fused Adam update) in
+/// a fresh engine and return the merged TraceGraph's canonical signature.
+fn train_step_signature(lr: Option<f32>, dim: Option<usize>) -> GraphSig {
+    let dir = artifacts_dir();
+    let spec = SpeculateConfig {
+        plan_cache: false,
+        policy: ReentryPolicy::Eager,
+        split_hot_sites: false,
+    };
+    let mut engine = Engine::with_speculate(ExecMode::Terra, &dir, true, 2, spec).unwrap();
+    let mut prog = TrainMlp::new(TrainOptim::Adam, true);
+    if let Some(lr) = lr {
+        prog = prog.with_lr(lr);
+    }
+    if let Some(dim) = dim {
+        prog = prog.with_dim(dim);
+    }
+    engine.run(&mut prog, 8, 0).unwrap();
+    let mut var_types = HashMap::new();
+    for id in engine.vars().ids() {
+        var_types.insert(id, engine.vars().ty(id).unwrap());
+    }
+    graph_signature(engine.trace_graph(), &var_types)
+}
+
+/// ISSUE satellite: gradient-graph signature stability. Two independent
+/// sessions tracing the same train step — tape scopes, VJP emission order,
+/// Adam slot updates and all — must produce the same 128-bit signature (this
+/// is what makes cross-session gradient-plan cache hits possible at all),
+/// while changing a hyperparameter baked into the graph (lr) or a variable
+/// shape must change it.
+#[test]
+fn gradient_graph_signature_is_stable_across_sessions() {
+    let a = train_step_signature(None, None);
+    let b = train_step_signature(None, None);
+    assert_eq!(a, b, "identical train steps must hash identically across sessions");
+
+    let lr_changed = train_step_signature(Some(0.005), None);
+    assert_ne!(a, lr_changed, "learning rate is a graph constant: changing it must re-key");
+
+    let dim_changed = train_step_signature(None, Some(12));
+    assert_ne!(a, dim_changed, "parameter shapes are part of the signature");
 }
 
 /// The profiler attributes fallbacks to divergence sites and tracks

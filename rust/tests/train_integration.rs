@@ -1,0 +1,160 @@
+//! Integration tests for the unified training path: a full train step
+//! (forward + tape-generated gradient graph + fused optimizer update) flows
+//! through the speculative plan pipeline like any forward trace.
+//!
+//! Covers the ISSUE acceptance criteria:
+//! * a repeated train step re-enters from the plan cache — second engine
+//!   instance sees `plan_cache_hits > 0`, `segments_compiled == 0`, and the
+//!   gradient-specific counters (`grad_plan_cache_hits`, `optim_steps_fused`)
+//!   are live end to end;
+//! * under an injected mid-run segment panic, truncated steps drop parameter
+//!   AND Adam-moment updates atomically: the run stays bit-identical to the
+//!   pure-eager oracle (fusion off / opt 0, the single-op-kernel contract
+//!   from `fault_injection.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use terra::config::ExecMode;
+use terra::faults::FaultPlan;
+use terra::programs::{TrainMlp, TrainOptim};
+use terra::runner::{Engine, RunReport};
+use terra::speculate::{PlanCache, Quarantine, ReentryPolicy, SpeculateConfig};
+
+fn artifacts_dir() -> String {
+    let dir = std::env::temp_dir().join("terra_train_it_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        std::fs::write(manifest, r#"{"artifacts": []}"#).unwrap();
+    }
+    dir.to_string_lossy().into_owned()
+}
+
+/// All committed variable buffers — parameters, Adam moments, step counter —
+/// keyed by name, as exact bit patterns.
+fn var_bits(engine: &Engine) -> BTreeMap<String, Vec<u32>> {
+    let mut out = BTreeMap::new();
+    for id in engine.vars().ids() {
+        let name = engine.vars().meta(id).unwrap().name;
+        let host = engine.vars().host(id).unwrap();
+        out.insert(name, host.as_f32().unwrap().iter().map(|f| f.to_bits()).collect());
+    }
+    out
+}
+
+fn loss_bits(report: &RunReport) -> Vec<(u64, u32)> {
+    report.losses.iter().map(|(s, l)| (*s, l.to_bits())).collect()
+}
+
+/// The tentpole acceptance test: two engine instances sharing one plan cache.
+/// The first traces, compiles and caches the merged train-step plan; the
+/// second replays the identical iteration shape and must be served entirely
+/// from the cache — no optimizer pass, no segment compilation — while the
+/// gradient-path counters confirm what was reused was a *training* plan.
+#[test]
+fn repeated_train_step_reenters_from_plan_cache() {
+    let steps = 12;
+    let spec = SpeculateConfig {
+        plan_cache: true,
+        policy: ReentryPolicy::Eager,
+        split_hot_sites: false,
+    };
+    let cache = Arc::new(PlanCache::with_capacity(16));
+
+    let run = |cache: &Arc<PlanCache>| {
+        let dir = artifacts_dir();
+        let mut engine = Engine::with_speculate(ExecMode::Terra, &dir, true, 2, spec).unwrap();
+        engine.set_plan_cache(Some(cache.clone()));
+        engine.set_quarantine(Arc::new(Quarantine::with_max_faults(2)));
+        engine.loss_every = 1;
+        let mut prog = TrainMlp::new(TrainOptim::Adam, true);
+        let report = engine.run(&mut prog, steps, 0).unwrap();
+        let bits = var_bits(&engine);
+        (report, bits)
+    };
+
+    // First instance: compiles the train-step plan and populates the cache.
+    let (r1, w1) = run(&cache);
+    assert!(r1.stats.enter_coexec >= 1, "{:?}", r1.stats);
+    assert!(r1.stats.segments_compiled > 0, "first instance must compile: {:?}", r1.stats);
+    assert!(
+        r1.stats.optim_steps_fused > 0,
+        "co-executed steps must run the optimizer inside the plan: {:?}",
+        r1.stats
+    );
+
+    // Second instance: the identical train step re-enters without any
+    // compilation, and the hit is attributed to the gradient path.
+    let (r2, w2) = run(&cache);
+    let s2 = r2.stats;
+    assert!(s2.enter_coexec >= 1, "{s2:?}");
+    assert!(s2.plan_cache_hits > 0, "re-entry must be a cache hit: {s2:?}");
+    assert_eq!(s2.plan_cache_misses, 0, "{s2:?}");
+    assert_eq!(s2.segments_compiled, 0, "no fresh segment compiles on re-entry: {s2:?}");
+    assert_eq!(s2.plans_generated, 0, "plan generation skipped entirely: {s2:?}");
+    assert!(
+        s2.grad_plan_cache_hits > 0,
+        "the reused plan carries the gradient graph: {s2:?}"
+    );
+    assert!(s2.optim_steps_fused > 0, "{s2:?}");
+
+    // Both instances trained identically: deterministic data + deterministic
+    // init means every buffer (params, adam.m*/adam.v*, adam.t) matches.
+    assert_eq!(loss_bits(&r1), loss_bits(&r2), "loss trajectories must match");
+    assert_eq!(w1, w2, "final variable buffers must match");
+    assert!(w1.keys().any(|k| k.starts_with("adam.m")), "moment slots must exist: {w1:?}");
+}
+
+/// The atomicity acceptance test: a segment panic injected mid-run truncates
+/// an iteration; the staged-assign commit barrier must drop that iteration's
+/// parameter and Adam-moment updates together, and the replayed run must end
+/// bit-identical to a pure-eager oracle — losses, parameters and moment
+/// buffers alike.
+#[test]
+fn fused_train_step_is_bit_identical_to_eager_under_segment_panic() {
+    let steps = 12;
+    let spec = SpeculateConfig {
+        plan_cache: false,
+        policy: ReentryPolicy::Eager,
+        split_hot_sites: false,
+    };
+
+    // Fusion off, opt 0: every plan node is the same single-op shim kernel
+    // the eager executor uses, making bitwise comparison valid.
+    let run = |mode: ExecMode, faults: Option<&str>| {
+        let dir = artifacts_dir();
+        let mut engine = Engine::with_speculate(mode, &dir, false, 0, spec).unwrap();
+        engine.set_quarantine(Arc::new(Quarantine::with_max_faults(2)));
+        engine.set_fault_plan(faults.map(|f| Arc::new(FaultPlan::parse(f, 7).unwrap())));
+        engine.set_watchdog(None);
+        engine.loss_every = 1;
+        let mut prog = TrainMlp::new(TrainOptim::Adam, true);
+        let report = engine.run(&mut prog, steps, 0).unwrap();
+        let bits = var_bits(&engine);
+        (report, bits)
+    };
+
+    let (oracle_rep, oracle_bits) = run(ExecMode::Eager, None);
+    let (faulted_rep, faulted_bits) = run(ExecMode::Terra, Some("segment_exec:panic:iter=5"));
+
+    assert!(
+        faulted_rep.stats.faults_injected > 0,
+        "the panic must actually fire: {:?}",
+        faulted_rep.stats
+    );
+    assert_eq!(
+        loss_bits(&oracle_rep),
+        loss_bits(&faulted_rep),
+        "losses must match the eager oracle bit for bit"
+    );
+    assert_eq!(
+        oracle_bits, faulted_bits,
+        "params and Adam moments must match the eager oracle bit for bit \
+         (truncated steps drop both atomically)"
+    );
+    assert!(
+        oracle_bits.keys().any(|k| k.starts_with("adam.v")),
+        "second-moment slots must be part of the comparison: {oracle_bits:?}"
+    );
+}
